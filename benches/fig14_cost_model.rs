@@ -1,0 +1,160 @@
+//! Fig 14 reproduction: cost-model accuracy.
+//!   (a) operator-level model vs measured prefill time on the REAL PJRT
+//!       runtime (self-skips without artifacts; uses
+//!       artifacts/cost_model.json when `memserve calibrate` has run,
+//!       otherwise calibrates inline);
+//!   (b) operator-level vs arch-level scalability across TP — fit both
+//!       at TP=2, predict TP=1/TP=4 against the analytic ground truth.
+
+use memserve::runtime::artifacts::artifacts_available;
+use memserve::runtime::ModelRuntime;
+use memserve::scheduler::cost_model::{
+    model_from_json, ArchCostModel, OperatorCostModel,
+};
+use memserve::util::bench::Table;
+use memserve::util::json::Json;
+
+fn panel_a_real_runtime() {
+    if !artifacts_available("artifacts") {
+        println!("[fig14a skipped: run `make artifacts` first]");
+        return;
+    }
+    let runtime = ModelRuntime::load("artifacts").expect("runtime");
+    let meta = runtime.meta.clone();
+    // Load the calibrated model if present; otherwise quick inline fit.
+    let model = std::fs::read_to_string("artifacts/cost_model.json")
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| model_from_json(&j));
+    let toks = |n: usize| -> Vec<u32> {
+        (0..n as u32).map(|i| (i * 31 + 7) % meta.vocab as u32).collect()
+    };
+    let measure = |x: usize, cached: usize| -> f64 {
+        let prompt = toks(x);
+        let cache = if cached > 0 {
+            let out = runtime.prefill(&prompt[..cached], None, 0).unwrap();
+            let cap = meta
+                .pick_prefill_bucket(x - cached, cached)
+                .map(|(_, c)| c)
+                .unwrap();
+            let s = meta.n_heads * meta.head_dim;
+            let mut buf = vec![0f32; meta.layers * 2 * cap * s];
+            for l in 0..meta.layers {
+                for h in 0..2 {
+                    for t in 0..cached {
+                        let src = ((l * 2 + h) * out.bucket_n + t) * s;
+                        let dst = ((l * 2 + h) * cap + t) * s;
+                        buf[dst..dst + s]
+                            .copy_from_slice(&out.new_kv[src..src + s]);
+                    }
+                }
+            }
+            Some(buf)
+        } else {
+            None
+        };
+        let mut ts = vec![];
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            let _ = runtime
+                .prefill(&prompt[cached..], cache.as_deref(), cached)
+                .unwrap();
+            ts.push(t0.elapsed().as_secs_f64());
+        }
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts[ts.len() / 2]
+    };
+    // Inline calibration if no file: fit on a training grid.
+    let model = model.unwrap_or_else(|| {
+        // Inline bucket-aware fit (same as `memserve calibrate`).
+        let mut m = OperatorCostModel::default_tiny();
+        let t64 = measure(64, 0);
+        let t256 = measure(256, 0);
+        m.gemm_per_token = (t256 - t64) / 192.0;
+        m.constant = t64 - m.gemm_per_token * 64.0;
+        m.attn_a = -1e-12;
+        m.attn_b = 2e-12;
+        m.attn_c = 0.0;
+        m.attn_d = 0.0;
+        m.wave_tokens = 16;
+        m.buckets = meta.prefill_buckets.iter().map(|&(n, _)| n).collect();
+        m.buckets.sort_unstable();
+        m.buckets.dedup();
+        m.tp = 1;
+        m
+    });
+    let mut t = Table::new("fig14a_operator_accuracy", &[
+        "prompt", "cached", "measured_ms", "predicted_ms", "rel_err_pct",
+    ]);
+    // Holdout grid (different from the calibration points).
+    for &(x, cached) in &[
+        (96usize, 0usize),
+        (96, 32),
+        (160, 0),
+        (160, 64),
+        (224, 0),
+        (224, 128),
+        (320, 160),
+    ] {
+        let measured = measure(x, cached);
+        let y = cached as f64 / x as f64;
+        let pred = model.exec(x, y);
+        t.row(vec![
+            x.to_string(),
+            cached.to_string(),
+            format!("{:.2}", measured * 1e3),
+            format!("{:.2}", pred * 1e3),
+            format!("{:.1}", 100.0 * (pred - measured).abs() / measured),
+        ]);
+    }
+    t.finish();
+}
+
+fn panel_b_tp_scaling() {
+    // Ground truth: the analytic operator model at each TP.
+    let truth_tp2 = OperatorCostModel::paper_13b(); // fitted at TP=2
+    let mut samples = vec![];
+    for x in (256..=4096).step_by(256) {
+        for yi in 0..=3 {
+            let y = yi as f64 / 4.0;
+            samples.push((x, y, truth_tp2.exec(x, y)));
+        }
+    }
+    let arch = ArchCostModel::fit(&samples, 2);
+    let mut t = Table::new("fig14b_tp_scaling", &[
+        "tp", "prompt", "true_ms", "operator_pred_ms", "arch_pred_ms",
+        "operator_err_pct", "arch_err_pct",
+    ]);
+    for &tp in &[1usize, 2, 4] {
+        let truth = truth_tp2.with_tp(tp);
+        for &x in &[1024usize, 2048, 4096] {
+            let true_t = truth.exec(x, 0.0);
+            let op_pred = truth_tp2.with_tp(tp).exec(x, 0.0);
+            let arch_pred = arch.exec_rescaled(x, 0.0, tp);
+            t.row(vec![
+                tp.to_string(),
+                x.to_string(),
+                format!("{:.2}", true_t * 1e3),
+                format!("{:.2}", op_pred * 1e3),
+                format!("{:.2}", arch_pred * 1e3),
+                format!("{:.1}",
+                        100.0 * (op_pred - true_t).abs() / true_t),
+                format!("{:.1}",
+                        100.0 * (arch_pred - true_t).abs() / true_t),
+            ]);
+        }
+    }
+    t.finish();
+    println!(
+        "\nExpected shape (paper Fig 14): operator-level predictions \
+         track measurements within a few percent and transfer across TP \
+         by rescaling only the parallel terms; naively rescaled \
+         arch-level predictions degrade (~20% at TP changes) because the \
+         serial fraction gets wrongly divided (Amdahl)."
+    );
+}
+
+fn main() {
+    panel_a_real_runtime();
+    panel_b_tp_scaling();
+}

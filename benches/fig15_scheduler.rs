@@ -1,0 +1,64 @@
+//! Fig 15 reproduction: global scheduling policies vs share ratio.
+//! 80 LooGLE sessions (~250 requests) on a 3P1D cluster; the share ratio
+//! duplicates the session set so identical request streams arrive 1–4×
+//! (the paper's "ratio of the number of identical requests").
+
+use memserve::scheduler::PolicyKind;
+use memserve::sim::{SimConfig, Simulation};
+use memserve::util::bench::Table;
+use memserve::workload::{ArrivalPlan, WorkloadKind, WorkloadSpec};
+
+fn main() {
+    let base = WorkloadSpec::generate(WorkloadKind::Loogle, 80, 15, 2048,
+                                      4096);
+    println!(
+        "base workload: {} sessions, {} requests",
+        base.sessions.len(),
+        base.total_requests()
+    );
+    let mut table = Table::new("fig15_scheduler", &[
+        "share_ratio", "policy", "n", "cached_ratio", "ttft_mean_s",
+        "ttft_p99_s", "jct_p99_s",
+    ]);
+    for &share in &[1usize, 2, 3, 4] {
+        let mut spec = base.clone();
+        for r in 1..share {
+            let mut dup = base.clone();
+            for s in &mut dup.sessions {
+                s.id += (r * 10_000) as u64;
+            }
+            spec.sessions.extend(dup.sessions);
+        }
+        let plan = ArrivalPlan::poisson(&spec, 10.0, 15);
+        for policy in [
+            PolicyKind::LeastLoad,
+            PolicyKind::SessionId,
+            PolicyKind::PromptTree,
+        ] {
+            let cfg = SimConfig {
+                prefill_instances: 3,
+                decode_instances: 1,
+                policy,
+                ..Default::default()
+            };
+            let rep = Simulation::new(cfg, spec.clone(), &plan).run();
+            let m = &rep.metrics;
+            table.row(vec![
+                share.to_string(),
+                policy.name().into(),
+                m.records.len().to_string(),
+                format!("{:.3}", m.mean_cached_ratio()),
+                format!("{:.4}", m.ttft().mean),
+                format!("{:.4}", m.ttft().p99),
+                format!("{:.4}", m.jct().p99),
+            ]);
+        }
+    }
+    table.finish();
+    println!(
+        "\nExpected shape (paper Fig 15): prompt-tree >= session-id >= \
+         least-load on P99 TTFT; the prompt-tree advantage grows with \
+         share ratio (only it can see inter-session sharing) — the paper \
+         reports 59% P99 TTFT improvement over intra-session scheduling."
+    );
+}

@@ -1,0 +1,126 @@
+//! Fig 8 reproduction: end-to-end JCT / TTFT / TPOT for the four
+//! settings (PD, PD-CC, 1P1D, 1P1D-CC) across the three workloads and a
+//! request-rate sweep, on the discrete-event simulator with the
+//! paper-scale (13B/H800-class) cost model.
+//!
+//! Rates are per instance (paper: "the request rate is calculated per
+//! instance"; every setting runs 2 instances total).
+
+use memserve::engine::DisaggMilestone;
+use memserve::sim::{SimConfig, Simulation};
+use memserve::util::bench::Table;
+use memserve::workload::{ArrivalPlan, WorkloadKind, WorkloadSpec};
+
+struct Setting {
+    name: &'static str,
+    prefill: usize,
+    decode: usize,
+    colocated: usize,
+    caching: bool,
+    milestone: DisaggMilestone,
+}
+
+fn settings() -> Vec<Setting> {
+    vec![
+        Setting {
+            name: "PD",
+            prefill: 0,
+            decode: 0,
+            colocated: 2,
+            caching: false,
+            milestone: DisaggMilestone::PdBasic,
+        },
+        Setting {
+            name: "PD-CC",
+            prefill: 0,
+            decode: 0,
+            colocated: 2,
+            caching: true,
+            milestone: DisaggMilestone::PdCaching3,
+        },
+        Setting {
+            name: "1P1D",
+            prefill: 1,
+            decode: 1,
+            colocated: 0,
+            caching: false,
+            milestone: DisaggMilestone::PdBasic,
+        },
+        Setting {
+            name: "1P1D-CC",
+            prefill: 1,
+            decode: 1,
+            colocated: 0,
+            caching: true,
+            milestone: DisaggMilestone::PdCaching3,
+        },
+        Setting {
+            name: "2P1D-CC",
+            prefill: 2,
+            decode: 1,
+            colocated: 0,
+            caching: true,
+            milestone: DisaggMilestone::PdCaching3,
+        },
+        Setting {
+            name: "1P2D-CC",
+            prefill: 1,
+            decode: 2,
+            colocated: 0,
+            caching: true,
+            milestone: DisaggMilestone::PdCaching3,
+        },
+    ]
+}
+
+fn main() {
+    let seed = 11;
+    let sessions = 60;
+    let mut table = Table::new("fig8_end_to_end", &[
+        "workload", "setting", "rate_per_inst", "n", "cached_ratio",
+        "jct_mean_s", "jct_p99_s", "ttft_mean_s", "ttft_p99_s",
+        "tpot_mean_s",
+    ]);
+    for kind in WorkloadKind::all() {
+        let spec =
+            WorkloadSpec::generate(kind, sessions, seed, 2048, 4096);
+        for &rate_per_inst in &[0.5f64, 1.0, 2.0, 4.0] {
+            for s in settings() {
+                // Paper: "the request rate is calculated per instance".
+                let n_inst = s.prefill + s.decode + s.colocated;
+                let plan = ArrivalPlan::poisson(
+                    &spec, rate_per_inst * n_inst as f64, seed);
+                let cfg = SimConfig {
+                    prefill_instances: s.prefill,
+                    decode_instances: s.decode,
+                    colocated_instances: s.colocated,
+                    caching: s.caching,
+                    milestone: s.milestone,
+                    ..Default::default()
+                };
+                let rep =
+                    Simulation::new(cfg, spec.clone(), &plan).run();
+                let m = &rep.metrics;
+                table.row(vec![
+                    kind.name().into(),
+                    s.name.into(),
+                    format!("{rate_per_inst}"),
+                    m.records.len().to_string(),
+                    format!("{:.3}", m.mean_cached_ratio()),
+                    format!("{:.3}", m.jct().mean),
+                    format!("{:.3}", m.jct().p99),
+                    format!("{:.3}", m.ttft().mean),
+                    format!("{:.3}", m.ttft().p99),
+                    format!("{:.4}", m.tpot().mean),
+                ]);
+            }
+        }
+    }
+    table.finish();
+    println!(
+        "\nExpected shape (paper Fig 8): 1P1D improves JCT over PD \
+         (interference removal); adding CC improves JCT further and cuts \
+         TTFT strongly — most on LooGLE/ReAct (long shared prompts), \
+         moderately on ShareGPT; gaps widen with rate."
+    );
+}

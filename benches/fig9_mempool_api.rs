@@ -1,0 +1,127 @@
+//! Fig 9 reproduction: MemPool API microbenchmarks on the *real*
+//! materialized pool.
+//!   (a) memory APIs (alloc_mem/free_mem) vs number of blocks;
+//!   (b) index APIs (insert/match) vs cached ratio and block count.
+//!
+//! Paper reference points: ~800 ns per block for memory APIs; <= 0.7 ms
+//! to insert a 4K-token prompt (256 blocks); latency ~flat in cached
+//! ratio.
+
+use memserve::mempool::{BlockGeometry, InstanceId, MemPool, Tier};
+use memserve::util::bench::{black_box, time_adaptive, Table};
+
+fn geom() -> BlockGeometry {
+    BlockGeometry {
+        block_tokens: 16,
+        layers: 4,
+        n_heads: 8,
+        head_dim: 32,
+        aggregated: true,
+    }
+}
+
+fn pool(blocks: usize) -> MemPool {
+    MemPool::new(InstanceId(0), geom(), blocks, blocks, 0.0, true)
+}
+
+fn toks(n: usize, seed: u32) -> Vec<u32> {
+    (0..n as u32).map(|i| i.wrapping_mul(7).wrapping_add(seed)).collect()
+}
+
+fn main() {
+    // ---- (a) memory APIs ----
+    let mut t_mem = Table::new("fig9a_memory_apis", &[
+        "blocks", "alloc_us_mean", "alloc_us_p99", "free_us_mean",
+        "ns_per_block",
+    ]);
+    for &n in &[1usize, 4, 16, 64, 256] {
+        let mut p = pool(512);
+        let alloc = time_adaptive(30.0, 50, || {
+            let a = p.alloc_mem(n, Tier::Hbm).unwrap();
+            black_box(&a);
+            p.free_mem(&a).unwrap();
+        });
+        // Split alloc vs free: measure free by pre-allocating.
+        let mut p2 = pool(512);
+        let free = time_adaptive(30.0, 50, || {
+            let a = p2.alloc_mem(n, Tier::Hbm).unwrap();
+            p2.free_mem(black_box(&a)).unwrap();
+        });
+        let mut alloc = alloc;
+        let mut free = free;
+        t_mem.row(vec![
+            n.to_string(),
+            format!("{:.2}", alloc.mean()),
+            format!("{:.2}", alloc.p99()),
+            format!("{:.2}", free.mean()),
+            format!("{:.0}", alloc.mean() * 1000.0 / n as f64),
+        ]);
+    }
+    t_mem.finish();
+
+    // ---- (b) index APIs ----
+    let mut t_idx = Table::new("fig9b_index_apis", &[
+        "blocks", "tokens", "cached_ratio", "insert_us", "match_us",
+    ]);
+    for &blocks in &[16usize, 64, 256] {
+        let tokens = blocks * 16;
+        for &ratio in &[0.0f64, 0.5, 1.0] {
+            // Pre-populate the index with `ratio` of the prompt.
+            let cached_tokens = (tokens as f64 * ratio) as usize / 16 * 16;
+            let seq = toks(tokens, 1);
+            // insert timing: fresh pool each iteration batch; amortize by
+            // deleting after insert.
+            let mut p = pool(blocks * 4 + 64);
+            if cached_tokens > 0 {
+                let a = p.alloc_mem(cached_tokens / 16, Tier::Hbm).unwrap();
+                p.insert(
+                    &seq[..cached_tokens],
+                    a.into_iter().map(|x| vec![x]).collect(),
+                    0.0,
+                )
+                .unwrap();
+            }
+            let mut insert_s = time_adaptive(30.0, 30, || {
+                let need = blocks;
+                let a = p.alloc_mem(need, Tier::Hbm).unwrap();
+                let groups: Vec<_> =
+                    a.iter().map(|&x| vec![x]).collect();
+                p.insert(&seq, groups, 1.0).unwrap();
+                // Remove the un-cached tail again so the next iteration
+                // re-inserts the same amount of fresh data.
+                if cached_tokens < tokens {
+                    let freed =
+                        p.delete(&seq[..]).unwrap();
+                    black_box(freed);
+                    if cached_tokens > 0 {
+                        let a2 = p
+                            .alloc_mem(cached_tokens / 16, Tier::Hbm)
+                            .unwrap();
+                        p.insert(
+                            &seq[..cached_tokens],
+                            a2.into_iter().map(|x| vec![x]).collect(),
+                            0.0,
+                        )
+                        .unwrap();
+                    }
+                }
+            });
+            let mut match_s = time_adaptive(30.0, 100, || {
+                black_box(p.match_prefix(&seq, 2.0));
+            });
+            t_idx.row(vec![
+                blocks.to_string(),
+                tokens.to_string(),
+                format!("{ratio:.1}"),
+                format!("{:.2}", insert_s.mean()),
+                format!("{:.2}", match_s.mean()),
+            ]);
+        }
+    }
+    t_idx.finish();
+    println!(
+        "\nExpected shape (paper Fig 9): memory-API latency linear in \
+         block count (~sub-µs/block); insert of a 4K-token prompt (256 \
+         blocks) well under 0.7 ms; match latency ~flat in cached ratio."
+    );
+}

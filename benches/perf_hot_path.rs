@@ -1,0 +1,209 @@
+//! Hot-path performance harness (EXPERIMENTS.md §Perf).
+//!
+//! Measures the serving-critical operations at each layer and quantifies
+//! the designed-in optimizations against their naive baselines:
+//!   L3a  decode loop: device-resident state feedback vs naive
+//!        re-upload-KV-every-step;
+//!   L3b  paged-KV gather/scatter throughput, aggregated vs discrete;
+//!   L3c  router decision + MemPool match at 4K-token prompts (must be
+//!        µs-scale — far below the ms-scale compute, i.e. L3 is not the
+//!        bottleneck, as the paper requires);
+//!   L2   prefill bucket compute scaling (PJRT, per bucket).
+//!
+//! Self-skips without artifacts.
+
+use std::sync::Arc;
+
+use memserve::engine::kv;
+use memserve::mempool::{BlockGeometry, InstanceId, MemPool, Tier};
+use memserve::runtime::artifacts::artifacts_available;
+use memserve::runtime::ModelRuntime;
+use memserve::scheduler::cost_model::OperatorCostModel;
+use memserve::scheduler::prompt_tree::InstanceKind;
+use memserve::scheduler::router::{GlobalScheduler, InstanceLoad};
+use memserve::scheduler::PolicyKind;
+use memserve::util::bench::{black_box, time_adaptive, Table};
+
+fn toks(n: usize, seed: u32) -> Vec<u32> {
+    (0..n as u32)
+        .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 2048)
+        .collect()
+}
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        println!("[perf_hot_path skipped: run `make artifacts`]");
+        return;
+    }
+    let rt = Arc::new(ModelRuntime::load("artifacts").unwrap());
+    let meta = rt.meta.clone();
+    let s = meta.n_heads * meta.head_dim;
+
+    // ---------- L3a: decode loop, feedback vs naive re-upload ----------
+    let mut t = Table::new("perf_decode_loop", &[
+        "variant", "ctx", "ms_per_token", "tokens_per_s",
+    ]);
+    for &ctx in &[64usize, 256] {
+        let prompt = toks(ctx / 2, 1);
+        let p = rt.prefill(&prompt, None, 0).unwrap();
+        let mut kv0 = vec![0f32; meta.layers * 2 * ctx * s];
+        for l in 0..meta.layers {
+            for h in 0..2 {
+                for tk in 0..prompt.len() {
+                    let src = ((l * 2 + h) * p.bucket_n + tk) * s;
+                    let dst = ((l * 2 + h) * ctx + tk) * s;
+                    kv0[dst..dst + s]
+                        .copy_from_slice(&p.new_kv[src..src + s]);
+                }
+            }
+        }
+        // Optimized: one session, state stays on device.
+        let steps = 24usize;
+        let mut sess = rt.decode_start(&kv0, ctx, prompt.len()).unwrap();
+        let t0 = std::time::Instant::now();
+        for i in 0..steps {
+            black_box(rt.decode_step(&mut sess, (i % 100) as u32).unwrap());
+        }
+        let per_opt = t0.elapsed().as_secs_f64() / steps as f64;
+        // Naive baseline: KV round-trips through the host every step
+        // (decode_start + one step + decode_kv download).
+        let t0 = std::time::Instant::now();
+        let mut kv_host = kv0.clone();
+        let mut pos = prompt.len();
+        for i in 0..steps {
+            let mut s2 = rt.decode_start(&kv_host, ctx, pos).unwrap();
+            black_box(rt.decode_step(&mut s2, (i % 100) as u32).unwrap());
+            kv_host = rt.decode_kv(&mut s2).unwrap();
+            pos += 1;
+        }
+        let per_naive = t0.elapsed().as_secs_f64() / steps as f64;
+        for (name, per) in
+            [("naive_reupload", per_naive), ("state_feedback", per_opt)]
+        {
+            t.row(vec![
+                name.into(),
+                ctx.to_string(),
+                format!("{:.3}", per * 1e3),
+                format!("{:.0}", 1.0 / per),
+            ]);
+        }
+    }
+    t.finish();
+
+    // ---------- L3b: paged-KV gather/scatter throughput ----------
+    let mut t2 = Table::new("perf_kv_paging", &[
+        "layout", "op", "tokens", "GB_per_s",
+    ]);
+    for aggregated in [true, false] {
+        let geom = BlockGeometry {
+            block_tokens: 16,
+            layers: meta.layers,
+            n_heads: meta.n_heads,
+            head_dim: meta.head_dim,
+            aggregated,
+        };
+        let mut pool = MemPool::new(InstanceId(0), geom, 256, 0, 0.0, true);
+        let n_tokens = 256usize;
+        let kv: Vec<f32> =
+            (0..geom.layers * 2 * n_tokens * s).map(|i| i as f32).collect();
+        let bytes = (kv.len() * 4) as f64;
+        let mut scatter_groups = None;
+        let mut sc = time_adaptive(80.0, 20, || {
+            let g = kv::scatter_new_kv(&mut pool, &kv, n_tokens, n_tokens,
+                                       0.0)
+                .unwrap();
+            if let Some(old) = scatter_groups.replace(g) {
+                for grp in old {
+                    pool.free_mem(&grp).unwrap();
+                }
+            }
+        });
+        let groups = scatter_groups.unwrap();
+        let mut ga = time_adaptive(80.0, 20, || {
+            black_box(kv::gather_to_buffer(&pool, &groups, n_tokens)
+                .unwrap());
+        });
+        let layout = if aggregated { "aggregated" } else { "discrete" };
+        t2.row(vec![
+            layout.into(),
+            "scatter".into(),
+            n_tokens.to_string(),
+            format!("{:.2}", bytes / (sc.mean() * 1e-6) / 1e9),
+        ]);
+        t2.row(vec![
+            layout.into(),
+            "gather".into(),
+            n_tokens.to_string(),
+            format!("{:.2}", bytes / (ga.mean() * 1e-6) / 1e9),
+        ]);
+    }
+    t2.finish();
+
+    // ---------- L3c: router + index on the request path ----------
+    let mut gs = GlobalScheduler::new(
+        PolicyKind::PromptTree,
+        OperatorCostModel::paper_13b(),
+        16,
+        300.0,
+    );
+    for i in 0..3 {
+        gs.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+    }
+    let prompt4k = toks(4096, 9);
+    gs.record_cached(InstanceId(1), &prompt4k[..2048], 1.0);
+    let idle = |_: InstanceId| InstanceLoad::default();
+    let mut route_t = time_adaptive(60.0, 200, || {
+        black_box(gs.route(&prompt4k, 7, &idle, 2.0).unwrap());
+    });
+    let mut pool = MemPool::new(
+        InstanceId(0),
+        BlockGeometry {
+            block_tokens: 16,
+            layers: meta.layers,
+            n_heads: meta.n_heads,
+            head_dim: meta.head_dim,
+            aggregated: true,
+        },
+        512,
+        0,
+        0.0,
+        false,
+    );
+    let a = pool.alloc_mem(256, Tier::Hbm).unwrap();
+    pool.insert(&prompt4k, a.into_iter().map(|x| vec![x]).collect(), 0.0)
+        .unwrap();
+    let mut match_t = time_adaptive(60.0, 200, || {
+        black_box(pool.match_prefix(&prompt4k, 1.0));
+    });
+    let mut t3 = Table::new("perf_request_path", &[
+        "op", "us_mean", "us_p99",
+    ]);
+    t3.row(vec![
+        "gs_route_4k_3inst".into(),
+        format!("{:.1}", route_t.mean()),
+        format!("{:.1}", route_t.p99()),
+    ]);
+    t3.row(vec![
+        "pool_match_4k".into(),
+        format!("{:.1}", match_t.mean()),
+        format!("{:.1}", match_t.p99()),
+    ]);
+    t3.finish();
+
+    // ---------- L2: prefill compute per bucket ----------
+    let mut t4 = Table::new("perf_prefill_buckets", &[
+        "bucket_n", "ms", "us_per_token",
+    ]);
+    for &n in &[16usize, 64, 256] {
+        let prompt = toks(n, 3);
+        let mut pf = time_adaptive(200.0, 5, || {
+            black_box(rt.prefill(&prompt, None, 0).unwrap());
+        });
+        t4.row(vec![
+            n.to_string(),
+            format!("{:.2}", pf.mean() / 1e3),
+            format!("{:.1}", pf.mean() / n as f64),
+        ]);
+    }
+    t4.finish();
+}

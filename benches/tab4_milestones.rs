@@ -1,0 +1,50 @@
+//! Table 4 ablation: the four §5.1 design milestones (PD-Basic →
+//! PD-Caching-3) on a multi-turn chat workload — what each added
+//! mechanism buys (cache ratio, TTFT, wire traffic).
+
+use memserve::engine::DisaggMilestone;
+use memserve::sim::{SimConfig, Simulation};
+use memserve::util::bench::Table;
+use memserve::workload::{ArrivalPlan, WorkloadKind, WorkloadSpec};
+
+fn main() {
+    // Multi-turn chat (document-QA-flavored, the paper's motivating
+    // scenario for the milestone ladder).
+    let spec =
+        WorkloadSpec::generate(WorkloadKind::ShareGpt, 60, 21, 2048, 4096);
+    let plan = ArrivalPlan::poisson(&spec, 6.0, 21);
+    let mut table = Table::new("tab4_milestones", &[
+        "design", "caching", "cached_ratio", "ttft_mean_s", "ttft_p99_s",
+        "jct_mean_s", "wire_GB", "wire_calls",
+    ]);
+    for m in DisaggMilestone::all() {
+        let caching = m != DisaggMilestone::PdBasic;
+        let cfg = SimConfig {
+            prefill_instances: 1,
+            decode_instances: 1,
+            caching,
+            milestone: m,
+            ..Default::default()
+        };
+        let rep = Simulation::new(cfg, spec.clone(), &plan).run();
+        let mm = &rep.metrics;
+        table.row(vec![
+            m.name().into(),
+            caching.to_string(),
+            format!("{:.3}", mm.mean_cached_ratio()),
+            format!("{:.4}", mm.ttft().mean),
+            format!("{:.4}", mm.ttft().p99),
+            format!("{:.4}", mm.jct().mean),
+            format!("{:.3}", rep.wire_bytes as f64 / 1e9),
+            rep.wire_calls.to_string(),
+        ]);
+    }
+    table.finish();
+    println!(
+        "\nExpected shape (paper Table 4 / §5.1): caching-1 cuts TTFT via \
+         P-side reuse but re-ships the full prompt KV every turn; \
+         caching-2 cuts wire traffic (incremental transfer); caching-3 \
+         grows the P cache with decode output so multi-turn cached ratio \
+         rises further."
+    );
+}

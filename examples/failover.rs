@@ -1,0 +1,84 @@
+//! Failure handling demo (paper §4.4): heartbeats, failure detection,
+//! membership broadcast, and request re-routing around a dead instance —
+//! on the live PJRT serving path.
+//!
+//!     make artifacts && cargo run --release --example failover
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use memserve::config::Config;
+use memserve::engine::{DisaggMilestone, SamplingParams};
+use memserve::runtime::ModelRuntime;
+use memserve::server::{ServeCluster, ServeOptions};
+
+fn toks(n: usize, seed: u32) -> Vec<u32> {
+    (0..n as u32)
+        .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 2048)
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    memserve::util::logging::init();
+    let mut cfg = Config::default();
+    cfg.cluster.prefill_instances = 0;
+    cfg.cluster.decode_instances = 0;
+    cfg.cluster.colocated_instances = 3;
+    cfg.cluster.heartbeat_ms = 25.0;
+    cfg.cluster.heartbeat_misses = 3;
+
+    println!("loading runtime...");
+    let runtime = Arc::new(ModelRuntime::load("artifacts")?);
+    let cluster = ServeCluster::start(
+        ServeOptions {
+            config: cfg,
+            milestone: DisaggMilestone::PdCaching3,
+            real_sleep: false,
+        },
+        runtime,
+    )?;
+    let sampling = SamplingParams {
+        max_new_tokens: 6,
+        eos_token: u32::MAX,
+        ..Default::default()
+    };
+
+    println!("phase 1: all 3 instances healthy");
+    for i in 0..6u32 {
+        let rid = cluster.submit(toks(40, i), i as u64, sampling)?;
+        let (g, rec) = cluster.collect(rid, Duration::from_secs(60))?;
+        println!(
+            "  rid={rid} served by inst{} gen={} jct={:.3}s",
+            rec.decode_instance,
+            g.len(),
+            rec.jct()
+        );
+    }
+
+    let victim = cluster.instances()[1].0;
+    println!("\nphase 2: killing {victim} (heartbeats stop)");
+    cluster.kill(victim);
+    // Wait past heartbeat_ms * misses for detection.
+    std::thread::sleep(Duration::from_millis(400));
+    println!(
+        "  cluster manager says alive({victim}) = {}",
+        cluster.is_alive(victim)
+    );
+    assert!(!cluster.is_alive(victim), "failure not detected");
+
+    println!("\nphase 3: traffic continues on survivors");
+    for i in 10..16u32 {
+        let rid = cluster.submit(toks(40, i), i as u64, sampling)?;
+        let (g, rec) = cluster.collect(rid, Duration::from_secs(60))?;
+        assert_ne!(rec.decode_instance, victim.0, "routed to dead instance");
+        println!(
+            "  rid={rid} served by inst{} gen={} jct={:.3}s",
+            rec.decode_instance,
+            g.len(),
+            rec.jct()
+        );
+    }
+    println!("\nfailover OK: detection + membership broadcast + re-routing");
+    cluster.shutdown();
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: load the AOT model, start a PD-colocated instance with
+//! context caching, and serve a few text prompts end-to-end.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the full stack: GS tokenization → prompt-tree routing →
+//! MemPool cache match → Pallas-kernel prefill via PJRT → device-resident
+//! decode → KV retirement into the radix index. The second, longer prompt
+//! shares a prefix with the first and hits the cache.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use memserve::config::Config;
+use memserve::engine::{DisaggMilestone, SamplingParams};
+use memserve::runtime::ModelRuntime;
+use memserve::server::{ServeCluster, ServeOptions};
+
+fn main() -> anyhow::Result<()> {
+    memserve::util::logging::init();
+    let mut cfg = Config::default();
+    cfg.cluster.prefill_instances = 0;
+    cfg.cluster.decode_instances = 0;
+    cfg.cluster.colocated_instances = 1;
+
+    println!("loading + compiling AOT artifacts (once per process)...");
+    let runtime = Arc::new(ModelRuntime::load(&cfg.artifacts_dir)?);
+    println!(
+        "model: {} layers, d_model {}, {:.1}M params, vocab {}",
+        runtime.meta.layers,
+        runtime.meta.d_model,
+        runtime.meta.param_count as f64 / 1e6,
+        runtime.meta.vocab
+    );
+    let cluster = ServeCluster::start(
+        ServeOptions {
+            config: cfg,
+            milestone: DisaggMilestone::PdCaching3,
+            real_sleep: false,
+        },
+        runtime,
+    )?;
+
+    let system = "you are a helpful assistant. answer briefly and cite \
+                  sources when you can. the user is a systems researcher \
+                  reproducing the memserve paper on a tiny transformer.";
+    let prompts = [
+        format!("{system} user: what is a kv cache?"),
+        format!("{system} user: what is a kv cache? and why does prefix \
+                 caching cut the time to first token so much?"),
+        format!("{system} user: explain disaggregated inference."),
+    ];
+    let sampling = SamplingParams {
+        max_new_tokens: 24,
+        eos_token: u32::MAX,
+        ..Default::default()
+    };
+    for (i, p) in prompts.iter().enumerate() {
+        let rid = cluster.submit_text(p, 1, sampling)?;
+        let (tokens, rec) = cluster.collect(rid, Duration::from_secs(60))?;
+        println!(
+            "[{}] prompt_tokens={} cached={} ({:.0}%) generated={:?}... \
+             ttft={:.3}s jct={:.3}s tpot={:.4}s",
+            i,
+            rec.prompt_tokens,
+            rec.cached_tokens,
+            100.0 * rec.cached_ratio(),
+            &tokens[..4.min(tokens.len())],
+            rec.ttft(),
+            rec.jct(),
+            rec.tpot(),
+        );
+    }
+    let m = cluster.metrics();
+    println!("\n== metrics ==\n{}", m.summary_line());
+    cluster.shutdown();
+    Ok(())
+}

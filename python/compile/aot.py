@@ -1,0 +1,192 @@
+"""AOT pass: lower every (bucket) variant of the L2 model to HLO text.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+results and Python never appears on the request path.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs in --out-dir (default ../artifacts):
+  meta.json                   model geometry, buckets, param manifest,
+                              artifact index, argument-order contract
+  weights.bin                 flat little-endian f32 parameter blob
+  prefill_n{N}_c{C}.hlo.txt   one per prefill bucket
+  decode_ctx{CTX}.hlo.txt     one per decode context bucket
+
+Usage: python -m compile.aot [--out-dir DIR] [--big] [--skip-existing]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .geometry import TINY, BUCKETS, BigGeometry, ModelGeometry
+from . import model as M
+from .params import init_params, param_order, write_weights
+
+
+def to_hlo_text(lowered, return_tuple=True) -> str:
+    """stablehlo -> XlaComputation -> HLO text.
+
+    return_tuple=True for multi-output graphs (the Rust side unwraps with
+    to_tupleN); False for the single-output decode_state graph so the PJRT
+    output is a plain (feedback-able) buffer, not a tuple."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
+    return comp.as_hlo_text()
+
+
+def lower_prefill(geom: ModelGeometry, n: int, c: int):
+    n_params = len(param_order(geom))
+    pspecs = [jax.ShapeDtypeStruct(s, jnp.float32)
+              for _, s in param_order(geom)]
+    tok = jax.ShapeDtypeStruct((n,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if c > 0:
+        kv = jax.ShapeDtypeStruct(
+            (geom.layers, 2, c, geom.n_heads, geom.head_dim), jnp.float32)
+
+        def fn(*args):
+            params = list(args[:n_params])
+            tokens, new_len, cache_len, kv_cache = args[n_params:]
+            return M.prefill(geom, params, tokens, new_len, cache_len,
+                             kv_cache)
+
+        return jax.jit(fn).lower(*pspecs, tok, scalar, scalar, kv)
+
+    def fn(*args):
+        params = list(args[:n_params])
+        tokens, new_len, cache_len = args[n_params:]
+        return M.prefill(geom, params, tokens, new_len, cache_len, None)
+
+    return jax.jit(fn).lower(*pspecs, tok, scalar, scalar)
+
+
+def lower_decode(geom: ModelGeometry, ctx: int):
+    """Flat-state decode (single output; lowered with return_tuple=False)."""
+    n_params = len(param_order(geom))
+    pspecs = [jax.ShapeDtypeStruct(s, jnp.float32)
+              for _, s in param_order(geom)]
+    tok = jax.ShapeDtypeStruct((1,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    state_len = geom.vocab + geom.layers * 2 * ctx * geom.n_heads \
+        * geom.head_dim
+    state = jax.ShapeDtypeStruct((state_len,), jnp.float32)
+
+    def fn(*args):
+        params = list(args[:n_params])
+        token, pos, st = args[n_params:]
+        return M.decode_state(geom, params, token, pos, st, ctx)
+
+    return jax.jit(fn).lower(*pspecs, tok, scalar, state)
+
+
+def emit(out_dir: str, geom: ModelGeometry, *, skip_existing: bool = False,
+         quiet: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    t0 = time.time()
+
+    params = init_params(geom)
+    weights_path = os.path.join(out_dir, "weights.bin")
+    manifest = write_weights(geom, params, weights_path)
+
+    artifacts = {}
+
+    def emit_one(name, lower_fn, return_tuple=True):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        artifacts[name] = os.path.basename(path)
+        if skip_existing and os.path.exists(path):
+            return
+        text = to_hlo_text(lower_fn(), return_tuple=return_tuple)
+        with open(path, "w") as f:
+            f.write(text)
+        if not quiet:
+            print(f"  {name}: {len(text) / 1e6:.2f} MB "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    prefill_variants = BUCKETS.prefill_variants(geom.max_seq)
+    for n, c in prefill_variants:
+        emit_one(f"prefill_n{n}_c{c}",
+                 lambda n=n, c=c: lower_prefill(geom, n, c))
+    for ctx in BUCKETS.decode_ctx:
+        if ctx <= geom.max_seq:
+            emit_one(f"decode_ctx{ctx}",
+                     lambda ctx=ctx: lower_decode(geom, ctx),
+                     return_tuple=False)
+
+    meta = {
+        "format_version": 1,
+        "model": {
+            "vocab": geom.vocab,
+            "layers": geom.layers,
+            "d_model": geom.d_model,
+            "n_heads": geom.n_heads,
+            "head_dim": geom.head_dim,
+            "ffn": geom.ffn,
+            "max_seq": geom.max_seq,
+            "rope_theta": geom.rope_theta,
+            "norm_eps": geom.norm_eps,
+            "param_count": geom.param_count(),
+        },
+        "buckets": {
+            "prefill": [[n, c] for n, c in prefill_variants],
+            "decode_ctx": [c for c in BUCKETS.decode_ctx
+                           if c <= geom.max_seq],
+        },
+        # Argument-order contract: all weight tensors first (manifest
+        # order), then the per-call arguments. Outputs are a tuple.
+        "arg_order": {
+            "prefill_cached": ["<params>", "tokens[i32,N]", "new_len[i32]",
+                               "cache_len[i32]", "kv_cache[f32,L,2,C,H,hd]"],
+            "prefill_nocache": ["<params>", "tokens[i32,N]", "new_len[i32]",
+                                "cache_len[i32]"],
+            "decode": ["<params>", "token[i32,1]", "pos[i32]",
+                       "state[f32,V + L*2*CTX*H*hd]"],
+        },
+        "outputs": {
+            "prefill": ["new_kv[f32,L,2,N,H,hd]", "logits[f32,V]"],
+            # decode is single-output (non-tuple): state' = [logits | kv]
+            "decode": ["state[f32,V + L*2*CTX*H*hd]"],
+        },
+        "params": manifest,
+        "weights_file": "weights.bin",
+        "weights_sha256": hashlib.sha256(
+            open(weights_path, "rb").read()).hexdigest(),
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    if not quiet:
+        print(f"wrote {len(artifacts)} artifacts + weights "
+              f"({geom.param_count() / 1e6:.1f}M params) to {out_dir} "
+              f"in {time.time() - t0:.1f}s")
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--big", action="store_true",
+                    help="emit the ~100M-param geometry instead of tiny")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    geom = BigGeometry() if args.big else TINY
+    emit(os.path.abspath(args.out_dir), geom,
+         skip_existing=args.skip_existing)
+
+
+if __name__ == "__main__":
+    main()

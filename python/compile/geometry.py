@@ -1,0 +1,70 @@
+"""Model geometry and AOT bucket definitions shared by model.py / aot.py / tests.
+
+The serving engine compiles one HLO artifact per static-shape bucket:
+  * prefill_n{N}_c{C}: prefill N new tokens against a cached prefix held in
+    a KV buffer of capacity C (C == 0 means the no-cache variant).
+  * decode_ctx{CTX}:   one decode step against a KV buffer of capacity CTX.
+The Rust engine picks the smallest bucket that fits (vLLM-style padding).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelGeometry:
+    """Decoder-only transformer geometry (llama-style: RMSNorm/RoPE/SwiGLU)."""
+
+    vocab: int = 2048
+    layers: int = 4
+    d_model: int = 256
+    n_heads: int = 8
+    ffn: int = 704          # SwiGLU inner dim (~2.75x d_model)
+    max_seq: int = 512
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, L, v = self.d_model, self.ffn, self.layers, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d  # attn + mlp + 2 norms
+        return v * d * 2 + L * per_layer + d  # embed + unembed + final norm
+
+
+@dataclass(frozen=True)
+class Buckets:
+    """Static-shape buckets the AOT pass compiles."""
+
+    prefill_n: tuple = (16, 32, 64, 128, 256)
+    cache_c: tuple = (0, 256, 512)
+    decode_ctx: tuple = (64, 128, 256, 512)
+
+    def prefill_variants(self, max_seq: int):
+        """All (N, C) pairs. C is the *capacity* of the cached-KV input
+        buffer (C==0 = no-cache variant); the actual cache_len + new_len
+        must fit max_seq at runtime, but a large-capacity bucket with a
+        short valid prefix is fine — the engine picks the smallest C >=
+        cache_len."""
+        return [(n, c) for n in self.prefill_n if n <= max_seq
+                for c in self.cache_c if c <= max_seq]
+
+
+# The canonical geometry used by `make artifacts` and all tests. A larger
+# config (configs/model_100m.toml on the Rust side) reuses the same code.
+TINY = ModelGeometry()
+BUCKETS = Buckets()
+
+
+@dataclass(frozen=True)
+class BigGeometry(ModelGeometry):
+    """~100M-param config used by the scale example (compile-only by default)."""
+
+    vocab: int = 8192
+    layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    ffn: int = 2048
+    max_seq: int = 512

@@ -1,0 +1,164 @@
+"""L1 Pallas kernel: prefix-cached prefill attention (FlashAttention-2 style).
+
+This is MemServe's compute hot-spot: prefilling ``N`` new tokens whose
+attention spans a *cached* prefix of ``cache_len`` tokens (the historical
+KV cache MemPool matched for this prompt) plus the causal window over the
+new tokens themselves. The cached-ratio ``y = cache_len / prompt_len`` is
+exactly the knob the paper's cost model ``exec(x, y)`` studies (Fig 13/14).
+
+Hardware adaptation (paper is CUDA / H800, see DESIGN.md §1): instead of a
+threadblock-per-tile WMMA schedule we express the HBM->VMEM schedule with
+a Pallas grid over Q tiles; all heads are vectorized inside one kernel
+instance so the interpret-mode grid stays small and the lowered HLO stays
+compact. K/V are streamed through the online-softmax inner loop in
+``block_k`` chunks exactly as FlashAttention-2 does.
+
+VMEM budget per grid step (f32): Q tile H*bq*hd + cached KV 2*H*C*hd +
+new KV 2*H*N*hd + acc H*bq*hd. At the tiny geometry (H=8, hd=32, C=512,
+N=256, bq=64) that is ~1.6 MiB, far under the ~16 MiB VMEM of a TPU core;
+at paper scale (H=40, hd=128) the same BlockSpec keeps chunks < 8 MiB.
+
+interpret=True is mandatory: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that the Rust runtime
+(xla crate, xla_extension 0.5.1) compiles and runs.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _online_update(carry, s, v_chunk):
+    """FlashAttention-2 online-softmax accumulator update."""
+    m0, l0, acc0 = carry
+    m1 = jnp.maximum(m0, s.max(axis=-1))
+    alpha = jnp.exp(m0 - m1)
+    p = jnp.exp(s - m1[..., None])
+    l1 = l0 * alpha + p.sum(axis=-1)
+    acc1 = acc0 * alpha[..., None] + jnp.einsum(
+        "hqk,hkd->hqd", p, v_chunk, preferred_element_type=jnp.float32)
+    return m1, l1, acc1
+
+
+def _attn_kernel(*refs, block_q: int, block_k: int, cache_cap: int,
+                 n_new: int, scale: float):
+    """One grid step: all heads, one Q tile of ``block_q`` new tokens."""
+    if cache_cap > 0:
+        cl_ref, nl_ref, q_ref, kc_ref, vc_ref, kn_ref, vn_ref, o_ref = refs
+    else:
+        cl_ref, nl_ref, q_ref, kn_ref, vn_ref, o_ref = refs
+
+    qt = pl.program_id(0)
+    cache_len = cl_ref[0]
+    new_len = nl_ref[0]
+
+    q = q_ref[...]            # [H, block_q, hd]
+    heads, bq, hd = q.shape
+
+    # Local (within the new tokens) row indices of this Q tile.
+    row = qt * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq,), 0)
+
+    m = jnp.full((heads, bq), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((heads, bq), dtype=jnp.float32)
+    acc = jnp.zeros((heads, bq, hd), dtype=jnp.float32)
+
+    # --- Phase 1: stream the cached prefix KV in block_k chunks. ---------
+    if cache_cap > 0:
+        kc = kc_ref[...]      # [H, C, hd] (VMEM-resident for this step)
+        vc = vc_ref[...]
+
+        def cached_body(i, carry):
+            start = i * block_k
+            k_chunk = jax.lax.dynamic_slice_in_dim(kc, start, block_k, axis=1)
+            v_chunk = jax.lax.dynamic_slice_in_dim(vc, start, block_k, axis=1)
+            col = start + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
+            s = jnp.einsum("hqd,hkd->hqk", q, k_chunk,
+                           preferred_element_type=jnp.float32) * scale
+            s = jnp.where(col[None, None, :] < cache_len, s, NEG_INF)
+            return _online_update(carry, s, v_chunk)
+
+        n_chunks = cache_cap // block_k
+        m, l, acc = jax.lax.fori_loop(0, n_chunks, cached_body, (m, l, acc))
+
+    # --- Phase 2: causal attention over the new tokens. ------------------
+    kn = kn_ref[...]          # [H, N, hd]
+    vn = vn_ref[...]
+    bk_new = min(block_k, n_new)
+
+    def new_body(i, carry):
+        start = i * bk_new
+        k_chunk = jax.lax.dynamic_slice_in_dim(kn, start, bk_new, axis=1)
+        v_chunk = jax.lax.dynamic_slice_in_dim(vn, start, bk_new, axis=1)
+        col = start + jax.lax.broadcasted_iota(jnp.int32, (bk_new,), 0)
+        s = jnp.einsum("hqd,hkd->hqk", q, k_chunk,
+                       preferred_element_type=jnp.float32) * scale
+        # Causal within new tokens AND only real (non-padded) new tokens.
+        mask = (col[None, :] <= row[:, None]) & (col[None, :] < new_len)
+        s = jnp.where(mask[None, :, :], s, NEG_INF)
+        return _online_update(carry, s, v_chunk)
+
+    m, l, acc = jax.lax.fori_loop(0, n_new // bk_new, new_body, (m, l, acc))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def prefix_attention(q, k_cache, v_cache, k_new, v_new, cache_len, new_len,
+                     *, block_q: int = 64, block_k: int = 128,
+                     interpret: bool = True):
+    """Attention of ``N`` new queries over cached prefix + causal new KV.
+
+    Args:
+      q:        f32[H, N, hd]  (RoPE already applied)
+      k_cache:  f32[H, C, hd]  post-RoPE cached keys (C may be 0)
+      v_cache:  f32[H, C, hd]
+      k_new:    f32[H, N, hd]  post-RoPE new keys
+      v_new:    f32[H, N, hd]
+      cache_len: i32[1]  number of valid cached tokens (<= C)
+      new_len:   i32[1]  number of real new tokens (<= N)
+
+    Returns: f32[H, N, hd]. Rows >= new_len are padding garbage.
+    """
+    heads, n_new, hd = q.shape
+    cache_cap = k_cache.shape[1]
+    block_q = min(block_q, n_new)
+    assert n_new % block_q == 0, (n_new, block_q)
+    if cache_cap > 0:
+        block_k = min(block_k, cache_cap)
+        assert cache_cap % block_k == 0, (cache_cap, block_k)
+    bk_new = min(block_k, n_new)
+    assert n_new % bk_new == 0, (n_new, bk_new)
+
+    scale = 1.0 / math.sqrt(hd)
+    grid = (n_new // block_q,)
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k,
+        cache_cap=cache_cap, n_new=n_new, scale=scale)
+
+    scalar_spec = pl.BlockSpec((1,), lambda qt: (0,))
+    q_spec = pl.BlockSpec((heads, block_q, hd), lambda qt: (0, qt, 0))
+    new_kv_spec = pl.BlockSpec((heads, n_new, hd), lambda qt: (0, 0, 0))
+
+    operands = [cache_len, new_len, q]
+    in_specs = [scalar_spec, scalar_spec, q_spec]
+    if cache_cap > 0:
+        cache_spec = pl.BlockSpec((heads, cache_cap, hd), lambda qt: (0, 0, 0))
+        operands += [k_cache, v_cache]
+        in_specs += [cache_spec, cache_spec]
+    operands += [k_new, v_new]
+    in_specs += [new_kv_spec, new_kv_spec]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((heads, n_new, hd), q.dtype),
+        interpret=interpret,
+    )(*operands)

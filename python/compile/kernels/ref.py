@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for the Pallas kernel and the attention semantics.
+
+These are the correctness references: slow, obvious, mask-based attention
+with no tiling and no online softmax. ``python/tests/test_kernel.py``
+asserts the Pallas kernel matches ``ref_prefix_attention`` across a
+hypothesis-driven sweep of shapes and cache ratios.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_prefix_attention(q, k_cache, v_cache, k_new, v_new, cache_len,
+                         new_len):
+    """Mask-based reference for kernels.prefix_attention.
+
+    Same signature/semantics: q/k_new/v_new f32[H,N,hd], cache f32[H,C,hd],
+    cache_len/new_len i32[1]. Rows >= new_len are unspecified; this oracle
+    computes them under the same mask so they compare equal.
+    """
+    heads, n_new, hd = q.shape
+    cache_cap = k_cache.shape[1]
+    cl = jnp.asarray(cache_len).reshape(())
+    nl = jnp.asarray(new_len).reshape(())
+
+    k_all = jnp.concatenate([k_cache, k_new], axis=1)  # [H, C+N, hd]
+    v_all = jnp.concatenate([v_cache, v_new], axis=1)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("hqd,hkd->hqk", q, k_all) * scale   # [H, N, C+N]
+
+    col = jnp.arange(cache_cap + n_new)
+    row = jnp.arange(n_new)
+    cached_ok = (col[None, :] < cl) & (col[None, :] < cache_cap)
+    new_col = col[None, :] - cache_cap                  # local new index
+    new_ok = (col[None, :] >= cache_cap) \
+        & (new_col <= row[:, None]) & (new_col < nl)
+    mask = cached_ok | new_ok                           # [N, C+N]
+
+    s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqk,hkd->hqd", p, v_all)
+
+
+def ref_full_causal(q, k, v):
+    """Plain causal attention over a full sequence (no cache, no padding)."""
+    n = q.shape[1]
+    zeros = jnp.zeros((q.shape[0], 0, q.shape[2]), q.dtype)
+    return ref_prefix_attention(
+        q, zeros, zeros, k, v,
+        jnp.array([0], jnp.int32), jnp.array([n], jnp.int32))
+
+
+def np_softmax(x, axis=-1):
+    e = np.exp(x - x.max(axis=axis, keepdims=True))
+    return e / e.sum(axis=axis, keepdims=True)

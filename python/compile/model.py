@@ -1,0 +1,207 @@
+"""L2: the JAX model — a llama-style decoder-only transformer.
+
+Two graph families are AOT-lowered per static-shape bucket (geometry.py):
+
+  prefill(params, tokens[N], new_len, cache_len, kv_cache[L,2,C,H,hd])
+      -> (new_kv[L,2,N,H,hd], last_logits[V])
+    Prefills N (padded) new tokens against a cached prefix of
+    ``cache_len`` valid tokens held in a capacity-C KV buffer. The
+    attention hot-spot is the L1 Pallas kernel (prefix_attention).
+    ``new_kv`` holds post-RoPE keys — cacheable as-is, which is what lets
+    MemServe reuse/transfer KV without reshaping (paper §4.2).
+
+  decode(params, token[1], pos, kv[L,2,CTX,H,hd])
+      -> (logits[V], kv_out[L,2,CTX,H,hd])
+    One decode step at absolute position ``pos``; writes the new K/V into
+    the buffer via dynamic_update_slice so the Rust engine can keep the
+    active KV resident as a PJRT buffer across steps (no host round-trip
+    on the decode hot loop).
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text; the Rust runtime executes them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .geometry import ModelGeometry
+from .kernels.prefix_attention import prefix_attention
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_tables(geom: ModelGeometry, positions):
+    """cos/sin tables [T, hd/2] for absolute ``positions`` (i32[T])."""
+    hd = geom.head_dim
+    inv_freq = 1.0 / (geom.rope_theta
+                      ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: [T, H, hd]; rotate pairs (even, odd) by the position angle."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    ro1 = x1 * c - x2 * s
+    ro2 = x1 * s + x2 * c
+    out = jnp.stack([ro1, ro2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def unpack_params(geom: ModelGeometry, params):
+    """params: flat list in params.param_order -> structured dict."""
+    it = iter(params)
+    p = {"embed": next(it), "layers": []}
+    for _ in range(geom.layers):
+        p["layers"].append({
+            "attn_norm": next(it), "wq": next(it), "wk": next(it),
+            "wv": next(it), "wo": next(it), "mlp_norm": next(it),
+            "w_gate": next(it), "w_up": next(it), "w_down": next(it),
+        })
+    p["final_norm"] = next(it)
+    p["unembed"] = next(it)
+    rest = list(it)
+    assert not rest, f"{len(rest)} unconsumed params"
+    return p
+
+
+def _qkv(geom, x, lp, positions):
+    """Project + RoPE. x: [T, d] -> q/k/v [H, T, hd] (k post-RoPE)."""
+    t = x.shape[0]
+    heads, hd = geom.n_heads, geom.head_dim
+    q = (x @ lp["wq"]).reshape(t, heads, hd)
+    k = (x @ lp["wk"]).reshape(t, heads, hd)
+    v = (x @ lp["wv"]).reshape(t, heads, hd)
+    cos, sin = rope_tables(geom, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # [T, H, hd] -> [H, T, hd] (kernel layout)
+    return (q.transpose(1, 0, 2), k.transpose(1, 0, 2), v.transpose(1, 0, 2))
+
+
+def _mlp(x, lp):
+    gate = jax.nn.silu(x @ lp["w_gate"])
+    return (gate * (x @ lp["w_up"])) @ lp["w_down"]
+
+
+# --------------------------------------------------------------------------
+# Prefill graph
+# --------------------------------------------------------------------------
+
+def prefill(geom: ModelGeometry, params, tokens, new_len, cache_len,
+            kv_cache=None, *, interpret=True):
+    """See module docstring. kv_cache is None for the C==0 bucket."""
+    p = unpack_params(geom, params)
+    n = tokens.shape[0]
+    heads, hd = geom.n_heads, geom.head_dim
+    cl = cache_len.reshape(())
+    nl = new_len.reshape(())
+    cl_arr = cache_len.reshape((1,))
+    nl_arr = new_len.reshape((1,))
+
+    positions = cl + jnp.arange(n, dtype=jnp.int32)
+    x = p["embed"][tokens]                          # [N, d]
+
+    new_kv_layers = []
+    for li in range(geom.layers):
+        lp = p["layers"][li]
+        h = rms_norm(x, lp["attn_norm"], geom.norm_eps)
+        q, k, v = _qkv(geom, h, lp, positions)       # [H, N, hd]
+        if kv_cache is not None:
+            k_cache = kv_cache[li, 0].transpose(1, 0, 2)  # [C,H,hd]->[H,C,hd]
+            v_cache = kv_cache[li, 1].transpose(1, 0, 2)
+        else:
+            k_cache = jnp.zeros((heads, 0, hd), x.dtype)
+            v_cache = k_cache
+        attn = prefix_attention(q, k_cache, v_cache, k, v, cl_arr, nl_arr,
+                                interpret=interpret)  # [H, N, hd]
+        attn = attn.transpose(1, 0, 2).reshape(n, geom.d_model)
+        x = x + attn @ lp["wo"]
+        h = rms_norm(x, lp["mlp_norm"], geom.norm_eps)
+        x = x + _mlp(h, lp)
+        # Cacheable layout [2, N, H, hd]: post-RoPE keys, raw values.
+        new_kv_layers.append(jnp.stack(
+            [k.transpose(1, 0, 2), v.transpose(1, 0, 2)]))
+
+    new_kv = jnp.stack(new_kv_layers)               # [L, 2, N, H, hd]
+    x = rms_norm(x, p["final_norm"], geom.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.maximum(nl - 1, 0), 1, axis=0)[0]    # [d]
+    logits = last @ p["unembed"]                    # [V]
+    return new_kv, logits
+
+
+# --------------------------------------------------------------------------
+# Decode graph
+# --------------------------------------------------------------------------
+
+def decode(geom: ModelGeometry, params, token, pos, kv):
+    """One decode step. token i32[1], pos i32[] (absolute position of this
+    token), kv f32[L,2,CTX,H,hd] with positions [0,pos) valid.
+
+    Returns (logits[V], kv_out) where kv_out has this token's K/V written
+    at index ``pos``. Decode attention is a masked jnp computation — it is
+    a memory-bound GEMV-scale op; the Pallas kernel targets the prefill
+    hot-spot (see DESIGN.md §4).
+    """
+    p = unpack_params(geom, params)
+    ctx = kv.shape[2]
+    heads, hd = geom.n_heads, geom.head_dim
+    pos = pos.reshape(())
+    positions = pos.reshape((1,))
+
+    x = p["embed"][token]                           # [1, d]
+    kv_out = kv
+    col = jnp.arange(ctx)
+    for li in range(geom.layers):
+        lp = p["layers"][li]
+        h = rms_norm(x, lp["attn_norm"], geom.norm_eps)
+        q, k, v = _qkv(geom, h, lp, positions)       # [H, 1, hd]
+        # Write K/V at position pos: kv_out[li, 0, pos] = k
+        k_t = k.transpose(1, 0, 2)                   # [1, H, hd]
+        v_t = v.transpose(1, 0, 2)
+        kv_out = jax.lax.dynamic_update_slice(
+            kv_out, jnp.stack([k_t, v_t])[None, :],  # [1, 2, 1, H, hd]
+            (li, 0, pos, 0, 0))
+        k_all = kv_out[li, 0].transpose(1, 0, 2)     # [H, CTX, hd]
+        v_all = kv_out[li, 1].transpose(1, 0, 2)
+        s = jnp.einsum("hqd,hkd->hqk", q, k_all) / jnp.sqrt(
+            jnp.asarray(hd, jnp.float32))
+        s = jnp.where((col <= pos)[None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("hqk,hkd->hqd", w, v_all)  # [H, 1, hd]
+        attn = attn.transpose(1, 0, 2).reshape(1, geom.d_model)
+        x = x + attn @ lp["wo"]
+        h = rms_norm(x, lp["mlp_norm"], geom.norm_eps)
+        x = x + _mlp(h, lp)
+
+    x = rms_norm(x, p["final_norm"], geom.norm_eps)
+    logits = (x @ p["unembed"])[0]                  # [V]
+    return logits, kv_out
+
+
+def decode_state(geom: ModelGeometry, params, token, pos, state, ctx: int):
+    """Flat-state decode step for the Rust engine's zero-copy hot loop.
+
+    ``state`` is f32[vocab + L*2*ctx*H*hd]: the logits region (ignored on
+    input) followed by the KV buffer. Returning one flat array (lowered
+    with return_tuple=False) makes the PJRT output a single non-tuple
+    buffer the engine feeds straight back as the next step's input —
+    active KV never leaves the device during decode; only the 4·vocab-byte
+    logits region is read back per step (offset read).
+    """
+    kv_len = geom.layers * 2 * ctx * geom.n_heads * geom.head_dim
+    kv = state[geom.vocab:geom.vocab + kv_len].reshape(
+        (geom.layers, 2, ctx, geom.n_heads, geom.head_dim))
+    logits, kv_out = decode(geom, params, token, pos, kv)
+    return jnp.concatenate([logits, kv_out.reshape(-1)])

@@ -1,0 +1,70 @@
+"""Parameter initialization, deterministic ordering, and binary export.
+
+The Rust runtime never runs Python, so weights are exported once by
+``aot.py`` as a flat little-endian f32 blob (``artifacts/weights.bin``)
+plus a manifest entry per tensor in ``artifacts/meta.json``. The flatten
+order here is the *contract*: every AOT'd HLO takes the weight tensors as
+its leading arguments in exactly this order.
+"""
+
+import numpy as np
+
+from .geometry import ModelGeometry
+
+
+def param_order(geom: ModelGeometry):
+    """The canonical (name, shape) list — the cross-language ABI."""
+    d, f = geom.d_model, geom.ffn
+    order = [("embed", (geom.vocab, d))]
+    for layer in range(geom.layers):
+        p = f"layer{layer}."
+        order += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "mlp_norm", (d,)),
+            (p + "w_gate", (d, f)),
+            (p + "w_up", (d, f)),
+            (p + "w_down", (f, d)),
+        ]
+    order += [("final_norm", (d,)), ("unembed", (d, geom.vocab))]
+    return order
+
+
+def init_params(geom: ModelGeometry, seed: int = 0x5EED):
+    """Deterministic scaled-normal init; returns a list of np.float32
+    arrays in ``param_order``. Norm weights init to 1."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_order(geom):
+        if name.endswith("norm"):
+            out.append(np.ones(shape, np.float32))
+        else:
+            scale = 1.0 / np.sqrt(shape[0])
+            out.append((rng.standard_normal(shape) * scale)
+                       .astype(np.float32))
+    return out
+
+
+def write_weights(geom: ModelGeometry, params, path):
+    """Concatenate all tensors (C order) into one f32-LE blob; return the
+    manifest [{name, shape, offset_f32, len_f32}] for meta.json."""
+    order = param_order(geom)
+    assert len(order) == len(params), (len(order), len(params))
+    manifest = []
+    offset = 0
+    with open(path, "wb") as f:
+        for (name, shape), arr in zip(order, params):
+            assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+            flat = np.ascontiguousarray(arr, np.float32).ravel()
+            f.write(flat.astype("<f4").tobytes())
+            manifest.append({
+                "name": name,
+                "shape": list(shape),
+                "offset_f32": offset,
+                "len_f32": int(flat.size),
+            })
+            offset += int(flat.size)
+    return manifest

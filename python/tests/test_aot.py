@@ -1,0 +1,134 @@
+"""AOT artifact integrity: meta.json + weights.bin + HLO text contracts.
+
+The Rust runtime consumes these files blind; this suite is the build-time
+gate that the cross-language ABI (argument order, shapes, weight layout)
+is intact.
+"""
+
+import json
+import hashlib
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile.geometry import TINY, BUCKETS
+from compile.params import init_params, param_order
+from compile.aot import lower_prefill, lower_decode, to_hlo_text
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "artifacts"))
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="run `make artifacts` first")
+
+
+@pytest.fixture(scope="module")
+def meta():
+    with open(os.path.join(ART, "meta.json")) as f:
+        return json.load(f)
+
+
+@needs_artifacts
+class TestMeta:
+    def test_model_geometry_matches(self, meta):
+        m = meta["model"]
+        assert m["vocab"] == TINY.vocab
+        assert m["layers"] == TINY.layers
+        assert m["d_model"] == TINY.d_model
+        assert m["n_heads"] == TINY.n_heads
+        assert m["head_dim"] == TINY.head_dim
+        assert m["param_count"] == TINY.param_count()
+
+    def test_every_artifact_file_exists(self, meta):
+        for name, fname in meta["artifacts"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) > 1000, name
+
+    def test_buckets_match_geometry(self, meta):
+        expect = [[n, c] for n, c in BUCKETS.prefill_variants(TINY.max_seq)]
+        assert meta["buckets"]["prefill"] == expect
+        for n, c in expect:
+            assert f"prefill_n{n}_c{c}" in meta["artifacts"]
+        for ctx in meta["buckets"]["decode_ctx"]:
+            assert f"decode_ctx{ctx}" in meta["artifacts"]
+
+    def test_param_manifest_is_contiguous_and_ordered(self, meta):
+        offset = 0
+        order = param_order(TINY)
+        assert len(meta["params"]) == len(order)
+        for entry, (name, shape) in zip(meta["params"], order):
+            assert entry["name"] == name
+            assert entry["shape"] == list(shape)
+            assert entry["offset_f32"] == offset
+            assert entry["len_f32"] == int(np.prod(shape))
+            offset += entry["len_f32"]
+        assert offset == TINY.param_count()
+
+    def test_weights_blob_matches_manifest_and_hash(self, meta):
+        path = os.path.join(ART, meta["weights_file"])
+        blob = open(path, "rb").read()
+        assert len(blob) == 4 * TINY.param_count()
+        assert hashlib.sha256(blob).hexdigest() == meta["weights_sha256"]
+
+    def test_weights_reproduce_init(self, meta):
+        path = os.path.join(ART, meta["weights_file"])
+        blob = np.fromfile(path, dtype="<f4")
+        params = init_params(TINY)
+        for entry, arr in zip(meta["params"], params):
+            start = entry["offset_f32"]
+            seg = blob[start:start + entry["len_f32"]]
+            np.testing.assert_array_equal(seg, arr.ravel(), err_msg=entry["name"])
+
+
+@needs_artifacts
+class TestHloText:
+    def test_hlo_parses_as_module(self, meta):
+        """Every artifact must start with an HloModule header (what
+        HloModuleProto::from_text_file parses) and contain no custom-calls
+        (the CPU PJRT client cannot run Mosaic/NEFF)."""
+        for name, fname in meta["artifacts"].items():
+            text = open(os.path.join(ART, fname)).read()
+            assert text.startswith("HloModule"), name
+            assert "custom-call" not in text.lower(), (
+                f"{name} contains a custom-call — was the Pallas kernel "
+                "lowered without interpret=True?")
+
+    def test_prefill_entry_has_expected_arity(self, meta):
+        n_params = len(meta["params"])
+        text = open(os.path.join(ART,
+                                 meta["artifacts"]["prefill_n16_c256"])).read()
+        entry = [l for l in text.splitlines() if "ENTRY" in l][0]
+        n_args = entry.count("parameter(") or entry.count(": ")
+        # params + tokens + new_len + cache_len + kv_cache
+        assert f"f32[{TINY.vocab},{TINY.d_model}]" in text  # embed param
+
+    def test_decode_state_is_flat_and_untupled(self, meta):
+        text = open(os.path.join(ART,
+                                 meta["artifacts"]["decode_ctx64"])).read()
+        state_len = TINY.vocab + TINY.layers * 2 * 64 * TINY.n_heads \
+            * TINY.head_dim
+        assert f"f32[{state_len}]" in text
+        # Root must NOT be a tuple: the engine feeds the output buffer
+        # back as the next step's state input. In this HLO text dialect
+        # the signature lives on the entry computation's ROOT line.
+        roots = [l for l in text.splitlines() if "ROOT" in l]
+        entry_root = roots[-1]
+        assert f"f32[{state_len}]" in entry_root, entry_root
+        assert "tuple(" not in entry_root, entry_root
+
+
+class TestLoweringRoundTrip:
+    """Fresh lowering (independent of artifacts on disk)."""
+
+    def test_lower_prefill_smallest(self):
+        text = to_hlo_text(lower_prefill(TINY, 16, 0))
+        assert text.startswith("HloModule")
+        assert "custom-call" not in text.lower()
+
+    def test_lower_decode_smallest(self):
+        text = to_hlo_text(lower_decode(TINY, 64))
+        assert text.startswith("HloModule")

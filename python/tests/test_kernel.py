@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas prefix-attention kernel vs the pure-jnp oracle.
+
+This is the core numeric signal for the whole stack: the Rust engine's
+prefill path executes HLO lowered from this kernel, so any mismatch here
+propagates to the serving layer.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.prefix_attention import prefix_attention
+from compile.kernels.ref import ref_prefix_attention, ref_full_causal
+
+TOL = 2e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def run_both(rng, heads, n, c, hd, cache_len, new_len, **kw):
+    q = rand(rng, heads, n, hd)
+    kc = rand(rng, heads, c, hd)
+    vc = rand(rng, heads, c, hd)
+    kn = rand(rng, heads, n, hd)
+    vn = rand(rng, heads, n, hd)
+    cl = jnp.array([cache_len], jnp.int32)
+    nl = jnp.array([new_len], jnp.int32)
+    out = prefix_attention(q, kc, vc, kn, vn, cl, nl, **kw)
+    ref = ref_prefix_attention(q, kc, vc, kn, vn, cl, nl)
+    return np.asarray(out), np.asarray(ref)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,cache_len,new_len", [
+    (16, 0, 0, 16),
+    (16, 256, 0, 16),       # cache buffer present but empty
+    (16, 256, 256, 16),     # full cache
+    (64, 256, 100, 64),
+    (64, 256, 100, 1),      # mostly padding
+    (128, 512, 37, 128),
+    (256, 512, 512, 256),   # max everything
+    (256, 512, 1, 3),
+    (32, 256, 255, 32),     # cache_len not chunk-aligned
+])
+def test_kernel_matches_ref(n, c, cache_len, new_len):
+    rng = np.random.default_rng(n * 1000 + c + cache_len)
+    out, ref = run_both(rng, 8, n, c, 32, cache_len, new_len)
+    np.testing.assert_allclose(out, ref, atol=TOL, rtol=TOL)
+
+
+@pytest.mark.parametrize("block_q,block_k", [
+    (16, 32), (32, 64), (64, 128), (64, 64), (16, 256)])
+def test_kernel_tile_shapes(block_q, block_k):
+    """The result must be tile-shape independent (pure schedule change)."""
+    rng = np.random.default_rng(7)
+    out, ref = run_both(rng, 4, 64, 256, 32, 130, 64,
+                        block_q=block_q, block_k=block_k)
+    np.testing.assert_allclose(out, ref, atol=TOL, rtol=TOL)
+
+
+def test_kernel_no_cache_variant_equals_causal():
+    rng = np.random.default_rng(9)
+    h, n, hd = 8, 64, 32
+    q = rand(rng, h, n, hd)
+    kn = rand(rng, h, n, hd)
+    vn = rand(rng, h, n, hd)
+    z = jnp.zeros((h, 0, hd), jnp.float32)
+    out = prefix_attention(q, z, z, kn, vn,
+                           jnp.array([0], jnp.int32),
+                           jnp.array([n], jnp.int32))
+    ref = ref_full_causal(q, kn, vn)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=TOL, rtol=TOL)
+
+
+def test_kernel_first_token_attends_only_to_cache_and_self():
+    """Row 0 with cache_len=c must equal softmax over exactly c+1 keys."""
+    rng = np.random.default_rng(11)
+    h, n, c, hd = 2, 16, 256, 32
+    out, ref = run_both(rng, h, n, c, hd, 19, 16)
+    np.testing.assert_allclose(out[:, 0], ref[:, 0], atol=TOL, rtol=TOL)
+
+
+def test_kernel_is_deterministic():
+    rng = np.random.default_rng(13)
+    h, n, c, hd = 4, 32, 256, 32
+    q = rand(rng, h, n, hd)
+    kc = rand(rng, h, c, hd)
+    vc = rand(rng, h, c, hd)
+    kn = rand(rng, h, n, hd)
+    vn = rand(rng, h, n, hd)
+    cl = jnp.array([77], jnp.int32)
+    nl = jnp.array([32], jnp.int32)
+    a = np.asarray(prefix_attention(q, kc, vc, kn, vn, cl, nl))
+    b = np.asarray(prefix_attention(q, kc, vc, kn, vn, cl, nl))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_kernel_padding_rows_do_not_affect_real_rows():
+    """Changing garbage q rows >= new_len must not change rows < new_len."""
+    rng = np.random.default_rng(17)
+    h, n, c, hd = 4, 64, 256, 32
+    q = rand(rng, h, n, hd)
+    kc = rand(rng, h, c, hd)
+    vc = rand(rng, h, c, hd)
+    kn = rand(rng, h, n, hd)
+    vn = rand(rng, h, n, hd)
+    cl = jnp.array([50], jnp.int32)
+    new_len = 20
+    nl = jnp.array([new_len], jnp.int32)
+    out1 = np.asarray(prefix_attention(q, kc, vc, kn, vn, cl, nl))
+    q2 = q.at[:, new_len:].set(123.0)
+    # padded *keys* also change: rows < new_len must be unaffected because
+    # the mask excludes cols >= new_len
+    kn2 = kn.at[:, new_len:].set(-55.0)
+    vn2 = vn.at[:, new_len:].set(99.0)
+    out2 = np.asarray(prefix_attention(q2, kc, vc, kn2, vn2, cl, nl))
+    np.testing.assert_allclose(out1[:, :new_len], out2[:, :new_len],
+                               atol=TOL, rtol=TOL)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: shapes, cache ratios, tile sizes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None, derandomize=True)
+@given(
+    heads=st.sampled_from([1, 2, 4, 8]),
+    n=st.sampled_from([16, 32, 64, 128]),
+    c=st.sampled_from([0, 64, 128, 256, 512]),
+    hd=st.sampled_from([8, 16, 32, 64]),
+    ratio=st.floats(0.0, 1.0),
+    newfrac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_hypothesis_sweep(heads, n, c, hd, ratio, newfrac, seed):
+    cache_len = int(round(c * ratio))
+    new_len = max(1, int(round(n * newfrac)))
+    rng = np.random.default_rng(seed)
+    out, ref = run_both(rng, heads, n, c, hd, cache_len, new_len)
+    real = out[:, :new_len]
+    np.testing.assert_allclose(real, ref[:, :new_len], atol=3e-5, rtol=3e-5)
+    assert np.all(np.isfinite(out)), "non-finite attention output"
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(
+    scale=st.sampled_from([1e-3, 1.0, 30.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_numeric_stability_extreme_logits(scale, seed):
+    """Online softmax must survive large-magnitude scores (no inf/nan)."""
+    rng = np.random.default_rng(seed)
+    h, n, c, hd = 2, 32, 128, 16
+    q = rand(rng, h, n, hd) * scale
+    kc = rand(rng, h, c, hd) * scale
+    vc = rand(rng, h, c, hd)
+    kn = rand(rng, h, n, hd) * scale
+    vn = rand(rng, h, n, hd)
+    cl = jnp.array([c], jnp.int32)
+    nl = jnp.array([n], jnp.int32)
+    out = np.asarray(prefix_attention(q, kc, vc, kn, vn, cl, nl))
+    ref = np.asarray(ref_prefix_attention(q, kc, vc, kn, vn, cl, nl))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out, ref, atol=2e-4, rtol=1e-2)

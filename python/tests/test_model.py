@@ -1,0 +1,197 @@
+"""L2 correctness: the serving invariants the Rust engine relies on.
+
+The whole MemServe design rests on three equivalences:
+  1. *Context caching is exact*: prefill(suffix | cached prefix KV) must
+     produce the same logits as prefill(full prompt).
+  2. *Decode continues prefill*: one decode step at position p equals the
+     last-token logits of a prefill of p+1 tokens.
+  3. *KV is relocatable*: KV produced in one buffer capacity is valid in
+     any other (blocks can be gathered/scattered/transferred) — paper
+     §4.2's "no reshaping" claim.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.geometry import TINY, BUCKETS
+from compile.params import init_params, param_order
+from compile.model import prefill, decode, unpack_params
+
+GEOM = TINY
+PARAMS = [jnp.asarray(p) for p in init_params(GEOM)]
+TOL = 5e-4
+
+
+def rand_tokens(rng, n):
+    return jnp.asarray(rng.integers(0, GEOM.vocab, n), jnp.int32)
+
+
+def kv_buffer(c):
+    return jnp.zeros((GEOM.layers, 2, c, GEOM.n_heads, GEOM.head_dim),
+                     jnp.float32)
+
+
+def pad_tokens(toks, n):
+    assert len(toks) <= n
+    return jnp.pad(toks, (0, n - len(toks)))
+
+
+def full_prefill(toks, bucket=None):
+    n = bucket or len(toks)
+    return prefill(GEOM, PARAMS, pad_tokens(toks, n),
+                   jnp.int32(len(toks)), jnp.int32(0))
+
+
+class TestParamPlumbing:
+    def test_param_order_matches_init(self):
+        order = param_order(GEOM)
+        assert len(order) == len(PARAMS)
+        for (name, shape), arr in zip(order, PARAMS):
+            assert tuple(arr.shape) == tuple(shape), name
+
+    def test_unpack_consumes_everything(self):
+        p = unpack_params(GEOM, PARAMS)
+        assert len(p["layers"]) == GEOM.layers
+
+    def test_param_count_formula(self):
+        total = sum(int(np.prod(a.shape)) for a in PARAMS)
+        assert total == GEOM.param_count()
+
+
+class TestPrefill:
+    def test_bucket_padding_invariance(self):
+        """Same prompt in different N buckets -> same logits and KV."""
+        rng = np.random.default_rng(0)
+        toks = rand_tokens(rng, 30)
+        kv64, logits64 = full_prefill(toks, 64)
+        kv32, logits32 = full_prefill(toks, 32)
+        np.testing.assert_allclose(logits64, logits32, atol=TOL, rtol=TOL)
+        np.testing.assert_allclose(kv64[:, :, :30], kv32[:, :, :30],
+                                   atol=TOL, rtol=TOL)
+
+    def test_cached_prefill_exactness(self):
+        """Invariant 1: caching changes nothing numerically."""
+        rng = np.random.default_rng(1)
+        toks = rand_tokens(rng, 120)
+        kv_full, logits_full = full_prefill(toks, 128)
+        for split in (16, 64, 100):
+            kv_a, _ = full_prefill(toks[:split], 128)
+            buf = kv_buffer(256).at[:, :, :split].set(kv_a[:, :, :split])
+            rest = toks[split:]
+            n_bucket = 32 if len(rest) <= 32 else 128
+            _, logits_b = prefill(
+                GEOM, PARAMS, pad_tokens(rest, n_bucket),
+                jnp.int32(len(rest)), jnp.int32(split), buf)
+            np.testing.assert_allclose(logits_b, logits_full,
+                                       atol=TOL, rtol=TOL)
+
+    def test_cache_capacity_invariance(self):
+        """Invariant 3: C=256 vs C=512 buckets agree given same prefix."""
+        rng = np.random.default_rng(2)
+        toks = rand_tokens(rng, 80)
+        kv_a, _ = full_prefill(toks[:48], 64)
+        rest = pad_tokens(toks[48:], 32)
+        out = []
+        for cap in (256, 512):
+            buf = kv_buffer(cap).at[:, :, :48].set(kv_a[:, :, :48])
+            _, logits = prefill(GEOM, PARAMS, rest, jnp.int32(32),
+                                jnp.int32(48), buf)
+            out.append(np.asarray(logits))
+        np.testing.assert_allclose(out[0], out[1], atol=TOL, rtol=TOL)
+
+    def test_garbage_beyond_cache_len_ignored(self):
+        rng = np.random.default_rng(3)
+        toks = rand_tokens(rng, 40)
+        kv_a, _ = full_prefill(toks[:24], 32)
+        buf = kv_buffer(256).at[:, :, :24].set(kv_a[:, :, :24])
+        buf_dirty = buf.at[:, :, 24:].set(777.0)
+        rest = pad_tokens(toks[24:], 16)
+        _, l1 = prefill(GEOM, PARAMS, rest, jnp.int32(16), jnp.int32(24), buf)
+        _, l2 = prefill(GEOM, PARAMS, rest, jnp.int32(16), jnp.int32(24),
+                        buf_dirty)
+        np.testing.assert_allclose(l1, l2, atol=TOL, rtol=TOL)
+
+    def test_logits_finite_and_discriminative(self):
+        rng = np.random.default_rng(4)
+        toks = rand_tokens(rng, 64)
+        _, logits = full_prefill(toks, 64)
+        logits = np.asarray(logits)
+        assert np.all(np.isfinite(logits))
+        assert logits.std() > 0.1, "degenerate logits"
+
+
+class TestDecode:
+    def test_decode_continues_prefill(self):
+        """Invariant 2, chained over several steps."""
+        rng = np.random.default_rng(5)
+        toks = rand_tokens(rng, 40)
+        kv_p, _ = full_prefill(toks[:32], 32)
+        buf = kv_buffer(64).at[:, :, :32].set(kv_p[:, :, :32])
+        for i in range(32, 40):
+            logits_d, buf = decode(GEOM, PARAMS, toks[i:i + 1],
+                                   jnp.int32(i), buf)
+            _, logits_f = full_prefill(toks[:i + 1], 64)
+            np.testing.assert_allclose(logits_d, logits_f,
+                                       atol=TOL, rtol=TOL)
+
+    def test_decode_ctx_bucket_invariance(self):
+        rng = np.random.default_rng(6)
+        toks = rand_tokens(rng, 20)
+        kv_p, _ = full_prefill(toks[:16], 16)
+        outs = []
+        for ctx in (64, 128, 256):
+            buf = kv_buffer(ctx).at[:, :, :16].set(kv_p[:, :, :16])
+            logits, _ = decode(GEOM, PARAMS, toks[16:17], jnp.int32(16), buf)
+            outs.append(np.asarray(logits))
+        np.testing.assert_allclose(outs[0], outs[1], atol=TOL, rtol=TOL)
+        np.testing.assert_allclose(outs[0], outs[2], atol=TOL, rtol=TOL)
+
+    def test_decode_writes_kv_in_place(self):
+        rng = np.random.default_rng(7)
+        toks = rand_tokens(rng, 17)
+        kv_p, _ = full_prefill(toks, 32)
+        buf = kv_buffer(64).at[:, :, :17].set(kv_p[:, :, :17])
+        tok = rand_tokens(rng, 1)
+        _, buf2 = decode(GEOM, PARAMS, tok, jnp.int32(17), buf)
+        # untouched region identical
+        np.testing.assert_array_equal(np.asarray(buf2[:, :, :17]),
+                                      np.asarray(buf[:, :, :17]))
+        # written slot differs from zero
+        assert np.abs(np.asarray(buf2[:, :, 17])).max() > 0
+
+
+class TestHypothesisModel:
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(split_frac=st.floats(0.1, 0.9), seed=st.integers(0, 2**31 - 1))
+    def test_cached_prefill_random_splits(self, split_frac, seed):
+        rng = np.random.default_rng(seed)
+        total = int(rng.integers(20, 120))
+        split = max(1, min(total - 1, int(total * split_frac)))
+        toks = rand_tokens(rng, total)
+        bucket = 128
+        _, logits_full = full_prefill(toks, bucket)
+        kv_a, _ = full_prefill(toks[:split], bucket)
+        buf = kv_buffer(256).at[:, :, :split].set(kv_a[:, :, :split])
+        _, logits_b = prefill(GEOM, PARAMS, pad_tokens(toks[split:], bucket),
+                              jnp.int32(total - split), jnp.int32(split), buf)
+        np.testing.assert_allclose(logits_b, logits_full, atol=1e-3,
+                                   rtol=1e-3)
+
+
+class TestBuckets:
+    def test_variants_cover_max_seq(self):
+        variants = BUCKETS.prefill_variants(GEOM.max_seq)
+        assert (256, 512) in variants
+        assert (16, 0) in variants
+        # any (cache_len, new_len) with sum <= max_seq has a bucket
+        for cache_len in (0, 1, 255, 256, 400, 496):
+            for new_len in (1, 16, 100):
+                if cache_len + new_len > GEOM.max_seq:
+                    continue
+                n_ok = [n for n, c in variants
+                        if n >= new_len and (c >= cache_len or
+                                             (c == 0 and cache_len == 0))]
+                assert n_ok, (cache_len, new_len)

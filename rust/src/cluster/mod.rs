@@ -1,0 +1,203 @@
+//! Cluster management (paper §4.4): membership, heartbeats, failure
+//! detection, and the post-failure cleanup contract.
+//!
+//! The CM is a centralized service (the paper's "cluster management
+//! module"): instances register, send periodic heartbeats, and receive
+//! epoch-stamped membership broadcasts. When an instance misses
+//! `max_misses` heartbeat intervals it is declared dead; the CM bumps the
+//! epoch and the broadcast tells every survivor to (a) release memory
+//! blocks owned by the dead instance (addresses encode the owner) and
+//! (b) drop it from global prompt trees. Pure logic here — the transport
+//! wiring lives in [`crate::server`] and the failover example.
+
+use std::collections::BTreeMap;
+
+use crate::mempool::InstanceId;
+use crate::scheduler::prompt_tree::InstanceKind;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemberInfo {
+    pub kind: InstanceKind,
+    pub last_heartbeat: f64,
+    pub alive: bool,
+}
+
+/// Epoch-stamped membership snapshot (what gets broadcast).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Membership {
+    pub epoch: u64,
+    pub alive: Vec<(InstanceId, InstanceKind)>,
+}
+
+pub struct ClusterManager {
+    members: BTreeMap<InstanceId, MemberInfo>,
+    epoch: u64,
+    heartbeat_interval_s: f64,
+    max_misses: u32,
+}
+
+impl ClusterManager {
+    pub fn new(heartbeat_interval_s: f64, max_misses: u32) -> Self {
+        assert!(heartbeat_interval_s > 0.0 && max_misses > 0);
+        ClusterManager {
+            members: BTreeMap::new(),
+            epoch: 0,
+            heartbeat_interval_s,
+            max_misses,
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Register (or re-register) an instance; bumps the epoch.
+    pub fn register(&mut self, id: InstanceId, kind: InstanceKind, now: f64)
+                    -> Membership {
+        self.members.insert(
+            id,
+            MemberInfo {
+                kind,
+                last_heartbeat: now,
+                alive: true,
+            },
+        );
+        self.epoch += 1;
+        self.membership()
+    }
+
+    /// Graceful removal (scale-down) — also epoch-bumping.
+    pub fn deregister(&mut self, id: InstanceId) -> Membership {
+        if self.members.remove(&id).is_some() {
+            self.epoch += 1;
+        }
+        self.membership()
+    }
+
+    /// Record a heartbeat.
+    pub fn heartbeat(&mut self, id: InstanceId, now: f64) {
+        if let Some(m) = self.members.get_mut(&id) {
+            m.last_heartbeat = now;
+            if !m.alive {
+                // An instance returning from the dead re-registers with a
+                // new epoch (its state is gone; peers released its blocks).
+                m.alive = true;
+                self.epoch += 1;
+            }
+        }
+    }
+
+    /// Failure sweep: returns instances *newly* declared dead at `now`
+    /// (the caller broadcasts the new membership when non-empty).
+    pub fn sweep(&mut self, now: f64) -> Vec<InstanceId> {
+        let deadline = self.heartbeat_interval_s * self.max_misses as f64;
+        let mut newly_dead = vec![];
+        for (id, m) in self.members.iter_mut() {
+            if m.alive && now - m.last_heartbeat > deadline {
+                m.alive = false;
+                newly_dead.push(*id);
+            }
+        }
+        if !newly_dead.is_empty() {
+            self.epoch += 1;
+        }
+        newly_dead
+    }
+
+    pub fn membership(&self) -> Membership {
+        Membership {
+            epoch: self.epoch,
+            alive: self
+                .members
+                .iter()
+                .filter(|(_, m)| m.alive)
+                .map(|(id, m)| (*id, m.kind))
+                .collect(),
+        }
+    }
+
+    pub fn is_alive(&self, id: InstanceId) -> bool {
+        self.members.get(&id).map(|m| m.alive).unwrap_or(false)
+    }
+}
+
+/// Survivor-side cleanup after a membership change: what every instance
+/// must do with a dead peer (paper §4.4). Returns a human-readable action
+/// log (the server applies the actions; tests assert on them).
+pub fn survivor_actions(dead: &[InstanceId]) -> Vec<String> {
+    let mut out = vec![];
+    for d in dead {
+        out.push(format!("release blocks allocated by {d}"));
+        out.push(format!("abort in-flight transfers to/from {d}"));
+        out.push(format!("drop {d} from global prompt trees"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> ClusterManager {
+        ClusterManager::new(0.1, 3)
+    }
+
+    #[test]
+    fn register_and_membership() {
+        let mut c = cm();
+        c.register(InstanceId(0), InstanceKind::PrefillOnly, 0.0);
+        let m = c.register(InstanceId(1), InstanceKind::DecodeOnly, 0.0);
+        assert_eq!(m.epoch, 2);
+        assert_eq!(m.alive.len(), 2);
+    }
+
+    #[test]
+    fn missed_heartbeats_kill() {
+        let mut c = cm();
+        c.register(InstanceId(0), InstanceKind::Colocated, 0.0);
+        c.register(InstanceId(1), InstanceKind::Colocated, 0.0);
+        // 1 keeps beating; 0 goes silent.
+        for i in 1..=5 {
+            c.heartbeat(InstanceId(1), i as f64 * 0.1);
+        }
+        assert!(c.sweep(0.25).is_empty(), "too early to kill");
+        let dead = c.sweep(0.5);
+        assert_eq!(dead, vec![InstanceId(0)]);
+        assert!(!c.is_alive(InstanceId(0)));
+        assert!(c.is_alive(InstanceId(1)));
+        // Idempotent: already-dead not re-reported.
+        c.heartbeat(InstanceId(1), 0.9);
+        assert!(c.sweep(1.0).is_empty());
+    }
+
+    #[test]
+    fn epoch_bumps_on_every_change() {
+        let mut c = cm();
+        let e0 = c.register(InstanceId(0), InstanceKind::Colocated, 0.0).epoch;
+        c.heartbeat(InstanceId(0), 0.05);
+        assert_eq!(c.epoch(), e0, "heartbeat must not bump epoch");
+        c.sweep(10.0);
+        assert_eq!(c.epoch(), e0 + 1);
+        c.heartbeat(InstanceId(0), 10.1); // resurrection
+        assert_eq!(c.epoch(), e0 + 2);
+        assert!(c.is_alive(InstanceId(0)));
+    }
+
+    #[test]
+    fn deregister_is_graceful() {
+        let mut c = cm();
+        c.register(InstanceId(0), InstanceKind::Colocated, 0.0);
+        c.register(InstanceId(1), InstanceKind::Colocated, 0.0);
+        let m = c.deregister(InstanceId(0));
+        assert_eq!(m.alive.len(), 1);
+        assert!(c.deregister(InstanceId(9)).epoch == m.epoch, "no-op");
+    }
+
+    #[test]
+    fn survivor_action_contract() {
+        let a = survivor_actions(&[InstanceId(3)]);
+        assert_eq!(a.len(), 3);
+        assert!(a[0].contains("release blocks"));
+        assert!(a[2].contains("prompt trees"));
+    }
+}

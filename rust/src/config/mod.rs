@@ -1,0 +1,416 @@
+//! Configuration system: typed config structs, a TOML-subset file parser,
+//! `--set section.key=value` overrides, and validation.
+//!
+//! The subset understood: `[section]` headers, `key = value` lines where
+//! value is an int, float, bool, or quoted string, `#` comments. That is
+//! all the launcher needs; presets live in `configs/*.toml`.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use std::collections::BTreeMap;
+
+use crate::mempool::TransferMode;
+use crate::scheduler::PolicyKind;
+
+/// Everything the launcher needs to assemble a cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub mempool: MemPoolConfig,
+    pub fabric: FabricConfig,
+    pub scheduler: SchedulerConfig,
+    pub engine: EngineConfig,
+    pub workload: WorkloadConfig,
+    /// Directory holding AOT artifacts (meta.json, *.hlo.txt, weights.bin).
+    pub artifacts_dir: String,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of prefill-only instances.
+    pub prefill_instances: usize,
+    /// Number of decode-only instances.
+    pub decode_instances: usize,
+    /// Number of PD-colocated instances.
+    pub colocated_instances: usize,
+    /// Heartbeat period (virtual or real ms depending on mode).
+    pub heartbeat_ms: f64,
+    /// Heartbeats missed before an instance is declared dead.
+    pub heartbeat_misses: u32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemPoolConfig {
+    /// Tokens per (small) KV block — vLLM-style block size.
+    pub block_tokens: usize,
+    /// HBM-sim tier capacity in blocks (per instance).
+    pub hbm_blocks: usize,
+    /// DRAM-sim tier capacity in blocks (per instance).
+    pub dram_blocks: usize,
+    /// Aggregated "huge page" layout (paper §5.2): one block spans all
+    /// 2*L per-layer halves instead of 2*L discrete blocks.
+    pub aggregated_layout: bool,
+    /// Index entry TTL in seconds (paper §6 Discussion); 0 = no TTL.
+    pub index_ttl_s: f64,
+    /// Enable context caching (insert/match on the historical index).
+    pub context_caching: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricConfig {
+    /// Per network-API-call overhead in microseconds (NCCL launch cost).
+    pub call_overhead_us: f64,
+    /// Link bandwidth in GB/s (NVLink-class default).
+    pub bandwidth_gbps: f64,
+    /// Number of communicators (parallel serialization domains).
+    pub communicators: usize,
+    /// NCCL-style buffer size per communicator in MB (HBM cost knob).
+    pub buffer_mb: f64,
+    /// Extra latency for any DRAM-side endpoint (socket path), us.
+    pub dram_penalty_us: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    pub policy: PolicyKind,
+    /// Global prompt-tree TTL in seconds.
+    pub tree_ttl_s: f64,
+    /// Use the transfer-vs-recompute rule (paper Eq. 2).
+    pub transfer_decision: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Max sequence length (must match artifacts meta).
+    pub max_seq: usize,
+    /// Max new tokens per request (generation cap).
+    pub max_new_tokens: usize,
+    /// Max running requests per instance (batch slots).
+    pub max_batch: usize,
+    /// KV transfer granularity P->D (paper Fig 5).
+    pub transfer_mode: TransferMode,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    /// "sharegpt" | "loogle" | "react".
+    pub kind: String,
+    /// Request rate per instance (req/s).
+    pub rate: f64,
+    /// Number of sessions to generate.
+    pub sessions: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cluster: ClusterConfig {
+                prefill_instances: 1,
+                decode_instances: 1,
+                colocated_instances: 0,
+                heartbeat_ms: 100.0,
+                heartbeat_misses: 3,
+            },
+            mempool: MemPoolConfig {
+                block_tokens: 16,
+                hbm_blocks: 512,
+                dram_blocks: 4096,
+                aggregated_layout: true,
+                index_ttl_s: 300.0,
+                context_caching: true,
+            },
+            fabric: FabricConfig {
+                call_overhead_us: 15.0,
+                bandwidth_gbps: 40.0,
+                communicators: 1,
+                buffer_mb: 4.0,
+                dram_penalty_us: 50.0,
+            },
+            scheduler: SchedulerConfig {
+                policy: PolicyKind::PromptTree,
+                tree_ttl_s: 300.0,
+                transfer_decision: true,
+            },
+            engine: EngineConfig {
+                max_seq: 512,
+                max_new_tokens: 128,
+                max_batch: 8,
+                transfer_mode: TransferMode::ByRequestAgg,
+                temperature: 0.0,
+            },
+            workload: WorkloadConfig {
+                kind: "sharegpt".into(),
+                rate: 2.0,
+                sessions: 32,
+                seed: 42,
+            },
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Load a TOML-subset file over the defaults, then validate.
+    pub fn from_file(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{path}: {e}"))?;
+        let mut cfg = Config::default();
+        for (key, value) in parse_toml(&text)? {
+            cfg.apply(&key, &value)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply `--set section.key=value` overrides, then validate.
+    pub fn apply_sets(&mut self, sets: &[(String, String)]) -> Result<(), String> {
+        for (k, v) in sets {
+            self.apply(k, &TomlValue::parse_scalar(v))?;
+        }
+        self.validate()
+    }
+
+    fn apply(&mut self, key: &str, v: &TomlValue) -> Result<(), String> {
+        let bad = || format!("bad value for {key}: {v:?}");
+        match key {
+            "cluster.prefill_instances" => {
+                self.cluster.prefill_instances = v.as_usize().ok_or_else(bad)?
+            }
+            "cluster.decode_instances" => {
+                self.cluster.decode_instances = v.as_usize().ok_or_else(bad)?
+            }
+            "cluster.colocated_instances" => {
+                self.cluster.colocated_instances = v.as_usize().ok_or_else(bad)?
+            }
+            "cluster.heartbeat_ms" => {
+                self.cluster.heartbeat_ms = v.as_f64().ok_or_else(bad)?
+            }
+            "cluster.heartbeat_misses" => {
+                self.cluster.heartbeat_misses =
+                    v.as_usize().ok_or_else(bad)? as u32
+            }
+            "mempool.block_tokens" => {
+                self.mempool.block_tokens = v.as_usize().ok_or_else(bad)?
+            }
+            "mempool.hbm_blocks" => {
+                self.mempool.hbm_blocks = v.as_usize().ok_or_else(bad)?
+            }
+            "mempool.dram_blocks" => {
+                self.mempool.dram_blocks = v.as_usize().ok_or_else(bad)?
+            }
+            "mempool.aggregated_layout" => {
+                self.mempool.aggregated_layout = v.as_bool().ok_or_else(bad)?
+            }
+            "mempool.index_ttl_s" => {
+                self.mempool.index_ttl_s = v.as_f64().ok_or_else(bad)?
+            }
+            "mempool.context_caching" => {
+                self.mempool.context_caching = v.as_bool().ok_or_else(bad)?
+            }
+            "fabric.call_overhead_us" => {
+                self.fabric.call_overhead_us = v.as_f64().ok_or_else(bad)?
+            }
+            "fabric.bandwidth_gbps" => {
+                self.fabric.bandwidth_gbps = v.as_f64().ok_or_else(bad)?
+            }
+            "fabric.communicators" => {
+                self.fabric.communicators = v.as_usize().ok_or_else(bad)?
+            }
+            "fabric.buffer_mb" => {
+                self.fabric.buffer_mb = v.as_f64().ok_or_else(bad)?
+            }
+            "fabric.dram_penalty_us" => {
+                self.fabric.dram_penalty_us = v.as_f64().ok_or_else(bad)?
+            }
+            "scheduler.policy" => {
+                self.scheduler.policy = v
+                    .as_str()
+                    .and_then(PolicyKind::parse)
+                    .ok_or_else(bad)?
+            }
+            "scheduler.tree_ttl_s" => {
+                self.scheduler.tree_ttl_s = v.as_f64().ok_or_else(bad)?
+            }
+            "scheduler.transfer_decision" => {
+                self.scheduler.transfer_decision = v.as_bool().ok_or_else(bad)?
+            }
+            "engine.max_seq" => self.engine.max_seq = v.as_usize().ok_or_else(bad)?,
+            "engine.max_new_tokens" => {
+                self.engine.max_new_tokens = v.as_usize().ok_or_else(bad)?
+            }
+            "engine.max_batch" => {
+                self.engine.max_batch = v.as_usize().ok_or_else(bad)?
+            }
+            "engine.transfer_mode" => {
+                self.engine.transfer_mode = v
+                    .as_str()
+                    .and_then(TransferMode::parse)
+                    .ok_or_else(bad)?
+            }
+            "engine.temperature" => {
+                self.engine.temperature = v.as_f64().ok_or_else(bad)?
+            }
+            "workload.kind" => {
+                self.workload.kind = v.as_str().ok_or_else(bad)?.to_string()
+            }
+            "workload.rate" => self.workload.rate = v.as_f64().ok_or_else(bad)?,
+            "workload.sessions" => {
+                self.workload.sessions = v.as_usize().ok_or_else(bad)?
+            }
+            "workload.seed" => {
+                self.workload.seed = v.as_f64().ok_or_else(bad)? as u64
+            }
+            "artifacts_dir" => {
+                self.artifacts_dir = v.as_str().ok_or_else(bad)?.to_string()
+            }
+            _ => return Err(format!("unknown config key: {key}")),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let c = &self.cluster;
+        if c.prefill_instances + c.decode_instances + c.colocated_instances == 0 {
+            return Err("cluster has zero instances".into());
+        }
+        if (c.prefill_instances == 0) != (c.decode_instances == 0) {
+            return Err(
+                "prefill-only and decode-only instances must come in \
+                 nonzero pairs (disaggregated mode needs both)"
+                    .into(),
+            );
+        }
+        if self.mempool.block_tokens == 0
+            || !self.mempool.block_tokens.is_power_of_two()
+        {
+            return Err("mempool.block_tokens must be a power of two".into());
+        }
+        if self.mempool.hbm_blocks == 0 {
+            return Err("mempool.hbm_blocks must be > 0".into());
+        }
+        if self.fabric.bandwidth_gbps <= 0.0 {
+            return Err("fabric.bandwidth_gbps must be > 0".into());
+        }
+        if self.fabric.communicators == 0 {
+            return Err("fabric.communicators must be > 0".into());
+        }
+        if self.engine.max_seq % self.mempool.block_tokens != 0 {
+            return Err("engine.max_seq must be a multiple of block_tokens".into());
+        }
+        match self.workload.kind.as_str() {
+            "sharegpt" | "loogle" | "react" => {}
+            k => return Err(format!("unknown workload.kind '{k}'")),
+        }
+        Ok(())
+    }
+
+    /// Flatten to key=value map (used by tests and `--dump-config`).
+    pub fn dump(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        let c = self;
+        m.insert("cluster.prefill_instances".into(), c.cluster.prefill_instances.to_string());
+        m.insert("cluster.decode_instances".into(), c.cluster.decode_instances.to_string());
+        m.insert("cluster.colocated_instances".into(), c.cluster.colocated_instances.to_string());
+        m.insert("mempool.block_tokens".into(), c.mempool.block_tokens.to_string());
+        m.insert("mempool.hbm_blocks".into(), c.mempool.hbm_blocks.to_string());
+        m.insert("mempool.dram_blocks".into(), c.mempool.dram_blocks.to_string());
+        m.insert("mempool.aggregated_layout".into(), c.mempool.aggregated_layout.to_string());
+        m.insert("mempool.context_caching".into(), c.mempool.context_caching.to_string());
+        m.insert("fabric.call_overhead_us".into(), c.fabric.call_overhead_us.to_string());
+        m.insert("fabric.bandwidth_gbps".into(), c.fabric.bandwidth_gbps.to_string());
+        m.insert("fabric.communicators".into(), c.fabric.communicators.to_string());
+        m.insert("scheduler.policy".into(), c.scheduler.policy.name().into());
+        m.insert("engine.transfer_mode".into(), c.engine.transfer_mode.name().into());
+        m.insert("workload.kind".into(), c.workload.kind.clone());
+        m.insert("workload.rate".into(), c.workload.rate.to_string());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn apply_sets_overrides() {
+        let mut cfg = Config::default();
+        cfg.apply_sets(&[
+            ("mempool.block_tokens".into(), "32".into()),
+            ("scheduler.policy".into(), "least_load".into()),
+            ("engine.transfer_mode".into(), "by_layer".into()),
+            ("fabric.bandwidth_gbps".into(), "400".into()),
+        ])
+        .unwrap();
+        assert_eq!(cfg.mempool.block_tokens, 32);
+        assert_eq!(cfg.scheduler.policy, PolicyKind::LeastLoad);
+        assert_eq!(cfg.engine.transfer_mode, TransferMode::ByLayer);
+        assert_eq!(cfg.fabric.bandwidth_gbps, 400.0);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let mut cfg = Config::default();
+        assert!(cfg
+            .apply_sets(&[("nope.nope".into(), "1".into())])
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        let mut cfg = Config::default();
+        assert!(cfg
+            .apply_sets(&[("mempool.block_tokens".into(), "17".into())])
+            .is_err());
+        let mut cfg = Config::default();
+        assert!(cfg
+            .apply_sets(&[("workload.kind".into(), "martian".into())])
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_unpaired_disagg() {
+        let mut cfg = Config::default();
+        let r = cfg.apply_sets(&[("cluster.decode_instances".into(), "0".into())]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn parses_full_file() {
+        let text = r#"
+# serving preset
+[cluster]
+prefill_instances = 1
+decode_instances = 2
+
+[mempool]
+block_tokens = 16
+aggregated_layout = true
+
+[scheduler]
+policy = "prompt_tree"
+
+[workload]
+kind = "loogle"
+rate = 3.5
+"#;
+        let mut cfg = Config::default();
+        for (k, v) in parse_toml(text).unwrap() {
+            cfg.apply(&k, &v).unwrap();
+        }
+        cfg.validate().unwrap();
+        assert_eq!(cfg.cluster.decode_instances, 2);
+        assert_eq!(cfg.workload.kind, "loogle");
+        assert_eq!(cfg.workload.rate, 3.5);
+    }
+}

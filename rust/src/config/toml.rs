@@ -1,0 +1,178 @@
+//! TOML-subset parser: `[section]` headers, `key = value` lines, `#`
+//! comments. Values: integers, floats, booleans, quoted strings. Returns
+//! flat `section.key` pairs in file order.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Best-effort scalar parse for `--set key=value` strings (which come
+    /// without quotes).
+    pub fn parse_scalar(s: &str) -> TomlValue {
+        let t = s.trim();
+        if t == "true" {
+            return TomlValue::Bool(true);
+        }
+        if t == "false" {
+            return TomlValue::Bool(false);
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return TomlValue::Int(i);
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return TomlValue::Float(f);
+        }
+        TomlValue::Str(t.trim_matches('"').to_string())
+    }
+}
+
+/// Parse the subset; returns `(section.key, value)` pairs.
+pub fn parse_toml(text: &str) -> Result<Vec<(String, TomlValue)>, String> {
+    let mut section = String::new();
+    let mut out = vec![];
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or(format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((full, parse_value(value.trim(), lineno + 1)?));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<TomlValue, String> {
+    if v.is_empty() {
+        return Err(format!("line {lineno}: empty value"));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s
+            .strip_suffix('"')
+            .ok_or(format!("line {lineno}: unterminated string"))?;
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("line {lineno}: cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = "top = 1\n[a]\nx = 1.5\ny = \"s\"\nz = true\n[b]\nx = -2\n";
+        let kv = parse_toml(text).unwrap();
+        assert_eq!(kv[0], ("top".into(), TomlValue::Int(1)));
+        assert_eq!(kv[1], ("a.x".into(), TomlValue::Float(1.5)));
+        assert_eq!(kv[2], ("a.y".into(), TomlValue::Str("s".into())));
+        assert_eq!(kv[3], ("a.z".into(), TomlValue::Bool(true)));
+        assert_eq!(kv[4], ("b.x".into(), TomlValue::Int(-2)));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let text = "# header\n[a]\nx = 2 # inline\n\ns = \"a # not comment\"\n";
+        let kv = parse_toml(text).unwrap();
+        assert_eq!(kv[0].1, TomlValue::Int(2));
+        assert_eq!(kv[1].1, TomlValue::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        assert!(parse_toml("[oops\n").unwrap_err().contains("line 1"));
+        assert!(parse_toml("\nnokey\n").unwrap_err().contains("line 2"));
+        assert!(parse_toml("x = \n").unwrap_err().contains("line 1"));
+    }
+
+    #[test]
+    fn scalar_parse_for_sets() {
+        assert_eq!(TomlValue::parse_scalar("3"), TomlValue::Int(3));
+        assert_eq!(TomlValue::parse_scalar("3.5"), TomlValue::Float(3.5));
+        assert_eq!(TomlValue::parse_scalar("true"), TomlValue::Bool(true));
+        assert_eq!(
+            TomlValue::parse_scalar("abc"),
+            TomlValue::Str("abc".into())
+        );
+    }
+}

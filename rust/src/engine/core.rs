@@ -1,0 +1,614 @@
+//! The engine core: admission → cached prefill → iteration-level decode →
+//! KV retirement, all against one instance's MemPool + PJRT runtime.
+//!
+//! The engine exposes *primitives*; the colocated/prefill-only/decode-only
+//! instance loops in [`crate::server`] compose them per role, and
+//! [`run_to_completion`]-style helpers serve the examples and tests.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::kv;
+use super::request::{sample, Request};
+#[cfg(test)]
+use super::request::SamplingParams;
+use crate::mempool::index::BlockGroup;
+use crate::mempool::{MemPool, Tier};
+use crate::runtime::{DecodeSession, ModelRuntime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    /// Enable context caching (MemPool insert/match).
+    pub context_caching: bool,
+    /// Upper bound on concurrently decoding requests.
+    pub max_batch: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            context_caching: true,
+            max_batch: 8,
+        }
+    }
+}
+
+/// Prefill outcome: KV now lives in pool blocks (prefix pinned + fresh
+/// active blocks); logits are ready for the first sampled token.
+pub struct PrefillDone {
+    /// Tokens matched in the local cache (block-rounded, < prompt len).
+    pub cached_tokens: usize,
+    /// Pinned prefix length (== cached_tokens; unpin at retire).
+    pub pinned_tokens: usize,
+    /// Index-owned groups covering the cached prefix.
+    pub prefix_groups: Vec<BlockGroup>,
+    /// Engine-owned groups covering the new tokens (incl. a zero-padded
+    /// partial tail block when the prompt is not block-aligned).
+    pub new_groups: Vec<BlockGroup>,
+    /// Logits after the last prompt token.
+    pub logits: Vec<f32>,
+    /// Prompt length this prefill covered.
+    pub prompt_len: usize,
+}
+
+/// A request actively decoding on this engine.
+pub struct ActiveDecode {
+    pub req: Request,
+    /// Timestamps the instance loop stamps for metrics (caller's clock).
+    pub scheduled: f64,
+    pub first_token_time: f64,
+    pub sess: DecodeSession,
+    pub prompt_len: usize,
+    pub cached_tokens: usize,
+    pub pinned_tokens: usize,
+    pub prefix_groups: Vec<BlockGroup>,
+    pub new_groups: Vec<BlockGroup>,
+    pub generated: Vec<u32>,
+    /// Next token to feed (last sampled).
+    pub pending_token: u32,
+    rng: Rng,
+    pub done: bool,
+}
+
+/// One decode iteration's result for a request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepOutcome {
+    /// Emitted one token; request continues.
+    Token(u32),
+    /// Emitted the final token (EOS or budget exhausted).
+    Finished(u32),
+}
+
+/// A set of concurrently-decoding requests (the instance loop's batch).
+#[derive(Default)]
+pub struct ActiveDecodeSet {
+    pub jobs: Vec<ActiveDecode>,
+}
+
+impl ActiveDecodeSet {
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+pub struct Engine {
+    pub runtime: Arc<ModelRuntime>,
+    pub pool: MemPool,
+    pub opts: EngineOptions,
+}
+
+impl Engine {
+    pub fn new(runtime: Arc<ModelRuntime>, pool: MemPool,
+               opts: EngineOptions) -> Self {
+        Engine {
+            runtime,
+            pool,
+            opts,
+        }
+    }
+
+    fn block_tokens(&self) -> usize {
+        self.pool.geometry().block_tokens
+    }
+
+    /// Admission + prefill: match the local cache, swap in DRAM-resident
+    /// hits, gather, run the bucketized prefill, scatter new KV into
+    /// blocks.
+    pub fn prefill(&mut self, prompt: &[u32], now: f64)
+                   -> Result<PrefillDone> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt.len() < self.runtime.meta.max_seq,
+            "prompt too long: {}",
+            prompt.len()
+        );
+        let bt = self.block_tokens();
+        // Cap the cache hit below the full prompt: at least one new token
+        // must run to produce logits.
+        let max_cached = (prompt.len() - 1) / bt * bt;
+        let m = if self.opts.context_caching {
+            self.pool.match_and_pin(&prompt[..max_cached], now)
+        } else {
+            Default::default()
+        };
+        let cached = m.tokens;
+        let mut prefix_groups = m.groups;
+        // DRAM-resident prefix blocks must come back to HBM before use.
+        if prefix_groups.iter().flatten().any(|a| a.tier == Tier::Dram) {
+            let flat: Vec<_> =
+                prefix_groups.iter().flatten().copied().collect();
+            let need = flat.iter().filter(|a| a.tier == Tier::Dram).count();
+            self.pool.ensure_free_hbm(need, now)?;
+            let back = self.pool.swap_in(&flat)?;
+            let per = self.pool.geometry().blocks_per_token_block();
+            prefix_groups = back.chunks(per).map(|c| c.to_vec()).collect();
+        }
+
+        let new_tokens = &prompt[cached..];
+        let (_, c) = self
+            .runtime
+            .meta
+            .pick_prefill_bucket(new_tokens.len(), cached)
+            .with_context(|| {
+                format!(
+                    "no bucket: new={} cached={cached}",
+                    new_tokens.len()
+                )
+            })?;
+        let cache_buf = if c > 0 {
+            Some(kv::gather_to_buffer(&self.pool, &prefix_groups, c)?)
+        } else {
+            None
+        };
+        let out = self
+            .runtime
+            .prefill(new_tokens, cache_buf.as_deref(), cached)?;
+        let new_groups = kv::scatter_new_kv(
+            &mut self.pool,
+            &out.new_kv,
+            out.bucket_n,
+            new_tokens.len(),
+            now,
+        )?;
+        Ok(PrefillDone {
+            cached_tokens: cached,
+            pinned_tokens: if self.opts.context_caching { cached } else { 0 },
+            prefix_groups,
+            new_groups,
+            logits: out.logits,
+            prompt_len: prompt.len(),
+        })
+    }
+
+    /// Begin decoding from a completed prefill: build the device KV state
+    /// from pool blocks and sample the first token.
+    pub fn start_decode(&mut self, req: Request, pf: PrefillDone)
+                        -> Result<ActiveDecode> {
+        let total_len =
+            (pf.prompt_len + req.sampling.max_new_tokens).min(
+                self.runtime.meta.max_seq,
+            );
+        let ctx = self
+            .runtime
+            .meta
+            .pick_decode_ctx(total_len)
+            .with_context(|| format!("no decode ctx >= {total_len}"))?;
+        let mut groups = pf.prefix_groups.clone();
+        groups.extend(pf.new_groups.iter().cloned());
+        let kv_buf = kv::gather_to_buffer(&self.pool, &groups, ctx)?;
+        let sess = self.runtime.decode_start(&kv_buf, ctx, pf.prompt_len)?;
+        let mut rng = Rng::new(req.sampling.seed ^ req.id);
+        let first = sample(&pf.logits, &req.sampling, &mut rng);
+        Ok(ActiveDecode {
+            req,
+            scheduled: 0.0,
+            first_token_time: 0.0,
+            sess,
+            prompt_len: pf.prompt_len,
+            cached_tokens: pf.cached_tokens,
+            pinned_tokens: pf.pinned_tokens,
+            prefix_groups: pf.prefix_groups,
+            new_groups: pf.new_groups,
+            generated: vec![first],
+            pending_token: first,
+            rng,
+            done: false,
+        })
+    }
+
+    /// Begin decoding on a *decode-only* instance from already-landed KV
+    /// blocks (the disaggregated receive path).
+    pub fn start_decode_from_blocks(
+        &mut self,
+        req: Request,
+        groups: Vec<BlockGroup>,
+        prompt_len: usize,
+        first_logits: Vec<f32>,
+        pinned_tokens: usize,
+    ) -> Result<ActiveDecode> {
+        let total_len = (prompt_len + req.sampling.max_new_tokens)
+            .min(self.runtime.meta.max_seq);
+        let ctx = self
+            .runtime
+            .meta
+            .pick_decode_ctx(total_len)
+            .with_context(|| format!("no decode ctx >= {total_len}"))?;
+        let kv_buf = kv::gather_to_buffer(&self.pool, &groups, ctx)?;
+        let sess = self.runtime.decode_start(&kv_buf, ctx, prompt_len)?;
+        let mut rng = Rng::new(req.sampling.seed ^ req.id);
+        let first = sample(&first_logits, &req.sampling, &mut rng);
+        Ok(ActiveDecode {
+            req,
+            scheduled: 0.0,
+            first_token_time: 0.0,
+            sess,
+            prompt_len,
+            cached_tokens: 0,
+            pinned_tokens,
+            prefix_groups: vec![],
+            new_groups: groups,
+            generated: vec![first],
+            pending_token: first,
+            rng,
+            done: false,
+        })
+    }
+
+    /// One decode iteration for one request (iteration-level scheduling:
+    /// the instance loop round-robins this across its active set).
+    pub fn step(&mut self, a: &mut ActiveDecode) -> Result<StepOutcome> {
+        anyhow::ensure!(!a.done, "stepping a finished request");
+        let budget = a.req.sampling.max_new_tokens;
+        if a.generated.len() >= budget
+            || *a.generated.last().unwrap() == a.req.sampling.eos_token
+            || a.sess.pos + 1 >= a.sess.ctx
+        {
+            a.done = true;
+            return Ok(StepOutcome::Finished(a.pending_token));
+        }
+        let logits = self.runtime.decode_step(&mut a.sess, a.pending_token)?;
+        let tok = sample(&logits, &a.req.sampling, &mut a.rng);
+        a.generated.push(tok);
+        a.pending_token = tok;
+        if a.generated.len() >= budget || tok == a.req.sampling.eos_token {
+            a.done = true;
+            return Ok(StepOutcome::Finished(tok));
+        }
+        Ok(StepOutcome::Token(tok))
+    }
+
+    /// Retire a finished request: unpin the prefix and either index the
+    /// consumed KV (context caching on) or free the active blocks.
+    ///
+    /// Returns the token sequence whose KV is now cached (empty when
+    /// caching is off).
+    pub fn retire(&mut self, mut a: ActiveDecode, now: f64)
+                  -> Result<Vec<u32>> {
+        a.done = true;
+        let bt = self.block_tokens();
+        let pinned = a.pinned_tokens;
+        if pinned > 0 {
+            self.pool.unpin(&a.req.prompt[..pinned]);
+        }
+        if !self.opts.context_caching {
+            for g in a.new_groups.drain(..) {
+                self.pool.free_mem(&g)?;
+            }
+            return Ok(vec![]);
+        }
+        // Tokens whose KV exists: prompt + generated tokens actually fed
+        // (all but the final sampled one).
+        let consumed = a.sess.pos;
+        let mut seq = a.req.prompt.clone();
+        seq.extend_from_slice(&a.generated[..consumed - a.prompt_len]);
+        debug_assert_eq!(seq.len(), consumed);
+        let full_prompt_blocks = a.prompt_len / bt;
+        let total_full_blocks = consumed / bt;
+
+        // Keep prompt full-block groups; re-scatter the mixed/generated
+        // tail from the decode buffer; drop the prefill partial block.
+        let mut groups: Vec<BlockGroup> = a.prefix_groups.clone();
+        let prefix_blocks = groups.len();
+        debug_assert!(prefix_blocks <= full_prompt_blocks);
+        let keep_new = full_prompt_blocks - prefix_blocks;
+        for g in &a.new_groups[..keep_new.min(a.new_groups.len())] {
+            groups.push(g.clone());
+        }
+        // Free the prefill groups beyond full prompt blocks (partial
+        // tail).
+        for g in &a.new_groups[keep_new.min(a.new_groups.len())..] {
+            self.pool.free_mem(g)?;
+        }
+        if total_full_blocks > full_prompt_blocks {
+            let kv_host = self.runtime.decode_kv(&mut a.sess)?;
+            let from = full_prompt_blocks * bt;
+            let to = total_full_blocks * bt;
+            let tail = kv::slice_tokens(
+                self.pool.geometry(),
+                &kv_host,
+                a.sess.ctx,
+                from,
+                to,
+            );
+            let tail_groups = kv::scatter_new_kv(
+                &mut self.pool,
+                &tail,
+                to - from,
+                to - from,
+                now,
+            )?;
+            groups.extend(tail_groups);
+        }
+        let indexable = total_full_blocks * bt;
+        self.pool.insert(&seq[..indexable], groups, now)?;
+        Ok(seq)
+    }
+
+    /// Retire a prefill on a *prefill-only* instance (no local decode):
+    /// index the full prompt blocks (caching on) or free everything.
+    /// Call after the KV has been exported/transferred.
+    pub fn retire_prefill(&mut self, prompt: &[u32], pf: PrefillDone,
+                          now: f64) -> Result<()> {
+        let bt = self.block_tokens();
+        if pf.pinned_tokens > 0 {
+            self.pool.unpin(&prompt[..pf.pinned_tokens]);
+        }
+        if !self.opts.context_caching {
+            for g in &pf.new_groups {
+                self.pool.free_mem(g)?;
+            }
+            return Ok(());
+        }
+        let full_blocks = pf.prompt_len / bt;
+        let mut groups = pf.prefix_groups;
+        let keep_new = full_blocks - groups.len().min(full_blocks);
+        groups.extend(pf.new_groups[..keep_new.min(pf.new_groups.len())]
+            .iter()
+            .cloned());
+        for g in &pf.new_groups[keep_new.min(pf.new_groups.len())..] {
+            self.pool.free_mem(g)?;
+        }
+        self.pool.insert(&prompt[..full_blocks * bt], groups, now)?;
+        Ok(())
+    }
+
+    /// Land a transferred KV *suffix* into the local index (the
+    /// `transfer_with_insert` receive path for decode→prefill backflow,
+    /// paper §5.1d): `seq` is the full token sequence, `suffix_groups`
+    /// cover blocks `[suffix_start_block ..)`, and the prefix must
+    /// already be indexed locally (it is, when this instance prefilled
+    /// the prompt). If the local prefix was evicted meanwhile the suffix
+    /// is unusable and is freed (best-effort, like the paper's GS trees).
+    pub fn insert_suffix(
+        &mut self,
+        seq: &[u32],
+        suffix_groups: Vec<BlockGroup>,
+        suffix_start_block: usize,
+        now: f64,
+    ) -> Result<bool> {
+        let bt = self.block_tokens();
+        let m = self.pool.match_prefix(seq, now);
+        if m.tokens / bt < suffix_start_block {
+            for g in &suffix_groups {
+                self.pool.free_mem(g)?;
+            }
+            return Ok(false);
+        }
+        let mut groups = m.groups;
+        groups.truncate(suffix_start_block);
+        groups.extend(suffix_groups);
+        let tokens = groups.len() * bt;
+        anyhow::ensure!(tokens <= seq.len(), "suffix exceeds sequence");
+        self.pool.insert(&seq[..tokens], groups, now)?;
+        Ok(true)
+    }
+
+    /// Convenience: run one request start-to-finish on a colocated
+    /// engine. Returns (generated tokens, cached_tokens_at_admission).
+    pub fn run_to_completion(&mut self, req: Request, now: f64)
+                             -> Result<(Vec<u32>, usize)> {
+        let pf = self.prefill(&req.prompt, now)?;
+        let cached = pf.cached_tokens;
+        let mut active = self.start_decode(req, pf)?;
+        while !active.done {
+            self.step(&mut active)?;
+        }
+        let generated = active.generated.clone();
+        self.retire(active, now)?;
+        Ok((generated, cached))
+    }
+
+    /// Active blocks the engine currently holds (for leak accounting in
+    /// tests): callers track their ActiveDecode sets; a quiescent engine
+    /// should report pool consistency with 0 active blocks.
+    pub fn check_quiescent(&self) -> Result<(), String> {
+        self.pool.check_consistency(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine integration tests over the real runtime + artifacts.
+    //! Self-skip when artifacts are absent.
+    use super::*;
+    use crate::mempool::{BlockGeometry, InstanceId};
+    use crate::runtime::artifacts::artifacts_available;
+    use once_cell::sync::Lazy;
+
+    static RT: Lazy<Option<Arc<ModelRuntime>>> = Lazy::new(|| {
+        if !artifacts_available("artifacts") {
+            eprintln!("[skip] artifacts/ not built");
+            return None;
+        }
+        Some(Arc::new(ModelRuntime::load("artifacts").unwrap()))
+    });
+
+    fn engine(caching: bool) -> Option<Engine> {
+        let rt = RT.as_ref()?.clone();
+        let geom = BlockGeometry {
+            block_tokens: 16,
+            layers: rt.meta.layers,
+            n_heads: rt.meta.n_heads,
+            head_dim: rt.meta.head_dim,
+            aggregated: true,
+        };
+        let pool = MemPool::new(InstanceId(0), geom, 256, 512, 0.0, true);
+        Some(Engine::new(
+            rt,
+            pool,
+            EngineOptions {
+                context_caching: caching,
+                max_batch: 4,
+            },
+        ))
+    }
+
+    fn req(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+        Request {
+            id,
+            session: id,
+            prompt,
+            sampling: SamplingParams {
+                max_new_tokens: max_new,
+                eos_token: u32::MAX, // never stop early (deterministic len)
+                ..Default::default()
+            },
+            arrival: 0.0,
+        }
+    }
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32)
+            .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 2048)
+            .collect()
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic_and_cache_invariant() {
+        let Some(mut e) = engine(true) else { return };
+        let prompt = toks(40, 1);
+        let (gen1, cached1) =
+            e.run_to_completion(req(1, prompt.clone(), 8), 1.0).unwrap();
+        assert_eq!(cached1, 0);
+        assert_eq!(gen1.len(), 8);
+        // Second identical request: hits the cache, same output.
+        let (gen2, cached2) =
+            e.run_to_completion(req(2, prompt.clone(), 8), 2.0).unwrap();
+        assert!(cached2 >= 32, "expected cache hit, got {cached2}");
+        assert_eq!(gen1, gen2, "caching changed generation");
+        e.check_quiescent().unwrap();
+    }
+
+    #[test]
+    fn multi_turn_grows_cache() {
+        let Some(mut e) = engine(true) else { return };
+        let mut history = toks(30, 2);
+        let mut last_cached = 0;
+        for turn in 0..3 {
+            let (generated, cached) = e
+                .run_to_completion(req(10 + turn, history.clone(), 6), turn as f64)
+                .unwrap();
+            if turn > 0 {
+                assert!(cached >= last_cached, "cache shrank");
+                assert!(cached > 0, "turn {turn} missed cache");
+            }
+            last_cached = cached;
+            history.extend(generated);
+            history.extend(toks(5, 100 + turn as u32)); // next user turn
+        }
+        // The cached prefix must include previous turns' *generated* KV
+        // (decode retirement worked): at turn 2 history > 41 tokens.
+        assert!(last_cached >= 32, "{last_cached}");
+        e.check_quiescent().unwrap();
+    }
+
+    #[test]
+    fn caching_off_frees_everything() {
+        let Some(mut e) = engine(false) else { return };
+        let used0 = e.pool.used_blocks(Tier::Hbm);
+        let (_, cached) =
+            e.run_to_completion(req(1, toks(50, 3), 5), 0.0).unwrap();
+        assert_eq!(cached, 0);
+        assert_eq!(e.pool.used_blocks(Tier::Hbm), used0, "leak");
+        assert_eq!(e.pool.indexed_token_blocks(), 0);
+    }
+
+    #[test]
+    fn interleaved_decode_requests_do_not_interfere() {
+        let Some(mut e) = engine(true) else { return };
+        let pa = toks(20, 4);
+        let pb = toks(24, 5);
+        // Sequential references.
+        let mut e2 = engine(true).unwrap();
+        let (ga, _) = e2.run_to_completion(req(1, pa.clone(), 6), 0.0).unwrap();
+        let (gb, _) = e2.run_to_completion(req(2, pb.clone(), 6), 0.1).unwrap();
+        // Interleaved on the main engine.
+        let fa = e.prefill(&pa, 0.0).unwrap();
+        let mut a = e.start_decode(req(1, pa, 6), fa).unwrap();
+        let fb = e.prefill(&pb, 0.1).unwrap();
+        let mut b = e.start_decode(req(2, pb, 6), fb).unwrap();
+        while !a.done || !b.done {
+            if !a.done {
+                e.step(&mut a).unwrap();
+            }
+            if !b.done {
+                e.step(&mut b).unwrap();
+            }
+        }
+        assert_eq!(a.generated, ga, "interleaving corrupted request A");
+        assert_eq!(b.generated, gb, "interleaving corrupted request B");
+        e.retire(a, 1.0).unwrap();
+        e.retire(b, 1.0).unwrap();
+        e.check_quiescent().unwrap();
+    }
+
+    #[test]
+    fn eviction_pressure_does_not_break_running_request() {
+        let Some(rt) = RT.as_ref() else { return };
+        // Tiny HBM: 12 blocks; prompts of 3 blocks + decode tails force
+        // eviction of older cache entries while requests run.
+        let geom = BlockGeometry {
+            block_tokens: 16,
+            layers: rt.meta.layers,
+            n_heads: rt.meta.n_heads,
+            head_dim: rt.meta.head_dim,
+            aggregated: true,
+        };
+        let pool = MemPool::new(InstanceId(0), geom, 12, 4, 0.0, true);
+        let mut e = Engine::new(
+            rt.clone(),
+            pool,
+            EngineOptions {
+                context_caching: true,
+                max_batch: 2,
+            },
+        );
+        for i in 0..10 {
+            let prompt = toks(80, 100 + i as u32);
+            let (generated, _) = e
+                .run_to_completion(req(i, prompt, 4), i as f64)
+                .unwrap();
+            assert_eq!(generated.len(), 4);
+        }
+        // The pool stayed consistent under repeated eviction.
+        e.check_quiescent().unwrap();
+        let st = e.pool.stats();
+        assert!(
+            st.evicted_blocks > 0 && st.swapped_out > 0,
+            "expected both swap and eviction under pressure: {st:?}"
+        );
+    }
+
+    #[test]
+    fn prompt_longer_than_max_seq_rejected() {
+        let Some(mut e) = engine(true) else { return };
+        assert!(e.prefill(&toks(600, 6), 0.0).is_err());
+        assert!(e.prefill(&[], 0.0).is_err());
+    }
+}

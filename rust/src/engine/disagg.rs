@@ -1,0 +1,100 @@
+//! Disaggregation + caching design milestones (paper §5.1, Table 4).
+//!
+//! | Milestone    | Steps     | Behaviour                                  |
+//! |--------------|-----------|--------------------------------------------|
+//! | PD-Basic     | 1         | transfer A-KV P→D, no caching anywhere     |
+//! | PD-Caching-1 | 1+2       | P inserts prefill KV into its index        |
+//! | PD-Caching-2 | 1+2+3+4   | + P sends `transfer_with_insert` (D indexes|
+//! |              |           | prompt KV) and D inserts decode KV locally |
+//! | PD-Caching-3 | 1+2+3+4+5 | + D sends decode KV back to P              |
+//!
+//! The enum drives both the live server's instance logic and the
+//! discrete-event simulator, so Fig 8 (1P1D vs 1P1D-CC) and the Table-4
+//! ablation bench share one source of truth.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DisaggMilestone {
+    PdBasic,
+    PdCaching1,
+    PdCaching2,
+    PdCaching3,
+}
+
+impl DisaggMilestone {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pd_basic" | "basic" => Some(Self::PdBasic),
+            "pd_caching_1" | "caching1" => Some(Self::PdCaching1),
+            "pd_caching_2" | "caching2" => Some(Self::PdCaching2),
+            "pd_caching_3" | "caching3" | "full" => Some(Self::PdCaching3),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::PdBasic => "pd_basic",
+            Self::PdCaching1 => "pd_caching_1",
+            Self::PdCaching2 => "pd_caching_2",
+            Self::PdCaching3 => "pd_caching_3",
+        }
+    }
+
+    /// Step 2: does the prefill instance retire prefill KV to its index?
+    pub fn prefill_caches(self) -> bool {
+        self >= Self::PdCaching1
+    }
+
+    /// Steps 3+4: does the decode instance index transferred + decoded KV
+    /// (P uses `transfer_with_insert`, D can then skip re-received data)?
+    pub fn decode_caches(self) -> bool {
+        self >= Self::PdCaching2
+    }
+
+    /// Step 5: does the decode instance ship decode KV back to P so P's
+    /// cache grows with conversation turns?
+    pub fn decode_to_prefill(self) -> bool {
+        self >= Self::PdCaching3
+    }
+
+    pub fn all() -> [DisaggMilestone; 4] {
+        [
+            Self::PdBasic,
+            Self::PdCaching1,
+            Self::PdCaching2,
+            Self::PdCaching3,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capability_ladder_is_monotone() {
+        let caps: Vec<(bool, bool, bool)> = DisaggMilestone::all()
+            .iter()
+            .map(|m| {
+                (m.prefill_caches(), m.decode_caches(), m.decode_to_prefill())
+            })
+            .collect();
+        assert_eq!(
+            caps,
+            vec![
+                (false, false, false),
+                (true, false, false),
+                (true, true, false),
+                (true, true, true),
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in DisaggMilestone::all() {
+            assert_eq!(DisaggMilestone::parse(m.name()), Some(m));
+        }
+        assert_eq!(DisaggMilestone::parse("x"), None);
+    }
+}

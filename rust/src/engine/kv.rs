@@ -1,0 +1,328 @@
+//! Paged-KV layout conversions.
+//!
+//! The AOT graphs exchange KV as contiguous `[L, 2, T, H, hd]` buffers
+//! (T = bucket capacity); MemPool stores it in fixed-size blocks. Two
+//! block layouts exist (paper §5.2):
+//!
+//! * **aggregated** ("huge page"): one block per token-block holding
+//!   `[L, 2, bt, H, hd]` — all layers and halves together;
+//! * **discrete** (vLLM-style): `2·L` blocks per token-block, each
+//!   holding one layer-half `[bt, H, hd]`, ordered
+//!   `(layer0 K, layer0 V, layer1 K, ...)`.
+//!
+//! Total bytes are identical; what changes is the number of blocks (and
+//! therefore network calls — the whole point of Fig 11/12).
+
+use crate::mempool::index::BlockGroup;
+use crate::mempool::{BlockGeometry, MemPool, PoolError, Tier};
+
+/// Per-(token, layer-half) float count: H · hd.
+fn slot(geom: &BlockGeometry) -> usize {
+    geom.n_heads * geom.head_dim
+}
+
+/// Scatter freshly produced KV (`[L, 2, N, H, hd]` flattened, bucket
+/// capacity N, first `n_tokens` valid) into newly allocated pool blocks.
+/// Returns one [`BlockGroup`] per token-block. Partial trailing tokens
+/// (beyond the last whole block) are stored too — the group covers them —
+/// but only whole blocks should be indexed (the caller truncates when
+/// calling `insert`).
+pub fn scatter_new_kv(
+    pool: &mut MemPool,
+    new_kv: &[f32],
+    bucket_n: usize,
+    n_tokens: usize,
+    now: f64,
+) -> Result<Vec<BlockGroup>, PoolError> {
+    let geom = *pool.geometry();
+    let s = slot(&geom);
+    let bt = geom.block_tokens;
+    assert_eq!(new_kv.len(), geom.layers * 2 * bucket_n * s, "kv len");
+    assert!(n_tokens <= bucket_n);
+    let n_blocks = geom.token_blocks(n_tokens);
+    let per_tb = geom.blocks_per_token_block();
+    pool.ensure_free_hbm(n_blocks * per_tb, now)?;
+
+    let mut groups = Vec::with_capacity(n_blocks);
+    let mut buf = vec![0f32; geom.floats_per_block()];
+    for b in 0..n_blocks {
+        let addrs = pool.alloc_mem(per_tb, Tier::Hbm)?;
+        let t0 = b * bt;
+        if geom.aggregated {
+            // Block layout [L, 2, bt, H, hd].
+            for l in 0..geom.layers {
+                for h in 0..2 {
+                    for t in 0..bt {
+                        let dst = ((l * 2 + h) * bt + t) * s;
+                        let tok = t0 + t;
+                        if tok < n_tokens {
+                            let src = ((l * 2 + h) * bucket_n + tok) * s;
+                            buf[dst..dst + s]
+                                .copy_from_slice(&new_kv[src..src + s]);
+                        } else {
+                            buf[dst..dst + s].fill(0.0);
+                        }
+                    }
+                }
+            }
+            pool.write_block(addrs[0], &buf)?;
+        } else {
+            // One block per (layer, half): layout [bt, H, hd].
+            let mut small = vec![0f32; bt * s];
+            for l in 0..geom.layers {
+                for h in 0..2 {
+                    for t in 0..bt {
+                        let tok = t0 + t;
+                        if tok < n_tokens {
+                            let src = ((l * 2 + h) * bucket_n + tok) * s;
+                            small[t * s..(t + 1) * s]
+                                .copy_from_slice(&new_kv[src..src + s]);
+                        } else {
+                            small[t * s..(t + 1) * s].fill(0.0);
+                        }
+                    }
+                    pool.write_block(addrs[l * 2 + h], &small)?;
+                }
+            }
+        }
+        groups.push(addrs);
+    }
+    Ok(groups)
+}
+
+/// Gather block groups into a contiguous `[L, 2, cap, H, hd]` buffer
+/// (first `groups.len() * bt` token slots populated; rest zero).
+pub fn gather_to_buffer(
+    pool: &MemPool,
+    groups: &[BlockGroup],
+    cap: usize,
+) -> Result<Vec<f32>, PoolError> {
+    let geom = *pool.geometry();
+    let s = slot(&geom);
+    let bt = geom.block_tokens;
+    assert!(groups.len() * bt <= cap, "cap too small");
+    let mut out = vec![0f32; geom.layers * 2 * cap * s];
+    let mut buf = vec![0f32; geom.floats_per_block()];
+    for (b, group) in groups.iter().enumerate() {
+        let t0 = b * bt;
+        if geom.aggregated {
+            pool.read_block(group[0], &mut buf)?;
+            for l in 0..geom.layers {
+                for h in 0..2 {
+                    for t in 0..bt {
+                        let src = ((l * 2 + h) * bt + t) * s;
+                        let dst = ((l * 2 + h) * cap + t0 + t) * s;
+                        out[dst..dst + s].copy_from_slice(&buf[src..src + s]);
+                    }
+                }
+            }
+        } else {
+            let mut small = vec![0f32; bt * s];
+            for l in 0..geom.layers {
+                for h in 0..2 {
+                    pool.read_block(group[l * 2 + h], &mut small)?;
+                    for t in 0..bt {
+                        let dst = ((l * 2 + h) * cap + t0 + t) * s;
+                        out[dst..dst + s]
+                            .copy_from_slice(&small[t * s..(t + 1) * s]);
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Extract the KV of token range `[from, to)` from a contiguous
+/// `[L, 2, cap, H, hd]` buffer into bucket-N layout `[L, 2, n, H, hd]`
+/// (n = to - from) — used when re-slicing decode output for retirement.
+pub fn slice_tokens(
+    geom: &BlockGeometry,
+    kv: &[f32],
+    cap: usize,
+    from: usize,
+    to: usize,
+) -> Vec<f32> {
+    let s = slot(geom);
+    assert!(from <= to && to <= cap);
+    assert_eq!(kv.len(), geom.layers * 2 * cap * s);
+    let n = to - from;
+    let mut out = vec![0f32; geom.layers * 2 * n * s];
+    for l in 0..geom.layers {
+        for h in 0..2 {
+            let src = ((l * 2 + h) * cap + from) * s;
+            let dst = (l * 2 + h) * n * s;
+            out[dst..dst + n * s].copy_from_slice(&kv[src..src + n * s]);
+        }
+    }
+    out
+}
+
+/// Merge `extra` (`[L, 2, n, H, hd]`, n tokens) into `kv`
+/// (`[L, 2, cap, H, hd]`) at token offset `at` — the decode-side landing
+/// of transferred prefill KV.
+pub fn splice_tokens(
+    geom: &BlockGeometry,
+    kv: &mut [f32],
+    cap: usize,
+    extra: &[f32],
+    n: usize,
+    at: usize,
+) {
+    let s = slot(geom);
+    assert!(at + n <= cap);
+    assert_eq!(extra.len(), geom.layers * 2 * n * s);
+    for l in 0..geom.layers {
+        for h in 0..2 {
+            let dst = ((l * 2 + h) * cap + at) * s;
+            let src = (l * 2 + h) * n * s;
+            kv[dst..dst + n * s].copy_from_slice(&extra[src..src + n * s]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mempool::InstanceId;
+    use crate::util::rng::Rng;
+
+    fn mk_pool(aggregated: bool) -> MemPool {
+        let geom = BlockGeometry {
+            block_tokens: 4,
+            layers: 3,
+            n_heads: 2,
+            head_dim: 5,
+            aggregated,
+        };
+        MemPool::new(InstanceId(0), geom, 64, 64, 0.0, true)
+    }
+
+    fn rand_kv(rng: &mut Rng, geom: &BlockGeometry, n: usize) -> Vec<f32> {
+        (0..geom.layers * 2 * n * slot(geom))
+            .map(|_| rng.f64() as f32)
+            .collect()
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_both_layouts() {
+        for aggregated in [true, false] {
+            let mut pool = mk_pool(aggregated);
+            let geom = *pool.geometry();
+            let mut rng = Rng::new(1);
+            let bucket_n = 16;
+            let n_tokens = 11; // partial last block
+            let kv = rand_kv(&mut rng, &geom, bucket_n);
+            let groups =
+                scatter_new_kv(&mut pool, &kv, bucket_n, n_tokens, 0.0)
+                    .unwrap();
+            assert_eq!(groups.len(), 3); // ceil(11/4)
+            assert_eq!(
+                groups[0].len(),
+                if aggregated { 1 } else { 6 }
+            );
+            let cap = 16;
+            let out = gather_to_buffer(&pool, &groups, cap).unwrap();
+            // Token t of layer l half h must match.
+            let s = slot(&geom);
+            for l in 0..geom.layers {
+                for h in 0..2 {
+                    for t in 0..n_tokens {
+                        let src = ((l * 2 + h) * bucket_n + t) * s;
+                        let dst = ((l * 2 + h) * cap + t) * s;
+                        assert_eq!(
+                            &kv[src..src + s],
+                            &out[dst..dst + s],
+                            "mismatch l={l} h={h} t={t} agg={aggregated}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_smaller_group_subset() {
+        let mut pool = mk_pool(true);
+        let geom = *pool.geometry();
+        let mut rng = Rng::new(2);
+        let kv = rand_kv(&mut rng, &geom, 16);
+        let groups = scatter_new_kv(&mut pool, &kv, 16, 16, 0.0).unwrap();
+        // Gather only the first 2 of 4 blocks.
+        let out = gather_to_buffer(&pool, &groups[..2], 8).unwrap();
+        let s = slot(&geom);
+        for l in 0..geom.layers {
+            let src = (l * 2) * 16 * s;
+            let dst = (l * 2) * 8 * s;
+            assert_eq!(&kv[src..src + 8 * s], &out[dst..dst + 8 * s]);
+        }
+    }
+
+    #[test]
+    fn slice_and_splice_are_inverse() {
+        let geom = BlockGeometry {
+            block_tokens: 4,
+            layers: 2,
+            n_heads: 2,
+            head_dim: 3,
+            aggregated: true,
+        };
+        let mut rng = Rng::new(3);
+        let cap = 12;
+        let kv: Vec<f32> = (0..geom.layers * 2 * cap * slot(&geom))
+            .map(|_| rng.f64() as f32)
+            .collect();
+        let piece = slice_tokens(&geom, &kv, cap, 4, 9);
+        let mut kv2 = vec![0f32; kv.len()];
+        splice_tokens(&geom, &mut kv2, cap, &piece, 5, 4);
+        let s = slot(&geom);
+        for l in 0..geom.layers {
+            for h in 0..2 {
+                for t in 4..9 {
+                    let i = ((l * 2 + h) * cap + t) * s;
+                    assert_eq!(&kv[i..i + s], &kv2[i..i + s]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_fails_cleanly_when_pool_full() {
+        let geom = BlockGeometry {
+            block_tokens: 4,
+            layers: 3,
+            n_heads: 2,
+            head_dim: 5,
+            aggregated: true,
+        };
+        let mut pool = MemPool::new(InstanceId(0), geom, 2, 0, 0.0, true);
+        let mut rng = Rng::new(4);
+        let kv = rand_kv(&mut rng, &geom, 16);
+        // 16 tokens need 4 blocks; only 2 exist and none evictable.
+        assert!(scatter_new_kv(&mut pool, &kv, 16, 16, 0.0).is_err());
+    }
+
+    #[test]
+    fn scatter_triggers_eviction_under_pressure() {
+        let geom = BlockGeometry {
+            block_tokens: 4,
+            layers: 3,
+            n_heads: 2,
+            head_dim: 5,
+            aggregated: true,
+        };
+        let mut pool = MemPool::new(InstanceId(0), geom, 4, 0, 0.0, true);
+        let mut rng = Rng::new(5);
+        // Fill with an indexed (evictable) entry.
+        let kv1 = rand_kv(&mut rng, &geom, 16);
+        let g1 = scatter_new_kv(&mut pool, &kv1, 16, 16, 0.0).unwrap();
+        let toks: Vec<u32> = (0..16).collect();
+        pool.insert(&toks, g1, 0.0).unwrap();
+        assert_eq!(pool.free_blocks(Tier::Hbm), 0);
+        // New scatter must evict the old entry and succeed.
+        let kv2 = rand_kv(&mut rng, &geom, 8);
+        let g2 = scatter_new_kv(&mut pool, &kv2, 8, 8, 1.0).unwrap();
+        assert_eq!(g2.len(), 2);
+        assert!(pool.stats().evicted_blocks > 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! The inference engine: everything between the global scheduler and the
+//! PJRT runtime on one instance.
+//!
+//! * [`kv`] — paged-KV layout conversions between MemPool blocks and the
+//!   contiguous buffers the AOT graphs consume (discrete vs aggregated
+//!   layouts — paper §5.2).
+//! * [`request`] — request state machine + sampling.
+//! * [`core`] — the engine proper: admission with context-cache match
+//!   (insert/match against MemPool), prefill bucketing, the iteration-
+//!   level decode loop (continuous batching), and KV retirement.
+//! * [`disagg`] — the §5.1 design milestones (Table 4): PD-Basic through
+//!   PD-Caching-3, i.e. which side caches and which transfers what.
+
+pub mod core;
+pub mod disagg;
+pub mod kv;
+pub mod request;
+
+pub use core::{ActiveDecodeSet, Engine, EngineOptions, StepOutcome};
+pub use disagg::DisaggMilestone;
+pub use request::{Request, RequestId, SamplingParams};

@@ -1,0 +1,125 @@
+//! Request types, lifecycle states, and sampling.
+
+use crate::util::rng::Rng;
+
+pub type RequestId = u64;
+
+/// Sampling parameters carried in the request (and through `transfer`'s
+/// `private` field in disaggregated mode — paper §5.1a).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax; otherwise softmax temperature sampling.
+    pub temperature: f64,
+    /// Stop after this many generated tokens.
+    pub max_new_tokens: usize,
+    /// Generation stops early on this token (tokenizer::EOS by default).
+    pub eos_token: u32,
+    /// Seed for temperature sampling (deterministic per request).
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            max_new_tokens: 32,
+            eos_token: crate::tokenizer::EOS,
+            seed: 0,
+        }
+    }
+}
+
+/// An inference request as the engine sees it.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub session: u64,
+    pub prompt: Vec<u32>,
+    pub sampling: SamplingParams,
+    /// Arrival time on the caller's clock (seconds).
+    pub arrival: f64,
+}
+
+/// Pick the next token from logits.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits) as u32;
+    }
+    // Softmax with temperature, sampled via inverse CDF.
+    let t = params.temperature as f32;
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> =
+        logits.iter().map(|&x| ((x - max) / t).exp()).collect();
+    let sum: f32 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    let u = rng.f64() as f32;
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u <= acc {
+            return i as u32;
+        }
+    }
+    (probs.len() - 1) as u32
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let mut rng = Rng::new(0);
+        let p = SamplingParams::default();
+        assert_eq!(sample(&logits, &p, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let logits = vec![1.0, 1.0, 1.0, -100.0];
+        let p = SamplingParams {
+            temperature: 1.0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(7);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, &p, &mut rng) as usize] = true;
+        }
+        assert!(seen[0] && seen[1] && seen[2]);
+        assert!(!seen[3], "negligible-probability token sampled");
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let logits = vec![0.0, 3.0, 0.0];
+        let p = SamplingParams {
+            temperature: 0.05,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn argmax_first_on_tie() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.0]), 0);
+    }
+}

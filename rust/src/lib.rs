@@ -1,0 +1,34 @@
+//! # MemServe
+//!
+//! A reproduction of *"MemServe: Context Caching for Disaggregated LLM
+//! Serving with Elastic Memory Pool"* (Hu et al., 2024) as a three-layer
+//! Rust + JAX + Pallas serving framework.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`mempool`] — the elastic memory pool (§4): block allocator, tiers,
+//!   token-indexed radix tree, swap, distributed-transfer types.
+//! * [`net`] — the simulated NCCL-like fabric instances communicate over.
+//! * [`runtime`] — PJRT executor loading AOT HLO artifacts (the `xla`
+//!   crate); the only place model compute happens at runtime.
+//! * [`engine`] — the inference engine: paged KV, prefill/decode, and the
+//!   four disaggregation+caching milestones of §5 (Table 4).
+//! * [`scheduler`] — global prompt trees, routing policies, cost model.
+//! * [`cluster`] — membership, heartbeats, failure handling (§4.4).
+//! * [`sim`] — discrete-event simulator for request-rate sweeps.
+//! * [`workload`] — ShareGPT/LooGLE/ReAct-like synthetic workloads (§8.2).
+//! * [`server`] — the live serving assembly (threads + fabric + PJRT).
+//! * [`util`], [`config`], [`tokenizer`], [`metrics`] — substrates.
+
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod mempool;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

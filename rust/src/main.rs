@@ -1,0 +1,372 @@
+//! MemServe launcher.
+//!
+//! Subcommands:
+//!   serve           — start a live cluster and run a workload against it
+//!   bench-sim       — discrete-event rate sweep (fast, cost-model-timed)
+//!   workload-stats  — print Fig-7-style workload statistics
+//!   calibrate       — fit the operator-level cost model from real PJRT
+//!                     measurements; writes artifacts/cost_model.json
+//!   dump-config     — print the effective configuration
+//!
+//! Common flags: --config <file.toml>, --set k=v (repeatable), --help.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use memserve::config::Config;
+use memserve::engine::{DisaggMilestone, SamplingParams};
+use memserve::mempool::BlockGeometry;
+use memserve::runtime::ModelRuntime;
+use memserve::scheduler::cost_model::{model_to_json, OperatorCostModel};
+use memserve::server::{ServeCluster, ServeOptions};
+use memserve::sim::{SimConfig, Simulation};
+use memserve::util::args::Parser;
+use memserve::workload::{ArrivalPlan, WorkloadKind, WorkloadSpec, WorkloadStats};
+
+fn main() {
+    memserve::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let parser = Parser::new(
+        "memserve",
+        "MemServe: context caching for disaggregated LLM serving",
+    )
+    .opt("config", "", "TOML config file (configs/*.toml)")
+    .opt("milestone", "pd_caching_3", "disaggregation milestone")
+    .opt("requests", "32", "requests to run (serve mode)")
+    .opt("rate", "2.0", "request rate per second (bench-sim)")
+    .flag("real-sleep", "model wire time with real sleeps");
+
+    let args = match parser.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+
+    let mut cfg = match args.get("config") {
+        Some(path) if !path.is_empty() => match Config::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                std::process::exit(2);
+            }
+        },
+        _ => Config::default(),
+    };
+    if let Err(e) = cfg.apply_sets(args.sets()) {
+        eprintln!("config error: {e}");
+        std::process::exit(2);
+    }
+
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&cfg, &args),
+        "bench-sim" => cmd_bench_sim(&cfg, &args),
+        "workload-stats" => cmd_workload_stats(&cfg),
+        "calibrate" => cmd_calibrate(&cfg),
+        "dump-config" => {
+            for (k, v) in cfg.dump() {
+                println!("{k} = {v}");
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            eprintln!("{}", parser.help_text());
+            eprintln!(
+                "commands: serve bench-sim workload-stats calibrate dump-config"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_serve(cfg: &Config, args: &memserve::util::args::Args)
+             -> anyhow::Result<()> {
+    let milestone = DisaggMilestone::parse(args.get_or("milestone", ""))
+        .unwrap_or(DisaggMilestone::PdCaching3);
+    let n_requests: usize = args.get_usize("requests").unwrap_or(32);
+    println!("loading runtime from {} ...", cfg.artifacts_dir);
+    let runtime = Arc::new(ModelRuntime::load(&cfg.artifacts_dir)?);
+    let vocab = runtime.meta.vocab as u32;
+    let max_seq = runtime.meta.max_seq;
+    let cluster = ServeCluster::start(
+        ServeOptions {
+            config: cfg.clone(),
+            milestone,
+            real_sleep: args.flag("real-sleep"),
+        },
+        runtime,
+    )?;
+    let kind = WorkloadKind::parse(&cfg.workload.kind)
+        .unwrap_or(WorkloadKind::ShareGpt);
+    let spec = WorkloadSpec::generate(
+        kind,
+        cfg.workload.sessions,
+        cfg.workload.seed,
+        vocab,
+        max_seq,
+    );
+    println!(
+        "serving {} requests from {} sessions ({})",
+        n_requests,
+        spec.sessions.len(),
+        kind.name()
+    );
+    let mut sent = 0usize;
+    'outer: for sess in &spec.sessions {
+        let mut ctx = sess.shared_prefix.clone();
+        for turn in &sess.turns {
+            if sent >= n_requests {
+                break 'outer;
+            }
+            let mut prompt = ctx.clone();
+            prompt.extend_from_slice(&turn.user_tokens);
+            if prompt.len() + turn.target_gen + 1 >= max_seq {
+                break;
+            }
+            let rid = cluster.submit(prompt.clone(), sess.id, SamplingParams {
+                max_new_tokens: turn.target_gen,
+                eos_token: u32::MAX,
+                ..Default::default()
+            })?;
+            let (generated, rec) =
+                cluster.collect(rid, Duration::from_secs(120))?;
+            sent += 1;
+            println!(
+                "  rid={rid} prompt={} cached={} gen={} ttft={:.3}s jct={:.3}s",
+                rec.prompt_tokens,
+                rec.cached_tokens,
+                generated.len(),
+                rec.ttft(),
+                rec.jct()
+            );
+            ctx = prompt;
+            ctx.extend(generated);
+        }
+    }
+    let m = cluster.metrics();
+    println!("== summary ==\n{}", m.summary_line());
+    cluster.shutdown();
+    Ok(())
+}
+
+fn cmd_bench_sim(cfg: &Config, args: &memserve::util::args::Args)
+                 -> anyhow::Result<()> {
+    let rate: f64 = args.get_f64("rate").unwrap_or(2.0);
+    let kind = WorkloadKind::parse(&cfg.workload.kind)
+        .unwrap_or(WorkloadKind::ShareGpt);
+    let spec = WorkloadSpec::generate(
+        kind,
+        cfg.workload.sessions,
+        cfg.workload.seed,
+        2048,
+        4096,
+    );
+    let plan = ArrivalPlan::poisson(&spec, rate, cfg.workload.seed);
+    let sim_cfg = SimConfig {
+        prefill_instances: cfg.cluster.prefill_instances,
+        decode_instances: cfg.cluster.decode_instances,
+        colocated_instances: cfg.cluster.colocated_instances,
+        caching: cfg.mempool.context_caching,
+        policy: cfg.scheduler.policy,
+        transfer_mode: cfg.engine.transfer_mode,
+        ..Default::default()
+    };
+    let rep = Simulation::new(sim_cfg, spec, &plan).run();
+    println!("{}", rep.metrics.summary_line());
+    println!(
+        "wire: {:.1} MB in {} calls ({:.3}s busy); evicted {} blocks; \
+         sim span {:.1}s",
+        rep.wire_bytes as f64 / 1e6,
+        rep.wire_calls,
+        rep.wire_seconds,
+        rep.evicted_blocks,
+        rep.sim_seconds
+    );
+    Ok(())
+}
+
+fn cmd_workload_stats(cfg: &Config) -> anyhow::Result<()> {
+    for kind in WorkloadKind::all() {
+        let spec = WorkloadSpec::generate(
+            kind,
+            cfg.workload.sessions.max(100),
+            cfg.workload.seed,
+            2048,
+            4096,
+        );
+        let mut st = WorkloadStats::compute(&spec);
+        println!("{:>9}: {}", kind.name(), st.summary());
+    }
+    Ok(())
+}
+
+/// Fit the operator-level cost model against the real PJRT runtime
+/// (paper §5.3.2: profile operators, fit the forms).
+fn cmd_calibrate(cfg: &Config) -> anyhow::Result<()> {
+    let runtime = ModelRuntime::load(&cfg.artifacts_dir)?;
+    let meta = runtime.meta.clone();
+    let geom = BlockGeometry {
+        block_tokens: cfg.mempool.block_tokens,
+        layers: meta.layers,
+        n_heads: meta.n_heads,
+        head_dim: meta.head_dim,
+        aggregated: true,
+    };
+    let mut model = OperatorCostModel::default_tiny();
+    let toks = |n: usize| -> Vec<u32> {
+        (0..n as u32)
+            .map(|i| (i * 31 + 7) % meta.vocab as u32)
+            .collect()
+    };
+    // --- Prefill samples over (x, y): every bucket at y=0, plus cached
+    // points for the cached_per_token residual fit. ---
+    let mut bucket_list: Vec<usize> =
+        meta.prefill_buckets.iter().map(|&(n, _)| n).collect();
+    bucket_list.sort_unstable();
+    bucket_list.dedup();
+    let mut grid: Vec<(usize, usize)> =
+        bucket_list.iter().map(|&b| (b, 0usize)).collect();
+    grid.extend([(128usize, 64usize), (256, 128), (320, 192)]);
+    let mut samples: Vec<(usize, f64, f64)> = vec![];
+    for &(x, cached_req) in &grid {
+        {
+            let cached = cached_req / geom.block_tokens * geom.block_tokens;
+            let prompt = toks(x);
+            let cache_buf = if cached > 0 {
+                let out = runtime.prefill(&prompt[..cached], None, 0)?;
+                let cap = meta
+                    .pick_prefill_bucket(x - cached, cached)
+                    .map(|(_, c)| c)
+                    .unwrap_or(256);
+                let s = meta.n_heads * meta.head_dim;
+                let mut buf = vec![0f32; meta.layers * 2 * cap * s];
+                for l in 0..meta.layers {
+                    for h in 0..2 {
+                        for t in 0..cached {
+                            let src = ((l * 2 + h) * out.bucket_n + t) * s;
+                            let dst = ((l * 2 + h) * cap + t) * s;
+                            buf[dst..dst + s]
+                                .copy_from_slice(&out.new_kv[src..src + s]);
+                        }
+                    }
+                }
+                Some(buf)
+            } else {
+                None
+            };
+            // Warmups + median of 7 (CPU wallclock is noisy).
+            for _ in 0..2 {
+                let _ = runtime.prefill(&prompt[cached..],
+                                        cache_buf.as_deref(), cached)?;
+            }
+            let mut times = vec![];
+            for _ in 0..7 {
+                let t0 = std::time::Instant::now();
+                let _ = runtime.prefill(&prompt[cached..],
+                                        cache_buf.as_deref(), cached)?;
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = times[times.len() / 2];
+            let y = cached as f64 / x as f64;
+            println!("  prefill x={x} y={y:.2}: {med:.4}s");
+            samples.push((x, y, med));
+        }
+    }
+    // Per-bucket compute table from the y=0 samples (one measured cost
+    // per compiled shape — the paper's operator profiling, made exact).
+    model.buckets = bucket_list.clone();
+    model.bucket_costs = bucket_list
+        .iter()
+        .map(|&b| {
+            samples
+                .iter()
+                .find(|&&(x, y, _)| x == b && y == 0.0)
+                .map(|&(_, _, t)| t)
+                .unwrap_or(0.0)
+        })
+        .collect();
+    model.gemm_per_token = model.bucket_costs.last().copied()
+        .unwrap_or(1e-4)
+        / *bucket_list.last().unwrap_or(&256) as f64;
+    model.constant = 0.0;
+    // Cached-token read/staging cost from the y>0 residuals.
+    let bucket_cost_of = |new: usize| -> f64 {
+        let idx = bucket_list
+            .iter()
+            .position(|&b| b >= new)
+            .unwrap_or(bucket_list.len() - 1);
+        model.bucket_costs[idx]
+    };
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for &(x, y, t) in &samples {
+        if y <= 0.0 {
+            continue;
+        }
+        let cached_tokens = x as f64 * y;
+        let base = bucket_cost_of(
+            (x as f64 * (1.0 - y)).ceil() as usize,
+        );
+        num += (t - base) * cached_tokens;
+        den += cached_tokens * cached_tokens;
+    }
+    model.cached_per_token = (num / den.max(1.0)).max(0.0);
+    model.attn_a = -1e-12; // attention x² terms are negligible at 512 ctx
+    model.attn_b = 2e-12;
+    model.attn_c = 0.0;
+    model.attn_d = 0.0;
+    model.wave_tokens = 16;
+    model.tp = 1;
+    // --- Decode samples over ctx. ---
+    let mut dec = vec![];
+    for &ctx in &[64usize, 256] {
+        let prompt = toks(ctx / 2);
+        let out = runtime.prefill(&prompt, None, 0)?;
+        let s = meta.n_heads * meta.head_dim;
+        let mut kv = vec![0f32; meta.layers * 2 * ctx * s];
+        for l in 0..meta.layers {
+            for h in 0..2 {
+                for t in 0..prompt.len() {
+                    let src = ((l * 2 + h) * out.bucket_n + t) * s;
+                    let dst = ((l * 2 + h) * ctx + t) * s;
+                    kv[dst..dst + s]
+                        .copy_from_slice(&out.new_kv[src..src + s]);
+                }
+            }
+        }
+        let mut sess = runtime.decode_start(&kv, ctx, prompt.len())?;
+        for i in 0..4 {
+            let _ = runtime.decode_step(&mut sess, i as u32)?;
+        }
+        let t0 = std::time::Instant::now();
+        let steps = 16;
+        for i in 0..steps {
+            let _ = runtime.decode_step(&mut sess, (i % 100) as u32)?;
+        }
+        let per = t0.elapsed().as_secs_f64() / steps as f64;
+        println!("  decode ctx={ctx}: {per:.4}s/step");
+        dec.push((ctx as f64, per));
+    }
+    let slope_d = (dec[1].1 - dec[0].1) / (dec[1].0 - dec[0].0);
+    model.decode_per_ctx_token = slope_d.max(0.0);
+    model.decode_base = (dec[0].1 - slope_d * dec[0].0).max(1e-6);
+
+    let out_path = format!("{}/cost_model.json", cfg.artifacts_dir);
+    std::fs::write(&out_path, model_to_json(&model).to_string())?;
+    println!("wrote {out_path}: {model:?}");
+    let mut max_rel = 0.0f64;
+    for &(x, y, t) in &samples {
+        let pred = model.exec(x, y);
+        max_rel = max_rel.max((pred - t).abs() / t);
+    }
+    println!("prefill fit max rel err: {:.1}%", max_rel * 100.0);
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! Fixed-size block allocator: O(1) alloc/free over a free-list stack.
+//!
+//! The paper's MemPool manages all memory as fixed-size blocks (§4.1);
+//! fixed-size means no fragmentation and no compaction, and a stack-based
+//! free list keeps recently-freed (cache-warm) slots hot.
+
+/// Allocator over `capacity` equally-sized slots.
+#[derive(Clone, Debug)]
+pub struct BlockAllocator {
+    free: Vec<u32>,
+    allocated: Vec<bool>,
+    high_water: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AllocError {
+    #[error("out of blocks: requested {requested}, free {free}")]
+    OutOfBlocks { requested: usize, free: usize },
+    #[error("double free of block {0}")]
+    DoubleFree(u32),
+    #[error("block index {0} out of range")]
+    OutOfRange(u32),
+}
+
+impl BlockAllocator {
+    pub fn new(capacity: usize) -> Self {
+        BlockAllocator {
+            // Reverse so allocation order starts at slot 0 (nice for tests
+            // and for arena locality).
+            free: (0..capacity as u32).rev().collect(),
+            allocated: vec![false; capacity],
+            high_water: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.allocated.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used(&self) -> usize {
+        self.capacity() - self.free_count()
+    }
+
+    /// Peak simultaneous usage since creation.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn can_alloc(&self, n: usize) -> bool {
+        self.free.len() >= n
+    }
+
+    /// Allocate `n` blocks; all-or-nothing.
+    pub fn alloc(&mut self, n: usize) -> Result<Vec<u32>, AllocError> {
+        if self.free.len() < n {
+            return Err(AllocError::OutOfBlocks {
+                requested: n,
+                free: self.free.len(),
+            });
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let idx = self.free.pop().unwrap();
+            debug_assert!(!self.allocated[idx as usize]);
+            self.allocated[idx as usize] = true;
+            out.push(idx);
+        }
+        self.high_water = self.high_water.max(self.used());
+        Ok(out)
+    }
+
+    /// Free blocks; duplicate or out-of-range frees are errors.
+    pub fn free(&mut self, blocks: &[u32]) -> Result<(), AllocError> {
+        // Validate before mutating (all-or-nothing on bad input).
+        for &b in blocks {
+            match self.allocated.get(b as usize) {
+                None => return Err(AllocError::OutOfRange(b)),
+                Some(false) => return Err(AllocError::DoubleFree(b)),
+                Some(true) => {}
+            }
+        }
+        // A duplicate *within* this call is also a double free.
+        let mut seen = std::collections::HashSet::with_capacity(blocks.len());
+        for &b in blocks {
+            if !seen.insert(b) {
+                return Err(AllocError::DoubleFree(b));
+            }
+        }
+        for &b in blocks {
+            self.allocated[b as usize] = false;
+            self.free.push(b);
+        }
+        Ok(())
+    }
+
+    pub fn is_allocated(&self, block: u32) -> bool {
+        self.allocated.get(block as usize).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(8);
+        let blocks = a.alloc(5).unwrap();
+        assert_eq!(blocks.len(), 5);
+        assert_eq!(a.used(), 5);
+        a.free(&blocks).unwrap();
+        assert_eq!(a.used(), 0);
+        assert_eq!(a.free_count(), 8);
+    }
+
+    #[test]
+    fn all_or_nothing_alloc() {
+        let mut a = BlockAllocator::new(4);
+        a.alloc(3).unwrap();
+        let err = a.alloc(2).unwrap_err();
+        assert_eq!(
+            err,
+            AllocError::OutOfBlocks {
+                requested: 2,
+                free: 1
+            }
+        );
+        assert_eq!(a.used(), 3, "failed alloc must not leak");
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut a = BlockAllocator::new(4);
+        let b = a.alloc(1).unwrap();
+        a.free(&b).unwrap();
+        assert_eq!(a.free(&b).unwrap_err(), AllocError::DoubleFree(b[0]));
+    }
+
+    #[test]
+    fn duplicate_in_one_call_detected() {
+        let mut a = BlockAllocator::new(4);
+        let b = a.alloc(1).unwrap();
+        let dup = vec![b[0], b[0]];
+        assert!(matches!(
+            a.free(&dup).unwrap_err(),
+            AllocError::DoubleFree(_)
+        ));
+        // Validation happened before mutation: block still allocated.
+        assert!(a.is_allocated(b[0]));
+    }
+
+    #[test]
+    fn out_of_range_free() {
+        let mut a = BlockAllocator::new(4);
+        assert_eq!(a.free(&[99]).unwrap_err(), AllocError::OutOfRange(99));
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut a = BlockAllocator::new(10);
+        let b1 = a.alloc(7).unwrap();
+        a.free(&b1).unwrap();
+        a.alloc(2).unwrap();
+        assert_eq!(a.high_water(), 7);
+    }
+
+    #[test]
+    fn prop_no_leaks_no_duplicates() {
+        proptest(100, |g| {
+            let cap = g.usize(1, 128);
+            let mut a = BlockAllocator::new(cap);
+            let mut live: Vec<Vec<u32>> = vec![];
+            for _ in 0..g.usize(1, 60) {
+                if g.bool() || live.is_empty() {
+                    let n = g.usize(0, cap / 2 + 1);
+                    if let Ok(bs) = a.alloc(n) {
+                        live.push(bs);
+                    }
+                } else {
+                    let i = g.usize(0, live.len() - 1);
+                    let bs = live.swap_remove(i);
+                    a.free(&bs).unwrap();
+                }
+                // Invariant: live handles are exactly the allocated set.
+                let live_count: usize = live.iter().map(Vec::len).sum();
+                assert_eq!(a.used(), live_count);
+                let mut all: Vec<u32> =
+                    live.iter().flatten().copied().collect();
+                all.sort_unstable();
+                let before = all.len();
+                all.dedup();
+                assert_eq!(before, all.len(), "duplicate block handed out");
+            }
+        });
+    }
+}

@@ -1,0 +1,675 @@
+//! The MemPool API facade — Table 1 of the paper.
+//!
+//! One `MemPool` per inference instance, owned by that instance's thread
+//! (the paper's MemPool also runs *within* each instance, §4). The
+//! distributed APIs (`transfer`, `transfer_with_insert`) are driven by
+//! the instance event loop over the [`crate::net`] fabric using the
+//! local halves implemented here (`export_blocks` on the sender,
+//! `import_blocks` + `insert` on the receiver).
+
+use std::collections::HashMap;
+
+use super::allocator::AllocError;
+use super::block::{BlockAddr, BlockGeometry, InstanceId, Tier};
+use super::index::{BlockGroup, IndexMatch, RadixIndex};
+use super::tier::Arena;
+
+/// Pool-level counters (exported into [`crate::metrics::Metrics`]).
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    pub inserts: u64,
+    pub insert_dup_blocks: u64,
+    pub matches: u64,
+    pub match_hit_token_blocks: u64,
+    pub evicted_blocks: u64,
+    pub expired_blocks: u64,
+    pub swapped_out: u64,
+    pub swapped_in: u64,
+    pub alloc_failures: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PoolError {
+    #[error("allocation failed: {0}")]
+    Alloc(#[from] AllocError),
+    #[error("address {0} not owned by this instance")]
+    NotLocal(BlockAddr),
+    #[error("capacity: cannot make room for {0} blocks")]
+    Capacity(usize),
+}
+
+/// Result of `match_prefix` at pool level.
+#[derive(Clone, Debug, Default)]
+pub struct MatchResult {
+    /// Matched tokens (multiple of block_tokens).
+    pub tokens: usize,
+    /// One group per matched token-block.
+    pub groups: Vec<BlockGroup>,
+}
+
+impl MatchResult {
+    /// Does any matched block live in DRAM (needs swap_in before use)?
+    pub fn needs_swap_in(&self) -> bool {
+        self.groups
+            .iter()
+            .flatten()
+            .any(|a| a.tier == Tier::Dram)
+    }
+
+    pub fn flat_addrs(&self) -> Vec<BlockAddr> {
+        self.groups.iter().flatten().copied().collect()
+    }
+}
+
+pub struct MemPool {
+    instance: InstanceId,
+    geom: BlockGeometry,
+    hbm: Arena,
+    dram: Arena,
+    index: RadixIndex,
+    stats: PoolStats,
+}
+
+impl MemPool {
+    pub fn new(
+        instance: InstanceId,
+        geom: BlockGeometry,
+        hbm_blocks: usize,
+        dram_blocks: usize,
+        index_ttl_s: f64,
+        materialize: bool,
+    ) -> Self {
+        MemPool {
+            instance,
+            geom,
+            hbm: Arena::new(hbm_blocks, geom.floats_per_block(), materialize),
+            dram: Arena::new(dram_blocks, geom.floats_per_block(), materialize),
+            index: RadixIndex::new(geom.block_tokens, index_ttl_s),
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn instance(&self) -> InstanceId {
+        self.instance
+    }
+
+    pub fn geometry(&self) -> &BlockGeometry {
+        &self.geom
+    }
+
+    pub fn stats(&self) -> &PoolStats {
+        &self.stats
+    }
+
+    pub fn free_blocks(&self, tier: Tier) -> usize {
+        self.arena(tier).allocator().free_count()
+    }
+
+    pub fn used_blocks(&self, tier: Tier) -> usize {
+        self.arena(tier).allocator().used()
+    }
+
+    pub fn capacity(&self, tier: Tier) -> usize {
+        self.arena(tier).allocator().capacity()
+    }
+
+    /// Token-blocks of historical KV currently indexed.
+    pub fn indexed_token_blocks(&self) -> usize {
+        self.index.total_token_blocks()
+    }
+
+    fn arena(&self, tier: Tier) -> &Arena {
+        match tier {
+            Tier::Hbm => &self.hbm,
+            Tier::Dram => &self.dram,
+        }
+    }
+
+    fn arena_mut(&mut self, tier: Tier) -> &mut Arena {
+        match tier {
+            Tier::Hbm => &mut self.hbm,
+            Tier::Dram => &mut self.dram,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Memory block APIs (Table 1: alloc_mem / free_mem)
+    // ------------------------------------------------------------------
+
+    /// Allocate `n` blocks in `tier`; addresses encode this instance.
+    pub fn alloc_mem(&mut self, n: usize, tier: Tier)
+                     -> Result<Vec<BlockAddr>, PoolError> {
+        let inst = self.instance;
+        match self.arena_mut(tier).alloc(n) {
+            Ok(idxs) => Ok(idxs
+                .into_iter()
+                .map(|i| BlockAddr::new(inst, tier, i))
+                .collect()),
+            Err(e) => {
+                self.stats.alloc_failures += 1;
+                Err(e.into())
+            }
+        }
+    }
+
+    pub fn free_mem(&mut self, addrs: &[BlockAddr]) -> Result<(), PoolError> {
+        for a in addrs {
+            if a.instance != self.instance {
+                return Err(PoolError::NotLocal(*a));
+            }
+        }
+        let mut hbm = vec![];
+        let mut dram = vec![];
+        for a in addrs {
+            match a.tier {
+                Tier::Hbm => hbm.push(a.index),
+                Tier::Dram => dram.push(a.index),
+            }
+        }
+        self.hbm.free(&hbm)?;
+        self.dram.free(&dram)?;
+        Ok(())
+    }
+
+    /// Make at least `n` HBM blocks free: first swap historical KV out to
+    /// DRAM, then (if DRAM is full too) evict LRU entries outright.
+    /// Blocks not owned by the index (active KV) are never touched.
+    pub fn ensure_free_hbm(&mut self, n: usize, now: f64)
+                           -> Result<(), PoolError> {
+        if self.free_blocks(Tier::Hbm) >= n {
+            return Ok(());
+        }
+        // TTL housekeeping first — free expiry is better than eviction.
+        self.expire(now);
+        while self.free_blocks(Tier::Hbm) < n {
+            let need_groups = self
+                .geom
+                .blocks_per_token_block()
+                .max(1);
+            let deficit = n - self.free_blocks(Tier::Hbm);
+            let want_tb = deficit.div_ceil(need_groups);
+            if self.free_blocks(Tier::Dram) >= deficit {
+                let moved = self.swap_out(want_tb)?;
+                if moved > 0 {
+                    continue;
+                }
+            }
+            let evicted = self.evict(want_tb);
+            if evicted == 0 {
+                self.stats.alloc_failures += 1;
+                return Err(PoolError::Capacity(n));
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Index APIs (Table 1: insert / match / delete; + evict, expire)
+    // ------------------------------------------------------------------
+
+    /// Retire active KV into the historical index. Duplicate block groups
+    /// (prefix already cached) are freed immediately. Returns the number
+    /// of token-blocks newly indexed.
+    pub fn insert(&mut self, tokens: &[u32], groups: Vec<BlockGroup>,
+                  now: f64) -> Result<usize, PoolError> {
+        let offered = groups.len();
+        let dups = self.index.insert(tokens, &groups, now);
+        let n_dup = dups.len();
+        for g in dups {
+            self.free_mem(&g)?;
+        }
+        self.stats.inserts += 1;
+        self.stats.insert_dup_blocks += n_dup as u64;
+        Ok(offered.saturating_sub(n_dup))
+    }
+
+    /// Match and pin in one step — the engine's admission path. The
+    /// pinned prefix cannot be evicted/swapped/expired until
+    /// [`Self::unpin`] (call it with the same token slice at retire).
+    pub fn match_and_pin(&mut self, tokens: &[u32], now: f64) -> MatchResult {
+        let m = self.match_prefix(tokens, now);
+        let pinned = self.index.pin(&tokens[..m.tokens]);
+        debug_assert_eq!(pinned, m.tokens);
+        m
+    }
+
+    /// Release a [`Self::match_and_pin`] pin. Pass the same pinned slice
+    /// (`&tokens[..match.tokens]`).
+    pub fn unpin(&mut self, pinned_tokens: &[u32]) {
+        self.index.unpin(pinned_tokens);
+    }
+
+    /// Longest cached prefix of `tokens`.
+    pub fn match_prefix(&mut self, tokens: &[u32], now: f64) -> MatchResult {
+        let IndexMatch { tokens: t, groups } =
+            self.index.match_prefix(tokens, now);
+        self.stats.matches += 1;
+        self.stats.match_hit_token_blocks += groups.len() as u64;
+        MatchResult { tokens: t, groups }
+    }
+
+    /// Delete a cached prompt (and everything extending it); frees blocks.
+    pub fn delete(&mut self, tokens: &[u32]) -> Result<usize, PoolError> {
+        let freed = self.index.delete(tokens);
+        let n = freed.len();
+        self.free_mem(&freed)?;
+        Ok(n)
+    }
+
+    /// Evict `n` token-blocks LRU-first; returns token-blocks evicted.
+    pub fn evict(&mut self, n_token_blocks: usize) -> usize {
+        let freed = self.index.evict_lru(n_token_blocks);
+        let n = freed.len();
+        self.stats.evicted_blocks += n as u64;
+        let _ = self.free_mem(&freed);
+        n / self.geom.blocks_per_token_block().max(1)
+    }
+
+    /// TTL expiry pass.
+    pub fn expire(&mut self, now: f64) -> usize {
+        let freed = self.index.expire(now);
+        let n = freed.len();
+        self.stats.expired_blocks += n as u64;
+        let _ = self.free_mem(&freed);
+        n
+    }
+
+    // ------------------------------------------------------------------
+    // Swap APIs (Table 1: swap_out / swap_in)
+    // ------------------------------------------------------------------
+
+    /// Swap up to `n` LRU *indexed* token-blocks from HBM to DRAM.
+    /// Returns blocks moved (allocatable-block granularity).
+    pub fn swap_out(&mut self, n_token_blocks: usize)
+                    -> Result<usize, PoolError> {
+        let victims = self.index.lru_addrs(n_token_blocks, |a| {
+            a.tier == Tier::Hbm
+        });
+        if victims.is_empty() {
+            return Ok(0);
+        }
+        let mut remap = HashMap::new();
+        let mut tmp = vec![0.0f32; self.geom.floats_per_block()];
+        for old in victims {
+            if self.dram.allocator().free_count() == 0 {
+                break;
+            }
+            let new_idx = self.dram.alloc(1)?[0];
+            if self.hbm.is_materialized() {
+                self.hbm.read_block(old.index, &mut tmp);
+                self.dram.write_block(new_idx, &tmp);
+            }
+            self.hbm.free(&[old.index])?;
+            remap.insert(
+                old,
+                BlockAddr::new(self.instance, Tier::Dram, new_idx),
+            );
+        }
+        self.index.remap(&remap);
+        self.stats.swapped_out += remap.len() as u64;
+        Ok(remap.len())
+    }
+
+    /// Swap the given DRAM blocks back into HBM; returns the new
+    /// addresses (in input order). The index is remapped.
+    pub fn swap_in(&mut self, addrs: &[BlockAddr])
+                   -> Result<Vec<BlockAddr>, PoolError> {
+        let mut remap = HashMap::new();
+        let mut out = Vec::with_capacity(addrs.len());
+        let mut tmp = vec![0.0f32; self.geom.floats_per_block()];
+        for &old in addrs {
+            if old.instance != self.instance {
+                return Err(PoolError::NotLocal(old));
+            }
+            if old.tier == Tier::Hbm {
+                out.push(old); // already resident
+                continue;
+            }
+            let new_idx = self.hbm.alloc(1)?[0];
+            if self.dram.is_materialized() {
+                self.dram.read_block(old.index, &mut tmp);
+                self.hbm.write_block(new_idx, &tmp);
+            }
+            self.dram.free(&[old.index])?;
+            let new = BlockAddr::new(self.instance, Tier::Hbm, new_idx);
+            remap.insert(old, new);
+            out.push(new);
+        }
+        self.index.remap(&remap);
+        self.stats.swapped_in += remap.len() as u64;
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Data plane (engine + transfer use these local halves)
+    // ------------------------------------------------------------------
+
+    pub fn write_block(&mut self, addr: BlockAddr, data: &[f32])
+                       -> Result<(), PoolError> {
+        if addr.instance != self.instance {
+            return Err(PoolError::NotLocal(addr));
+        }
+        self.arena_mut(addr.tier).write_block(addr.index, data);
+        Ok(())
+    }
+
+    pub fn read_block(&self, addr: BlockAddr, out: &mut [f32])
+                      -> Result<(), PoolError> {
+        if addr.instance != self.instance {
+            return Err(PoolError::NotLocal(addr));
+        }
+        self.arena(addr.tier).read_block(addr.index, out);
+        Ok(())
+    }
+
+    /// Sender half of `transfer`: serialize blocks into one payload.
+    pub fn export_blocks(&self, addrs: &[BlockAddr])
+                         -> Result<Vec<f32>, PoolError> {
+        let fpb = self.geom.floats_per_block();
+        let mut out = vec![0.0f32; fpb * addrs.len()];
+        for (i, &a) in addrs.iter().enumerate() {
+            self.read_block(a, &mut out[i * fpb..(i + 1) * fpb])?;
+        }
+        Ok(out)
+    }
+
+    /// Receiver half of `transfer`: allocate (if needed) and land the
+    /// payload. Returns the destination addresses.
+    pub fn import_blocks(
+        &mut self,
+        payload: &[f32],
+        n_blocks: usize,
+        dst: Option<Vec<BlockAddr>>,
+        tier: Tier,
+        now: f64,
+    ) -> Result<Vec<BlockAddr>, PoolError> {
+        let fpb = self.geom.floats_per_block();
+        assert_eq!(payload.len(), fpb * n_blocks, "payload size mismatch");
+        let addrs = match dst {
+            Some(a) => {
+                assert_eq!(a.len(), n_blocks);
+                a
+            }
+            None => {
+                if tier == Tier::Hbm {
+                    self.ensure_free_hbm(n_blocks, now)?;
+                }
+                self.alloc_mem(n_blocks, tier)?
+            }
+        };
+        for (i, &a) in addrs.iter().enumerate() {
+            self.write_block(a, &payload[i * fpb..(i + 1) * fpb])?;
+        }
+        Ok(addrs)
+    }
+
+    /// Leak check: every indexed address must be allocated, and the two
+    /// tiers' allocation counts must cover exactly the indexed blocks
+    /// plus `active` blocks the engine holds.
+    pub fn check_consistency(&self, active_blocks: usize) -> Result<(), String> {
+        let indexed = self.index.all_addrs();
+        for a in &indexed {
+            let arena = self.arena(a.tier);
+            if !arena.allocator().is_allocated(a.index) {
+                return Err(format!("indexed addr {a} is not allocated"));
+            }
+        }
+        let used = self.used_blocks(Tier::Hbm) + self.used_blocks(Tier::Dram);
+        if used != indexed.len() + active_blocks {
+            return Err(format!(
+                "used={used} != indexed={} + active={active_blocks}",
+                indexed.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Release every block owned by a failed remote instance (paper §4.4
+    /// — called on cluster-membership change). This pool only stores its
+    /// *own* blocks, so the argument filters index references to remote
+    /// data in the *global* tree case; locally it is a no-op guard.
+    pub fn release_remote(&mut self, _failed: InstanceId) {
+        // Local pools never hold remote blocks (addresses encode owner);
+        // the method exists for API parity and future multi-tenant pools.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::proptest;
+
+    fn geom() -> BlockGeometry {
+        BlockGeometry {
+            block_tokens: 4,
+            layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            aggregated: true,
+        }
+    }
+
+    fn pool(hbm: usize, dram: usize) -> MemPool {
+        MemPool::new(InstanceId(3), geom(), hbm, dram, 0.0, true)
+    }
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 7 + seed).collect()
+    }
+
+    #[test]
+    fn alloc_encodes_instance() {
+        let mut p = pool(4, 4);
+        let a = p.alloc_mem(2, Tier::Hbm).unwrap();
+        assert_eq!(a[0].instance, InstanceId(3));
+        assert_eq!(a[0].tier, Tier::Hbm);
+        p.free_mem(&a).unwrap();
+    }
+
+    #[test]
+    fn insert_match_roundtrip_with_data() {
+        let mut p = pool(8, 8);
+        let t = toks(8, 0);
+        let addrs = p.alloc_mem(2, Tier::Hbm).unwrap();
+        let fpb = p.geometry().floats_per_block();
+        p.write_block(addrs[0], &vec![1.5; fpb]).unwrap();
+        p.write_block(addrs[1], &vec![2.5; fpb]).unwrap();
+        let new = p
+            .insert(&t, vec![vec![addrs[0]], vec![addrs[1]]], 1.0)
+            .unwrap();
+        assert_eq!(new, 2);
+        let m = p.match_prefix(&t, 2.0);
+        assert_eq!(m.tokens, 8);
+        let mut buf = vec![0.0; fpb];
+        p.read_block(m.groups[1][0], &mut buf).unwrap();
+        assert_eq!(buf[0], 2.5);
+        p.check_consistency(0).unwrap();
+    }
+
+    #[test]
+    fn duplicate_insert_frees_blocks() {
+        let mut p = pool(8, 8);
+        let t = toks(4, 0);
+        let a1 = p.alloc_mem(1, Tier::Hbm).unwrap();
+        p.insert(&t, vec![a1], 1.0).unwrap();
+        let a2 = p.alloc_mem(1, Tier::Hbm).unwrap();
+        let newly = p.insert(&t, vec![a2], 2.0).unwrap();
+        assert_eq!(newly, 0);
+        // The duplicate block was freed: 1 used (the original).
+        assert_eq!(p.used_blocks(Tier::Hbm), 1);
+        p.check_consistency(0).unwrap();
+    }
+
+    #[test]
+    fn swap_out_moves_data_and_remaps() {
+        let mut p = pool(4, 4);
+        let t = toks(8, 0);
+        let addrs = p.alloc_mem(2, Tier::Hbm).unwrap();
+        let fpb = p.geometry().floats_per_block();
+        p.write_block(addrs[0], &vec![7.0; fpb]).unwrap();
+        p.write_block(addrs[1], &vec![8.0; fpb]).unwrap();
+        p.insert(&t, vec![vec![addrs[0]], vec![addrs[1]]], 1.0)
+            .unwrap();
+        let moved = p.swap_out(2).unwrap();
+        assert_eq!(moved, 2);
+        assert_eq!(p.used_blocks(Tier::Hbm), 0);
+        assert_eq!(p.used_blocks(Tier::Dram), 2);
+        let m = p.match_prefix(&t, 2.0);
+        assert!(m.needs_swap_in());
+        // Data survived the move.
+        let mut buf = vec![0.0; fpb];
+        p.read_block(m.groups[0][0], &mut buf).unwrap();
+        assert_eq!(buf[0], 7.0);
+        p.check_consistency(0).unwrap();
+    }
+
+    #[test]
+    fn swap_in_restores_hbm() {
+        let mut p = pool(4, 4);
+        let t = toks(4, 0);
+        let addrs = p.alloc_mem(1, Tier::Hbm).unwrap();
+        let fpb = p.geometry().floats_per_block();
+        p.write_block(addrs[0], &vec![3.25; fpb]).unwrap();
+        p.insert(&t, vec![addrs], 1.0).unwrap();
+        p.swap_out(1).unwrap();
+        let m = p.match_prefix(&t, 2.0);
+        let back = p.swap_in(&m.flat_addrs()).unwrap();
+        assert!(back.iter().all(|a| a.tier == Tier::Hbm));
+        let mut buf = vec![0.0; fpb];
+        p.read_block(back[0], &mut buf).unwrap();
+        assert_eq!(buf[0], 3.25);
+        // Index now points at HBM again.
+        assert!(!p.match_prefix(&t, 3.0).needs_swap_in());
+        p.check_consistency(0).unwrap();
+    }
+
+    #[test]
+    fn ensure_free_hbm_swaps_then_evicts() {
+        let mut p = pool(4, 2);
+        // Fill HBM with 4 indexed blocks (2 prompts).
+        for (i, seed) in [(0u32, 1u32), (1, 2)] {
+            let t = toks(8, seed * 100);
+            let a = p.alloc_mem(2, Tier::Hbm).unwrap();
+            p.insert(&t, a.into_iter().map(|x| vec![x]).collect(), i as f64)
+                .unwrap();
+        }
+        assert_eq!(p.free_blocks(Tier::Hbm), 0);
+        // Need 3 free: 2 can swap to DRAM, 1 must be evicted.
+        p.ensure_free_hbm(3, 10.0).unwrap();
+        assert!(p.free_blocks(Tier::Hbm) >= 3);
+        assert!(p.stats().swapped_out >= 2 || p.stats().evicted_blocks >= 1);
+        p.check_consistency(0).unwrap();
+    }
+
+    #[test]
+    fn ensure_free_fails_when_nothing_evictable() {
+        let mut p = pool(2, 0);
+        // Active (un-indexed) blocks cannot be reclaimed.
+        let _active = p.alloc_mem(2, Tier::Hbm).unwrap();
+        assert!(p.ensure_free_hbm(1, 0.0).is_err());
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let mut src = pool(4, 4);
+        let mut dst = MemPool::new(InstanceId(9), geom(), 4, 4, 0.0, true);
+        let fpb = src.geometry().floats_per_block();
+        let a = src.alloc_mem(2, Tier::Hbm).unwrap();
+        src.write_block(a[0], &vec![1.0; fpb]).unwrap();
+        src.write_block(a[1], &vec![2.0; fpb]).unwrap();
+        let payload = src.export_blocks(&a).unwrap();
+        let landed = dst
+            .import_blocks(&payload, 2, None, Tier::Hbm, 0.0)
+            .unwrap();
+        assert_eq!(landed[0].instance, InstanceId(9));
+        let mut buf = vec![0.0; fpb];
+        dst.read_block(landed[1], &mut buf).unwrap();
+        assert_eq!(buf[0], 2.0);
+    }
+
+    #[test]
+    fn remote_addr_rejected() {
+        let mut p = pool(2, 2);
+        let foreign = BlockAddr::new(InstanceId(42), Tier::Hbm, 0);
+        assert!(matches!(
+            p.free_mem(&[foreign]),
+            Err(PoolError::NotLocal(_))
+        ));
+        assert!(p.read_block(foreign, &mut [0.0; 64]).is_err());
+    }
+
+    #[test]
+    fn ttl_expiry_frees_memory() {
+        let mut p = MemPool::new(InstanceId(0), geom(), 8, 8, 5.0, true);
+        let a = p.alloc_mem(1, Tier::Hbm).unwrap();
+        p.insert(&toks(4, 0), vec![a], 0.0).unwrap();
+        assert_eq!(p.expire(10.0), 1);
+        assert_eq!(p.used_blocks(Tier::Hbm), 0);
+        assert_eq!(p.match_prefix(&toks(4, 0), 11.0).tokens, 0);
+    }
+
+    /// Lifecycle property: random alloc/insert/match/evict/swap sequences
+    /// keep the pool consistent (no leaks, no double-ownership).
+    #[test]
+    fn prop_pool_lifecycle_consistent() {
+        proptest(40, |g| {
+            let hbm = g.usize(4, 16);
+            let dram = g.usize(4, 16);
+            let mut p = MemPool::new(
+                InstanceId(1),
+                geom(),
+                hbm,
+                dram,
+                0.0,
+                false, // bookkeeping-only for speed (sim path)
+            );
+            let mut active: Vec<BlockAddr> = vec![];
+            let mut now = 0.0;
+            for _ in 0..g.usize(1, 50) {
+                now += 1.0;
+                match g.usize(0, 5) {
+                    0 => {
+                        let n = g.usize(1, 3);
+                        if let Ok(a) = p.alloc_mem(n, Tier::Hbm) {
+                            active.extend(a);
+                        }
+                    }
+                    1 => {
+                        // Retire some active blocks under a random prompt.
+                        if !active.is_empty() {
+                            let n = g.usize(1, active.len().min(3));
+                            let blocks: Vec<BlockAddr> =
+                                active.drain(..n).collect();
+                            let t = g.vec_u32(n * 4, 0, 5);
+                            p.insert(
+                                &t,
+                                blocks.into_iter().map(|b| vec![b]).collect(),
+                                now,
+                            )
+                            .unwrap();
+                        }
+                    }
+                    2 => {
+                        let n = g.usize(0, 12);
+                        let t = g.vec_u32(n, 0, 5);
+                        let _ = p.match_prefix(&t, now);
+                    }
+                    3 => {
+                        p.evict(g.usize(1, 3));
+                    }
+                    4 => {
+                        let _ = p.swap_out(g.usize(1, 2));
+                    }
+                    _ => {
+                        if !active.is_empty() {
+                            let b = active.pop().unwrap();
+                            p.free_mem(&[b]).unwrap();
+                        }
+                    }
+                }
+                p.check_consistency(active.len())
+                    .unwrap_or_else(|e| panic!("{e}"));
+            }
+        });
+    }
+}

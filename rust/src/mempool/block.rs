@@ -1,0 +1,215 @@
+//! Block addressing and KV-block geometry.
+//!
+//! Per Table 1 of the paper, every address encodes the owning instance ID
+//! so any instance can name any other instance's memory (the cluster
+//! manager uses this to release leaked blocks after a failure, §4.4).
+//!
+//! Geometry covers the paper's §5.2 layouts:
+//! * **discrete** (vLLM-style): one block = one layer's K *or* V half for
+//!   `block_tokens` tokens → `2 * layers` blocks per token-block;
+//! * **aggregated** (the paper's huge-page optimization): one block spans
+//!   all layers and both halves → 1 block per token-block, cutting the
+//!   number of network calls by `2 * layers`.
+
+use std::fmt;
+
+/// Identifies an inference instance in the cluster.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u32);
+
+impl fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "inst{}", self.0)
+    }
+}
+
+/// Memory tier: simulated GPU HBM (fast, scarce) or CPU DRAM (slow, big).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    Hbm,
+    Dram,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Hbm => "hbm",
+            Tier::Dram => "dram",
+        }
+    }
+}
+
+/// A block address: owner instance ⊕ tier ⊕ slot index. `Copy`, ordered,
+/// hashable — used as the universal KV-cache handle across the cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockAddr {
+    pub instance: InstanceId,
+    pub tier: Tier,
+    pub index: u32,
+}
+
+impl BlockAddr {
+    pub fn new(instance: InstanceId, tier: Tier, index: u32) -> Self {
+        BlockAddr {
+            instance,
+            tier,
+            index,
+        }
+    }
+
+    /// Pack into a u64 (instance:24 | tier:8 | index:32) — the wire form.
+    pub fn pack(self) -> u64 {
+        ((self.instance.0 as u64) << 40)
+            | (((self.tier == Tier::Dram) as u64) << 32)
+            | self.index as u64
+    }
+
+    pub fn unpack(x: u64) -> Self {
+        BlockAddr {
+            instance: InstanceId((x >> 40) as u32),
+            tier: if (x >> 32) & 1 == 1 {
+                Tier::Dram
+            } else {
+                Tier::Hbm
+            },
+            index: x as u32,
+        }
+    }
+}
+
+impl fmt::Display for BlockAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}", self.instance, self.tier.name(), self.index)
+    }
+}
+
+/// KV block geometry — derived from the model geometry + layout choice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockGeometry {
+    /// Tokens per block (vLLM block size; paper tests use 16).
+    pub block_tokens: usize,
+    pub layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// Aggregated huge-page layout (paper §5.2)?
+    pub aggregated: bool,
+}
+
+impl BlockGeometry {
+    /// Floats of KV data one *token* carries in one layer's K or V half.
+    pub fn floats_per_token_half(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Total floats of KV data per token across all layers, both halves.
+    pub fn floats_per_token(&self) -> usize {
+        2 * self.layers * self.floats_per_token_half()
+    }
+
+    /// Floats stored in one allocatable block.
+    pub fn floats_per_block(&self) -> usize {
+        if self.aggregated {
+            self.block_tokens * self.floats_per_token()
+        } else {
+            self.block_tokens * self.floats_per_token_half()
+        }
+    }
+
+    pub fn bytes_per_block(&self) -> usize {
+        self.floats_per_block() * 4
+    }
+
+    /// Allocatable blocks per token-block (the unit the index tracks).
+    pub fn blocks_per_token_block(&self) -> usize {
+        if self.aggregated {
+            1
+        } else {
+            2 * self.layers
+        }
+    }
+
+    /// Bytes of KV cache for `tokens` tokens (layout-independent).
+    pub fn bytes_for_tokens(&self, tokens: usize) -> usize {
+        tokens * self.floats_per_token() * 4
+    }
+
+    /// Token-blocks needed to hold `tokens` tokens (ceil).
+    pub fn token_blocks(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Allocatable blocks needed for `tokens` tokens.
+    pub fn alloc_blocks(&self, tokens: usize) -> usize {
+        self.token_blocks(tokens) * self.blocks_per_token_block()
+    }
+
+    /// Network API calls to ship `tokens` tokens of KV (paper §5.2: one
+    /// NCCL send per discrete block; aggregation cuts this 2*L times).
+    pub fn transfer_calls(&self, tokens: usize) -> usize {
+        self.alloc_blocks(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(aggregated: bool) -> BlockGeometry {
+        BlockGeometry {
+            block_tokens: 16,
+            layers: 4,
+            n_heads: 8,
+            head_dim: 32,
+            aggregated,
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for inst in [0u32, 1, 77, 0xFFFF] {
+            for tier in [Tier::Hbm, Tier::Dram] {
+                for idx in [0u32, 5, u32::MAX] {
+                    let a = BlockAddr::new(InstanceId(inst), tier, idx);
+                    assert_eq!(BlockAddr::unpack(a.pack()), a);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn discrete_vs_aggregated_same_total_bytes() {
+        let d = geom(false);
+        let a = geom(true);
+        // 256 tokens: total KV bytes identical across layouts.
+        assert_eq!(
+            d.alloc_blocks(256) * d.bytes_per_block(),
+            a.alloc_blocks(256) * a.bytes_per_block()
+        );
+        assert_eq!(d.bytes_for_tokens(256), a.alloc_blocks(256) * a.bytes_per_block());
+    }
+
+    #[test]
+    fn aggregation_cuts_transfer_calls_2l_times() {
+        let d = geom(false);
+        let a = geom(true);
+        let calls_d = d.transfer_calls(256);
+        let calls_a = a.transfer_calls(256);
+        assert_eq!(calls_d, calls_a * 2 * 4);
+    }
+
+    #[test]
+    fn token_block_rounding() {
+        let g = geom(true);
+        assert_eq!(g.token_blocks(1), 1);
+        assert_eq!(g.token_blocks(16), 1);
+        assert_eq!(g.token_blocks(17), 2);
+        assert_eq!(g.token_blocks(0), 0);
+    }
+
+    #[test]
+    fn per_token_floats() {
+        let g = geom(true);
+        assert_eq!(g.floats_per_token(), 2 * 4 * 8 * 32);
+        assert_eq!(g.floats_per_block(), 16 * 2048);
+    }
+}

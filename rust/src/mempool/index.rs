@@ -1,0 +1,903 @@
+//! Token-indexed radix tree mapping prompt prefixes to historical KV
+//! cache blocks (paper §4.2).
+//!
+//! Following SGLang's design with the paper's two extensions: (a) block
+//! addresses can point at *any tier* (HBM or DRAM — see [`super::tier`]),
+//! and (b) the same structure doubles as the global scheduler's prompt
+//! tree. Indexing granularity is one *token-block* (`block_tokens`
+//! tokens, 16 in the paper's tests): only full blocks are cached, and
+//! every edge length is a multiple of `block_tokens`, so node splits land
+//! on block boundaries and the KV layout never needs reshaping.
+//!
+//! Eviction is LRU over leaves (evicting an interior node would orphan
+//! its descendants' prefixes); TTL expiry handles the global tree's
+//! staleness problem (paper §6 Discussion).
+
+use std::collections::HashMap;
+
+use super::block::BlockAddr;
+
+/// Addresses backing one token-block (1 entry when aggregated, 2·L when
+/// discrete).
+pub type BlockGroup = Vec<BlockAddr>;
+
+#[derive(Debug)]
+struct Node {
+    /// Edge label from the parent; length is a multiple of `block_tokens`
+    /// (except the root, which has an empty edge).
+    edge: Vec<u32>,
+    /// One group per token-block of the edge.
+    groups: Vec<BlockGroup>,
+    /// Children keyed by the *entire first block* of the child's edge
+    /// (not the first token): distinct blocks that happen to share a
+    /// first token — e.g. sessions diverging inside the block where a
+    /// common non-aligned prefix ends — must coexist (vLLM's hash-based
+    /// prefix cache gets this for free by hashing whole blocks).
+    children: HashMap<Vec<u32>, usize>,
+    parent: usize,
+    last_access: f64,
+    /// In-use count: requests currently reading this node's blocks.
+    /// Pinned nodes are skipped by eviction, swap victim selection, and
+    /// TTL expiry (SGLang's lock_ref, needed so an admission's matched
+    /// prefix cannot be reclaimed before the request retires).
+    pins: u32,
+    valid: bool,
+}
+
+#[derive(Debug)]
+pub struct RadixIndex {
+    nodes: Vec<Node>,
+    free_list: Vec<usize>,
+    block_tokens: usize,
+    /// TTL in seconds; 0 disables expiry.
+    ttl: f64,
+    token_blocks: usize,
+}
+
+/// Result of a prefix match.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IndexMatch {
+    /// Matched length in tokens (multiple of block_tokens).
+    pub tokens: usize,
+    /// One group per matched token-block, in prompt order.
+    pub groups: Vec<BlockGroup>,
+}
+
+const ROOT: usize = 0;
+
+impl RadixIndex {
+    pub fn new(block_tokens: usize, ttl: f64) -> Self {
+        assert!(block_tokens > 0);
+        RadixIndex {
+            nodes: vec![Node {
+                edge: vec![],
+                groups: vec![],
+                children: HashMap::new(),
+                parent: ROOT,
+                last_access: 0.0,
+                pins: 0,
+                valid: true,
+            }],
+            free_list: vec![],
+            block_tokens,
+            ttl,
+            token_blocks: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Total token-blocks currently indexed.
+    pub fn total_token_blocks(&self) -> usize {
+        self.token_blocks
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.token_blocks == 0
+    }
+
+    fn alloc_node(&mut self, node: Node) -> usize {
+        if let Some(i) = self.free_list.pop() {
+            self.nodes[i] = node;
+            i
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    fn release_node(&mut self, idx: usize) {
+        debug_assert_ne!(idx, ROOT);
+        self.nodes[idx].valid = false;
+        self.nodes[idx].children.clear();
+        self.nodes[idx].edge.clear();
+        self.nodes[idx].groups.clear();
+        self.free_list.push(idx);
+    }
+
+    /// Truncate a token sequence to whole token-blocks.
+    pub fn usable_len(&self, tokens: usize) -> usize {
+        tokens - tokens % self.block_tokens
+    }
+
+    /// Insert `tokens` (truncated to whole blocks) mapping to `groups`
+    /// (one per token-block). Returns the *duplicate* groups — block
+    /// groups the caller passed for prefixes that were already indexed —
+    /// so the caller can free that memory (paper: `insert` retires the
+    /// active KV; if the prefix is already cached the new copy is
+    /// redundant).
+    pub fn insert(&mut self, tokens: &[u32], groups: &[BlockGroup], now: f64)
+                  -> Vec<BlockGroup> {
+        let usable = self.usable_len(tokens.len());
+        let tokens = &tokens[..usable];
+        let n_blocks = usable / self.block_tokens;
+        assert!(
+            groups.len() >= n_blocks,
+            "need {n_blocks} groups, got {}",
+            groups.len()
+        );
+        let mut dup: Vec<BlockGroup> = vec![];
+        let mut cur = ROOT;
+        let mut pos = 0; // tokens consumed
+        self.nodes[ROOT].last_access = now;
+
+        while pos < usable {
+            let key = &tokens[pos..pos + self.block_tokens];
+            match self.nodes[cur].children.get(key).copied() {
+                None => {
+                    // Attach the whole remainder as one new leaf.
+                    let edge: Vec<u32> = tokens[pos..].to_vec();
+                    let g: Vec<BlockGroup> = groups
+                        [pos / self.block_tokens..n_blocks]
+                        .to_vec();
+                    self.token_blocks += g.len();
+                    let leaf = self.alloc_node(Node {
+                        edge,
+                        groups: g,
+                        children: HashMap::new(),
+                        parent: cur,
+                        last_access: now,
+                        pins: 0,
+                        valid: true,
+                    });
+                    self.nodes[cur]
+                        .children
+                        .insert(key.to_vec(), leaf);
+                    return dup;
+                }
+                Some(child) => {
+                    let common = self.common_block_prefix(
+                        &self.nodes[child].edge,
+                        &tokens[pos..],
+                    );
+                    debug_assert!(
+                        common >= self.block_tokens,
+                        "block-keyed child must share its first block"
+                    );
+                    if common < self.nodes[child].edge.len() {
+                        self.split(child, common);
+                    }
+                    // The matched blocks already exist: incoming copies
+                    // are duplicates — unless they are the *same* blocks
+                    // (the engine re-inserts a prompt whose prefix groups
+                    // alias what `match` returned; identity means there
+                    // is nothing to free).
+                    let n_common_blocks = common / self.block_tokens;
+                    let start = pos / self.block_tokens;
+                    let child_now = self.nodes[cur].children[key];
+                    for (i, g) in groups[start..start + n_common_blocks]
+                        .iter()
+                        .enumerate()
+                    {
+                        if self.nodes[child_now].groups.get(i) != Some(g) {
+                            dup.push(g.clone());
+                        }
+                    }
+                    let child = self.nodes[cur].children[key];
+                    self.nodes[child].last_access = now;
+                    cur = child;
+                    pos += common;
+                }
+            }
+        }
+        dup
+    }
+
+    /// Longest common prefix of `edge` and `rest`, rounded down to a
+    /// block boundary.
+    fn common_block_prefix(&self, edge: &[u32], rest: &[u32]) -> usize {
+        let mut i = 0;
+        let max = edge.len().min(rest.len());
+        while i < max && edge[i] == rest[i] {
+            i += 1;
+        }
+        i - i % self.block_tokens
+    }
+
+    /// Split `node`'s edge at `at` tokens (block-aligned): the node keeps
+    /// the head; a new child gets the tail + original children.
+    fn split(&mut self, node: usize, at: usize) {
+        debug_assert!(at % self.block_tokens == 0 && at > 0);
+        let tail_edge = self.nodes[node].edge.split_off(at);
+        let tail_groups = self.nodes[node]
+            .groups
+            .split_off(at / self.block_tokens);
+        let tail_children = std::mem::take(&mut self.nodes[node].children);
+        let last_access = self.nodes[node].last_access;
+        let pins = self.nodes[node].pins;
+        let tail = self.alloc_node(Node {
+            edge: tail_edge,
+            groups: tail_groups,
+            children: tail_children,
+            parent: node,
+            last_access,
+            // A pin covers the whole edge (pins are taken on block-split
+            // boundaries), so both halves inherit it; unpin walks both.
+            pins,
+            valid: true,
+        });
+        // Fix the grandchildren's parent pointers.
+        let grandchildren: Vec<usize> =
+            self.nodes[tail].children.values().copied().collect();
+        for gc in grandchildren {
+            self.nodes[gc].parent = tail;
+        }
+        let tail_key =
+            self.nodes[tail].edge[..self.block_tokens].to_vec();
+        self.nodes[node].children.insert(tail_key, tail);
+    }
+
+    /// Longest indexed prefix of `tokens`; bumps last_access on the path.
+    pub fn match_prefix(&mut self, tokens: &[u32], now: f64) -> IndexMatch {
+        let mut cur = ROOT;
+        let mut pos = 0;
+        let mut out = IndexMatch::default();
+        self.nodes[ROOT].last_access = now;
+        loop {
+            if pos + self.block_tokens > tokens.len() {
+                break;
+            }
+            let key = &tokens[pos..pos + self.block_tokens];
+            let Some(&child) = self.nodes[cur].children.get(key) else {
+                break;
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            debug_assert!(common >= self.block_tokens);
+            self.nodes[child].last_access = now;
+            for g in &self.nodes[child].groups[..common / self.block_tokens] {
+                out.groups.push(g.clone());
+            }
+            pos += common;
+            out.tokens += common;
+            if common < self.nodes[child].edge.len() {
+                break; // partial edge match ends the walk
+            }
+            cur = child;
+        }
+        out
+    }
+
+    /// Pin the matched prefix of `tokens` against eviction/swap/expiry.
+    /// Returns the pinned length in tokens; pass the same slice to
+    /// [`Self::unpin`] when the request retires.
+    pub fn pin(&mut self, tokens: &[u32]) -> usize {
+        self.walk_path(tokens, |n| n.pins += 1)
+    }
+
+    /// Release a pin taken by [`Self::pin`] on the same token sequence.
+    pub fn unpin(&mut self, tokens: &[u32]) -> usize {
+        self.walk_path(tokens, |n| {
+            debug_assert!(n.pins > 0, "unpin without pin");
+            n.pins = n.pins.saturating_sub(1);
+        })
+    }
+
+    /// Walk the matched path applying `f` to each fully-matched node,
+    /// splitting a final partially-matched edge so pin boundaries always
+    /// land on node boundaries. Returns matched tokens.
+    fn walk_path<F: FnMut(&mut Node)>(&mut self, tokens: &[u32], mut f: F)
+                                      -> usize {
+        let mut cur = ROOT;
+        let mut pos = 0;
+        loop {
+            if pos + self.block_tokens > tokens.len() {
+                break;
+            }
+            let key = &tokens[pos..pos + self.block_tokens];
+            let Some(&child) = self.nodes[cur].children.get(key) else {
+                break;
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            debug_assert!(common >= self.block_tokens);
+            if common < self.nodes[child].edge.len() {
+                // Align the node boundary to the matched span so `f`
+                // applies to exactly the in-use blocks.
+                self.split(child, common);
+            }
+            f(&mut self.nodes[child]);
+            pos += common;
+            cur = child;
+        }
+        pos
+    }
+
+    fn subtree_pinned(&self, node: usize) -> bool {
+        if self.nodes[node].pins > 0 {
+            return true;
+        }
+        self.nodes[node]
+            .children
+            .values()
+            .any(|&c| self.subtree_pinned(c))
+    }
+
+    /// Delete the exact prefix `tokens` and everything below it. Returns
+    /// the freed block addresses.
+    pub fn delete(&mut self, tokens: &[u32]) -> Vec<BlockAddr> {
+        let usable = self.usable_len(tokens.len());
+        let tokens = &tokens[..usable];
+        // Walk to the node whose path equals `tokens` (may end mid-edge).
+        let mut cur = ROOT;
+        let mut pos = 0;
+        while pos < usable {
+            let key = &tokens[pos..pos + self.block_tokens];
+            let Some(&child) = self.nodes[cur].children.get(key) else {
+                return vec![];
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            debug_assert!(common >= self.block_tokens);
+            pos += common;
+            if common < self.nodes[child].edge.len() {
+                if pos < usable {
+                    return vec![]; // diverged: prefix not present
+                }
+                // Ends mid-edge: drop the tail blocks of this edge + subtree.
+                let mut freed = vec![];
+                let tail_groups = self.nodes[child]
+                    .groups
+                    .split_off(common / self.block_tokens);
+                self.nodes[child].edge.truncate(common);
+                self.token_blocks -= tail_groups.len();
+                for g in tail_groups {
+                    freed.extend(g);
+                }
+                let grandchildren: Vec<usize> =
+                    self.nodes[child].children.values().copied().collect();
+                self.nodes[child].children.clear();
+                for gc in grandchildren {
+                    self.drop_subtree(gc, &mut freed);
+                }
+                return freed;
+            }
+            cur = child;
+        }
+        if cur == ROOT {
+            return vec![];
+        }
+        let mut freed = vec![];
+        let parent = self.nodes[cur].parent;
+        let key = self.nodes[cur].edge[..self.block_tokens].to_vec();
+        self.nodes[parent].children.remove(&key);
+        self.drop_subtree(cur, &mut freed);
+        freed
+    }
+
+    fn drop_subtree(&mut self, node: usize, freed: &mut Vec<BlockAddr>) {
+        let children: Vec<usize> =
+            self.nodes[node].children.values().copied().collect();
+        for c in children {
+            self.drop_subtree(c, freed);
+        }
+        self.token_blocks -= self.nodes[node].groups.len();
+        for g in std::mem::take(&mut self.nodes[node].groups) {
+            freed.extend(g);
+        }
+        self.release_node(node);
+    }
+
+    /// Evict at least `want_token_blocks` token-blocks, oldest leaves
+    /// first (whole-leaf granularity). Returns freed addresses; may free
+    /// fewer than requested if the tree runs dry.
+    pub fn evict_lru(&mut self, want_token_blocks: usize) -> Vec<BlockAddr> {
+        let mut freed = vec![];
+        let mut freed_blocks = 0;
+        while freed_blocks < want_token_blocks {
+            // Oldest leaf (no children, valid, not root).
+            let mut best: Option<(usize, f64)> = None;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if i == ROOT || !n.valid || !n.children.is_empty()
+                    || n.pins > 0
+                {
+                    continue;
+                }
+                if best.map(|(_, t)| n.last_access < t).unwrap_or(true) {
+                    best = Some((i, n.last_access));
+                }
+            }
+            let Some((leaf, _)) = best else { break };
+            freed_blocks += self.nodes[leaf].groups.len();
+            let parent = self.nodes[leaf].parent;
+            let key = self.nodes[leaf].edge[..self.block_tokens].to_vec();
+            self.nodes[parent].children.remove(&key);
+            self.token_blocks -= self.nodes[leaf].groups.len();
+            for g in std::mem::take(&mut self.nodes[leaf].groups) {
+                freed.extend(g);
+            }
+            self.release_node(leaf);
+        }
+        freed
+    }
+
+    /// Addresses of the least-recently-used leaf groups satisfying
+    /// `filter`, up to `want_token_blocks` groups — *without* removing
+    /// them from the index. Used by `swap_out` to pick HBM victims whose
+    /// data moves to DRAM (the index is then remapped, not pruned).
+    pub fn lru_addrs<F: Fn(&BlockAddr) -> bool>(
+        &self,
+        want_token_blocks: usize,
+        filter: F,
+    ) -> Vec<BlockAddr> {
+        let mut leaves: Vec<(f64, usize)> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, n)| n.valid && n.children.is_empty() && n.pins == 0)
+            .map(|(i, n)| (n.last_access, i))
+            .collect();
+        leaves.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out = vec![];
+        let mut groups_taken = 0;
+        'outer: for (_, leaf) in leaves {
+            // Walk trailing groups first (deepest data is coldest).
+            for g in self.nodes[leaf].groups.iter().rev() {
+                if groups_taken >= want_token_blocks {
+                    break 'outer;
+                }
+                let addrs: Vec<BlockAddr> =
+                    g.iter().copied().filter(|a| filter(a)).collect();
+                if addrs.len() == g.len() {
+                    out.extend(addrs);
+                    groups_taken += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Drop every node idle longer than the TTL. Returns freed addresses.
+    pub fn expire(&mut self, now: f64) -> Vec<BlockAddr> {
+        if self.ttl <= 0.0 {
+            return vec![];
+        }
+        let mut freed = vec![];
+        // Repeat until fixpoint: expiring a parent requires dropping its
+        // subtree; we conservatively expire stale *subtrees* whose root's
+        // entire lineage is stale (children may be fresher than parents
+        // since match bumps the whole path).
+        loop {
+            let mut victim = None;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if i == ROOT || !n.valid {
+                    continue;
+                }
+                if now - n.last_access > self.ttl && !self.subtree_pinned(i) {
+                    victim = Some(i);
+                    break;
+                }
+            }
+            let Some(v) = victim else { break };
+            let parent = self.nodes[v].parent;
+            let key = self.nodes[v].edge[..self.block_tokens].to_vec();
+            self.nodes[parent].children.remove(&key);
+            self.drop_subtree(v, &mut freed);
+        }
+        freed
+    }
+
+    /// Rewrite addresses after a swap (old -> new), e.g. HBM -> DRAM.
+    pub fn remap(&mut self, map: &HashMap<BlockAddr, BlockAddr>) {
+        for n in &mut self.nodes {
+            if !n.valid {
+                continue;
+            }
+            for g in &mut n.groups {
+                for a in g.iter_mut() {
+                    if let Some(new) = map.get(a) {
+                        *a = *new;
+                    }
+                }
+            }
+        }
+    }
+
+    /// All addresses currently referenced (diagnostics / leak checks).
+    pub fn all_addrs(&self) -> Vec<BlockAddr> {
+        let mut out = vec![];
+        for n in self.nodes.iter().filter(|n| n.valid) {
+            for g in &n.groups {
+                out.extend(g.iter().copied());
+            }
+        }
+        out
+    }
+
+    /// Live node count (excluding root).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().skip(1).filter(|n| n.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mempool::block::{InstanceId, Tier};
+    use crate::util::proptest::proptest;
+
+    const BT: usize = 4; // block_tokens for tests
+
+    fn addr(i: u32) -> BlockAddr {
+        BlockAddr::new(InstanceId(0), Tier::Hbm, i)
+    }
+
+    /// groups for n token-blocks starting at base, 1 addr per group
+    fn groups(base: u32, n: usize) -> Vec<BlockGroup> {
+        (0..n as u32).map(|i| vec![addr(base + i)]).collect()
+    }
+
+    fn seq(xs: &[u32]) -> Vec<u32> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn insert_then_match_exact() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let toks: Vec<u32> = (0..12).collect();
+        let dup = idx.insert(&toks, &groups(0, 3), 1.0);
+        assert!(dup.is_empty());
+        let m = idx.match_prefix(&toks, 2.0);
+        assert_eq!(m.tokens, 12);
+        assert_eq!(m.groups, groups(0, 3));
+        assert_eq!(idx.total_token_blocks(), 3);
+    }
+
+    #[test]
+    fn match_respects_block_granularity() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let toks: Vec<u32> = (0..8).collect();
+        idx.insert(&toks, &groups(0, 2), 1.0);
+        // Query shares only 6 tokens -> matched must round down to 4.
+        let mut q = toks.clone();
+        q[6] = 999;
+        let m = idx.match_prefix(&q, 2.0);
+        assert_eq!(m.tokens, 4);
+        assert_eq!(m.groups, groups(0, 1));
+    }
+
+    #[test]
+    fn partial_tail_tokens_ignored_on_insert() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let toks: Vec<u32> = (0..10).collect(); // 2 blocks + 2 stray tokens
+        idx.insert(&toks, &groups(0, 2), 1.0);
+        assert_eq!(idx.total_token_blocks(), 2);
+        let m = idx.match_prefix(&toks, 2.0);
+        assert_eq!(m.tokens, 8);
+    }
+
+    #[test]
+    fn shared_prefix_splits_node() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let a: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let b: Vec<u32> = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        idx.insert(&a, &groups(0, 2), 1.0);
+        let dup = idx.insert(&b, &groups(10, 2), 2.0);
+        // First block of b duplicates a's first block.
+        assert_eq!(dup, vec![vec![addr(10)]]);
+        assert_eq!(idx.total_token_blocks(), 3);
+        let ma = idx.match_prefix(&a, 3.0);
+        assert_eq!(ma.groups, groups(0, 2));
+        let mb = idx.match_prefix(&b, 3.0);
+        assert_eq!(mb.groups, vec![vec![addr(0)], vec![addr(11)]]);
+    }
+
+    #[test]
+    fn duplicate_insert_reports_all_groups() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let toks: Vec<u32> = (0..8).collect();
+        idx.insert(&toks, &groups(0, 2), 1.0);
+        let dup = idx.insert(&toks, &groups(50, 2), 2.0);
+        assert_eq!(dup, groups(50, 2));
+        assert_eq!(idx.total_token_blocks(), 2);
+    }
+
+    #[test]
+    fn extension_insert_reuses_prefix() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.insert(&seq(&[1, 2, 3, 4]), &groups(0, 1), 1.0);
+        // Extend with 2 blocks; first duplicates.
+        let dup = idx.insert(&seq(&[1, 2, 3, 4, 5, 6, 7, 8]), &groups(10, 2), 2.0);
+        assert_eq!(dup, vec![vec![addr(10)]]);
+        let m = idx.match_prefix(&seq(&[1, 2, 3, 4, 5, 6, 7, 8]), 3.0);
+        assert_eq!(m.groups, vec![vec![addr(0)], vec![addr(11)]]);
+    }
+
+    #[test]
+    fn delete_exact_and_subtree() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let a: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let b: Vec<u32> = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        idx.insert(&a, &groups(0, 2), 1.0);
+        idx.insert(&b, &groups(10, 2), 1.0);
+        // Delete prefix [1,2,3,4]: everything below goes too.
+        let freed = idx.delete(&seq(&[1, 2, 3, 4]));
+        let mut f = freed.clone();
+        f.sort();
+        assert_eq!(f, vec![addr(0), addr(1), addr(11)]);
+        assert!(idx.is_empty());
+        assert_eq!(idx.match_prefix(&a, 2.0).tokens, 0);
+    }
+
+    #[test]
+    fn delete_missing_is_noop() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.insert(&seq(&[1, 2, 3, 4]), &groups(0, 1), 1.0);
+        assert!(idx.delete(&seq(&[9, 9, 9, 9])).is_empty());
+        assert_eq!(idx.total_token_blocks(), 1);
+    }
+
+    #[test]
+    fn evict_lru_takes_oldest_leaf() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.insert(&seq(&[1, 1, 1, 1]), &groups(0, 1), 1.0);
+        idx.insert(&seq(&[2, 2, 2, 2]), &groups(1, 1), 2.0);
+        idx.insert(&seq(&[3, 3, 3, 3]), &groups(2, 1), 3.0);
+        // Touch the oldest so the second-oldest becomes the victim.
+        idx.match_prefix(&seq(&[1, 1, 1, 1]), 4.0);
+        let freed = idx.evict_lru(1);
+        assert_eq!(freed, vec![addr(1)]);
+        assert_eq!(idx.total_token_blocks(), 2);
+    }
+
+    #[test]
+    fn evict_leaf_before_parent() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let long: Vec<u32> = (0..8).collect();
+        idx.insert(&long, &groups(0, 2), 1.0);
+        let short: Vec<u32> = (0..4).collect();
+        // Split so parent=block0, leaf=block1.
+        idx.insert(&seq(&[0, 1, 2, 3, 9, 9, 9, 9]), &groups(10, 2), 2.0);
+        let freed = idx.evict_lru(1);
+        // Oldest leaf is the tail of `long` (last_access 1.0), not the
+        // shared parent block.
+        assert_eq!(freed, vec![addr(1)]);
+        assert_eq!(idx.match_prefix(&short, 3.0).tokens, 4);
+    }
+
+    #[test]
+    fn ttl_expiry() {
+        let mut idx = RadixIndex::new(BT, 10.0);
+        idx.insert(&seq(&[1, 1, 1, 1]), &groups(0, 1), 0.0);
+        idx.insert(&seq(&[2, 2, 2, 2]), &groups(1, 1), 5.0);
+        let freed = idx.expire(12.0);
+        assert_eq!(freed, vec![addr(0)]);
+        assert_eq!(idx.total_token_blocks(), 1);
+        assert_eq!(idx.match_prefix(&seq(&[2, 2, 2, 2]), 12.0).tokens, 4);
+    }
+
+    #[test]
+    fn remap_rewrites_addrs() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.insert(&seq(&[1, 2, 3, 4]), &groups(0, 1), 1.0);
+        let mut map = HashMap::new();
+        map.insert(addr(0), BlockAddr::new(InstanceId(0), Tier::Dram, 7));
+        idx.remap(&map);
+        let m = idx.match_prefix(&seq(&[1, 2, 3, 4]), 2.0);
+        assert_eq!(m.groups[0][0].tier, Tier::Dram);
+        assert_eq!(m.groups[0][0].index, 7);
+    }
+
+    #[test]
+    fn pinned_leaf_not_evicted() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.insert(&seq(&[1, 1, 1, 1]), &groups(0, 1), 1.0);
+        idx.insert(&seq(&[2, 2, 2, 2]), &groups(1, 1), 2.0);
+        assert_eq!(idx.pin(&seq(&[1, 1, 1, 1])), 4);
+        // Oldest leaf is pinned -> second-oldest goes first.
+        assert_eq!(idx.evict_lru(1), vec![addr(1)]);
+        // Nothing else evictable while pinned.
+        assert!(idx.evict_lru(1).is_empty());
+        idx.unpin(&seq(&[1, 1, 1, 1]));
+        assert_eq!(idx.evict_lru(1), vec![addr(0)]);
+    }
+
+    #[test]
+    fn pin_survives_split_and_unpins_cleanly() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let long: Vec<u32> = (0..8).collect();
+        idx.insert(&long, &groups(0, 2), 1.0);
+        idx.pin(&long);
+        // A diverging insert splits the pinned node.
+        idx.insert(&seq(&[0, 1, 2, 3, 9, 9, 9, 9]), &groups(10, 2), 2.0);
+        // Both halves of `long` remain protected.
+        let freed = idx.evict_lru(10);
+        assert_eq!(freed, vec![addr(11)]); // only the diverging leaf
+        idx.unpin(&long);
+        let freed2 = idx.evict_lru(10);
+        assert_eq!(freed2.len(), 2, "{freed2:?}");
+    }
+
+    #[test]
+    fn pin_partial_edge_splits_for_exact_coverage() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let long: Vec<u32> = (0..12).collect();
+        idx.insert(&long, &groups(0, 3), 1.0);
+        // Pin only the first 2 blocks.
+        assert_eq!(idx.pin(&long[..8]), 8);
+        // The unpinned tail block is evictable; the pinned head is not.
+        let freed = idx.evict_lru(5);
+        assert_eq!(freed, vec![addr(2)]);
+        idx.unpin(&long[..8]);
+        assert_eq!(idx.evict_lru(5).len(), 2);
+    }
+
+    #[test]
+    fn pinned_nodes_skip_ttl_and_swap_selection() {
+        let mut idx = RadixIndex::new(BT, 10.0);
+        idx.insert(&seq(&[1, 1, 1, 1]), &groups(0, 1), 0.0);
+        idx.pin(&seq(&[1, 1, 1, 1]));
+        assert!(idx.expire(100.0).is_empty());
+        assert!(idx.lru_addrs(5, |_| true).is_empty());
+        idx.unpin(&seq(&[1, 1, 1, 1]));
+        assert_eq!(idx.expire(100.0), vec![addr(0)]);
+    }
+
+    #[test]
+    fn identity_insert_reports_no_dup() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let toks: Vec<u32> = (0..8).collect();
+        idx.insert(&toks, &groups(0, 2), 1.0);
+        // Re-insert the exact same groups (the engine retire path after a
+        // full cache hit): nothing is duplicate, nothing to free.
+        let dup = idx.insert(&toks, &groups(0, 2), 2.0);
+        assert!(dup.is_empty());
+        // Mixed: first group aliases, second is a fresh copy.
+        let mixed = vec![vec![addr(0)], vec![addr(50)]];
+        let dup2 = idx.insert(&toks, &mixed, 3.0);
+        assert_eq!(dup2, vec![vec![addr(50)]]);
+        assert_eq!(idx.total_token_blocks(), 2);
+    }
+
+    #[test]
+    fn node_reuse_after_delete() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        for round in 0..10 {
+            let t: Vec<u32> = (0..4).map(|i| i + round).collect();
+            idx.insert(&t, &groups(round, 1), round as f64);
+            idx.delete(&t);
+        }
+        assert!(idx.nodes.len() < 6, "nodes leaked: {}", idx.nodes.len());
+    }
+
+    /// Executable-spec model: a map from every block-aligned prefix to
+    /// its first-insertion group. With children keyed by whole blocks,
+    /// the tree accepts every new block whose parent prefix exists —
+    /// exactly a prefix map.
+    #[derive(Default)]
+    struct Model {
+        /// accepted prefix (ending on a block boundary) -> its group
+        addrs: HashMap<Vec<u32>, BlockGroup>,
+    }
+
+    impl Model {
+        fn insert(&mut self, toks: &[u32], gs: &[BlockGroup]) {
+            let mut p: Vec<u32> = vec![];
+            for (i, grp) in gs.iter().enumerate() {
+                p.extend(&toks[i * BT..(i + 1) * BT]);
+                self.addrs.entry(p.clone()).or_insert_with(|| grp.clone());
+            }
+        }
+
+        fn match_prefix(&self, toks: &[u32]) -> (usize, Vec<BlockGroup>) {
+            let mut p: Vec<u32> = vec![];
+            let mut out = vec![];
+            for i in 0..toks.len() / BT {
+                let b = &toks[i * BT..(i + 1) * BT];
+                let mut q = p.clone();
+                q.extend(b);
+                match self.addrs.get(&q) {
+                    Some(grp) => {
+                        out.push(grp.clone());
+                        p = q;
+                    }
+                    None => break,
+                }
+            }
+            (p.len(), out)
+        }
+    }
+
+    #[test]
+    fn prop_matches_naive_model() {
+        proptest(60, |g| {
+            let mut idx = RadixIndex::new(BT, 0.0);
+            let mut model = Model::default();
+            let mut next_addr = 0u32;
+            let mut now = 0.0;
+            for _ in 0..g.usize(1, 25) {
+                now += 1.0;
+                // Small alphabet to force shared prefixes and splits.
+                let len = g.usize(0, 6) * BT + g.usize(0, BT - 1);
+                let toks = g.vec_u32(len, 0, 3);
+                if g.bool() {
+                    let nb = idx.usable_len(toks.len()) / BT;
+                    let gs: Vec<BlockGroup> = (0..nb)
+                        .map(|i| vec![addr(next_addr + i as u32)])
+                        .collect();
+                    next_addr += nb as u32;
+                    idx.insert(&toks, &gs, now);
+                    model.insert(&toks, &gs);
+                } else {
+                    let m = idx.match_prefix(&toks, now);
+                    let (expect, expect_groups) = model.match_prefix(&toks);
+                    assert_eq!(m.tokens, expect, "toks={toks:?}");
+                    assert_eq!(m.groups, expect_groups);
+                }
+                assert_eq!(idx.total_token_blocks(), model.addrs.len());
+            }
+        });
+    }
+
+    /// Eviction + insert interleaving never corrupts counters or leaks.
+    #[test]
+    fn prop_evict_consistency() {
+        proptest(40, |g| {
+            let mut idx = RadixIndex::new(BT, 0.0);
+            let mut next_addr = 0u32;
+            let mut live: std::collections::HashSet<BlockAddr> =
+                Default::default();
+            let mut now = 0.0;
+            for _ in 0..g.usize(1, 40) {
+                now += 1.0;
+                if g.bool() {
+                    let len = g.usize(1, 5) * BT;
+                    let toks = g.vec_u32(len, 0, 4);
+                    let nb = len / BT;
+                    let gs: Vec<BlockGroup> = (0..nb)
+                        .map(|i| vec![addr(next_addr + i as u32)])
+                        .collect();
+                    next_addr += nb as u32;
+                    for grp in &gs {
+                        live.insert(grp[0]);
+                    }
+                    for grp in idx.insert(&toks, &gs, now) {
+                        for a in grp {
+                            live.remove(&a);
+                        }
+                    }
+                } else {
+                    for a in idx.evict_lru(g.usize(1, 3)) {
+                        assert!(live.remove(&a), "double-evict {a}");
+                    }
+                }
+                let mut in_tree = idx.all_addrs();
+                in_tree.sort();
+                let mut expect: Vec<BlockAddr> =
+                    live.iter().copied().collect();
+                expect.sort();
+                assert_eq!(in_tree, expect, "tree/model addr divergence");
+                assert_eq!(idx.total_token_blocks(), in_tree.len());
+            }
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! MemPool — the paper's elastic memory pool (§4).
+//!
+//! One `MemPool` runs inside every inference instance and manages that
+//! instance's memory across two tiers (HBM-sim and DRAM-sim), both backed
+//! by real host arenas. It owns:
+//!
+//! * a fixed-size block allocator per tier ([`allocator`], [`tier`]);
+//! * the token-indexed radix tree mapping prompt prefixes to historical
+//!   KV cache blocks ([`index`]), with TTL + LRU leaf eviction;
+//! * the Table-1 API facade ([`api`]): `alloc_mem`, `free_mem`, `insert`,
+//!   `match_prefix`, `delete`, `swap_out`, `swap_in`;
+//! * the distributed-transfer protocol datatypes ([`transfer`]) used by
+//!   `transfer` / `transfer_with_insert` over the [`crate::net`] fabric.
+
+pub mod allocator;
+pub mod api;
+pub mod block;
+pub mod index;
+pub mod tier;
+pub mod transfer;
+
+pub use api::{MatchResult, MemPool, PoolError, PoolStats};
+pub use block::{BlockAddr, BlockGeometry, InstanceId, Tier};
+pub use index::RadixIndex;
+pub use transfer::{TransferFlags, TransferMode, TransferRequest};

@@ -1,0 +1,170 @@
+//! Distributed-transfer datatypes (paper §4.3, Fig 2 & Fig 5).
+//!
+//! The actual 3-step protocol (allocation → transmission → insertion)
+//! executes over [`crate::net`]'s fabric between instance threads; this
+//! module defines the request/flag types plus the call-count/byte math
+//! that drives the by-layer / by-request / by-request-agg comparison
+//! (paper Fig 12) and the block-aggregation study (Fig 11).
+
+use super::block::{BlockAddr, BlockGeometry, InstanceId, Tier};
+
+/// KV transfer granularity from prefill to decode (paper Fig 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransferMode {
+    /// Send each layer's KV as soon as that layer finishes prefill —
+    /// overlaps compute and communication (best at low load).
+    ByLayer,
+    /// Send everything after the prefill completes, discrete blocks.
+    ByRequest,
+    /// By-request over the aggregated huge-page layout — cuts network
+    /// calls by 2·layers (the paper's optimization; best at high load).
+    ByRequestAgg,
+}
+
+impl TransferMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "by_layer" => Some(TransferMode::ByLayer),
+            "by_request" | "by_req" => Some(TransferMode::ByRequest),
+            "by_request_agg" | "by_req_agg" => Some(TransferMode::ByRequestAgg),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferMode::ByLayer => "by_layer",
+            TransferMode::ByRequest => "by_request",
+            TransferMode::ByRequestAgg => "by_request_agg",
+        }
+    }
+
+    /// Network API calls needed to ship `tokens` tokens of KV.
+    ///
+    /// Paper §5.2: with the discrete layout the number of calls equals the
+    /// number of discrete blocks (2·L per token-block) for *both* by-layer
+    /// and by-request; aggregation reduces it to one call per token-block
+    /// but only composes with by-request (by-layer inherently needs ≥ L
+    /// calls since layers finish at different times).
+    pub fn network_calls(self, geom: &BlockGeometry, tokens: usize) -> usize {
+        let tb = geom.token_blocks(tokens);
+        match self {
+            TransferMode::ByLayer | TransferMode::ByRequest => {
+                tb * 2 * geom.layers
+            }
+            TransferMode::ByRequestAgg => tb,
+        }
+    }
+
+    /// Bytes on the wire (same for all modes — payload is the KV cache).
+    pub fn network_bytes(self, geom: &BlockGeometry, tokens: usize) -> usize {
+        geom.token_blocks(tokens) * geom.block_tokens
+            * geom.floats_per_token() * 4
+    }
+
+    /// Can communication overlap the prefill compute? (By-layer sends
+    /// layer i while layer i+1 computes.)
+    pub fn overlaps_compute(self) -> bool {
+        matches!(self, TransferMode::ByLayer)
+    }
+
+    /// Does this mode require the aggregated block layout?
+    pub fn requires_aggregated(self) -> bool {
+        matches!(self, TransferMode::ByRequestAgg)
+    }
+}
+
+/// Flags controlling receiver-side behaviour (Table 1 "flags").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransferFlags {
+    /// Receiver inserts (tokens → KV) into its local index after landing
+    /// the data — this is `transfer_with_insert`.
+    pub insert: bool,
+    /// Receiver allocates destination blocks on demand (no dstAddrList).
+    pub on_demand_alloc: bool,
+    /// Tier the receiver should allocate in.
+    pub dst_tier: Tier,
+}
+
+impl Default for Tier {
+    fn default() -> Self {
+        Tier::Hbm
+    }
+}
+
+/// A transfer job: the sender side of `transfer` /
+/// `transfer_with_insert`. `private` carries opaque engine metadata
+/// (request id, sampling params, prompt tokens — paper §5.1a).
+#[derive(Clone, Debug)]
+pub struct TransferRequest {
+    pub dst: InstanceId,
+    /// Prompt tokens covered by the payload (needed for insert).
+    pub tokens: Vec<u32>,
+    pub src_addrs: Vec<BlockAddr>,
+    /// Pre-negotiated destination (skips the allocation round-trip —
+    /// used by layer-by-layer streaming, paper §4.3).
+    pub dst_addrs: Option<Vec<BlockAddr>>,
+    pub flags: TransferFlags,
+    pub private: Vec<u8>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(aggregated: bool) -> BlockGeometry {
+        BlockGeometry {
+            block_tokens: 16,
+            layers: 4,
+            n_heads: 8,
+            head_dim: 32,
+            aggregated,
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [
+            TransferMode::ByLayer,
+            TransferMode::ByRequest,
+            TransferMode::ByRequestAgg,
+        ] {
+            assert_eq!(TransferMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(TransferMode::parse("nope"), None);
+    }
+
+    #[test]
+    fn agg_cuts_calls_2l_times() {
+        let g = geom(true);
+        let calls_disc = TransferMode::ByRequest.network_calls(&g, 1024);
+        let calls_agg = TransferMode::ByRequestAgg.network_calls(&g, 1024);
+        assert_eq!(calls_disc, calls_agg * 2 * g.layers);
+        assert_eq!(calls_agg, 64); // 1024/16 token-blocks
+    }
+
+    #[test]
+    fn by_layer_same_calls_as_by_request() {
+        let g = geom(false);
+        assert_eq!(
+            TransferMode::ByLayer.network_calls(&g, 512),
+            TransferMode::ByRequest.network_calls(&g, 512)
+        );
+    }
+
+    #[test]
+    fn bytes_are_mode_independent() {
+        let g = geom(true);
+        let b1 = TransferMode::ByLayer.network_bytes(&g, 100);
+        let b2 = TransferMode::ByRequestAgg.network_bytes(&g, 100);
+        assert_eq!(b1, b2);
+        // 7 token-blocks * 16 tokens * 2*4*8*32 floats * 4 bytes
+        assert_eq!(b1, 7 * 16 * 2048 * 4);
+    }
+
+    #[test]
+    fn overlap_only_by_layer() {
+        assert!(TransferMode::ByLayer.overlaps_compute());
+        assert!(!TransferMode::ByRequestAgg.overlaps_compute());
+    }
+}

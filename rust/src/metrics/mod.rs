@@ -1,0 +1,248 @@
+//! Serving metrics: per-request lifecycle records and aggregated digests.
+//!
+//! The paper reports TTFT (time-to-first-token), JCT (job completion
+//! time), and TPOT (time-per-output-token); Fig 8/15 report mean and P99.
+//! All times are f64 seconds on whatever clock the caller uses (real or
+//! virtual), so the same code serves both the live server and the
+//! discrete-event simulator.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::Samples;
+
+/// One request's lifecycle timestamps (seconds, caller's clock).
+#[derive(Clone, Debug, Default)]
+pub struct RequestRecord {
+    pub request_id: u64,
+    pub session_id: u64,
+    pub arrival: f64,
+    pub scheduled: f64,
+    pub first_token: f64,
+    pub completion: f64,
+    pub prompt_tokens: usize,
+    pub cached_tokens: usize,
+    pub output_tokens: usize,
+    /// Which instance ran prefill / decode (same for colocated).
+    pub prefill_instance: u32,
+    pub decode_instance: u32,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    pub fn jct(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    /// Time per output token over the decode stretch. The first token is
+    /// produced by prefill, so TPOT divides by (output_tokens - 1).
+    pub fn tpot(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            return 0.0;
+        }
+        (self.completion - self.first_token) / (self.output_tokens - 1) as f64
+    }
+
+    pub fn queueing(&self) -> f64 {
+        self.scheduled - self.arrival
+    }
+
+    pub fn cached_ratio(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            return 0.0;
+        }
+        self.cached_tokens as f64 / self.prompt_tokens as f64
+    }
+}
+
+/// Aggregate over completed requests + system counters.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub records: Vec<RequestRecord>,
+    pub counters: BTreeMap<String, u64>,
+}
+
+/// The digest the benches print: (mean, p50, p99, max) per metric.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Digest {
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Metrics {
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn bump(&mut self, counter: &str, by: u64) {
+        *self.counters.entry(counter.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        self.records.extend(other.records.iter().cloned());
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    fn digest_of<F: Fn(&RequestRecord) -> f64>(&self, f: F) -> Digest {
+        let mut s = Samples::new();
+        for r in &self.records {
+            s.push(f(r));
+        }
+        if s.is_empty() {
+            return Digest::default();
+        }
+        let (mean, p50, p99, max) = s.digest();
+        Digest {
+            mean,
+            p50,
+            p99,
+            max,
+            n: s.len(),
+        }
+    }
+
+    pub fn ttft(&self) -> Digest {
+        self.digest_of(|r| r.ttft())
+    }
+
+    pub fn jct(&self) -> Digest {
+        self.digest_of(|r| r.jct())
+    }
+
+    pub fn tpot(&self) -> Digest {
+        self.digest_of(|r| r.tpot())
+    }
+
+    pub fn queueing(&self) -> Digest {
+        self.digest_of(|r| r.queueing())
+    }
+
+    pub fn mean_cached_ratio(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.cached_ratio()).sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    /// Completed requests per second over the observed span.
+    pub fn throughput(&self) -> f64 {
+        if self.records.len() < 2 {
+            return 0.0;
+        }
+        let t0 = self
+            .records
+            .iter()
+            .map(|r| r.arrival)
+            .fold(f64::INFINITY, f64::min);
+        let t1 = self
+            .records
+            .iter()
+            .map(|r| r.completion)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if t1 <= t0 {
+            return 0.0;
+        }
+        self.records.len() as f64 / (t1 - t0)
+    }
+
+    pub fn summary_line(&self) -> String {
+        let jct = self.jct();
+        let ttft = self.ttft();
+        let tpot = self.tpot();
+        format!(
+            "n={} jct(mean={:.3}s p99={:.3}s) ttft(mean={:.3}s p99={:.3}s) \
+             tpot(mean={:.4}s) cached_ratio={:.2}",
+            self.records.len(),
+            jct.mean,
+            jct.p99,
+            ttft.mean,
+            ttft.p99,
+            tpot.mean,
+            self.mean_cached_ratio()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, first: f64, done: f64, out: usize) -> RequestRecord {
+        RequestRecord {
+            arrival,
+            scheduled: arrival,
+            first_token: first,
+            completion: done,
+            prompt_tokens: 100,
+            cached_tokens: 50,
+            output_tokens: out,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn per_request_metrics() {
+        let r = rec(1.0, 1.5, 3.5, 21);
+        assert!((r.ttft() - 0.5).abs() < 1e-12);
+        assert!((r.jct() - 2.5).abs() < 1e-12);
+        assert!((r.tpot() - 0.1).abs() < 1e-12);
+        assert!((r.cached_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_single_token_is_zero() {
+        assert_eq!(rec(0.0, 1.0, 1.0, 1).tpot(), 0.0);
+    }
+
+    #[test]
+    fn digests() {
+        let mut m = Metrics::default();
+        for i in 0..100 {
+            m.push(rec(0.0, 1.0 + i as f64 * 0.01, 2.0, 2));
+        }
+        let d = m.ttft();
+        assert_eq!(d.n, 100);
+        assert!((d.mean - 1.495).abs() < 1e-9, "{}", d.mean);
+        assert!(d.p99 >= 1.97);
+    }
+
+    #[test]
+    fn counters_and_merge() {
+        let mut a = Metrics::default();
+        a.bump("cache_hit_tokens", 5);
+        let mut b = Metrics::default();
+        b.bump("cache_hit_tokens", 7);
+        b.push(rec(0.0, 1.0, 2.0, 3));
+        a.merge(&b);
+        assert_eq!(a.counter("cache_hit_tokens"), 12);
+        assert_eq!(a.records.len(), 1);
+        assert_eq!(a.counter("missing"), 0);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut m = Metrics::default();
+        m.push(rec(0.0, 0.5, 1.0, 2));
+        m.push(rec(1.0, 1.5, 2.0, 2));
+        assert!((m.throughput() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_digests_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.ttft().n, 0);
+        assert_eq!(m.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,264 @@
+//! Real-time message fabric: std::mpsc channels between instance threads
+//! with the [`LinkModel`] applied as sender-side blocking (synchronous
+//! NCCL-send semantics, which is also what the paper implements — §7).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::mempool::InstanceId;
+use crate::net::link::LinkModel;
+
+/// Messages that carry bulk payload report `(bytes, n_calls, src_dram,
+/// dst_dram)`; control messages return `None` and pay only the control
+/// latency.
+pub trait WireCost {
+    fn wire_cost(&self) -> Option<(usize, usize, bool, bool)>;
+}
+
+/// Aggregate transport statistics (drives Fig 11/12 reporting).
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    pub messages: u64,
+    pub payload_bytes: u64,
+    pub api_calls: u64,
+    pub busy_seconds: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum NetError {
+    #[error("unknown destination {0}")]
+    Unknown(InstanceId),
+    #[error("destination {0} disconnected")]
+    Disconnected(InstanceId),
+    #[error("receive timeout")]
+    Timeout,
+}
+
+struct Shared<M> {
+    senders: Mutex<HashMap<InstanceId, Sender<(InstanceId, M)>>>,
+    link: LinkModel,
+    stats: Mutex<NetStats>,
+    /// When false (tests/CI), the sender does not actually sleep; the
+    /// modeled time is still accounted in stats.
+    real_sleep: bool,
+}
+
+/// Cloneable fabric handle.
+pub struct Fabric<M> {
+    shared: Arc<Shared<M>>,
+}
+
+impl<M> Clone for Fabric<M> {
+    fn clone(&self) -> Self {
+        Fabric {
+            shared: self.shared.clone(),
+        }
+    }
+}
+
+/// One instance's attachment: its inbox + a fabric handle for sending.
+pub struct Endpoint<M> {
+    pub id: InstanceId,
+    rx: Receiver<(InstanceId, M)>,
+    fabric: Fabric<M>,
+}
+
+impl<M: WireCost + Send + 'static> Fabric<M> {
+    pub fn new(link: LinkModel, real_sleep: bool) -> Self {
+        Fabric {
+            shared: Arc::new(Shared {
+                senders: Mutex::new(HashMap::new()),
+                link,
+                stats: Mutex::new(NetStats::default()),
+                real_sleep,
+            }),
+        }
+    }
+
+    /// Attach an instance; returns its endpoint (single consumer).
+    pub fn attach(&self, id: InstanceId) -> Endpoint<M> {
+        let (tx, rx) = channel();
+        self.shared.senders.lock().unwrap().insert(id, tx);
+        Endpoint {
+            id,
+            rx,
+            fabric: self.clone(),
+        }
+    }
+
+    /// Remove an instance (simulating failure — its inbox closes and
+    /// subsequent sends error out, which peers' timeouts surface).
+    pub fn detach(&self, id: InstanceId) {
+        self.shared.senders.lock().unwrap().remove(&id);
+    }
+
+    pub fn link(&self) -> &LinkModel {
+        &self.shared.link
+    }
+
+    pub fn stats(&self) -> NetStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Send with modeled wire time (blocking the caller, like a
+    /// synchronous NCCL send). Returns the modeled seconds.
+    pub fn send(&self, from: InstanceId, to: InstanceId, msg: M)
+                -> Result<f64, NetError> {
+        let t = match msg.wire_cost() {
+            Some((bytes, calls, src_dram, dst_dram)) => {
+                let t = self
+                    .shared
+                    .link
+                    .transfer_seconds(bytes, calls, src_dram, dst_dram);
+                let mut s = self.shared.stats.lock().unwrap();
+                s.payload_bytes += bytes as u64;
+                s.api_calls += calls as u64;
+                s.busy_seconds += t;
+                s.messages += 1;
+                t
+            }
+            None => {
+                let t = self.shared.link.control_latency_s();
+                let mut s = self.shared.stats.lock().unwrap();
+                s.messages += 1;
+                s.busy_seconds += t;
+                t
+            }
+        };
+        if self.shared.real_sleep && t > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(t));
+        }
+        let senders = self.shared.senders.lock().unwrap();
+        let tx = senders.get(&to).ok_or(NetError::Unknown(to))?;
+        tx.send((from, msg))
+            .map_err(|_| NetError::Disconnected(to))?;
+        Ok(t)
+    }
+}
+
+impl<M> Endpoint<M> {
+    /// Blocking receive.
+    pub fn recv(&self) -> Option<(InstanceId, M)> {
+        self.rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, d: Duration)
+                        -> Result<(InstanceId, M), NetError> {
+        self.rx.recv_timeout(d).map_err(|e| match e {
+            RecvTimeoutError::Timeout => NetError::Timeout,
+            RecvTimeoutError::Disconnected => NetError::Disconnected(self.id),
+        })
+    }
+
+    pub fn try_recv(&self) -> Option<(InstanceId, M)> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn fabric(&self) -> &Fabric<M> {
+        &self.fabric
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum TestMsg {
+        Ctl(u32),
+        Bulk(usize, usize), // bytes, calls
+    }
+
+    impl WireCost for TestMsg {
+        fn wire_cost(&self) -> Option<(usize, usize, bool, bool)> {
+            match self {
+                TestMsg::Ctl(_) => None,
+                TestMsg::Bulk(b, c) => Some((*b, *c, false, false)),
+            }
+        }
+    }
+
+    fn fabric() -> Fabric<TestMsg> {
+        Fabric::new(LinkModel::default(), false)
+    }
+
+    #[test]
+    fn point_to_point_delivery() {
+        let f = fabric();
+        let a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(7)).unwrap();
+        let (from, msg) = b.recv().unwrap();
+        assert_eq!(from, InstanceId(0));
+        assert_eq!(msg, TestMsg::Ctl(7));
+        drop(a);
+    }
+
+    #[test]
+    fn unknown_destination_errors() {
+        let f = fabric();
+        let _a = f.attach(InstanceId(0));
+        assert!(matches!(
+            f.send(InstanceId(0), InstanceId(9), TestMsg::Ctl(0)),
+            Err(NetError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn detach_simulates_failure() {
+        let f = fabric();
+        let _a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        f.detach(InstanceId(1));
+        assert!(f
+            .send(InstanceId(0), InstanceId(1), TestMsg::Ctl(1))
+            .is_err());
+        drop(b);
+    }
+
+    #[test]
+    fn stats_account_bulk_and_control() {
+        let f = fabric();
+        let _a = f.attach(InstanceId(0));
+        let _b = f.attach(InstanceId(1));
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(0)).unwrap();
+        let t = f
+            .send(InstanceId(0), InstanceId(1), TestMsg::Bulk(1 << 20, 16))
+            .unwrap();
+        assert!(t > 0.0);
+        let s = f.stats();
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.payload_bytes, 1 << 20);
+        assert_eq!(s.api_calls, 16);
+        assert!(s.busy_seconds > 0.0);
+    }
+
+    #[test]
+    fn threaded_ping_pong() {
+        let f = fabric();
+        let a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        let fb = f.clone();
+        let h = std::thread::spawn(move || {
+            let (from, msg) = b.recv().unwrap();
+            assert_eq!(msg, TestMsg::Ctl(1));
+            fb.send(InstanceId(1), from, TestMsg::Ctl(2)).unwrap();
+        });
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(1)).unwrap();
+        let (_, reply) = a.recv().unwrap();
+        assert_eq!(reply, TestMsg::Ctl(2));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_receive() {
+        let f = fabric();
+        let a = f.attach(InstanceId(0));
+        assert!(matches!(
+            a.recv_timeout(Duration::from_millis(10)),
+            Err(NetError::Timeout)
+        ));
+    }
+}

@@ -1,0 +1,187 @@
+//! The link-cost model — the math behind Figures 11 and 12.
+
+use crate::config::FabricConfig;
+
+/// Cost model for one point-to-point transfer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Per network-API-call launch overhead (seconds). NCCL's measured
+    /// send/recv launch cost is ~10–20 µs.
+    pub call_overhead_s: f64,
+    /// Wire bandwidth, bytes/second.
+    pub bandwidth: f64,
+    /// Parallel serialization domains (NCCL communicators). Calls are
+    /// round-robined; launches within one communicator are serial (§7:
+    /// one thread per communicator for ordering).
+    pub communicators: usize,
+    /// Per-communicator staging buffer (bytes). A call whose payload
+    /// exceeds it pays extra launches for the extra chunks.
+    pub buffer_bytes: usize,
+    /// Extra per-call cost when either endpoint is DRAM (socket path).
+    pub dram_penalty_s: f64,
+}
+
+impl LinkModel {
+    pub fn from_config(cfg: &FabricConfig) -> Self {
+        LinkModel {
+            call_overhead_s: cfg.call_overhead_us * 1e-6,
+            bandwidth: cfg.bandwidth_gbps * 1e9,
+            communicators: cfg.communicators.max(1),
+            buffer_bytes: (cfg.buffer_mb * 1e6) as usize,
+            dram_penalty_s: cfg.dram_penalty_us * 1e-6,
+        }
+    }
+
+    /// Modeled time to push `bytes` split across `n_calls` equal calls.
+    pub fn transfer_seconds(
+        &self,
+        bytes: usize,
+        n_calls: usize,
+        src_dram: bool,
+        dst_dram: bool,
+    ) -> f64 {
+        if bytes == 0 || n_calls == 0 {
+            return 0.0;
+        }
+        let per_call = bytes.div_ceil(n_calls);
+        // Chunking: each call needs ceil(payload / buffer) launches.
+        let chunks_per_call = per_call.div_ceil(self.buffer_bytes.max(1));
+        let launches = n_calls * chunks_per_call;
+        let serial_launches = launches.div_ceil(self.communicators);
+        let mut t = serial_launches as f64 * self.call_overhead_s
+            + bytes as f64 / self.bandwidth;
+        if src_dram || dst_dram {
+            // Socket path: per-call penalty + halved effective bandwidth
+            // (extra host copy on the slow side).
+            t += n_calls as f64 * self.dram_penalty_s
+                + bytes as f64 / self.bandwidth;
+        }
+        t
+    }
+
+    /// HBM consumed by communicator staging buffers (Fig 11 right: more
+    /// communicators and bigger buffers cost device memory).
+    pub fn hbm_buffer_bytes(&self) -> usize {
+        // Send + receive rings per communicator.
+        2 * self.communicators * self.buffer_bytes
+    }
+
+    /// Small constant latency for control-plane messages (allocation
+    /// round-trip, acks, heartbeats).
+    pub fn control_latency_s(&self) -> f64 {
+        self.call_overhead_s
+    }
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel {
+            call_overhead_s: 15e-6,
+            bandwidth: 40e9,
+            communicators: 1,
+            buffer_bytes: 4_000_000,
+            dram_penalty_s: 50e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> LinkModel {
+        LinkModel::default()
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        assert_eq!(link().transfer_seconds(0, 0, false, false), 0.0);
+    }
+
+    #[test]
+    fn more_calls_cost_more_for_same_bytes() {
+        let l = link();
+        let bytes = 4 << 20;
+        let t1 = l.transfer_seconds(bytes, 1, false, false);
+        let t64 = l.transfer_seconds(bytes, 64, false, false);
+        // 64 launches vs 2 (4 MiB > 4 MB buffer -> 2 chunks): ~8x.
+        assert!(t64 > t1 * 5.0, "t1={t1} t64={t64}");
+    }
+
+    #[test]
+    fn aggregation_story_fig11() {
+        // 2048-token KV, tiny geometry: 128 discrete blocks vs 16 agg
+        // blocks (2*L = 8 ratio at L=4). Aggregated must win by a margin.
+        let l = link();
+        let bytes = 2048 * 2048 * 4; // tokens * floats/token * 4
+        let t_disc = l.transfer_seconds(bytes, 1024, false, false);
+        let t_agg = l.transfer_seconds(bytes, 128, false, false);
+        assert!(t_disc > 3.0 * t_agg, "disc={t_disc} agg={t_agg}");
+    }
+
+    #[test]
+    fn communicators_help_small_blocks() {
+        let mut l = link();
+        let bytes = 4 << 20;
+        let t_c1 = l.transfer_seconds(bytes, 512, false, false);
+        l.communicators = 8;
+        let t_c8 = l.transfer_seconds(bytes, 512, false, false);
+        assert!(t_c8 < t_c1 / 4.0, "c1={t_c1} c8={t_c8}");
+        // But they consume HBM (Fig 11 right).
+        assert_eq!(l.hbm_buffer_bytes(), 8 * 2 * 4_000_000);
+    }
+
+    #[test]
+    fn single_communicator_enough_for_large_blocks() {
+        // With one buffer-sized call, extra communicators don't help.
+        let mut l = link();
+        let t_c1 = l.transfer_seconds(4_000_000, 1, false, false);
+        l.communicators = 8;
+        let t_c8 = l.transfer_seconds(4_000_000, 1, false, false);
+        assert!((t_c1 - t_c8).abs() / t_c1 < 0.05);
+    }
+
+    #[test]
+    fn small_buffer_forces_chunking() {
+        let mut l = link();
+        l.buffer_bytes = 64 << 10;
+        let t_small_buf = l.transfer_seconds(4 << 20, 1, false, false);
+        l.buffer_bytes = 8 << 20;
+        let t_big_buf = l.transfer_seconds(4 << 20, 1, false, false);
+        assert!(t_small_buf > t_big_buf);
+    }
+
+    #[test]
+    fn dram_endpoint_slower() {
+        let l = link();
+        let hbm = l.transfer_seconds(1 << 20, 16, false, false);
+        let dram = l.transfer_seconds(1 << 20, 16, true, false);
+        assert!(dram > hbm);
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_eventually() {
+        let l = link();
+        // 1 GB in one call: wire ~26.8 ms dominates even the ~269 chunk
+        // launches (~4 ms) the 4 MB buffer forces.
+        let t = l.transfer_seconds(1 << 30, 1, false, false);
+        let wire = (1u64 << 30) as f64 / 40e9;
+        assert!(t >= wire, "t={t} wire={wire}");
+        assert!(t < wire * 1.3, "launch overhead should be minor: {t}");
+    }
+
+    #[test]
+    fn from_config_roundtrip() {
+        let cfg = FabricConfig {
+            call_overhead_us: 10.0,
+            bandwidth_gbps: 100.0,
+            communicators: 4,
+            buffer_mb: 2.0,
+            dram_penalty_us: 30.0,
+        };
+        let l = LinkModel::from_config(&cfg);
+        assert_eq!(l.communicators, 4);
+        assert!((l.bandwidth - 100e9).abs() < 1.0);
+        assert_eq!(l.buffer_bytes, 2_000_000);
+    }
+}

@@ -1,0 +1,26 @@
+//! The cluster fabric: message transport between instance threads plus a
+//! calibrated NCCL-like link-cost model.
+//!
+//! The paper implements `transfer` over NCCL send/recv (one call per
+//! discrete block, single thread per communicator for ordering — §7) and
+//! studies the resulting overheads (Fig 11/12). Real NCCL and H800 NVLink
+//! are unavailable here, so [`LinkModel`] reproduces the *cost structure*
+//! that drives those figures:
+//!
+//! ```text
+//! time = ceil(n_calls / communicators) · call_overhead        (serial launches)
+//!      + bytes / bandwidth                                    (wire time)
+//!      + chunk penalty when a call's payload exceeds buffer_mb
+//!      + dram_penalty per call when either endpoint is DRAM   (socket path)
+//! ```
+//!
+//! Two delivery modes share this model: [`Fabric`] (real thread
+//! channels; the sender blocks for the modeled time, like a synchronous
+//! NCCL send) and the discrete-event simulator (which adds the modeled
+//! time to its virtual clock).
+
+pub mod fabric;
+pub mod link;
+
+pub use fabric::{Endpoint, Fabric, NetStats, WireCost};
+pub use link::LinkModel;

@@ -1,0 +1,327 @@
+//! Artifact manifest: `artifacts/meta.json` + `weights.bin` loading.
+//!
+//! `meta.json` is the cross-language ABI emitted by `python/compile/aot.py`
+//! — model geometry, the static-shape bucket list, the parameter manifest
+//! (flatten order = executable argument order), and the artifact file
+//! index. This module parses and validates it without touching PJRT, so
+//! it is testable without artifacts on disk.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_f32: usize,
+    pub len_f32: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub param_count: usize,
+    /// (N, C) prefill buckets, sorted by (N, C).
+    pub prefill_buckets: Vec<(usize, usize)>,
+    /// Decode context buckets, sorted.
+    pub decode_ctx: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub weights_file: String,
+    /// artifact name -> file name.
+    pub artifacts: BTreeMap<String, String>,
+    pub dir: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &str) -> Result<ModelMeta> {
+        let dir = PathBuf::from(dir);
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts`?"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {meta_path:?}: {e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: PathBuf) -> Result<ModelMeta> {
+        let num = |path: &[&str]| -> Result<usize> {
+            j.at(path)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta.json missing {path:?}"))
+        };
+        let mut prefill_buckets = vec![];
+        for row in j
+            .at(&["buckets", "prefill"])
+            .and_then(Json::as_arr)
+            .context("buckets.prefill")?
+        {
+            let pair = row.as_arr().context("prefill bucket not a pair")?;
+            prefill_buckets.push((
+                pair[0].as_usize().context("bucket N")?,
+                pair[1].as_usize().context("bucket C")?,
+            ));
+        }
+        prefill_buckets.sort_unstable();
+        let mut decode_ctx = vec![];
+        for c in j
+            .at(&["buckets", "decode_ctx"])
+            .and_then(Json::as_arr)
+            .context("buckets.decode_ctx")?
+        {
+            decode_ctx.push(c.as_usize().context("decode ctx")?);
+        }
+        decode_ctx.sort_unstable();
+
+        let mut params = vec![];
+        for p in j.at(&["params"]).and_then(Json::as_arr).context("params")? {
+            params.push(ParamSpec {
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("param name")?
+                    .to_string(),
+                shape: p
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("param shape")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                offset_f32: p
+                    .get("offset_f32")
+                    .and_then(Json::as_usize)
+                    .context("offset")?,
+                len_f32: p
+                    .get("len_f32")
+                    .and_then(Json::as_usize)
+                    .context("len")?,
+            });
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j
+            .at(&["artifacts"])
+            .and_then(Json::as_obj)
+            .context("artifacts")?
+        {
+            artifacts.insert(
+                k.clone(),
+                v.as_str().context("artifact path")?.to_string(),
+            );
+        }
+
+        let meta = ModelMeta {
+            vocab: num(&["model", "vocab"])?,
+            layers: num(&["model", "layers"])?,
+            d_model: num(&["model", "d_model"])?,
+            n_heads: num(&["model", "n_heads"])?,
+            head_dim: num(&["model", "head_dim"])?,
+            max_seq: num(&["model", "max_seq"])?,
+            param_count: num(&["model", "param_count"])?,
+            prefill_buckets,
+            decode_ctx,
+            params,
+            weights_file: j
+                .at(&["weights_file"])
+                .and_then(Json::as_str)
+                .context("weights_file")?
+                .to_string(),
+            artifacts,
+            dir,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.prefill_buckets.is_empty() || self.decode_ctx.is_empty() {
+            bail!("no buckets in meta.json");
+        }
+        let total: usize = self.params.iter().map(|p| p.len_f32).sum();
+        if total != self.param_count {
+            bail!("param manifest sums to {total}, expected {}", self.param_count);
+        }
+        let mut offset = 0;
+        for p in &self.params {
+            if p.offset_f32 != offset {
+                bail!("param {} not contiguous", p.name);
+            }
+            let n: usize = p.shape.iter().product();
+            if n != p.len_f32 {
+                bail!("param {} shape/len mismatch", p.name);
+            }
+            offset += p.len_f32;
+        }
+        for (n, c) in &self.prefill_buckets {
+            if !self.artifacts.contains_key(&format!("prefill_n{n}_c{c}")) {
+                bail!("missing artifact for prefill bucket ({n},{c})");
+            }
+        }
+        for ctx in &self.decode_ctx {
+            if !self.artifacts.contains_key(&format!("decode_ctx{ctx}")) {
+                bail!("missing artifact for decode ctx {ctx}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Floats of KV one token carries (all layers, K+V).
+    pub fn kv_floats_per_token(&self) -> usize {
+        2 * self.layers * self.n_heads * self.head_dim
+    }
+
+    /// Flat decode-state length for a context bucket.
+    pub fn state_len(&self, ctx: usize) -> usize {
+        self.vocab + self.layers * 2 * ctx * self.n_heads * self.head_dim
+    }
+
+    /// Smallest prefill bucket (N, C) with N >= new_len and C >= cache_len
+    /// (C == 0 bucket only when cache_len == 0).
+    pub fn pick_prefill_bucket(&self, new_len: usize, cache_len: usize)
+                               -> Option<(usize, usize)> {
+        self.prefill_buckets
+            .iter()
+            .filter(|(n, c)| {
+                *n >= new_len
+                    && if cache_len == 0 { *c == 0 } else { *c >= cache_len }
+            })
+            .min_by_key(|(n, c)| (*n, *c))
+            .copied()
+    }
+
+    /// Smallest decode context bucket >= len.
+    pub fn pick_decode_ctx(&self, len: usize) -> Option<usize> {
+        self.decode_ctx.iter().find(|&&c| c >= len).copied()
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Option<PathBuf> {
+        self.artifacts.get(name).map(|f| self.dir.join(f))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights_file)
+    }
+
+    /// Read weights.bin (little-endian f32) into one contiguous Vec.
+    pub fn read_weights(&self) -> Result<Vec<f32>> {
+        let path = self.weights_path();
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != 4 * self.param_count {
+            bail!(
+                "weights.bin is {} bytes, expected {}",
+                bytes.len(),
+                4 * self.param_count
+            );
+        }
+        let mut out = vec![0f32; self.param_count];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(out)
+    }
+}
+
+/// Check the default artifacts directory exists relative to the repo root
+/// (tests use this to self-skip when artifacts are not built).
+pub fn artifacts_available(dir: &str) -> bool {
+    Path::new(dir).join("meta.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+  "model": {"vocab": 8, "layers": 2, "d_model": 4, "n_heads": 2,
+             "head_dim": 2, "max_seq": 64, "param_count": 40},
+  "buckets": {"prefill": [[16, 0], [16, 32]], "decode_ctx": [32, 64]},
+  "params": [
+    {"name": "embed", "shape": [8, 4], "offset_f32": 0, "len_f32": 32},
+    {"name": "unembed", "shape": [4, 2], "offset_f32": 32, "len_f32": 8}
+  ],
+  "weights_file": "weights.bin",
+  "artifacts": {
+    "prefill_n16_c0": "a.hlo.txt", "prefill_n16_c32": "b.hlo.txt",
+    "decode_ctx32": "c.hlo.txt", "decode_ctx64": "d.hlo.txt"
+  }
+}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = ModelMeta::from_json(&sample_json(), PathBuf::from("/tmp"))
+            .unwrap();
+        assert_eq!(m.vocab, 8);
+        assert_eq!(m.prefill_buckets, vec![(16, 0), (16, 32)]);
+        assert_eq!(m.kv_floats_per_token(), 2 * 2 * 2 * 2);
+        assert_eq!(m.state_len(32), 8 + 2 * 2 * 32 * 2 * 2);
+    }
+
+    #[test]
+    fn bucket_picking() {
+        let m = ModelMeta::from_json(&sample_json(), PathBuf::from("/tmp"))
+            .unwrap();
+        assert_eq!(m.pick_prefill_bucket(10, 0), Some((16, 0)));
+        assert_eq!(m.pick_prefill_bucket(10, 5), Some((16, 32)));
+        assert_eq!(m.pick_prefill_bucket(10, 33), None);
+        assert_eq!(m.pick_prefill_bucket(17, 0), None);
+        assert_eq!(m.pick_decode_ctx(31), Some(32));
+        assert_eq!(m.pick_decode_ctx(33), Some(64));
+        assert_eq!(m.pick_decode_ctx(65), None);
+    }
+
+    #[test]
+    fn rejects_noncontiguous_params() {
+        let mut j = sample_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(ps)) = m.get_mut("params") {
+                if let Json::Obj(p1) = &mut ps[1] {
+                    p1.insert("offset_f32".into(), Json::Num(33.0));
+                }
+            }
+        }
+        assert!(ModelMeta::from_json(&j, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let mut j = sample_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(a)) = m.get_mut("artifacts") {
+                a.remove("decode_ctx64");
+            }
+        }
+        assert!(ModelMeta::from_json(&j, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        if !artifacts_available("artifacts") {
+            return; // skip when `make artifacts` hasn't run
+        }
+        let m = ModelMeta::load("artifacts").unwrap();
+        assert_eq!(m.vocab, 2048);
+        assert_eq!(m.layers, 4);
+        let w = m.read_weights().unwrap();
+        assert_eq!(w.len(), m.param_count);
+        // Norm weights (all-ones) exist somewhere in the blob.
+        let p = m.params.iter().find(|p| p.name == "final_norm").unwrap();
+        assert!(w[p.offset_f32..p.offset_f32 + p.len_f32]
+            .iter()
+            .all(|&x| x == 1.0));
+    }
+}

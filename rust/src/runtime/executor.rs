@@ -1,0 +1,537 @@
+//! The PJRT executor: compile-once, execute-many model runtime.
+//!
+//! One `ModelRuntime` per inference instance (the paper's engines each
+//! own their GPU; ours each own a PJRT CPU "device" context). Loading
+//! compiles every bucket's HLO and uploads the weights once; the serving
+//! hot path then only moves per-request data.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::ModelMeta;
+
+/// Prefill results, downloaded to host (the engine scatters `new_kv` into
+/// MemPool blocks and feeds `logits` to sampling).
+#[derive(Clone, Debug)]
+pub struct PrefillOutput {
+    /// f32[L, 2, N, H, hd] flattened (N = bucket size; only the first
+    /// `new_len` token slots are meaningful).
+    pub new_kv: Vec<f32>,
+    /// Bucket N the KV is laid out for.
+    pub bucket_n: usize,
+    /// f32[vocab] — logits after the last real prompt token.
+    pub logits: Vec<f32>,
+}
+
+/// A device-resident decode loop: the flat state buffer ([logits | kv])
+/// is fed back step to step; KV never round-trips to the host.
+pub struct DecodeSession {
+    state: xla::PjRtBuffer,
+    pub ctx: usize,
+    pub pos: usize,
+    steps: usize,
+    /// Reused host-side staging buffer for the per-step state download
+    /// (avoids a ~0.5–4 MB allocation + copy every token).
+    scratch: Vec<f32>,
+}
+
+// SAFETY: the xla crate's handles are raw pointers (auto-!Send/!Sync),
+// but the underlying PJRT *CPU* client (TfrtCpuClient) is documented
+// thread-safe, and this runtime only wraps immutable-after-load state
+// (compiled executables + weight buffers) plus a Mutex'd counter block.
+// DecodeSession buffers are owned by one request at a time. We confine
+// mutation to &mut self / Mutex and allow cross-thread sharing.
+unsafe impl Send for ModelRuntime {}
+unsafe impl Sync for ModelRuntime {}
+unsafe impl Send for DecodeSession {}
+
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub meta: ModelMeta,
+    weights: Vec<xla::PjRtBuffer>,
+    prefill_exe: BTreeMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    decode_exe: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Executor-level counters (perf pass instrumentation).
+    pub counters: Mutex<RuntimeCounters>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeCounters {
+    pub prefill_calls: u64,
+    pub decode_steps: u64,
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+    pub bytes_uploaded: u64,
+    pub bytes_downloaded: u64,
+}
+
+impl ModelRuntime {
+    /// Load + compile every artifact in `dir`. Expensive (seconds); do it
+    /// once per instance at startup.
+    pub fn load(dir: &str) -> Result<ModelRuntime> {
+        let meta = ModelMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+
+        // Upload weights once.
+        let blob = meta.read_weights()?;
+        let mut weights = Vec::with_capacity(meta.params.len());
+        for p in &meta.params {
+            let seg = &blob[p.offset_f32..p.offset_f32 + p.len_f32];
+            let buf = client
+                .buffer_from_host_buffer::<f32>(seg, &p.shape, None)
+                .map_err(|e| anyhow!("upload {}: {e:?}", p.name))?;
+            weights.push(buf);
+        }
+
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = meta
+                .artifact_path(name)
+                .with_context(|| format!("artifact {name}"))?;
+            let path_s = path.to_str().context("path utf8")?;
+            let proto = xla::HloModuleProto::from_text_file(path_s)
+                .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))
+        };
+
+        let mut prefill_exe = BTreeMap::new();
+        for &(n, c) in &meta.prefill_buckets {
+            prefill_exe.insert((n, c), compile(&format!("prefill_n{n}_c{c}"))?);
+        }
+        let mut decode_exe = BTreeMap::new();
+        for &ctx in &meta.decode_ctx {
+            decode_exe.insert(ctx, compile(&format!("decode_ctx{ctx}"))?);
+        }
+        log::info!(
+            "runtime loaded: {} prefill + {} decode executables, {:.1}M params",
+            prefill_exe.len(),
+            decode_exe.len(),
+            meta.param_count as f64 / 1e6
+        );
+        Ok(ModelRuntime {
+            client,
+            meta,
+            weights,
+            prefill_exe,
+            decode_exe,
+            counters: Mutex::new(RuntimeCounters::default()),
+        })
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.counters.lock().unwrap().bytes_uploaded += 4 * data.len() as u64;
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow!("upload f32: {e:?}"))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+
+    /// Run prefill for `tokens` (new tokens only) against an optional
+    /// cached prefix. `cache_kv` is f32[L,2,C,H,hd] flattened for the
+    /// chosen bucket's capacity C; `cache_len` tokens of it are valid.
+    pub fn prefill(
+        &self,
+        tokens: &[u32],
+        cache_kv: Option<&[f32]>,
+        cache_len: usize,
+    ) -> Result<PrefillOutput> {
+        let t0 = std::time::Instant::now();
+        let new_len = tokens.len();
+        let (n, c) = self
+            .meta
+            .pick_prefill_bucket(new_len, cache_len)
+            .with_context(|| {
+                format!("no prefill bucket for new={new_len} cached={cache_len}")
+            })?;
+        let exe = &self.prefill_exe[&(n, c)];
+
+        // Build argument buffers: weights then per-call args.
+        let mut toks = vec![0i32; n];
+        for (i, &t) in tokens.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let tok_buf = self.upload_i32(&toks, &[n])?;
+        let newlen_buf = self.upload_i32(&[new_len as i32], &[])?;
+        let cachelen_buf = self.upload_i32(&[cache_len as i32], &[])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&newlen_buf);
+        args.push(&cachelen_buf);
+        let kv_buf;
+        if c > 0 {
+            let kv = cache_kv.context("bucket expects cache_kv")?;
+            let dims = [
+                self.meta.layers,
+                2,
+                c,
+                self.meta.n_heads,
+                self.meta.head_dim,
+            ];
+            let expect: usize = dims.iter().product();
+            if kv.len() != expect {
+                bail!("cache_kv len {} != {expect}", kv.len());
+            }
+            kv_buf = self.upload_f32(kv, &dims)?;
+            args.push(&kv_buf);
+        }
+
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("prefill execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill download: {e:?}"))?;
+        let (kv_lit, logits_lit) = lit
+            .to_tuple2()
+            .map_err(|e| anyhow!("prefill untuple: {e:?}"))?;
+        let new_kv = kv_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("kv to_vec: {e:?}"))?;
+        let logits = logits_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
+        let mut ctr = self.counters.lock().unwrap();
+        ctr.prefill_calls += 1;
+        ctr.prefill_seconds += t0.elapsed().as_secs_f64();
+        ctr.bytes_downloaded += 4 * (new_kv.len() + logits.len()) as u64;
+        Ok(PrefillOutput {
+            new_kv,
+            bucket_n: n,
+            logits,
+        })
+    }
+
+    /// Start a decode session: upload a KV snapshot (f32[L,2,ctx,H,hd]
+    /// flattened, first `valid_len` token slots meaningful) into a flat
+    /// state buffer.
+    pub fn decode_start(&self, kv: &[f32], ctx: usize, valid_len: usize)
+                        -> Result<DecodeSession> {
+        if !self.decode_exe.contains_key(&ctx) {
+            bail!("no decode executable for ctx {ctx}");
+        }
+        let state_len = self.meta.state_len(ctx);
+        let kv_len = state_len - self.meta.vocab;
+        if kv.len() != kv_len {
+            bail!("kv len {} != {kv_len} for ctx {ctx}", kv.len());
+        }
+        let mut state = vec![0f32; state_len];
+        state[self.meta.vocab..].copy_from_slice(kv);
+        let buf = self.upload_f32(&state, &[state_len])?;
+        Ok(DecodeSession {
+            state: buf,
+            ctx,
+            pos: valid_len,
+            steps: 0,
+            scratch: vec![0f32; state_len],
+        })
+    }
+
+    /// One decode step: feed `token` at the session's position; returns
+    /// the logits for the next token. O(vocab) host traffic only.
+    pub fn decode_step(&self, sess: &mut DecodeSession, token: u32)
+                       -> Result<Vec<f32>> {
+        let t0 = std::time::Instant::now();
+        if sess.pos >= sess.ctx {
+            bail!("decode session full: pos {} >= ctx {}", sess.pos, sess.ctx);
+        }
+        let exe = &self.decode_exe[&sess.ctx];
+        let tok_buf = self.upload_i32(&[token as i32], &[1])?;
+        let pos_buf = self.upload_i32(&[sess.pos as i32], &[])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&sess.state);
+        let mut result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("decode execute: {e:?}"))?;
+        // Single (non-tuple) output: becomes the next state.
+        sess.state = result
+            .pop()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .context("decode returned no buffer")?;
+        sess.pos += 1;
+        sess.steps += 1;
+        // xla_extension 0.5.1's CPU client does not implement
+        // CopyRawToHost, so the whole state literal is downloaded and the
+        // logits region sliced out (KV still never re-uploads: the state
+        // buffer feeds back on device).
+        self.download_state(sess)?;
+        let logits = sess.scratch[..self.meta.vocab].to_vec();
+        let mut ctr = self.counters.lock().unwrap();
+        ctr.decode_steps += 1;
+        ctr.decode_seconds += t0.elapsed().as_secs_f64();
+        ctr.bytes_downloaded += 4 * self.meta.state_len(sess.ctx) as u64;
+        Ok(logits)
+    }
+
+    /// Download the state into the session's scratch buffer (one copy,
+    /// no allocation — the reused staging buffer is the §Perf fix for
+    /// the missing CopyRawToHost in xla_extension 0.5.1).
+    fn download_state(&self, sess: &mut DecodeSession) -> Result<()> {
+        let lit = sess
+            .state
+            .to_literal_sync()
+            .map_err(|e| anyhow!("state download: {e:?}"))?;
+        lit.copy_raw_to::<f32>(&mut sess.scratch)
+            .map_err(|e| anyhow!("state copy: {e:?}"))
+    }
+
+    /// Download the session's KV region (f32[L,2,ctx,H,hd] flattened) —
+    /// used at retire time (active KV -> MemPool historical KV).
+    pub fn decode_kv(&self, sess: &mut DecodeSession) -> Result<Vec<f32>> {
+        self.download_state(sess)?;
+        self.counters.lock().unwrap().bytes_downloaded +=
+            4 * sess.scratch.len() as u64;
+        Ok(sess.scratch[self.meta.vocab..].to_vec())
+    }
+
+    /// Grow a session to a larger context bucket (KV round-trips through
+    /// the host; rare — happens at bucket boundaries only).
+    pub fn decode_grow(&self, mut sess: DecodeSession, new_ctx: usize)
+                       -> Result<DecodeSession> {
+        if new_ctx <= sess.ctx {
+            return Ok(sess);
+        }
+        let old_kv = self.decode_kv(&mut sess)?;
+        let per_slot = self.meta.n_heads * self.meta.head_dim;
+        let old_ctx = sess.ctx;
+        let kv_len_new =
+            self.meta.layers * 2 * new_ctx * per_slot;
+        let mut kv = vec![0f32; kv_len_new];
+        // Re-stride [L,2,old_ctx,H,hd] -> [L,2,new_ctx,H,hd].
+        for l in 0..self.meta.layers {
+            for h in 0..2 {
+                let src = (l * 2 + h) * old_ctx * per_slot;
+                let dst = (l * 2 + h) * new_ctx * per_slot;
+                kv[dst..dst + old_ctx * per_slot]
+                    .copy_from_slice(&old_kv[src..src + old_ctx * per_slot]);
+            }
+        }
+        self.decode_start(&kv, new_ctx, sess.pos)
+    }
+
+    pub fn snapshot_counters(&self) -> RuntimeCounters {
+        self.counters.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Integration tests against the real artifacts; self-skip when
+    //! `make artifacts` has not run.
+    use super::*;
+    use crate::runtime::artifacts::artifacts_available;
+    use once_cell::sync::Lazy;
+
+    static RT: Lazy<Option<ModelRuntime>> = Lazy::new(|| {
+        if !artifacts_available("artifacts") {
+            eprintln!("[skip] artifacts/ not built");
+            return None;
+        }
+        Some(ModelRuntime::load("artifacts").expect("runtime load"))
+    });
+
+    fn rt() -> Option<&'static ModelRuntime> {
+        RT.as_ref()
+    }
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32)
+            .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 2048)
+            .collect()
+    }
+
+    fn argmax(xs: &[f32]) -> usize {
+        xs.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    }
+
+    #[test]
+    fn prefill_runs_and_is_deterministic() {
+        let Some(rt) = rt() else { return };
+        let t = toks(20, 1);
+        let a = rt.prefill(&t, None, 0).unwrap();
+        let b = rt.prefill(&t, None, 0).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.new_kv, b.new_kv);
+        assert_eq!(a.logits.len(), 2048);
+        assert!(a.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(a.bucket_n, 32);
+    }
+
+    #[test]
+    fn bucket_padding_invariance() {
+        let Some(rt) = rt() else { return };
+        // 20 tokens fit the N=32 bucket; forcing N=64 via longer padding
+        // is not exposed, but 33 tokens -> N=64. Instead: same prompt via
+        // different cache splits must agree (tests bucket C too).
+        let t = toks(40, 2);
+        let full = rt.prefill(&t, None, 0).unwrap();
+
+        // Split: prefill 32, then 8 with cache_len=32 in the C=256 bucket.
+        let part = rt.prefill(&t[..32], None, 0).unwrap();
+        let meta = &rt.meta;
+        let per_slot = meta.n_heads * meta.head_dim;
+        let c = 256;
+        let mut cache = vec![0f32; meta.layers * 2 * c * per_slot];
+        // part.new_kv is [L,2,N,H,hd] with N = part.bucket_n.
+        let n = part.bucket_n;
+        for l in 0..meta.layers {
+            for h in 0..2 {
+                for tkn in 0..32 {
+                    let src = ((l * 2 + h) * n + tkn) * per_slot;
+                    let dst = ((l * 2 + h) * c + tkn) * per_slot;
+                    cache[dst..dst + per_slot]
+                        .copy_from_slice(&part.new_kv[src..src + per_slot]);
+                }
+            }
+        }
+        let cached = rt.prefill(&t[32..], Some(&cache), 32).unwrap();
+        let max_err: f32 = full
+            .logits
+            .iter()
+            .zip(&cached.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max_err < 1e-3, "cached prefill diverged: {max_err}");
+    }
+
+    #[test]
+    fn decode_continues_prefill() {
+        let Some(rt) = rt() else { return };
+        let t = toks(24, 3);
+        // Full prefill of 24 tokens.
+        let full = rt.prefill(&t, None, 0).unwrap();
+        // Prefill 23, then decode token 24.
+        let part = rt.prefill(&t[..23], None, 0).unwrap();
+        let meta = &rt.meta;
+        let per_slot = meta.n_heads * meta.head_dim;
+        let ctx = 64;
+        let n = part.bucket_n;
+        let mut kv = vec![0f32; meta.layers * 2 * ctx * per_slot];
+        for l in 0..meta.layers {
+            for h in 0..2 {
+                for tkn in 0..23 {
+                    let src = ((l * 2 + h) * n + tkn) * per_slot;
+                    let dst = ((l * 2 + h) * ctx + tkn) * per_slot;
+                    kv[dst..dst + per_slot]
+                        .copy_from_slice(&part.new_kv[src..src + per_slot]);
+                }
+            }
+        }
+        let mut sess = rt.decode_start(&kv, ctx, 23).unwrap();
+        let logits = rt.decode_step(&mut sess, t[23]).unwrap();
+        assert_eq!(argmax(&logits), argmax(&full.logits));
+        let max_err: f32 = logits
+            .iter()
+            .zip(&full.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max_err < 1e-3, "decode diverged: {max_err}");
+        assert_eq!(sess.pos, 24);
+    }
+
+    #[test]
+    fn decode_session_chains_steps() {
+        let Some(rt) = rt() else { return };
+        let t = toks(16, 4);
+        let p = rt.prefill(&t, None, 0).unwrap();
+        let meta = &rt.meta;
+        let per_slot = meta.n_heads * meta.head_dim;
+        let ctx = 64;
+        let n = p.bucket_n;
+        let mut kv = vec![0f32; meta.layers * 2 * ctx * per_slot];
+        for l in 0..meta.layers {
+            for h in 0..2 {
+                for tkn in 0..16 {
+                    let src = ((l * 2 + h) * n + tkn) * per_slot;
+                    let dst = ((l * 2 + h) * ctx + tkn) * per_slot;
+                    kv[dst..dst + per_slot]
+                        .copy_from_slice(&p.new_kv[src..src + per_slot]);
+                }
+            }
+        }
+        let mut sess = rt.decode_start(&kv, ctx, 16).unwrap();
+        let mut tok = argmax(&p.logits) as u32;
+        let mut seq = vec![];
+        for _ in 0..10 {
+            let logits = rt.decode_step(&mut sess, tok).unwrap();
+            tok = argmax(&logits) as u32;
+            seq.push(tok);
+        }
+        assert_eq!(sess.pos, 26);
+        // Greedy decode must be reproducible.
+        let mut sess2 = rt.decode_start(&kv, ctx, 16).unwrap();
+        let mut tok2 = argmax(&p.logits) as u32;
+        let mut seq2 = vec![];
+        for _ in 0..10 {
+            let logits = rt.decode_step(&mut sess2, tok2).unwrap();
+            tok2 = argmax(&logits) as u32;
+            seq2.push(tok2);
+        }
+        assert_eq!(seq, seq2);
+    }
+
+    #[test]
+    fn decode_grow_preserves_history() {
+        let Some(rt) = rt() else { return };
+        let t = toks(16, 5);
+        let p = rt.prefill(&t, None, 0).unwrap();
+        let meta = &rt.meta;
+        let per_slot = meta.n_heads * meta.head_dim;
+        let n = p.bucket_n;
+        let build = |ctx: usize| {
+            let mut kv = vec![0f32; meta.layers * 2 * ctx * per_slot];
+            for l in 0..meta.layers {
+                for h in 0..2 {
+                    for tkn in 0..16 {
+                        let src = ((l * 2 + h) * n + tkn) * per_slot;
+                        let dst = ((l * 2 + h) * ctx + tkn) * per_slot;
+                        kv[dst..dst + per_slot]
+                            .copy_from_slice(&p.new_kv[src..src + per_slot]);
+                    }
+                }
+            }
+            kv
+        };
+        // Path A: ctx=64 directly.
+        let mut sa = rt.decode_start(&build(64), 64, 16).unwrap();
+        let la = rt.decode_step(&mut sa, t[0]).unwrap();
+        // Path B: ctx=... grow 64->128 then same step.
+        let sb0 = rt.decode_start(&build(64), 64, 16).unwrap();
+        let mut sb = rt.decode_grow(sb0, 128).unwrap();
+        assert_eq!(sb.ctx, 128);
+        assert_eq!(sb.pos, 16);
+        let lb = rt.decode_step(&mut sb, t[0]).unwrap();
+        let max_err: f32 = la
+            .iter()
+            .zip(&lb)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(max_err < 1e-3, "grow diverged: {max_err}");
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let Some(rt) = rt() else { return };
+        let before = rt.snapshot_counters();
+        let _ = rt.prefill(&toks(10, 6), None, 0).unwrap();
+        let after = rt.snapshot_counters();
+        assert!(after.prefill_calls > before.prefill_calls);
+        assert!(after.bytes_downloaded > before.bytes_downloaded);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT artifacts emitted by `python/compile/aot.py`
+//! and executes them on the request path. This is the **only** place model
+//! compute happens at serving time — Python never runs here.
+//!
+//! Pipeline per artifact: `HloModuleProto::from_text_file` (HLO *text* —
+//! jax ≥0.5 serialized protos are rejected by xla_extension 0.5.1) →
+//! `XlaComputation::from_proto` → `PjRtClient::compile`. Weights are
+//! uploaded to device buffers once at load; per-call arguments ride
+//! `execute_b` alongside them.
+//!
+//! Decode uses the flat-state design (see `model.decode_state`): the
+//! output buffer is fed back as the next step's input, so active KV stays
+//! device-resident for a whole request and only the logits region is read
+//! back per step.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::ModelMeta;
+pub use executor::{DecodeSession, ModelRuntime, PrefillOutput};

@@ -1,0 +1,9 @@
+//! Global scheduler (paper §6): global prompt trees, routing policies,
+//! and the context-caching cost model (§5.3).
+
+pub mod cost_model;
+pub mod policy;
+pub mod prompt_tree;
+pub mod router;
+
+pub use policy::PolicyKind;

@@ -1,0 +1,202 @@
+//! Global request-scheduling policies (paper Table 6).
+//!
+//! * **LeastLoad** — pick the least-loaded instance; locality-blind.
+//! * **SessionId** — hash the session onto an instance; intra-session
+//!   caching only.
+//! * **PromptTree** — the paper's contribution: match the prompt against
+//!   per-instance global prompt trees and pick via the cost model
+//!   (Eq. 1), exploiting inter-session sharing.
+
+use crate::mempool::InstanceId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    LeastLoad,
+    SessionId,
+    PromptTree,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "least_load" => Some(PolicyKind::LeastLoad),
+            "session_id" | "session" => Some(PolicyKind::SessionId),
+            "prompt_tree" => Some(PolicyKind::PromptTree),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::LeastLoad => "least_load",
+            PolicyKind::SessionId => "session_id",
+            PolicyKind::PromptTree => "prompt_tree",
+        }
+    }
+}
+
+/// Load + cache view of one candidate instance, assembled by the router.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub instance: InstanceId,
+    /// Sum of pending prompt tokens (the queueing term of Eq. 1).
+    pub queued_tokens: usize,
+    /// Mean cached ratio of the queued work (for exec() of the queue).
+    pub queued_cached_ratio: f64,
+    /// Matched prefix tokens for *this* prompt on this instance.
+    pub matched_tokens: usize,
+}
+
+/// Decision output: chosen instance plus (optionally) a donor holding a
+/// longer prefix, for the Eq. 2 transfer-vs-recompute step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    pub instance: InstanceId,
+    pub matched_tokens: usize,
+    /// Some((donor, donor_matched)) when another instance holds more.
+    pub donor: Option<(InstanceId, usize)>,
+}
+
+/// Pick per policy. `exec` estimates prefill seconds for
+/// (prompt_tokens, cached_ratio) — the cost model's exec(x, y).
+pub fn decide<F: Fn(usize, f64) -> f64>(
+    policy: PolicyKind,
+    candidates: &[Candidate],
+    prompt_tokens: usize,
+    session_id: u64,
+    exec: F,
+) -> Decision {
+    assert!(!candidates.is_empty());
+    let chosen = match policy {
+        PolicyKind::LeastLoad => candidates
+            .iter()
+            .min_by_key(|c| c.queued_tokens)
+            .unwrap(),
+        PolicyKind::SessionId => {
+            let i = (session_id % candidates.len() as u64) as usize;
+            &candidates[i]
+        }
+        PolicyKind::PromptTree => {
+            // Eq. 1: argmin_p sum_queue exec(x', y') + exec(x, y_p).
+            // Exact cost ties (e.g. a cold prompt over idle instances)
+            // break by load, then by a session hash — otherwise every
+            // cold request piles onto the first instance and the tail
+            // suffers.
+            let cost = |c: &Candidate| {
+                exec(c.queued_tokens, c.queued_cached_ratio)
+                    + exec(
+                        prompt_tokens,
+                        c.matched_tokens as f64
+                            / prompt_tokens.max(1) as f64,
+                    )
+            };
+            candidates
+                .iter()
+                .min_by(|a, b| {
+                    cost(a)
+                        .partial_cmp(&cost(b))
+                        .unwrap()
+                        .then(a.queued_tokens.cmp(&b.queued_tokens))
+                        .then_with(|| {
+                            let h = |c: &Candidate| {
+                                let mut s = session_id
+                                    ^ ((c.instance.0 as u64) << 32);
+                                crate::util::rng::splitmix64(&mut s)
+                            };
+                            h(a).cmp(&h(b))
+                        })
+                })
+                .unwrap()
+        }
+    };
+    // Donor: an instance holding strictly more of this prompt's prefix.
+    let donor = candidates
+        .iter()
+        .filter(|c| c.instance != chosen.instance)
+        .max_by_key(|c| c.matched_tokens)
+        .filter(|c| c.matched_tokens > chosen.matched_tokens)
+        .map(|c| (c.instance, c.matched_tokens));
+    Decision {
+        instance: chosen.instance,
+        matched_tokens: chosen.matched_tokens,
+        donor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(id: u32, queued: usize, matched: usize) -> Candidate {
+        Candidate {
+            instance: InstanceId(id),
+            queued_tokens: queued,
+            queued_cached_ratio: 0.0,
+            matched_tokens: matched,
+        }
+    }
+
+    /// Linear-ish exec toy model: cost ∝ uncached tokens.
+    fn exec(x: usize, y: f64) -> f64 {
+        x as f64 * (1.0 - y) + 1.0
+    }
+
+    #[test]
+    fn parse_names() {
+        for p in [
+            PolicyKind::LeastLoad,
+            PolicyKind::SessionId,
+            PolicyKind::PromptTree,
+        ] {
+            assert_eq!(PolicyKind::parse(p.name()), Some(p));
+        }
+        assert_eq!(PolicyKind::parse("x"), None);
+    }
+
+    #[test]
+    fn least_load_ignores_cache() {
+        let cs = vec![cand(0, 100, 500), cand(1, 10, 0)];
+        let d = decide(PolicyKind::LeastLoad, &cs, 512, 7, exec);
+        assert_eq!(d.instance, InstanceId(1));
+        // But the donor field still reports instance 0's longer prefix.
+        assert_eq!(d.donor, Some((InstanceId(0), 500)));
+    }
+
+    #[test]
+    fn session_id_is_sticky() {
+        let cs = vec![cand(0, 0, 0), cand(1, 0, 0), cand(2, 0, 0)];
+        let a = decide(PolicyKind::SessionId, &cs, 100, 5, exec);
+        let b = decide(PolicyKind::SessionId, &cs, 100, 5, exec);
+        assert_eq!(a.instance, b.instance);
+        assert_eq!(a.instance, InstanceId(2)); // 5 % 3
+    }
+
+    #[test]
+    fn prompt_tree_prefers_cache_hit() {
+        let cs = vec![cand(0, 0, 0), cand(1, 0, 448)];
+        let d = decide(PolicyKind::PromptTree, &cs, 512, 0, exec);
+        assert_eq!(d.instance, InstanceId(1));
+        assert_eq!(d.matched_tokens, 448);
+        assert_eq!(d.donor, None);
+    }
+
+    #[test]
+    fn prompt_tree_balances_queue_vs_cache() {
+        // Instance 1 has the cache but a huge queue; 0 is idle.
+        let mut c1 = cand(1, 100_000, 256);
+        c1.queued_cached_ratio = 0.0;
+        let cs = vec![cand(0, 0, 0), c1];
+        let d = decide(PolicyKind::PromptTree, &cs, 512, 0, exec);
+        assert_eq!(d.instance, InstanceId(0));
+        // Donor points at the cache-rich instance for Eq. 2.
+        assert_eq!(d.donor, Some((InstanceId(1), 256)));
+    }
+
+    #[test]
+    fn no_donor_when_chosen_has_most() {
+        let cs = vec![cand(0, 0, 512), cand(1, 0, 100)];
+        let d = decide(PolicyKind::PromptTree, &cs, 512, 0, exec);
+        assert_eq!(d.instance, InstanceId(0));
+        assert_eq!(d.donor, None);
+    }
+}

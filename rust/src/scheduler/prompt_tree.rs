@@ -1,0 +1,188 @@
+//! Global prompt trees (paper §6, Fig 6).
+//!
+//! The global scheduler keeps one radix tree per inference instance,
+//! grouped by instance type (prefill-only / decode-only / PD-colocated).
+//! Trees reuse [`crate::mempool::RadixIndex`]; the "extra field pointing
+//! to the instance" from the paper is the per-tree instance tag. Global
+//! trees store no block addresses (the GS never touches data) — they
+//! track *which tokens* an instance has cached, with a TTL because the GS
+//! only learns about inserts, never local evictions (best-effort, §6
+//! Discussion).
+
+use std::collections::BTreeMap;
+
+use crate::mempool::index::BlockGroup;
+use crate::mempool::{InstanceId, RadixIndex};
+
+/// Instance roles, mirroring Figure 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum InstanceKind {
+    PrefillOnly,
+    DecodeOnly,
+    Colocated,
+}
+
+impl InstanceKind {
+    /// Does this instance run prefill (and thus serve cached prefixes)?
+    pub fn runs_prefill(self) -> bool {
+        !matches!(self, InstanceKind::DecodeOnly)
+    }
+}
+
+struct TreeEntry {
+    kind: InstanceKind,
+    tree: RadixIndex,
+}
+
+/// All global prompt trees, keyed by instance.
+pub struct GlobalPromptTrees {
+    trees: BTreeMap<InstanceId, TreeEntry>,
+    block_tokens: usize,
+    ttl: f64,
+}
+
+impl GlobalPromptTrees {
+    pub fn new(block_tokens: usize, ttl: f64) -> Self {
+        GlobalPromptTrees {
+            trees: BTreeMap::new(),
+            block_tokens,
+            ttl,
+        }
+    }
+
+    pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
+        self.trees.insert(
+            id,
+            TreeEntry {
+                kind,
+                tree: RadixIndex::new(self.block_tokens, self.ttl),
+            },
+        );
+    }
+
+    /// Drop a failed/removed instance's tree (paper §4.4: membership
+    /// change broadcast).
+    pub fn remove_instance(&mut self, id: InstanceId) {
+        self.trees.remove(&id);
+    }
+
+    pub fn instances(&self) -> Vec<(InstanceId, InstanceKind)> {
+        self.trees.iter().map(|(k, v)| (*k, v.kind)).collect()
+    }
+
+    pub fn kind_of(&self, id: InstanceId) -> Option<InstanceKind> {
+        self.trees.get(&id).map(|e| e.kind)
+    }
+
+    /// Record that `instance` now caches `tokens` (called on the response
+    /// path — paper Fig 6 update path).
+    pub fn record(&mut self, instance: InstanceId, tokens: &[u32], now: f64) {
+        let Some(e) = self.trees.get_mut(&instance) else {
+            return;
+        };
+        let usable = e.tree.usable_len(tokens.len());
+        let n_blocks = usable / self.block_tokens;
+        // Global trees carry no addresses — empty groups.
+        let groups: Vec<BlockGroup> = vec![vec![]; n_blocks];
+        e.tree.insert(&tokens[..usable], &groups, now);
+    }
+
+    /// Matched prefix length (tokens) of `tokens` on every prefill-capable
+    /// instance — the parallel match step of the scheduling path.
+    pub fn match_all(&mut self, tokens: &[u32], now: f64)
+                     -> Vec<(InstanceId, usize)> {
+        self.trees
+            .iter_mut()
+            .filter(|(_, e)| e.kind.runs_prefill())
+            .map(|(id, e)| (*id, e.tree.match_prefix(tokens, now).tokens))
+            .collect()
+    }
+
+    /// Matched prefix on one specific instance.
+    pub fn match_one(&mut self, id: InstanceId, tokens: &[u32], now: f64)
+                     -> usize {
+        self.trees
+            .get_mut(&id)
+            .map(|e| e.tree.match_prefix(tokens, now).tokens)
+            .unwrap_or(0)
+    }
+
+    /// TTL housekeeping over all trees.
+    pub fn expire(&mut self, now: f64) {
+        for e in self.trees.values_mut() {
+            e.tree.expire(now);
+        }
+    }
+
+    /// Total cached token-blocks believed to exist per instance.
+    pub fn cached_blocks(&self, id: InstanceId) -> usize {
+        self.trees
+            .get(&id)
+            .map(|e| e.tree.total_token_blocks())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 3 + seed).collect()
+    }
+
+    #[test]
+    fn record_and_match() {
+        let mut g = GlobalPromptTrees::new(16, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        let t = toks(64, 0);
+        g.record(InstanceId(1), &t, 1.0);
+        let m = g.match_all(&t, 2.0);
+        assert_eq!(m, vec![(InstanceId(0), 0), (InstanceId(1), 64)]);
+    }
+
+    #[test]
+    fn decode_only_excluded_from_prefill_match() {
+        let mut g = GlobalPromptTrees::new(16, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::DecodeOnly);
+        let t = toks(32, 0);
+        g.record(InstanceId(1), &t, 1.0);
+        let m = g.match_all(&t, 2.0);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].0, InstanceId(0));
+        // But the decode tree still answers match_one (used for D-side
+        // incremental transfer decisions).
+        assert_eq!(g.match_one(InstanceId(1), &t, 2.0), 32);
+    }
+
+    #[test]
+    fn ttl_staleness() {
+        let mut g = GlobalPromptTrees::new(16, 10.0);
+        g.add_instance(InstanceId(0), InstanceKind::Colocated);
+        let t = toks(32, 5);
+        g.record(InstanceId(0), &t, 0.0);
+        g.expire(20.0);
+        assert_eq!(g.match_one(InstanceId(0), &t, 21.0), 0);
+    }
+
+    #[test]
+    fn remove_instance_forgets() {
+        let mut g = GlobalPromptTrees::new(16, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        let t = toks(16, 1);
+        g.record(InstanceId(0), &t, 1.0);
+        g.remove_instance(InstanceId(0));
+        assert!(g.match_all(&t, 2.0).is_empty());
+    }
+
+    #[test]
+    fn partial_blocks_rounded_down() {
+        let mut g = GlobalPromptTrees::new(16, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.record(InstanceId(0), &toks(20, 0), 1.0);
+        assert_eq!(g.match_one(InstanceId(0), &toks(20, 0), 2.0), 16);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 1);
+    }
+}

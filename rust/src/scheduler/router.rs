@@ -1,0 +1,238 @@
+//! The global scheduler core (paper §6): tokenize → match global trees →
+//! policy decision → dispatch metadata, plus the response-path tree
+//! update. Transport-agnostic: the live server and the discrete-event
+//! simulator both drive this object.
+
+use crate::mempool::InstanceId;
+use crate::scheduler::cost_model::OperatorCostModel;
+use crate::scheduler::policy::{decide, Candidate, Decision, PolicyKind};
+use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
+
+/// Per-instance load the caller keeps updated (queued prompt tokens).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InstanceLoad {
+    pub queued_tokens: usize,
+    pub queued_cached_ratio: f64,
+    pub running: usize,
+}
+
+/// What the GS tells the chosen instance (and the caller) to do.
+#[derive(Clone, Debug)]
+pub struct RouteOutcome {
+    pub decision: Decision,
+    /// Expected prefill seconds on the chosen instance (cost model).
+    pub expected_prefill_s: f64,
+    /// Eq. 2 verdict when a donor exists: fetch the extra prefix?
+    pub fetch_from_donor: bool,
+}
+
+pub struct GlobalScheduler {
+    pub trees: GlobalPromptTrees,
+    pub policy: PolicyKind,
+    pub cost: OperatorCostModel,
+    /// Fabric characteristics for Eq. 2.
+    pub bytes_per_token: usize,
+    pub bandwidth_bytes_per_s: f64,
+    pub per_call_s: f64,
+    pub calls_per_token_block: usize,
+    pub block_tokens: usize,
+    pub transfer_decision_enabled: bool,
+}
+
+impl GlobalScheduler {
+    pub fn new(
+        policy: PolicyKind,
+        cost: OperatorCostModel,
+        block_tokens: usize,
+        ttl: f64,
+    ) -> Self {
+        GlobalScheduler {
+            trees: GlobalPromptTrees::new(block_tokens, ttl),
+            policy,
+            cost,
+            bytes_per_token: 0,
+            bandwidth_bytes_per_s: 40e9,
+            per_call_s: 15e-6,
+            calls_per_token_block: 1,
+            block_tokens,
+            transfer_decision_enabled: true,
+        }
+    }
+
+    pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
+        self.trees.add_instance(id, kind);
+    }
+
+    /// Route one request among prefill-capable instances.
+    ///
+    /// `loads` must supply an entry for every candidate returned by the
+    /// trees (missing entries are treated as idle).
+    pub fn route(
+        &mut self,
+        prompt: &[u32],
+        session_id: u64,
+        loads: &dyn Fn(InstanceId) -> InstanceLoad,
+        now: f64,
+    ) -> anyhow::Result<RouteOutcome> {
+        let matches = self.trees.match_all(prompt, now);
+        anyhow::ensure!(
+            !matches.is_empty(),
+            "no prefill-capable instances registered"
+        );
+        let candidates: Vec<Candidate> = matches
+            .iter()
+            .map(|&(id, matched)| {
+                let l = loads(id);
+                Candidate {
+                    instance: id,
+                    queued_tokens: l.queued_tokens,
+                    queued_cached_ratio: l.queued_cached_ratio,
+                    matched_tokens: matched,
+                }
+            })
+            .collect();
+        let cost = &self.cost;
+        let decision = decide(
+            self.policy,
+            &candidates,
+            prompt.len(),
+            session_id,
+            |x, y| cost.exec(x, y),
+        );
+        let x = prompt.len();
+        let y_here = decision.matched_tokens as f64 / x.max(1) as f64;
+        let expected_prefill_s = self.cost.exec(x, y_here);
+        let fetch_from_donor = match decision.donor {
+            Some((_, donor_tokens)) if self.transfer_decision_enabled => {
+                let y_donor = donor_tokens as f64 / x.max(1) as f64;
+                let extra_blocks = (donor_tokens
+                    .saturating_sub(decision.matched_tokens))
+                    / self.block_tokens.max(1);
+                self.cost.should_transfer(
+                    x,
+                    y_here,
+                    y_donor,
+                    self.bytes_per_token,
+                    self.bandwidth_bytes_per_s,
+                    self.per_call_s,
+                    extra_blocks * self.calls_per_token_block,
+                )
+            }
+            _ => false,
+        };
+        Ok(RouteOutcome {
+            decision,
+            expected_prefill_s,
+            fetch_from_donor,
+        })
+    }
+
+    /// Response path (paper Fig 6 right): the instance now caches the
+    /// prompt + generated tokens.
+    pub fn record_cached(&mut self, instance: InstanceId, tokens: &[u32],
+                         now: f64) {
+        self.trees.record(instance, tokens, now);
+    }
+
+    pub fn expire(&mut self, now: f64) {
+        self.trees.expire(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gs(policy: PolicyKind) -> GlobalScheduler {
+        let mut g = GlobalScheduler::new(
+            policy,
+            OperatorCostModel::paper_13b(),
+            16,
+            0.0,
+        );
+        g.bytes_per_token = 2 * 4 * 8 * 32 * 4;
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(2), InstanceKind::DecodeOnly);
+        g
+    }
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i.wrapping_mul(31).wrapping_add(seed)).collect()
+    }
+
+    fn idle(_: InstanceId) -> InstanceLoad {
+        InstanceLoad::default()
+    }
+
+    #[test]
+    fn routes_to_cache_holder() {
+        let mut g = gs(PolicyKind::PromptTree);
+        let t = toks(256, 0);
+        g.record_cached(InstanceId(1), &t, 1.0);
+        let out = g.route(&t, 9, &idle, 2.0).unwrap();
+        assert_eq!(out.decision.instance, InstanceId(1));
+        assert_eq!(out.decision.matched_tokens, 256);
+        assert!(!out.fetch_from_donor);
+    }
+
+    #[test]
+    fn decode_only_never_chosen() {
+        let mut g = gs(PolicyKind::LeastLoad);
+        for s in 0..20 {
+            let out = g.route(&toks(64, s), s as u64, &idle, 1.0).unwrap();
+            assert_ne!(out.decision.instance, InstanceId(2));
+        }
+    }
+
+    #[test]
+    fn donor_transfer_engages_for_big_gap() {
+        let mut g = gs(PolicyKind::PromptTree);
+        g.bandwidth_bytes_per_s = 200e9;
+        let t = toks(4096, 1);
+        // Instance 0 has nearly everything cached but is overloaded, so
+        // Eq. 1 picks instance 1; Eq. 2 should then fetch from 0.
+        g.record_cached(InstanceId(0), &t, 1.0);
+        let loads = |id: InstanceId| {
+            if id == InstanceId(0) {
+                InstanceLoad {
+                    queued_tokens: 1_000_000,
+                    ..Default::default()
+                }
+            } else {
+                InstanceLoad::default()
+            }
+        };
+        let out = g.route(&t, 3, &loads, 2.0).unwrap();
+        assert_eq!(out.decision.instance, InstanceId(1));
+        let (donor, donor_tokens) = out.decision.donor.unwrap();
+        assert_eq!(donor, InstanceId(0));
+        assert_eq!(donor_tokens, 4096);
+        assert!(out.fetch_from_donor);
+    }
+
+    #[test]
+    fn expected_prefill_reflects_cache() {
+        let mut g = gs(PolicyKind::PromptTree);
+        let t = toks(1024, 7);
+        let cold = g.route(&t, 0, &idle, 1.0).unwrap().expected_prefill_s;
+        g.record_cached(InstanceId(0), &t, 1.5);
+        let warm = g.route(&t, 0, &idle, 2.0).unwrap().expected_prefill_s;
+        assert!(warm < cold, "warm={warm} cold={cold}");
+    }
+
+    #[test]
+    fn transfer_decision_can_be_disabled() {
+        let mut g = gs(PolicyKind::PromptTree);
+        g.transfer_decision_enabled = false;
+        g.bandwidth_bytes_per_s = 1e15;
+        let t = toks(4096, 1);
+        g.record_cached(InstanceId(0), &t, 1.0);
+        let loads = |id: InstanceId| InstanceLoad {
+            queued_tokens: if id == InstanceId(0) { 1_000_000 } else { 0 },
+            ..Default::default()
+        };
+        let out = g.route(&t, 3, &loads, 2.0).unwrap();
+        assert!(!out.fetch_from_donor);
+    }
+}

@@ -1,0 +1,486 @@
+//! Instance thread loops: colocated / prefill-only / decode-only roles
+//! composed from [`crate::engine::Engine`] primitives.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::engine::kv as kvops;
+use crate::engine::{
+    ActiveDecodeSet, DisaggMilestone, Engine, EngineOptions,
+};
+use crate::engine::core::ActiveDecode;
+use crate::mempool::{BlockGeometry, InstanceId, MemPool, TransferMode};
+use crate::net::{Endpoint, Fabric};
+use crate::runtime::ModelRuntime;
+use crate::scheduler::prompt_tree::InstanceKind;
+use crate::server::message::Msg;
+
+pub struct InstanceConfig {
+    pub id: InstanceId,
+    pub kind: InstanceKind,
+    pub leader: InstanceId,
+    pub context_caching: bool,
+    pub milestone: DisaggMilestone,
+    pub transfer_mode: TransferMode,
+    pub max_batch: usize,
+    pub heartbeat_every: Duration,
+    pub geom: BlockGeometry,
+    pub hbm_blocks: usize,
+    pub dram_blocks: usize,
+    pub index_ttl_s: f64,
+    /// Where this decode instance returns decode KV (milestone 3);
+    /// by leader convention, its paired prefill instance.
+    pub backflow_to: Option<InstanceId>,
+    /// Cluster-wide clock epoch (shared with the leader so timestamps
+    /// are comparable across threads).
+    pub epoch: Instant,
+}
+
+/// Run one instance until `Shutdown`. Designed to be spawned on its own
+/// thread; owns its Engine (pool + shared runtime).
+pub fn run_instance(
+    cfg: InstanceConfig,
+    runtime: Arc<ModelRuntime>,
+    fabric: Fabric<Msg>,
+    endpoint: Endpoint<Msg>,
+) {
+    let pool = MemPool::new(
+        cfg.id,
+        cfg.geom,
+        cfg.hbm_blocks,
+        cfg.dram_blocks,
+        cfg.index_ttl_s,
+        true,
+    );
+    let caching = cfg.context_caching
+        && match cfg.kind {
+            InstanceKind::Colocated => true,
+            InstanceKind::PrefillOnly => cfg.milestone.prefill_caches(),
+            InstanceKind::DecodeOnly => cfg.milestone.decode_caches(),
+        };
+    let mut engine = Engine::new(
+        runtime,
+        pool,
+        EngineOptions {
+            context_caching: caching,
+            max_batch: cfg.max_batch,
+        },
+    );
+    let epoch = cfg.epoch;
+    let now = move || epoch.elapsed().as_secs_f64();
+    let mut active = ActiveDecodeSet::default();
+    let mut last_beat = Instant::now();
+    let mut rr = 0usize; // round-robin cursor over active decodes
+
+    loop {
+        // Heartbeat.
+        if last_beat.elapsed() >= cfg.heartbeat_every {
+            let _ = fabric.send(cfg.id, cfg.leader, Msg::Heartbeat {
+                from: cfg.id,
+            });
+            last_beat = Instant::now();
+        }
+        // Drain the inbox (non-blocking while there is decode work).
+        let msg = if active.is_empty() {
+            match endpoint.recv_timeout(cfg.heartbeat_every / 2) {
+                Ok((_, m)) => Some(m),
+                Err(_) => None,
+            }
+        } else {
+            endpoint.try_recv().map(|(_, m)| m)
+        };
+        match msg {
+            Some(Msg::Shutdown) => return,
+            Some(Msg::Dispatch { req, decode_to }) => {
+                handle_dispatch(
+                    &cfg, &mut engine, &fabric, &mut active, req,
+                    decode_to, now(),
+                );
+            }
+            Some(Msg::KvHandoff {
+                req,
+                payload,
+                n_blocks,
+                prompt_len,
+                cached_tokens,
+                scheduled,
+                first_token_time,
+                logits,
+                insert,
+                ..
+            }) => {
+                handle_handoff(
+                    &cfg, &mut engine, &fabric, &mut active, req, payload,
+                    n_blocks, prompt_len, cached_tokens, scheduled,
+                    first_token_time, logits, insert, now(),
+                );
+            }
+            Some(Msg::KvBackflow {
+                seq,
+                payload,
+                n_blocks,
+                suffix_start_block,
+                ..
+            }) => {
+                // transfer_with_insert receive path (step 5 landing).
+                let t = now();
+                if let Ok(groups) = import_groups(
+                    &mut engine, &payload, n_blocks, t,
+                ) {
+                    let _ = engine.insert_suffix(
+                        &seq, groups, suffix_start_block, t,
+                    );
+                }
+            }
+            Some(Msg::Membership { dead, .. }) => {
+                // §4.4: release anything owned by dead peers. Local pools
+                // hold only local blocks, so this is bookkeeping today;
+                // in-flight requests to dead peers fail at send and are
+                // retried by the leader.
+                for d in dead {
+                    engine.pool.release_remote(d);
+                }
+            }
+            Some(Msg::Token { .. })
+            | Some(Msg::Finished { .. })
+            | Some(Msg::Heartbeat { .. }) => {} // leader-bound; ignore
+            None => {}
+        }
+
+        // One decode iteration (round-robin one request per loop so the
+        // inbox stays responsive — iteration-level scheduling).
+        if !active.is_empty() {
+            rr %= active.len();
+            let finished = {
+                let a = &mut active.jobs[rr];
+                match engine.step(a) {
+                    Ok(outcome) => {
+                        let done = matches!(
+                            outcome,
+                            crate::engine::StepOutcome::Finished(_)
+                        );
+                        let tok = *a.generated.last().unwrap();
+                        let _ = fabric.send(cfg.id, cfg.leader, Msg::Token {
+                            rid: a.req.id,
+                            token: tok,
+                            done,
+                        });
+                        done
+                    }
+                    Err(e) => {
+                        log::error!("decode step failed: {e:#}");
+                        true
+                    }
+                }
+            };
+            if finished {
+                let a = active.jobs.swap_remove(rr);
+                finish_decode(&cfg, &mut engine, &fabric, a, now());
+            } else {
+                rr += 1;
+            }
+        }
+    }
+}
+
+fn import_groups(
+    engine: &mut Engine,
+    payload: &[f32],
+    n_blocks: usize,
+    now: f64,
+) -> anyhow::Result<Vec<Vec<crate::mempool::BlockAddr>>> {
+    let per = engine.pool.geometry().blocks_per_token_block();
+    let addrs = engine.pool.import_blocks(
+        payload,
+        n_blocks,
+        None,
+        crate::mempool::Tier::Hbm,
+        now,
+    )?;
+    Ok(addrs.chunks(per).map(|c| c.to_vec()).collect())
+}
+
+fn handle_dispatch(
+    cfg: &InstanceConfig,
+    engine: &mut Engine,
+    fabric: &Fabric<Msg>,
+    active: &mut ActiveDecodeSet,
+    req: crate::engine::Request,
+    decode_to: Option<InstanceId>,
+    t: f64,
+) {
+    let scheduled = t;
+    let pf = match engine.prefill(&req.prompt, t) {
+        Ok(pf) => pf,
+        Err(e) => {
+            log::error!("prefill failed rid={}: {e:#}", req.id);
+            let _ = fabric.send(cfg.id, cfg.leader, Msg::Token {
+                rid: req.id,
+                token: crate::tokenizer::EOS,
+                done: true,
+            });
+            return;
+        }
+    };
+    match decode_to {
+        None => {
+            // Colocated: first token + local decode.
+            let rid = req.id;
+            match engine.start_decode(req, pf) {
+                Ok(a) => {
+                    let _ = fabric.send(cfg.id, cfg.leader, Msg::Token {
+                        rid,
+                        token: a.pending_token,
+                        done: false,
+                    });
+                    let mut a = a;
+                    a.scheduled = scheduled;
+                    a.first_token_time =
+                        t.max(scheduled); // prefill emitted now
+                    active.jobs.push(a);
+                }
+                Err(e) => log::error!("start_decode rid={rid}: {e:#}"),
+            }
+        }
+        Some(d) => {
+            // Disaggregated: export the full prompt KV, hand off, retire
+            // locally (milestone step 2 caches at P).
+            let first_token_time = t;
+            let mut groups = pf.prefix_groups.clone();
+            groups.extend(pf.new_groups.iter().cloned());
+            let flat: Vec<_> = groups.iter().flatten().copied().collect();
+            let payload = match engine.pool.export_blocks(&flat) {
+                Ok(p) => p,
+                Err(e) => {
+                    log::error!("export failed: {e:#}");
+                    return;
+                }
+            };
+            let calls = cfg
+                .transfer_mode
+                .network_calls(engine.pool.geometry(), pf.prompt_len);
+            let msg = Msg::KvHandoff {
+                payload,
+                n_blocks: flat.len(),
+                prompt_len: pf.prompt_len,
+                cached_tokens: pf.cached_tokens,
+                scheduled,
+                first_token_time,
+                logits: pf.logits.clone(),
+                calls,
+                insert: cfg.milestone.decode_caches(),
+                req: req.clone(),
+            };
+            if let Err(e) = fabric.send(cfg.id, d, msg) {
+                log::error!("handoff to {d} failed: {e}");
+            }
+            if let Err(e) = engine.retire_prefill(&req.prompt, pf, t) {
+                log::error!("retire_prefill: {e:#}");
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_handoff(
+    cfg: &InstanceConfig,
+    engine: &mut Engine,
+    fabric: &Fabric<Msg>,
+    active: &mut ActiveDecodeSet,
+    req: crate::engine::Request,
+    payload: Vec<f32>,
+    n_blocks: usize,
+    prompt_len: usize,
+    cached_tokens: usize,
+    scheduled: f64,
+    first_token_time: f64,
+    logits: Vec<f32>,
+    _insert: bool,
+    t: f64,
+) {
+    let groups = match import_groups(engine, &payload, n_blocks, t) {
+        Ok(g) => g,
+        Err(e) => {
+            log::error!("import failed rid={}: {e:#}", req.id);
+            return;
+        }
+    };
+    let rid = req.id;
+    match engine.start_decode_from_blocks(req, groups, prompt_len, logits, 0)
+    {
+        Ok(mut a) => {
+            a.cached_tokens = cached_tokens;
+            a.scheduled = scheduled;
+            a.first_token_time = first_token_time;
+            let _ = fabric.send(cfg.id, cfg.leader, Msg::Token {
+                rid,
+                token: a.pending_token,
+                done: false,
+            });
+            active.jobs.push(a);
+        }
+        Err(e) => log::error!("start_decode_from_blocks rid={rid}: {e:#}"),
+    }
+}
+
+fn finish_decode(
+    cfg: &InstanceConfig,
+    engine: &mut Engine,
+    fabric: &Fabric<Msg>,
+    mut a: ActiveDecode,
+    t: f64,
+) {
+    let rid = a.req.id;
+    let prompt_tokens = a.req.prompt.len();
+    let cached_tokens = a.cached_tokens;
+    let output_tokens = a.generated.len();
+    let scheduled = a.scheduled;
+    let first_token_time = a.first_token_time;
+    let prompt_len = a.prompt_len;
+    let consumed = a.sess.pos;
+
+    // Milestone 3: ship the decode-produced KV suffix back to a prefill
+    // instance BEFORE retiring (retire consumes the session).
+    let backflow = if cfg.kind == InstanceKind::DecodeOnly
+        && cfg.milestone.decode_to_prefill()
+    {
+        let bt = engine.pool.geometry().block_tokens;
+        let full_prompt_blocks = prompt_len / bt;
+        let total_full_blocks = consumed / bt;
+        if total_full_blocks > full_prompt_blocks {
+            let from = full_prompt_blocks * bt;
+            let to = total_full_blocks * bt;
+            match engine.runtime.decode_kv(&mut a.sess) {
+                Ok(kv_host) => {
+                    let geom = *engine.pool.geometry();
+                    let tail = kvops::slice_tokens(
+                        &geom, &kv_host, a.sess.ctx, from, to,
+                    );
+                    let mut seq = a.req.prompt.clone();
+                    seq.extend_from_slice(
+                        &a.generated[..consumed - prompt_len],
+                    );
+                    Some((seq, tail, (to - from) / bt, full_prompt_blocks))
+                }
+                Err(e) => {
+                    log::error!("decode_kv for backflow: {e:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+
+    let cached_seq = match engine.retire(a, t) {
+        Ok(seq) => seq,
+        Err(e) => {
+            log::error!("retire rid={rid}: {e:#}");
+            vec![]
+        }
+    };
+
+    if let Some((seq, tail, n_token_blocks, suffix_start)) = backflow {
+        // Re-pack the tail into block-layout payload (bucket = tail len).
+        let n_tokens = n_token_blocks * engine.pool.geometry().block_tokens;
+        let geom = *engine.pool.geometry();
+        let per = geom.blocks_per_token_block();
+        let payload = pack_payload(&geom, &tail, n_tokens);
+        let calls = cfg
+            .transfer_mode
+            .network_calls(&geom, n_tokens)
+            .max(1);
+        let msg = Msg::KvBackflow {
+            seq,
+            payload,
+            n_blocks: n_token_blocks * per,
+            suffix_start_block: suffix_start,
+            calls,
+        };
+        // Target: the leader-designated paired prefill instance.
+        if let Some(p) = cfg.backflow_to {
+            if let Err(e) = fabric.send(cfg.id, p, msg) {
+                log::warn!("backflow to {p} failed: {e}");
+            }
+        }
+    }
+
+    let _ = fabric.send(cfg.id, cfg.leader, Msg::Finished {
+        rid,
+        instance: cfg.id,
+        prompt_tokens,
+        cached_tokens,
+        output_tokens,
+        scheduled,
+        first_token_time,
+        completion_time: t,
+        cached_seq,
+    });
+}
+
+/// Pack a contiguous `[L,2,n,H,hd]` tail into the block-export layout
+/// (the same layout `export_blocks` produces) without round-tripping
+/// through the pool: scatter into a scratch pool then export would cost
+/// an alloc; direct repack is equivalent.
+fn pack_payload(geom: &BlockGeometry, tail: &[f32], n_tokens: usize)
+                -> Vec<f32> {
+    let s = geom.n_heads * geom.head_dim;
+    let bt = geom.block_tokens;
+    let n_blocks = n_tokens / bt;
+    let fpb = geom.floats_per_block();
+    let per = geom.blocks_per_token_block();
+    let mut out = vec![0f32; n_blocks * per * fpb];
+    for b in 0..n_blocks {
+        for l in 0..geom.layers {
+            for h in 0..2 {
+                for t in 0..bt {
+                    let tok = b * bt + t;
+                    let src = ((l * 2 + h) * n_tokens + tok) * s;
+                    let dst = if geom.aggregated {
+                        b * fpb + ((l * 2 + h) * bt + t) * s
+                    } else {
+                        (b * per + l * 2 + h) * fpb + t * s
+                    };
+                    out[dst..dst + s].copy_from_slice(&tail[src..src + s]);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_payload_matches_export_layout() {
+        use crate::mempool::MemPool;
+        let geom = BlockGeometry {
+            block_tokens: 4,
+            layers: 2,
+            n_heads: 2,
+            head_dim: 3,
+            aggregated: true,
+        };
+        let mut rng = crate::util::rng::Rng::new(1);
+        let n_tokens = 8;
+        let s = geom.n_heads * geom.head_dim;
+        let tail: Vec<f32> = (0..geom.layers * 2 * n_tokens * s)
+            .map(|_| rng.f64() as f32)
+            .collect();
+        // Reference: scatter into a pool then export.
+        let mut pool =
+            MemPool::new(InstanceId(0), geom, 8, 0, 0.0, true);
+        let groups = crate::engine::kv::scatter_new_kv(
+            &mut pool, &tail, n_tokens, n_tokens, 0.0,
+        )
+        .unwrap();
+        let flat: Vec<_> = groups.iter().flatten().copied().collect();
+        let expect = pool.export_blocks(&flat).unwrap();
+        let got = pack_payload(&geom, &tail, n_tokens);
+        assert_eq!(got, expect);
+    }
+}

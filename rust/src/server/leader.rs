@@ -1,0 +1,510 @@
+//! The leader: global scheduler + cluster manager + client API.
+//!
+//! `ServeCluster::start` spawns the instance threads and a collector
+//! thread; `ClientHandle` is the public API — submit prompts (text or
+//! tokens) and collect streamed responses with full request metrics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cluster::ClusterManager;
+use crate::config::Config;
+use crate::engine::{DisaggMilestone, Request, SamplingParams};
+use crate::mempool::{BlockGeometry, InstanceId};
+use crate::metrics::{Metrics, RequestRecord};
+use crate::net::{Fabric, LinkModel};
+use crate::runtime::ModelRuntime;
+use crate::scheduler::cost_model::OperatorCostModel;
+use crate::scheduler::prompt_tree::InstanceKind;
+use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
+use crate::server::instance::{run_instance, InstanceConfig};
+use crate::server::message::Msg;
+use crate::tokenizer::Tokenizer;
+
+const LEADER: InstanceId = InstanceId(u32::MAX);
+
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub config: Config,
+    pub milestone: DisaggMilestone,
+    /// Model the wire by actually sleeping for the link time (true for
+    /// perf-realistic examples; false for fast tests).
+    pub real_sleep: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            config: Config::default(),
+            milestone: DisaggMilestone::PdCaching3,
+            real_sleep: false,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Pending {
+    tokens: Vec<u32>,
+    record: Option<RequestRecord>,
+    done: bool,
+    /// Prompt retained for re-dispatch on instance failure.
+    prompt: Vec<u32>,
+    session: u64,
+    sampling: SamplingParams,
+    dispatched_to: InstanceId,
+}
+
+struct Shared {
+    pending: Mutex<HashMap<u64, Pending>>,
+    cv: Condvar,
+}
+
+pub struct ServeCluster {
+    fabric: Fabric<Msg>,
+    gs: Mutex<GlobalScheduler>,
+    cm: Mutex<ClusterManager>,
+    shared: Arc<Shared>,
+    instances: Vec<(InstanceId, InstanceKind)>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    next_rid: AtomicU64,
+    started: Instant,
+    tokenizer: Tokenizer,
+    opts: ServeOptions,
+    metrics: Mutex<Metrics>,
+    /// Decode pairing for disaggregated dispatch (round-robin).
+    decode_rr: AtomicU64,
+}
+
+/// Client-facing handle (cheap to clone via Arc).
+pub type ClientHandle = Arc<ServeCluster>;
+
+impl ServeCluster {
+    /// Spawn the whole cluster. `runtime` is shared by all instances
+    /// (the PJRT CPU client is thread-safe; each instance still owns its
+    /// MemPool and decode sessions).
+    pub fn start(opts: ServeOptions, runtime: Arc<ModelRuntime>)
+                 -> Result<ClientHandle> {
+        let cfgc = &opts.config;
+        let link = LinkModel::from_config(&cfgc.fabric);
+        let fabric: Fabric<Msg> = Fabric::new(link, opts.real_sleep);
+        let geom = BlockGeometry {
+            block_tokens: cfgc.mempool.block_tokens,
+            layers: runtime.meta.layers,
+            n_heads: runtime.meta.n_heads,
+            head_dim: runtime.meta.head_dim,
+            aggregated: cfgc.mempool.aggregated_layout,
+        };
+        let mut cost = OperatorCostModel::default_tiny();
+        // Calibration from artifacts/cost_model.json when present.
+        if let Ok(text) =
+            std::fs::read_to_string(format!("{}/cost_model.json",
+                                            cfgc.artifacts_dir))
+        {
+            if let Ok(j) = crate::util::json::Json::parse(&text) {
+                cost = crate::scheduler::cost_model::model_from_json(&j)
+                    .unwrap_or(cost);
+            }
+        }
+        let mut gs = GlobalScheduler::new(
+            cfgc.scheduler.policy,
+            cost,
+            geom.block_tokens,
+            cfgc.scheduler.tree_ttl_s,
+        );
+        gs.bytes_per_token = geom.floats_per_token() * 4;
+        gs.bandwidth_bytes_per_s = cfgc.fabric.bandwidth_gbps * 1e9;
+        gs.per_call_s = cfgc.fabric.call_overhead_us * 1e-6;
+        gs.transfer_decision_enabled = cfgc.scheduler.transfer_decision;
+
+        let mut cm = ClusterManager::new(
+            cfgc.cluster.heartbeat_ms / 1e3,
+            cfgc.cluster.heartbeat_misses,
+        );
+
+        let mut specs = vec![];
+        let mut id = 0u32;
+        for _ in 0..cfgc.cluster.prefill_instances {
+            specs.push((InstanceId(id), InstanceKind::PrefillOnly));
+            id += 1;
+        }
+        for _ in 0..cfgc.cluster.decode_instances {
+            specs.push((InstanceId(id), InstanceKind::DecodeOnly));
+            id += 1;
+        }
+        for _ in 0..cfgc.cluster.colocated_instances {
+            specs.push((InstanceId(id), InstanceKind::Colocated));
+            id += 1;
+        }
+        for &(iid, kind) in &specs {
+            gs.add_instance(iid, kind);
+            cm.register(iid, kind, 0.0);
+        }
+
+        let epoch = Instant::now();
+        let leader_ep = fabric.attach(LEADER);
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        });
+
+        let prefills: Vec<InstanceId> = specs
+            .iter()
+            .filter(|(_, k)| *k == InstanceKind::PrefillOnly)
+            .map(|(i, _)| *i)
+            .collect();
+        let mut handles = vec![];
+        for (idx, &(iid, kind)) in specs.iter().enumerate() {
+            let backflow_to = if kind == InstanceKind::DecodeOnly
+                && !prefills.is_empty()
+            {
+                Some(prefills[idx % prefills.len()])
+            } else {
+                None
+            };
+            let icfg = InstanceConfig {
+                id: iid,
+                kind,
+                leader: LEADER,
+                context_caching: cfgc.mempool.context_caching,
+                milestone: opts.milestone,
+                transfer_mode: cfgc.engine.transfer_mode,
+                max_batch: cfgc.engine.max_batch,
+                heartbeat_every: Duration::from_secs_f64(
+                    cfgc.cluster.heartbeat_ms / 1e3,
+                ),
+                geom,
+                hbm_blocks: cfgc.mempool.hbm_blocks,
+                dram_blocks: cfgc.mempool.dram_blocks,
+                index_ttl_s: cfgc.mempool.index_ttl_s,
+                backflow_to,
+                epoch,
+            };
+            let rt = runtime.clone();
+            let fab = fabric.clone();
+            let ep = fabric.attach(iid);
+            handles.push(std::thread::spawn(move || {
+                run_instance(icfg, rt, fab, ep);
+            }));
+        }
+
+        let cluster = Arc::new(ServeCluster {
+            fabric,
+            gs: Mutex::new(gs),
+            cm: Mutex::new(cm),
+            shared,
+            instances: specs,
+            handles: Mutex::new(handles),
+            next_rid: AtomicU64::new(1),
+            started: epoch,
+            tokenizer: Tokenizer::new(runtime.meta.vocab as u32),
+            opts,
+            metrics: Mutex::new(Metrics::default()),
+            decode_rr: AtomicU64::new(0),
+        });
+
+        // Collector thread: drains the leader endpoint.
+        let c2 = cluster.clone();
+        let h = std::thread::spawn(move || c2.collector(leader_ep));
+        cluster.handles.lock().unwrap().push(h);
+        Ok(cluster)
+    }
+
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn collector(&self, ep: crate::net::Endpoint<Msg>) {
+        let mut last_sweep = Instant::now();
+        loop {
+            // Periodic failure sweep (time-gated, runs regardless of
+            // message traffic).
+            if last_sweep.elapsed() > Duration::from_millis(20) {
+                last_sweep = Instant::now();
+                let now = self.now();
+                let dead = self.cm.lock().unwrap().sweep(now);
+                if !dead.is_empty() {
+                    self.on_failure(&dead);
+                }
+            }
+            let Ok((_, msg)) = ep.recv_timeout(Duration::from_millis(20))
+            else {
+                if self.shutting_down() {
+                    return;
+                }
+                continue;
+            };
+            match msg {
+                Msg::Token { rid, token, done } => {
+                    let mut p = self.shared.pending.lock().unwrap();
+                    if let Some(entry) = p.get_mut(&rid) {
+                        entry.tokens.push(token);
+                        if done && entry.record.is_none() {
+                            // Finished may still follow with metrics.
+                        }
+                    }
+                }
+                Msg::Finished {
+                    rid,
+                    instance,
+                    prompt_tokens,
+                    cached_tokens,
+                    output_tokens,
+                    scheduled,
+                    first_token_time,
+                    completion_time,
+                    cached_seq,
+                } => {
+                    // Response path: update global prompt trees (Fig 6).
+                    if !cached_seq.is_empty() {
+                        self.gs.lock().unwrap().record_cached(
+                            instance,
+                            &cached_seq,
+                            self.now(),
+                        );
+                    }
+                    let mut p = self.shared.pending.lock().unwrap();
+                    if let Some(entry) = p.get_mut(&rid) {
+                        let rec = RequestRecord {
+                            request_id: rid,
+                            session_id: entry.session,
+                            arrival: entry
+                                .record
+                                .as_ref()
+                                .map(|r| r.arrival)
+                                .unwrap_or(scheduled),
+                            scheduled,
+                            first_token: first_token_time,
+                            completion: completion_time,
+                            prompt_tokens,
+                            cached_tokens,
+                            output_tokens,
+                            prefill_instance: entry.dispatched_to.0,
+                            decode_instance: instance.0,
+                        };
+                        self.metrics.lock().unwrap().push(rec.clone());
+                        entry.record = Some(rec);
+                        entry.done = true;
+                        self.shared.cv.notify_all();
+                    }
+                }
+                Msg::Heartbeat { from } => {
+                    self.cm.lock().unwrap().heartbeat(from, self.now());
+                }
+                Msg::Shutdown => return,
+                other => log::debug!("leader ignoring {other:?}"),
+            }
+        }
+    }
+
+    fn shutting_down(&self) -> bool {
+        false // replaced by Shutdown message on drop path
+    }
+
+    fn on_failure(&self, dead: &[InstanceId]) {
+        log::warn!("instances failed: {dead:?}");
+        {
+            let mut gs = self.gs.lock().unwrap();
+            for d in dead {
+                gs.trees.remove_instance(*d);
+            }
+        }
+        let epoch = self.cm.lock().unwrap().epoch();
+        for &(iid, _) in &self.instances {
+            if !dead.contains(&iid) {
+                let _ = self.fabric.send(LEADER, iid, Msg::Membership {
+                    epoch,
+                    dead: dead.to_vec(),
+                });
+            }
+        }
+        // Re-dispatch in-flight requests that were on dead instances.
+        let retry: Vec<(u64, Vec<u32>, u64, SamplingParams)> = {
+            let p = self.shared.pending.lock().unwrap();
+            p.iter()
+                .filter(|(_, e)| {
+                    !e.done && dead.contains(&e.dispatched_to)
+                })
+                .map(|(rid, e)| {
+                    (*rid, e.prompt.clone(), e.session, e.sampling)
+                })
+                .collect()
+        };
+        for (rid, prompt, session, sampling) in retry {
+            log::info!("re-dispatching rid={rid} after failure");
+            {
+                let mut p = self.shared.pending.lock().unwrap();
+                if let Some(e) = p.get_mut(&rid) {
+                    e.tokens.clear();
+                }
+            }
+            let _ = self.dispatch(rid, prompt, session, sampling);
+        }
+    }
+
+    /// Is this instance currently believed alive?
+    pub fn is_alive(&self, id: InstanceId) -> bool {
+        self.cm.lock().unwrap().is_alive(id)
+    }
+
+    /// Kill an instance (failure injection for tests/examples): detaches
+    /// it from the fabric so its heartbeats stop and sends to it fail.
+    pub fn kill(&self, id: InstanceId) {
+        log::warn!("killing {id} (failure injection)");
+        self.fabric.send(LEADER, id, Msg::Shutdown).ok();
+        self.fabric.detach(id);
+    }
+
+    /// Submit raw text (tokenized by the GS — paper Fig 6 step 1).
+    pub fn submit_text(&self, text: &str, session: u64,
+                       sampling: SamplingParams) -> Result<u64> {
+        let tokens = self.tokenizer.encode_prompt(text);
+        self.submit(tokens, session, sampling)
+    }
+
+    /// Submit a tokenized prompt; returns the request id.
+    pub fn submit(&self, prompt: Vec<u32>, session: u64,
+                  sampling: SamplingParams) -> Result<u64> {
+        let rid = self.next_rid.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            let mut rec = RequestRecord::default();
+            rec.arrival = self.now();
+            p.insert(rid, Pending {
+                tokens: vec![],
+                record: Some(rec),
+                done: false,
+                prompt: prompt.clone(),
+                session,
+                sampling,
+                dispatched_to: InstanceId(0),
+            });
+        }
+        self.dispatch(rid, prompt, session, sampling)?;
+        Ok(rid)
+    }
+
+    fn dispatch(&self, rid: u64, prompt: Vec<u32>, session: u64,
+                sampling: SamplingParams) -> Result<()> {
+        let now = self.now();
+        let alive: Vec<InstanceId> = self
+            .instances
+            .iter()
+            .filter(|(i, _)| self.cm.lock().unwrap().is_alive(*i))
+            .map(|(i, _)| *i)
+            .collect();
+        let outcome = {
+            let mut gs = self.gs.lock().unwrap();
+            // Loads: approximate by in-flight request counts per instance.
+            let pend = self.shared.pending.lock().unwrap();
+            let mut queued: HashMap<InstanceId, usize> = HashMap::new();
+            for e in pend.values() {
+                if !e.done {
+                    *queued.entry(e.dispatched_to).or_insert(0) +=
+                        e.prompt.len();
+                }
+            }
+            gs.route(&prompt, session, &|id| InstanceLoad {
+                queued_tokens: queued.get(&id).copied().unwrap_or(0),
+                queued_cached_ratio: 0.0,
+                running: 0,
+            }, now)?
+        };
+        let target = outcome.decision.instance;
+        anyhow::ensure!(
+            alive.contains(&target),
+            "routed to dead instance {target}"
+        );
+        // Decode pairing for prefill-only targets: round-robin over
+        // alive decode-only instances.
+        let decode_to = if self
+            .instances
+            .iter()
+            .any(|(i, k)| *i == target && *k == InstanceKind::PrefillOnly)
+        {
+            let decs: Vec<InstanceId> = self
+                .instances
+                .iter()
+                .filter(|(i, k)| {
+                    *k == InstanceKind::DecodeOnly && alive.contains(i)
+                })
+                .map(|(i, _)| *i)
+                .collect();
+            anyhow::ensure!(!decs.is_empty(), "no decode instances alive");
+            let i = self.decode_rr.fetch_add(1, Ordering::Relaxed) as usize;
+            Some(decs[i % decs.len()])
+        } else {
+            None
+        };
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            if let Some(e) = p.get_mut(&rid) {
+                e.dispatched_to = target;
+            }
+        }
+        let req = Request {
+            id: rid,
+            session,
+            prompt,
+            sampling,
+            arrival: now,
+        };
+        self.fabric
+            .send(LEADER, target, Msg::Dispatch { req, decode_to })
+            .map_err(|e| anyhow::anyhow!("dispatch: {e}"))?;
+        Ok(())
+    }
+
+    /// Block until `rid` finishes; returns (generated tokens, record).
+    pub fn collect(&self, rid: u64, timeout: Duration)
+                   -> Result<(Vec<u32>, RequestRecord)> {
+        let deadline = Instant::now() + timeout;
+        let mut p = self.shared.pending.lock().unwrap();
+        loop {
+            if let Some(e) = p.get(&rid) {
+                if e.done {
+                    let e = p.remove(&rid).unwrap();
+                    return Ok((e.tokens, e.record.context("no record")?));
+                }
+            } else {
+                anyhow::bail!("unknown rid {rid}");
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            anyhow::ensure!(!left.is_zero(), "collect timeout for {rid}");
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(p, left.min(Duration::from_millis(100)))
+                .unwrap();
+            p = guard;
+        }
+    }
+
+    /// Aggregated metrics over completed requests.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    pub fn net_stats(&self) -> crate::net::NetStats {
+        self.fabric.stats()
+    }
+
+    pub fn instances(&self) -> &[(InstanceId, InstanceKind)] {
+        &self.instances
+    }
+
+    /// Graceful shutdown: stop instances and the collector.
+    pub fn shutdown(&self) {
+        for &(iid, _) in &self.instances {
+            let _ = self.fabric.send(LEADER, iid, Msg::Shutdown);
+        }
+        let _ = self.fabric.send(LEADER, LEADER, Msg::Shutdown);
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Wire messages between the leader and instance threads.
+
+use crate::engine::Request;
+use crate::mempool::InstanceId;
+use crate::net::WireCost;
+
+/// One cluster message. Bulk KV messages report their wire cost (bytes +
+/// per-block network calls) so the fabric models NCCL behaviour; control
+/// messages pay only the control latency.
+pub enum Msg {
+    /// Leader → prefill-capable instance: run this request. For
+    /// disaggregated requests `decode_to` names the decode instance.
+    Dispatch {
+        req: Request,
+        decode_to: Option<InstanceId>,
+    },
+    /// Prefill → decode instance: `transfer_with_insert` of the prompt KV
+    /// (one-shot, receiver allocates on demand). `calls` is the modeled
+    /// number of network API calls (layout- and mode-dependent).
+    KvHandoff {
+        req: Request,
+        payload: Vec<f32>,
+        n_blocks: usize,
+        prompt_len: usize,
+        cached_tokens: usize,
+        scheduled: f64,
+        first_token_time: f64,
+        logits: Vec<f32>,
+        calls: usize,
+        /// Receiver should insert into its index (milestone >= 2).
+        insert: bool,
+    },
+    /// Decode → prefill instance: `transfer_with_insert` of the decode
+    /// suffix KV (milestone 3). `seq` = prompt + consumed generated
+    /// tokens; payload covers blocks `[suffix_start_block..)`.
+    KvBackflow {
+        seq: Vec<u32>,
+        payload: Vec<f32>,
+        n_blocks: usize,
+        suffix_start_block: usize,
+        calls: usize,
+    },
+    /// Instance → leader: one generated token (streaming path).
+    Token {
+        rid: u64,
+        token: u32,
+        done: bool,
+    },
+    /// Instance → leader: request finished (metrics payload).
+    Finished {
+        rid: u64,
+        instance: InstanceId,
+        prompt_tokens: usize,
+        cached_tokens: usize,
+        output_tokens: usize,
+        scheduled: f64,
+        first_token_time: f64,
+        completion_time: f64,
+        /// Full consumed sequence (for global-tree update).
+        cached_seq: Vec<u32>,
+    },
+    /// Instance → leader: liveness.
+    Heartbeat { from: InstanceId },
+    /// Leader → instances: membership change (epoch-stamped).
+    Membership {
+        epoch: u64,
+        dead: Vec<InstanceId>,
+    },
+    /// Leader → instance: drain and exit.
+    Shutdown,
+}
+
+impl WireCost for Msg {
+    fn wire_cost(&self) -> Option<(usize, usize, bool, bool)> {
+        match self {
+            Msg::KvHandoff { payload, calls, .. }
+            | Msg::KvBackflow { payload, calls, .. } => {
+                Some((payload.len() * 4, (*calls).max(1), false, false))
+            }
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Debug for Msg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Msg::Dispatch { req, decode_to } => f
+                .debug_struct("Dispatch")
+                .field("rid", &req.id)
+                .field("decode_to", decode_to)
+                .finish(),
+            Msg::KvHandoff { req, n_blocks, .. } => f
+                .debug_struct("KvHandoff")
+                .field("rid", &req.id)
+                .field("n_blocks", n_blocks)
+                .finish(),
+            Msg::KvBackflow { n_blocks, .. } => f
+                .debug_struct("KvBackflow")
+                .field("n_blocks", n_blocks)
+                .finish(),
+            Msg::Token { rid, token, done } => f
+                .debug_struct("Token")
+                .field("rid", rid)
+                .field("token", token)
+                .field("done", done)
+                .finish(),
+            Msg::Finished { rid, .. } => {
+                f.debug_struct("Finished").field("rid", rid).finish()
+            }
+            Msg::Heartbeat { from } => {
+                f.debug_struct("Heartbeat").field("from", from).finish()
+            }
+            Msg::Membership { epoch, dead } => f
+                .debug_struct("Membership")
+                .field("epoch", epoch)
+                .field("dead", dead)
+                .finish(),
+            Msg::Shutdown => write!(f, "Shutdown"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SamplingParams;
+
+    #[test]
+    fn wire_cost_only_for_bulk() {
+        let hb = Msg::Heartbeat {
+            from: InstanceId(0),
+        };
+        assert!(hb.wire_cost().is_none());
+        let kv = Msg::KvBackflow {
+            seq: vec![],
+            payload: vec![0.0; 1000],
+            n_blocks: 2,
+            suffix_start_block: 0,
+            calls: 2,
+        };
+        assert_eq!(kv.wire_cost(), Some((4000, 2, false, false)));
+        let d = Msg::Dispatch {
+            req: Request {
+                id: 1,
+                session: 0,
+                prompt: vec![1],
+                sampling: SamplingParams::default(),
+                arrival: 0.0,
+            },
+            decode_to: None,
+        };
+        assert!(d.wire_cost().is_none());
+    }
+}

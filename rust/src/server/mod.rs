@@ -1,0 +1,18 @@
+//! The live serving assembly: leader + instance threads over the fabric,
+//! with real PJRT compute on every request path (Python never runs here).
+//!
+//! Topology mirrors Figure 1: a leader thread hosts the global scheduler
+//! (tokenize → global-tree match → policy → dispatch) and the cluster
+//! manager (heartbeats, failure sweeps); each inference instance is a
+//! thread owning an [`crate::engine::Engine`] (MemPool + shared
+//! `ModelRuntime`). Disaggregated KV movement uses the one-shot
+//! `transfer_with_insert` form (receiver-side on-demand allocation —
+//! Table 1 `flags`); the pre-negotiated-address handshake of Fig 2 is
+//! exercised by the transfer-mode benches and the simulator.
+
+pub mod instance;
+pub mod leader;
+pub mod message;
+
+pub use leader::{ClientHandle, ServeCluster, ServeOptions};
+pub use message::Msg;

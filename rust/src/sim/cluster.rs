@@ -1,0 +1,879 @@
+//! The cluster simulation: GS + instances + fabric on a virtual clock.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::engine::DisaggMilestone;
+use crate::mempool::{
+    BlockGeometry, InstanceId, RadixIndex, TransferMode,
+};
+use crate::metrics::{Metrics, RequestRecord};
+use crate::net::LinkModel;
+use crate::scheduler::cost_model::OperatorCostModel;
+use crate::scheduler::prompt_tree::InstanceKind;
+use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
+use crate::scheduler::PolicyKind;
+use crate::sim::clock::EventQueue;
+use crate::workload::{ArrivalPlan, WorkloadSpec};
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub prefill_instances: usize,
+    pub decode_instances: usize,
+    pub colocated_instances: usize,
+    /// Context caching (both the local indexes and GS tree routing).
+    pub caching: bool,
+    pub milestone: DisaggMilestone,
+    pub policy: PolicyKind,
+    pub transfer_mode: TransferMode,
+    pub cost: OperatorCostModel,
+    pub link: LinkModel,
+    pub geom: BlockGeometry,
+    /// HBM capacity per instance, in allocatable blocks.
+    pub hbm_blocks: usize,
+    pub max_batch: usize,
+    /// Global-tree TTL seconds (0 = off).
+    pub tree_ttl: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            prefill_instances: 1,
+            decode_instances: 1,
+            colocated_instances: 0,
+            caching: true,
+            milestone: DisaggMilestone::PdCaching3,
+            policy: PolicyKind::PromptTree,
+            transfer_mode: TransferMode::ByRequestAgg,
+            cost: OperatorCostModel::paper_13b(),
+            link: LinkModel::default(),
+            geom: BlockGeometry {
+                block_tokens: 16,
+                layers: 40,
+                n_heads: 40,
+                head_dim: 128,
+                aggregated: true,
+            },
+            hbm_blocks: 4096,
+            max_batch: 16,
+            tree_ttl: 300.0,
+        }
+    }
+}
+
+/// Simulation outcome: per-request metrics + network/caching counters.
+#[derive(Debug, Default)]
+pub struct SimReport {
+    pub metrics: Metrics,
+    pub wire_bytes: u64,
+    pub wire_calls: u64,
+    pub wire_seconds: f64,
+    pub evicted_blocks: u64,
+    pub sim_seconds: f64,
+}
+
+// ---------------------------------------------------------------------
+// Internal entities
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct Job {
+    rid: u64,
+    session: usize,
+    turn: usize,
+    prompt: Vec<u32>,
+    cached: usize,
+    gen_target: usize,
+    generated: usize,
+    rec: RequestRecord,
+    /// Decode instance chosen at routing (disaggregated only).
+    decode_inst: Option<usize>,
+    /// When the transferred KV lands at the decode instance.
+    wire_done: f64,
+    /// Receive-side cost at the decode instance: posting one recv per
+    /// block is synchronous engine work (paper §7's single NCCL thread;
+    /// the root cause of "overhead with increasing load", §5.2).
+    recv_tax: f64,
+}
+
+struct Instance {
+    id: InstanceId,
+    kind: InstanceKind,
+    index: RadixIndex,
+    /// allocatable blocks used by the index.
+    index_blocks: usize,
+    capacity_blocks: usize,
+    prefill_q: VecDeque<Job>,
+    /// decoding jobs (<= max_batch in the running set).
+    active: Vec<Job>,
+    pending_decode: VecDeque<Job>,
+    busy: bool,
+    queued_tokens: usize,
+    evicted_blocks: u64,
+    /// The outbound NCCL "thread": transfers serialize on this resource
+    /// (paper §7 — one thread per communicator for ordering). Modeled
+    /// separately from compute so by-layer can overlap the two.
+    wire_free: f64,
+    /// Receive-side call overhead accrued since the last decode
+    /// iteration; charged to the next iteration (engine contention).
+    pending_recv_tax: f64,
+}
+
+impl Instance {
+    fn new(id: u32, kind: InstanceKind, cfg: &SimConfig) -> Self {
+        Instance {
+            id: InstanceId(id),
+            kind,
+            index: RadixIndex::new(cfg.geom.block_tokens, 0.0),
+            index_blocks: 0,
+            capacity_blocks: cfg.hbm_blocks,
+            prefill_q: VecDeque::new(),
+            active: vec![],
+            pending_decode: VecDeque::new(),
+            busy: false,
+            queued_tokens: 0,
+            evicted_blocks: 0,
+            wire_free: 0.0,
+            pending_recv_tax: 0.0,
+        }
+    }
+
+    /// Insert tokens into the local index (capacity-enforced LRU).
+    fn index_insert(&mut self, tokens: &[u32], now: f64,
+                    geom: &BlockGeometry) {
+        let usable = self.index.usable_len(tokens.len());
+        let nb = usable / geom.block_tokens;
+        if nb == 0 {
+            return;
+        }
+        let per = geom.blocks_per_token_block();
+        // Evict to fit (active KV accounting is folded into capacity by
+        // reserving ~25% headroom at config time).
+        let need = nb * per;
+        while self.index_blocks + need > self.capacity_blocks
+            && self.index.total_token_blocks() > 0
+        {
+            // Sim groups carry no addresses; count freed *token-blocks*.
+            let before_tb = self.index.total_token_blocks();
+            self.index.evict_lru(1);
+            let freed_tb = before_tb - self.index.total_token_blocks();
+            if freed_tb == 0 {
+                break;
+            }
+            self.index_blocks =
+                self.index_blocks.saturating_sub(freed_tb * per);
+            self.evicted_blocks += (freed_tb * per) as u64;
+        }
+        let before = self.index.total_token_blocks();
+        let groups = vec![vec![]; nb];
+        self.index.insert(&tokens[..usable], &groups, now);
+        let added = self.index.total_token_blocks() - before;
+        self.index_blocks += added * per;
+    }
+
+    fn index_match(&mut self, tokens: &[u32], now: f64) -> usize {
+        self.index.match_prefix(tokens, now).tokens
+    }
+}
+
+enum Ev {
+    /// Release turn `turn` of session `session` (nominal or causal).
+    Send { session: usize, turn: usize },
+    /// Instance should try to start work.
+    Start { inst: usize },
+    /// A prefill finished on `inst`.
+    PrefillDone { inst: usize, job: Job },
+    /// A decode iteration finished; `rids` were in the batch.
+    IterDone { inst: usize, rids: Vec<u64> },
+    /// Transferred prompt KV landed on decode instance.
+    KvArrive { inst: usize, job: Job },
+}
+
+pub struct Simulation {
+    cfg: SimConfig,
+    spec: WorkloadSpec,
+    nominal: BTreeMap<(usize, usize), f64>,
+    instances: Vec<Instance>,
+    gs: GlobalScheduler,
+    q: EventQueue<Ev>,
+    ctx: Vec<Vec<u32>>, // per-session running context
+    report: SimReport,
+    next_rid: u64,
+}
+
+impl Simulation {
+    pub fn new(cfg: SimConfig, spec: WorkloadSpec, plan: &ArrivalPlan)
+               -> Simulation {
+        let mut instances = vec![];
+        for _ in 0..cfg.prefill_instances {
+            instances.push(Instance::new(
+                instances.len() as u32,
+                InstanceKind::PrefillOnly,
+                &cfg,
+            ));
+        }
+        for _ in 0..cfg.decode_instances {
+            instances.push(Instance::new(
+                instances.len() as u32,
+                InstanceKind::DecodeOnly,
+                &cfg,
+            ));
+        }
+        for _ in 0..cfg.colocated_instances {
+            instances.push(Instance::new(
+                instances.len() as u32,
+                InstanceKind::Colocated,
+                &cfg,
+            ));
+        }
+        assert!(!instances.is_empty());
+        let mut gs = GlobalScheduler::new(
+            cfg.policy,
+            cfg.cost.clone(),
+            cfg.geom.block_tokens,
+            cfg.tree_ttl,
+        );
+        gs.bytes_per_token = cfg.geom.floats_per_token() * 4;
+        gs.bandwidth_bytes_per_s = cfg.link.bandwidth;
+        gs.per_call_s = cfg.link.call_overhead_s;
+        gs.calls_per_token_block = if cfg.geom.aggregated {
+            1
+        } else {
+            2 * cfg.geom.layers
+        };
+        for inst in &instances {
+            gs.add_instance(inst.id, inst.kind);
+        }
+        let mut nominal = BTreeMap::new();
+        for r in &plan.requests {
+            nominal.insert((r.session_idx, r.turn_idx), r.nominal_time_s);
+        }
+        let mut q = EventQueue::new();
+        // Seed: turn 0 of every session at its nominal time.
+        for (si, _) in spec.sessions.iter().enumerate() {
+            if let Some(&t0) = nominal.get(&(si, 0)) {
+                q.push(t0, Ev::Send {
+                    session: si,
+                    turn: 0,
+                });
+            }
+        }
+        let ctx = spec
+            .sessions
+            .iter()
+            .map(|s| s.shared_prefix.clone())
+            .collect();
+        Simulation {
+            cfg,
+            spec,
+            nominal,
+            instances,
+            gs,
+            q,
+            ctx,
+            report: SimReport::default(),
+            next_rid: 1,
+        }
+    }
+
+    /// Deterministic placeholder id for generated token i of (s, t).
+    fn synth_token(&self, session: usize, turn: usize, i: usize) -> u32 {
+        // Out-of-vocab ids are fine for the index; uniqueness per
+        // position keeps prefix matching exact across turns.
+        0x4000_0000u32
+            .wrapping_add((session as u32) << 18)
+            .wrapping_add((turn as u32) << 10)
+            .wrapping_add(i as u32)
+    }
+
+    /// Run to completion; returns the report.
+    pub fn run(mut self) -> SimReport {
+        let mut guard = 0u64;
+        let limit = 200_000_000;
+        while let Some((now, ev)) = self.q.pop() {
+            guard += 1;
+            assert!(guard < limit, "simulation runaway");
+            match ev {
+                Ev::Send { session, turn } => self.on_send(now, session, turn),
+                Ev::Start { inst } => self.try_start(now, inst),
+                Ev::PrefillDone { inst, job } => {
+                    self.on_prefill_done(now, inst, job)
+                }
+                Ev::IterDone { inst, rids } => {
+                    self.on_iter_done(now, inst, rids)
+                }
+                Ev::KvArrive { inst, job } => {
+                    // Posting one recv per block is engine work on the
+                    // receiver (paper §7's single NCCL thread). While the
+                    // instance is idle it overlaps the wire for free;
+                    // under load it steals time from the running batch —
+                    // modeled by charging the accrued tax to the *next*
+                    // decode iteration (only when a batch is running).
+                    if !self.instances[inst].active.is_empty() {
+                        self.instances[inst].pending_recv_tax +=
+                            job.recv_tax;
+                    }
+                    self.on_kv_arrive(now, inst, job)
+                }
+            }
+        }
+        self.report.sim_seconds = self.q.now();
+        for inst in &self.instances {
+            self.report.evicted_blocks += inst.evicted_blocks;
+            assert!(
+                inst.prefill_q.is_empty()
+                    && inst.active.is_empty()
+                    && inst.pending_decode.is_empty(),
+                "instance {} finished with stranded work",
+                inst.id
+            );
+        }
+        self.report
+    }
+
+    fn on_send(&mut self, now: f64, session: usize, turn: usize) {
+        let user = &self.spec.sessions[session].turns[turn];
+        let mut prompt = self.ctx[session].clone();
+        prompt.extend_from_slice(&user.user_tokens);
+        let rid = self.next_rid;
+        self.next_rid += 1;
+
+        // --- Global scheduling (paper §6). ---
+        let instances = &self.instances;
+        let loads = |id: InstanceId| {
+            let inst = &instances[id.0 as usize];
+            InstanceLoad {
+                queued_tokens: inst.queued_tokens,
+                queued_cached_ratio: 0.0,
+                running: inst.active.len(),
+            }
+        };
+        let out = self
+            .gs
+            .route(&prompt, session as u64, &loads, now)
+            .expect("sim cluster has prefill-capable instances");
+        let p_idx = out.decision.instance.0 as usize;
+        // Decode instance: least-loaded decode-only (disaggregated), or
+        // the same instance (colocated).
+        let decode_inst = if self.cfg.decode_instances > 0
+            && self.instances[p_idx].kind == InstanceKind::PrefillOnly
+        {
+            Some(
+                self.instances
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, i)| i.kind == InstanceKind::DecodeOnly)
+                    .min_by_key(|(_, i)| {
+                        i.active.len() + i.pending_decode.len()
+                    })
+                    .map(|(i, _)| i)
+                    .expect("no decode instance"),
+            )
+        } else {
+            None
+        };
+
+        let rec = RequestRecord {
+            request_id: rid,
+            session_id: session as u64,
+            arrival: now,
+            prompt_tokens: prompt.len(),
+            prefill_instance: p_idx as u32,
+            decode_instance: decode_inst.unwrap_or(p_idx) as u32,
+            ..Default::default()
+        };
+        let job = Job {
+            rid,
+            session,
+            turn,
+            prompt,
+            cached: 0,
+            gen_target: user.target_gen.max(1),
+            generated: 0,
+            rec,
+            decode_inst,
+            wire_done: 0.0,
+            recv_tax: 0.0,
+        };
+        let inst = &mut self.instances[p_idx];
+        inst.queued_tokens += job.prompt.len();
+        inst.prefill_q.push_back(job);
+        self.q.push(now, Ev::Start { inst: p_idx });
+    }
+
+    /// Serial-resource discipline: prefill-first, then decode iteration.
+    fn try_start(&mut self, now: f64, i: usize) {
+        if self.instances[i].busy {
+            return;
+        }
+        // Admit pending decodes up to the batch cap at iteration
+        // boundaries.
+        while self.instances[i].active.len() < self.cfg.max_batch {
+            match self.instances[i].pending_decode.pop_front() {
+                Some(j) => self.instances[i].active.push(j),
+                None => break,
+            }
+        }
+        if let Some(mut job) = self.instances[i].prefill_q.pop_front() {
+            // --- Prefill (with local cache match). ---
+            self.instances[i].queued_tokens =
+                self.instances[i].queued_tokens.saturating_sub(job.prompt.len());
+            let cached = if self.cfg.caching {
+                let max_cached = (job.prompt.len() - 1)
+                    / self.cfg.geom.block_tokens
+                    * self.cfg.geom.block_tokens;
+                self.instances[i]
+                    .index_match(&job.prompt[..max_cached], now)
+            } else {
+                0
+            };
+            job.cached = cached;
+            job.rec.scheduled = now;
+            job.rec.cached_tokens = cached;
+            let x = job.prompt.len();
+            let y = cached as f64 / x.max(1) as f64;
+            let exec = self.cfg.cost.exec(x, y);
+            // Transfer cost to the decode instance (disagg only): the
+            // *new* suffix always ships; with decode-side caching the
+            // prefix the decoder already holds is skipped (incremental
+            // transfer, paper §5.1c).
+            if let Some(d) = job.decode_inst {
+                let skip = if self.cfg.milestone.decode_caches()
+                    && self.cfg.caching
+                {
+                    let max_cached = (job.prompt.len() - 1)
+                        / self.cfg.geom.block_tokens
+                        * self.cfg.geom.block_tokens;
+                    self.instances[d]
+                        .index_match(&job.prompt[..max_cached], now)
+                } else {
+                    0
+                };
+                let ship_tokens = x - skip;
+                let bytes =
+                    self.cfg.transfer_mode.network_bytes(&self.cfg.geom,
+                                                         ship_tokens);
+                let calls =
+                    self.cfg.transfer_mode.network_calls(&self.cfg.geom,
+                                                         ship_tokens);
+                let wire =
+                    self.cfg.link.transfer_seconds(bytes, calls, false, false);
+                self.report.wire_bytes += bytes as u64;
+                self.report.wire_calls += calls as u64;
+                self.report.wire_seconds += wire;
+                // The wire is a separate serialized resource (one NCCL
+                // thread per communicator, paper §7). By-layer may start
+                // streaming while the prefill computes (overlap), but a
+                // request's KV cannot fully land before its own last
+                // layer finishes (+ that layer's share of wire time);
+                // by-req(/agg) only starts after the prefill completes.
+                let start = if self.cfg.transfer_mode.overlaps_compute() {
+                    now // streams alongside compute
+                } else {
+                    now + exec
+                };
+                let begin = start.max(self.instances[i].wire_free);
+                let mut done = begin + wire;
+                if self.cfg.transfer_mode.overlaps_compute() {
+                    done = done.max(
+                        now + exec + wire / self.cfg.geom.layers as f64,
+                    );
+                }
+                self.instances[i].wire_free = done;
+                job.wire_done = done;
+                job.recv_tax = calls as f64 * self.cfg.link.call_overhead_s
+                    / self.cfg.link.communicators as f64;
+            }
+            self.instances[i].busy = true;
+            self.q.push(now + exec, Ev::PrefillDone {
+                inst: i,
+                job,
+            });
+        } else if !self.instances[i].active.is_empty() {
+            // --- One continuous-batching decode iteration. ---
+            let inst = &mut self.instances[i];
+            let sum_ctx: usize = inst
+                .active
+                .iter()
+                .map(|j| j.prompt.len() + j.generated)
+                .sum();
+            let dur = self.cfg.cost.decode_base
+                / self.cfg.cost.tp as f64
+                + self.cfg.cost.decode_per_ctx_token * sum_ctx as f64
+                    / self.cfg.cost.tp as f64
+                + std::mem::take(&mut inst.pending_recv_tax);
+            let rids: Vec<u64> = inst.active.iter().map(|j| j.rid).collect();
+            self.instances[i].busy = true;
+            self.q.push(now + dur, Ev::IterDone {
+                inst: i,
+                rids,
+            });
+        }
+    }
+
+    fn on_prefill_done(&mut self, now: f64, i: usize, mut job: Job) {
+        self.instances[i].busy = false;
+        job.rec.first_token = now; // prefill emits the first token
+        job.generated = 1;
+        // Caching at the prefill side (milestone step 2 / colocated).
+        let prefill_caches = match self.instances[i].kind {
+            InstanceKind::Colocated => self.cfg.caching,
+            InstanceKind::PrefillOnly => {
+                self.cfg.caching && self.cfg.milestone.prefill_caches()
+            }
+            InstanceKind::DecodeOnly => false,
+        };
+        if prefill_caches {
+            let prompt = job.prompt.clone();
+            let geom = self.cfg.geom;
+            self.instances[i].index_insert(&prompt, now, &geom);
+            self.gs.record_cached(self.instances[i].id, &prompt, now);
+        }
+        match job.decode_inst {
+            Some(d) => {
+                // The KV lands when its (serialized) transfer completes.
+                let at = job.wire_done.max(now);
+                self.q.push(at, Ev::KvArrive {
+                    inst: d,
+                    job,
+                });
+            }
+            None => {
+                // Colocated: join the local decode set.
+                if job.generated >= job.gen_target {
+                    self.finish(now, i, job);
+                } else if self.instances[i].active.len() < self.cfg.max_batch {
+                    self.instances[i].active.push(job);
+                } else {
+                    self.instances[i].pending_decode.push_back(job);
+                }
+            }
+        }
+        self.q.push(now, Ev::Start { inst: i });
+    }
+
+    fn on_kv_arrive(&mut self, now: f64, d: usize, mut job: Job) {
+        // Decode-side caching of the transferred prompt KV
+        // (transfer_with_insert — milestone step 3).
+        if self.cfg.caching && self.cfg.milestone.decode_caches() {
+            let prompt = job.prompt.clone();
+            let geom = self.cfg.geom;
+            self.instances[d].index_insert(&prompt, now, &geom);
+        }
+        if job.generated >= job.gen_target {
+            self.finish(now, d, job);
+        } else {
+            job.rec.decode_instance = d as u32;
+            if self.instances[d].active.len() < self.cfg.max_batch {
+                self.instances[d].active.push(job);
+            } else {
+                self.instances[d].pending_decode.push_back(job);
+            }
+            self.q.push(now, Ev::Start { inst: d });
+        }
+    }
+
+    fn on_iter_done(&mut self, now: f64, i: usize, rids: Vec<u64>) {
+        self.instances[i].busy = false;
+        let mut finished = vec![];
+        for rid in rids {
+            let Some(pos) = self.instances[i]
+                .active
+                .iter()
+                .position(|j| j.rid == rid)
+            else {
+                continue;
+            };
+            let j = &mut self.instances[i].active[pos];
+            j.generated += 1;
+            if j.generated >= j.gen_target {
+                finished.push(self.instances[i].active.swap_remove(pos));
+            }
+        }
+        for job in finished {
+            self.finish(now, i, job);
+        }
+        self.q.push(now, Ev::Start { inst: i });
+    }
+
+    /// Request completion: metrics, session continuation, decode-side
+    /// retirement + D→P transfer (milestone step 5).
+    fn finish(&mut self, now: f64, inst_idx: usize, mut job: Job) {
+        job.rec.completion = now;
+        job.rec.output_tokens = job.gen_target;
+        // Build the full consumed sequence (prompt + generated KV).
+        let mut seq = job.prompt.clone();
+        for k in 0..job.gen_target {
+            seq.push(self.synth_token(job.session, job.turn, k));
+        }
+        let on_decode_only =
+            self.instances[inst_idx].kind == InstanceKind::DecodeOnly;
+        if self.cfg.caching
+            && (!on_decode_only || self.cfg.milestone.decode_caches())
+        {
+            let geom = self.cfg.geom;
+            self.instances[inst_idx].index_insert(&seq, now, &geom);
+            if !on_decode_only {
+                self.gs
+                    .record_cached(self.instances[inst_idx].id, &seq, now);
+            }
+        }
+        // Step 5: decode KV flows back to the prefill instance so its
+        // cache grows turn over turn.
+        if on_decode_only
+            && self.cfg.caching
+            && self.cfg.milestone.decode_to_prefill()
+        {
+            let p = job.rec.prefill_instance as usize;
+            // Incremental: only the decode-produced suffix ships back.
+            let ship_tokens = job.gen_target;
+            let bytes = self
+                .cfg
+                .transfer_mode
+                .network_bytes(&self.cfg.geom, ship_tokens);
+            let calls = self
+                .cfg
+                .transfer_mode
+                .network_calls(&self.cfg.geom, ship_tokens);
+            let wire =
+                self.cfg.link.transfer_seconds(bytes, calls, false, false);
+            self.report.wire_bytes += bytes as u64;
+            self.report.wire_calls += calls as u64;
+            self.report.wire_seconds += wire;
+            let geom = self.cfg.geom;
+            self.instances[p].index_insert(&seq, now + wire, &geom);
+            self.gs.record_cached(self.instances[p].id, &seq, now + wire);
+        }
+        // Session continuation (causal dependency).
+        self.ctx[job.session] = seq;
+        let next = job.turn + 1;
+        if let Some(&nom) = self.nominal.get(&(job.session, next)) {
+            self.q.push(nom.max(now), Ev::Send {
+                session: job.session,
+                turn: next,
+            });
+        }
+        self.report.metrics.push(job.rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadKind;
+
+    fn workload_kind(kind: WorkloadKind, n: usize, seed: u64)
+                     -> (WorkloadSpec, ArrivalPlan) {
+        let spec = WorkloadSpec::generate(
+            kind,
+            n,
+            seed,
+            2048,
+            4096, // paper-scale context for the 13B cost model
+        );
+        let plan = ArrivalPlan::poisson(&spec, 4.0, seed);
+        (spec, plan)
+    }
+
+    fn workload(n: usize, seed: u64) -> (WorkloadSpec, ArrivalPlan) {
+        workload_kind(WorkloadKind::Loogle, n, seed)
+    }
+
+    fn run(cfg: SimConfig, n: usize, seed: u64) -> SimReport {
+        let (spec, plan) = workload(n, seed);
+        Simulation::new(cfg, spec, &plan).run()
+    }
+
+    fn run_kind(cfg: SimConfig, kind: WorkloadKind, n: usize, seed: u64)
+                -> SimReport {
+        let (spec, plan) = workload_kind(kind, n, seed);
+        Simulation::new(cfg, spec, &plan).run()
+    }
+
+    fn pd_colocated(caching: bool) -> SimConfig {
+        SimConfig {
+            prefill_instances: 0,
+            decode_instances: 0,
+            colocated_instances: 2,
+            caching,
+            ..Default::default()
+        }
+    }
+
+    fn disagg(caching: bool) -> SimConfig {
+        SimConfig {
+            prefill_instances: 1,
+            decode_instances: 1,
+            colocated_instances: 0,
+            caching,
+            milestone: if caching {
+                DisaggMilestone::PdCaching3
+            } else {
+                DisaggMilestone::PdBasic
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let (spec, plan) = workload(20, 1);
+        let total = spec.total_requests();
+        let rep = Simulation::new(pd_colocated(true), spec, &plan).run();
+        assert_eq!(rep.metrics.records.len(), total);
+        for r in &rep.metrics.records {
+            assert!(r.completion >= r.first_token);
+            assert!(r.first_token >= r.scheduled);
+            assert!(r.scheduled >= r.arrival);
+        }
+    }
+
+    #[test]
+    fn caching_improves_ttft() {
+        let base = run(pd_colocated(false), 30, 2);
+        let cached = run(pd_colocated(true), 30, 2);
+        let t0 = base.metrics.ttft().mean;
+        let t1 = cached.metrics.ttft().mean;
+        assert!(
+            t1 < t0 * 0.8,
+            "caching should cut TTFT markedly: {t1} vs {t0}"
+        );
+        assert!(cached.metrics.mean_cached_ratio() > 0.3);
+        assert_eq!(base.metrics.mean_cached_ratio(), 0.0);
+    }
+
+    #[test]
+    fn disagg_with_caching_beats_plain_disagg() {
+        let plain = run(disagg(false), 30, 3);
+        let cached = run(disagg(true), 30, 3);
+        assert!(
+            cached.metrics.jct().mean < plain.metrics.jct().mean,
+            "caching must improve disaggregated JCT"
+        );
+        assert!(
+            cached.metrics.ttft().mean < plain.metrics.ttft().mean * 0.8
+        );
+    }
+
+    #[test]
+    fn milestone3_grows_prefill_cache_over_turns() {
+        // PD-Caching-1 vs PD-Caching-3: with decode→prefill backflow the
+        // prefill cache covers previous turns' generations, so multi-turn
+        // cached ratio is higher.
+        let mk = |m: DisaggMilestone| SimConfig {
+            milestone: m,
+            ..disagg(true)
+        };
+        // ShareGPT: long generations -> the decode→prefill backflow
+        // (step 5) matters most there (paper §5.1d).
+        let m1 = run_kind(mk(DisaggMilestone::PdCaching1),
+                          WorkloadKind::ShareGpt, 30, 4);
+        let m3 = run_kind(mk(DisaggMilestone::PdCaching3),
+                          WorkloadKind::ShareGpt, 30, 4);
+        assert!(
+            m3.metrics.mean_cached_ratio()
+                > m1.metrics.mean_cached_ratio() + 0.05,
+            "m3={} m1={}",
+            m3.metrics.mean_cached_ratio(),
+            m1.metrics.mean_cached_ratio()
+        );
+        assert!(m3.metrics.ttft().mean < m1.metrics.ttft().mean);
+    }
+
+    #[test]
+    fn decode_side_caching_cuts_wire_traffic() {
+        let m1 = run(SimConfig {
+            milestone: DisaggMilestone::PdCaching1,
+            ..disagg(true)
+        }, 30, 5);
+        let m2 = run(SimConfig {
+            milestone: DisaggMilestone::PdCaching2,
+            ..disagg(true)
+        }, 30, 5);
+        assert!(
+            m2.wire_bytes < m1.wire_bytes,
+            "incremental transfer must ship fewer bytes: {} vs {}",
+            m2.wire_bytes,
+            m1.wire_bytes
+        );
+    }
+
+    #[test]
+    fn by_req_agg_reduces_calls_2l_times() {
+        let mut disc = disagg(false);
+        disc.transfer_mode = TransferMode::ByRequest;
+        let mut agg = disagg(false);
+        agg.transfer_mode = TransferMode::ByRequestAgg;
+        let rep_d = run(disc, 15, 6);
+        let rep_a = run(agg, 15, 6);
+        assert_eq!(rep_d.wire_bytes, rep_a.wire_bytes);
+        assert_eq!(rep_d.wire_calls, rep_a.wire_calls * 2 * 40);
+        assert!(rep_a.wire_seconds < rep_d.wire_seconds);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let a = run(disagg(true), 15, 7);
+        let b = run(disagg(true), 15, 7);
+        assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+        let ja = a.metrics.jct();
+        let jb = b.metrics.jct();
+        assert_eq!(ja.mean, jb.mean);
+    }
+
+    #[test]
+    fn capacity_pressure_triggers_eviction() {
+        let mut cfg = pd_colocated(true);
+        cfg.hbm_blocks = 64; // tiny cache
+        let rep = run(cfg, 40, 8);
+        assert!(rep.evicted_blocks > 0, "no eviction under tiny capacity");
+        // Still correct: all requests completed.
+        assert!(rep.metrics.records.len() > 0);
+    }
+
+    #[test]
+    fn prompt_tree_policy_beats_least_load_on_shared_workload() {
+        let mk = |p: PolicyKind| SimConfig {
+            prefill_instances: 3,
+            decode_instances: 1,
+            colocated_instances: 0,
+            policy: p,
+            ..disagg(true)
+        };
+        // ShareGPT: sharing is mostly intra-session (Table 6's hard
+        // case) — least-load scatters a session's turns across prefill
+        // instances, prompt-tree routes them home. High offered rate so
+        // queues actually build (idle least-load degenerates to a single
+        // instance and would trivially keep locality).
+        let run_at = |cfg: SimConfig, rate: f64| {
+            let spec = WorkloadSpec::generate(
+                WorkloadKind::ShareGpt, 60, 9, 2048, 4096);
+            let plan = ArrivalPlan::poisson(&spec, rate, 9);
+            Simulation::new(cfg, spec, &plan).run()
+        };
+        let ll = run_at(mk(PolicyKind::LeastLoad), 40.0);
+        let pt = run_at(mk(PolicyKind::PromptTree), 40.0);
+        // Least-load still accrues *stale partial* prefixes on every
+        // instance over a session's many turns, so the hit-ratio gap at
+        // moderate share is modest (the paper amplifies it in Fig 15 by
+        // sweeping the share ratio); direction must hold on both hit
+        // ratio and tail TTFT.
+        assert!(
+            pt.metrics.mean_cached_ratio()
+                > ll.metrics.mean_cached_ratio() + 0.01,
+            "prompt-tree should concentrate shared prefixes: {} vs {}",
+            pt.metrics.mean_cached_ratio(),
+            ll.metrics.mean_cached_ratio()
+        );
+        // Mean TTFT (the tail is dominated by policy-independent cold
+        // first turns at this scale; the Fig 15 bench sweeps share ratio
+        // to expose the tail effect).
+        assert!(
+            pt.metrics.ttft().mean < ll.metrics.ttft().mean,
+            "prompt-tree should cut mean TTFT: {} vs {}",
+            pt.metrics.ttft().mean,
+            ll.metrics.ttft().mean
+        );
+    }
+}

@@ -1,0 +1,23 @@
+//! Discrete-event simulator for request-rate sweeps (Fig 8/12/15).
+//!
+//! The live server executes real PJRT compute, so its throughput ceiling
+//! is this CPU — useless for sweeping request rates at paper scale. The
+//! simulator swaps the *compute* for the operator-level cost model
+//! (§5.3 — itself a paper artifact, validated in Fig 14) and the *wire*
+//! for [`crate::net::LinkModel`], while running the **same coordination
+//! code** as the live path: [`crate::scheduler::GlobalScheduler`] with
+//! its global prompt trees and policies, [`crate::mempool::RadixIndex`]
+//! for per-instance caches, [`crate::engine::DisaggMilestone`] for the
+//! §5.1 designs, and [`crate::mempool::TransferMode`] for Fig 5.
+//!
+//! Model per instance: a single serial resource (one GPU). Prefill jobs
+//! run whole; decode runs as continuous-batching iterations
+//! (iteration time = base + Σ per-token·ctx over the batch). Colocated
+//! instances interleave both — prefill-first between iterations, exactly
+//! the vLLM discipline whose interference disaggregation removes.
+
+pub mod clock;
+pub mod cluster;
+
+pub use clock::EventQueue;
+pub use cluster::{SimConfig, SimReport, Simulation};

@@ -1,0 +1,135 @@
+//! Deterministic synthetic tokenizer.
+//!
+//! The global scheduler's first step is tokenization (paper §6); context
+//! caching correctness depends on *stable* token IDs so equal text
+//! prefixes produce equal token prefixes across sessions and instances.
+//! Real BPE is out of scope (no model vocabulary ships with the synthetic
+//! workloads); this tokenizer splits on whitespace/punctuation and maps
+//! each word to a stable FNV-hashed ID in `[RESERVED, vocab)`.
+
+/// IDs below this are reserved (padding=0, BOS=1, EOS=2, byte fallbacks).
+pub const RESERVED: u32 = 16;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab: u32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: u32) -> Self {
+        assert!(vocab > RESERVED * 2, "vocab too small: {vocab}");
+        Tokenizer { vocab }
+    }
+
+    pub fn vocab(&self) -> u32 {
+        self.vocab
+    }
+
+    /// FNV-1a 64-bit — stable across runs/platforms.
+    fn word_id(&self, word: &str) -> u32 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in word.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        RESERVED + (h % (self.vocab as u64 - RESERVED as u64)) as u32
+    }
+
+    /// Tokenize text: words and single punctuation marks become tokens.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 4 + 1);
+        let mut word_start: Option<usize> = None;
+        let bytes = text.as_bytes();
+        for (i, &b) in bytes.iter().enumerate() {
+            let c = b as char;
+            if c.is_ascii_alphanumeric() || c == '_' || c == '\'' || b >= 0x80 {
+                if word_start.is_none() {
+                    word_start = Some(i);
+                }
+            } else {
+                if let Some(s) = word_start.take() {
+                    out.push(self.word_id(&text[s..i]));
+                }
+                if !c.is_ascii_whitespace() {
+                    // Single punctuation char gets its own stable token.
+                    out.push(self.word_id(&text[i..i + 1]));
+                }
+            }
+        }
+        if let Some(s) = word_start {
+            out.push(self.word_id(&text[s..]));
+        }
+        out
+    }
+
+    /// Encode with BOS prepended — the canonical prompt form, guaranteeing
+    /// every prompt shares at least the BOS prefix (radix-tree root edge).
+    pub fn encode_prompt(&self, text: &str) -> Vec<u32> {
+        let mut v = vec![BOS];
+        v.extend(self.encode(text));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Tokenizer {
+        Tokenizer::new(2048)
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = t().encode("the quick brown fox");
+        let b = t().encode("the quick brown fox");
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn shared_text_prefix_gives_shared_token_prefix() {
+        let a = t().encode_prompt("system: you are helpful. user: hi");
+        let b = t().encode_prompt("system: you are helpful. user: bye now");
+        let common = a.iter().zip(&b).take_while(|(x, y)| x == y).count();
+        // "system: you are helpful. user:" = 6 words + 3 punct + BOS
+        assert!(common >= 9, "common={common}");
+        assert_ne!(a[common..], b[common..]);
+    }
+
+    #[test]
+    fn ids_in_range_and_reserved_respected() {
+        let toks = t().encode("a b c d ! ? , . 123 x_y O'Neil");
+        for &tok in &toks {
+            assert!((RESERVED..2048).contains(&tok), "tok={tok}");
+        }
+    }
+
+    #[test]
+    fn punctuation_splits_words() {
+        let a = t().encode("a,b");
+        assert_eq!(a.len(), 3);
+        let b = t().encode("a , b");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_and_whitespace() {
+        assert!(t().encode("").is_empty());
+        assert!(t().encode("   \n\t ").is_empty());
+        assert_eq!(t().encode_prompt(""), vec![BOS]);
+    }
+
+    #[test]
+    fn different_words_usually_differ() {
+        let tok = t();
+        let ids: std::collections::HashSet<u32> = (0..200)
+            .map(|i| tok.word_id(&format!("word{i}")))
+            .collect();
+        assert!(ids.len() > 180, "too many collisions: {}", ids.len());
+    }
+}

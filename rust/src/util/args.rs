@@ -1,0 +1,249 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! repeated `--set k=v` config overrides, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, bool>,
+    values: BTreeMap<String, String>,
+    sets: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    takes_value: bool,
+    help: String,
+    default: Option<String>,
+}
+
+/// Declarative parser: declare options, then `parse()`.
+#[derive(Debug, Default)]
+pub struct Parser {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+}
+
+impl Parser {
+    pub fn new(program: &str, about: &str) -> Self {
+        Parser {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: vec![],
+        }
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            takes_value: false,
+            help: help.to_string(),
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            takes_value: true,
+            help: help.to_string(),
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let arg = if spec.takes_value {
+                format!("--{} <v>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:<24} {}{default}\n", spec.help));
+        }
+        s.push_str("  --set k=v                override a config key (repeatable)\n");
+        s.push_str("  --help                   print this help\n");
+        s
+    }
+
+    /// Parse a token list. Returns Err(message) on unknown/invalid args;
+    /// Err with the help text if `--help` is present.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                out.values.insert(spec.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if name == "set" {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or("--set requires k=v".to_string())?
+                        }
+                    };
+                    let (k, val) = v
+                        .split_once('=')
+                        .ok_or(format!("--set wants k=v, got '{v}'"))?;
+                    out.sets.push((k.to_string(), val.to_string()));
+                    i += 1;
+                    continue;
+                }
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or(format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or(format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.flags.insert(name, true);
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or(format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or(format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn sets(&self) -> &[(String, String)] {
+        &self.sets
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    fn parser() -> Parser {
+        Parser::new("t", "test")
+            .flag("verbose", "noise")
+            .opt("rate", "1.0", "req rate")
+            .opt("out", "", "output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parser().parse(&argv("")).unwrap();
+        assert_eq!(a.get("rate"), Some("1.0"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flags_values_positional() {
+        let a = parser()
+            .parse(&argv("run --verbose --rate 2.5 file.txt"))
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_f64("rate").unwrap(), 2.5);
+        assert_eq!(a.positional(), ["run", "file.txt"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parser().parse(&argv("--rate=7")).unwrap();
+        assert_eq!(a.get("rate"), Some("7"));
+    }
+
+    #[test]
+    fn set_overrides_collect() {
+        let a = parser()
+            .parse(&argv("--set a.b=1 --set=c=x"))
+            .unwrap();
+        assert_eq!(
+            a.sets(),
+            &[("a.b".into(), "1".into()), ("c".into(), "x".into())]
+        );
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parser().parse(&argv("--nope")).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parser().parse(&argv("--rate")).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_text() {
+        let err = parser().parse(&argv("--help")).unwrap_err();
+        assert!(err.contains("--rate"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Hand-rolled benchmark harness (criterion is unavailable offline).
+//!
+//! Two pieces:
+//! * [`time_it`] / [`Bench`] — warmup + timed iterations with percentile
+//!   reporting, for microbenchmarks (Fig 9/10/11-class).
+//! * [`Table`] — paper-style row printer + JSON sink so every bench emits
+//!   both a human table and a machine-readable record under
+//!   `bench_results/`.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+/// Returns per-iteration samples in **microseconds**.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    s
+}
+
+/// Adaptive variant: run for at least `min_total_ms` wall time, at least
+/// `min_iters` iterations.
+pub fn time_adaptive<F: FnMut()>(min_total_ms: f64, min_iters: usize, mut f: F) -> Samples {
+    f(); // warmup
+    let mut s = Samples::new();
+    let start = Instant::now();
+    while s.len() < min_iters || start.elapsed().as_secs_f64() * 1e3 < min_total_ms {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64() * 1e6);
+        if s.len() > 2_000_000 {
+            break;
+        }
+    }
+    s
+}
+
+/// Black-box: prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Paper-style results table with aligned columns + JSON record sink.
+pub struct Table {
+    name: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+    json_rows: Vec<Json>,
+}
+
+impl Table {
+    pub fn new(name: &str, columns: &[&str]) -> Self {
+        Table {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+            json_rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        let rec = Json::Obj(
+            self.columns
+                .iter()
+                .zip(&cells)
+                .map(|(c, v)| {
+                    let j = v
+                        .parse::<f64>()
+                        .map(Json::Num)
+                        .unwrap_or_else(|_| Json::Str(v.clone()));
+                    (c.clone(), j)
+                })
+                .collect(),
+        );
+        self.json_rows.push(rec);
+        self.rows.push(cells);
+    }
+
+    /// Print the table to stdout with aligned columns.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        println!("\n== {} ==", self.name);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        println!("{}", "-".repeat(header.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+
+    /// Write `bench_results/<name>.json` (creates the directory).
+    pub fn save_json(&self, dir: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.json", self.name);
+        let j = Json::obj(vec![
+            ("bench", Json::str(self.name.clone())),
+            ("columns", Json::arr(
+                self.columns.iter().map(|c| Json::str(c.clone())).collect(),
+            )),
+            ("rows", Json::Arr(self.json_rows.clone())),
+        ]);
+        std::fs::write(&path, j.to_string())?;
+        Ok(path)
+    }
+
+    /// Print + save; the standard bench epilogue.
+    pub fn finish(&self) {
+        self.print();
+        match self.save_json("bench_results") {
+            Ok(p) => println!("[saved {p}]"),
+            Err(e) => eprintln!("[warn] could not save bench json: {e}"),
+        }
+    }
+}
+
+/// Format microseconds human-readably.
+pub fn fmt_us(us: f64) -> String {
+    if us < 1e3 {
+        format!("{us:.1}us")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_iters_samples() {
+        let s = time_it(2, 10, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.len(), 10);
+        assert!(s.min() >= 0.0);
+    }
+
+    #[test]
+    fn adaptive_meets_minimums() {
+        let s = time_adaptive(1.0, 5, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.len() >= 5);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let dir = std::env::temp_dir().join("memserve_bench_test");
+        let dir = dir.to_str().unwrap();
+        let mut t = Table::new("unit_test_table", &["x", "label"]);
+        t.row(vec!["1.5".into(), "a".into()]);
+        t.row(vec!["2".into(), "b".into()]);
+        t.print();
+        let path = t.save_json(dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.at(&["rows"]).unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_us_scales() {
+        assert_eq!(fmt_us(500.0), "500.0us");
+        assert_eq!(fmt_us(1500.0), "1.50ms");
+        assert_eq!(fmt_us(2_500_000.0), "2.500s");
+    }
+}

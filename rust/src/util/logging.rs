@@ -1,0 +1,70 @@
+//! Minimal `log`-crate backend: stderr, level filter from
+//! `MEMSERVE_LOG` (error|warn|info|debug|trace), monotonic timestamps.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:10.4}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops. Level from
+/// `MEMSERVE_LOG` env var, default `info`.
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("MEMSERVE_LOG")
+        .unwrap_or_default()
+        .to_lowercase()
+        .as_str()
+    {
+        "error" => log::LevelFilter::Error,
+        "warn" => log::LevelFilter::Warn,
+        "debug" => log::LevelFilter::Debug,
+        "trace" => log::LevelFilter::Trace,
+        "off" => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,20 @@
+//! Substrate utilities built in-tree because the build environment is
+//! fully offline (no tokio / serde / clap / rand / criterion / proptest).
+//!
+//! Everything here is deliberately small, dependency-free, and unit-tested:
+//! * [`rng`]    — deterministic SplitMix64 / xoshiro256** PRNG + distributions
+//! * [`stats`]  — streaming summaries, exact percentiles, histograms
+//! * [`json`]   — minimal JSON parser + writer (for `artifacts/meta.json`
+//!   and machine-readable bench output)
+//! * [`args`]   — a tiny declarative CLI argument parser
+//! * [`proptest`] — randomized property-testing harness with shrinking-lite
+//! * [`bench`]  — the hand-rolled benchmark harness used by `cargo bench`
+//! * [`logging`] — a `log`-crate backend writing to stderr with levels
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

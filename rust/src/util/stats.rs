@@ -1,0 +1,310 @@
+//! Statistics helpers for metrics and benches: exact percentiles over
+//! collected samples, streaming mean/variance (Welford), and fixed-width
+//! histograms for workload-statistics reporting (paper Fig 7).
+
+/// Collects raw f64 samples; percentiles are exact (sorted on demand).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile with linear interpolation; `p` in `[0, 100]`.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        if n == 1 {
+            return self.xs[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi.min(n - 1)] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// `(mean, p50, p99, max)` — the row format most benches print.
+    pub fn digest(&mut self) -> (f64, f64, f64, f64) {
+        (self.mean(), self.p50(), self.p99(), self.max())
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Streaming mean/variance (Welford) — O(1) memory, used by long sims.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Fixed-bin histogram over `[lo, hi)`; out-of-range clamps to edge bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            count: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n = self.bins.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * n as f64) as isize;
+        let idx = t.clamp(0, n as isize - 1) as usize;
+        self.bins[idx] += 1;
+        self.count += 1;
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Cumulative fraction at each bin edge — CDF rows for Fig 7.
+    pub fn cdf(&self) -> Vec<(f64, f64)> {
+        let width = (self.hi - self.lo) / self.bins.len() as f64;
+        let mut acc = 0u64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                acc += c;
+                (
+                    self.lo + width * (i + 1) as f64,
+                    acc as f64 / self.count.max(1) as f64,
+                )
+            })
+            .collect()
+    }
+
+    /// Render a sparkline-ish ASCII bar per bin (for terminal figures).
+    pub fn ascii(&self, width: usize) -> Vec<String> {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let bw = (self.hi - self.lo) / self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let bar = "#".repeat((c as usize * width / max as usize).max(
+                    usize::from(c > 0),
+                ));
+                format!(
+                    "[{:>8.1},{:>8.1}) {:>7} {}",
+                    self.lo + bw * i as f64,
+                    self.lo + bw * (i + 1) as f64,
+                    c,
+                    bar
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact_small() {
+        let mut s = Samples::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Samples::new();
+        s.push(0.0);
+        s.push(10.0);
+        assert!((s.p50() - 5.0).abs() < 1e-12);
+        assert!((s.percentile(90.0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Samples::new();
+        assert!(s.p50().is_nan());
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn mean_std() {
+        let mut s = Samples::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn welford_matches_samples() {
+        let mut s = Samples::new();
+        let mut w = Welford::default();
+        let mut state = 99u64;
+        for _ in 0..1000 {
+            let x = (crate::util::rng::splitmix64(&mut state) % 1000) as f64;
+            s.push(x);
+            w.push(x);
+        }
+        assert!((s.mean() - w.mean()).abs() < 1e-9);
+        assert!((s.std() - w.std()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_bins_and_cdf() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        assert!(h.bins().iter().all(|&c| c == 1));
+        let cdf = h.cdf();
+        assert!((cdf[4].1 - 0.5).abs() < 1e-12);
+        assert!((cdf[9].1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps_outliers() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(-100.0);
+        h.push(100.0);
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[3], 1);
+    }
+
+    #[test]
+    fn sorted_flag_reset_on_push() {
+        let mut s = Samples::new();
+        s.push(5.0);
+        let _ = s.p50();
+        s.push(1.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Synthetic workloads matched to the paper's three traces (§8.2, Fig 7).
+//!
+//! The real datasets (ShareGPT, LooGLE, ReAct/HotpotQA traces) are not
+//! redistributable here; these generators reproduce the *distributional
+//! properties* the paper's results depend on — prompt/generation length
+//! distributions, their ratio, session structure (multi-turn causality),
+//! and shared-prefix percentage (Fig 7a–d) — scaled to the tiny model's
+//! 512-token context (the paper truncates LooGLE docs to 1k tokens of a
+//! 4k window; we keep the same ~25% ratio).
+//!
+//! * **ShareGPT-like**: multi-turn chat; moderate prompts, the longest
+//!   generations, sharing mostly *within* a session (conversation
+//!   history) plus a small cross-session system prompt.
+//! * **LooGLE-like**: long-document QA; one long shared document per
+//!   session, several short questions, short answers → huge shared
+//!   prefix, prompt ≫ generation.
+//! * **ReAct-like**: agent traces; a long few-shot exemplar shared
+//!   *across all sessions*, growing thought/action/observation history,
+//!   fairly long generations.
+
+pub mod arrival;
+pub mod spec;
+pub mod stats;
+
+pub use arrival::ArrivalPlan;
+pub use spec::{SessionSpec, TurnSpec, WorkloadKind, WorkloadSpec};
+pub use stats::WorkloadStats;

@@ -1,0 +1,372 @@
+//! Workload specification + the three generators.
+//!
+//! Everything is in *token* space (the global scheduler's tokenizer is
+//! exercised by the text-level quickstart example; generators produce
+//! token ids directly so the sim and the live driver share one format).
+//! Token ids stay within the model vocab and are deterministic per seed.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    ShareGpt,
+    Loogle,
+    React,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sharegpt" => Some(Self::ShareGpt),
+            "loogle" => Some(Self::Loogle),
+            "react" => Some(Self::React),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::ShareGpt => "sharegpt",
+            Self::Loogle => "loogle",
+            Self::React => "react",
+        }
+    }
+
+    pub fn all() -> [WorkloadKind; 3] {
+        [Self::ShareGpt, Self::Loogle, Self::React]
+    }
+}
+
+/// One user turn: tokens appended to the running context, plus how many
+/// tokens the "assistant" should generate in response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TurnSpec {
+    pub user_tokens: Vec<u32>,
+    pub target_gen: usize,
+}
+
+/// One session (chat conversation / document QA / agent episode).
+/// The prompt of turn k is:
+///   shared_prefix ++ Σ_{i<k} (user_i ++ response_i) ++ user_k
+/// where response_i is whatever the serving system generated (causal
+/// dependency — turn k+1 cannot be built before turn k's response).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSpec {
+    pub id: u64,
+    pub shared_prefix: Vec<u32>,
+    pub turns: Vec<TurnSpec>,
+}
+
+impl SessionSpec {
+    /// Worst-case context this session can reach (for capacity checks).
+    pub fn max_context(&self) -> usize {
+        self.shared_prefix.len()
+            + self
+                .turns
+                .iter()
+                .map(|t| t.user_tokens.len() + t.target_gen)
+                .sum::<usize>()
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.turns.len()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub kind: WorkloadKind,
+    pub sessions: Vec<SessionSpec>,
+    pub seed: u64,
+}
+
+/// Generation parameters, scaled to a `max_seq`-token context window.
+struct Scale {
+    max_seq: usize,
+}
+
+impl Scale {
+    fn frac(&self, x: f64) -> usize {
+        ((self.max_seq as f64) * x).round().max(1.0) as usize
+    }
+}
+
+fn rand_tokens(rng: &mut Rng, n: usize, vocab: u32) -> Vec<u32> {
+    use crate::tokenizer::RESERVED;
+    (0..n)
+        .map(|_| RESERVED + rng.below((vocab - RESERVED) as u64) as u32)
+        .collect()
+}
+
+/// Clamp a lognormal sample into `[lo, hi]`.
+fn ln_len(rng: &mut Rng, mu: f64, sigma: f64, lo: usize, hi: usize) -> usize {
+    (rng.lognormal(mu, sigma).round() as usize).clamp(lo, hi)
+}
+
+impl WorkloadSpec {
+    /// Generate `n_sessions` sessions of the given kind.
+    ///
+    /// `vocab` bounds token ids; `max_seq` scales lengths so every
+    /// session fits the context window (paper model: 4k; tiny model:
+    /// 512 — all distributions scale down by the same factor).
+    pub fn generate(
+        kind: WorkloadKind,
+        n_sessions: usize,
+        seed: u64,
+        vocab: u32,
+        max_seq: usize,
+    ) -> WorkloadSpec {
+        let mut rng = Rng::new(seed ^ 0xB07D01);
+        let s = Scale { max_seq };
+        let sessions = (0..n_sessions)
+            .map(|i| {
+                let mut srng = rng.fork(i as u64);
+                match kind {
+                    WorkloadKind::ShareGpt => {
+                        Self::gen_sharegpt(&mut srng, i as u64, vocab, &s)
+                    }
+                    WorkloadKind::Loogle => {
+                        Self::gen_loogle(&mut srng, i as u64, vocab, &s, seed)
+                    }
+                    WorkloadKind::React => {
+                        Self::gen_react(&mut srng, i as u64, vocab, &s, seed)
+                    }
+                }
+            })
+            .collect();
+        WorkloadSpec {
+            kind,
+            sessions,
+            seed,
+        }
+    }
+
+    /// ShareGPT-like: 1–8 turns, moderate user messages, long-ish
+    /// generations (the longest of the three), small cross-session
+    /// system prompt.
+    fn gen_sharegpt(rng: &mut Rng, id: u64, vocab: u32, s: &Scale)
+                    -> SessionSpec {
+        // System prompt shared by ALL sessions (same token seed).
+        let mut sys_rng = Rng::new(0x5151);
+        let shared_prefix = rand_tokens(&mut sys_rng, s.frac(0.03), vocab);
+        let n_turns = 1 + rng.below(8) as usize;
+        let mut budget = s.max_seq
+            - shared_prefix.len()
+            - 8; // slack
+        let mut turns = vec![];
+        for _ in 0..n_turns {
+            // user ~ lognormal around 4% of window; gen around 6%.
+            let user = ln_len(rng, (s.frac(0.04) as f64).ln(), 0.8, 2,
+                              s.frac(0.12));
+            let gen = ln_len(rng, (s.frac(0.06) as f64).ln(), 0.7, 2,
+                             s.frac(0.15));
+            if user + gen + 2 > budget {
+                break;
+            }
+            budget -= user + gen;
+            turns.push(TurnSpec {
+                user_tokens: rand_tokens(rng, user, vocab),
+                target_gen: gen,
+            });
+        }
+        if turns.is_empty() {
+            turns.push(TurnSpec {
+                user_tokens: rand_tokens(rng, 4, vocab),
+                target_gen: 4,
+            });
+        }
+        SessionSpec {
+            id,
+            shared_prefix,
+            turns,
+        }
+    }
+
+    /// LooGLE-like: a long document (25% of the window, mirroring the
+    /// paper's 1k-of-4k truncation) + up to 5 short questions with short
+    /// answers. A few distinct documents are shared across sessions
+    /// (inter-session reuse — what Fig 15's share-ratio experiment
+    /// scales).
+    fn gen_loogle(rng: &mut Rng, id: u64, vocab: u32, s: &Scale,
+                  seed: u64) -> SessionSpec {
+        // Draw the document from a small pool so sessions share docs.
+        let n_docs = 8u64;
+        let doc_id = rng.zipf(n_docs, 1.0);
+        let mut doc_rng = Rng::new(seed ^ 0xD0C_000 ^ doc_id);
+        let doc_len = s.frac(0.25)
+            + (doc_id as usize * 7) % s.frac(0.05); // mild variety
+        let shared_prefix = rand_tokens(&mut doc_rng, doc_len, vocab);
+        let n_q = 1 + rng.below(5) as usize;
+        let mut turns = vec![];
+        let mut budget = s.max_seq - shared_prefix.len() - 8;
+        for _ in 0..n_q {
+            let q = ln_len(rng, (s.frac(0.03) as f64).ln(), 0.5, 2,
+                           s.frac(0.06));
+            let a = ln_len(rng, (s.frac(0.015) as f64).ln(), 0.6, 2,
+                           s.frac(0.04));
+            if q + a + 2 > budget {
+                break;
+            }
+            budget -= q + a;
+            turns.push(TurnSpec {
+                user_tokens: rand_tokens(rng, q, vocab),
+                target_gen: a,
+            });
+        }
+        if turns.is_empty() {
+            turns.push(TurnSpec {
+                user_tokens: rand_tokens(rng, 4, vocab),
+                target_gen: 3,
+            });
+        }
+        SessionSpec {
+            id,
+            shared_prefix,
+            turns,
+        }
+    }
+
+    /// ReAct-like: one two-shot exemplar shared across ALL sessions
+    /// (30% of the window), then thought/action/observation rounds whose
+    /// generations are long (reasoning text).
+    fn gen_react(rng: &mut Rng, id: u64, vocab: u32, s: &Scale,
+                 seed: u64) -> SessionSpec {
+        let mut ex_rng = Rng::new(seed ^ 0x2EAC7);
+        let shared_prefix = rand_tokens(&mut ex_rng, s.frac(0.30), vocab);
+        let n_rounds = 2 + rng.below(4) as usize;
+        let mut turns = vec![];
+        let mut budget = s.max_seq - shared_prefix.len() - 8;
+        for round in 0..n_rounds {
+            // Round 0 is the task; later "user" turns are observations.
+            let user = if round == 0 {
+                ln_len(rng, (s.frac(0.035) as f64).ln(), 0.4, 2, s.frac(0.07))
+            } else {
+                ln_len(rng, (s.frac(0.02) as f64).ln(), 0.6, 2, s.frac(0.05))
+            };
+            let gen = ln_len(rng, (s.frac(0.05) as f64).ln(), 0.5, 2,
+                             s.frac(0.10));
+            if user + gen + 2 > budget {
+                break;
+            }
+            budget -= user + gen;
+            turns.push(TurnSpec {
+                user_tokens: rand_tokens(rng, user, vocab),
+                target_gen: gen,
+            });
+        }
+        if turns.is_empty() {
+            turns.push(TurnSpec {
+                user_tokens: rand_tokens(rng, 4, vocab),
+                target_gen: 6,
+            });
+        }
+        SessionSpec {
+            id,
+            shared_prefix,
+            turns,
+        }
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.sessions.iter().map(SessionSpec::total_requests).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const V: u32 = 2048;
+    const MS: usize = 512;
+
+    #[test]
+    fn deterministic_per_seed() {
+        for kind in WorkloadKind::all() {
+            let a = WorkloadSpec::generate(kind, 10, 7, V, MS);
+            let b = WorkloadSpec::generate(kind, 10, 7, V, MS);
+            assert_eq!(a.sessions, b.sessions, "{kind:?}");
+            let c = WorkloadSpec::generate(kind, 10, 8, V, MS);
+            assert_ne!(a.sessions, c.sessions, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sessions_fit_context_window() {
+        for kind in WorkloadKind::all() {
+            let w = WorkloadSpec::generate(kind, 50, 1, V, MS);
+            for s in &w.sessions {
+                assert!(
+                    s.max_context() <= MS,
+                    "{kind:?} session {} needs {} tokens",
+                    s.id,
+                    s.max_context()
+                );
+                assert!(!s.turns.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn token_ids_in_vocab_and_above_reserved() {
+        for kind in WorkloadKind::all() {
+            let w = WorkloadSpec::generate(kind, 10, 2, V, MS);
+            for s in &w.sessions {
+                for &t in s.shared_prefix.iter().chain(
+                    s.turns.iter().flat_map(|t| t.user_tokens.iter()),
+                ) {
+                    assert!(t >= crate::tokenizer::RESERVED && t < V);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loogle_has_longest_shared_prefix_react_shares_globally() {
+        let sg = WorkloadSpec::generate(WorkloadKind::ShareGpt, 20, 3, V, MS);
+        let lg = WorkloadSpec::generate(WorkloadKind::Loogle, 20, 3, V, MS);
+        let ra = WorkloadSpec::generate(WorkloadKind::React, 20, 3, V, MS);
+        let avg = |w: &WorkloadSpec| {
+            w.sessions
+                .iter()
+                .map(|s| s.shared_prefix.len())
+                .sum::<usize>() as f64
+                / w.sessions.len() as f64
+        };
+        assert!(avg(&lg) > avg(&sg) * 3.0, "LooGLE prefix should dominate");
+        assert!(avg(&ra) > avg(&sg) * 3.0);
+        // ReAct exemplar identical across sessions:
+        assert_eq!(ra.sessions[0].shared_prefix, ra.sessions[5].shared_prefix);
+        // ShareGPT system prompt identical too (but short):
+        assert_eq!(sg.sessions[0].shared_prefix, sg.sessions[5].shared_prefix);
+    }
+
+    #[test]
+    fn loogle_documents_repeat_across_sessions() {
+        let lg = WorkloadSpec::generate(WorkloadKind::Loogle, 40, 4, V, MS);
+        let mut prefix_counts =
+            std::collections::HashMap::<&[u32], usize>::new();
+        for s in &lg.sessions {
+            *prefix_counts.entry(&s.shared_prefix).or_default() += 1;
+        }
+        assert!(prefix_counts.len() < 40, "no document reuse at all");
+        assert!(
+            prefix_counts.values().any(|&c| c >= 5),
+            "zipf should concentrate on few docs: {prefix_counts:?} sizes"
+        );
+    }
+
+    #[test]
+    fn sharegpt_generates_longest_outputs() {
+        let sg = WorkloadSpec::generate(WorkloadKind::ShareGpt, 50, 5, V, MS);
+        let lg = WorkloadSpec::generate(WorkloadKind::Loogle, 50, 5, V, MS);
+        let avg_gen = |w: &WorkloadSpec| {
+            let (sum, n) = w
+                .sessions
+                .iter()
+                .flat_map(|s| s.turns.iter())
+                .fold((0usize, 0usize), |(s, n), t| (s + t.target_gen, n + 1));
+            sum as f64 / n as f64
+        };
+        assert!(avg_gen(&sg) > avg_gen(&lg) * 1.5);
+    }
+}

@@ -1,0 +1,139 @@
+//! Workload statistics — regenerates the paper's Figure 7 panels:
+//! (a) prompt length, (b) generation length, (c) prompt:generation ratio,
+//! (d) shared-prefix percentage per request.
+//!
+//! Shared-prefix % of a request = (longest token prefix shared with any
+//! *earlier* request) / prompt length — computed with a radix index at
+//! token granularity, which is exactly the reuse a perfect cache could
+//! achieve.
+
+use crate::mempool::RadixIndex;
+use crate::util::stats::Samples;
+use crate::workload::spec::WorkloadSpec;
+
+#[derive(Debug, Default)]
+pub struct WorkloadStats {
+    pub prompt_len: Samples,
+    pub gen_len: Samples,
+    pub ratio: Samples,
+    pub shared_prefix_pct: Samples,
+    pub requests: usize,
+}
+
+impl WorkloadStats {
+    /// Replay the workload in session-turn order (generation simulated as
+    /// `target_gen` placeholder tokens — length statistics do not depend
+    /// on token values).
+    pub fn compute(spec: &WorkloadSpec) -> WorkloadStats {
+        let mut idx = RadixIndex::new(1, 0.0); // token granularity
+        let mut out = WorkloadStats::default();
+        // Interleave sessions turn-by-turn (round-robin) so "earlier
+        // request" reflects concurrent sessions, like a live trace.
+        let max_turns = spec
+            .sessions
+            .iter()
+            .map(|s| s.turns.len())
+            .max()
+            .unwrap_or(0);
+        // Running context per session.
+        let mut ctx: Vec<Vec<u32>> = spec
+            .sessions
+            .iter()
+            .map(|s| s.shared_prefix.clone())
+            .collect();
+        let mut synth_tok = 3_000_000u32; // out-of-vocab placeholder ids
+        for turn in 0..max_turns {
+            for (si, sess) in spec.sessions.iter().enumerate() {
+                let Some(t) = sess.turns.get(turn) else { continue };
+                let mut prompt = ctx[si].clone();
+                prompt.extend_from_slice(&t.user_tokens);
+                let m = idx.match_prefix(&prompt, 1.0);
+                out.prompt_len.push(prompt.len() as f64);
+                out.gen_len.push(t.target_gen as f64);
+                out.ratio
+                    .push(prompt.len() as f64 / t.target_gen.max(1) as f64);
+                out.shared_prefix_pct
+                    .push(100.0 * m.tokens as f64 / prompt.len() as f64);
+                out.requests += 1;
+                let groups = vec![vec![]; prompt.len()];
+                idx.insert(&prompt, &groups, 1.0);
+                // Append simulated response tokens to the context.
+                ctx[si] = prompt;
+                for _ in 0..t.target_gen {
+                    synth_tok += 1;
+                    ctx[si].push(synth_tok);
+                }
+            }
+        }
+        out
+    }
+
+    /// Paper-style summary row: means and P50s of all four panels.
+    pub fn summary(&mut self) -> String {
+        format!(
+            "prompt(mean={:.0} p50={:.0}) gen(mean={:.0} p50={:.0}) \
+             ratio(mean={:.1}) shared-prefix(mean={:.0}% p50={:.0}%)",
+            self.prompt_len.mean(),
+            self.prompt_len.p50(),
+            self.gen_len.mean(),
+            self.gen_len.p50(),
+            self.ratio.mean(),
+            self.shared_prefix_pct.mean(),
+            self.shared_prefix_pct.p50(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::WorkloadKind;
+
+    fn stats(kind: WorkloadKind) -> WorkloadStats {
+        let spec = WorkloadSpec::generate(kind, 40, 11, 2048, 512);
+        WorkloadStats::compute(&spec)
+    }
+
+    #[test]
+    fn fig7_shapes_hold() {
+        let mut sg = stats(WorkloadKind::ShareGpt);
+        let mut lg = stats(WorkloadKind::Loogle);
+        let mut ra = stats(WorkloadKind::React);
+
+        // (a,b) LooGLE: long prompts, short generations.
+        assert!(lg.prompt_len.mean() > sg.prompt_len.mean());
+        assert!(lg.gen_len.mean() < sg.gen_len.mean());
+        // (c) ratio ordering: LooGLE >> ReAct > ShareGPT.
+        assert!(lg.ratio.mean() > ra.ratio.mean());
+        assert!(ra.ratio.mean() > sg.ratio.mean());
+        // (d) shared prefix: LooGLE & ReAct large, ShareGPT lower.
+        assert!(lg.shared_prefix_pct.mean() > 55.0,
+                "loogle share {}", lg.shared_prefix_pct.mean());
+        assert!(ra.shared_prefix_pct.mean() > 45.0,
+                "react share {}", ra.shared_prefix_pct.mean());
+        assert!(
+            sg.shared_prefix_pct.mean() < lg.shared_prefix_pct.mean(),
+            "sharegpt {} vs loogle {}",
+            sg.shared_prefix_pct.mean(),
+            lg.shared_prefix_pct.mean()
+        );
+    }
+
+    #[test]
+    fn multi_turn_requests_share_their_own_history() {
+        // Any session's turn >= 1 must see a large shared prefix (its own
+        // turn-0 context is in the index).
+        let spec = WorkloadSpec::generate(WorkloadKind::ShareGpt, 5, 3,
+                                          2048, 512);
+        let s = WorkloadStats::compute(&spec);
+        // Requests counted == spec turns.
+        assert_eq!(s.requests, spec.total_requests());
+    }
+
+    #[test]
+    fn summary_prints() {
+        let mut s = stats(WorkloadKind::Loogle);
+        let line = s.summary();
+        assert!(line.contains("shared-prefix"));
+    }
+}

@@ -1,0 +1,206 @@
+//! End-to-end integration tests over the live server: real PJRT compute,
+//! real fabric messages, all three instance roles. Self-skips when
+//! `make artifacts` has not run.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use memserve::config::Config;
+use memserve::engine::{DisaggMilestone, SamplingParams};
+use memserve::runtime::artifacts::artifacts_available;
+use memserve::runtime::ModelRuntime;
+use memserve::server::{ServeCluster, ServeOptions};
+
+use once_cell::sync::Lazy;
+
+static RT: Lazy<Option<Arc<ModelRuntime>>> = Lazy::new(|| {
+    if !artifacts_available("artifacts") {
+        eprintln!("[skip] artifacts/ not built");
+        return None;
+    }
+    Some(Arc::new(ModelRuntime::load("artifacts").unwrap()))
+});
+
+fn config(prefill: usize, decode: usize, colocated: usize, caching: bool)
+          -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.prefill_instances = prefill;
+    cfg.cluster.decode_instances = decode;
+    cfg.cluster.colocated_instances = colocated;
+    // Generous under parallel-test CPU contention; the failover test
+    // overrides this locally.
+    cfg.cluster.heartbeat_ms = 200.0;
+    cfg.cluster.heartbeat_misses = 5;
+    cfg.mempool.context_caching = caching;
+    cfg.mempool.hbm_blocks = 256;
+    cfg.mempool.dram_blocks = 256;
+    cfg
+}
+
+fn start(cfg: Config, milestone: DisaggMilestone)
+         -> Option<memserve::server::ClientHandle> {
+    let rt = RT.as_ref()?.clone();
+    Some(
+        ServeCluster::start(
+            ServeOptions {
+                config: cfg,
+                milestone,
+                real_sleep: false,
+            },
+            rt,
+        )
+        .unwrap(),
+    )
+}
+
+fn toks(n: usize, seed: u32) -> Vec<u32> {
+    (0..n as u32)
+        .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 2048)
+        .collect()
+}
+
+fn sampling(max_new: usize) -> SamplingParams {
+    SamplingParams {
+        max_new_tokens: max_new,
+        eos_token: u32::MAX,
+        ..Default::default()
+    }
+}
+
+const T: Duration = Duration::from_secs(120);
+
+#[test]
+fn colocated_caching_end_to_end() {
+    let Some(c) = start(config(0, 0, 1, true), DisaggMilestone::PdCaching3)
+    else {
+        return;
+    };
+    let prompt = toks(60, 1);
+    let r1 = c.submit(prompt.clone(), 1, sampling(8)).unwrap();
+    let (g1, rec1) = c.collect(r1, T).unwrap();
+    assert_eq!(g1.len(), 8);
+    assert_eq!(rec1.cached_tokens, 0);
+    // Same prompt again: cache hit, identical greedy output.
+    let r2 = c.submit(prompt.clone(), 1, sampling(8)).unwrap();
+    let (g2, rec2) = c.collect(r2, T).unwrap();
+    assert!(rec2.cached_tokens >= 48, "cached={}", rec2.cached_tokens);
+    assert_eq!(g1, g2, "caching changed generation");
+    c.shutdown();
+}
+
+#[test]
+fn disaggregated_matches_colocated_output() {
+    // Greedy decode must be bit-identical whether the request runs on a
+    // colocated instance or splits across 1P1D — the strongest
+    // composition check we have.
+    let Some(colo) = start(config(0, 0, 1, true), DisaggMilestone::PdCaching3)
+    else {
+        return;
+    };
+    let prompt = toks(50, 2);
+    let r = colo.submit(prompt.clone(), 1, sampling(10)).unwrap();
+    let (g_colo, _) = colo.collect(r, T).unwrap();
+    colo.shutdown();
+
+    let disagg = start(config(1, 1, 0, true), DisaggMilestone::PdCaching3)
+        .unwrap();
+    let r = disagg.submit(prompt.clone(), 1, sampling(10)).unwrap();
+    let (g_dis, rec) = disagg.collect(r, T).unwrap();
+    assert_eq!(g_colo, g_dis, "disaggregation changed generation");
+    // Prefill and decode ran on different instances.
+    assert_ne!(rec.prefill_instance, rec.decode_instance);
+    disagg.shutdown();
+}
+
+#[test]
+fn disaggregated_multi_turn_caching_grows() {
+    let Some(c) = start(config(1, 1, 0, true), DisaggMilestone::PdCaching3)
+    else {
+        return;
+    };
+    let mut ctx = toks(40, 3);
+    let mut cached_history = vec![];
+    for turn in 0..3 {
+        let rid = c.submit(ctx.clone(), 7, sampling(6)).unwrap();
+        let (generated, rec) = c.collect(rid, T).unwrap();
+        cached_history.push(rec.cached_tokens);
+        ctx.extend(generated);
+        ctx.extend(toks(6, 100 + turn));
+    }
+    assert_eq!(cached_history[0], 0);
+    assert!(cached_history[1] >= 32, "{cached_history:?}");
+    // Milestone 3: decode KV flowed back, so turn-2 cache covers turn-1's
+    // *generated* tokens too (strictly more than the prompt-only case).
+    assert!(
+        cached_history[2] > cached_history[1],
+        "{cached_history:?}"
+    );
+    // Wire carried real KV payloads.
+    assert!(c.net_stats().payload_bytes > 0);
+    c.shutdown();
+}
+
+#[test]
+fn milestone_basic_does_not_cache() {
+    let Some(c) = start(config(1, 1, 0, false), DisaggMilestone::PdBasic)
+    else {
+        return;
+    };
+    let prompt = toks(48, 4);
+    for _ in 0..2 {
+        let rid = c.submit(prompt.clone(), 1, sampling(4)).unwrap();
+        let (_, rec) = c.collect(rid, T).unwrap();
+        assert_eq!(rec.cached_tokens, 0);
+    }
+    c.shutdown();
+}
+
+#[test]
+fn parallel_sessions_interleave() {
+    let Some(c) = start(config(0, 0, 2, true), DisaggMilestone::PdCaching3)
+    else {
+        return;
+    };
+    // Submit 6 requests at once across 3 sessions; all must finish with
+    // deterministic outputs per prompt.
+    let prompts: Vec<Vec<u32>> =
+        (0..6).map(|i| toks(30 + i * 7, 50 + i as u32)).collect();
+    let rids: Vec<u64> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| c.submit(p.clone(), i as u64 % 3, sampling(5)).unwrap())
+        .collect();
+    let mut outs = vec![];
+    for rid in rids {
+        let (g, rec) = c.collect(rid, T).unwrap();
+        assert_eq!(g.len(), 5);
+        assert!(rec.completion >= rec.first_token);
+        outs.push(g);
+    }
+    // Re-run one of them; result identical.
+    let rid = c.submit(prompts[2].clone(), 9, sampling(5)).unwrap();
+    let (g, _) = c.collect(rid, T).unwrap();
+    assert_eq!(g, outs[2]);
+    c.shutdown();
+}
+
+#[test]
+fn failover_reroutes_requests() {
+    let Some(c) = start(config(0, 0, 2, true), DisaggMilestone::PdCaching3)
+    else {
+        return;
+    };
+    // Kill instance 0; heartbeats stop; after the sweep the survivor
+    // serves everything.
+    let victim = c.instances()[0].0;
+    c.kill(victim);
+    std::thread::sleep(Duration::from_millis(1500)); // > 5 * 200ms + margin
+    assert!(!c.is_alive(victim), "victim still considered alive");
+    for i in 0..4 {
+        let rid = c.submit(toks(24, 200 + i), i as u64, sampling(3)).unwrap();
+        let (g, rec) = c.collect(rid, T).unwrap();
+        assert_eq!(g.len(), 3);
+        assert_ne!(rec.decode_instance, victim.0);
+    }
+    c.shutdown();
+}
