@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# Emit a Cargo.toml for the rust/ crate. The repo ships sources only —
+# the serving harness normally synthesizes the manifest — so CI (and any
+# local checkout) can bootstrap one with this script:
+#
+#   cd rust && ../.github/gen-cargo-toml.sh > Cargo.toml
+#
+# Benches and examples live at the repo root and are declared
+# explicitly; every bench has its own main() (harness = false).
+set -euo pipefail
+
+if [ ! -f src/lib.rs ] || [ ! -d ../benches ]; then
+  echo "error: run from the rust/ crate directory (src/lib.rs and ../benches must exist)" >&2
+  exit 1
+fi
+
+cat <<'EOF'
+[package]
+name = "memserve"
+version = "0.1.0"
+edition = "2021"
+
+[dependencies]
+anyhow = "1"
+thiserror = "1"
+once_cell = "1"
+xla = "0.1"
+
+[[bin]]
+name = "memserve"
+path = "src/main.rs"
+EOF
+
+for b in ../benches/*.rs; do
+  name=$(basename "$b" .rs)
+  cat <<EOF
+
+[[bench]]
+name = "$name"
+path = "$b"
+harness = false
+EOF
+done
+
+for e in ../examples/*.rs; do
+  name=$(basename "$e" .rs)
+  cat <<EOF
+
+[[example]]
+name = "$name"
+path = "$e"
+EOF
+done

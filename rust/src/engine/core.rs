@@ -138,7 +138,11 @@ impl Engine {
             Default::default()
         };
         let cached = m.tokens;
-        let mut prefix_groups = m.groups;
+        // The engine owns/mutates its group lists across the request
+        // lifetime, so materialize the zero-clone match handles once
+        // here (prefill is ms-scale; the µs-scale match path stays
+        // allocation-free inside the pool).
+        let mut prefix_groups = m.groups.to_groups();
         // DRAM-resident prefix blocks must come back to HBM before use.
         if prefix_groups.iter().flatten().any(|a| a.tier == Tier::Dram) {
             let flat: Vec<_> =
@@ -400,7 +404,7 @@ impl Engine {
             }
             return Ok(false);
         }
-        let mut groups = m.groups;
+        let mut groups = m.groups.to_groups();
         groups.truncate(suffix_start_block);
         groups.extend(suffix_groups);
         let tokens = groups.len() * bt;

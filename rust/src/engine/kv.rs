@@ -43,44 +43,37 @@ pub fn scatter_new_kv(
     let per_tb = geom.blocks_per_token_block();
     pool.ensure_free_hbm(n_blocks * per_tb, now)?;
 
+    // Tokens are contiguous within each (layer, half) plane in both the
+    // bucket layout ([L, 2, N, H, hd]) and the block layouts, so every
+    // block copies `valid·s`-float *runs* per (layer, half) — one memcpy
+    // instead of `bt` token-sized ones.
     let mut groups = Vec::with_capacity(n_blocks);
     let mut buf = vec![0f32; geom.floats_per_block()];
+    let mut small = vec![0f32; bt * s];
     for b in 0..n_blocks {
         let addrs = pool.alloc_mem(per_tb, Tier::Hbm)?;
         let t0 = b * bt;
+        let valid = n_tokens.saturating_sub(t0).min(bt);
         if geom.aggregated {
             // Block layout [L, 2, bt, H, hd].
             for l in 0..geom.layers {
                 for h in 0..2 {
-                    for t in 0..bt {
-                        let dst = ((l * 2 + h) * bt + t) * s;
-                        let tok = t0 + t;
-                        if tok < n_tokens {
-                            let src = ((l * 2 + h) * bucket_n + tok) * s;
-                            buf[dst..dst + s]
-                                .copy_from_slice(&new_kv[src..src + s]);
-                        } else {
-                            buf[dst..dst + s].fill(0.0);
-                        }
-                    }
+                    let dst = (l * 2 + h) * bt * s;
+                    let src = ((l * 2 + h) * bucket_n + t0) * s;
+                    buf[dst..dst + valid * s]
+                        .copy_from_slice(&new_kv[src..src + valid * s]);
+                    buf[dst + valid * s..dst + bt * s].fill(0.0);
                 }
             }
             pool.write_block(addrs[0], &buf)?;
         } else {
             // One block per (layer, half): layout [bt, H, hd].
-            let mut small = vec![0f32; bt * s];
             for l in 0..geom.layers {
                 for h in 0..2 {
-                    for t in 0..bt {
-                        let tok = t0 + t;
-                        if tok < n_tokens {
-                            let src = ((l * 2 + h) * bucket_n + tok) * s;
-                            small[t * s..(t + 1) * s]
-                                .copy_from_slice(&new_kv[src..src + s]);
-                        } else {
-                            small[t * s..(t + 1) * s].fill(0.0);
-                        }
-                    }
+                    let src = ((l * 2 + h) * bucket_n + t0) * s;
+                    small[..valid * s]
+                        .copy_from_slice(&new_kv[src..src + valid * s]);
+                    small[valid * s..].fill(0.0);
                     pool.write_block(addrs[l * 2 + h], &small)?;
                 }
             }
@@ -101,6 +94,9 @@ pub fn gather_to_buffer(
     let s = slot(&geom);
     let bt = geom.block_tokens;
     assert!(groups.len() * bt <= cap, "cap too small");
+    // As in `scatter_new_kv`, copy whole `bt·s` runs per (layer, half).
+    // Discrete blocks ([bt, H, hd]) are exactly one destination run, so
+    // they land directly in `out` with no staging buffer at all.
     let mut out = vec![0f32; geom.layers * 2 * cap * s];
     let mut buf = vec![0f32; geom.floats_per_block()];
     for (b, group) in groups.iter().enumerate() {
@@ -109,23 +105,20 @@ pub fn gather_to_buffer(
             pool.read_block(group[0], &mut buf)?;
             for l in 0..geom.layers {
                 for h in 0..2 {
-                    for t in 0..bt {
-                        let src = ((l * 2 + h) * bt + t) * s;
-                        let dst = ((l * 2 + h) * cap + t0 + t) * s;
-                        out[dst..dst + s].copy_from_slice(&buf[src..src + s]);
-                    }
+                    let src = (l * 2 + h) * bt * s;
+                    let dst = ((l * 2 + h) * cap + t0) * s;
+                    out[dst..dst + bt * s]
+                        .copy_from_slice(&buf[src..src + bt * s]);
                 }
             }
         } else {
-            let mut small = vec![0f32; bt * s];
             for l in 0..geom.layers {
                 for h in 0..2 {
-                    pool.read_block(group[l * 2 + h], &mut small)?;
-                    for t in 0..bt {
-                        let dst = ((l * 2 + h) * cap + t0 + t) * s;
-                        out[dst..dst + s]
-                            .copy_from_slice(&small[t * s..(t + 1) * s]);
-                    }
+                    let dst = ((l * 2 + h) * cap + t0) * s;
+                    pool.read_block(
+                        group[l * 2 + h],
+                        &mut out[dst..dst + bt * s],
+                    )?;
                 }
             }
         }

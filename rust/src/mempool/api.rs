@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use super::allocator::AllocError;
 use super::block::{BlockAddr, BlockGeometry, InstanceId, Tier};
-use super::index::{BlockGroup, IndexMatch, RadixIndex};
+use super::index::{BlockGroup, GroupList, IndexMatch, RadixIndex};
 use super::tier::Arena;
 
 /// Pool-level counters (exported into [`crate::metrics::Metrics`]).
@@ -38,26 +38,25 @@ pub enum PoolError {
     Capacity(usize),
 }
 
-/// Result of `match_prefix` at pool level.
+/// Result of `match_prefix` at pool level. Groups come back as a flat
+/// [`GroupList`] — borrowed-slice handles into one allocation, not one
+/// heap-cloned `Vec` per matched token-block.
 #[derive(Clone, Debug, Default)]
 pub struct MatchResult {
     /// Matched tokens (multiple of block_tokens).
     pub tokens: usize,
     /// One group per matched token-block.
-    pub groups: Vec<BlockGroup>,
+    pub groups: GroupList,
 }
 
 impl MatchResult {
     /// Does any matched block live in DRAM (needs swap_in before use)?
     pub fn needs_swap_in(&self) -> bool {
-        self.groups
-            .iter()
-            .flatten()
-            .any(|a| a.tier == Tier::Dram)
+        self.groups.flat().iter().any(|a| a.tier == Tier::Dram)
     }
 
     pub fn flat_addrs(&self) -> Vec<BlockAddr> {
-        self.groups.iter().flatten().copied().collect()
+        self.groups.flat().to_vec()
     }
 }
 

@@ -1,5 +1,5 @@
 //! Token-indexed radix tree mapping prompt prefixes to historical KV
-//! cache blocks (paper §4.2).
+//! cache blocks (paper §4.2) — the hot-path edition.
 //!
 //! Following SGLang's design with the paper's two extensions: (a) block
 //! addresses can point at *any tier* (HBM or DRAM — see [`super::tier`]),
@@ -9,31 +9,213 @@
 //! every edge length is a multiple of `block_tokens`, so node splits land
 //! on block boundaries and the KV layout never needs reshaping.
 //!
+//! # Internals (performance notes)
+//!
+//! The paper's requirement is that index checks stay µs-scale on the
+//! request path, far below ms-scale model compute. Three design choices
+//! keep it there (the seed implementation — preserved verbatim in
+//! [`super::index_ref`] as a differential-testing baseline — paid a
+//! `Vec<u32>` key allocation + 64-byte SipHash per tree hop, one heap
+//! clone per matched token-block, and an O(nodes) scan *per eviction
+//! victim*):
+//!
+//! * **Fingerprint-keyed children.** Children are keyed by a 64-bit
+//!   FxHash-style fingerprint of the child's first edge block
+//!   ([`block_fingerprint`]) in a `HashMap<u64, usize>` with a
+//!   pass-through hasher. Lookup hashes `block_tokens` words once and
+//!   compares actual tokens only on fingerprint hit; colliding siblings
+//!   chain intrusively through `Node::next_sibling`, so collisions cost
+//!   one extra token compare, never a wrong answer.
+//! * **Flat per-node address storage.** Each node stores its block
+//!   groups as one flat `Vec<BlockAddr>` (`group_size` addresses per
+//!   token-block). [`RadixIndex::match_prefix`] appends node slices into
+//!   a [`GroupList`] — one `memcpy` per *node* on the path and zero
+//!   per-block allocations (the seed cloned one `Vec` per matched
+//!   token-block: 256 clones for a 4K-token match at bt=16).
+//! * **O(log n) LRU + pinned-descendant counters.** Eviction victims
+//!   come from a lazy min-heap over candidate leaves; stale entries are
+//!   invalidated by a per-node `stamp` and discarded at pop, so victim
+//!   selection is O(log n) amortized instead of an O(nodes) scan per
+//!   victim. Each node also maintains `sub_pins` (total pins in its
+//!   subtree), making the old recursive `subtree_pinned` walk an O(1)
+//!   field read (used by TTL expiry).
+//!
 //! Eviction is LRU over leaves (evicting an interior node would orphan
 //! its descendants' prefixes); TTL expiry handles the global tree's
 //! staleness problem (paper §6 Discussion).
 
-use std::collections::HashMap;
+use std::collections::{BinaryHeap, HashMap};
+use std::hash::{BuildHasherDefault, Hasher};
 
 use super::block::BlockAddr;
 
 /// Addresses backing one token-block (1 entry when aggregated, 2·L when
-/// discrete).
+/// discrete). Used on the *insert* side; matches come back as a
+/// [`GroupList`].
 pub type BlockGroup = Vec<BlockAddr>;
+
+/// Sentinel for "no node" in intrusive links.
+const NONE: usize = usize::MAX;
+
+const ROOT: usize = 0;
+
+/// FxHash-style 64-bit fingerprint of one token-block. One
+/// multiply-rotate step per token — no allocation, no byte-wise SipHash.
+#[inline]
+pub fn block_fingerprint(block: &[u32]) -> u64 {
+    const K: u64 = 0x517c_c1b7_2722_0a95;
+    let mut h = 0x2d35_8dcc_aa6c_78a5u64 ^ block.len() as u64;
+    for &t in block {
+        h = (h.rotate_left(5) ^ t as u64).wrapping_mul(K);
+    }
+    h
+}
+
+/// Pass-through hasher for already-mixed u64 fingerprint keys.
+#[derive(Default)]
+pub struct FpHasher(u64);
+
+impl Hasher for FpHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        const K: u64 = 0x517c_c1b7_2722_0a95;
+        for &b in bytes {
+            self.0 = (self.0.rotate_left(8) ^ b as u64).wrapping_mul(K);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, k: u64) {
+        self.0 = k;
+    }
+}
+
+type FpMap = HashMap<u64, usize, BuildHasherDefault<FpHasher>>;
+
+/// Flat, zero-clone view of matched block groups: `n_groups` groups of
+/// `group_size` addresses each, stored contiguously in match order.
+/// Group 2·i of a discrete-layout pool is `&list[i]` — an indexed slice,
+/// not an owned `Vec`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GroupList {
+    addrs: Vec<BlockAddr>,
+    group_size: usize,
+    n_groups: usize,
+}
+
+impl GroupList {
+    /// Number of groups (matched token-blocks).
+    pub fn len(&self) -> usize {
+        self.n_groups
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_groups == 0
+    }
+
+    /// Addresses per group (0 for address-free trees).
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    /// All addresses, flat, in match order.
+    pub fn flat(&self) -> &[BlockAddr] {
+        &self.addrs
+    }
+
+    /// Borrowed view of group `i`.
+    pub fn group(&self, i: usize) -> &[BlockAddr] {
+        assert!(i < self.n_groups, "group {i} out of {}", self.n_groups);
+        let gs = self.group_size;
+        &self.addrs[i * gs..(i + 1) * gs]
+    }
+
+    /// Iterate groups as borrowed slices.
+    pub fn iter(&self) -> impl Iterator<Item = &[BlockAddr]> + '_ {
+        let gs = self.group_size;
+        (0..self.n_groups).map(move |i| &self.addrs[i * gs..(i + 1) * gs])
+    }
+
+    /// Append one group; the first push fixes the group arity.
+    pub fn push_group(&mut self, g: &[BlockAddr]) {
+        if self.n_groups == 0 {
+            self.group_size = g.len();
+        }
+        assert_eq!(g.len(), self.group_size, "mixed group arity");
+        self.addrs.extend_from_slice(g);
+        self.n_groups += 1;
+    }
+
+    /// Append `n_blocks` groups copied from a node's flat storage.
+    fn extend_flat(&mut self, addrs: &[BlockAddr], gs: usize, n_blocks: usize) {
+        if n_blocks == 0 {
+            return;
+        }
+        if self.n_groups == 0 {
+            self.group_size = gs;
+        }
+        // Hard assert (one compare per path node): a silently mixed
+        // arity would corrupt every group offset after it.
+        assert_eq!(gs, self.group_size, "mixed group arity");
+        self.addrs.extend_from_slice(addrs);
+        self.n_groups += n_blocks;
+    }
+
+    /// Keep only the first `n` groups.
+    pub fn truncate(&mut self, n: usize) {
+        if n < self.n_groups {
+            self.addrs.truncate(n * self.group_size);
+            self.n_groups = n;
+        }
+    }
+
+    /// Materialize owned per-group `Vec`s (slow path: retire/mutation).
+    pub fn to_groups(&self) -> Vec<BlockGroup> {
+        self.iter().map(|g| g.to_vec()).collect()
+    }
+}
+
+impl std::ops::Index<usize> for GroupList {
+    type Output = [BlockAddr];
+
+    fn index(&self, i: usize) -> &[BlockAddr] {
+        self.group(i)
+    }
+}
+
+/// Equality against the owned-group form, for tests and callers that
+/// still speak `Vec<BlockGroup>`.
+impl PartialEq<Vec<BlockGroup>> for GroupList {
+    fn eq(&self, other: &Vec<BlockGroup>) -> bool {
+        self.n_groups == other.len()
+            && self.iter().zip(other).all(|(a, b)| a == b.as_slice())
+    }
+}
 
 #[derive(Debug)]
 struct Node {
     /// Edge label from the parent; length is a multiple of `block_tokens`
     /// (except the root, which has an empty edge).
     edge: Vec<u32>,
-    /// One group per token-block of the edge.
-    groups: Vec<BlockGroup>,
-    /// Children keyed by the *entire first block* of the child's edge
-    /// (not the first token): distinct blocks that happen to share a
-    /// first token — e.g. sessions diverging inside the block where a
-    /// common non-aligned prefix ends — must coexist (vLLM's hash-based
-    /// prefix cache gets this for free by hashing whole blocks).
-    children: HashMap<Vec<u32>, usize>,
+    /// Flat block addresses: `edge_blocks * group_size` entries,
+    /// block-major.
+    addrs: Vec<BlockAddr>,
+    /// Addresses per token-block (0 for address-free trees, e.g. the
+    /// global prompt trees).
+    group_size: u32,
+    /// Children keyed by the fingerprint of the *entire first block* of
+    /// the child's edge (not the first token): distinct blocks that
+    /// happen to share a first token — e.g. sessions diverging inside
+    /// the block where a common non-aligned prefix ends — must coexist.
+    children: FpMap,
+    /// Next child of the same parent whose first block collides on
+    /// fingerprint (NONE-terminated chain).
+    next_sibling: usize,
     parent: usize,
     last_access: f64,
     /// In-use count: requests currently reading this node's blocks.
@@ -41,7 +223,48 @@ struct Node {
     /// TTL expiry (SGLang's lock_ref, needed so an admission's matched
     /// prefix cannot be reclaimed before the request retires).
     pins: u32,
+    /// Total pins in this node's subtree (self included) — the O(1)
+    /// replacement for the recursive `subtree_pinned` walk.
+    sub_pins: u32,
+    /// Bumped whenever this node's LRU candidacy or access time changes;
+    /// heap entries carrying an older stamp are discarded at pop.
+    stamp: u64,
     valid: bool,
+}
+
+impl Node {
+    fn blocks(&self, block_tokens: usize) -> usize {
+        self.edge.len() / block_tokens
+    }
+}
+
+/// Lazy-deletion min-heap entry for LRU victim selection.
+#[derive(Debug, PartialEq)]
+struct LruEntry {
+    access: f64,
+    stamp: u64,
+    node: usize,
+}
+
+impl Eq for LruEntry {}
+
+impl Ord for LruEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the oldest access
+        // first; ties break toward the lowest node index (deterministic,
+        // and it matches the seed's first-minimum scan).
+        other
+            .access
+            .partial_cmp(&self.access)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for LruEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
 }
 
 #[derive(Debug)]
@@ -52,18 +275,24 @@ pub struct RadixIndex {
     /// TTL in seconds; 0 disables expiry.
     ttl: f64,
     token_blocks: usize,
+    /// Live (valid, non-root) node count.
+    live_nodes: usize,
+    /// Candidate-leaf min-heap (lazy deletion via `Node::stamp`).
+    lru: BinaryHeap<LruEntry>,
+    /// Mask applied to child fingerprints. All-ones normally; tests
+    /// shrink it to force collision chains.
+    fp_mask: u64,
 }
 
-/// Result of a prefix match.
+/// Result of a prefix match: matched length plus a zero-clone
+/// [`GroupList`] of the matched block groups in prompt order.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct IndexMatch {
     /// Matched length in tokens (multiple of block_tokens).
     pub tokens: usize,
     /// One group per matched token-block, in prompt order.
-    pub groups: Vec<BlockGroup>,
+    pub groups: GroupList,
 }
-
-const ROOT: usize = 0;
 
 impl RadixIndex {
     pub fn new(block_tokens: usize, ttl: f64) -> Self {
@@ -71,17 +300,24 @@ impl RadixIndex {
         RadixIndex {
             nodes: vec![Node {
                 edge: vec![],
-                groups: vec![],
-                children: HashMap::new(),
+                addrs: vec![],
+                group_size: 0,
+                children: FpMap::default(),
+                next_sibling: NONE,
                 parent: ROOT,
                 last_access: 0.0,
                 pins: 0,
+                sub_pins: 0,
+                stamp: 0,
                 valid: true,
             }],
             free_list: vec![],
             block_tokens,
             ttl,
             token_blocks: 0,
+            live_nodes: 0,
+            lru: BinaryHeap::new(),
+            fp_mask: u64::MAX,
         }
     }
 
@@ -98,8 +334,35 @@ impl RadixIndex {
         self.token_blocks == 0
     }
 
-    fn alloc_node(&mut self, node: Node) -> usize {
+    /// Test hook: mask child fingerprints down to `mask` bits so
+    /// collisions become common and the sibling chains get exercised.
+    /// Must be called on a fresh, empty index (existing map keys would
+    /// otherwise go stale).
+    #[doc(hidden)]
+    pub fn set_fingerprint_mask(&mut self, mask: u64) {
+        assert!(
+            self.nodes[ROOT].children.is_empty() && self.live_nodes == 0,
+            "fingerprint mask must be set before any insert"
+        );
+        self.fp_mask = mask;
+    }
+
+    #[inline]
+    fn fp(&self, block: &[u32]) -> u64 {
+        block_fingerprint(block) & self.fp_mask
+    }
+
+    // ------------------------------------------------------------------
+    // Node + child-link plumbing
+    // ------------------------------------------------------------------
+
+    fn alloc_node(&mut self, mut node: Node) -> usize {
+        self.live_nodes += 1;
         if let Some(i) = self.free_list.pop() {
+            // Continue the slot's stamp sequence so heap entries from a
+            // previous incarnation of this slot can never alias the new
+            // node.
+            node.stamp = self.nodes[i].stamp + 1;
             self.nodes[i] = node;
             i
         } else {
@@ -110,12 +373,149 @@ impl RadixIndex {
 
     fn release_node(&mut self, idx: usize) {
         debug_assert_ne!(idx, ROOT);
-        self.nodes[idx].valid = false;
-        self.nodes[idx].children.clear();
-        self.nodes[idx].edge.clear();
-        self.nodes[idx].groups.clear();
+        let n = &mut self.nodes[idx];
+        n.valid = false;
+        n.stamp += 1;
+        n.children.clear();
+        n.edge.clear();
+        n.addrs.clear();
+        n.next_sibling = NONE;
+        n.pins = 0;
+        n.sub_pins = 0;
+        self.live_nodes -= 1;
         self.free_list.push(idx);
     }
+
+    /// Find `parent`'s child whose edge starts with the block `key`.
+    /// Fingerprint first; token verification only on fingerprint hit.
+    fn find_child(&self, parent: usize, key: &[u32]) -> Option<usize> {
+        let fp = self.fp(key);
+        let mut cand = self.nodes[parent].children.get(&fp).copied();
+        while let Some(i) = cand {
+            if &self.nodes[i].edge[..self.block_tokens] == key {
+                return Some(i);
+            }
+            let next = self.nodes[i].next_sibling;
+            cand = if next == NONE { None } else { Some(next) };
+        }
+        None
+    }
+
+    /// Link `child` under `parent`, chaining on fingerprint collision.
+    fn attach_child(&mut self, parent: usize, child: usize) {
+        let fp = self.fp(&self.nodes[child].edge[..self.block_tokens]);
+        let prev = self.nodes[parent].children.insert(fp, child);
+        self.nodes[child].next_sibling = prev.unwrap_or(NONE);
+    }
+
+    /// Unlink `child` from `parent` (must be linked). Call before the
+    /// child's edge is modified — the fingerprint is recomputed from it.
+    fn detach_child(&mut self, parent: usize, child: usize) {
+        let fp = self.fp(&self.nodes[child].edge[..self.block_tokens]);
+        let head = self.nodes[parent].children[&fp];
+        if head == child {
+            let next = self.nodes[child].next_sibling;
+            if next == NONE {
+                self.nodes[parent].children.remove(&fp);
+            } else {
+                *self.nodes[parent].children.get_mut(&fp).unwrap() = next;
+            }
+        } else {
+            let mut prev = head;
+            loop {
+                let next = self.nodes[prev].next_sibling;
+                if next == NONE {
+                    debug_assert!(false, "child not linked under parent");
+                    break;
+                }
+                if next == child {
+                    self.nodes[prev].next_sibling =
+                        self.nodes[child].next_sibling;
+                    break;
+                }
+                prev = next;
+            }
+        }
+        self.nodes[child].next_sibling = NONE;
+    }
+
+    /// All children of `node` (map heads plus collision chains).
+    fn child_indices(&self, node: usize) -> Vec<usize> {
+        let mut out = vec![];
+        for &head in self.nodes[node].children.values() {
+            let mut c = head;
+            while c != NONE {
+                out.push(c);
+                c = self.nodes[c].next_sibling;
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // LRU heap + pin-counter plumbing
+    // ------------------------------------------------------------------
+
+    fn lru_entry_live(&self, e: &LruEntry) -> bool {
+        if e.node == ROOT {
+            return false;
+        }
+        let n = &self.nodes[e.node];
+        n.valid
+            && e.stamp == n.stamp
+            && e.access == n.last_access
+            && n.children.is_empty()
+            && n.pins == 0
+    }
+
+    /// Invalidate any stale heap entry for `idx` and, if it is an
+    /// evictable leaf right now, push a fresh one. Call whenever a
+    /// node's candidacy inputs change (access, pins, leaf-ness, death).
+    fn refresh_lru(&mut self, idx: usize) {
+        let n = &mut self.nodes[idx];
+        n.stamp += 1;
+        if idx != ROOT && n.valid && n.pins == 0 && n.children.is_empty() {
+            self.lru.push(LruEntry {
+                access: n.last_access,
+                stamp: n.stamp,
+                node: idx,
+            });
+        }
+        // Bound stale-entry growth: rebuild when the heap is dominated
+        // by dead entries.
+        if self.lru.len() > 64 && self.lru.len() > 4 * (self.live_nodes + 1) {
+            let old = std::mem::take(&mut self.lru);
+            for e in old {
+                if self.lru_entry_live(&e) {
+                    self.lru.push(e);
+                }
+            }
+        }
+    }
+
+    /// Bump `idx`'s access time, re-queueing it for LRU if it is a leaf.
+    fn touch(&mut self, idx: usize, now: f64) {
+        self.nodes[idx].last_access = now;
+        if self.nodes[idx].children.is_empty() {
+            self.refresh_lru(idx);
+        }
+    }
+
+    /// Add `delta` to `sub_pins` on `idx` and every ancestor up to root.
+    fn adjust_sub_pins(&mut self, mut idx: usize, delta: i32) {
+        loop {
+            let n = &mut self.nodes[idx];
+            n.sub_pins = (n.sub_pins as i64 + delta as i64) as u32;
+            if idx == ROOT {
+                break;
+            }
+            idx = n.parent;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Core operations
+    // ------------------------------------------------------------------
 
     /// Truncate a token sequence to whole token-blocks.
     pub fn usable_len(&self, tokens: usize) -> usize {
@@ -130,9 +530,10 @@ impl RadixIndex {
     /// redundant).
     pub fn insert(&mut self, tokens: &[u32], groups: &[BlockGroup], now: f64)
                   -> Vec<BlockGroup> {
+        let bt = self.block_tokens;
         let usable = self.usable_len(tokens.len());
         let tokens = &tokens[..usable];
-        let n_blocks = usable / self.block_tokens;
+        let n_blocks = usable / bt;
         assert!(
             groups.len() >= n_blocks,
             "need {n_blocks} groups, got {}",
@@ -144,27 +545,34 @@ impl RadixIndex {
         self.nodes[ROOT].last_access = now;
 
         while pos < usable {
-            let key = &tokens[pos..pos + self.block_tokens];
-            match self.nodes[cur].children.get(key).copied() {
+            let key = &tokens[pos..pos + bt];
+            match self.find_child(cur, key) {
                 None => {
                     // Attach the whole remainder as one new leaf.
-                    let edge: Vec<u32> = tokens[pos..].to_vec();
-                    let g: Vec<BlockGroup> = groups
-                        [pos / self.block_tokens..n_blocks]
-                        .to_vec();
-                    self.token_blocks += g.len();
+                    let start = pos / bt;
+                    let gs = groups[start].len();
+                    let mut addrs =
+                        Vec::with_capacity(gs * (n_blocks - start));
+                    for g in &groups[start..n_blocks] {
+                        assert_eq!(g.len(), gs, "mixed group arity");
+                        addrs.extend_from_slice(g);
+                    }
+                    self.token_blocks += n_blocks - start;
                     let leaf = self.alloc_node(Node {
-                        edge,
-                        groups: g,
-                        children: HashMap::new(),
+                        edge: tokens[pos..].to_vec(),
+                        addrs,
+                        group_size: gs as u32,
+                        children: FpMap::default(),
+                        next_sibling: NONE,
                         parent: cur,
                         last_access: now,
                         pins: 0,
+                        sub_pins: 0,
+                        stamp: 0,
                         valid: true,
                     });
-                    self.nodes[cur]
-                        .children
-                        .insert(key.to_vec(), leaf);
+                    self.attach_child(cur, leaf);
+                    self.refresh_lru(leaf);
                     return dup;
                 }
                 Some(child) => {
@@ -173,7 +581,7 @@ impl RadixIndex {
                         &tokens[pos..],
                     );
                     debug_assert!(
-                        common >= self.block_tokens,
+                        common >= bt,
                         "block-keyed child must share its first block"
                     );
                     if common < self.nodes[child].edge.len() {
@@ -184,25 +592,33 @@ impl RadixIndex {
                     // (the engine re-inserts a prompt whose prefix groups
                     // alias what `match` returned; identity means there
                     // is nothing to free).
-                    let n_common_blocks = common / self.block_tokens;
-                    let start = pos / self.block_tokens;
-                    let child_now = self.nodes[cur].children[key];
-                    for (i, g) in groups[start..start + n_common_blocks]
-                        .iter()
-                        .enumerate()
+                    let n_common = common / bt;
+                    let start = pos / bt;
+                    let gs = self.nodes[child].group_size as usize;
+                    for (i, g) in
+                        groups[start..start + n_common].iter().enumerate()
                     {
-                        if self.nodes[child_now].groups.get(i) != Some(g) {
+                        let existing =
+                            &self.nodes[child].addrs[i * gs..(i + 1) * gs];
+                        if existing != g.as_slice() {
                             dup.push(g.clone());
                         }
                     }
-                    let child = self.nodes[cur].children[key];
-                    self.nodes[child].last_access = now;
+                    self.touch(child, now);
                     cur = child;
                     pos += common;
                 }
             }
         }
         dup
+    }
+
+    /// Address-free insert (global prompt trees / simulator): the same
+    /// prefix bookkeeping with implicit empty groups.
+    pub fn insert_unaddressed(&mut self, tokens: &[u32], now: f64) {
+        let n = self.usable_len(tokens.len()) / self.block_tokens;
+        let groups = vec![BlockGroup::new(); n];
+        self.insert(tokens, &groups, now);
     }
 
     /// Longest common prefix of `edge` and `rest`, rounded down to a
@@ -219,59 +635,78 @@ impl RadixIndex {
     /// Split `node`'s edge at `at` tokens (block-aligned): the node keeps
     /// the head; a new child gets the tail + original children.
     fn split(&mut self, node: usize, at: usize) {
-        debug_assert!(at % self.block_tokens == 0 && at > 0);
+        let bt = self.block_tokens;
+        debug_assert!(at % bt == 0 && at > 0);
         let tail_edge = self.nodes[node].edge.split_off(at);
-        let tail_groups = self.nodes[node]
-            .groups
-            .split_off(at / self.block_tokens);
+        let gs = self.nodes[node].group_size;
+        let tail_addrs =
+            self.nodes[node].addrs.split_off((at / bt) * gs as usize);
         let tail_children = std::mem::take(&mut self.nodes[node].children);
         let last_access = self.nodes[node].last_access;
+        // A pin covers the whole edge (pins are taken on block-split
+        // boundaries), so both halves inherit it; unpin walks both.
         let pins = self.nodes[node].pins;
+        let sub = self.nodes[node].sub_pins;
         let tail = self.alloc_node(Node {
             edge: tail_edge,
-            groups: tail_groups,
+            addrs: tail_addrs,
+            group_size: gs,
             children: tail_children,
+            next_sibling: NONE,
             parent: node,
             last_access,
-            // A pin covers the whole edge (pins are taken on block-split
-            // boundaries), so both halves inherit it; unpin walks both.
             pins,
+            // tail subtree = the old children plus the duplicated pin:
+            // exactly the old node's subtree total.
+            sub_pins: sub,
+            stamp: 0,
             valid: true,
         });
         // Fix the grandchildren's parent pointers.
-        let grandchildren: Vec<usize> =
-            self.nodes[tail].children.values().copied().collect();
-        for gc in grandchildren {
+        for gc in self.child_indices(tail) {
             self.nodes[gc].parent = tail;
         }
-        let tail_key =
-            self.nodes[tail].edge[..self.block_tokens].to_vec();
-        self.nodes[node].children.insert(tail_key, tail);
+        self.nodes[node].sub_pins = sub + pins;
+        if pins > 0 {
+            // The duplicated pin raises every ancestor's subtree total.
+            let parent = self.nodes[node].parent;
+            self.adjust_sub_pins(parent, pins as i32);
+        }
+        self.attach_child(node, tail);
+        self.refresh_lru(node); // now interior
+        self.refresh_lru(tail); // may be a leaf
     }
 
     /// Longest indexed prefix of `tokens`; bumps last_access on the path.
+    /// Returns borrowed-copy handles ([`GroupList`]) — no per-block
+    /// allocation.
     pub fn match_prefix(&mut self, tokens: &[u32], now: f64) -> IndexMatch {
+        let bt = self.block_tokens;
         let mut cur = ROOT;
         let mut pos = 0;
         let mut out = IndexMatch::default();
         self.nodes[ROOT].last_access = now;
         loop {
-            if pos + self.block_tokens > tokens.len() {
+            if pos + bt > tokens.len() {
                 break;
             }
-            let key = &tokens[pos..pos + self.block_tokens];
-            let Some(&child) = self.nodes[cur].children.get(key) else {
+            let Some(child) = self.find_child(cur, &tokens[pos..pos + bt])
+            else {
                 break;
             };
             let common = self.common_block_prefix(
                 &self.nodes[child].edge,
                 &tokens[pos..],
             );
-            debug_assert!(common >= self.block_tokens);
-            self.nodes[child].last_access = now;
-            for g in &self.nodes[child].groups[..common / self.block_tokens] {
-                out.groups.push(g.clone());
-            }
+            debug_assert!(common >= bt);
+            self.touch(child, now);
+            let n_blocks = common / bt;
+            let gs = self.nodes[child].group_size as usize;
+            out.groups.extend_flat(
+                &self.nodes[child].addrs[..n_blocks * gs],
+                gs,
+                n_blocks,
+            );
             pos += common;
             out.tokens += common;
             if common < self.nodes[child].edge.len() {
@@ -286,98 +721,118 @@ impl RadixIndex {
     /// Returns the pinned length in tokens; pass the same slice to
     /// [`Self::unpin`] when the request retires.
     pub fn pin(&mut self, tokens: &[u32]) -> usize {
-        self.walk_path(tokens, |n| n.pins += 1)
+        let (pos, path) = self.matched_path(tokens);
+        // The path is a root→leaf chain (path[0] is a child of the
+        // root), so one reverse pass gives each node its exact subtree
+        // delta — O(path) total, not O(path²) of per-node root walks.
+        let mut covered = 0u32; // pinned path nodes at this depth or below
+        for &idx in path.iter().rev() {
+            self.nodes[idx].pins += 1;
+            covered += 1;
+            self.nodes[idx].sub_pins += covered;
+            self.refresh_lru(idx);
+        }
+        self.nodes[ROOT].sub_pins += covered;
+        pos
     }
 
     /// Release a pin taken by [`Self::pin`] on the same token sequence.
     pub fn unpin(&mut self, tokens: &[u32]) -> usize {
-        self.walk_path(tokens, |n| {
-            debug_assert!(n.pins > 0, "unpin without pin");
-            n.pins = n.pins.saturating_sub(1);
-        })
+        let (pos, path) = self.matched_path(tokens);
+        // Mirror of `pin`: reverse pass with a running count of the
+        // decrements actually applied at this depth or below.
+        let mut covered = 0u32;
+        for &idx in path.iter().rev() {
+            debug_assert!(self.nodes[idx].pins > 0, "unpin without pin");
+            if self.nodes[idx].pins > 0 {
+                self.nodes[idx].pins -= 1;
+                covered += 1;
+            }
+            self.nodes[idx].sub_pins -= covered;
+            self.refresh_lru(idx);
+        }
+        self.nodes[ROOT].sub_pins -= covered;
+        pos
     }
 
-    /// Walk the matched path applying `f` to each fully-matched node,
-    /// splitting a final partially-matched edge so pin boundaries always
-    /// land on node boundaries. Returns matched tokens.
-    fn walk_path<F: FnMut(&mut Node)>(&mut self, tokens: &[u32], mut f: F)
-                                      -> usize {
+    /// Walk the matched path, splitting a final partially-matched edge so
+    /// pin boundaries always land on node boundaries. Returns matched
+    /// tokens plus the fully-matched node indices in root→leaf order.
+    fn matched_path(&mut self, tokens: &[u32]) -> (usize, Vec<usize>) {
+        let bt = self.block_tokens;
         let mut cur = ROOT;
         let mut pos = 0;
+        let mut path = vec![];
         loop {
-            if pos + self.block_tokens > tokens.len() {
+            if pos + bt > tokens.len() {
                 break;
             }
-            let key = &tokens[pos..pos + self.block_tokens];
-            let Some(&child) = self.nodes[cur].children.get(key) else {
+            let Some(child) = self.find_child(cur, &tokens[pos..pos + bt])
+            else {
                 break;
             };
             let common = self.common_block_prefix(
                 &self.nodes[child].edge,
                 &tokens[pos..],
             );
-            debug_assert!(common >= self.block_tokens);
+            debug_assert!(common >= bt);
             if common < self.nodes[child].edge.len() {
-                // Align the node boundary to the matched span so `f`
-                // applies to exactly the in-use blocks.
+                // Align the node boundary to the matched span so the pin
+                // covers exactly the in-use blocks.
                 self.split(child, common);
             }
-            f(&mut self.nodes[child]);
+            path.push(child);
             pos += common;
             cur = child;
         }
-        pos
-    }
-
-    fn subtree_pinned(&self, node: usize) -> bool {
-        if self.nodes[node].pins > 0 {
-            return true;
-        }
-        self.nodes[node]
-            .children
-            .values()
-            .any(|&c| self.subtree_pinned(c))
+        (pos, path)
     }
 
     /// Delete the exact prefix `tokens` and everything below it. Returns
     /// the freed block addresses.
     pub fn delete(&mut self, tokens: &[u32]) -> Vec<BlockAddr> {
+        let bt = self.block_tokens;
         let usable = self.usable_len(tokens.len());
         let tokens = &tokens[..usable];
         // Walk to the node whose path equals `tokens` (may end mid-edge).
         let mut cur = ROOT;
         let mut pos = 0;
         while pos < usable {
-            let key = &tokens[pos..pos + self.block_tokens];
-            let Some(&child) = self.nodes[cur].children.get(key) else {
+            let key = &tokens[pos..pos + bt];
+            let Some(child) = self.find_child(cur, key) else {
                 return vec![];
             };
             let common = self.common_block_prefix(
                 &self.nodes[child].edge,
                 &tokens[pos..],
             );
-            debug_assert!(common >= self.block_tokens);
+            debug_assert!(common >= bt);
             pos += common;
             if common < self.nodes[child].edge.len() {
                 if pos < usable {
                     return vec![]; // diverged: prefix not present
                 }
-                // Ends mid-edge: drop the tail blocks of this edge + subtree.
+                // Ends mid-edge: drop the tail blocks of this edge +
+                // subtree. The edge head (and thus the parent link's
+                // fingerprint) is unchanged.
                 let mut freed = vec![];
-                let tail_groups = self.nodes[child]
-                    .groups
-                    .split_off(common / self.block_tokens);
+                let keep = common / bt;
+                let total = self.nodes[child].blocks(bt);
+                let gs = self.nodes[child].group_size as usize;
+                let tail_addrs =
+                    self.nodes[child].addrs.split_off(keep * gs);
                 self.nodes[child].edge.truncate(common);
-                self.token_blocks -= tail_groups.len();
-                for g in tail_groups {
-                    freed.extend(g);
-                }
-                let grandchildren: Vec<usize> =
-                    self.nodes[child].children.values().copied().collect();
-                self.nodes[child].children.clear();
-                for gc in grandchildren {
+                self.token_blocks -= total - keep;
+                freed.extend(tail_addrs);
+                for gc in self.child_indices(child) {
+                    let lost = self.nodes[gc].sub_pins;
+                    if lost > 0 {
+                        self.adjust_sub_pins(child, -(lost as i32));
+                    }
                     self.drop_subtree(gc, &mut freed);
                 }
+                self.nodes[child].children.clear();
+                self.refresh_lru(child); // may be a leaf now
                 return freed;
             }
             cur = child;
@@ -387,54 +842,47 @@ impl RadixIndex {
         }
         let mut freed = vec![];
         let parent = self.nodes[cur].parent;
-        let key = self.nodes[cur].edge[..self.block_tokens].to_vec();
-        self.nodes[parent].children.remove(&key);
+        self.detach_child(parent, cur);
+        let lost = self.nodes[cur].sub_pins;
+        if lost > 0 {
+            self.adjust_sub_pins(parent, -(lost as i32));
+        }
         self.drop_subtree(cur, &mut freed);
+        self.refresh_lru(parent);
         freed
     }
 
     fn drop_subtree(&mut self, node: usize, freed: &mut Vec<BlockAddr>) {
-        let children: Vec<usize> =
-            self.nodes[node].children.values().copied().collect();
-        for c in children {
+        for c in self.child_indices(node) {
             self.drop_subtree(c, freed);
         }
-        self.token_blocks -= self.nodes[node].groups.len();
-        for g in std::mem::take(&mut self.nodes[node].groups) {
-            freed.extend(g);
-        }
+        self.token_blocks -= self.nodes[node].blocks(self.block_tokens);
+        freed.append(&mut self.nodes[node].addrs);
         self.release_node(node);
     }
 
     /// Evict at least `want_token_blocks` token-blocks, oldest leaves
-    /// first (whole-leaf granularity). Returns freed addresses; may free
-    /// fewer than requested if the tree runs dry.
+    /// first (whole-leaf granularity). Victim selection pops the lazy
+    /// LRU heap — O(log n) amortized, not an O(nodes) scan per victim.
+    /// Returns freed addresses; may free fewer than requested if the
+    /// tree runs dry.
     pub fn evict_lru(&mut self, want_token_blocks: usize) -> Vec<BlockAddr> {
         let mut freed = vec![];
         let mut freed_blocks = 0;
         while freed_blocks < want_token_blocks {
-            // Oldest leaf (no children, valid, not root).
-            let mut best: Option<(usize, f64)> = None;
-            for (i, n) in self.nodes.iter().enumerate() {
-                if i == ROOT || !n.valid || !n.children.is_empty()
-                    || n.pins > 0
-                {
-                    continue;
-                }
-                if best.map(|(_, t)| n.last_access < t).unwrap_or(true) {
-                    best = Some((i, n.last_access));
-                }
+            let Some(e) = self.lru.pop() else { break };
+            if !self.lru_entry_live(&e) {
+                continue; // stale lazy-deleted entry
             }
-            let Some((leaf, _)) = best else { break };
-            freed_blocks += self.nodes[leaf].groups.len();
+            let leaf = e.node;
+            let blocks = self.nodes[leaf].blocks(self.block_tokens);
+            freed_blocks += blocks;
+            self.token_blocks -= blocks;
             let parent = self.nodes[leaf].parent;
-            let key = self.nodes[leaf].edge[..self.block_tokens].to_vec();
-            self.nodes[parent].children.remove(&key);
-            self.token_blocks -= self.nodes[leaf].groups.len();
-            for g in std::mem::take(&mut self.nodes[leaf].groups) {
-                freed.extend(g);
-            }
+            self.detach_child(parent, leaf);
+            freed.append(&mut self.nodes[leaf].addrs);
             self.release_node(leaf);
+            self.refresh_lru(parent); // parent may be a leaf now
         }
         freed
     }
@@ -443,6 +891,8 @@ impl RadixIndex {
     /// `filter`, up to `want_token_blocks` groups — *without* removing
     /// them from the index. Used by `swap_out` to pick HBM victims whose
     /// data moves to DRAM (the index is then remapped, not pruned).
+    /// Read-only and off the request path, so this stays a sort-once
+    /// scan rather than touching the LRU heap.
     pub fn lru_addrs<F: Fn(&BlockAddr) -> bool>(
         &self,
         want_token_blocks: usize,
@@ -460,15 +910,19 @@ impl RadixIndex {
         let mut out = vec![];
         let mut groups_taken = 0;
         'outer: for (_, leaf) in leaves {
+            let n = &self.nodes[leaf];
+            let gs = n.group_size as usize;
+            if gs == 0 {
+                continue;
+            }
             // Walk trailing groups first (deepest data is coldest).
-            for g in self.nodes[leaf].groups.iter().rev() {
+            for b in (0..n.blocks(self.block_tokens)).rev() {
                 if groups_taken >= want_token_blocks {
                     break 'outer;
                 }
-                let addrs: Vec<BlockAddr> =
-                    g.iter().copied().filter(|a| filter(a)).collect();
-                if addrs.len() == g.len() {
-                    out.extend(addrs);
+                let g = &n.addrs[b * gs..(b + 1) * gs];
+                if g.iter().all(|a| filter(a)) {
+                    out.extend_from_slice(g);
                     groups_taken += 1;
                 }
             }
@@ -485,23 +939,24 @@ impl RadixIndex {
         // Repeat until fixpoint: expiring a parent requires dropping its
         // subtree; we conservatively expire stale *subtrees* whose root's
         // entire lineage is stale (children may be fresher than parents
-        // since match bumps the whole path).
+        // since match bumps the whole path). The pinned-subtree check is
+        // the O(1) `sub_pins` counter, not a recursive walk.
         loop {
             let mut victim = None;
             for (i, n) in self.nodes.iter().enumerate() {
                 if i == ROOT || !n.valid {
                     continue;
                 }
-                if now - n.last_access > self.ttl && !self.subtree_pinned(i) {
+                if now - n.last_access > self.ttl && n.sub_pins == 0 {
                     victim = Some(i);
                     break;
                 }
             }
             let Some(v) = victim else { break };
             let parent = self.nodes[v].parent;
-            let key = self.nodes[v].edge[..self.block_tokens].to_vec();
-            self.nodes[parent].children.remove(&key);
+            self.detach_child(parent, v);
             self.drop_subtree(v, &mut freed);
+            self.refresh_lru(parent);
         }
         freed
     }
@@ -512,11 +967,9 @@ impl RadixIndex {
             if !n.valid {
                 continue;
             }
-            for g in &mut n.groups {
-                for a in g.iter_mut() {
-                    if let Some(new) = map.get(a) {
-                        *a = *new;
-                    }
+            for a in n.addrs.iter_mut() {
+                if let Some(new) = map.get(a) {
+                    *a = *new;
                 }
             }
         }
@@ -526,16 +979,14 @@ impl RadixIndex {
     pub fn all_addrs(&self) -> Vec<BlockAddr> {
         let mut out = vec![];
         for n in self.nodes.iter().filter(|n| n.valid) {
-            for g in &n.groups {
-                out.extend(g.iter().copied());
-            }
+            out.extend_from_slice(&n.addrs);
         }
         out
     }
 
     /// Live node count (excluding root).
     pub fn node_count(&self) -> usize {
-        self.nodes.iter().skip(1).filter(|n| n.valid).count()
+        self.live_nodes
     }
 }
 
@@ -543,6 +994,7 @@ impl RadixIndex {
 mod tests {
     use super::*;
     use crate::mempool::block::{InstanceId, Tier};
+    use crate::mempool::index_ref::RefRadixIndex;
     use crate::util::proptest::proptest;
 
     const BT: usize = 4; // block_tokens for tests
@@ -789,6 +1241,62 @@ mod tests {
         assert!(idx.nodes.len() < 6, "nodes leaked: {}", idx.nodes.len());
     }
 
+    #[test]
+    fn grouplist_indexing_and_iteration() {
+        let mut gl = GroupList::default();
+        assert!(gl.is_empty());
+        gl.push_group(&[addr(1), addr(2)]);
+        gl.push_group(&[addr(3), addr(4)]);
+        assert_eq!(gl.len(), 2);
+        assert_eq!(gl.group_size(), 2);
+        assert_eq!(&gl[1], &[addr(3), addr(4)][..]);
+        assert_eq!(gl.flat(), &[addr(1), addr(2), addr(3), addr(4)][..]);
+        let collected: Vec<&[BlockAddr]> = gl.iter().collect();
+        assert_eq!(collected.len(), 2);
+        gl.truncate(1);
+        assert_eq!(gl.len(), 1);
+        assert_eq!(gl.flat(), &[addr(1), addr(2)][..]);
+        assert_eq!(gl.to_groups(), vec![vec![addr(1), addr(2)]]);
+    }
+
+    #[test]
+    fn grouplist_empty_groups_have_zero_size() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.insert_unaddressed(&seq(&[1, 2, 3, 4, 5, 6, 7, 8]), 1.0);
+        let m = idx.match_prefix(&seq(&[1, 2, 3, 4, 5, 6, 7, 8]), 2.0);
+        assert_eq!(m.tokens, 8);
+        assert_eq!(m.groups.len(), 2);
+        assert_eq!(m.groups.group_size(), 0);
+        assert!(m.groups[0].is_empty());
+        assert_eq!(idx.total_token_blocks(), 2);
+    }
+
+    /// Forced fingerprint collisions: with a 0-bit mask every child of a
+    /// node lives on one collision chain; all operations must still give
+    /// token-exact answers.
+    #[test]
+    fn colliding_fingerprints_still_resolve_by_tokens() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.set_fingerprint_mask(0);
+        let a = seq(&[1, 1, 1, 1]);
+        let b = seq(&[2, 2, 2, 2]);
+        let c = seq(&[3, 3, 3, 3]);
+        idx.insert(&a, &groups(0, 1), 1.0);
+        idx.insert(&b, &groups(1, 1), 2.0);
+        idx.insert(&c, &groups(2, 1), 3.0);
+        assert_eq!(idx.node_count(), 3);
+        assert_eq!(idx.match_prefix(&a, 4.0).groups, groups(0, 1));
+        assert_eq!(idx.match_prefix(&b, 4.0).groups, groups(1, 1));
+        assert_eq!(idx.match_prefix(&c, 4.0).groups, groups(2, 1));
+        assert_eq!(idx.match_prefix(&seq(&[4, 4, 4, 4]), 4.0).tokens, 0);
+        // Delete the chain head, the middle, then the tail.
+        assert_eq!(idx.delete(&c), vec![addr(2)]);
+        assert_eq!(idx.delete(&a), vec![addr(0)]);
+        assert_eq!(idx.match_prefix(&b, 5.0).groups, groups(1, 1));
+        assert_eq!(idx.delete(&b), vec![addr(1)]);
+        assert!(idx.is_empty());
+    }
+
     /// Executable-spec model: a map from every block-aligned prefix to
     /// its first-insertion group. With children keyed by whole blocks,
     /// the tree accepts every new block whose parent prefix exists —
@@ -899,5 +1407,87 @@ mod tests {
                 assert_eq!(idx.total_token_blocks(), in_tree.len());
             }
         });
+    }
+
+    /// Differential property: random insert/match/pin/unpin/delete/evict
+    /// sequences produce identical observable results on the
+    /// fingerprint-keyed index and the seed token-keyed reference
+    /// implementation — under the normal fingerprint and under a
+    /// 4-bit mask that forces heavy collision chaining.
+    #[test]
+    fn prop_differential_vs_reference_index() {
+        for mask in [u64::MAX, 0xF] {
+            proptest(30, move |g| {
+                let mut new = RadixIndex::new(BT, 0.0);
+                new.set_fingerprint_mask(mask);
+                let mut old = RefRadixIndex::new(BT, 0.0);
+                let mut next_addr = 0u32;
+                let mut now = 0.0;
+                let mut pinned: Vec<Vec<u32>> = vec![];
+                for _ in 0..g.usize(1, 30) {
+                    now += 1.0;
+                    // Small alphabet: shared prefixes, splits, collisions.
+                    let len = g.usize(0, 5) * BT + g.usize(0, BT - 1);
+                    let toks = g.vec_u32(len, 0, 3);
+                    match g.usize(0, 5) {
+                        0 | 1 => {
+                            let nb = new.usable_len(toks.len()) / BT;
+                            let gs: Vec<BlockGroup> = (0..nb)
+                                .map(|i| vec![addr(next_addr + i as u32)])
+                                .collect();
+                            next_addr += nb as u32;
+                            let d1 = new.insert(&toks, &gs, now);
+                            let d2 = old.insert(&toks, &gs, now);
+                            assert_eq!(d1, d2, "insert dups diverged");
+                        }
+                        2 => {
+                            let m1 = new.match_prefix(&toks, now);
+                            let m2 = old.match_prefix(&toks, now);
+                            assert_eq!(m1.tokens, m2.tokens);
+                            assert_eq!(m1.groups, m2.groups);
+                        }
+                        3 => {
+                            let pos = new.pin(&toks);
+                            assert_eq!(pos, old.pin(&toks));
+                            // Keep the pinned slice only: unpin must be
+                            // called with exactly what pin covered (the
+                            // API contract), or it would touch nodes
+                            // inserted after the pin.
+                            pinned.push(toks[..pos].to_vec());
+                        }
+                        4 => {
+                            if let Some(t) = pinned.pop() {
+                                assert_eq!(new.unpin(&t), old.unpin(&t));
+                            } else {
+                                // Subtree drop order follows child-map
+                                // iteration order, which legitimately
+                                // differs between the two maps — the
+                                // freed *set* must match.
+                                let mut f1 = new.delete(&toks);
+                                let mut f2 = old.delete(&toks);
+                                f1.sort();
+                                f2.sort();
+                                assert_eq!(f1, f2, "delete freed diverged");
+                            }
+                        }
+                        _ => {
+                            let want = g.usize(1, 3);
+                            let f1 = new.evict_lru(want);
+                            let f2 = old.evict_lru(want);
+                            assert_eq!(f1, f2, "evict freed diverged");
+                        }
+                    }
+                    assert_eq!(
+                        new.total_token_blocks(),
+                        old.total_token_blocks()
+                    );
+                    let mut a1 = new.all_addrs();
+                    a1.sort();
+                    let mut a2 = old.all_addrs();
+                    a2.sort();
+                    assert_eq!(a1, a2, "indexed addr sets diverged");
+                }
+            });
+        }
     }
 }

@@ -1,0 +1,508 @@
+//! Reference radix index — the seed implementation, preserved.
+//!
+//! This is the pre-optimization [`super::index::RadixIndex`]: children
+//! keyed by owned `Vec<u32>` token-blocks (SipHash over the full block
+//! per hop), one heap-cloned `Vec<BlockAddr>` per matched token-block,
+//! and an O(nodes) scan *per eviction victim*. It exists for two
+//! purposes and must not be used on any serving path:
+//!
+//! * **Differential testing.** The property tests in [`super::index`]
+//!   drive random insert/match/pin/unpin/delete/evict sequences through
+//!   both implementations and require identical observable results,
+//!   including under forced fingerprint collisions.
+//! * **Benchmark baseline.** `benches/fig10_index.rs` uses it to show
+//!   the O(n²)→O(log n) eviction-churn fix and the per-hop key-hashing
+//!   win with real numbers.
+//!
+//! Behavioral contract (shared with the optimized index): block-aligned
+//! edges, whole-leaf LRU eviction, pin duplication across splits, TTL
+//! expiry of wholly-stale subtrees, and duplicate-group reporting on
+//! insert.
+
+use std::collections::HashMap;
+
+use super::block::BlockAddr;
+use super::index::BlockGroup;
+
+#[derive(Debug)]
+struct Node {
+    edge: Vec<u32>,
+    groups: Vec<BlockGroup>,
+    children: HashMap<Vec<u32>, usize>,
+    parent: usize,
+    last_access: f64,
+    pins: u32,
+    valid: bool,
+}
+
+/// The seed token-keyed index (see module docs). API mirrors
+/// [`super::index::RadixIndex`], with matches returned as owned groups.
+#[derive(Debug)]
+pub struct RefRadixIndex {
+    nodes: Vec<Node>,
+    free_list: Vec<usize>,
+    block_tokens: usize,
+    ttl: f64,
+    token_blocks: usize,
+}
+
+/// Result of a prefix match (owned-group form).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RefIndexMatch {
+    /// Matched length in tokens (multiple of block_tokens).
+    pub tokens: usize,
+    /// One group per matched token-block, in prompt order.
+    pub groups: Vec<BlockGroup>,
+}
+
+const ROOT: usize = 0;
+
+impl RefRadixIndex {
+    pub fn new(block_tokens: usize, ttl: f64) -> Self {
+        assert!(block_tokens > 0);
+        RefRadixIndex {
+            nodes: vec![Node {
+                edge: vec![],
+                groups: vec![],
+                children: HashMap::new(),
+                parent: ROOT,
+                last_access: 0.0,
+                pins: 0,
+                valid: true,
+            }],
+            free_list: vec![],
+            block_tokens,
+            ttl,
+            token_blocks: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn total_token_blocks(&self) -> usize {
+        self.token_blocks
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.token_blocks == 0
+    }
+
+    fn alloc_node(&mut self, node: Node) -> usize {
+        if let Some(i) = self.free_list.pop() {
+            self.nodes[i] = node;
+            i
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    fn release_node(&mut self, idx: usize) {
+        debug_assert_ne!(idx, ROOT);
+        self.nodes[idx].valid = false;
+        self.nodes[idx].children.clear();
+        self.nodes[idx].edge.clear();
+        self.nodes[idx].groups.clear();
+        self.free_list.push(idx);
+    }
+
+    /// Truncate a token sequence to whole token-blocks.
+    pub fn usable_len(&self, tokens: usize) -> usize {
+        tokens - tokens % self.block_tokens
+    }
+
+    /// Insert `tokens` (truncated to whole blocks) mapping to `groups`;
+    /// returns the duplicate groups (prefix already indexed).
+    pub fn insert(&mut self, tokens: &[u32], groups: &[BlockGroup], now: f64)
+                  -> Vec<BlockGroup> {
+        let usable = self.usable_len(tokens.len());
+        let tokens = &tokens[..usable];
+        let n_blocks = usable / self.block_tokens;
+        assert!(
+            groups.len() >= n_blocks,
+            "need {n_blocks} groups, got {}",
+            groups.len()
+        );
+        let mut dup: Vec<BlockGroup> = vec![];
+        let mut cur = ROOT;
+        let mut pos = 0; // tokens consumed
+        self.nodes[ROOT].last_access = now;
+
+        while pos < usable {
+            let key = &tokens[pos..pos + self.block_tokens];
+            match self.nodes[cur].children.get(key).copied() {
+                None => {
+                    // Attach the whole remainder as one new leaf.
+                    let edge: Vec<u32> = tokens[pos..].to_vec();
+                    let g: Vec<BlockGroup> = groups
+                        [pos / self.block_tokens..n_blocks]
+                        .to_vec();
+                    self.token_blocks += g.len();
+                    let leaf = self.alloc_node(Node {
+                        edge,
+                        groups: g,
+                        children: HashMap::new(),
+                        parent: cur,
+                        last_access: now,
+                        pins: 0,
+                        valid: true,
+                    });
+                    self.nodes[cur]
+                        .children
+                        .insert(key.to_vec(), leaf);
+                    return dup;
+                }
+                Some(child) => {
+                    let common = self.common_block_prefix(
+                        &self.nodes[child].edge,
+                        &tokens[pos..],
+                    );
+                    debug_assert!(
+                        common >= self.block_tokens,
+                        "block-keyed child must share its first block"
+                    );
+                    if common < self.nodes[child].edge.len() {
+                        self.split(child, common);
+                    }
+                    // Matched blocks already exist: incoming copies are
+                    // duplicates unless they alias the indexed ones.
+                    let n_common_blocks = common / self.block_tokens;
+                    let start = pos / self.block_tokens;
+                    let child_now = self.nodes[cur].children[key];
+                    for (i, g) in groups[start..start + n_common_blocks]
+                        .iter()
+                        .enumerate()
+                    {
+                        if self.nodes[child_now].groups.get(i) != Some(g) {
+                            dup.push(g.clone());
+                        }
+                    }
+                    let child = self.nodes[cur].children[key];
+                    self.nodes[child].last_access = now;
+                    cur = child;
+                    pos += common;
+                }
+            }
+        }
+        dup
+    }
+
+    /// Longest common prefix of `edge` and `rest`, rounded down to a
+    /// block boundary.
+    fn common_block_prefix(&self, edge: &[u32], rest: &[u32]) -> usize {
+        let mut i = 0;
+        let max = edge.len().min(rest.len());
+        while i < max && edge[i] == rest[i] {
+            i += 1;
+        }
+        i - i % self.block_tokens
+    }
+
+    /// Split `node`'s edge at `at` tokens (block-aligned).
+    fn split(&mut self, node: usize, at: usize) {
+        debug_assert!(at % self.block_tokens == 0 && at > 0);
+        let tail_edge = self.nodes[node].edge.split_off(at);
+        let tail_groups = self.nodes[node]
+            .groups
+            .split_off(at / self.block_tokens);
+        let tail_children = std::mem::take(&mut self.nodes[node].children);
+        let last_access = self.nodes[node].last_access;
+        let pins = self.nodes[node].pins;
+        let tail = self.alloc_node(Node {
+            edge: tail_edge,
+            groups: tail_groups,
+            children: tail_children,
+            parent: node,
+            last_access,
+            // A pin covers the whole edge, so both halves inherit it.
+            pins,
+            valid: true,
+        });
+        let grandchildren: Vec<usize> =
+            self.nodes[tail].children.values().copied().collect();
+        for gc in grandchildren {
+            self.nodes[gc].parent = tail;
+        }
+        let tail_key =
+            self.nodes[tail].edge[..self.block_tokens].to_vec();
+        self.nodes[node].children.insert(tail_key, tail);
+    }
+
+    /// Longest indexed prefix of `tokens`; bumps last_access on the path.
+    pub fn match_prefix(&mut self, tokens: &[u32], now: f64)
+                        -> RefIndexMatch {
+        let mut cur = ROOT;
+        let mut pos = 0;
+        let mut out = RefIndexMatch::default();
+        self.nodes[ROOT].last_access = now;
+        loop {
+            if pos + self.block_tokens > tokens.len() {
+                break;
+            }
+            let key = &tokens[pos..pos + self.block_tokens];
+            let Some(&child) = self.nodes[cur].children.get(key) else {
+                break;
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            debug_assert!(common >= self.block_tokens);
+            self.nodes[child].last_access = now;
+            for g in &self.nodes[child].groups[..common / self.block_tokens] {
+                out.groups.push(g.clone());
+            }
+            pos += common;
+            out.tokens += common;
+            if common < self.nodes[child].edge.len() {
+                break; // partial edge match ends the walk
+            }
+            cur = child;
+        }
+        out
+    }
+
+    /// Pin the matched prefix of `tokens`; returns the pinned length.
+    pub fn pin(&mut self, tokens: &[u32]) -> usize {
+        self.walk_path(tokens, |n| n.pins += 1)
+    }
+
+    /// Release a pin taken by [`Self::pin`] on the same token sequence.
+    pub fn unpin(&mut self, tokens: &[u32]) -> usize {
+        self.walk_path(tokens, |n| {
+            debug_assert!(n.pins > 0, "unpin without pin");
+            n.pins = n.pins.saturating_sub(1);
+        })
+    }
+
+    /// Walk the matched path applying `f` to each fully-matched node,
+    /// splitting a final partially-matched edge.
+    fn walk_path<F: FnMut(&mut Node)>(&mut self, tokens: &[u32], mut f: F)
+                                      -> usize {
+        let mut cur = ROOT;
+        let mut pos = 0;
+        loop {
+            if pos + self.block_tokens > tokens.len() {
+                break;
+            }
+            let key = &tokens[pos..pos + self.block_tokens];
+            let Some(&child) = self.nodes[cur].children.get(key) else {
+                break;
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            debug_assert!(common >= self.block_tokens);
+            if common < self.nodes[child].edge.len() {
+                self.split(child, common);
+            }
+            f(&mut self.nodes[child]);
+            pos += common;
+            cur = child;
+        }
+        pos
+    }
+
+    fn subtree_pinned(&self, node: usize) -> bool {
+        if self.nodes[node].pins > 0 {
+            return true;
+        }
+        self.nodes[node]
+            .children
+            .values()
+            .any(|&c| self.subtree_pinned(c))
+    }
+
+    /// Delete the exact prefix `tokens` and everything below it.
+    pub fn delete(&mut self, tokens: &[u32]) -> Vec<BlockAddr> {
+        let usable = self.usable_len(tokens.len());
+        let tokens = &tokens[..usable];
+        let mut cur = ROOT;
+        let mut pos = 0;
+        while pos < usable {
+            let key = &tokens[pos..pos + self.block_tokens];
+            let Some(&child) = self.nodes[cur].children.get(key) else {
+                return vec![];
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            debug_assert!(common >= self.block_tokens);
+            pos += common;
+            if common < self.nodes[child].edge.len() {
+                if pos < usable {
+                    return vec![]; // diverged: prefix not present
+                }
+                // Ends mid-edge: drop the edge tail + subtree.
+                let mut freed = vec![];
+                let tail_groups = self.nodes[child]
+                    .groups
+                    .split_off(common / self.block_tokens);
+                self.nodes[child].edge.truncate(common);
+                self.token_blocks -= tail_groups.len();
+                for g in tail_groups {
+                    freed.extend(g);
+                }
+                let grandchildren: Vec<usize> =
+                    self.nodes[child].children.values().copied().collect();
+                self.nodes[child].children.clear();
+                for gc in grandchildren {
+                    self.drop_subtree(gc, &mut freed);
+                }
+                return freed;
+            }
+            cur = child;
+        }
+        if cur == ROOT {
+            return vec![];
+        }
+        let mut freed = vec![];
+        let parent = self.nodes[cur].parent;
+        let key = self.nodes[cur].edge[..self.block_tokens].to_vec();
+        self.nodes[parent].children.remove(&key);
+        self.drop_subtree(cur, &mut freed);
+        freed
+    }
+
+    fn drop_subtree(&mut self, node: usize, freed: &mut Vec<BlockAddr>) {
+        let children: Vec<usize> =
+            self.nodes[node].children.values().copied().collect();
+        for c in children {
+            self.drop_subtree(c, freed);
+        }
+        self.token_blocks -= self.nodes[node].groups.len();
+        for g in std::mem::take(&mut self.nodes[node].groups) {
+            freed.extend(g);
+        }
+        self.release_node(node);
+    }
+
+    /// Evict at least `want_token_blocks` token-blocks, oldest leaves
+    /// first — via a full O(nodes) scan per victim (the behavior under
+    /// study in the eviction-churn benchmark).
+    pub fn evict_lru(&mut self, want_token_blocks: usize) -> Vec<BlockAddr> {
+        let mut freed = vec![];
+        let mut freed_blocks = 0;
+        while freed_blocks < want_token_blocks {
+            // Oldest leaf (no children, valid, not root).
+            let mut best: Option<(usize, f64)> = None;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if i == ROOT || !n.valid || !n.children.is_empty()
+                    || n.pins > 0
+                {
+                    continue;
+                }
+                if best.map(|(_, t)| n.last_access < t).unwrap_or(true) {
+                    best = Some((i, n.last_access));
+                }
+            }
+            let Some((leaf, _)) = best else { break };
+            freed_blocks += self.nodes[leaf].groups.len();
+            let parent = self.nodes[leaf].parent;
+            let key = self.nodes[leaf].edge[..self.block_tokens].to_vec();
+            self.nodes[parent].children.remove(&key);
+            self.token_blocks -= self.nodes[leaf].groups.len();
+            for g in std::mem::take(&mut self.nodes[leaf].groups) {
+                freed.extend(g);
+            }
+            self.release_node(leaf);
+        }
+        freed
+    }
+
+    /// LRU leaf groups satisfying `filter`, without removal (swap picks).
+    pub fn lru_addrs<F: Fn(&BlockAddr) -> bool>(
+        &self,
+        want_token_blocks: usize,
+        filter: F,
+    ) -> Vec<BlockAddr> {
+        let mut leaves: Vec<(f64, usize)> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, n)| n.valid && n.children.is_empty() && n.pins == 0)
+            .map(|(i, n)| (n.last_access, i))
+            .collect();
+        leaves.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out = vec![];
+        let mut groups_taken = 0;
+        'outer: for (_, leaf) in leaves {
+            // Walk trailing groups first (deepest data is coldest).
+            for g in self.nodes[leaf].groups.iter().rev() {
+                if groups_taken >= want_token_blocks {
+                    break 'outer;
+                }
+                let addrs: Vec<BlockAddr> =
+                    g.iter().copied().filter(|a| filter(a)).collect();
+                if addrs.len() == g.len() {
+                    out.extend(addrs);
+                    groups_taken += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Drop every node idle longer than the TTL. Returns freed addresses.
+    pub fn expire(&mut self, now: f64) -> Vec<BlockAddr> {
+        if self.ttl <= 0.0 {
+            return vec![];
+        }
+        let mut freed = vec![];
+        loop {
+            let mut victim = None;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if i == ROOT || !n.valid {
+                    continue;
+                }
+                if now - n.last_access > self.ttl && !self.subtree_pinned(i) {
+                    victim = Some(i);
+                    break;
+                }
+            }
+            let Some(v) = victim else { break };
+            let parent = self.nodes[v].parent;
+            let key = self.nodes[v].edge[..self.block_tokens].to_vec();
+            self.nodes[parent].children.remove(&key);
+            self.drop_subtree(v, &mut freed);
+        }
+        freed
+    }
+
+    /// Rewrite addresses after a swap (old -> new).
+    pub fn remap(&mut self, map: &HashMap<BlockAddr, BlockAddr>) {
+        for n in &mut self.nodes {
+            if !n.valid {
+                continue;
+            }
+            for g in &mut n.groups {
+                for a in g.iter_mut() {
+                    if let Some(new) = map.get(a) {
+                        *a = *new;
+                    }
+                }
+            }
+        }
+    }
+
+    /// All addresses currently referenced (diagnostics / leak checks).
+    pub fn all_addrs(&self) -> Vec<BlockAddr> {
+        let mut out = vec![];
+        for n in self.nodes.iter().filter(|n| n.valid) {
+            for g in &n.groups {
+                out.extend(g.iter().copied());
+            }
+        }
+        out
+    }
+
+    /// Live node count (excluding root).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().skip(1).filter(|n| n.valid).count()
+    }
+}

@@ -16,10 +16,12 @@ pub mod allocator;
 pub mod api;
 pub mod block;
 pub mod index;
+pub mod index_ref;
 pub mod tier;
 pub mod transfer;
 
 pub use api::{MatchResult, MemPool, PoolError, PoolStats};
 pub use block::{BlockAddr, BlockGeometry, InstanceId, Tier};
-pub use index::RadixIndex;
+pub use index::{GroupList, RadixIndex};
+pub use index_ref::RefRadixIndex;
 pub use transfer::{TransferFlags, TransferMode, TransferRequest};

@@ -11,7 +11,6 @@
 
 use std::collections::BTreeMap;
 
-use crate::mempool::index::BlockGroup;
 use crate::mempool::{InstanceId, RadixIndex};
 
 /// Instance roles, mirroring Figure 1.
@@ -80,11 +79,8 @@ impl GlobalPromptTrees {
         let Some(e) = self.trees.get_mut(&instance) else {
             return;
         };
-        let usable = e.tree.usable_len(tokens.len());
-        let n_blocks = usable / self.block_tokens;
-        // Global trees carry no addresses — empty groups.
-        let groups: Vec<BlockGroup> = vec![vec![]; n_blocks];
-        e.tree.insert(&tokens[..usable], &groups, now);
+        // Global trees carry no addresses — address-free insert.
+        e.tree.insert_unaddressed(tokens, now);
     }
 
     /// Matched prefix length (tokens) of `tokens` on every prefill-capable

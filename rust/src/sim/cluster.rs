@@ -165,8 +165,7 @@ impl Instance {
             self.evicted_blocks += (freed_tb * per) as u64;
         }
         let before = self.index.total_token_blocks();
-        let groups = vec![vec![]; nb];
-        self.index.insert(&tokens[..usable], &groups, now);
+        self.index.insert_unaddressed(&tokens[..usable], now);
         let added = self.index.total_token_blocks() - before;
         self.index_blocks += added * per;
     }

@@ -5,7 +5,13 @@
 //!   reporting, for microbenchmarks (Fig 9/10/11-class).
 //! * [`Table`] — paper-style row printer + JSON sink so every bench emits
 //!   both a human table and a machine-readable record under
-//!   `bench_results/`.
+//!   `bench_results/` by default.
+//!
+//! The JSON sink is controlled by the `MEMSERVE_BENCH_JSON` env var so
+//! perf trajectories can be collected across PRs without scraping
+//! stdout: unset or `1` writes `bench_results/<name>.json`; `0`/`off`
+//! disables the sink; any other value is used as the output directory
+//! (e.g. `MEMSERVE_BENCH_JSON=perf_history/pr42`).
 
 use std::time::Instant;
 
@@ -130,13 +136,29 @@ impl Table {
         Ok(path)
     }
 
-    /// Print + save; the standard bench epilogue.
+    /// Print + save; the standard bench epilogue. The JSON sink follows
+    /// `MEMSERVE_BENCH_JSON` (see module docs).
     pub fn finish(&self) {
         self.print();
-        match self.save_json("bench_results") {
+        let var = std::env::var("MEMSERVE_BENCH_JSON").ok();
+        let Some(dir) = json_sink_dir(var.as_deref()) else {
+            return;
+        };
+        match self.save_json(&dir) {
             Ok(p) => println!("[saved {p}]"),
             Err(e) => eprintln!("[warn] could not save bench json: {e}"),
         }
+    }
+}
+
+/// Resolve the JSON sink directory from `MEMSERVE_BENCH_JSON`:
+/// `None`/`""`/`"1"` → the default `bench_results`; `"0"`/`"off"` →
+/// disabled; anything else is the directory itself.
+fn json_sink_dir(var: Option<&str>) -> Option<String> {
+    match var {
+        None | Some("") | Some("1") => Some("bench_results".to_string()),
+        Some("0") | Some("off") => None,
+        Some(dir) => Some(dir.to_string()),
     }
 }
 
@@ -191,6 +213,19 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn json_sink_dir_env_contract() {
+        assert_eq!(json_sink_dir(None).as_deref(), Some("bench_results"));
+        assert_eq!(json_sink_dir(Some("")).as_deref(), Some("bench_results"));
+        assert_eq!(json_sink_dir(Some("1")).as_deref(), Some("bench_results"));
+        assert_eq!(json_sink_dir(Some("0")), None);
+        assert_eq!(json_sink_dir(Some("off")), None);
+        assert_eq!(
+            json_sink_dir(Some("perf_history/pr42")).as_deref(),
+            Some("perf_history/pr42")
+        );
     }
 
     #[test]

@@ -55,8 +55,7 @@ impl WorkloadStats {
                 out.shared_prefix_pct
                     .push(100.0 * m.tokens as f64 / prompt.len() as f64);
                 out.requests += 1;
-                let groups = vec![vec![]; prompt.len()];
-                idx.insert(&prompt, &groups, 1.0);
+                idx.insert_unaddressed(&prompt, 1.0);
                 // Append simulated response tokens to the context.
                 ctx[si] = prompt;
                 for _ in 0..t.target_gen {
