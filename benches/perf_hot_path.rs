@@ -113,9 +113,7 @@ fn main() {
                                        0.0)
                 .unwrap();
             if let Some(old) = scatter_groups.replace(g) {
-                for grp in old {
-                    pool.free_mem(&grp).unwrap();
-                }
+                pool.free_mem(old.flat()).unwrap();
             }
         });
         let groups = scatter_groups.unwrap();

@@ -13,8 +13,7 @@ use super::kv;
 use super::request::{sample, Request};
 #[cfg(test)]
 use super::request::SamplingParams;
-use crate::mempool::index::BlockGroup;
-use crate::mempool::{MemPool, Tier};
+use crate::mempool::{GroupList, MemPool, Tier};
 use crate::runtime::{DecodeSession, ModelRuntime};
 use crate::util::rng::Rng;
 
@@ -42,11 +41,12 @@ pub struct PrefillDone {
     pub cached_tokens: usize,
     /// Pinned prefix length (== cached_tokens; unpin at retire).
     pub pinned_tokens: usize,
-    /// Index-owned groups covering the cached prefix.
-    pub prefix_groups: Vec<BlockGroup>,
+    /// Index-owned groups covering the cached prefix (flat storage —
+    /// the pool's zero-clone match handles, kept as-is end-to-end).
+    pub prefix_groups: GroupList,
     /// Engine-owned groups covering the new tokens (incl. a zero-padded
     /// partial tail block when the prompt is not block-aligned).
-    pub new_groups: Vec<BlockGroup>,
+    pub new_groups: GroupList,
     /// Logits after the last prompt token.
     pub logits: Vec<f32>,
     /// Prompt length this prefill covered.
@@ -63,8 +63,8 @@ pub struct ActiveDecode {
     pub prompt_len: usize,
     pub cached_tokens: usize,
     pub pinned_tokens: usize,
-    pub prefix_groups: Vec<BlockGroup>,
-    pub new_groups: Vec<BlockGroup>,
+    pub prefix_groups: GroupList,
+    pub new_groups: GroupList,
     pub generated: Vec<u32>,
     /// Next token to feed (last sampled).
     pub pending_token: u32,
@@ -138,20 +138,24 @@ impl Engine {
             Default::default()
         };
         let cached = m.tokens;
-        // The engine owns/mutates its group lists across the request
-        // lifetime, so materialize the zero-clone match handles once
-        // here (prefill is ms-scale; the µs-scale match path stays
-        // allocation-free inside the pool).
-        let mut prefix_groups = m.groups.to_groups();
+        // The match handles stay in their flat zero-clone form for the
+        // whole request lifetime — no per-group `Vec` materialization.
+        let mut prefix_groups = m.groups;
         // DRAM-resident prefix blocks must come back to HBM before use.
-        if prefix_groups.iter().flatten().any(|a| a.tier == Tier::Dram) {
-            let flat: Vec<_> =
-                prefix_groups.iter().flatten().copied().collect();
-            let need = flat.iter().filter(|a| a.tier == Tier::Dram).count();
+        if prefix_groups.flat().iter().any(|a| a.tier == Tier::Dram) {
+            let need = prefix_groups
+                .flat()
+                .iter()
+                .filter(|a| a.tier == Tier::Dram)
+                .count();
             self.pool.ensure_free_hbm(need, now)?;
-            let back = self.pool.swap_in(&flat)?;
+            let back = self.pool.swap_in(prefix_groups.flat())?;
             let per = self.pool.geometry().blocks_per_token_block();
-            prefix_groups = back.chunks(per).map(|c| c.to_vec()).collect();
+            let mut rebuilt = GroupList::default();
+            for c in back.chunks(per) {
+                rebuilt.push_group(c);
+            }
+            prefix_groups = rebuilt;
         }
 
         let new_tokens = &prompt[cached..];
@@ -204,7 +208,7 @@ impl Engine {
             .pick_decode_ctx(total_len)
             .with_context(|| format!("no decode ctx >= {total_len}"))?;
         let mut groups = pf.prefix_groups.clone();
-        groups.extend(pf.new_groups.iter().cloned());
+        groups.extend_list(&pf.new_groups);
         let kv_buf = kv::gather_to_buffer(&self.pool, &groups, ctx)?;
         let sess = self.runtime.decode_start(&kv_buf, ctx, pf.prompt_len)?;
         let mut rng = Rng::new(req.sampling.seed ^ req.id);
@@ -231,7 +235,7 @@ impl Engine {
     pub fn start_decode_from_blocks(
         &mut self,
         req: Request,
-        groups: Vec<BlockGroup>,
+        groups: GroupList,
         prompt_len: usize,
         first_logits: Vec<f32>,
         pinned_tokens: usize,
@@ -255,7 +259,7 @@ impl Engine {
             prompt_len,
             cached_tokens: 0,
             pinned_tokens,
-            prefix_groups: vec![],
+            prefix_groups: GroupList::default(),
             new_groups: groups,
             generated: vec![first],
             pending_token: first,
@@ -301,8 +305,8 @@ impl Engine {
             self.pool.unpin(&a.req.prompt[..pinned]);
         }
         if !self.opts.context_caching {
-            for g in a.new_groups.drain(..) {
-                self.pool.free_mem(&g)?;
+            for g in a.new_groups.iter() {
+                self.pool.free_mem(g)?;
             }
             return Ok(vec![]);
         }
@@ -317,16 +321,16 @@ impl Engine {
 
         // Keep prompt full-block groups; re-scatter the mixed/generated
         // tail from the decode buffer; drop the prefill partial block.
-        let mut groups: Vec<BlockGroup> = a.prefix_groups.clone();
+        // Everything stays in flat GroupList form — no per-group Vecs.
+        let mut groups = std::mem::take(&mut a.prefix_groups);
         let prefix_blocks = groups.len();
         debug_assert!(prefix_blocks <= full_prompt_blocks);
-        let keep_new = full_prompt_blocks - prefix_blocks;
-        for g in &a.new_groups[..keep_new.min(a.new_groups.len())] {
-            groups.push(g.clone());
-        }
+        let keep_new =
+            (full_prompt_blocks - prefix_blocks).min(a.new_groups.len());
+        groups.extend_range(&a.new_groups, 0, keep_new);
         // Free the prefill groups beyond full prompt blocks (partial
         // tail).
-        for g in &a.new_groups[keep_new.min(a.new_groups.len())..] {
+        for g in a.new_groups.iter().skip(keep_new) {
             self.pool.free_mem(g)?;
         }
         if total_full_blocks > full_prompt_blocks {
@@ -347,10 +351,10 @@ impl Engine {
                 to - from,
                 now,
             )?;
-            groups.extend(tail_groups);
+            groups.extend_list(&tail_groups);
         }
         let indexable = total_full_blocks * bt;
-        self.pool.insert(&seq[..indexable], groups, now)?;
+        self.pool.insert_list(&seq[..indexable], &groups, now)?;
         Ok(seq)
     }
 
@@ -364,21 +368,20 @@ impl Engine {
             self.pool.unpin(&prompt[..pf.pinned_tokens]);
         }
         if !self.opts.context_caching {
-            for g in &pf.new_groups {
+            for g in pf.new_groups.iter() {
                 self.pool.free_mem(g)?;
             }
             return Ok(());
         }
         let full_blocks = pf.prompt_len / bt;
         let mut groups = pf.prefix_groups;
-        let keep_new = full_blocks - groups.len().min(full_blocks);
-        groups.extend(pf.new_groups[..keep_new.min(pf.new_groups.len())]
-            .iter()
-            .cloned());
-        for g in &pf.new_groups[keep_new.min(pf.new_groups.len())..] {
+        let keep_new =
+            (full_blocks - groups.len().min(full_blocks)).min(pf.new_groups.len());
+        groups.extend_range(&pf.new_groups, 0, keep_new);
+        for g in pf.new_groups.iter().skip(keep_new) {
             self.pool.free_mem(g)?;
         }
-        self.pool.insert(&prompt[..full_blocks * bt], groups, now)?;
+        self.pool.insert_list(&prompt[..full_blocks * bt], &groups, now)?;
         Ok(())
     }
 
@@ -392,24 +395,24 @@ impl Engine {
     pub fn insert_suffix(
         &mut self,
         seq: &[u32],
-        suffix_groups: Vec<BlockGroup>,
+        suffix_groups: GroupList,
         suffix_start_block: usize,
         now: f64,
     ) -> Result<bool> {
         let bt = self.block_tokens();
         let m = self.pool.match_prefix(seq, now);
         if m.tokens / bt < suffix_start_block {
-            for g in &suffix_groups {
+            for g in suffix_groups.iter() {
                 self.pool.free_mem(g)?;
             }
             return Ok(false);
         }
-        let mut groups = m.groups.to_groups();
+        let mut groups = m.groups;
         groups.truncate(suffix_start_block);
-        groups.extend(suffix_groups);
+        groups.extend_list(&suffix_groups);
         let tokens = groups.len() * bt;
         anyhow::ensure!(tokens <= seq.len(), "suffix exceeds sequence");
-        self.pool.insert(&seq[..tokens], groups, now)?;
+        self.pool.insert_list(&seq[..tokens], &groups, now)?;
         Ok(true)
     }
 

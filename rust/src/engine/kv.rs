@@ -13,8 +13,7 @@
 //! Total bytes are identical; what changes is the number of blocks (and
 //! therefore network calls — the whole point of Fig 11/12).
 
-use crate::mempool::index::BlockGroup;
-use crate::mempool::{BlockGeometry, MemPool, PoolError, Tier};
+use crate::mempool::{BlockGeometry, GroupList, MemPool, PoolError, Tier};
 
 /// Per-(token, layer-half) float count: H · hd.
 fn slot(geom: &BlockGeometry) -> usize {
@@ -23,17 +22,17 @@ fn slot(geom: &BlockGeometry) -> usize {
 
 /// Scatter freshly produced KV (`[L, 2, N, H, hd]` flattened, bucket
 /// capacity N, first `n_tokens` valid) into newly allocated pool blocks.
-/// Returns one [`BlockGroup`] per token-block. Partial trailing tokens
-/// (beyond the last whole block) are stored too — the group covers them —
-/// but only whole blocks should be indexed (the caller truncates when
-/// calling `insert`).
+/// Returns a [`GroupList`] with one group per token-block (flat storage,
+/// no per-group `Vec`s). Partial trailing tokens (beyond the last whole
+/// block) are stored too — the group covers them — but only whole blocks
+/// should be indexed (the caller truncates when calling `insert`).
 pub fn scatter_new_kv(
     pool: &mut MemPool,
     new_kv: &[f32],
     bucket_n: usize,
     n_tokens: usize,
     now: f64,
-) -> Result<Vec<BlockGroup>, PoolError> {
+) -> Result<GroupList, PoolError> {
     let geom = *pool.geometry();
     let s = slot(&geom);
     let bt = geom.block_tokens;
@@ -47,7 +46,7 @@ pub fn scatter_new_kv(
     // bucket layout ([L, 2, N, H, hd]) and the block layouts, so every
     // block copies `valid·s`-float *runs* per (layer, half) — one memcpy
     // instead of `bt` token-sized ones.
-    let mut groups = Vec::with_capacity(n_blocks);
+    let mut groups = GroupList::default();
     let mut buf = vec![0f32; geom.floats_per_block()];
     let mut small = vec![0f32; bt * s];
     for b in 0..n_blocks {
@@ -78,7 +77,7 @@ pub fn scatter_new_kv(
                 }
             }
         }
-        groups.push(addrs);
+        groups.push_group(&addrs);
     }
     Ok(groups)
 }
@@ -87,7 +86,7 @@ pub fn scatter_new_kv(
 /// (first `groups.len() * bt` token slots populated; rest zero).
 pub fn gather_to_buffer(
     pool: &MemPool,
-    groups: &[BlockGroup],
+    groups: &GroupList,
     cap: usize,
 ) -> Result<Vec<f32>, PoolError> {
     let geom = *pool.geometry();
@@ -242,7 +241,9 @@ mod tests {
         let kv = rand_kv(&mut rng, &geom, 16);
         let groups = scatter_new_kv(&mut pool, &kv, 16, 16, 0.0).unwrap();
         // Gather only the first 2 of 4 blocks.
-        let out = gather_to_buffer(&pool, &groups[..2], 8).unwrap();
+        let mut head = GroupList::default();
+        head.extend_range(&groups, 0, 2);
+        let out = gather_to_buffer(&pool, &head, 8).unwrap();
         let s = slot(&geom);
         for l in 0..geom.layers {
             let src = (l * 2) * 16 * s;
@@ -310,7 +311,7 @@ mod tests {
         let kv1 = rand_kv(&mut rng, &geom, 16);
         let g1 = scatter_new_kv(&mut pool, &kv1, 16, 16, 0.0).unwrap();
         let toks: Vec<u32> = (0..16).collect();
-        pool.insert(&toks, g1, 0.0).unwrap();
+        pool.insert_list(&toks, &g1, 0.0).unwrap();
         assert_eq!(pool.free_blocks(Tier::Hbm), 0);
         // New scatter must evict the old entry and succeed.
         let kv2 = rand_kv(&mut rng, &geom, 8);

@@ -222,6 +222,20 @@ impl MemPool {
         Ok(offered.saturating_sub(n_dup))
     }
 
+    /// [`Self::insert`] over a [`GroupList`] — the engine retire path,
+    /// which assembles prefix + fresh groups without materializing
+    /// per-group `Vec`s.
+    pub fn insert_list(&mut self, tokens: &[u32], groups: &GroupList,
+                       now: f64) -> Result<usize, PoolError> {
+        let offered = groups.len();
+        let dup = self.index.insert_list(tokens, groups, now);
+        let n_dup = dup.len();
+        self.free_mem(dup.flat())?;
+        self.stats.inserts += 1;
+        self.stats.insert_dup_blocks += n_dup as u64;
+        Ok(offered.saturating_sub(n_dup))
+    }
+
     /// Match and pin in one step — the engine's admission path. The
     /// pinned prefix cannot be evicted/swapped/expired until
     /// [`Self::unpin`] (call it with the same token slice at retire).

@@ -166,6 +166,21 @@ impl GroupList {
         self.n_groups += n_blocks;
     }
 
+    /// Append groups `[from, to)` of `other` (same arity — one memcpy).
+    pub fn extend_range(&mut self, other: &GroupList, from: usize, to: usize) {
+        assert!(from <= to && to <= other.n_groups, "range out of bounds");
+        if from == to {
+            return;
+        }
+        let gs = other.group_size;
+        self.extend_flat(&other.addrs[from * gs..to * gs], gs, to - from);
+    }
+
+    /// Append every group of `other` (same arity).
+    pub fn extend_list(&mut self, other: &GroupList) {
+        self.extend_range(other, 0, other.n_groups);
+    }
+
     /// Keep only the first `n` groups.
     pub fn truncate(&mut self, n: usize) {
         if n < self.n_groups {
@@ -530,16 +545,29 @@ impl RadixIndex {
     /// redundant).
     pub fn insert(&mut self, tokens: &[u32], groups: &[BlockGroup], now: f64)
                   -> Vec<BlockGroup> {
+        self.insert_with(tokens, groups.len(), |i| groups[i].as_slice(), now)
+            .to_groups()
+    }
+
+    /// [`Self::insert`] over a [`GroupList`] — the engine's retire path,
+    /// which no longer materializes `Vec<BlockGroup>`. Duplicates come
+    /// back as a `GroupList` too (free them via its flat slice).
+    pub fn insert_list(&mut self, tokens: &[u32], groups: &GroupList,
+                       now: f64) -> GroupList {
+        self.insert_with(tokens, groups.len(), |i| groups.group(i), now)
+    }
+
+    fn insert_with<'g, F>(&mut self, tokens: &[u32], n_groups: usize,
+                          group: F, now: f64) -> GroupList
+    where
+        F: Fn(usize) -> &'g [BlockAddr],
+    {
         let bt = self.block_tokens;
         let usable = self.usable_len(tokens.len());
         let tokens = &tokens[..usable];
         let n_blocks = usable / bt;
-        assert!(
-            groups.len() >= n_blocks,
-            "need {n_blocks} groups, got {}",
-            groups.len()
-        );
-        let mut dup: Vec<BlockGroup> = vec![];
+        assert!(n_groups >= n_blocks, "need {n_blocks} groups, got {n_groups}");
+        let mut dup = GroupList::default();
         let mut cur = ROOT;
         let mut pos = 0; // tokens consumed
         self.nodes[ROOT].last_access = now;
@@ -550,10 +578,11 @@ impl RadixIndex {
                 None => {
                     // Attach the whole remainder as one new leaf.
                     let start = pos / bt;
-                    let gs = groups[start].len();
+                    let gs = group(start).len();
                     let mut addrs =
                         Vec::with_capacity(gs * (n_blocks - start));
-                    for g in &groups[start..n_blocks] {
+                    for i in start..n_blocks {
+                        let g = group(i);
                         assert_eq!(g.len(), gs, "mixed group arity");
                         addrs.extend_from_slice(g);
                     }
@@ -595,13 +624,12 @@ impl RadixIndex {
                     let n_common = common / bt;
                     let start = pos / bt;
                     let gs = self.nodes[child].group_size as usize;
-                    for (i, g) in
-                        groups[start..start + n_common].iter().enumerate()
-                    {
+                    for i in 0..n_common {
+                        let g = group(start + i);
                         let existing =
                             &self.nodes[child].addrs[i * gs..(i + 1) * gs];
-                        if existing != g.as_slice() {
-                            dup.push(g.clone());
+                        if existing != g {
+                            dup.push_group(g);
                         }
                     }
                     self.touch(child, now);
@@ -715,6 +743,36 @@ impl RadixIndex {
             cur = child;
         }
         out
+    }
+
+    /// Longest indexed prefix of `tokens` in tokens — **read-only**: no
+    /// last-access bump, no LRU traffic, no group copying. Used by the
+    /// reference global prompt trees, whose staleness is governed by
+    /// insert recency alone (routing a prompt must not extend its TTL).
+    pub fn match_len(&self, tokens: &[u32]) -> usize {
+        let bt = self.block_tokens;
+        let mut cur = ROOT;
+        let mut pos = 0;
+        loop {
+            if pos + bt > tokens.len() {
+                break;
+            }
+            let Some(child) = self.find_child(cur, &tokens[pos..pos + bt])
+            else {
+                break;
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            debug_assert!(common >= bt);
+            pos += common;
+            if common < self.nodes[child].edge.len() {
+                break;
+            }
+            cur = child;
+        }
+        pos
     }
 
     /// Pin the matched prefix of `tokens` against eviction/swap/expiry.
@@ -1257,6 +1315,67 @@ mod tests {
         assert_eq!(gl.len(), 1);
         assert_eq!(gl.flat(), &[addr(1), addr(2)][..]);
         assert_eq!(gl.to_groups(), vec![vec![addr(1), addr(2)]]);
+    }
+
+    #[test]
+    fn grouplist_extend_range_and_list() {
+        let mut a = GroupList::default();
+        for i in 0..4 {
+            a.push_group(&[addr(i), addr(10 + i)]);
+        }
+        let mut b = GroupList::default();
+        b.extend_range(&a, 1, 3);
+        assert_eq!(b.len(), 2);
+        assert_eq!(&b[0], a.group(1));
+        assert_eq!(&b[1], a.group(2));
+        let mut c = GroupList::default();
+        c.extend_list(&b);
+        c.extend_range(&a, 0, 0); // empty range is a no-op
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.flat(), b.flat());
+    }
+
+    #[test]
+    fn match_len_is_read_only_and_agrees_with_match_prefix() {
+        let mut idx = RadixIndex::new(BT, 10.0);
+        let toks: Vec<u32> = (0..12).collect();
+        idx.insert(&toks, &groups(0, 3), 0.0);
+        assert_eq!(idx.match_len(&toks), 12);
+        assert_eq!(idx.match_len(&toks[..7]), 4);
+        assert_eq!(idx.match_len(&[9, 9, 9, 9]), 0);
+        // Read-only: repeated match_len never refreshes the TTL clock.
+        for _ in 0..3 {
+            assert_eq!(idx.match_len(&toks), 12);
+        }
+        idx.expire(11.0);
+        assert_eq!(idx.match_len(&toks), 0);
+    }
+
+    #[test]
+    fn insert_list_matches_vec_insert() {
+        let mut a = RadixIndex::new(BT, 0.0);
+        let mut b = RadixIndex::new(BT, 0.0);
+        let toks: Vec<u32> = (0..8).collect();
+        let gs = groups(0, 2);
+        let mut gl = GroupList::default();
+        for g in &gs {
+            gl.push_group(g);
+        }
+        assert!(a.insert(&toks, &gs, 1.0).is_empty());
+        assert!(b.insert_list(&toks, &gl, 1.0).is_empty());
+        // A duplicate re-insert reports the same dups through both APIs.
+        let dup_vec = a.insert(&toks, &groups(50, 2), 2.0);
+        let mut gl2 = GroupList::default();
+        for g in &groups(50, 2) {
+            gl2.push_group(g);
+        }
+        let dup_list = b.insert_list(&toks, &gl2, 2.0);
+        assert_eq!(dup_list, dup_vec);
+        assert_eq!(
+            a.match_prefix(&toks, 3.0).groups,
+            b.match_prefix(&toks, 3.0).groups
+        );
+        assert_eq!(a.total_token_blocks(), b.total_token_blocks());
     }
 
     #[test]

@@ -1,0 +1,1001 @@
+//! The fused global prompt tree (paper §6, Fig 6 — fleet-scale edition).
+//!
+//! The seed kept one radix tree per instance and walked **all of them**
+//! per request: O(instances × prompt_blocks) on the hottest scheduler
+//! path. This module replaces the array with a **single** radix tree over
+//! token-blocks whose nodes carry a per-instance ownership bitset, so one
+//! walk yields the matched prefix length for *every* prefill-capable
+//! instance simultaneously — routing is O(prompt_blocks) regardless of
+//! cluster size (the per-node work is a handful of u64 word ops).
+//!
+//! # Internals
+//!
+//! * **Ownership bitsets + stamp lists.** Each node stores `owners`
+//!   (`u64` words, grown lazily as instances register) and `stamps`, a
+//!   slot-sorted `Vec<(slot, last_insert)>` mirroring the set bits.
+//!   [`FusedPromptTree::record`] walks the insert path and stamps every
+//!   node on it, so ownership is *prefix-closed*: a node owned by
+//!   instance i implies its parent is owned by i, and the parent's stamp
+//!   is ≥ the child's. The routing walk exploits closure: it keeps an
+//!   `alive` word set (instances owning the whole path so far), ANDs it
+//!   with each node's owners, and records drop-outs at their depth.
+//! * **Heap-driven TTL.** The global tree only learns about inserts,
+//!   never local evictions, so entries carry a TTL (paper §6 Discussion).
+//!   The seed re-scanned every node per expiry fixpoint iteration; here
+//!   every record pushes a lazy `(stamp, node, slot)` entry onto a
+//!   min-heap and [`FusedPromptTree::expire`] pops expired entries in
+//!   O(log n) each, validating against the node's current stamp (stale
+//!   entries from re-records are discarded). Stamp monotonicity up the
+//!   tree means children expire no later than parents, so clearing bits
+//!   heap-order preserves prefix closure; a node whose last owner leaves
+//!   is unlinked and its (ownerless) subtree reclaimed.
+//! * **Incremental cached-block counters.** Per-slot `cached_blocks` is
+//!   maintained on record/expire/remove instead of re-deriving from the
+//!   tree, keeping the router's load signals O(1).
+//! * **Read-only matching.** The routing walk mutates nothing but two
+//!   reusable scratch buffers — global trees are address-free, so there
+//!   is no LRU to maintain and bumping last-access on every route (what
+//!   the seed's shared `RadixIndex` did) is pure waste; staleness is
+//!   governed by *insert* recency alone. [`FusedPromptTree::match_into`]
+//!   fills a caller-provided vector: zero allocation at steady state.
+//!
+//! The seed layout survives as
+//! [`crate::scheduler::prompt_tree_ref::RefGlobalPromptTrees`] for
+//! differential testing and as the benchmark baseline
+//! (`benches/fig15_scheduler.rs` sweeps instance counts against it).
+
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
+use std::hash::BuildHasherDefault;
+
+use crate::mempool::index::{block_fingerprint, FpHasher};
+use crate::mempool::InstanceId;
+use crate::scheduler::prompt_tree::InstanceKind;
+
+/// Sentinel for "no node" in intrusive sibling links.
+const NONE: usize = usize::MAX;
+
+const ROOT: usize = 0;
+
+type FpMap = HashMap<u64, usize, BuildHasherDefault<FpHasher>>;
+
+#[inline]
+fn word_bit(slot: u32) -> (usize, u64) {
+    ((slot / 64) as usize, 1u64 << (slot % 64))
+}
+
+#[inline]
+fn test_bit(words: &[u64], slot: u32) -> bool {
+    let (w, m) = word_bit(slot);
+    words.get(w).is_some_and(|x| x & m != 0)
+}
+
+struct Slot {
+    kind: InstanceKind,
+    /// Token-blocks this instance is believed to cache (incremental).
+    cached_blocks: usize,
+    live: bool,
+}
+
+struct FNode {
+    /// Edge label from the parent; length is a multiple of
+    /// `block_tokens` (root excepted: empty edge).
+    edge: Vec<u32>,
+    /// Children keyed by the fingerprint of the child's first edge
+    /// block; fingerprint collisions chain through `next_sibling`.
+    children: FpMap,
+    next_sibling: usize,
+    parent: usize,
+    /// Ownership bitset over instance slots (lazily grown; short = 0s).
+    owners: Vec<u64>,
+    /// Slot-sorted (slot, last-insert stamp) pairs — exactly the set
+    /// bits of `owners`.
+    stamps: Vec<(u32, f64)>,
+    /// Bumped on node release so recycled indices invalidate old heap
+    /// entries.
+    gen: u64,
+    valid: bool,
+}
+
+impl FNode {
+    fn blocks(&self, block_tokens: usize) -> usize {
+        self.edge.len() / block_tokens
+    }
+}
+
+/// Lazy min-heap entry: (node, slot) expires at `stamp + ttl`.
+#[derive(Debug, PartialEq)]
+struct ExpireEntry {
+    stamp: f64,
+    node: usize,
+    slot: u32,
+    gen: u64,
+}
+
+impl Eq for ExpireEntry {}
+
+impl Ord for ExpireEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we pop the oldest stamp
+        // first; ties break deterministically by (node, slot).
+        other
+            .stamp
+            .partial_cmp(&self.stamp)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+            .then_with(|| other.slot.cmp(&self.slot))
+    }
+}
+
+impl PartialOrd for ExpireEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One radix tree for the whole fleet; see module docs.
+pub struct FusedPromptTree {
+    nodes: Vec<FNode>,
+    free_list: Vec<usize>,
+    block_tokens: usize,
+    /// TTL in seconds; 0 disables expiry.
+    ttl: f64,
+    /// Instance registry: slot-indexed info + id→slot map (BTreeMap so
+    /// candidate emission is in ascending InstanceId order, matching the
+    /// seed's per-instance `BTreeMap` iteration).
+    slots: Vec<Slot>,
+    by_id: BTreeMap<InstanceId, u32>,
+    free_slots: Vec<u32>,
+    /// Bit per slot whose instance runs prefill (routing candidates).
+    prefill_mask: Vec<u64>,
+    /// TTL heap (lazy deletion, validated against node stamps at pop).
+    heap: BinaryHeap<ExpireEntry>,
+    /// Live (node, instance) ownership pairs — heap compaction bound.
+    owner_pairs: usize,
+    /// Routing-walk scratch (reused; no allocation at steady state).
+    alive: Vec<u64>,
+    matched: Vec<usize>,
+    /// Mask applied to child fingerprints; tests shrink it to force
+    /// collision chains.
+    fp_mask: u64,
+}
+
+impl FusedPromptTree {
+    pub fn new(block_tokens: usize, ttl: f64) -> Self {
+        assert!(block_tokens > 0);
+        FusedPromptTree {
+            nodes: vec![FNode {
+                edge: vec![],
+                children: FpMap::default(),
+                next_sibling: NONE,
+                parent: ROOT,
+                owners: vec![],
+                stamps: vec![],
+                gen: 0,
+                valid: true,
+            }],
+            free_list: vec![],
+            block_tokens,
+            ttl,
+            slots: vec![],
+            by_id: BTreeMap::new(),
+            free_slots: vec![],
+            prefill_mask: vec![],
+            heap: BinaryHeap::new(),
+            owner_pairs: 0,
+            alive: vec![],
+            matched: vec![],
+            fp_mask: u64::MAX,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Test hook: mask child fingerprints to force collision chains.
+    /// Must be called before any record.
+    #[doc(hidden)]
+    pub fn set_fingerprint_mask(&mut self, mask: u64) {
+        assert!(
+            self.nodes[ROOT].children.is_empty() && self.free_list.is_empty(),
+            "fingerprint mask must be set before any record"
+        );
+        self.fp_mask = mask;
+    }
+
+    // ------------------------------------------------------------------
+    // Instance registry
+    // ------------------------------------------------------------------
+
+    pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
+        if self.by_id.contains_key(&id) {
+            // Re-registration replaces the old view (seed semantics:
+            // `BTreeMap::insert` dropped the old tree).
+            self.remove_instance(id);
+        }
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.slots[s as usize] = Slot {
+                    kind,
+                    cached_blocks: 0,
+                    live: true,
+                };
+                s
+            }
+            None => {
+                self.slots.push(Slot {
+                    kind,
+                    cached_blocks: 0,
+                    live: true,
+                });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.by_id.insert(id, slot);
+        let (w, m) = word_bit(slot);
+        if self.prefill_mask.len() <= w {
+            self.prefill_mask.resize(w + 1, 0);
+        }
+        if kind.runs_prefill() {
+            self.prefill_mask[w] |= m;
+        }
+    }
+
+    /// Drop a failed/removed instance (paper §4.4: membership change):
+    /// clear its ownership everywhere and reclaim subtrees nobody else
+    /// caches. O(nodes) — membership changes are rare and off the
+    /// request path.
+    pub fn remove_instance(&mut self, id: InstanceId) {
+        let Some(slot) = self.by_id.remove(&id) else {
+            return;
+        };
+        let (w, m) = word_bit(slot);
+        for i in 0..self.nodes.len() {
+            if i == ROOT || !self.nodes[i].valid {
+                continue;
+            }
+            let n = &mut self.nodes[i];
+            if let Ok(j) = n.stamps.binary_search_by_key(&slot, |s| s.0) {
+                n.stamps.remove(j);
+                n.owners[w] &= !m;
+                self.owner_pairs -= 1;
+            }
+        }
+        let s = &mut self.slots[slot as usize];
+        s.live = false;
+        s.cached_blocks = 0;
+        self.prefill_mask[w] &= !m;
+        self.free_slots.push(slot);
+        self.prune_ownerless();
+    }
+
+    /// Registered instances in ascending id order.
+    pub fn instances(
+        &self,
+    ) -> impl Iterator<Item = (InstanceId, InstanceKind)> + '_ {
+        self.by_id
+            .iter()
+            .map(move |(&id, &s)| (id, self.slots[s as usize].kind))
+    }
+
+    pub fn instance_count(&self) -> usize {
+        self.by_id.len()
+    }
+
+    pub fn kind_of(&self, id: InstanceId) -> Option<InstanceKind> {
+        self.by_id.get(&id).map(|&s| self.slots[s as usize].kind)
+    }
+
+    /// Total cached token-blocks believed to exist on `id` — an O(1)
+    /// counter maintained incrementally on record/expire/remove.
+    pub fn cached_blocks(&self, id: InstanceId) -> usize {
+        self.by_id
+            .get(&id)
+            .map(|&s| self.slots[s as usize].cached_blocks)
+            .unwrap_or(0)
+    }
+
+    /// Live node count (excluding root) — diagnostics.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len() - 1 - self.free_list.len()
+    }
+
+    // ------------------------------------------------------------------
+    // Node plumbing (fingerprint-keyed children, PR 1 layout)
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn fp(&self, block: &[u32]) -> u64 {
+        block_fingerprint(block) & self.fp_mask
+    }
+
+    fn alloc_node(&mut self, mut node: FNode) -> usize {
+        if let Some(i) = self.free_list.pop() {
+            // Continue the slot's gen sequence so stale heap entries can
+            // never alias the new node.
+            node.gen = self.nodes[i].gen + 1;
+            self.nodes[i] = node;
+            i
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    fn release_node(&mut self, idx: usize) {
+        debug_assert_ne!(idx, ROOT);
+        let n = &mut self.nodes[idx];
+        n.valid = false;
+        n.gen += 1;
+        n.children.clear();
+        n.edge.clear();
+        n.owners.clear();
+        n.stamps.clear();
+        n.next_sibling = NONE;
+        self.free_list.push(idx);
+    }
+
+    /// Find `parent`'s child whose edge starts with the block `key`.
+    fn find_child(&self, parent: usize, key: &[u32]) -> Option<usize> {
+        let fp = self.fp(key);
+        let mut cand = self.nodes[parent].children.get(&fp).copied();
+        while let Some(i) = cand {
+            if &self.nodes[i].edge[..self.block_tokens] == key {
+                return Some(i);
+            }
+            let next = self.nodes[i].next_sibling;
+            cand = if next == NONE { None } else { Some(next) };
+        }
+        None
+    }
+
+    fn attach_child(&mut self, parent: usize, child: usize) {
+        let fp = self.fp(&self.nodes[child].edge[..self.block_tokens]);
+        let prev = self.nodes[parent].children.insert(fp, child);
+        self.nodes[child].next_sibling = prev.unwrap_or(NONE);
+    }
+
+    fn detach_child(&mut self, parent: usize, child: usize) {
+        let fp = self.fp(&self.nodes[child].edge[..self.block_tokens]);
+        let head = self.nodes[parent].children[&fp];
+        if head == child {
+            let next = self.nodes[child].next_sibling;
+            if next == NONE {
+                self.nodes[parent].children.remove(&fp);
+            } else {
+                *self.nodes[parent].children.get_mut(&fp).unwrap() = next;
+            }
+        } else {
+            let mut prev = head;
+            loop {
+                let next = self.nodes[prev].next_sibling;
+                if next == NONE {
+                    debug_assert!(false, "child not linked under parent");
+                    break;
+                }
+                if next == child {
+                    self.nodes[prev].next_sibling =
+                        self.nodes[child].next_sibling;
+                    break;
+                }
+                prev = next;
+            }
+        }
+        self.nodes[child].next_sibling = NONE;
+    }
+
+    fn child_indices(&self, node: usize) -> Vec<usize> {
+        let mut out = vec![];
+        for &head in self.nodes[node].children.values() {
+            let mut c = head;
+            while c != NONE {
+                out.push(c);
+                c = self.nodes[c].next_sibling;
+            }
+        }
+        out
+    }
+
+    /// Longest common prefix of `edge` and `rest`, rounded down to a
+    /// block boundary.
+    fn common_block_prefix(&self, edge: &[u32], rest: &[u32]) -> usize {
+        let mut i = 0;
+        let max = edge.len().min(rest.len());
+        while i < max && edge[i] == rest[i] {
+            i += 1;
+        }
+        i - i % self.block_tokens
+    }
+
+    /// Split `node`'s edge at `at` tokens (block-aligned): the node
+    /// keeps the head; a new child gets the tail + original children.
+    /// Owners and stamps are duplicated onto the tail (each owner's
+    /// recorded span covered the whole edge), which creates new
+    /// (node, instance) pairs: heap entries are pushed for them.
+    fn split(&mut self, node: usize, at: usize) {
+        debug_assert!(at % self.block_tokens == 0 && at > 0);
+        let tail_edge = self.nodes[node].edge.split_off(at);
+        let tail_children = std::mem::take(&mut self.nodes[node].children);
+        let owners = self.nodes[node].owners.clone();
+        let stamps = self.nodes[node].stamps.clone();
+        let tail = self.alloc_node(FNode {
+            edge: tail_edge,
+            children: tail_children,
+            next_sibling: NONE,
+            parent: node,
+            owners,
+            stamps,
+            gen: 0,
+            valid: true,
+        });
+        for gc in self.child_indices(tail) {
+            self.nodes[gc].parent = tail;
+        }
+        self.attach_child(node, tail);
+        // Per-slot block counts are unchanged (the edge's blocks are now
+        // split across two owned nodes), but the pair count grows.
+        self.owner_pairs += self.nodes[tail].stamps.len();
+        if self.ttl > 0.0 {
+            let gen = self.nodes[tail].gen;
+            let pairs = self.nodes[tail].stamps.clone();
+            for (slot, stamp) in pairs {
+                self.heap.push(ExpireEntry {
+                    stamp,
+                    node: tail,
+                    slot,
+                    gen,
+                });
+            }
+            self.maybe_compact_heap();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Record (Fig 6 response path)
+    // ------------------------------------------------------------------
+
+    /// Record that `instance` now caches `tokens` (block-truncated).
+    pub fn record(&mut self, instance: InstanceId, tokens: &[u32], now: f64) {
+        let Some(&slot) = self.by_id.get(&instance) else {
+            return;
+        };
+        let bt = self.block_tokens;
+        let usable = tokens.len() - tokens.len() % bt;
+        let tokens = &tokens[..usable];
+        let mut cur = ROOT;
+        let mut pos = 0;
+        while pos < usable {
+            let key = &tokens[pos..pos + bt];
+            match self.find_child(cur, key) {
+                None => {
+                    // Attach the whole remainder as one new leaf.
+                    let leaf = self.alloc_node(FNode {
+                        edge: tokens[pos..].to_vec(),
+                        children: FpMap::default(),
+                        next_sibling: NONE,
+                        parent: cur,
+                        owners: vec![],
+                        stamps: vec![],
+                        gen: 0,
+                        valid: true,
+                    });
+                    self.attach_child(cur, leaf);
+                    self.stamp_owner(leaf, slot, now);
+                    return;
+                }
+                Some(child) => {
+                    let common = self.common_block_prefix(
+                        &self.nodes[child].edge,
+                        &tokens[pos..],
+                    );
+                    debug_assert!(
+                        common >= bt,
+                        "block-keyed child must share its first block"
+                    );
+                    if common < self.nodes[child].edge.len() {
+                        self.split(child, common);
+                    }
+                    self.stamp_owner(child, slot, now);
+                    cur = child;
+                    pos += common;
+                }
+            }
+        }
+    }
+
+    /// Mark `slot` as owning `node` as of `now`: set the bit, refresh
+    /// the stamp, maintain counters, and queue the TTL entry.
+    fn stamp_owner(&mut self, node: usize, slot: u32, now: f64) {
+        let blocks = self.nodes[node].blocks(self.block_tokens);
+        let (w, m) = word_bit(slot);
+        let n = &mut self.nodes[node];
+        if n.owners.len() <= w {
+            n.owners.resize(w + 1, 0);
+        }
+        let newly = n.owners[w] & m == 0;
+        n.owners[w] |= m;
+        match n.stamps.binary_search_by_key(&slot, |s| s.0) {
+            Ok(i) => n.stamps[i].1 = now,
+            Err(i) => n.stamps.insert(i, (slot, now)),
+        }
+        let gen = n.gen;
+        if newly {
+            self.owner_pairs += 1;
+            self.slots[slot as usize].cached_blocks += blocks;
+        }
+        if self.ttl > 0.0 {
+            self.heap.push(ExpireEntry {
+                stamp: now,
+                node,
+                slot,
+                gen,
+            });
+            self.maybe_compact_heap();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Match (the one-walk scheduling path)
+    // ------------------------------------------------------------------
+
+    /// Matched prefix length (tokens) of `tokens` on every
+    /// prefill-capable instance, in ascending instance-id order, written
+    /// into `out` (cleared first). One tree walk for the whole fleet;
+    /// mutates only internal scratch — no LRU/stamp bumping, no
+    /// allocation once scratch has warmed up.
+    pub fn match_into(
+        &mut self,
+        tokens: &[u32],
+        out: &mut Vec<(InstanceId, usize)>,
+    ) {
+        out.clear();
+        let words = self.prefill_mask.len();
+        self.alive.clear();
+        self.alive.extend_from_slice(&self.prefill_mask);
+        self.matched.clear();
+        self.matched.resize(self.slots.len(), 0);
+        let bt = self.block_tokens;
+        let mut cur = ROOT;
+        let mut pos = 0;
+        loop {
+            if pos + bt > tokens.len() {
+                break;
+            }
+            let Some(child) = self.find_child(cur, &tokens[pos..pos + bt])
+            else {
+                break;
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            debug_assert!(common >= bt);
+            // Instances not owning this node stop matching here; the
+            // rest own its whole edge (ownership covers whole nodes).
+            let mut any = 0u64;
+            for w in 0..words {
+                let ow = self.nodes[child].owners.get(w).copied().unwrap_or(0);
+                let a = self.alive[w];
+                let mut dropped = a & !ow;
+                while dropped != 0 {
+                    let b = dropped.trailing_zeros() as usize;
+                    self.matched[w * 64 + b] = pos;
+                    dropped &= dropped - 1;
+                }
+                self.alive[w] = a & ow;
+                any |= self.alive[w];
+            }
+            pos += common;
+            if any == 0 {
+                break; // nobody alive: the survivors flush is a no-op
+            }
+            if common < self.nodes[child].edge.len() {
+                break; // partial edge match ends the walk
+            }
+            cur = child;
+        }
+        // Instances alive through the whole walk matched `pos` tokens.
+        for w in 0..words {
+            let mut a = self.alive[w];
+            while a != 0 {
+                let b = a.trailing_zeros() as usize;
+                self.matched[w * 64 + b] = pos;
+                a &= a - 1;
+            }
+        }
+        for (&id, &slot) in self.by_id.iter() {
+            if self.slots[slot as usize].kind.runs_prefill() {
+                out.push((id, self.matched[slot as usize]));
+            }
+        }
+    }
+
+    /// Matched prefix on one specific instance (read-only; used for
+    /// D-side incremental-transfer decisions).
+    pub fn match_one(&self, id: InstanceId, tokens: &[u32]) -> usize {
+        let Some(&slot) = self.by_id.get(&id) else {
+            return 0;
+        };
+        let bt = self.block_tokens;
+        let mut cur = ROOT;
+        let mut pos = 0;
+        loop {
+            if pos + bt > tokens.len() {
+                break;
+            }
+            let Some(child) = self.find_child(cur, &tokens[pos..pos + bt])
+            else {
+                break;
+            };
+            if !test_bit(&self.nodes[child].owners, slot) {
+                break;
+            }
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &tokens[pos..],
+            );
+            pos += common;
+            if common < self.nodes[child].edge.len() {
+                break;
+            }
+            cur = child;
+        }
+        pos
+    }
+
+    // ------------------------------------------------------------------
+    // TTL expiry (heap-driven)
+    // ------------------------------------------------------------------
+
+    /// Expire every (node, instance) pair whose last insert is older
+    /// than the TTL. Pops the lazy min-heap — O(log n) per expired pair
+    /// plus skipped stale entries, not a full-tree scan per victim.
+    pub fn expire(&mut self, now: f64) {
+        if self.ttl <= 0.0 {
+            return;
+        }
+        while let Some(top) = self.heap.peek() {
+            // Same staleness predicate as the reference implementation
+            // (`now - last_insert > ttl`, i.e. keep while `<=`), so
+            // float behavior is identical in differential tests.
+            if now - top.stamp <= self.ttl {
+                break;
+            }
+            let e = self.heap.pop().unwrap();
+            let n = &self.nodes[e.node];
+            if !n.valid || n.gen != e.gen {
+                continue; // node was reclaimed and possibly recycled
+            }
+            let Ok(i) = n.stamps.binary_search_by_key(&e.slot, |s| s.0)
+            else {
+                continue; // ownership already cleared
+            };
+            if n.stamps[i].1 != e.stamp {
+                continue; // re-recorded since; a fresher entry exists
+            }
+            let blocks = n.blocks(self.block_tokens);
+            let (w, m) = word_bit(e.slot);
+            let n = &mut self.nodes[e.node];
+            n.stamps.remove(i);
+            n.owners[w] &= !m;
+            self.owner_pairs -= 1;
+            self.slots[e.slot as usize].cached_blocks -= blocks;
+            if self.nodes[e.node].stamps.is_empty() {
+                // Last owner gone: unlink and reclaim the subtree
+                // (descendants expire no later than their ancestors, so
+                // any bits still set below are expired too and their
+                // heap entries die with the nodes' gen bump).
+                let parent = self.nodes[e.node].parent;
+                self.detach_child(parent, e.node);
+                self.drop_subtree(e.node);
+            }
+        }
+    }
+
+    fn drop_subtree(&mut self, node: usize) {
+        for c in self.child_indices(node) {
+            self.drop_subtree(c);
+        }
+        let blocks = self.nodes[node].blocks(self.block_tokens);
+        let stamps = std::mem::take(&mut self.nodes[node].stamps);
+        for (slot, _) in stamps {
+            self.owner_pairs -= 1;
+            self.slots[slot as usize].cached_blocks -= blocks;
+        }
+        self.release_node(node);
+    }
+
+    /// Reclaim every subtree with no owners (after membership changes).
+    fn prune_ownerless(&mut self) {
+        let mut stack = self.child_indices(ROOT);
+        while let Some(n) = stack.pop() {
+            if self.nodes[n].stamps.is_empty() {
+                let parent = self.nodes[n].parent;
+                self.detach_child(parent, n);
+                self.drop_subtree(n);
+            } else {
+                stack.extend(self.child_indices(n));
+            }
+        }
+    }
+
+    fn entry_live(&self, e: &ExpireEntry) -> bool {
+        let n = &self.nodes[e.node];
+        n.valid
+            && n.gen == e.gen
+            && n.stamps
+                .binary_search_by_key(&e.slot, |s| s.0)
+                .map(|i| n.stamps[i].1 == e.stamp)
+                .unwrap_or(false)
+    }
+
+    /// Bound stale-entry growth: rebuild when the heap is dominated by
+    /// dead entries (same policy as the MemPool index's LRU heap).
+    fn maybe_compact_heap(&mut self) {
+        if self.heap.len() > 64 && self.heap.len() > 4 * (self.owner_pairs + 1)
+        {
+            let old = std::mem::take(&mut self.heap);
+            for e in old {
+                if self.entry_live(&e) {
+                    self.heap.push(e);
+                }
+            }
+        }
+    }
+
+    /// Recompute every incremental counter from scratch and compare —
+    /// test/diagnostic invariant check.
+    #[doc(hidden)]
+    pub fn debug_check_counters(&self) {
+        let mut pairs = 0usize;
+        let mut blocks: HashMap<u32, usize> = HashMap::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if i == ROOT || !n.valid {
+                continue;
+            }
+            assert_eq!(
+                n.stamps.len(),
+                n.owners.iter().map(|w| w.count_ones() as usize).sum::<usize>(),
+                "stamps/owners out of sync on node {i}"
+            );
+            for win in n.stamps.windows(2) {
+                assert!(win[0].0 < win[1].0, "stamps unsorted on node {i}");
+            }
+            for &(slot, _) in &n.stamps {
+                assert!(test_bit(&n.owners, slot));
+                pairs += 1;
+                *blocks.entry(slot).or_default() +=
+                    n.blocks(self.block_tokens);
+                // Prefix closure: an owned node's parent is owned (and
+                // no staler).
+                if n.parent != ROOT {
+                    let p = &self.nodes[n.parent];
+                    let j = p
+                        .stamps
+                        .binary_search_by_key(&slot, |s| s.0)
+                        .unwrap_or_else(|_| {
+                            panic!("closure violated: node {i} slot {slot}")
+                        });
+                    let mine = n.stamps
+                        [n.stamps.binary_search_by_key(&slot, |s| s.0).unwrap()]
+                    .1;
+                    assert!(
+                        p.stamps[j].1 >= mine,
+                        "stamp monotonicity violated at node {i}"
+                    );
+                }
+            }
+        }
+        assert_eq!(pairs, self.owner_pairs, "owner_pairs drifted");
+        for (slot, s) in self.slots.iter().enumerate() {
+            if s.live {
+                assert_eq!(
+                    s.cached_blocks,
+                    blocks.get(&(slot as u32)).copied().unwrap_or(0),
+                    "cached_blocks drifted for slot {slot}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BT: usize = 4;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 3 + seed).collect()
+    }
+
+    fn match_all(
+        t: &mut FusedPromptTree,
+        tokens: &[u32],
+    ) -> Vec<(InstanceId, usize)> {
+        let mut out = vec![];
+        t.match_into(tokens, &mut out);
+        out
+    }
+
+    #[test]
+    fn record_and_match_two_instances() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        let t = toks(16, 0);
+        g.record(InstanceId(1), &t, 1.0);
+        assert_eq!(
+            match_all(&mut g, &t),
+            vec![(InstanceId(0), 0), (InstanceId(1), 16)]
+        );
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn shared_prefix_divergence_per_instance() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        // Shared 2-block prefix, divergent tails.
+        let a = [1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3];
+        let b = [1, 1, 1, 1, 2, 2, 2, 2, 9, 9, 9, 9];
+        g.record(InstanceId(0), &a, 1.0);
+        g.record(InstanceId(1), &b, 2.0);
+        assert_eq!(
+            match_all(&mut g, &a),
+            vec![(InstanceId(0), 12), (InstanceId(1), 8)]
+        );
+        assert_eq!(
+            match_all(&mut g, &b),
+            vec![(InstanceId(0), 8), (InstanceId(1), 12)]
+        );
+        assert_eq!(g.cached_blocks(InstanceId(0)), 3);
+        assert_eq!(g.cached_blocks(InstanceId(1)), 3);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn decode_only_excluded_from_route_but_match_one_works() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::DecodeOnly);
+        let t = toks(8, 0);
+        g.record(InstanceId(1), &t, 1.0);
+        let m = match_all(&mut g, &t);
+        assert_eq!(m, vec![(InstanceId(0), 0)]);
+        assert_eq!(g.match_one(InstanceId(1), &t), 8);
+    }
+
+    #[test]
+    fn ttl_staleness_heap_driven() {
+        let mut g = FusedPromptTree::new(BT, 10.0);
+        g.add_instance(InstanceId(0), InstanceKind::Colocated);
+        let t = toks(8, 5);
+        g.record(InstanceId(0), &t, 0.0);
+        g.expire(9.0);
+        assert_eq!(g.match_one(InstanceId(0), &t), 8); // not yet stale
+        g.expire(20.0);
+        assert_eq!(g.match_one(InstanceId(0), &t), 0);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 0);
+        assert_eq!(g.node_count(), 0, "ownerless subtree reclaimed");
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn re_record_refreshes_ttl() {
+        let mut g = FusedPromptTree::new(BT, 10.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        let t = toks(8, 1);
+        g.record(InstanceId(0), &t, 0.0);
+        g.record(InstanceId(0), &t, 8.0); // refresh before expiry
+        g.expire(12.0); // 0.0-stamp entries are stale, 8.0 ones live
+        assert_eq!(g.match_one(InstanceId(0), &t), 8);
+        g.expire(19.0);
+        assert_eq!(g.match_one(InstanceId(0), &t), 0);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn partial_expiry_keeps_fresher_instance() {
+        let mut g = FusedPromptTree::new(BT, 10.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        let long = [1, 1, 1, 1, 2, 2, 2, 2];
+        g.record(InstanceId(0), &long, 0.0);
+        g.record(InstanceId(1), &long[..4], 5.0); // splits the node
+        g.expire(12.0); // instance 0's stamps (0.0) expire everywhere
+        assert_eq!(
+            match_all(&mut g, &long),
+            vec![(InstanceId(0), 0), (InstanceId(1), 4)]
+        );
+        assert_eq!(g.cached_blocks(InstanceId(0)), 0);
+        assert_eq!(g.cached_blocks(InstanceId(1)), 1);
+        assert_eq!(g.node_count(), 1, "expired tail reclaimed");
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn remove_instance_forgets_and_reclaims() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        let t = toks(8, 1);
+        g.record(InstanceId(0), &t, 1.0);
+        g.record(InstanceId(1), &t, 1.0);
+        g.remove_instance(InstanceId(0));
+        assert_eq!(match_all(&mut g, &t), vec![(InstanceId(1), 8)]);
+        g.remove_instance(InstanceId(1));
+        assert!(match_all(&mut g, &t).is_empty());
+        assert_eq!(g.node_count(), 0);
+        // Slot reuse: a new instance must not inherit ghost ownership.
+        g.add_instance(InstanceId(7), InstanceKind::PrefillOnly);
+        assert_eq!(match_all(&mut g, &t), vec![(InstanceId(7), 0)]);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn partial_blocks_rounded_down() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.record(InstanceId(0), &toks(6, 0), 1.0);
+        assert_eq!(g.match_one(InstanceId(0), &toks(6, 0)), 4);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 1);
+    }
+
+    #[test]
+    fn more_than_64_instances_span_words() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        for i in 0..70 {
+            g.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+        }
+        let t = toks(8, 2);
+        g.record(InstanceId(69), &t, 1.0);
+        g.record(InstanceId(3), &t[..4], 1.0);
+        let m = match_all(&mut g, &t);
+        assert_eq!(m.len(), 70);
+        for &(id, matched) in &m {
+            let expect = match id.0 {
+                69 => 8,
+                3 => 4,
+                _ => 0,
+            };
+            assert_eq!(matched, expect, "instance {id}");
+        }
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn colliding_fingerprints_still_resolve_by_tokens() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.set_fingerprint_mask(0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        let a = [1u32, 1, 1, 1];
+        let b = [2u32, 2, 2, 2];
+        let c = [3u32, 3, 3, 3];
+        g.record(InstanceId(0), &a, 1.0);
+        g.record(InstanceId(0), &b, 1.0);
+        g.record(InstanceId(0), &c, 1.0);
+        assert_eq!(g.node_count(), 3);
+        assert_eq!(g.match_one(InstanceId(0), &a), 4);
+        assert_eq!(g.match_one(InstanceId(0), &b), 4);
+        assert_eq!(g.match_one(InstanceId(0), &c), 4);
+        assert_eq!(g.match_one(InstanceId(0), &[4, 4, 4, 4]), 0);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn match_into_reuses_buffer_without_allocating() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.record(InstanceId(0), &toks(8, 0), 1.0);
+        let mut out = Vec::with_capacity(4);
+        g.match_into(&toks(8, 0), &mut out);
+        let cap = out.capacity();
+        let ptr = out.as_ptr();
+        g.match_into(&toks(8, 0), &mut out);
+        assert_eq!(out.capacity(), cap);
+        assert_eq!(out.as_ptr(), ptr, "buffer must be reused");
+        assert_eq!(out, vec![(InstanceId(0), 8)]);
+    }
+}

@@ -2,8 +2,10 @@
 //! and the context-caching cost model (§5.3).
 
 pub mod cost_model;
+pub mod fused_tree;
 pub mod policy;
 pub mod prompt_tree;
+pub mod prompt_tree_ref;
 pub mod router;
 
 pub use policy::PolicyKind;

@@ -35,8 +35,9 @@ impl PolicyKind {
     }
 }
 
-/// Load + cache view of one candidate instance, assembled by the router.
-#[derive(Clone, Debug)]
+/// Load + cache view of one candidate instance, assembled by the router
+/// into a reused scratch buffer (plain-old-data, hence `Copy`).
+#[derive(Clone, Copy, Debug)]
 pub struct Candidate {
     pub instance: InstanceId,
     /// Sum of pending prompt tokens (the queueing term of Eq. 1).

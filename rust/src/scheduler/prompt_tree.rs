@@ -1,17 +1,22 @@
 //! Global prompt trees (paper §6, Fig 6).
 //!
-//! The global scheduler keeps one radix tree per inference instance,
-//! grouped by instance type (prefill-only / decode-only / PD-colocated).
-//! Trees reuse [`crate::mempool::RadixIndex`]; the "extra field pointing
-//! to the instance" from the paper is the per-tree instance tag. Global
-//! trees store no block addresses (the GS never touches data) — they
-//! track *which tokens* an instance has cached, with a TTL because the GS
-//! only learns about inserts, never local evictions (best-effort, §6
-//! Discussion).
+//! The global scheduler tracks *which tokens* each instance has cached
+//! (never addresses — the GS touches no data) and matches every incoming
+//! prompt against that view on the scheduling path. Entries carry a TTL
+//! because the GS only learns about inserts, never local evictions
+//! (best-effort, §6 Discussion).
+//!
+//! Since the fused-tree overhaul, [`GlobalPromptTrees`] is a single
+//! shared radix tree whose nodes carry per-instance ownership bitsets
+//! ([`crate::scheduler::fused_tree::FusedPromptTree`]): one walk yields
+//! the matched prefix for the whole fleet, O(prompt_blocks) regardless
+//! of instance count. The paper's "extra field pointing to the instance"
+//! is the ownership bit; the per-instance-tree seed layout survives in
+//! [`crate::scheduler::prompt_tree_ref`] for differential testing and
+//! benchmarking.
 
-use std::collections::BTreeMap;
-
-use crate::mempool::{InstanceId, RadixIndex};
+pub use crate::scheduler::fused_tree::FusedPromptTree as GlobalPromptTrees;
+use crate::mempool::InstanceId;
 
 /// Instance roles, mirroring Figure 1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -28,95 +33,16 @@ impl InstanceKind {
     }
 }
 
-struct TreeEntry {
-    kind: InstanceKind,
-    tree: RadixIndex,
-}
-
-/// All global prompt trees, keyed by instance.
-pub struct GlobalPromptTrees {
-    trees: BTreeMap<InstanceId, TreeEntry>,
-    block_tokens: usize,
-    ttl: f64,
-}
-
-impl GlobalPromptTrees {
-    pub fn new(block_tokens: usize, ttl: f64) -> Self {
-        GlobalPromptTrees {
-            trees: BTreeMap::new(),
-            block_tokens,
-            ttl,
-        }
-    }
-
-    pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
-        self.trees.insert(
-            id,
-            TreeEntry {
-                kind,
-                tree: RadixIndex::new(self.block_tokens, self.ttl),
-            },
-        );
-    }
-
-    /// Drop a failed/removed instance's tree (paper §4.4: membership
-    /// change broadcast).
-    pub fn remove_instance(&mut self, id: InstanceId) {
-        self.trees.remove(&id);
-    }
-
-    pub fn instances(&self) -> Vec<(InstanceId, InstanceKind)> {
-        self.trees.iter().map(|(k, v)| (*k, v.kind)).collect()
-    }
-
-    pub fn kind_of(&self, id: InstanceId) -> Option<InstanceKind> {
-        self.trees.get(&id).map(|e| e.kind)
-    }
-
-    /// Record that `instance` now caches `tokens` (called on the response
-    /// path — paper Fig 6 update path).
-    pub fn record(&mut self, instance: InstanceId, tokens: &[u32], now: f64) {
-        let Some(e) = self.trees.get_mut(&instance) else {
-            return;
-        };
-        // Global trees carry no addresses — address-free insert.
-        e.tree.insert_unaddressed(tokens, now);
-    }
-
-    /// Matched prefix length (tokens) of `tokens` on every prefill-capable
-    /// instance — the parallel match step of the scheduling path.
-    pub fn match_all(&mut self, tokens: &[u32], now: f64)
-                     -> Vec<(InstanceId, usize)> {
-        self.trees
-            .iter_mut()
-            .filter(|(_, e)| e.kind.runs_prefill())
-            .map(|(id, e)| (*id, e.tree.match_prefix(tokens, now).tokens))
-            .collect()
-    }
-
-    /// Matched prefix on one specific instance.
-    pub fn match_one(&mut self, id: InstanceId, tokens: &[u32], now: f64)
-                     -> usize {
-        self.trees
-            .get_mut(&id)
-            .map(|e| e.tree.match_prefix(tokens, now).tokens)
-            .unwrap_or(0)
-    }
-
-    /// TTL housekeeping over all trees.
-    pub fn expire(&mut self, now: f64) {
-        for e in self.trees.values_mut() {
-            e.tree.expire(now);
-        }
-    }
-
-    /// Total cached token-blocks believed to exist per instance.
-    pub fn cached_blocks(&self, id: InstanceId) -> usize {
-        self.trees
-            .get(&id)
-            .map(|e| e.tree.total_token_blocks())
-            .unwrap_or(0)
-    }
+/// Convenience for tests and non-hot-path callers: allocate and return
+/// the matched-prefix vector. The scheduling path uses
+/// [`GlobalPromptTrees::match_into`] with a reused buffer instead.
+pub fn match_all_vec(
+    trees: &mut GlobalPromptTrees,
+    tokens: &[u32],
+) -> Vec<(InstanceId, usize)> {
+    let mut out = vec![];
+    trees.match_into(tokens, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -134,7 +60,7 @@ mod tests {
         g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
         let t = toks(64, 0);
         g.record(InstanceId(1), &t, 1.0);
-        let m = g.match_all(&t, 2.0);
+        let m = match_all_vec(&mut g, &t);
         assert_eq!(m, vec![(InstanceId(0), 0), (InstanceId(1), 64)]);
     }
 
@@ -145,12 +71,12 @@ mod tests {
         g.add_instance(InstanceId(1), InstanceKind::DecodeOnly);
         let t = toks(32, 0);
         g.record(InstanceId(1), &t, 1.0);
-        let m = g.match_all(&t, 2.0);
+        let m = match_all_vec(&mut g, &t);
         assert_eq!(m.len(), 1);
         assert_eq!(m[0].0, InstanceId(0));
-        // But the decode tree still answers match_one (used for D-side
-        // incremental transfer decisions).
-        assert_eq!(g.match_one(InstanceId(1), &t, 2.0), 32);
+        // But the shared tree still answers match_one for decode
+        // instances (used for D-side incremental transfer decisions).
+        assert_eq!(g.match_one(InstanceId(1), &t), 32);
     }
 
     #[test]
@@ -160,7 +86,7 @@ mod tests {
         let t = toks(32, 5);
         g.record(InstanceId(0), &t, 0.0);
         g.expire(20.0);
-        assert_eq!(g.match_one(InstanceId(0), &t, 21.0), 0);
+        assert_eq!(g.match_one(InstanceId(0), &t), 0);
     }
 
     #[test]
@@ -170,7 +96,7 @@ mod tests {
         let t = toks(16, 1);
         g.record(InstanceId(0), &t, 1.0);
         g.remove_instance(InstanceId(0));
-        assert!(g.match_all(&t, 2.0).is_empty());
+        assert!(match_all_vec(&mut g, &t).is_empty());
     }
 
     #[test]
@@ -178,7 +104,23 @@ mod tests {
         let mut g = GlobalPromptTrees::new(16, 0.0);
         g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
         g.record(InstanceId(0), &toks(20, 0), 1.0);
-        assert_eq!(g.match_one(InstanceId(0), &toks(20, 0), 2.0), 16);
+        assert_eq!(g.match_one(InstanceId(0), &toks(20, 0)), 16);
         assert_eq!(g.cached_blocks(InstanceId(0)), 1);
+    }
+
+    #[test]
+    fn instances_iterates_in_id_order() {
+        let mut g = GlobalPromptTrees::new(16, 0.0);
+        g.add_instance(InstanceId(2), InstanceKind::DecodeOnly);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::Colocated);
+        let got: Vec<_> = g.instances().collect();
+        assert_eq!(got, vec![
+            (InstanceId(0), InstanceKind::PrefillOnly),
+            (InstanceId(1), InstanceKind::Colocated),
+            (InstanceId(2), InstanceKind::DecodeOnly),
+        ]);
+        assert_eq!(g.kind_of(InstanceId(2)), Some(InstanceKind::DecodeOnly));
+        assert_eq!(g.kind_of(InstanceId(9)), None);
     }
 }

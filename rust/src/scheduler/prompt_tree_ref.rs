@@ -1,0 +1,258 @@
+//! Reference global prompt trees — the seed's per-instance layout,
+//! preserved as a differential-testing baseline and benchmark reference
+//! for the fused tree ([`crate::scheduler::fused_tree`]).
+//!
+//! One [`RadixIndex`] per instance, walked **per instance** on every
+//! match: O(instances × prompt_blocks) per route, which is exactly the
+//! scaling the fused tree removes (`benches/fig15_scheduler.rs` sweeps
+//! instance counts against this implementation).
+//!
+//! One deliberate semantic alignment with the fused tree: matching is
+//! *read-only* ([`RadixIndex::match_len`]) and TTL staleness is driven
+//! by insert recency alone. The seed bumped `last_access` on every
+//! match, so merely *routing* a prompt kept its global-tree entries
+//! alive — but the GS never learns whether the instance still holds the
+//! data, so insert recency is the only honest signal (§6 Discussion).
+//! Both implementations now share that rule, which is what makes the
+//! differential property in this module exact, including expiry and
+//! instance-removal interleavings.
+
+use std::collections::BTreeMap;
+
+use crate::mempool::{InstanceId, RadixIndex};
+use crate::scheduler::prompt_tree::InstanceKind;
+
+struct TreeEntry {
+    kind: InstanceKind,
+    tree: RadixIndex,
+}
+
+/// All per-instance global prompt trees, keyed by instance.
+pub struct RefGlobalPromptTrees {
+    trees: BTreeMap<InstanceId, TreeEntry>,
+    block_tokens: usize,
+    ttl: f64,
+}
+
+impl RefGlobalPromptTrees {
+    pub fn new(block_tokens: usize, ttl: f64) -> Self {
+        RefGlobalPromptTrees {
+            trees: BTreeMap::new(),
+            block_tokens,
+            ttl,
+        }
+    }
+
+    pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
+        self.trees.insert(
+            id,
+            TreeEntry {
+                kind,
+                tree: RadixIndex::new(self.block_tokens, self.ttl),
+            },
+        );
+    }
+
+    /// Drop a failed/removed instance's tree (paper §4.4: membership
+    /// change broadcast).
+    pub fn remove_instance(&mut self, id: InstanceId) {
+        self.trees.remove(&id);
+    }
+
+    pub fn kind_of(&self, id: InstanceId) -> Option<InstanceKind> {
+        self.trees.get(&id).map(|e| e.kind)
+    }
+
+    pub fn instances(
+        &self,
+    ) -> impl Iterator<Item = (InstanceId, InstanceKind)> + '_ {
+        self.trees.iter().map(|(&id, e)| (id, e.kind))
+    }
+
+    /// Record that `instance` now caches `tokens` (response path).
+    pub fn record(&mut self, instance: InstanceId, tokens: &[u32], now: f64) {
+        let Some(e) = self.trees.get_mut(&instance) else {
+            return;
+        };
+        e.tree.insert_unaddressed(tokens, now);
+    }
+
+    /// Matched prefix length (tokens) on every prefill-capable instance
+    /// — one full tree walk *per instance* (the seed scheduling path).
+    pub fn match_all(&self, tokens: &[u32]) -> Vec<(InstanceId, usize)> {
+        self.trees
+            .iter()
+            .filter(|(_, e)| e.kind.runs_prefill())
+            .map(|(id, e)| (*id, e.tree.match_len(tokens)))
+            .collect()
+    }
+
+    /// Matched prefix on one specific instance.
+    pub fn match_one(&self, id: InstanceId, tokens: &[u32]) -> usize {
+        self.trees
+            .get(&id)
+            .map(|e| e.tree.match_len(tokens))
+            .unwrap_or(0)
+    }
+
+    /// TTL housekeeping: full fixpoint scan over every tree (the cost
+    /// the fused tree's expiry heap removes).
+    pub fn expire(&mut self, now: f64) {
+        for e in self.trees.values_mut() {
+            e.tree.expire(now);
+        }
+    }
+
+    /// Total cached token-blocks believed to exist per instance.
+    pub fn cached_blocks(&self, id: InstanceId) -> usize {
+        self.trees
+            .get(&id)
+            .map(|e| e.tree.total_token_blocks())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::policy::{decide, Candidate, PolicyKind};
+    use crate::scheduler::prompt_tree::GlobalPromptTrees;
+    use crate::util::proptest::proptest;
+
+    const BT: usize = 4;
+
+    /// Deterministic synthetic load for policy-decision comparison.
+    fn load_of(id: InstanceId) -> usize {
+        ((id.0 as u64).wrapping_mul(2654435761) % 4096) as usize
+    }
+
+    fn candidates(matches: &[(InstanceId, usize)]) -> Vec<Candidate> {
+        matches
+            .iter()
+            .map(|&(id, matched)| Candidate {
+                instance: id,
+                queued_tokens: load_of(id),
+                queued_cached_ratio: 0.0,
+                matched_tokens: matched,
+            })
+            .collect()
+    }
+
+    fn exec(x: usize, y: f64) -> f64 {
+        x as f64 * (1.0 - y) + 1.0
+    }
+
+    /// The ISSUE's differential property: random record / route /
+    /// expire / remove-instance sequences over ≥64 instances produce
+    /// identical matched-prefix vectors, per-instance counters, and
+    /// policy decisions on the fused tree and the per-instance
+    /// reference — under the normal fingerprint and under a 4-bit mask
+    /// that forces collision chaining in the fused tree.
+    #[test]
+    fn prop_fused_matches_reference_trees() {
+        for mask in [u64::MAX, 0xF] {
+            proptest(20, move |g| {
+                let ttl = 10.0;
+                let mut fused = GlobalPromptTrees::new(BT, ttl);
+                fused.set_fingerprint_mask(mask);
+                let mut refr = RefGlobalPromptTrees::new(BT, ttl);
+                let n_inst = 64 + g.usize(0, 8);
+                let mut live: Vec<InstanceId> = vec![];
+                let mut removed: Vec<InstanceId> = vec![];
+                for i in 0..n_inst {
+                    let id = InstanceId(i as u32);
+                    let kind = match i % 5 {
+                        0 => InstanceKind::DecodeOnly,
+                        1 => InstanceKind::Colocated,
+                        _ => InstanceKind::PrefillOnly,
+                    };
+                    fused.add_instance(id, kind);
+                    refr.add_instance(id, kind);
+                    live.push(id);
+                }
+                let mut now = 0.0;
+                for _ in 0..g.usize(10, 50) {
+                    now += g.f64(0.1, 4.0);
+                    // Small alphabet: shared prefixes, splits, and (with
+                    // the masked fingerprint) collision chains.
+                    let len = g.usize(0, 6) * BT + g.usize(0, BT - 1);
+                    let toks = g.vec_u32(len, 0, 3);
+                    match g.usize(0, 9) {
+                        0..=3 => {
+                            if !live.is_empty() {
+                                let id = *g.pick(&live);
+                                fused.record(id, &toks, now);
+                                refr.record(id, &toks, now);
+                            }
+                        }
+                        4..=6 => {
+                            let mut got = vec![];
+                            fused.match_into(&toks, &mut got);
+                            let expect = refr.match_all(&toks);
+                            assert_eq!(got, expect, "matched vectors");
+                            if !got.is_empty() {
+                                let c1 = candidates(&got);
+                                let c2 = candidates(&expect);
+                                let sid = g.u64(0, 1 << 20);
+                                for policy in [
+                                    PolicyKind::LeastLoad,
+                                    PolicyKind::SessionId,
+                                    PolicyKind::PromptTree,
+                                ] {
+                                    let d1 = decide(
+                                        policy, &c1, toks.len(), sid, exec,
+                                    );
+                                    let d2 = decide(
+                                        policy, &c2, toks.len(), sid, exec,
+                                    );
+                                    assert_eq!(d1, d2, "policy decision");
+                                }
+                            }
+                            if !live.is_empty() {
+                                let id = *g.pick(&live);
+                                assert_eq!(
+                                    fused.match_one(id, &toks),
+                                    refr.match_one(id, &toks),
+                                    "match_one({id})"
+                                );
+                            }
+                        }
+                        7 => {
+                            fused.expire(now);
+                            refr.expire(now);
+                        }
+                        8 => {
+                            if live.len() > 1 && g.bool() {
+                                let i = g.usize(0, live.len() - 1);
+                                let id = live.swap_remove(i);
+                                fused.remove_instance(id);
+                                refr.remove_instance(id);
+                                removed.push(id);
+                            } else if let Some(id) = removed.pop() {
+                                fused.add_instance(
+                                    id,
+                                    InstanceKind::PrefillOnly,
+                                );
+                                refr.add_instance(
+                                    id,
+                                    InstanceKind::PrefillOnly,
+                                );
+                                live.push(id);
+                            }
+                        }
+                        _ => {
+                            for &id in &live {
+                                assert_eq!(
+                                    fused.cached_blocks(id),
+                                    refr.cached_blocks(id),
+                                    "cached_blocks({id})"
+                                );
+                            }
+                        }
+                    }
+                    fused.debug_check_counters();
+                }
+            });
+        }
+    }
+}

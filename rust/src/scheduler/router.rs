@@ -37,6 +37,11 @@ pub struct GlobalScheduler {
     pub calls_per_token_block: usize,
     pub block_tokens: usize,
     pub transfer_decision_enabled: bool,
+    /// Reusable route-path scratch: matched prefixes from the fused
+    /// tree and the candidate list handed to the policy. Steady-state
+    /// routing performs no allocation.
+    match_buf: Vec<(InstanceId, usize)>,
+    cand_buf: Vec<Candidate>,
 }
 
 impl GlobalScheduler {
@@ -56,6 +61,8 @@ impl GlobalScheduler {
             calls_per_token_block: 1,
             block_tokens,
             transfer_decision_enabled: true,
+            match_buf: vec![],
+            cand_buf: vec![],
         }
     }
 
@@ -74,27 +81,30 @@ impl GlobalScheduler {
         loads: &dyn Fn(InstanceId) -> InstanceLoad,
         now: f64,
     ) -> anyhow::Result<RouteOutcome> {
-        let matches = self.trees.match_all(prompt, now);
+        // Heap-driven TTL housekeeping rides the routing path: an O(1)
+        // peek when nothing has expired, O(log n) per stale entry.
+        self.trees.expire(now);
+        // One fused-tree walk yields the matched prefix for the whole
+        // fleet; both buffers are reused across routes (no allocation).
+        self.trees.match_into(prompt, &mut self.match_buf);
         anyhow::ensure!(
-            !matches.is_empty(),
+            !self.match_buf.is_empty(),
             "no prefill-capable instances registered"
         );
-        let candidates: Vec<Candidate> = matches
-            .iter()
-            .map(|&(id, matched)| {
-                let l = loads(id);
-                Candidate {
-                    instance: id,
-                    queued_tokens: l.queued_tokens,
-                    queued_cached_ratio: l.queued_cached_ratio,
-                    matched_tokens: matched,
-                }
-            })
-            .collect();
+        self.cand_buf.clear();
+        for &(id, matched) in &self.match_buf {
+            let l = loads(id);
+            self.cand_buf.push(Candidate {
+                instance: id,
+                queued_tokens: l.queued_tokens,
+                queued_cached_ratio: l.queued_cached_ratio,
+                matched_tokens: matched,
+            });
+        }
         let cost = &self.cost;
         let decision = decide(
             self.policy,
-            &candidates,
+            &self.cand_buf,
             prompt.len(),
             session_id,
             |x, y| cost.exec(x, y),

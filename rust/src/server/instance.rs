@@ -188,7 +188,7 @@ fn import_groups(
     payload: &[f32],
     n_blocks: usize,
     now: f64,
-) -> anyhow::Result<Vec<Vec<crate::mempool::BlockAddr>>> {
+) -> anyhow::Result<crate::mempool::GroupList> {
     let per = engine.pool.geometry().blocks_per_token_block();
     let addrs = engine.pool.import_blocks(
         payload,
@@ -197,7 +197,11 @@ fn import_groups(
         crate::mempool::Tier::Hbm,
         now,
     )?;
-    Ok(addrs.chunks(per).map(|c| c.to_vec()).collect())
+    let mut groups = crate::mempool::GroupList::default();
+    for c in addrs.chunks(per) {
+        groups.push_group(c);
+    }
+    Ok(groups)
 }
 
 fn handle_dispatch(
@@ -247,9 +251,9 @@ fn handle_dispatch(
             // locally (milestone step 2 caches at P).
             let first_token_time = t;
             let mut groups = pf.prefix_groups.clone();
-            groups.extend(pf.new_groups.iter().cloned());
-            let flat: Vec<_> = groups.iter().flatten().copied().collect();
-            let payload = match engine.pool.export_blocks(&flat) {
+            groups.extend_list(&pf.new_groups);
+            let flat = groups.flat();
+            let payload = match engine.pool.export_blocks(flat) {
                 Ok(p) => p,
                 Err(e) => {
                     log::error!("export failed: {e:#}");

@@ -229,6 +229,10 @@ impl ServeCluster {
                 if !dead.is_empty() {
                     self.on_failure(&dead);
                 }
+                // Global-tree TTL housekeeping: heap-driven, so this is
+                // an O(1) peek when nothing is stale (routing also
+                // expires opportunistically; this covers idle periods).
+                self.gs.lock().unwrap().expire(now);
             }
             let Ok((_, msg)) = ep.recv_timeout(Duration::from_millis(20))
             else {

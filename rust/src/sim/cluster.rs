@@ -822,6 +822,26 @@ mod tests {
     }
 
     #[test]
+    fn fleet_scale_routing_64_prefill_instances() {
+        // The fused global tree makes routing O(prompt_blocks) in the
+        // instance count; this exercises the full sim loop at a fleet
+        // size the seed's per-instance walk made painful, including
+        // TTL housekeeping on the routing path.
+        let cfg = SimConfig {
+            prefill_instances: 64,
+            decode_instances: 4,
+            colocated_instances: 0,
+            tree_ttl: 60.0,
+            ..disagg(true)
+        };
+        let (spec, plan) = workload(25, 11);
+        let total = spec.total_requests();
+        let rep = Simulation::new(cfg, spec, &plan).run();
+        assert_eq!(rep.metrics.records.len(), total);
+        assert!(rep.metrics.mean_cached_ratio() > 0.0);
+    }
+
+    #[test]
     fn capacity_pressure_triggers_eviction() {
         let mut cfg = pd_colocated(true);
         cfg.hbm_blocks = 64; // tiny cache
