@@ -1,0 +1,411 @@
+//! Elasticity: what survives a scale-down (and what a scale-up buys).
+//!
+//! Part 1 (`fig16_prefix_survival`): drain one instance of an
+//! N-instance fleet with **real pools** (materialized KV, actual block
+//! copies through the 3-step transfer protocol) and measure the
+//! fleet-wide hit rate on the drained instance's hot prefixes:
+//! migrate-on-drain must retain ≥ 80% of it (cold tails are dropped by
+//! design), while the naive decommission baseline drops to ~0%.
+//!
+//! Part 2 (`fig16_elastic_sim`): the discrete-event cluster under a
+//! LooGLE multi-turn workload with a mid-run drain (migrate vs naive)
+//! and a mid-run join — JCT/TTFT/cached-ratio for requests arriving
+//! after the fleet change, with zero request loss required.
+//!
+//! Env knobs (used by the CI smoke job):
+//! * `MEMSERVE_FIG16_MODE` — `survival` (part 1 only), `sim` (part 2
+//!   only), anything else/unset runs both;
+//! * `MEMSERVE_FIG16_N` — fleet size for part 1 (default 4);
+//! * `MEMSERVE_FIG16_SESSIONS` — workload sessions for part 2
+//!   (default 50).
+
+use std::time::Instant;
+
+use memserve::elastic::delta::DeltaEvent;
+use memserve::elastic::executor::{migrate_prefix, MigrationOutcome};
+use memserve::elastic::planner::{
+    plan_migration, PlannerConfig, Recipient,
+};
+use memserve::mempool::{
+    BlockGeometry, InstanceId, MemPool, Tier, TransferMode,
+};
+use memserve::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
+use memserve::sim::{FleetEvent, FleetOp, SimConfig, SimReport, Simulation};
+use memserve::util::bench::Table;
+use memserve::workload::{ArrivalPlan, WorkloadKind, WorkloadSpec};
+
+const BT: usize = 16;
+
+fn geom() -> BlockGeometry {
+    BlockGeometry {
+        block_tokens: BT,
+        layers: 2,
+        n_heads: 2,
+        head_dim: 8,
+        aggregated: true,
+    }
+}
+
+fn prompt(n: usize, seed: u32) -> Vec<u32> {
+    (0..n as u32)
+        .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 50_000)
+        .collect()
+}
+
+/// Seed `tokens` into a pool with recognizable per-block data.
+fn seed_pool(pool: &mut MemPool, tokens: &[u32], fill: f32, now: f64) {
+    let nb = tokens.len() / BT;
+    let fpb = pool.geometry().floats_per_block();
+    let addrs = pool.alloc_mem(nb, Tier::Hbm).expect("pool sized for warmup");
+    for (i, &a) in addrs.iter().enumerate() {
+        pool.write_block(a, &vec![fill + i as f32; fpb]).unwrap();
+    }
+    pool.insert(
+        tokens,
+        addrs.into_iter().map(|a| vec![a]).collect(),
+        now,
+    )
+    .unwrap();
+}
+
+/// Fleet-wide best matched fraction for `tokens` (routable view).
+fn best_match(tree: &mut GlobalPromptTrees, tokens: &[u32]) -> f64 {
+    let mut out = vec![];
+    tree.match_into(tokens, &mut out);
+    out.iter()
+        .map(|&(_, m)| m as f64 / tokens.len() as f64)
+        .fold(0.0, f64::max)
+}
+
+struct SurvivalRun {
+    retention: f64,
+    outcome: MigrationOutcome,
+    dropped_blocks: usize,
+    plan_us: f64,
+    exec_us: f64,
+}
+
+/// Build an N-instance fleet, warm instance 0 with hot + cold prefixes,
+/// drain it, and measure what the fleet still hits.
+fn survival_run(n: usize, migrate: bool) -> SurvivalRun {
+    const HOT: usize = 8; // hot 2K-token prompts on the victim
+    let now_warm = 100.0;
+    let now_drain = 110.0;
+    let mut tree = GlobalPromptTrees::new(BT, 0.0);
+    let mut pools: Vec<MemPool> = (0..n)
+        .map(|i| {
+            tree.add_instance(InstanceId(i as u32), InstanceKind::PrefillOnly);
+            MemPool::new(InstanceId(i as u32), geom(), 2048, 0, 0.0, true)
+        })
+        .collect();
+    let hot_prompts: Vec<Vec<u32>> =
+        (0..HOT).map(|k| prompt(2048, k as u32)).collect();
+    for (k, p) in hot_prompts.iter().enumerate() {
+        seed_pool(&mut pools[0], p, (10 * k) as f32, now_warm);
+        tree.record(InstanceId(0), p, now_warm);
+    }
+    // Cold tails on the victim: stale (stamped long before the drain)
+    // and shallow — the planner must drop, not ship, these.
+    for k in 0..4u32 {
+        let p = prompt(512, 900 + k);
+        seed_pool(&mut pools[0], &p, 0.5, 1.0);
+        tree.record(InstanceId(0), &p, 1.0);
+    }
+    // Bulk on the survivors so recipient ranking sees real pressure.
+    for i in 1..n {
+        for k in 0..2u32 {
+            let p = prompt(1024, 5000 + (i as u32) * 8 + k);
+            seed_pool(&mut pools[i], &p, 2.0, now_warm);
+            tree.record(InstanceId(i as u32), &p, now_warm);
+        }
+    }
+    // Sanity: pre-drain, the victim serves every hot prompt.
+    for p in &hot_prompts {
+        assert_eq!(best_match(&mut tree, p), 1.0);
+    }
+
+    // --- Drain instance 0. ---
+    tree.set_draining(InstanceId(0), true);
+    let (outcome, dropped, plan_us, exec_us) = if migrate {
+        let recipients: Vec<Recipient> = (1..n)
+            .map(|i| Recipient {
+                id: InstanceId(i as u32),
+                pressure: pools[i].used_blocks(Tier::Hbm) as f64
+                    / pools[i].capacity(Tier::Hbm).max(1) as f64,
+            })
+            .collect();
+        let cfg = PlannerConfig {
+            min_depth_blocks: 2,
+            max_age_s: 60.0, // the t=1 cold tails age out
+            max_blocks: None,
+        };
+        let t0 = Instant::now();
+        let plan = plan_migration(
+            &tree,
+            InstanceId(0),
+            now_drain,
+            &recipients,
+            &cfg,
+        );
+        let plan_us = t0.elapsed().as_secs_f64() * 1e6;
+        let t1 = Instant::now();
+        let mut outcome = MigrationOutcome::default();
+        for task in &plan.tasks {
+            // Donor is pool 0; ship blocks + re-point ownership, the
+            // same per-prefix protocol the live server drives over the
+            // fabric.
+            let (head, tail) = pools.split_at_mut(1);
+            let receiver = &mut tail[task.to.0 as usize - 1];
+            let o = migrate_prefix(
+                &mut head[0],
+                receiver,
+                &task.tokens,
+                TransferMode::ByRequestAgg,
+                now_drain,
+            )
+            .expect("migration");
+            tree.apply_delta(&DeltaEvent::Handoff {
+                from: task.from,
+                to: task.to,
+                tokens: task.tokens[..o.moved_tokens].to_vec(),
+                now: now_drain,
+            });
+            outcome.absorb(&o);
+        }
+        let exec_us = t1.elapsed().as_secs_f64() * 1e6;
+        (outcome, plan.dropped_blocks, plan_us, exec_us)
+    } else {
+        (
+            MigrationOutcome::default(),
+            tree.cached_blocks(InstanceId(0)),
+            0.0,
+            0.0,
+        )
+    };
+    tree.apply_delta(&DeltaEvent::Leave {
+        instance: InstanceId(0),
+    });
+
+    // --- Measure: fleet-wide hit rate on the victim's hot prefixes,
+    // verified against the receiving pool's actual index + data. ---
+    let mut retention = 0.0;
+    for p in &hot_prompts {
+        let frac = best_match(&mut tree, p);
+        if frac > 0.0 {
+            // The tree's claim must be backed by a real pool: find the
+            // owner and check its index (and one block of data).
+            let holder = (1..n)
+                .find(|&i| {
+                    pools[i].match_prefix(p, now_drain).tokens == p.len()
+                })
+                .expect("tree claims a prefix no pool holds");
+            let m = pools[holder].match_prefix(p, now_drain);
+            let fpb = geom().floats_per_block();
+            let mut buf = vec![0.0f32; fpb];
+            pools[holder].read_block(m.groups[0][0], &mut buf).unwrap();
+            assert!(buf[0] >= 0.0); // data landed (block readable)
+        }
+        retention += frac / hot_prompts.len() as f64;
+    }
+    SurvivalRun {
+        retention,
+        outcome,
+        dropped_blocks: dropped,
+        plan_us,
+        exec_us,
+    }
+}
+
+fn survival(n: usize) {
+    let mut table = Table::new("fig16_prefix_survival", &[
+        "instances",
+        "variant",
+        "hot_retention",
+        "moved_token_blocks",
+        "dropped_token_blocks",
+        "wire_mb",
+        "wire_calls",
+        "plan_us",
+        "exec_us",
+    ]);
+    println!(
+        "\n-- prefix-hit survival across a drain ({n}-instance fleet, \
+         real pools + block copies) --"
+    );
+    for migrate in [true, false] {
+        let r = survival_run(n, migrate);
+        let variant = if migrate { "migrate_drain" } else { "naive_drain" };
+        table.row(vec![
+            n.to_string(),
+            variant.into(),
+            format!("{:.3}", r.retention),
+            r.outcome.moved_token_blocks.to_string(),
+            r.dropped_blocks.to_string(),
+            format!("{:.2}", r.outcome.wire_bytes as f64 / 1e6),
+            r.outcome.wire_calls.to_string(),
+            format!("{:.1}", r.plan_us),
+            format!("{:.1}", r.exec_us),
+        ]);
+        println!(
+            "  {variant:13}: retention {:.1}%  moved {} tb  dropped {} tb",
+            r.retention * 100.0,
+            r.outcome.moved_token_blocks,
+            r.dropped_blocks
+        );
+        // Acceptance: migration retains ≥80% of the hot-prefix hit
+        // rate; naive decommission drops to ~0%.
+        if migrate {
+            assert!(
+                r.retention >= 0.8,
+                "migrate-on-drain retention too low: {}",
+                r.retention
+            );
+            assert!(r.outcome.moved_token_blocks > 0);
+        } else {
+            assert!(
+                r.retention <= 0.05,
+                "naive drain should lose the cache: {}",
+                r.retention
+            );
+        }
+    }
+    table.finish();
+}
+
+fn sim_report_row(
+    table: &mut Table,
+    scenario: &str,
+    rep: &SimReport,
+    after: f64,
+) {
+    let post: Vec<_> = rep
+        .metrics
+        .records
+        .iter()
+        .filter(|r| r.scheduled > after)
+        .collect();
+    let post_ratio = if post.is_empty() {
+        0.0
+    } else {
+        post.iter()
+            .map(|r| r.cached_tokens as f64 / r.prompt_tokens.max(1) as f64)
+            .sum::<f64>()
+            / post.len() as f64
+    };
+    let m = &rep.metrics;
+    table.row(vec![
+        scenario.into(),
+        m.records.len().to_string(),
+        format!("{:.3}", post_ratio),
+        format!("{:.4}", m.ttft().mean),
+        format!("{:.4}", m.ttft().p99),
+        format!("{:.4}", m.jct().mean),
+        format!("{:.4}", m.jct().p99),
+        rep.migrated_token_blocks.to_string(),
+        rep.dropped_token_blocks.to_string(),
+    ]);
+}
+
+fn elastic_sim(sessions: usize) {
+    let change_at = 6.0;
+    let mk = |fleet: Vec<FleetEvent>| SimConfig {
+        prefill_instances: 4,
+        decode_instances: 2,
+        colocated_instances: 0,
+        fleet,
+        ..Default::default()
+    };
+    let spec = WorkloadSpec::generate(
+        WorkloadKind::Loogle,
+        sessions,
+        16,
+        2048,
+        4096,
+    );
+    let plan = ArrivalPlan::poisson(&spec, 10.0, 16);
+    let total = spec.total_requests();
+    println!(
+        "\n-- elastic sim: {sessions} LooGLE sessions ({total} requests), \
+         fleet change at t={change_at}s --"
+    );
+    let mut table = Table::new("fig16_elastic_sim", &[
+        "scenario",
+        "n",
+        "post_change_cached_ratio",
+        "ttft_mean_s",
+        "ttft_p99_s",
+        "jct_mean_s",
+        "jct_p99_s",
+        "migrated_tb",
+        "dropped_tb",
+    ]);
+    let scenarios: Vec<(&str, Vec<FleetEvent>)> = vec![
+        ("steady", vec![]),
+        (
+            "migrate_drain",
+            vec![FleetEvent {
+                at: change_at,
+                op: FleetOp::Drain {
+                    inst: 0,
+                    migrate: true,
+                },
+            }],
+        ),
+        (
+            "naive_drain",
+            vec![FleetEvent {
+                at: change_at,
+                op: FleetOp::Drain {
+                    inst: 0,
+                    migrate: false,
+                },
+            }],
+        ),
+        (
+            "join",
+            vec![FleetEvent {
+                at: change_at,
+                op: FleetOp::Join {
+                    kind: InstanceKind::PrefillOnly,
+                },
+            }],
+        ),
+    ];
+    for (name, fleet) in scenarios {
+        let rep = Simulation::new(mk(fleet), spec.clone(), &plan).run();
+        // Zero active-request loss under every fleet change (the sim
+        // also asserts no route ever touches a non-Active instance).
+        assert_eq!(
+            rep.metrics.records.len(),
+            total,
+            "{name}: requests lost"
+        );
+        sim_report_row(&mut table, name, &rep, change_at);
+    }
+    table.finish();
+    println!(
+        "\nExpected shape: migrate_drain keeps the post-change cached \
+         ratio near steady (and JCT close to it); naive_drain pays cold \
+         re-prefills for every session the drained instance served; join \
+         absorbs load with no disruption."
+    );
+}
+
+fn main() {
+    let mode = std::env::var("MEMSERVE_FIG16_MODE").unwrap_or_default();
+    let n: usize = std::env::var("MEMSERVE_FIG16_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 2)
+        .unwrap_or(4);
+    let sessions: usize = std::env::var("MEMSERVE_FIG16_SESSIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    if mode != "sim" {
+        survival(n);
+    }
+    if mode != "survival" {
+        elastic_sim(sessions);
+    }
+}

@@ -1,0 +1,145 @@
+//! Ownership delta events for the global prompt tree.
+//!
+//! The fused tree is leader-local today; every mutation of its
+//! per-(node, instance) ownership can be expressed as one of a small set
+//! of *delta events*, which gives three things at once:
+//!
+//! 1. **Atomic migration visibility.** A [`DeltaEvent::Handoff`] grants
+//!    the receiver ownership of a migrated prefix *and* retires the
+//!    donor's claim in a single event, so routing never observes a
+//!    window in which the prefix is owned by nobody (the failure mode of
+//!    naive "expire then re-record" sequencing).
+//! 2. **An honest eviction signal.** [`DeltaEvent::Expire`] is shaped
+//!    exactly like what a local LRU produces — a leaf (one branch's
+//!    deepest extension) disappears, proper prefixes and sibling
+//!    branches survive — so an instance can report precisely what it
+//!    evicted instead of the TTL guessing.
+//! 3. **A replication log.** Events are self-contained values over
+//!    token sequences (never node indices, which are an implementation
+//!    detail of one tree). Applying the same event stream to any replica
+//!    of the tree yields the same ownership state — the basis for a
+//!    future replicated/sharded global scheduler (see ROADMAP).
+//!
+//! Both tree implementations consume the same events —
+//! [`crate::scheduler::fused_tree::FusedPromptTree::apply_delta`] and
+//! [`crate::scheduler::prompt_tree_ref::RefGlobalPromptTrees::apply_delta`]
+//! — and the differential proptest in `prompt_tree_ref` interleaves
+//! deltas (handoffs, expiries, drain toggles, leave/rejoin) to pin them
+//! together, forced fingerprint collisions included.
+
+use crate::mempool::InstanceId;
+use crate::scheduler::prompt_tree::InstanceKind;
+
+/// One ownership mutation of the global prompt tree. Token sequences are
+/// block-truncated by the consumer; `now` fields are the cluster clock
+/// used for TTL stamps.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DeltaEvent {
+    /// A new instance registers (membership, paper §4.4).
+    Join {
+        instance: InstanceId,
+        kind: InstanceKind,
+    },
+    /// An instance leaves for good (failure or decommission): all of its
+    /// ownership is cleared and ownerless subtrees reclaimed.
+    Leave { instance: InstanceId },
+    /// Response path (paper Fig 6 right): `instance` now caches
+    /// `tokens`.
+    Record {
+        instance: InstanceId,
+        tokens: Vec<u32>,
+        now: f64,
+    },
+    /// `instance` no longer caches `prefix` nor any extension of it;
+    /// proper prefixes and sibling branches survive. An empty prefix
+    /// clears the instance's entire view; a prefix the instance never
+    /// fully cached is a no-op.
+    Expire {
+        instance: InstanceId,
+        prefix: Vec<u32>,
+    },
+    /// Live migration landed: `to` now caches `tokens`, and `from`'s
+    /// claim on the handed prefix is retired in the same event (`from`
+    /// keeps the proper prefixes of `tokens` — honest, since it
+    /// physically holds them until decommission). Sub-block `tokens`
+    /// are a no-op.
+    Handoff {
+        from: InstanceId,
+        to: InstanceId,
+        tokens: Vec<u32>,
+        now: f64,
+    },
+    /// Routing visibility toggle: a draining instance stops receiving
+    /// new work but its entries stay matchable (donor role) until
+    /// `Leave`.
+    SetDraining {
+        instance: InstanceId,
+        draining: bool,
+    },
+}
+
+/// An append-only event log — the natural unit of replication for a
+/// future multi-replica global scheduler (replicas consuming the same
+/// stream converge to the same ownership state). Nothing in the serving
+/// path writes one yet: today it is the tested seed of that protocol,
+/// kept deliberately minimal until the replicated-GS work (ROADMAP)
+/// gives it a transport.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaLog {
+    events: Vec<DeltaEvent>,
+}
+
+impl DeltaLog {
+    pub fn new() -> Self {
+        DeltaLog::default()
+    }
+
+    pub fn push(&mut self, ev: DeltaEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &DeltaEvent> + '_ {
+        self.events.iter()
+    }
+
+    /// Number of handoff events (drain-progress reporting).
+    pub fn handoffs(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, DeltaEvent::Handoff { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_counts_handoffs() {
+        let mut log = DeltaLog::new();
+        assert!(log.is_empty());
+        log.push(DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: vec![1, 2, 3, 4],
+            now: 1.0,
+        });
+        log.push(DeltaEvent::Handoff {
+            from: InstanceId(0),
+            to: InstanceId(1),
+            tokens: vec![1, 2, 3, 4],
+            now: 2.0,
+        });
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.handoffs(), 1);
+        assert_eq!(log.iter().count(), 2);
+    }
+}

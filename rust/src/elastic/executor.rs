@@ -1,0 +1,355 @@
+//! Migration executor: move one cached prefix between two MemPools via
+//! the paper's 3-step distributed-transfer protocol (§4.3 — allocation,
+//! transmission, insertion), with `transfer_with_insert` semantics on
+//! the receiver and pin-during-transfer on the donor.
+//!
+//! Two drivers share this logic:
+//!
+//! * the **local-halves form** here ([`migrate_prefix`] /
+//!   [`execute_plan`]) used by tests and the `fig16_elastic` bench,
+//!   where both pools live in one address space and the wire is modeled
+//!   by the returned byte/call counts ([`TransferMode::ByRequestAgg`]
+//!   keeps the call count at one per token-block);
+//! * the **live-server form** (`Msg::MigrateOut` → `Msg::KvMigrate` →
+//!   `Msg::MigrateLanded` in [`crate::server`]), where the same steps
+//!   run across instance threads over the fabric and the leader applies
+//!   the ownership handoff when the receiver acknowledges.
+
+use crate::mempool::{
+    GroupList, MemPool, PoolError, Tier, TransferMode,
+};
+
+use super::planner::MigrationPlan;
+
+/// What one migration (or a whole plan) actually moved.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MigrationOutcome {
+    pub moved_token_blocks: usize,
+    pub moved_tokens: usize,
+    /// Modeled wire cost (payload is the KV cache; mode-independent).
+    pub wire_bytes: usize,
+    /// Modeled network API calls (mode- and layout-dependent).
+    pub wire_calls: usize,
+}
+
+impl MigrationOutcome {
+    pub fn absorb(&mut self, o: &MigrationOutcome) {
+        self.moved_token_blocks += o.moved_token_blocks;
+        self.moved_tokens += o.moved_tokens;
+        self.wire_bytes += o.wire_bytes;
+        self.wire_calls += o.wire_calls;
+    }
+}
+
+/// One exported prefix, ready for the wire (or a direct hand to
+/// [`land_prefix`]): the donor half's output.
+#[derive(Clone, Debug)]
+pub struct ExportedPrefix {
+    /// Tokens actually covered (≤ the requested prefix).
+    pub tokens: usize,
+    /// Allocatable blocks in `payload`.
+    pub n_blocks: usize,
+    pub payload: Vec<f32>,
+}
+
+/// Donor half, shared by the local executor and the live server's
+/// `MigrateOut` handler: `match_and_pin` holds the prefix against
+/// eviction/swap/expiry while it is read (pin-during-transfer),
+/// DRAM-resident blocks are swapped in first (the wire reads HBM), and
+/// the blocks are serialized into one payload. The pin is released on
+/// every path before returning — once exported, the payload is an
+/// independent copy. Returns `None` when the donor holds none of
+/// `tokens`.
+pub fn export_prefix(
+    donor: &mut MemPool,
+    tokens: &[u32],
+    now: f64,
+) -> Result<Option<ExportedPrefix>, PoolError> {
+    let m = donor.match_and_pin(tokens, now);
+    if m.tokens == 0 {
+        return Ok(None);
+    }
+    let pinned = &tokens[..m.tokens];
+    let res = (|| {
+        let flat = if m.needs_swap_in() {
+            donor.swap_in(&m.flat_addrs())?
+        } else {
+            m.flat_addrs()
+        };
+        let payload = donor.export_blocks(&flat)?;
+        Ok(ExportedPrefix {
+            tokens: m.tokens,
+            n_blocks: flat.len(),
+            payload,
+        })
+    })();
+    donor.unpin(pinned);
+    res.map(Some)
+}
+
+/// Receiver half, shared by the local executor and the live server's
+/// `KvMigrate` handler: allocate on demand (the no-dstAddrList flavor
+/// of `transfer` — `import_blocks` makes room in HBM itself), land the
+/// payload, and index it under the migrated tokens
+/// (`transfer_with_insert`).
+pub fn land_prefix(
+    receiver: &mut MemPool,
+    tokens: &[u32],
+    payload: &[f32],
+    n_blocks: usize,
+    now: f64,
+) -> Result<(), PoolError> {
+    let landed =
+        receiver.import_blocks(payload, n_blocks, None, Tier::Hbm, now)?;
+    let per = receiver.geometry().blocks_per_token_block();
+    let mut groups = GroupList::default();
+    for c in landed.chunks(per) {
+        groups.push_group(c);
+    }
+    receiver.insert_list(tokens, &groups, now)?;
+    Ok(())
+}
+
+/// Ship the donor's cached prefix of `tokens` into `receiver`: the
+/// 3-step allocate → transmit → insert protocol with both halves in one
+/// address space. Moves whatever prefix the donor actually holds
+/// (possibly shorter than `tokens`, possibly nothing); the caller hands
+/// off global-tree ownership for the *moved* span afterwards.
+pub fn migrate_prefix(
+    donor: &mut MemPool,
+    receiver: &mut MemPool,
+    tokens: &[u32],
+    mode: TransferMode,
+    now: f64,
+) -> Result<MigrationOutcome, PoolError> {
+    let Some(e) = export_prefix(donor, tokens, now)? else {
+        return Ok(MigrationOutcome::default());
+    };
+    land_prefix(receiver, &tokens[..e.tokens], &e.payload, e.n_blocks, now)?;
+    let geom = *donor.geometry();
+    Ok(MigrationOutcome {
+        moved_token_blocks: e.tokens / geom.block_tokens,
+        moved_tokens: e.tokens,
+        wire_bytes: mode.network_bytes(&geom, e.tokens),
+        wire_calls: mode.network_calls(&geom, e.tokens),
+    })
+}
+
+/// Run every task of a plan against a fleet of local pools (pool index =
+/// `InstanceId.0`) — the bench/test harness form of the executor.
+pub fn execute_plan(
+    plan: &MigrationPlan,
+    pools: &mut [MemPool],
+    mode: TransferMode,
+    now: f64,
+) -> Result<MigrationOutcome, PoolError> {
+    let mut total = MigrationOutcome::default();
+    for t in &plan.tasks {
+        let (donor, receiver) =
+            two_mut(pools, t.from.0 as usize, t.to.0 as usize);
+        let o = migrate_prefix(donor, receiver, &t.tokens, mode, now)?;
+        total.absorb(&o);
+    }
+    Ok(total)
+}
+
+/// Two distinct mutable elements of one slice.
+fn two_mut<T>(xs: &mut [T], i: usize, j: usize) -> (&mut T, &mut T) {
+    assert_ne!(i, j, "donor and receiver must differ");
+    if i < j {
+        let (a, b) = xs.split_at_mut(j);
+        (&mut a[i], &mut b[0])
+    } else {
+        let (a, b) = xs.split_at_mut(i);
+        (&mut b[0], &mut a[j])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mempool::{BlockGeometry, InstanceId};
+
+    fn geom() -> BlockGeometry {
+        BlockGeometry {
+            block_tokens: 4,
+            layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            aggregated: true,
+        }
+    }
+
+    fn pool(id: u32, hbm: usize, dram: usize) -> MemPool {
+        MemPool::new(InstanceId(id), geom(), hbm, dram, 0.0, true)
+    }
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 7 + seed).collect()
+    }
+
+    /// Insert `n` blocks of recognizable data under `tokens`.
+    fn seed_prefix(p: &mut MemPool, tokens: &[u32], fill: f32, now: f64) {
+        let n = tokens.len() / p.geometry().block_tokens;
+        let fpb = p.geometry().floats_per_block();
+        let addrs = p.alloc_mem(n, Tier::Hbm).unwrap();
+        for (i, &a) in addrs.iter().enumerate() {
+            p.write_block(a, &vec![fill + i as f32; fpb]).unwrap();
+        }
+        p.insert(
+            tokens,
+            addrs.into_iter().map(|a| vec![a]).collect(),
+            now,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn migrate_moves_data_and_indexes_receiver() {
+        let mut donor = pool(0, 8, 0);
+        let mut recv = pool(1, 8, 0);
+        let t = toks(8, 1);
+        seed_prefix(&mut donor, &t, 5.0, 1.0);
+        let o = migrate_prefix(
+            &mut donor,
+            &mut recv,
+            &t,
+            TransferMode::ByRequestAgg,
+            2.0,
+        )
+        .unwrap();
+        assert_eq!(o.moved_token_blocks, 2);
+        assert_eq!(o.moved_tokens, 8);
+        assert_eq!(o.wire_calls, 2); // agg: one call per token-block
+        assert!(o.wire_bytes > 0);
+        // Receiver indexed the prefix and the data made it intact.
+        let m = recv.match_prefix(&t, 3.0);
+        assert_eq!(m.tokens, 8);
+        let fpb = recv.geometry().floats_per_block();
+        let mut buf = vec![0.0; fpb];
+        recv.read_block(m.groups[1][0], &mut buf).unwrap();
+        assert_eq!(buf[0], 6.0);
+        // Donor keeps its copy (decommission reclaims it) and the pin
+        // was released: eviction can take it again.
+        assert_eq!(donor.match_prefix(&t, 3.0).tokens, 8);
+        assert_eq!(donor.evict(2), 2);
+        recv.check_consistency(0).unwrap();
+        donor.check_consistency(0).unwrap();
+    }
+
+    #[test]
+    fn migrate_swaps_in_dram_resident_prefix() {
+        let mut donor = pool(0, 4, 4);
+        let mut recv = pool(1, 4, 0);
+        let t = toks(8, 2);
+        seed_prefix(&mut donor, &t, 1.0, 1.0);
+        donor.swap_out(2).unwrap();
+        assert_eq!(donor.used_blocks(Tier::Dram), 2);
+        let o = migrate_prefix(
+            &mut donor,
+            &mut recv,
+            &t,
+            TransferMode::ByRequest,
+            2.0,
+        )
+        .unwrap();
+        assert_eq!(o.moved_token_blocks, 2);
+        // by_request over the discrete math: 2 blocks * 2 * layers.
+        assert_eq!(o.wire_calls, 2 * 2 * 2);
+        assert_eq!(recv.match_prefix(&t, 3.0).tokens, 8);
+        let fpb = recv.geometry().floats_per_block();
+        let mut buf = vec![0.0; fpb];
+        let m = recv.match_prefix(&t, 3.0);
+        recv.read_block(m.groups[0][0], &mut buf).unwrap();
+        assert_eq!(buf[0], 1.0);
+    }
+
+    #[test]
+    fn migrate_partial_and_missing_prefixes() {
+        let mut donor = pool(0, 8, 0);
+        let mut recv = pool(1, 8, 0);
+        let t = toks(12, 3);
+        seed_prefix(&mut donor, &t[..8], 1.0, 1.0); // only 2 of 3 blocks
+        let o = migrate_prefix(
+            &mut donor,
+            &mut recv,
+            &t,
+            TransferMode::ByRequestAgg,
+            2.0,
+        )
+        .unwrap();
+        assert_eq!(o.moved_tokens, 8, "moves what the donor holds");
+        assert_eq!(recv.match_prefix(&t, 3.0).tokens, 8);
+        // Nothing cached at all: a clean no-op.
+        let o2 = migrate_prefix(
+            &mut donor,
+            &mut recv,
+            &toks(8, 99),
+            TransferMode::ByRequestAgg,
+            2.0,
+        )
+        .unwrap();
+        assert_eq!(o2, MigrationOutcome::default());
+    }
+
+    #[test]
+    fn receiver_duplicates_are_freed_not_leaked() {
+        let mut donor = pool(0, 8, 0);
+        let mut recv = pool(1, 8, 0);
+        let t = toks(8, 4);
+        seed_prefix(&mut donor, &t, 1.0, 1.0);
+        seed_prefix(&mut recv, &t[..4], 9.0, 1.0); // receiver has block 0
+        migrate_prefix(
+            &mut donor,
+            &mut recv,
+            &t,
+            TransferMode::ByRequestAgg,
+            2.0,
+        )
+        .unwrap();
+        // The shipped copy of block 0 was a duplicate and went back to
+        // the allocator: only the original block 0 + the new block 1
+        // stay used.
+        assert_eq!(recv.used_blocks(Tier::Hbm), 2);
+        assert_eq!(recv.match_prefix(&t, 3.0).tokens, 8);
+        recv.check_consistency(0).unwrap();
+    }
+
+    #[test]
+    fn execute_plan_routes_tasks_between_pools() {
+        use crate::elastic::planner::MigrationTask;
+        let mut pools = vec![pool(0, 8, 0), pool(1, 8, 0), pool(2, 8, 0)];
+        let ta = toks(8, 1);
+        let tb = toks(8, 2);
+        seed_prefix(&mut pools[0], &ta, 1.0, 1.0);
+        seed_prefix(&mut pools[0], &tb, 2.0, 1.0);
+        let plan = MigrationPlan {
+            tasks: vec![
+                MigrationTask {
+                    from: InstanceId(0),
+                    to: InstanceId(1),
+                    tokens: ta.clone(),
+                    blocks: 2,
+                },
+                MigrationTask {
+                    from: InstanceId(0),
+                    to: InstanceId(2),
+                    tokens: tb.clone(),
+                    blocks: 2,
+                },
+            ],
+            planned_blocks: 4,
+            ..Default::default()
+        };
+        let o = execute_plan(
+            &plan,
+            &mut pools,
+            TransferMode::ByRequestAgg,
+            2.0,
+        )
+        .unwrap();
+        assert_eq!(o.moved_token_blocks, 4);
+        assert_eq!(pools[1].match_prefix(&ta, 3.0).tokens, 8);
+        assert_eq!(pools[2].match_prefix(&tb, 3.0).tokens, 8);
+    }
+}

@@ -1,0 +1,331 @@
+//! Instance lifecycle state machine (paper §4: the pool is *elastic*).
+//!
+//! Every instance moves through `Joining → Active → Draining →
+//! Decommissioned`. The states gate what the rest of the system may do
+//! with the instance:
+//!
+//! * **Joining** — registered, thread/process starting; receives no work
+//!   and owns no global-tree entries yet.
+//! * **Active** — full member: routable, records cached prefixes, can
+//!   donate or receive migrated KV.
+//! * **Draining** — scale-down in progress: excluded from routing (the
+//!   fused tree's `match_into` never emits it), finishes its in-flight
+//!   requests, and *donates* its hot cached prefixes to Active peers via
+//!   the migration planner/executor. Its data remains matchable through
+//!   [`crate::scheduler::fused_tree::FusedPromptTree::match_one`] until
+//!   decommission, so nothing is lost mid-migration.
+//! * **Decommissioned** — gone: ownership cleared everywhere, blocks
+//!   released, id retired (a rejoin is a fresh `Joining` registration).
+//!
+//! Transitions are validated — the leader, the simulator, and tests all
+//! share this one table, so an illegal order (e.g. draining an instance
+//! that never activated) is a programming error surfaced immediately.
+
+use std::collections::BTreeMap;
+
+use crate::mempool::InstanceId;
+use crate::scheduler::prompt_tree::InstanceKind;
+
+/// Where an instance is in its life (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstanceState {
+    Joining,
+    Active,
+    Draining,
+    Decommissioned,
+}
+
+impl InstanceState {
+    pub fn name(self) -> &'static str {
+        match self {
+            InstanceState::Joining => "joining",
+            InstanceState::Active => "active",
+            InstanceState::Draining => "draining",
+            InstanceState::Decommissioned => "decommissioned",
+        }
+    }
+
+    /// May the global scheduler route *new* work here?
+    pub fn routable(self) -> bool {
+        matches!(self, InstanceState::Active)
+    }
+
+    /// May this instance receive migrated KV (be a migration target)?
+    pub fn accepts_migration(self) -> bool {
+        matches!(self, InstanceState::Active)
+    }
+
+    /// May this instance donate KV (drain-donor or pressure-donor)?
+    pub fn donates(self) -> bool {
+        matches!(self, InstanceState::Active | InstanceState::Draining)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum LifecycleError {
+    #[error("unknown instance {0}")]
+    Unknown(InstanceId),
+    #[error("instance {0} already registered")]
+    AlreadyRegistered(InstanceId),
+    #[error("illegal transition for {id}: {from:?} -> {to:?}")]
+    IllegalTransition {
+        id: InstanceId,
+        from: InstanceState,
+        to: InstanceState,
+    },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    state: InstanceState,
+    kind: InstanceKind,
+}
+
+/// Fleet-wide lifecycle tracker: one entry per known instance, with
+/// transition validation. Pure bookkeeping — the leader/sim apply the
+/// side effects (tree draining bits, membership, migrations).
+#[derive(Default)]
+pub struct Lifecycle {
+    entries: BTreeMap<InstanceId, Entry>,
+}
+
+impl Lifecycle {
+    pub fn new() -> Self {
+        Lifecycle::default()
+    }
+
+    /// Register a new instance in `Joining`.
+    pub fn join(&mut self, id: InstanceId, kind: InstanceKind)
+                -> Result<(), LifecycleError> {
+        // A decommissioned id may rejoin (fresh state, nothing carries
+        // over); a live one may not.
+        if let Some(e) = self.entries.get(&id) {
+            if e.state != InstanceState::Decommissioned {
+                return Err(LifecycleError::AlreadyRegistered(id));
+            }
+        }
+        self.entries.insert(id, Entry {
+            state: InstanceState::Joining,
+            kind,
+        });
+        Ok(())
+    }
+
+    /// `Joining → Active`: the instance thread is up and registered.
+    pub fn activate(&mut self, id: InstanceId) -> Result<(), LifecycleError> {
+        self.transition(id, InstanceState::Active)
+    }
+
+    /// `Active → Draining`: scale-down begins.
+    pub fn begin_drain(&mut self, id: InstanceId)
+                       -> Result<(), LifecycleError> {
+        self.transition(id, InstanceState::Draining)
+    }
+
+    /// `Draining → Active`: an aborted scale-down (e.g. drain timeout).
+    /// The instance returns to full service with whatever it still
+    /// holds; any handoffs already applied stay applied (they were
+    /// honest — the receivers really cache those prefixes now).
+    pub fn abort_drain(&mut self, id: InstanceId)
+                       -> Result<(), LifecycleError> {
+        self.transition(id, InstanceState::Active)
+    }
+
+    /// `Draining → Decommissioned` (or `Joining → Decommissioned` for an
+    /// aborted join). An Active instance must drain first — that is the
+    /// whole point of the subsystem.
+    pub fn decommission(&mut self, id: InstanceId)
+                        -> Result<(), LifecycleError> {
+        self.transition(id, InstanceState::Decommissioned)
+    }
+
+    /// Abrupt removal (heartbeat failure, §4.4): skips the graceful
+    /// Draining stage — the instance is simply gone, from any state.
+    /// No-op for unknown ids.
+    pub fn force_decommission(&mut self, id: InstanceId) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.state = InstanceState::Decommissioned;
+        }
+    }
+
+    fn transition(&mut self, id: InstanceId, to: InstanceState)
+                  -> Result<(), LifecycleError> {
+        let e = self
+            .entries
+            .get_mut(&id)
+            .ok_or(LifecycleError::Unknown(id))?;
+        let legal = matches!(
+            (e.state, to),
+            (InstanceState::Joining, InstanceState::Active)
+                | (InstanceState::Active, InstanceState::Draining)
+                | (InstanceState::Draining, InstanceState::Active)
+                | (InstanceState::Draining, InstanceState::Decommissioned)
+                | (InstanceState::Joining, InstanceState::Decommissioned)
+        );
+        if !legal {
+            return Err(LifecycleError::IllegalTransition {
+                id,
+                from: e.state,
+                to,
+            });
+        }
+        e.state = to;
+        Ok(())
+    }
+
+    pub fn state(&self, id: InstanceId) -> Option<InstanceState> {
+        self.entries.get(&id).map(|e| e.state)
+    }
+
+    pub fn kind(&self, id: InstanceId) -> Option<InstanceKind> {
+        self.entries.get(&id).map(|e| e.kind)
+    }
+
+    pub fn is_routable(&self, id: InstanceId) -> bool {
+        self.state(id).is_some_and(|s| s.routable())
+    }
+
+    pub fn is_draining(&self, id: InstanceId) -> bool {
+        self.state(id) == Some(InstanceState::Draining)
+    }
+
+    /// Active instances (ascending id) satisfying `pred` on their kind —
+    /// the migration-recipient candidate set is
+    /// `active_where(|k| k.runs_prefill())`.
+    pub fn active_where<F: Fn(InstanceKind) -> bool>(
+        &self,
+        pred: F,
+    ) -> Vec<InstanceId> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.state == InstanceState::Active && pred(e.kind))
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// All ids currently in `Draining`.
+    pub fn draining(&self) -> Vec<InstanceId> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.state == InstanceState::Draining)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: InstanceId = InstanceId(0);
+    const B: InstanceId = InstanceId(1);
+
+    #[test]
+    fn full_lifecycle_path() {
+        let mut lc = Lifecycle::new();
+        lc.join(A, InstanceKind::PrefillOnly).unwrap();
+        assert_eq!(lc.state(A), Some(InstanceState::Joining));
+        assert!(!lc.is_routable(A));
+        lc.activate(A).unwrap();
+        assert!(lc.is_routable(A));
+        assert!(lc.state(A).unwrap().donates());
+        lc.begin_drain(A).unwrap();
+        assert!(!lc.is_routable(A));
+        assert!(lc.is_draining(A));
+        assert!(lc.state(A).unwrap().donates());
+        assert!(!lc.state(A).unwrap().accepts_migration());
+        lc.decommission(A).unwrap();
+        assert_eq!(lc.state(A), Some(InstanceState::Decommissioned));
+        assert!(!lc.state(A).unwrap().donates());
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut lc = Lifecycle::new();
+        lc.join(A, InstanceKind::Colocated).unwrap();
+        // Joining cannot drain (nor abort a drain it never began).
+        assert!(matches!(
+            lc.begin_drain(A),
+            Err(LifecycleError::IllegalTransition { .. })
+        ));
+        assert!(lc.abort_drain(A).is_err());
+        lc.activate(A).unwrap();
+        // Active cannot skip draining.
+        assert!(matches!(
+            lc.decommission(A),
+            Err(LifecycleError::IllegalTransition { .. })
+        ));
+        // Unknown id.
+        assert_eq!(lc.activate(B), Err(LifecycleError::Unknown(B)));
+    }
+
+    #[test]
+    fn aborted_drain_returns_to_active() {
+        let mut lc = Lifecycle::new();
+        lc.join(A, InstanceKind::PrefillOnly).unwrap();
+        lc.activate(A).unwrap();
+        lc.begin_drain(A).unwrap();
+        lc.abort_drain(A).unwrap();
+        assert_eq!(lc.state(A), Some(InstanceState::Active));
+        assert!(lc.is_routable(A));
+        // And it may drain again later.
+        lc.begin_drain(A).unwrap();
+        lc.decommission(A).unwrap();
+    }
+
+    #[test]
+    fn rejoin_after_decommission() {
+        let mut lc = Lifecycle::new();
+        lc.join(A, InstanceKind::PrefillOnly).unwrap();
+        assert!(matches!(
+            lc.join(A, InstanceKind::PrefillOnly),
+            Err(LifecycleError::AlreadyRegistered(_))
+        ));
+        lc.activate(A).unwrap();
+        lc.begin_drain(A).unwrap();
+        lc.decommission(A).unwrap();
+        // The id may come back as a fresh member.
+        lc.join(A, InstanceKind::DecodeOnly).unwrap();
+        assert_eq!(lc.state(A), Some(InstanceState::Joining));
+        assert_eq!(lc.kind(A), Some(InstanceKind::DecodeOnly));
+    }
+
+    #[test]
+    fn failure_force_decommissions_from_any_state() {
+        let mut lc = Lifecycle::new();
+        lc.join(A, InstanceKind::Colocated).unwrap();
+        lc.activate(A).unwrap();
+        lc.force_decommission(A);
+        assert_eq!(lc.state(A), Some(InstanceState::Decommissioned));
+        lc.force_decommission(B); // unknown id: no-op
+        assert_eq!(lc.state(B), None);
+    }
+
+    #[test]
+    fn aborted_join_decommissions_directly() {
+        let mut lc = Lifecycle::new();
+        lc.join(A, InstanceKind::PrefillOnly).unwrap();
+        lc.decommission(A).unwrap();
+        assert_eq!(lc.state(A), Some(InstanceState::Decommissioned));
+    }
+
+    #[test]
+    fn active_where_filters_state_and_kind() {
+        let mut lc = Lifecycle::new();
+        for (id, kind) in [
+            (InstanceId(0), InstanceKind::PrefillOnly),
+            (InstanceId(1), InstanceKind::DecodeOnly),
+            (InstanceId(2), InstanceKind::Colocated),
+            (InstanceId(3), InstanceKind::PrefillOnly),
+        ] {
+            lc.join(id, kind).unwrap();
+            lc.activate(id).unwrap();
+        }
+        lc.begin_drain(InstanceId(3)).unwrap();
+        assert_eq!(
+            lc.active_where(|k| k.runs_prefill()),
+            vec![InstanceId(0), InstanceId(2)]
+        );
+        assert_eq!(lc.draining(), vec![InstanceId(3)]);
+    }
+}

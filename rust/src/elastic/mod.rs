@@ -1,0 +1,38 @@
+//! Elasticity — the subsystem that makes the memory pool live up to the
+//! paper's title (*Elastic* Memory Pool): instances join, drain, and
+//! leave while their cached KV outlives them.
+//!
+//! Four pieces, threaded through every existing layer:
+//!
+//! * [`lifecycle`] — the `Joining → Active → Draining → Decommissioned`
+//!   state machine gating routing, donation, and migration targets.
+//! * [`delta`] — ownership delta events (`Record` / `Expire` /
+//!   `Handoff` / membership) over token sequences: the atomic-visibility
+//!   protocol migration rides and the replication log a future
+//!   multi-replica global scheduler would consume.
+//! * [`planner`] — which cached prefixes move where when an instance
+//!   drains or runs capacity-hot: hot, deep prefixes migrate to
+//!   least-pressured Active peers; cold tails are dropped.
+//! * [`executor`] — the 3-step allocate → transmit → insert transfer
+//!   (paper §4.3) between MemPools, with donor-side pin-during-transfer
+//!   and receiver-side `transfer_with_insert`.
+//!
+//! The live server drives drains over the fabric
+//! (`ServeCluster::drain` / `ServeCluster::join`), the discrete-event
+//! simulator replays drain/join plans at fleet scale, and
+//! `benches/fig16_elastic.rs` measures what survives a scale-down.
+
+pub mod delta;
+pub mod executor;
+pub mod lifecycle;
+pub mod planner;
+
+pub use delta::{DeltaEvent, DeltaLog};
+pub use executor::{
+    execute_plan, export_prefix, land_prefix, migrate_prefix,
+    ExportedPrefix, MigrationOutcome,
+};
+pub use lifecycle::{InstanceState, Lifecycle, LifecycleError};
+pub use planner::{
+    plan_migration, MigrationPlan, MigrationTask, PlannerConfig, Recipient,
+};

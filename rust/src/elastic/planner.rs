@@ -1,0 +1,295 @@
+//! Migration planner: which cached prefixes move where when an instance
+//! drains (or runs capacity-hot).
+//!
+//! The planner works entirely from global-scheduler state — per-instance
+//! [`crate::scheduler::fused_tree::FusedPromptTree::owned_paths`]
+//! inventories (depth + last-insert recency) and per-recipient capacity
+//! pressure — so the leader can plan without touching any instance's
+//! pool. Selection policy, per the paper's economics (§5.3: transfer
+//! beats recompute in proportion to prefix length; Fig 13: caching gains
+//! grow with depth):
+//!
+//! * **Hot, deep prefixes migrate.** Depth is the value of a cache entry
+//!   (a d-block prefix saves O(d) recompute *and* its transfer amortizes
+//!   the per-call overhead); recency predicts reuse. Shallow or stale
+//!   entries are **cold tails — dropped**, not shipped: moving them
+//!   costs more wire than the recompute they might save.
+//! * **Prefixes already replicated on an Active instance are skipped**
+//!   (they survive the drain for free).
+//! * **Recipients are chosen by capacity pressure**, spread so one peer
+//!   does not absorb the whole donor: an instance near eviction churn
+//!   would just evict what it receives (the same signal Eq. 1 now uses
+//!   to discount matched length — see
+//!   [`crate::scheduler::cost_model::pressure_discount`]).
+
+use crate::mempool::InstanceId;
+use crate::scheduler::fused_tree::FusedPromptTree;
+
+/// Planner knobs. Defaults suit a drain (move every hot, deep prefix);
+/// set `max_blocks` for a pressure-offload rebalance that moves only the
+/// most valuable entries.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Minimum depth (token-blocks) worth migrating; shallower prefixes
+    /// are cheaper to recompute than to ship.
+    pub min_depth_blocks: usize,
+    /// Entries whose last insert is older than this are cold tails —
+    /// dropped (`0` disables the age cut).
+    pub max_age_s: f64,
+    /// Cap on total migrated token-blocks (`None` = everything hot).
+    pub max_blocks: Option<usize>,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            min_depth_blocks: 2,
+            max_age_s: 0.0,
+            max_blocks: None,
+        }
+    }
+}
+
+/// A migration target: an Active instance and its capacity pressure in
+/// `[0, 1]` (fraction of its pool the index already occupies).
+#[derive(Clone, Copy, Debug)]
+pub struct Recipient {
+    pub id: InstanceId,
+    pub pressure: f64,
+}
+
+/// One unit of migration work: ship the donor's cached `tokens` to `to`
+/// via the 3-step transfer protocol, then hand off tree ownership.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MigrationTask {
+    pub from: InstanceId,
+    pub to: InstanceId,
+    pub tokens: Vec<u32>,
+    pub blocks: usize,
+}
+
+/// Planner output plus the accounting the drain report surfaces.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationPlan {
+    pub tasks: Vec<MigrationTask>,
+    /// Token-blocks scheduled to move.
+    pub planned_blocks: usize,
+    /// Cold/shallow/over-cap token-blocks left to die with the donor.
+    pub dropped_blocks: usize,
+    /// Token-blocks already fully cached on an Active instance.
+    pub replicated_blocks: usize,
+}
+
+/// Plan the migrations for a draining (or pressure-hot) `donor`.
+/// `recipients` must be Active, non-donor instances; an empty set yields
+/// an all-dropped plan (the caller decides whether that is acceptable —
+/// the leader refuses to drain the last prefill instance). Deterministic
+/// for a given tree state: inventory order is token-sorted and every
+/// tie breaks by instance id.
+pub fn plan_migration(
+    tree: &FusedPromptTree,
+    donor: InstanceId,
+    now: f64,
+    recipients: &[Recipient],
+    cfg: &PlannerConfig,
+) -> MigrationPlan {
+    let mut plan = MigrationPlan::default();
+    let mut inventory = tree.owned_paths(donor);
+    // Deepest (then hottest) first, so a `max_blocks` cap keeps the most
+    // valuable entries; owned_paths is token-sorted, making ties stable.
+    inventory.sort_by(|a, b| {
+        b.blocks
+            .cmp(&a.blocks)
+            .then(
+                b.last_insert
+                    .partial_cmp(&a.last_insert)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then_with(|| a.tokens.cmp(&b.tokens))
+    });
+    let recipients: Vec<Recipient> = recipients
+        .iter()
+        .copied()
+        .filter(|r| r.id != donor)
+        .collect();
+    // Per-recipient blocks assigned so far, for spreading.
+    let mut assigned = vec![0usize; recipients.len()];
+    let donor_total: usize = inventory.iter().map(|p| p.blocks).sum();
+    for path in inventory {
+        let hot = path.blocks >= cfg.min_depth_blocks
+            && (cfg.max_age_s <= 0.0 || now - path.last_insert <= cfg.max_age_s);
+        let capped = cfg
+            .max_blocks
+            .is_some_and(|cap| plan.planned_blocks + path.blocks > cap);
+        if !hot || capped || recipients.is_empty() {
+            plan.dropped_blocks += path.blocks;
+            continue;
+        }
+        // Already fully cached on some Active peer: survives for free.
+        if recipients
+            .iter()
+            .any(|r| tree.match_one(r.id, &path.tokens) >= path.tokens.len())
+        {
+            plan.replicated_blocks += path.blocks;
+            continue;
+        }
+        // Least-pressured recipient, spread-corrected: pressure plus the
+        // share of this drain already assigned to it.
+        let score = |k: usize| {
+            recipients[k].pressure
+                + assigned[k] as f64 / donor_total.max(1) as f64
+        };
+        let best = (0..recipients.len())
+            .min_by(|&i, &j| {
+                score(i)
+                    .partial_cmp(&score(j))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(recipients[i].id.cmp(&recipients[j].id))
+            })
+            .expect("recipients non-empty");
+        assigned[best] += path.blocks;
+        plan.planned_blocks += path.blocks;
+        plan.tasks.push(MigrationTask {
+            from: donor,
+            to: recipients[best].id,
+            tokens: path.tokens,
+            blocks: path.blocks,
+        });
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::prompt_tree::InstanceKind;
+
+    const BT: usize = 4;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 5 + seed * 1000).collect()
+    }
+
+    fn tree_with(donor_prompts: &[(usize, u32, f64)]) -> FusedPromptTree {
+        let mut t = FusedPromptTree::new(BT, 0.0);
+        for i in 0..4 {
+            t.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+        }
+        for &(len, seed, at) in donor_prompts {
+            t.record(InstanceId(0), &toks(len, seed), at);
+        }
+        t
+    }
+
+    fn rec(ids: &[(u32, f64)]) -> Vec<Recipient> {
+        ids.iter()
+            .map(|&(id, pressure)| Recipient {
+                id: InstanceId(id),
+                pressure,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn deep_hot_prefixes_move_cold_tails_drop() {
+        // 4-block deep+hot, 1-block shallow, 3-block stale.
+        let t = tree_with(&[(16, 1, 100.0), (4, 2, 100.0), (12, 3, 1.0)]);
+        let cfg = PlannerConfig {
+            min_depth_blocks: 2,
+            max_age_s: 50.0,
+            max_blocks: None,
+        };
+        let plan = plan_migration(
+            &t,
+            InstanceId(0),
+            110.0,
+            &rec(&[(1, 0.0)]),
+            &cfg,
+        );
+        assert_eq!(plan.tasks.len(), 1);
+        assert_eq!(plan.tasks[0].tokens, toks(16, 1));
+        assert_eq!(plan.planned_blocks, 4);
+        assert_eq!(plan.dropped_blocks, 1 + 3);
+    }
+
+    #[test]
+    fn replicated_prefixes_skipped() {
+        let mut t = tree_with(&[(16, 1, 1.0), (16, 2, 1.0)]);
+        // Instance 2 already caches prompt 1 fully.
+        t.record(InstanceId(2), &toks(16, 1), 2.0);
+        let plan = plan_migration(
+            &t,
+            InstanceId(0),
+            3.0,
+            &rec(&[(1, 0.0), (2, 0.0)]),
+            &PlannerConfig::default(),
+        );
+        assert_eq!(plan.tasks.len(), 1);
+        assert_eq!(plan.tasks[0].tokens, toks(16, 2));
+        assert_eq!(plan.replicated_blocks, 4);
+    }
+
+    #[test]
+    fn recipients_chosen_by_pressure_then_spread() {
+        let t = tree_with(&[(16, 1, 1.0), (16, 2, 1.0), (16, 3, 1.0)]);
+        // Instance 2 is heavily pressured: everything should prefer 1
+        // and 3, spreading between them.
+        let plan = plan_migration(
+            &t,
+            InstanceId(0),
+            2.0,
+            &rec(&[(1, 0.0), (2, 0.9), (3, 0.0)]),
+            &PlannerConfig::default(),
+        );
+        assert_eq!(plan.tasks.len(), 3);
+        let to2 = plan.tasks.iter().filter(|t| t.to == InstanceId(2)).count();
+        assert_eq!(to2, 0, "pressured recipient must be avoided: {plan:?}");
+        let to1 = plan.tasks.iter().filter(|t| t.to == InstanceId(1)).count();
+        let to3 = plan.tasks.iter().filter(|t| t.to == InstanceId(3)).count();
+        assert!(to1 >= 1 && to3 >= 1, "load must spread: {plan:?}");
+    }
+
+    #[test]
+    fn max_blocks_caps_and_prefers_deepest() {
+        let t = tree_with(&[(8, 1, 1.0), (16, 2, 1.0), (12, 3, 1.0)]);
+        let cfg = PlannerConfig {
+            max_blocks: Some(7),
+            ..Default::default()
+        };
+        let plan = plan_migration(
+            &t,
+            InstanceId(0),
+            2.0,
+            &rec(&[(1, 0.0)]),
+            &cfg,
+        );
+        // Deepest-first: the 4-block and 3-block prompts fit (7), the
+        // 2-block one is over cap.
+        assert_eq!(plan.planned_blocks, 7);
+        assert_eq!(plan.dropped_blocks, 2);
+        assert_eq!(plan.tasks[0].tokens, toks(16, 2));
+    }
+
+    #[test]
+    fn no_recipients_drops_everything() {
+        let t = tree_with(&[(16, 1, 1.0)]);
+        let plan = plan_migration(
+            &t,
+            InstanceId(0),
+            2.0,
+            &[],
+            &PlannerConfig::default(),
+        );
+        assert!(plan.tasks.is_empty());
+        assert_eq!(plan.dropped_blocks, 4);
+        // The donor itself is never a recipient.
+        let plan = plan_migration(
+            &t,
+            InstanceId(0),
+            2.0,
+            &rec(&[(0, 0.0)]),
+            &PlannerConfig::default(),
+        );
+        assert!(plan.tasks.is_empty());
+    }
+}

@@ -13,6 +13,8 @@
 //! * [`engine`] — the inference engine: paged KV, prefill/decode, and the
 //!   four disaggregation+caching milestones of §5 (Table 4).
 //! * [`scheduler`] — global prompt trees, routing policies, cost model.
+//! * [`elastic`] — instance lifecycle, live KV migration planning and
+//!   execution, ownership delta protocol (the pool's *elasticity*).
 //! * [`cluster`] — membership, heartbeats, failure handling (§4.4).
 //! * [`sim`] — discrete-event simulator for request-rate sweeps.
 //! * [`workload`] — ShareGPT/LooGLE/ReAct-like synthetic workloads (§8.2).
@@ -21,6 +23,7 @@
 
 pub mod cluster;
 pub mod config;
+pub mod elastic;
 pub mod engine;
 pub mod mempool;
 pub mod metrics;

@@ -661,8 +661,9 @@ impl RadixIndex {
     }
 
     /// Split `node`'s edge at `at` tokens (block-aligned): the node keeps
-    /// the head; a new child gets the tail + original children.
-    fn split(&mut self, node: usize, at: usize) {
+    /// the head; a new child gets the tail + original children. Returns
+    /// the tail node's index.
+    fn split(&mut self, node: usize, at: usize) -> usize {
         let bt = self.block_tokens;
         debug_assert!(at % bt == 0 && at > 0);
         let tail_edge = self.nodes[node].edge.split_off(at);
@@ -703,6 +704,7 @@ impl RadixIndex {
         self.attach_child(node, tail);
         self.refresh_lru(node); // now interior
         self.refresh_lru(tail); // may be a leaf
+        tail
     }
 
     /// Longest indexed prefix of `tokens`; bumps last_access on the path.
@@ -910,6 +912,68 @@ impl RadixIndex {
         freed
     }
 
+    /// `prefix` (block-truncated) is no longer cached: drop its *last*
+    /// block and every extension, keeping proper prefixes and sibling
+    /// branches — the token-level shape local LRU eviction reports
+    /// upstream (a `DeltaEvent::Expire`), structure-independent unlike
+    /// [`Self::delete`] (whose granularity is the final node's whole
+    /// edge). An empty prefix drops the entire tree; a prefix that is
+    /// not fully indexed is a no-op. Returns the freed addresses.
+    pub fn prune_at(&mut self, prefix: &[u32]) -> Vec<BlockAddr> {
+        let bt = self.block_tokens;
+        let usable = self.usable_len(prefix.len());
+        let mut freed = vec![];
+        if usable == 0 {
+            for c in self.child_indices(ROOT) {
+                let lost = self.nodes[c].sub_pins;
+                if lost > 0 {
+                    self.adjust_sub_pins(ROOT, -(lost as i32));
+                }
+                self.detach_child(ROOT, c);
+                self.drop_subtree(c, &mut freed);
+            }
+            return freed;
+        }
+        let prefix = &prefix[..usable];
+        let mut cur = ROOT;
+        let mut pos = 0;
+        loop {
+            let Some(child) = self.find_child(cur, &prefix[pos..pos + bt])
+            else {
+                return freed;
+            };
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &prefix[pos..],
+            );
+            debug_assert!(common >= bt);
+            pos += common;
+            if pos == usable {
+                // `child` holds the prefix's last block at edge offset
+                // `common - bt`: split there so earlier blocks survive,
+                // then drop the tail node and its subtree.
+                let target = if common > bt {
+                    self.split(child, common - bt)
+                } else {
+                    child
+                };
+                let parent = self.nodes[target].parent;
+                let lost = self.nodes[target].sub_pins;
+                if lost > 0 {
+                    self.adjust_sub_pins(parent, -(lost as i32));
+                }
+                self.detach_child(parent, target);
+                self.drop_subtree(target, &mut freed);
+                self.refresh_lru(parent);
+                return freed;
+            }
+            if common < self.nodes[child].edge.len() {
+                return freed; // diverged: prefix not indexed
+            }
+            cur = child;
+        }
+    }
+
     fn drop_subtree(&mut self, node: usize, freed: &mut Vec<BlockAddr>) {
         for c in self.child_indices(node) {
             self.drop_subtree(c, freed);
@@ -948,42 +1012,44 @@ impl RadixIndex {
     /// Addresses of the least-recently-used leaf groups satisfying
     /// `filter`, up to `want_token_blocks` groups — *without* removing
     /// them from the index. Used by `swap_out` to pick HBM victims whose
-    /// data moves to DRAM (the index is then remapped, not pruned).
-    /// Read-only and off the request path, so this stays a sort-once
-    /// scan rather than touching the LRU heap.
+    /// data moves to DRAM (the index is then remapped, not pruned), and
+    /// by drain-time donor scans. Victim selection pops the same lazy
+    /// LRU heap eviction uses — O(k log n) for k victims instead of the
+    /// former sort-every-leaf scan (stale entries encountered on the way
+    /// are discarded for good, a free heap cleanup); live entries are
+    /// pushed back afterwards, so the scan stays semantically read-only.
     pub fn lru_addrs<F: Fn(&BlockAddr) -> bool>(
-        &self,
+        &mut self,
         want_token_blocks: usize,
         filter: F,
     ) -> Vec<BlockAddr> {
-        let mut leaves: Vec<(f64, usize)> = self
-            .nodes
-            .iter()
-            .enumerate()
-            .skip(1)
-            .filter(|(_, n)| n.valid && n.children.is_empty() && n.pins == 0)
-            .map(|(i, n)| (n.last_access, i))
-            .collect();
-        leaves.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         let mut out = vec![];
         let mut groups_taken = 0;
-        'outer: for (_, leaf) in leaves {
-            let n = &self.nodes[leaf];
+        let mut popped = vec![];
+        while groups_taken < want_token_blocks {
+            let Some(e) = self.lru.pop() else { break };
+            if !self.lru_entry_live(&e) {
+                continue; // stale lazy-deleted entry
+            }
+            let n = &self.nodes[e.node];
             let gs = n.group_size as usize;
-            if gs == 0 {
-                continue;
-            }
-            // Walk trailing groups first (deepest data is coldest).
-            for b in (0..n.blocks(self.block_tokens)).rev() {
-                if groups_taken >= want_token_blocks {
-                    break 'outer;
+            if gs > 0 {
+                // Walk trailing groups first (deepest data is coldest).
+                for b in (0..n.blocks(self.block_tokens)).rev() {
+                    if groups_taken >= want_token_blocks {
+                        break;
+                    }
+                    let g = &n.addrs[b * gs..(b + 1) * gs];
+                    if g.iter().all(|a| filter(a)) {
+                        out.extend_from_slice(g);
+                        groups_taken += 1;
+                    }
                 }
-                let g = &n.addrs[b * gs..(b + 1) * gs];
-                if g.iter().all(|a| filter(a)) {
-                    out.extend_from_slice(g);
-                    groups_taken += 1;
-                }
             }
+            popped.push(e);
+        }
+        for e in popped {
+            self.lru.push(e);
         }
         out
     }
@@ -1203,6 +1269,63 @@ mod tests {
         assert_eq!(freed, vec![addr(0)]);
         assert_eq!(idx.total_token_blocks(), 1);
         assert_eq!(idx.match_prefix(&seq(&[2, 2, 2, 2]), 12.0).tokens, 4);
+    }
+
+    #[test]
+    fn prune_at_drops_last_block_extensions_keeps_siblings() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let abc: Vec<u32> = vec![1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3];
+        let ad: Vec<u32> = vec![1, 1, 1, 1, 9, 9, 9, 9];
+        idx.insert(&abc, &groups(0, 3), 1.0);
+        idx.insert(&ad, &groups(10, 2), 1.0);
+        // Prune at A-B: loses B's block and the C extension; keeps A
+        // (shared) and the A-D sibling branch.
+        let mut freed = idx.prune_at(&abc[..8]);
+        freed.sort();
+        assert_eq!(freed, vec![addr(1), addr(2)]);
+        assert_eq!(idx.match_prefix(&abc, 2.0).tokens, 4);
+        assert_eq!(idx.match_prefix(&ad, 2.0).tokens, 8);
+        assert_eq!(idx.total_token_blocks(), 3);
+    }
+
+    #[test]
+    fn prune_at_splits_inside_long_edge() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let long: Vec<u32> = (0..16).collect(); // one 4-block leaf
+        idx.insert(&long, &groups(0, 4), 1.0);
+        let freed = idx.prune_at(&long[..8]);
+        // Blocks 1..4 go; block 0 survives inside the split head.
+        assert_eq!(freed.len(), 3);
+        assert_eq!(idx.match_prefix(&long, 2.0).tokens, 4);
+        assert_eq!(idx.total_token_blocks(), 1);
+        // Not-fully-indexed prefix: no-op.
+        assert!(idx.prune_at(&long[..8]).is_empty());
+        assert_eq!(idx.total_token_blocks(), 1);
+    }
+
+    #[test]
+    fn prune_at_empty_prefix_clears_tree() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.insert(&seq(&[1, 1, 1, 1]), &groups(0, 1), 1.0);
+        idx.insert(&seq(&[2, 2, 2, 2, 3, 3, 3, 3]), &groups(1, 2), 2.0);
+        let freed = idx.prune_at(&[]);
+        assert_eq!(freed.len(), 3);
+        assert!(idx.is_empty());
+        assert_eq!(idx.node_count(), 0);
+    }
+
+    #[test]
+    fn lru_addrs_follows_eviction_order_and_is_readonly() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        idx.insert(&seq(&[1, 1, 1, 1]), &groups(0, 1), 1.0);
+        idx.insert(&seq(&[2, 2, 2, 2]), &groups(1, 1), 2.0);
+        idx.insert(&seq(&[3, 3, 3, 3]), &groups(2, 1), 3.0);
+        assert_eq!(idx.lru_addrs(2, |_| true), vec![addr(0), addr(1)]);
+        // Read-only: repeated calls (and later eviction) see the same
+        // heap state.
+        assert_eq!(idx.lru_addrs(2, |_| true), vec![addr(0), addr(1)]);
+        assert_eq!(idx.evict_lru(1), vec![addr(0)]);
+        assert_eq!(idx.lru_addrs(2, |_| true), vec![addr(1), addr(2)]);
     }
 
     #[test]
@@ -1548,7 +1671,7 @@ mod tests {
                     // Small alphabet: shared prefixes, splits, collisions.
                     let len = g.usize(0, 5) * BT + g.usize(0, BT - 1);
                     let toks = g.vec_u32(len, 0, 3);
-                    match g.usize(0, 5) {
+                    match g.usize(0, 6) {
                         0 | 1 => {
                             let nb = new.usable_len(toks.len()) / BT;
                             let gs: Vec<BlockGroup> = (0..nb)
@@ -1589,11 +1712,20 @@ mod tests {
                                 assert_eq!(f1, f2, "delete freed diverged");
                             }
                         }
-                        _ => {
+                        5 => {
                             let want = g.usize(1, 3);
                             let f1 = new.evict_lru(want);
                             let f2 = old.evict_lru(want);
                             assert_eq!(f1, f2, "evict freed diverged");
+                        }
+                        _ => {
+                            // Heap-driven victim picking must reproduce
+                            // the seed's sort-once scan exactly, and
+                            // leave the heap usable afterwards.
+                            let want = g.usize(1, 4);
+                            let v1 = new.lru_addrs(want, |_| true);
+                            let v2 = old.lru_addrs(want, |_| true);
+                            assert_eq!(v1, v2, "lru_addrs diverged");
                         }
                     }
                     assert_eq!(

@@ -170,6 +170,28 @@ impl OperatorCostModel {
     }
 }
 
+/// Occupancy where a pool starts churning: entries inserted near
+/// capacity evict other entries, and the matched prefix a route counted
+/// on may be gone before the request reaches the head of the queue.
+pub const PRESSURE_KNEE: f64 = 0.75;
+
+/// Capacity-pressure discount on a matched cached ratio (Eq. 1's
+/// locality term): multiplier in `[0.5, 1]`, 1 below [`PRESSURE_KNEE`]
+/// occupancy, falling linearly to 0.5 at a full pool. An instance near
+/// eviction churn is a worse cache holder than its matched length
+/// suggests — both the router (`policy::decide`) and the migration
+/// planner's recipient ranking lean on this signal, so it lives here
+/// next to the rest of the §5.3 cost model.
+pub fn pressure_discount(pressure: f64) -> f64 {
+    const MAX_DISCOUNT: f64 = 0.5;
+    let p = pressure.clamp(0.0, 1.0);
+    if p <= PRESSURE_KNEE {
+        1.0
+    } else {
+        1.0 - MAX_DISCOUNT * (p - PRESSURE_KNEE) / (1.0 - PRESSURE_KNEE)
+    }
+}
+
 /// Arch-level baseline: fit TTFT = p0 + p1·x + p2·x² scaled by (1-y),
 /// calibrated at ONE parallelism config (paper Fig 14b shows why this
 /// generalizes poorly).
@@ -440,6 +462,30 @@ mod tests {
         assert!(
             arch_err > 0.02,
             "naive arch rescale should mispredict ({arch_err})"
+        );
+    }
+
+    #[test]
+    fn pressure_discount_shape() {
+        // No discount below the knee; monotone to 0.5 at full pressure.
+        assert_eq!(pressure_discount(0.0), 1.0);
+        assert_eq!(pressure_discount(PRESSURE_KNEE), 1.0);
+        assert_eq!(pressure_discount(1.0), 0.5);
+        let mid = pressure_discount((PRESSURE_KNEE + 1.0) / 2.0);
+        assert!(mid < 1.0 && mid > 0.5);
+        // Clamped outside [0, 1].
+        assert_eq!(pressure_discount(-3.0), 1.0);
+        assert_eq!(pressure_discount(9.0), 0.5);
+    }
+
+    #[test]
+    fn pressure_raises_expected_exec() {
+        let m = OperatorCostModel::paper_13b();
+        let cold = m.exec(2048, 0.8 * pressure_discount(1.0));
+        let calm = m.exec(2048, 0.8 * pressure_discount(0.0));
+        assert!(
+            cold > calm,
+            "full pressure must discount the cache benefit"
         );
     }
 

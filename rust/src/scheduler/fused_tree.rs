@@ -47,9 +47,23 @@
 use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::hash::BuildHasherDefault;
 
+use crate::elastic::delta::DeltaEvent;
 use crate::mempool::index::{block_fingerprint, FpHasher};
 use crate::mempool::InstanceId;
 use crate::scheduler::prompt_tree::InstanceKind;
+
+/// A maximal prefix one instance is believed to cache (see
+/// [`FusedPromptTree::owned_paths`]): the migration planner's unit of
+/// work.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OwnedPrefix {
+    pub tokens: Vec<u32>,
+    /// Last-insert stamp of the path's deepest node — the hotness
+    /// signal (matching never bumps stamps).
+    pub last_insert: f64,
+    /// Depth in token-blocks (`tokens.len() / block_tokens`).
+    pub blocks: usize,
+}
 
 /// Sentinel for "no node" in intrusive sibling links.
 const NONE: usize = usize::MAX;
@@ -74,6 +88,11 @@ struct Slot {
     /// Token-blocks this instance is believed to cache (incremental).
     cached_blocks: usize,
     live: bool,
+    /// Draining instances (lifecycle `Active → Draining`) are excluded
+    /// from the routing walk but stay matchable via [`FusedPromptTree::
+    /// match_one`] — they keep serving as migration donors until
+    /// decommission.
+    draining: bool,
 }
 
 struct FNode {
@@ -147,6 +166,10 @@ pub struct FusedPromptTree {
     free_slots: Vec<u32>,
     /// Bit per slot whose instance runs prefill (routing candidates).
     prefill_mask: Vec<u64>,
+    /// `prefill_mask` minus draining slots — the set the routing walk
+    /// actually considers. Maintained by add/remove/[`Self::
+    /// set_draining`] so `match_into` pays nothing extra per route.
+    route_mask: Vec<u64>,
     /// TTL heap (lazy deletion, validated against node stamps at pop).
     heap: BinaryHeap<ExpireEntry>,
     /// Live (node, instance) ownership pairs — heap compaction bound.
@@ -180,6 +203,7 @@ impl FusedPromptTree {
             by_id: BTreeMap::new(),
             free_slots: vec![],
             prefill_mask: vec![],
+            route_mask: vec![],
             heap: BinaryHeap::new(),
             owner_pairs: 0,
             alive: vec![],
@@ -219,6 +243,7 @@ impl FusedPromptTree {
                     kind,
                     cached_blocks: 0,
                     live: true,
+                    draining: false,
                 };
                 s
             }
@@ -227,6 +252,7 @@ impl FusedPromptTree {
                     kind,
                     cached_blocks: 0,
                     live: true,
+                    draining: false,
                 });
                 (self.slots.len() - 1) as u32
             }
@@ -235,9 +261,11 @@ impl FusedPromptTree {
         let (w, m) = word_bit(slot);
         if self.prefill_mask.len() <= w {
             self.prefill_mask.resize(w + 1, 0);
+            self.route_mask.resize(w + 1, 0);
         }
         if kind.runs_prefill() {
             self.prefill_mask[w] |= m;
+            self.route_mask[w] |= m;
         }
     }
 
@@ -264,9 +292,35 @@ impl FusedPromptTree {
         let s = &mut self.slots[slot as usize];
         s.live = false;
         s.cached_blocks = 0;
+        s.draining = false;
         self.prefill_mask[w] &= !m;
+        self.route_mask[w] &= !m;
         self.free_slots.push(slot);
         self.prune_ownerless();
+    }
+
+    /// Toggle routing visibility for a draining instance: its bit leaves
+    /// the routing walk's alive set and `match_into` stops emitting it,
+    /// but its ownership (and [`Self::match_one`]) survives untouched so
+    /// migration can read and hand off its prefixes with no window in
+    /// which routing sees them as lost.
+    pub fn set_draining(&mut self, id: InstanceId, draining: bool) {
+        let Some(&slot) = self.by_id.get(&id) else {
+            return;
+        };
+        self.slots[slot as usize].draining = draining;
+        let (w, m) = word_bit(slot);
+        if draining {
+            self.route_mask[w] &= !m;
+        } else if self.slots[slot as usize].kind.runs_prefill() {
+            self.route_mask[w] |= m;
+        }
+    }
+
+    pub fn is_draining(&self, id: InstanceId) -> bool {
+        self.by_id
+            .get(&id)
+            .is_some_and(|&s| self.slots[s as usize].draining)
     }
 
     /// Registered instances in ascending id order.
@@ -412,7 +466,8 @@ impl FusedPromptTree {
     /// Owners and stamps are duplicated onto the tail (each owner's
     /// recorded span covered the whole edge), which creates new
     /// (node, instance) pairs: heap entries are pushed for them.
-    fn split(&mut self, node: usize, at: usize) {
+    /// Returns the tail node's index.
+    fn split(&mut self, node: usize, at: usize) -> usize {
         debug_assert!(at % self.block_tokens == 0 && at > 0);
         let tail_edge = self.nodes[node].edge.split_off(at);
         let tail_children = std::mem::take(&mut self.nodes[node].children);
@@ -448,6 +503,7 @@ impl FusedPromptTree {
             }
             self.maybe_compact_heap();
         }
+        tail
     }
 
     // ------------------------------------------------------------------
@@ -538,20 +594,22 @@ impl FusedPromptTree {
     // Match (the one-walk scheduling path)
     // ------------------------------------------------------------------
 
-    /// Matched prefix length (tokens) of `tokens` on every
-    /// prefill-capable instance, in ascending instance-id order, written
-    /// into `out` (cleared first). One tree walk for the whole fleet;
-    /// mutates only internal scratch — no LRU/stamp bumping, no
-    /// allocation once scratch has warmed up.
+    /// Matched prefix length (tokens) of `tokens` on every routable
+    /// (prefill-capable, non-draining) instance, in ascending
+    /// instance-id order, written into `out` (cleared first). One tree
+    /// walk for the whole fleet; mutates only internal scratch — no
+    /// LRU/stamp bumping, no allocation once scratch has warmed up.
+    /// Draining instances are invisible here (never candidates, never
+    /// donors); their data stays reachable via [`Self::match_one`].
     pub fn match_into(
         &mut self,
         tokens: &[u32],
         out: &mut Vec<(InstanceId, usize)>,
     ) {
         out.clear();
-        let words = self.prefill_mask.len();
+        let words = self.route_mask.len();
         self.alive.clear();
-        self.alive.extend_from_slice(&self.prefill_mask);
+        self.alive.extend_from_slice(&self.route_mask);
         self.matched.clear();
         self.matched.resize(self.slots.len(), 0);
         let bt = self.block_tokens;
@@ -604,7 +662,8 @@ impl FusedPromptTree {
             }
         }
         for (&id, &slot) in self.by_id.iter() {
-            if self.slots[slot as usize].kind.runs_prefill() {
+            let s = &self.slots[slot as usize];
+            if s.kind.runs_prefill() && !s.draining {
                 out.push((id, self.matched[slot as usize]));
             }
         }
@@ -641,6 +700,189 @@ impl FusedPromptTree {
             cur = child;
         }
         pos
+    }
+
+    // ------------------------------------------------------------------
+    // Ownership deltas (elasticity: drain / migration / honest eviction)
+    // ------------------------------------------------------------------
+
+    /// Apply one ownership delta event (see [`crate::elastic::delta`]).
+    /// This is the single entry point migration and membership flow
+    /// through, and the log-replay interface a future replicated GS
+    /// would consume. A [`DeltaEvent::Handoff`] grants the receiver
+    /// before retiring the donor inside one call, so routing never
+    /// observes the prefix as lost mid-migration.
+    pub fn apply_delta(&mut self, ev: &DeltaEvent) {
+        match ev {
+            DeltaEvent::Join { instance, kind } => {
+                self.add_instance(*instance, *kind);
+            }
+            DeltaEvent::Leave { instance } => self.remove_instance(*instance),
+            DeltaEvent::Record {
+                instance,
+                tokens,
+                now,
+            } => self.record(*instance, tokens, *now),
+            DeltaEvent::Expire { instance, prefix } => {
+                self.release_prefix(*instance, prefix);
+            }
+            DeltaEvent::Handoff {
+                from,
+                to,
+                tokens,
+                now,
+            } => {
+                // Sub-block handoffs carry nothing (and an empty prefix
+                // would mean "release everything" to the donor). A
+                // receiver no longer registered (e.g. it failed between
+                // the ack being sent and processed) must not retire the
+                // donor's claim either — the grant half would no-op and
+                // the prefix would vanish from routing.
+                if tokens.len() < self.block_tokens
+                    || !self.by_id.contains_key(to)
+                {
+                    return;
+                }
+                self.record(*to, tokens, *now);
+                self.release_prefix(*from, tokens);
+            }
+            DeltaEvent::SetDraining { instance, draining } => {
+                self.set_draining(*instance, *draining);
+            }
+        }
+    }
+
+    /// `id` no longer caches `prefix` (block-truncated) nor any
+    /// extension of it; proper prefixes and sibling branches survive.
+    /// An empty `prefix` clears the instance's entire view. This is the
+    /// [`DeltaEvent::Expire`] primitive and the donor half of a handoff;
+    /// a no-op when the instance does not cache the full prefix (prefix
+    /// closure: then it owns nothing at or under it either).
+    pub fn release_prefix(&mut self, id: InstanceId, prefix: &[u32]) {
+        let Some(&slot) = self.by_id.get(&id) else {
+            return;
+        };
+        let bt = self.block_tokens;
+        let usable = prefix.len() - prefix.len() % bt;
+        if usable == 0 {
+            for c in self.child_indices(ROOT) {
+                self.clear_owner_subtree(c, slot);
+            }
+            return;
+        }
+        let prefix = &prefix[..usable];
+        let mut cur = ROOT;
+        let mut pos = 0;
+        loop {
+            let Some(child) = self.find_child(cur, &prefix[pos..pos + bt])
+            else {
+                return;
+            };
+            if !test_bit(&self.nodes[child].owners, slot) {
+                return;
+            }
+            let common = self.common_block_prefix(
+                &self.nodes[child].edge,
+                &prefix[pos..],
+            );
+            debug_assert!(common >= bt);
+            pos += common;
+            if pos == usable {
+                // `child` holds the prefix's last block at edge offset
+                // `common - bt`: split there so the earlier blocks stay
+                // owned, then clear `slot` from the tail downward.
+                let target = if common > bt {
+                    self.split(child, common - bt)
+                } else {
+                    child
+                };
+                self.clear_owner_subtree(target, slot);
+                return;
+            }
+            if common < self.nodes[child].edge.len() {
+                return; // diverged before the boundary
+            }
+            cur = child;
+        }
+    }
+
+    /// Remove `slot`'s ownership from the whole subtree rooted at
+    /// `node`. Prefix closure bounds the walk: a node not owned by
+    /// `slot` has no owned descendants. Subtrees left ownerless are
+    /// unlinked and reclaimed (their pending TTL heap entries die with
+    /// the stamp removal / gen bump).
+    fn clear_owner_subtree(&mut self, node: usize, slot: u32) {
+        if !test_bit(&self.nodes[node].owners, slot) {
+            return;
+        }
+        let blocks = self.nodes[node].blocks(self.block_tokens);
+        let (w, m) = word_bit(slot);
+        let n = &mut self.nodes[node];
+        let i = n
+            .stamps
+            .binary_search_by_key(&slot, |s| s.0)
+            .expect("owners/stamps in sync");
+        n.stamps.remove(i);
+        n.owners[w] &= !m;
+        self.owner_pairs -= 1;
+        self.slots[slot as usize].cached_blocks -= blocks;
+        for c in self.child_indices(node) {
+            self.clear_owner_subtree(c, slot);
+        }
+        if self.nodes[node].stamps.is_empty() {
+            // Last owner gone; ownerless children already reclaimed
+            // themselves in the recursion (closure), so this drops only
+            // the node itself.
+            let parent = self.nodes[node].parent;
+            self.detach_child(parent, node);
+            self.drop_subtree(node);
+        }
+    }
+
+    /// The maximal prefixes `id` is believed to cache — one entry per
+    /// deepest owned path, with the tail node's last-insert stamp and
+    /// total depth in token-blocks. This is the migration planner's
+    /// donor inventory; sorted by tokens so the plan is deterministic
+    /// regardless of child-map iteration order.
+    pub fn owned_paths(&self, id: InstanceId) -> Vec<OwnedPrefix> {
+        let Some(&slot) = self.by_id.get(&id) else {
+            return vec![];
+        };
+        let mut out = vec![];
+        let mut prefix = vec![];
+        self.owned_paths_rec(ROOT, slot, &mut prefix, &mut out);
+        out.sort_by(|a, b| a.tokens.cmp(&b.tokens));
+        out
+    }
+
+    fn owned_paths_rec(
+        &self,
+        node: usize,
+        slot: u32,
+        prefix: &mut Vec<u32>,
+        out: &mut Vec<OwnedPrefix>,
+    ) {
+        let mut deepest = true;
+        for c in self.child_indices(node) {
+            if test_bit(&self.nodes[c].owners, slot) {
+                deepest = false;
+                prefix.extend_from_slice(&self.nodes[c].edge);
+                self.owned_paths_rec(c, slot, prefix, out);
+                prefix.truncate(prefix.len() - self.nodes[c].edge.len());
+            }
+        }
+        if deepest && node != ROOT {
+            let n = &self.nodes[node];
+            let i = n
+                .stamps
+                .binary_search_by_key(&slot, |s| s.0)
+                .expect("owned node has a stamp");
+            out.push(OwnedPrefix {
+                tokens: prefix.clone(),
+                last_insert: n.stamps[i].1,
+                blocks: prefix.len() / self.block_tokens,
+            });
+        }
     }
 
     // ------------------------------------------------------------------
@@ -981,6 +1223,158 @@ mod tests {
         assert_eq!(g.match_one(InstanceId(0), &b), 4);
         assert_eq!(g.match_one(InstanceId(0), &c), 4);
         assert_eq!(g.match_one(InstanceId(0), &[4, 4, 4, 4]), 0);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn draining_excluded_from_route_but_still_matchable() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        let t = toks(8, 0);
+        g.record(InstanceId(0), &t, 1.0);
+        g.set_draining(InstanceId(0), true);
+        assert!(g.is_draining(InstanceId(0)));
+        // Routing no longer sees instance 0 at all — not even as a
+        // zero-match candidate.
+        assert_eq!(match_all(&mut g, &t), vec![(InstanceId(1), 0)]);
+        // But its data stays matchable for migration/donor reads.
+        assert_eq!(g.match_one(InstanceId(0), &t), 8);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 2);
+        // Un-drain restores visibility (aborted scale-down).
+        g.set_draining(InstanceId(0), false);
+        assert_eq!(
+            match_all(&mut g, &t),
+            vec![(InstanceId(0), 8), (InstanceId(1), 0)]
+        );
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn release_prefix_keeps_proper_prefixes_and_siblings() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        // Two branches sharing block A: A-B-C and A-D.
+        let abc = [1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3];
+        let ad = [1, 1, 1, 1, 9, 9, 9, 9];
+        g.record(InstanceId(0), &abc, 1.0);
+        g.record(InstanceId(0), &ad, 1.0);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 4);
+        // Release A-B: loses B and the C extension; keeps A and A-D.
+        g.release_prefix(InstanceId(0), &abc[..8]);
+        assert_eq!(g.match_one(InstanceId(0), &abc), 4);
+        assert_eq!(g.match_one(InstanceId(0), &ad), 8);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 2);
+        // Empty prefix clears the whole view.
+        g.release_prefix(InstanceId(0), &[]);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 0);
+        assert_eq!(g.node_count(), 0);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn release_prefix_splits_inside_long_edge() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        let t = toks(16, 0); // one 4-block leaf edge
+        g.record(InstanceId(0), &t, 1.0);
+        g.record(InstanceId(1), &t, 1.0);
+        // Instance 0 releases the 2-block prefix: it keeps 1 block;
+        // instance 1 is untouched.
+        g.release_prefix(InstanceId(0), &t[..8]);
+        assert_eq!(g.match_one(InstanceId(0), &t), 4);
+        assert_eq!(g.match_one(InstanceId(1), &t), 16);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 1);
+        assert_eq!(g.cached_blocks(InstanceId(1)), 4);
+        // Releasing a prefix the instance does not fully cache: no-op.
+        g.release_prefix(InstanceId(0), &t[..12]);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 1);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn handoff_delta_repoints_ownership_atomically() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.apply_delta(&DeltaEvent::Join {
+            instance: InstanceId(0),
+            kind: InstanceKind::PrefillOnly,
+        });
+        g.apply_delta(&DeltaEvent::Join {
+            instance: InstanceId(1),
+            kind: InstanceKind::PrefillOnly,
+        });
+        let t = toks(12, 3);
+        g.apply_delta(&DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: t.clone(),
+            now: 1.0,
+        });
+        g.apply_delta(&DeltaEvent::SetDraining {
+            instance: InstanceId(0),
+            draining: true,
+        });
+        g.apply_delta(&DeltaEvent::Handoff {
+            from: InstanceId(0),
+            to: InstanceId(1),
+            tokens: t.clone(),
+            now: 2.0,
+        });
+        // Receiver owns the full prefix; donor retains only the proper
+        // prefixes below the handed tail (honest: it still holds them).
+        assert_eq!(g.match_one(InstanceId(1), &t), 12);
+        assert_eq!(g.match_one(InstanceId(0), &t), 8);
+        assert_eq!(match_all(&mut g, &t), vec![(InstanceId(1), 12)]);
+        g.apply_delta(&DeltaEvent::Leave {
+            instance: InstanceId(0),
+        });
+        assert_eq!(g.match_one(InstanceId(1), &t), 12);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn owned_paths_enumerates_maximal_prefixes() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        let abc = [1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3];
+        let ad = [1, 1, 1, 1, 9, 9, 9, 9];
+        g.record(InstanceId(0), &abc, 1.0);
+        g.record(InstanceId(0), &ad, 5.0);
+        // Instance 1 extends A-D deeper: its path is maximal for *it*
+        // only; instance 0's A-D path stays 2 blocks.
+        let adx = [1, 1, 1, 1, 9, 9, 9, 9, 7, 7, 7, 7];
+        g.record(InstanceId(1), &adx, 6.0);
+        let paths = g.owned_paths(InstanceId(0));
+        assert_eq!(paths.len(), 2);
+        assert_eq!(paths[0].tokens, abc.to_vec());
+        assert_eq!(paths[0].blocks, 3);
+        assert_eq!(paths[0].last_insert, 1.0);
+        assert_eq!(paths[1].tokens, ad.to_vec());
+        assert_eq!(paths[1].blocks, 2);
+        assert_eq!(paths[1].last_insert, 5.0);
+        let p1 = g.owned_paths(InstanceId(1));
+        assert_eq!(p1.len(), 1);
+        assert_eq!(p1[0].tokens, adx.to_vec());
+        assert!(g.owned_paths(InstanceId(9)).is_empty());
+    }
+
+    #[test]
+    fn release_prefix_with_forced_collisions() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        g.set_fingerprint_mask(0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        let a = [1u32, 1, 1, 1, 5, 5, 5, 5];
+        let b = [2u32, 2, 2, 2];
+        let c = [3u32, 3, 3, 3];
+        g.record(InstanceId(0), &a, 1.0);
+        g.record(InstanceId(0), &b, 1.0);
+        g.record(InstanceId(0), &c, 1.0);
+        g.release_prefix(InstanceId(0), &a[..4]);
+        assert_eq!(g.match_one(InstanceId(0), &a), 0);
+        assert_eq!(g.match_one(InstanceId(0), &b), 4);
+        assert_eq!(g.match_one(InstanceId(0), &c), 4);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 2);
         g.debug_check_counters();
     }
 

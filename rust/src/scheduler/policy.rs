@@ -8,6 +8,7 @@
 //!   (Eq. 1), exploiting inter-session sharing.
 
 use crate::mempool::InstanceId;
+use crate::scheduler::cost_model::pressure_discount;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -46,6 +47,11 @@ pub struct Candidate {
     pub queued_cached_ratio: f64,
     /// Matched prefix tokens for *this* prompt on this instance.
     pub matched_tokens: usize,
+    /// Capacity pressure in [0, 1] (pool occupancy): instances near
+    /// eviction churn get their matched length discounted (see
+    /// [`pressure_discount`]) — they are worse cache holders *and*
+    /// worse donors than the raw match suggests.
+    pub pressure: f64,
 }
 
 /// Decision output: chosen instance plus (optionally) a donor holding a
@@ -78,16 +84,19 @@ pub fn decide<F: Fn(usize, f64) -> f64>(
             &candidates[i]
         }
         PolicyKind::PromptTree => {
-            // Eq. 1: argmin_p sum_queue exec(x', y') + exec(x, y_p).
-            // Exact cost ties (e.g. a cold prompt over idle instances)
-            // break by load, then by a session hash — otherwise every
-            // cold request piles onto the first instance and the tail
-            // suffers.
+            // Eq. 1: argmin_p sum_queue exec(x', y') + exec(x, y_p),
+            // with y_p discounted by capacity pressure (a near-full pool
+            // may churn the matched prefix away before this request is
+            // scheduled). Exact cost ties (e.g. a cold prompt over idle
+            // instances) break by load, then by a session hash —
+            // otherwise every cold request piles onto the first
+            // instance and the tail suffers.
             let cost = |c: &Candidate| {
                 exec(c.queued_tokens, c.queued_cached_ratio)
                     + exec(
                         prompt_tokens,
                         c.matched_tokens as f64
+                            * pressure_discount(c.pressure)
                             / prompt_tokens.max(1) as f64,
                     )
             };
@@ -110,12 +119,25 @@ pub fn decide<F: Fn(usize, f64) -> f64>(
                 .unwrap()
         }
     };
-    // Donor: an instance holding strictly more of this prompt's prefix.
+    // Donor: an instance holding strictly more of this prompt's prefix
+    // — both nominally (the documented contract: a donor only makes
+    // sense if it has tokens the chosen instance lacks) and after the
+    // pressure discount (a churning donor's prefix may be gone by the
+    // time Eq. 2's transfer starts). Ranked by discounted length.
+    let eff = |c: &Candidate| {
+        c.matched_tokens as f64 * pressure_discount(c.pressure)
+    };
     let donor = candidates
         .iter()
         .filter(|c| c.instance != chosen.instance)
-        .max_by_key(|c| c.matched_tokens)
-        .filter(|c| c.matched_tokens > chosen.matched_tokens)
+        .max_by(|a, b| {
+            eff(a)
+                .partial_cmp(&eff(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .filter(|c| {
+            c.matched_tokens > chosen.matched_tokens && eff(c) > eff(chosen)
+        })
         .map(|c| (c.instance, c.matched_tokens));
     Decision {
         instance: chosen.instance,
@@ -134,6 +156,7 @@ mod tests {
             queued_tokens: queued,
             queued_cached_ratio: 0.0,
             matched_tokens: matched,
+            pressure: 0.0,
         }
     }
 
@@ -199,5 +222,53 @@ mod tests {
         let d = decide(PolicyKind::PromptTree, &cs, 512, 0, exec);
         assert_eq!(d.instance, InstanceId(0));
         assert_eq!(d.donor, None);
+    }
+
+    #[test]
+    fn pressure_discounts_cache_holder() {
+        // Both hold the same match; instance 0 is churning near
+        // capacity, so Eq. 1 must prefer the calm instance 1.
+        let mut hot = cand(0, 0, 448);
+        hot.pressure = 1.0;
+        let cs = vec![hot, cand(1, 0, 448)];
+        let d = decide(PolicyKind::PromptTree, &cs, 512, 0, exec);
+        assert_eq!(d.instance, InstanceId(1));
+        // Below the churn knee the signal is silent: ties break exactly
+        // as without pressure (load, then session hash).
+        let mut calm = cand(0, 0, 448);
+        calm.pressure = 0.5;
+        let cs0 = vec![calm, cand(1, 0, 448)];
+        let base = vec![cand(0, 0, 448), cand(1, 0, 448)];
+        assert_eq!(
+            decide(PolicyKind::PromptTree, &cs0, 512, 3, exec),
+            decide(PolicyKind::PromptTree, &base, 512, 3, exec)
+        );
+    }
+
+    #[test]
+    fn donor_needs_strictly_more_raw_tokens_than_chosen() {
+        // Chosen holds 448 raw (eff 224 under full pressure); the other
+        // candidate's 300 raw is effectively "more" (eff 300) but holds
+        // nothing the chosen instance lacks — no donor.
+        let mut hot = cand(0, 0, 448);
+        hot.pressure = 1.0;
+        let busy = cand(1, 1_000_000, 300); // queue keeps it from winning
+        let cs = vec![hot, busy];
+        let d = decide(PolicyKind::PromptTree, &cs, 512, 0, exec);
+        assert_eq!(d.instance, InstanceId(0));
+        assert_eq!(d.donor, None);
+    }
+
+    #[test]
+    fn pressured_donor_loses_to_calm_donor() {
+        // Chosen is 0 (idle, no cache). Donor pick: instance 2 matches
+        // slightly less than 1 but 1 churns at full pressure — the
+        // effective length ranks 2 first.
+        let mut churny = cand(1, 100_000, 500);
+        churny.pressure = 1.0;
+        let cs = vec![cand(0, 0, 0), churny, cand(2, 100_000, 400)];
+        let d = decide(PolicyKind::PromptTree, &cs, 512, 0, exec);
+        assert_eq!(d.instance, InstanceId(0));
+        assert_eq!(d.donor, Some((InstanceId(2), 400)));
     }
 }

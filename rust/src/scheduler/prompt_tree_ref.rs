@@ -19,12 +19,17 @@
 
 use std::collections::BTreeMap;
 
+use crate::elastic::delta::DeltaEvent;
 use crate::mempool::{InstanceId, RadixIndex};
 use crate::scheduler::prompt_tree::InstanceKind;
 
 struct TreeEntry {
     kind: InstanceKind,
     tree: RadixIndex,
+    /// Draining instances are excluded from `match_all` (mirrors the
+    /// fused tree's route-mask exclusion) but stay matchable via
+    /// `match_one`.
+    draining: bool,
 }
 
 /// All per-instance global prompt trees, keyed by instance.
@@ -49,6 +54,7 @@ impl RefGlobalPromptTrees {
             TreeEntry {
                 kind,
                 tree: RadixIndex::new(self.block_tokens, self.ttl),
+                draining: false,
             },
         );
     }
@@ -77,14 +83,73 @@ impl RefGlobalPromptTrees {
         e.tree.insert_unaddressed(tokens, now);
     }
 
-    /// Matched prefix length (tokens) on every prefill-capable instance
-    /// — one full tree walk *per instance* (the seed scheduling path).
+    /// Matched prefix length (tokens) on every routable (prefill-capable,
+    /// non-draining) instance — one full tree walk *per instance* (the
+    /// seed scheduling path).
     pub fn match_all(&self, tokens: &[u32]) -> Vec<(InstanceId, usize)> {
         self.trees
             .iter()
-            .filter(|(_, e)| e.kind.runs_prefill())
+            .filter(|(_, e)| e.kind.runs_prefill() && !e.draining)
             .map(|(id, e)| (*id, e.tree.match_len(tokens)))
             .collect()
+    }
+
+    /// Routing visibility toggle (see the fused tree's `set_draining`).
+    pub fn set_draining(&mut self, id: InstanceId, draining: bool) {
+        if let Some(e) = self.trees.get_mut(&id) {
+            e.draining = draining;
+        }
+    }
+
+    pub fn is_draining(&self, id: InstanceId) -> bool {
+        self.trees.get(&id).is_some_and(|e| e.draining)
+    }
+
+    /// `id` no longer caches `prefix` nor any extension of it (the
+    /// `DeltaEvent::Expire` primitive): per-instance trees make this a
+    /// straight [`RadixIndex::prune_at`].
+    pub fn release_prefix(&mut self, id: InstanceId, prefix: &[u32]) {
+        if let Some(e) = self.trees.get_mut(&id) {
+            e.tree.prune_at(prefix);
+        }
+    }
+
+    /// Apply one ownership delta event — the reference semantics the
+    /// fused tree's `apply_delta` is pinned against differentially.
+    pub fn apply_delta(&mut self, ev: &DeltaEvent) {
+        match ev {
+            DeltaEvent::Join { instance, kind } => {
+                self.add_instance(*instance, *kind);
+            }
+            DeltaEvent::Leave { instance } => self.remove_instance(*instance),
+            DeltaEvent::Record {
+                instance,
+                tokens,
+                now,
+            } => self.record(*instance, tokens, *now),
+            DeltaEvent::Expire { instance, prefix } => {
+                self.release_prefix(*instance, prefix);
+            }
+            DeltaEvent::Handoff {
+                from,
+                to,
+                tokens,
+                now,
+            } => {
+                // Mirror the fused tree: no sub-block handoffs, and an
+                // unknown receiver must not retire the donor's claim.
+                if tokens.len() < self.block_tokens
+                    || !self.trees.contains_key(to)
+                {
+                    return;
+                }
+                self.record(*to, tokens, *now);
+                self.release_prefix(*from, tokens);
+            }
+            DeltaEvent::SetDraining { instance, draining } => {
+                self.set_draining(*instance, *draining);
+            }
+        }
     }
 
     /// Matched prefix on one specific instance.
@@ -126,6 +191,13 @@ mod tests {
         ((id.0 as u64).wrapping_mul(2654435761) % 4096) as usize
     }
 
+    /// Deterministic synthetic capacity pressure (some instances above
+    /// the churn knee, some below).
+    fn pressure_of(id: InstanceId) -> f64 {
+        ((id.0 as u64).wrapping_mul(0x9E3779B97F4A7C15) % 1000) as f64
+            / 1000.0
+    }
+
     fn candidates(matches: &[(InstanceId, usize)]) -> Vec<Candidate> {
         matches
             .iter()
@@ -134,6 +206,7 @@ mod tests {
                 queued_tokens: load_of(id),
                 queued_cached_ratio: 0.0,
                 matched_tokens: matched,
+                pressure: pressure_of(id),
             })
             .collect()
     }
@@ -143,13 +216,16 @@ mod tests {
     }
 
     /// The ISSUE's differential property: random record / route /
-    /// expire / remove-instance sequences over ≥64 instances produce
-    /// identical matched-prefix vectors, per-instance counters, and
-    /// policy decisions on the fused tree and the per-instance
-    /// reference — under the normal fingerprint and under a 4-bit mask
-    /// that forces collision chaining in the fused tree.
+    /// expire / remove-instance sequences — now interleaved with the
+    /// elasticity deltas (prefix expiry, handoffs, drain toggles,
+    /// leave/rejoin) — over ≥64 instances produce identical
+    /// matched-prefix vectors, per-instance counters, and policy
+    /// decisions on the fused tree and the per-instance reference —
+    /// under the normal fingerprint and under a 4-bit mask that forces
+    /// collision chaining in the fused tree.
     #[test]
     fn prop_fused_matches_reference_trees() {
+        use crate::elastic::delta::DeltaEvent;
         for mask in [u64::MAX, 0xF] {
             proptest(20, move |g| {
                 let ttl = 10.0;
@@ -170,6 +246,13 @@ mod tests {
                     refr.add_instance(id, kind);
                     live.push(id);
                 }
+                // Apply one delta to both implementations.
+                let both = |fused: &mut GlobalPromptTrees,
+                            refr: &mut RefGlobalPromptTrees,
+                            ev: DeltaEvent| {
+                    fused.apply_delta(&ev);
+                    refr.apply_delta(&ev);
+                };
                 let mut now = 0.0;
                 for _ in 0..g.usize(10, 50) {
                     now += g.f64(0.1, 4.0);
@@ -177,7 +260,7 @@ mod tests {
                     // the masked fingerprint) collision chains.
                     let len = g.usize(0, 6) * BT + g.usize(0, BT - 1);
                     let toks = g.vec_u32(len, 0, 3);
-                    match g.usize(0, 9) {
+                    match g.usize(0, 12) {
                         0..=3 => {
                             if !live.is_empty() {
                                 let id = *g.pick(&live);
@@ -222,22 +305,87 @@ mod tests {
                             refr.expire(now);
                         }
                         8 => {
+                            // Leave / rejoin through the delta log (an
+                            // instance returning after decommission is
+                            // a fresh member).
                             if live.len() > 1 && g.bool() {
                                 let i = g.usize(0, live.len() - 1);
                                 let id = live.swap_remove(i);
-                                fused.remove_instance(id);
-                                refr.remove_instance(id);
+                                both(
+                                    &mut fused,
+                                    &mut refr,
+                                    DeltaEvent::Leave { instance: id },
+                                );
                                 removed.push(id);
                             } else if let Some(id) = removed.pop() {
-                                fused.add_instance(
-                                    id,
-                                    InstanceKind::PrefillOnly,
-                                );
-                                refr.add_instance(
-                                    id,
-                                    InstanceKind::PrefillOnly,
-                                );
+                                both(&mut fused, &mut refr, DeltaEvent::Join {
+                                    instance: id,
+                                    kind: InstanceKind::PrefillOnly,
+                                });
                                 live.push(id);
+                            }
+                        }
+                        9 => {
+                            // Honest local-eviction report: a prefix and
+                            // its extensions disappear from one view.
+                            if !live.is_empty() {
+                                let id = *g.pick(&live);
+                                both(
+                                    &mut fused,
+                                    &mut refr,
+                                    DeltaEvent::Expire {
+                                        instance: id,
+                                        prefix: toks.clone(),
+                                    },
+                                );
+                            }
+                        }
+                        10 => {
+                            // Live-migration handoff between two distinct
+                            // instances (drain-time ownership re-point).
+                            // Sometimes the receiver is a *removed* id —
+                            // a late ack racing a failure sweep — which
+                            // must leave the donor's claim intact.
+                            if live.len() > 1 {
+                                let i = g.usize(0, live.len() - 1);
+                                let to = if !removed.is_empty() && g.bool() {
+                                    *g.pick(&removed)
+                                } else {
+                                    let mut j = g.usize(0, live.len() - 1);
+                                    if i == j {
+                                        j = (j + 1) % live.len();
+                                    }
+                                    live[j]
+                                };
+                                both(
+                                    &mut fused,
+                                    &mut refr,
+                                    DeltaEvent::Handoff {
+                                        from: live[i],
+                                        to,
+                                        tokens: toks.clone(),
+                                        now,
+                                    },
+                                );
+                            }
+                        }
+                        11 => {
+                            // Drain toggle: routing visibility only.
+                            if !live.is_empty() {
+                                let id = *g.pick(&live);
+                                let draining = g.bool();
+                                both(
+                                    &mut fused,
+                                    &mut refr,
+                                    DeltaEvent::SetDraining {
+                                        instance: id,
+                                        draining,
+                                    },
+                                );
+                                assert_eq!(
+                                    fused.is_draining(id),
+                                    refr.is_draining(id)
+                                );
                             }
                         }
                         _ => {

@@ -14,6 +14,9 @@ pub struct InstanceLoad {
     pub queued_tokens: usize,
     pub queued_cached_ratio: f64,
     pub running: usize,
+    /// Pool occupancy in [0, 1]; near-full pools churn and Eq. 1
+    /// discounts their matched length (`cost_model::pressure_discount`).
+    pub capacity_pressure: f64,
 }
 
 /// What the GS tells the chosen instance (and the caller) to do.
@@ -99,6 +102,7 @@ impl GlobalScheduler {
                 queued_tokens: l.queued_tokens,
                 queued_cached_ratio: l.queued_cached_ratio,
                 matched_tokens: matched,
+                pressure: l.capacity_pressure,
             });
         }
         let cost = &self.cost;
@@ -229,6 +233,40 @@ mod tests {
         g.record_cached(InstanceId(0), &t, 1.5);
         let warm = g.route(&t, 0, &idle, 2.0).unwrap().expected_prefill_s;
         assert!(warm < cold, "warm={warm} cold={cold}");
+    }
+
+    #[test]
+    fn draining_instance_never_routed() {
+        let mut g = gs(PolicyKind::PromptTree);
+        let t = toks(256, 0);
+        // Instance 1 holds the cache but is draining: routing must go
+        // elsewhere even though the match is perfect.
+        g.record_cached(InstanceId(1), &t, 1.0);
+        g.trees.set_draining(InstanceId(1), true);
+        for s in 0..10 {
+            let out = g.route(&t, s, &idle, 2.0).unwrap();
+            assert_ne!(out.decision.instance, InstanceId(1));
+            // Nor may it appear as an Eq. 2 donor — migration, not
+            // ad-hoc donor fetch, moves a draining instance's KV.
+            assert!(out.decision.donor.is_none());
+        }
+        // Its view is still there for the migration planner.
+        assert_eq!(g.trees.match_one(InstanceId(1), &t), 256);
+    }
+
+    #[test]
+    fn capacity_pressure_steers_routing() {
+        let mut g = gs(PolicyKind::PromptTree);
+        let t = toks(1024, 2);
+        // Both instances cache the prompt; 0 churns at full pressure.
+        g.record_cached(InstanceId(0), &t, 1.0);
+        g.record_cached(InstanceId(1), &t, 1.0);
+        let loads = |id: InstanceId| InstanceLoad {
+            capacity_pressure: if id == InstanceId(0) { 1.0 } else { 0.0 },
+            ..Default::default()
+        };
+        let out = g.route(&t, 0, &loads, 2.0).unwrap();
+        assert_eq!(out.decision.instance, InstanceId(1));
     }
 
     #[test]

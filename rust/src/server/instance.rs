@@ -71,6 +71,9 @@ pub fn run_instance(
     let mut active = ActiveDecodeSet::default();
     let mut last_beat = Instant::now();
     let mut rr = 0usize; // round-robin cursor over active decodes
+    // Decode→prefill backflow target; the leader re-points it on
+    // membership changes (drain/join/failure) via Msg::Rewire.
+    let mut backflow_to = cfg.backflow_to;
 
     loop {
         // Heartbeat.
@@ -127,10 +130,68 @@ pub fn run_instance(
                 if let Ok(groups) = import_groups(
                     &mut engine, &payload, n_blocks, t,
                 ) {
-                    let _ = engine.insert_suffix(
-                        &seq, groups, suffix_start_block, t,
-                    );
+                    if matches!(
+                        engine.insert_suffix(
+                            &seq, groups, suffix_start_block, t,
+                        ),
+                        Ok(true)
+                    ) {
+                        let _ = fabric.send(cfg.id, cfg.leader, Msg::Cached {
+                            instance: cfg.id,
+                            seq,
+                        });
+                    }
                 }
+            }
+            Some(Msg::MigrateOut { to, tokens }) => {
+                handle_migrate_out(
+                    &cfg, &mut engine, &fabric, to, &tokens, now(),
+                );
+            }
+            Some(Msg::KvMigrate {
+                from,
+                tokens,
+                payload,
+                n_blocks,
+                ..
+            }) => {
+                // Receiver half of the migration transfer
+                // (`elastic::executor::land_prefix`: on-demand alloc,
+                // land, transfer_with_insert), then ack the leader so it
+                // applies the ownership handoff. On failure the ack
+                // carries no tokens so the drain driver is not left
+                // waiting.
+                let t = now();
+                let landed = crate::elastic::executor::land_prefix(
+                    &mut engine.pool,
+                    &tokens,
+                    &payload,
+                    n_blocks,
+                    t,
+                );
+                let ack_tokens = match landed {
+                    Ok(()) => tokens,
+                    Err(e) => {
+                        log::error!("migrate land: {e:#}");
+                        vec![]
+                    }
+                };
+                let _ = fabric.send(cfg.id, cfg.leader, Msg::MigrateLanded {
+                    from,
+                    to: cfg.id,
+                    tokens: ack_tokens,
+                });
+            }
+            Some(Msg::Rewire { backflow_to: b }) => {
+                backflow_to = b;
+            }
+            Some(Msg::Drain) => {
+                // Fabric channels are FIFO per sender: every MigrateOut
+                // the leader queued before this marker has been handled
+                // above, so this ack is the migration barrier.
+                let _ = fabric.send(cfg.id, cfg.leader, Msg::DrainDone {
+                    from: cfg.id,
+                });
             }
             Some(Msg::Membership { dead, .. }) => {
                 // §4.4: release anything owned by dead peers. Local pools
@@ -143,7 +204,10 @@ pub fn run_instance(
             }
             Some(Msg::Token { .. })
             | Some(Msg::Finished { .. })
-            | Some(Msg::Heartbeat { .. }) => {} // leader-bound; ignore
+            | Some(Msg::Heartbeat { .. })
+            | Some(Msg::Cached { .. })
+            | Some(Msg::MigrateLanded { .. })
+            | Some(Msg::DrainDone { .. }) => {} // leader-bound; ignore
             None => {}
         }
 
@@ -175,7 +239,9 @@ pub fn run_instance(
             };
             if finished {
                 let a = active.jobs.swap_remove(rr);
-                finish_decode(&cfg, &mut engine, &fabric, a, now());
+                finish_decode(
+                    &cfg, &mut engine, &fabric, a, backflow_to, now(),
+                );
             } else {
                 rr += 1;
             }
@@ -202,6 +268,51 @@ fn import_groups(
         groups.push_group(c);
     }
     Ok(groups)
+}
+
+/// Donor half of one migration task — [`crate::elastic::executor::
+/// export_prefix`] (pin-during-transfer, DRAM swap-in, serialize) plus
+/// the fabric ship. On any failure — including holding none of the
+/// prefix — the leader is acked directly with an empty
+/// [`Msg::MigrateLanded`] so drain progress never stalls.
+fn handle_migrate_out(
+    cfg: &InstanceConfig,
+    engine: &mut Engine,
+    fabric: &Fabric<Msg>,
+    to: InstanceId,
+    tokens: &[u32],
+    t: f64,
+) {
+    let mut sent = false;
+    match crate::elastic::executor::export_prefix(&mut engine.pool, tokens, t)
+    {
+        Ok(Some(e)) => {
+            let calls = cfg
+                .transfer_mode
+                .network_calls(engine.pool.geometry(), e.tokens)
+                .max(1);
+            let msg = Msg::KvMigrate {
+                from: cfg.id,
+                tokens: tokens[..e.tokens].to_vec(),
+                payload: e.payload,
+                n_blocks: e.n_blocks,
+                calls,
+            };
+            match fabric.send(cfg.id, to, msg) {
+                Ok(_) => sent = true,
+                Err(e) => log::warn!("migrate to {to} failed: {e}"),
+            }
+        }
+        Ok(None) => {}
+        Err(e) => log::error!("migrate export: {e:#}"),
+    }
+    if !sent {
+        let _ = fabric.send(cfg.id, cfg.leader, Msg::MigrateLanded {
+            from: cfg.id,
+            to,
+            tokens: vec![],
+        });
+    }
 }
 
 fn handle_dispatch(
@@ -278,8 +389,17 @@ fn handle_dispatch(
             if let Err(e) = fabric.send(cfg.id, d, msg) {
                 log::error!("handoff to {d} failed: {e}");
             }
-            if let Err(e) = engine.retire_prefill(&req.prompt, pf, t) {
-                log::error!("retire_prefill: {e:#}");
+            match engine.retire_prefill(&req.prompt, pf, t) {
+                Ok(()) => {
+                    // Response path (Fig 6): tell the GS this prefill
+                    // instance now caches the prompt — the prompt-tree
+                    // policy and drain-time migration both read this.
+                    let _ = fabric.send(cfg.id, cfg.leader, Msg::Cached {
+                        instance: cfg.id,
+                        seq: req.prompt.clone(),
+                    });
+                }
+                Err(e) => log::error!("retire_prefill: {e:#}"),
             }
         }
     }
@@ -332,6 +452,7 @@ fn finish_decode(
     engine: &mut Engine,
     fabric: &Fabric<Msg>,
     mut a: ActiveDecode,
+    backflow_to: Option<InstanceId>,
     t: f64,
 ) {
     let rid = a.req.id;
@@ -403,8 +524,9 @@ fn finish_decode(
             suffix_start_block: suffix_start,
             calls,
         };
-        // Target: the leader-designated paired prefill instance.
-        if let Some(p) = cfg.backflow_to {
+        // Target: the leader-designated paired prefill instance
+        // (rewired live on membership changes).
+        if let Some(p) = backflow_to {
             if let Err(e) = fabric.send(cfg.id, p, msg) {
                 log::warn!("backflow to {p} failed: {e}");
             }

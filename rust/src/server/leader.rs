@@ -5,21 +5,24 @@
 //! tokens) and collect streamed responses with full request metrics.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::cluster::ClusterManager;
 use crate::config::Config;
+use crate::elastic::delta::DeltaEvent;
+use crate::elastic::lifecycle::Lifecycle;
+use crate::elastic::planner::{plan_migration, PlannerConfig, Recipient};
 use crate::engine::{DisaggMilestone, Request, SamplingParams};
 use crate::mempool::{BlockGeometry, InstanceId};
 use crate::metrics::{Metrics, RequestRecord};
 use crate::net::{Fabric, LinkModel};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::cost_model::OperatorCostModel;
-use crate::scheduler::prompt_tree::InstanceKind;
+use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
 use crate::server::instance::{run_instance, InstanceConfig};
 use crate::server::message::Msg;
@@ -56,6 +59,9 @@ struct Pending {
     session: u64,
     sampling: SamplingParams,
     dispatched_to: InstanceId,
+    /// Decode pairing (disaggregated dispatch) — a drain of the decode
+    /// instance must wait for this request too.
+    decode_on: Option<InstanceId>,
 }
 
 struct Shared {
@@ -63,18 +69,59 @@ struct Shared {
     cv: Condvar,
 }
 
+/// Progress of one in-flight drain (keyed by the draining instance).
+#[derive(Debug, Default)]
+struct DrainProgress {
+    /// Migration tasks the leader queued.
+    expected: usize,
+    /// `MigrateLanded` acks received (success or failure).
+    landed: usize,
+    /// Acks that actually carried a prefix (landed + indexed).
+    landed_prefixes: usize,
+    /// Token-blocks those successful acks covered.
+    landed_blocks: usize,
+    /// `DrainDone` barrier received.
+    done: bool,
+}
+
+/// What a completed [`ServeCluster::drain`] moved. Migrated figures
+/// count prefixes that actually *landed* (acked by the receiver), not
+/// what the planner scheduled — a failed task shows up as the
+/// planned-vs-migrated gap.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainReport {
+    /// Hot prefixes that landed on a receiver and were indexed.
+    pub migrated_prefixes: usize,
+    /// Token-blocks those prefixes covered.
+    pub migrated_blocks: usize,
+    /// Migration tasks the planner scheduled.
+    pub planned_prefixes: usize,
+    /// Cold/shallow token-blocks dropped with the instance.
+    pub dropped_blocks: usize,
+    /// Token-blocks already replicated on an Active peer.
+    pub replicated_blocks: usize,
+}
+
 pub struct ServeCluster {
     fabric: Fabric<Msg>,
     gs: Mutex<GlobalScheduler>,
     cm: Mutex<ClusterManager>,
     shared: Arc<Shared>,
-    instances: Vec<(InstanceId, InstanceKind)>,
+    /// Live roster (grows on `join`, shrinks on `drain`).
+    instances: RwLock<Vec<(InstanceId, InstanceKind)>>,
+    lifecycle: Mutex<Lifecycle>,
+    /// In-flight drains (instance → progress).
+    drains: Mutex<HashMap<InstanceId, DrainProgress>>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_rid: AtomicU64,
+    /// Next instance id for scale-up joins.
+    next_iid: AtomicU32,
     started: Instant,
     tokenizer: Tokenizer,
     opts: ServeOptions,
     metrics: Mutex<Metrics>,
+    runtime: Arc<ModelRuntime>,
+    geom: BlockGeometry,
     /// Decode pairing for disaggregated dispatch (round-robin).
     decode_rr: AtomicU64,
 }
@@ -139,9 +186,11 @@ impl ServeCluster {
             specs.push((InstanceId(id), InstanceKind::Colocated));
             id += 1;
         }
+        let mut lifecycle = Lifecycle::new();
         for &(iid, kind) in &specs {
             gs.add_instance(iid, kind);
             cm.register(iid, kind, 0.0);
+            lifecycle.join(iid, kind).expect("fresh roster");
         }
 
         let epoch = Instant::now();
@@ -191,18 +240,27 @@ impl ServeCluster {
             }));
         }
 
+        // Threads are up: the whole seed roster goes Active.
+        for &(iid, _) in &specs {
+            lifecycle.activate(iid).expect("seed roster joins once");
+        }
         let cluster = Arc::new(ServeCluster {
             fabric,
             gs: Mutex::new(gs),
             cm: Mutex::new(cm),
             shared,
-            instances: specs,
+            next_iid: AtomicU32::new(id),
+            instances: RwLock::new(specs),
+            lifecycle: Mutex::new(lifecycle),
+            drains: Mutex::new(HashMap::new()),
             handles: Mutex::new(handles),
             next_rid: AtomicU64::new(1),
             started: epoch,
             tokenizer: Tokenizer::new(runtime.meta.vocab as u32),
             opts,
             metrics: Mutex::new(Metrics::default()),
+            runtime,
+            geom,
             decode_rr: AtomicU64::new(0),
         });
 
@@ -298,6 +356,49 @@ impl ServeCluster {
                 Msg::Heartbeat { from } => {
                     self.cm.lock().unwrap().heartbeat(from, self.now());
                 }
+                Msg::Cached { instance, seq } => {
+                    // Response path for prefill-side caching (retire
+                    // after handoff, backflow suffix) — keeps prefill
+                    // candidates visible to the prompt-tree policy and
+                    // gives the migration planner a real inventory.
+                    if !seq.is_empty() {
+                        self.gs.lock().unwrap().record_cached(
+                            instance,
+                            &seq,
+                            self.now(),
+                        );
+                    }
+                }
+                Msg::MigrateLanded { from, to, tokens } => {
+                    // Ownership re-points atomically: the receiver gains
+                    // the prefix and the donor's claim retires in one
+                    // delta — routing never sees it as lost. Empty
+                    // tokens (failed/no-op task) only advance progress.
+                    let now = self.now();
+                    let blocks = tokens.len() / self.geom.block_tokens;
+                    self.gs.lock().unwrap().trees.apply_delta(
+                        &DeltaEvent::Handoff {
+                            from,
+                            to,
+                            tokens,
+                            now,
+                        },
+                    );
+                    if let Some(p) = self.drains.lock().unwrap().get_mut(&from)
+                    {
+                        p.landed += 1;
+                        if blocks > 0 {
+                            p.landed_prefixes += 1;
+                            p.landed_blocks += blocks;
+                        }
+                    }
+                }
+                Msg::DrainDone { from } => {
+                    if let Some(p) = self.drains.lock().unwrap().get_mut(&from)
+                    {
+                        p.done = true;
+                    }
+                }
                 Msg::Shutdown => return,
                 other => log::debug!("leader ignoring {other:?}"),
             }
@@ -312,12 +413,15 @@ impl ServeCluster {
         log::warn!("instances failed: {dead:?}");
         {
             let mut gs = self.gs.lock().unwrap();
+            let mut lc = self.lifecycle.lock().unwrap();
             for d in dead {
                 gs.trees.remove_instance(*d);
+                lc.force_decommission(*d);
             }
         }
         let epoch = self.cm.lock().unwrap().epoch();
-        for &(iid, _) in &self.instances {
+        let roster = self.instances.read().unwrap().clone();
+        for &(iid, _) in &roster {
             if !dead.contains(&iid) {
                 let _ = self.fabric.send(LEADER, iid, Msg::Membership {
                     epoch,
@@ -325,18 +429,24 @@ impl ServeCluster {
                 });
             }
         }
-        // Re-dispatch in-flight requests that were on dead instances.
+        // Re-dispatch in-flight requests that were on dead instances —
+        // prefill side or decode pairing.
         let retry: Vec<(u64, Vec<u32>, u64, SamplingParams)> = {
             let p = self.shared.pending.lock().unwrap();
             p.iter()
                 .filter(|(_, e)| {
-                    !e.done && dead.contains(&e.dispatched_to)
+                    !e.done
+                        && (dead.contains(&e.dispatched_to)
+                            || e.decode_on
+                                .is_some_and(|d| dead.contains(&d)))
                 })
                 .map(|(rid, e)| {
                     (*rid, e.prompt.clone(), e.session, e.sampling)
                 })
                 .collect()
         };
+        // Surviving decode instances must stop backflowing to the dead.
+        self.rewire_backflow();
         for (rid, prompt, session, sampling) in retry {
             log::info!("re-dispatching rid={rid} after failure");
             {
@@ -385,6 +495,7 @@ impl ServeCluster {
                 session,
                 sampling,
                 dispatched_to: InstanceId(0),
+                decode_on: None,
             });
         }
         self.dispatch(rid, prompt, session, sampling)?;
@@ -394,15 +505,20 @@ impl ServeCluster {
     fn dispatch(&self, rid: u64, prompt: Vec<u32>, session: u64,
                 sampling: SamplingParams) -> Result<()> {
         let now = self.now();
-        let alive: Vec<InstanceId> = self
-            .instances
-            .iter()
-            .filter(|(i, _)| self.cm.lock().unwrap().is_alive(*i))
-            .map(|(i, _)| *i)
-            .collect();
+        let roster = self.instances.read().unwrap().clone();
+        let alive: Vec<InstanceId> = {
+            let cm = self.cm.lock().unwrap();
+            roster
+                .iter()
+                .filter(|(i, _)| cm.is_alive(*i))
+                .map(|(i, _)| *i)
+                .collect()
+        };
         let outcome = {
             let mut gs = self.gs.lock().unwrap();
-            // Loads: approximate by in-flight request counts per instance.
+            // Loads: in-flight prompt tokens per instance, plus the
+            // capacity-pressure estimate from the global tree's cached-
+            // block counters (Eq. 1 discounts churning cache holders).
             let pend = self.shared.pending.lock().unwrap();
             let mut queued: HashMap<InstanceId, usize> = HashMap::new();
             for e in pend.values() {
@@ -411,10 +527,18 @@ impl ServeCluster {
                         e.prompt.len();
                 }
             }
+            let pressures: HashMap<InstanceId, f64> = roster
+                .iter()
+                .map(|&(i, _)| (i, self.pressure_estimate(&gs.trees, i)))
+                .collect();
             gs.route(&prompt, session, &|id| InstanceLoad {
                 queued_tokens: queued.get(&id).copied().unwrap_or(0),
                 queued_cached_ratio: 0.0,
                 running: 0,
+                capacity_pressure: pressures
+                    .get(&id)
+                    .copied()
+                    .unwrap_or(0.0),
             }, now)?
         };
         let target = outcome.decision.instance;
@@ -422,18 +546,23 @@ impl ServeCluster {
             alive.contains(&target),
             "routed to dead instance {target}"
         );
+        debug_assert!(
+            !self.gs.lock().unwrap().trees.is_draining(target),
+            "routed to draining instance {target}"
+        );
         // Decode pairing for prefill-only targets: round-robin over
-        // alive decode-only instances.
-        let decode_to = if self
-            .instances
+        // alive, routable (non-draining) decode-only instances.
+        let decode_to = if roster
             .iter()
             .any(|(i, k)| *i == target && *k == InstanceKind::PrefillOnly)
         {
-            let decs: Vec<InstanceId> = self
-                .instances
+            let lc = self.lifecycle.lock().unwrap();
+            let decs: Vec<InstanceId> = roster
                 .iter()
                 .filter(|(i, k)| {
-                    *k == InstanceKind::DecodeOnly && alive.contains(i)
+                    *k == InstanceKind::DecodeOnly
+                        && alive.contains(i)
+                        && lc.is_routable(*i)
                 })
                 .map(|(i, _)| *i)
                 .collect();
@@ -447,6 +576,7 @@ impl ServeCluster {
             let mut p = self.shared.pending.lock().unwrap();
             if let Some(e) = p.get_mut(&rid) {
                 e.dispatched_to = target;
+                e.decode_on = decode_to;
             }
         }
         let req = Request {
@@ -496,13 +626,299 @@ impl ServeCluster {
         self.fabric.stats()
     }
 
-    pub fn instances(&self) -> &[(InstanceId, InstanceKind)] {
-        &self.instances
+    /// Current roster snapshot (grows on [`Self::join`], shrinks on
+    /// [`Self::drain`]).
+    pub fn instances(&self) -> Vec<(InstanceId, InstanceKind)> {
+        self.instances.read().unwrap().clone()
+    }
+
+    /// Lifecycle state of an instance (None for unknown ids).
+    pub fn lifecycle_state(
+        &self,
+        id: InstanceId,
+    ) -> Option<crate::elastic::InstanceState> {
+        self.lifecycle.lock().unwrap().state(id)
+    }
+
+    /// Recompute the decode→prefill backflow pairing (round-robin over
+    /// routable prefill-only instances) and push it to every routable
+    /// decode-only instance. Called after any membership change (drain,
+    /// join, failure) so milestone-3 backflow never keeps targeting a
+    /// gone instance — and a freshly joined prefill instance starts
+    /// receiving its share.
+    fn rewire_backflow(&self) {
+        let roster = self.instances.read().unwrap().clone();
+        let (prefills, decodes): (Vec<InstanceId>, Vec<InstanceId>) = {
+            let lc = self.lifecycle.lock().unwrap();
+            (
+                roster
+                    .iter()
+                    .filter(|(i, k)| {
+                        *k == InstanceKind::PrefillOnly && lc.is_routable(*i)
+                    })
+                    .map(|(i, _)| *i)
+                    .collect(),
+                roster
+                    .iter()
+                    .filter(|(i, k)| {
+                        *k == InstanceKind::DecodeOnly && lc.is_routable(*i)
+                    })
+                    .map(|(i, _)| *i)
+                    .collect(),
+            )
+        };
+        for (idx, d) in decodes.iter().enumerate() {
+            let target = if prefills.is_empty() {
+                None
+            } else {
+                Some(prefills[idx % prefills.len()])
+            };
+            let _ = self.fabric.send(LEADER, *d, Msg::Rewire {
+                backflow_to: target,
+            });
+        }
+    }
+
+    /// Capacity-pressure estimate from the GS's view: token-blocks the
+    /// global tree believes the instance caches, as a fraction of its
+    /// configured HBM capacity. An *estimate* — the GS never sees local
+    /// evictions — but the same best-effort bound the TTL already
+    /// leans on (§6 Discussion).
+    fn pressure_estimate(
+        &self,
+        trees: &GlobalPromptTrees,
+        id: InstanceId,
+    ) -> f64 {
+        let per = self.geom.blocks_per_token_block().max(1);
+        let cap = self.opts.config.mempool.hbm_blocks.max(1);
+        ((trees.cached_blocks(id) * per) as f64 / cap as f64).min(1.0)
+    }
+
+    /// Scale up: spawn a fresh instance of `kind` and make it routable.
+    /// Lifecycle: `Joining → Active`; the fused tree starts it with an
+    /// empty view, so the prompt-tree policy warms it organically (or
+    /// migration rebalances onto it).
+    pub fn join(&self, kind: InstanceKind) -> Result<InstanceId> {
+        let id = InstanceId(self.next_iid.fetch_add(1, Ordering::SeqCst));
+        self.lifecycle
+            .lock()
+            .unwrap()
+            .join(id, kind)
+            .map_err(|e| anyhow::anyhow!("join {id}: {e}"))?;
+        let cfgc = &self.opts.config;
+        let icfg = InstanceConfig {
+            id,
+            kind,
+            leader: LEADER,
+            context_caching: cfgc.mempool.context_caching,
+            milestone: self.opts.milestone,
+            transfer_mode: cfgc.engine.transfer_mode,
+            max_batch: cfgc.engine.max_batch,
+            heartbeat_every: Duration::from_secs_f64(
+                cfgc.cluster.heartbeat_ms / 1e3,
+            ),
+            geom: self.geom,
+            hbm_blocks: cfgc.mempool.hbm_blocks,
+            dram_blocks: cfgc.mempool.dram_blocks,
+            index_ttl_s: cfgc.mempool.index_ttl_s,
+            // Assigned by the rewire broadcast below, which sees the
+            // whole (post-join) fleet through the lifecycle filter.
+            backflow_to: None,
+            epoch: self.started,
+        };
+        let rt = self.runtime.clone();
+        let fab = self.fabric.clone();
+        let ep = self.fabric.attach(id);
+        let h = std::thread::spawn(move || run_instance(icfg, rt, fab, ep));
+        self.handles.lock().unwrap().push(h);
+        // Visibility order matters against concurrent dispatches, which
+        // snapshot the roster *before* routing: roster + membership
+        // first, the scheduler's routing set last — so by the time the
+        // tree can choose this instance, every dispatch snapshot
+        // already considers it alive.
+        self.instances.write().unwrap().push((id, kind));
+        self.cm.lock().unwrap().register(id, kind, self.now());
+        self.lifecycle
+            .lock()
+            .unwrap()
+            .activate(id)
+            .map_err(|e| anyhow::anyhow!("activate {id}: {e}"))?;
+        self.gs.lock().unwrap().add_instance(id, kind);
+        self.rewire_backflow();
+        log::info!("instance {id} joined as {kind:?}");
+        Ok(id)
+    }
+
+    /// Scale down gracefully: `Active → Draining → Decommissioned` with
+    /// live KV migration. The instance leaves the routing set
+    /// immediately; the migration planner ships its hot, deep cached
+    /// prefixes to Active peers over the fabric (3-step transfer with
+    /// pin-during-transfer); ownership re-points via handoff deltas as
+    /// each prefix lands; in-flight requests finish normally; only then
+    /// is the instance shut down and removed. Blocks until done or
+    /// `timeout`.
+    pub fn drain(&self, id: InstanceId, timeout: Duration)
+                 -> Result<DrainReport> {
+        let kind = self
+            .instances
+            .read()
+            .unwrap()
+            .iter()
+            .find(|(i, _)| *i == id)
+            .map(|(_, k)| *k)
+            .context("unknown instance")?;
+        // Refuse before any state changes: draining the last routable
+        // prefill-capable instance would leave nothing to serve (or
+        // receive the migration), and draining the last decode peer
+        // would strand every prefill-only instance's dispatch.
+        if kind.runs_prefill() {
+            let lc = self.lifecycle.lock().unwrap();
+            anyhow::ensure!(
+                lc.active_where(|k| k.runs_prefill())
+                    .iter()
+                    .any(|r| *r != id),
+                "cannot drain {id}: no Active prefill-capable peer"
+            );
+        } else {
+            let needs_decode = self
+                .instances
+                .read()
+                .unwrap()
+                .iter()
+                .any(|(_, k)| *k == InstanceKind::PrefillOnly);
+            if needs_decode {
+                let lc = self.lifecycle.lock().unwrap();
+                anyhow::ensure!(
+                    lc.active_where(|k| k == InstanceKind::DecodeOnly)
+                        .iter()
+                        .any(|r| *r != id),
+                    "cannot drain {id}: prefill-only instances need a \
+                     decode peer"
+                );
+            }
+        }
+        self.lifecycle
+            .lock()
+            .unwrap()
+            .begin_drain(id)
+            .map_err(|e| anyhow::anyhow!("drain {id}: {e}"))?;
+        let now = self.now();
+        // Stop routing to it and plan while its view is intact.
+        let plan = {
+            let mut gs = self.gs.lock().unwrap();
+            gs.trees.set_draining(id, true);
+            let lc = self.lifecycle.lock().unwrap();
+            let recipients: Vec<Recipient> = lc
+                .active_where(|k| k.runs_prefill())
+                .into_iter()
+                .filter(|r| *r != id)
+                .map(|rid| Recipient {
+                    id: rid,
+                    pressure: self.pressure_estimate(&gs.trees, rid),
+                })
+                .collect();
+            plan_migration(
+                &gs.trees,
+                id,
+                now,
+                &recipients,
+                &PlannerConfig::default(),
+            )
+        };
+        let expected = plan.tasks.len();
+        self.drains.lock().unwrap().insert(id, DrainProgress {
+            expected,
+            ..Default::default()
+        });
+        for task in &plan.tasks {
+            self.fabric
+                .send(LEADER, id, Msg::MigrateOut {
+                    to: task.to,
+                    tokens: task.tokens.clone(),
+                })
+                .map_err(|e| anyhow::anyhow!("migrate-out: {e}"))?;
+        }
+        self.fabric
+            .send(LEADER, id, Msg::Drain)
+            .map_err(|e| anyhow::anyhow!("drain barrier: {e}"))?;
+        // Wait: every migration landed, the barrier acked, and no
+        // in-flight request still prefilling OR decoding here (zero
+        // request loss).
+        let deadline = Instant::now() + timeout;
+        loop {
+            let migrated = {
+                let d = self.drains.lock().unwrap();
+                let p = d.get(&id).context("drain state lost")?;
+                p.done && p.landed >= p.expected
+            };
+            let idle = {
+                let pend = self.shared.pending.lock().unwrap();
+                !pend.values().any(|e| {
+                    !e.done
+                        && (e.dispatched_to == id || e.decode_on == Some(id))
+                })
+            };
+            if migrated && idle {
+                break;
+            }
+            if Instant::now() >= deadline {
+                // Abort, don't wedge: restore the instance to Active.
+                // Handoffs already applied stay applied — the receivers
+                // really hold those prefixes; the donor resumes serving
+                // with whatever it still caches.
+                self.drains.lock().unwrap().remove(&id);
+                self.gs.lock().unwrap().trees.set_draining(id, false);
+                let _ = self.lifecycle.lock().unwrap().abort_drain(id);
+                anyhow::bail!(
+                    "drain timeout for {id}: drain aborted, instance \
+                     restored to Active"
+                );
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // Snapshot what actually landed before tearing state down.
+        let (landed_prefixes, landed_blocks) = {
+            let d = self.drains.lock().unwrap();
+            let p = d.get(&id).context("drain state lost")?;
+            (p.landed_prefixes, p.landed_blocks)
+        };
+        // Decommission: stop the thread, clear membership + ownership.
+        let _ = self.fabric.send(LEADER, id, Msg::Shutdown);
+        self.fabric.detach(id);
+        self.cm.lock().unwrap().deregister(id);
+        self.gs
+            .lock()
+            .unwrap()
+            .trees
+            .apply_delta(&DeltaEvent::Leave { instance: id });
+        self.lifecycle
+            .lock()
+            .unwrap()
+            .decommission(id)
+            .map_err(|e| anyhow::anyhow!("decommission {id}: {e}"))?;
+        self.instances.write().unwrap().retain(|(i, _)| *i != id);
+        self.drains.lock().unwrap().remove(&id);
+        // Decode instances whose backflow pointed at the drained
+        // instance get a surviving target (or None).
+        self.rewire_backflow();
+        log::info!(
+            "instance {id} decommissioned: {landed_prefixes}/{expected} \
+             prefixes migrated ({landed_blocks} blocks), {} blocks dropped",
+            plan.dropped_blocks
+        );
+        Ok(DrainReport {
+            migrated_prefixes: landed_prefixes,
+            migrated_blocks: landed_blocks,
+            planned_prefixes: expected,
+            dropped_blocks: plan.dropped_blocks,
+            replicated_blocks: plan.replicated_blocks,
+        })
     }
 
     /// Graceful shutdown: stop instances and the collector.
     pub fn shutdown(&self) {
-        for &(iid, _) in &self.instances {
+        let roster = self.instances.read().unwrap().clone();
+        for &(iid, _) in &roster {
             let _ = self.fabric.send(LEADER, iid, Msg::Shutdown);
         }
         let _ = self.fabric.send(LEADER, LEADER, Msg::Shutdown);

@@ -61,6 +61,54 @@ pub enum Msg {
     },
     /// Instance → leader: liveness.
     Heartbeat { from: InstanceId },
+    /// Instance → leader: response-path cache report (paper Fig 6
+    /// right) for tokens cached *outside* a decode retirement — prefill
+    /// retire after a disaggregated handoff, backflow suffix insert.
+    /// Without it the GS would only ever learn what decode instances
+    /// cache (via `Finished`), leaving prefill candidates invisible to
+    /// the prompt-tree policy and the migration planner.
+    Cached {
+        instance: InstanceId,
+        seq: Vec<u32>,
+    },
+    /// Leader → draining donor: ship the cached prefix `tokens` to `to`
+    /// (one migration-plan task; the donor pins, exports, and sends a
+    /// [`Msg::KvMigrate`]).
+    MigrateOut {
+        to: InstanceId,
+        tokens: Vec<u32>,
+    },
+    /// Donor → receiver: migrated prefix KV (`transfer_with_insert`
+    /// over the fabric; receiver allocates on demand, inserts, and acks
+    /// the leader with [`Msg::MigrateLanded`]).
+    KvMigrate {
+        from: InstanceId,
+        tokens: Vec<u32>,
+        payload: Vec<f32>,
+        n_blocks: usize,
+        calls: usize,
+    },
+    /// Receiver → leader: the prefix landed and is indexed — apply the
+    /// ownership handoff. (Also sent by the donor itself with empty
+    /// `tokens` when it had nothing to ship, so drain progress never
+    /// stalls.)
+    MigrateLanded {
+        from: InstanceId,
+        to: InstanceId,
+        tokens: Vec<u32>,
+    },
+    /// Leader → decode instance: membership changed — send milestone-3
+    /// decode-KV backflow to this prefill instance from now on (`None`
+    /// disables backflow when no prefill peer remains).
+    Rewire {
+        backflow_to: Option<InstanceId>,
+    },
+    /// Leader → instance: all migration tasks have been queued; answer
+    /// with [`Msg::DrainDone`] once they are processed (FIFO order makes
+    /// this a barrier).
+    Drain,
+    /// Draining instance → leader: migration tasks processed.
+    DrainDone { from: InstanceId },
     /// Leader → instances: membership change (epoch-stamped).
     Membership {
         epoch: u64,
@@ -74,7 +122,8 @@ impl WireCost for Msg {
     fn wire_cost(&self) -> Option<(usize, usize, bool, bool)> {
         match self {
             Msg::KvHandoff { payload, calls, .. }
-            | Msg::KvBackflow { payload, calls, .. } => {
+            | Msg::KvBackflow { payload, calls, .. }
+            | Msg::KvMigrate { payload, calls, .. } => {
                 Some((payload.len() * 4, (*calls).max(1), false, false))
             }
             _ => None,
@@ -116,6 +165,37 @@ impl std::fmt::Debug for Msg {
                 .field("epoch", epoch)
                 .field("dead", dead)
                 .finish(),
+            Msg::Cached { instance, seq } => f
+                .debug_struct("Cached")
+                .field("instance", instance)
+                .field("seq", &seq.len())
+                .finish(),
+            Msg::MigrateOut { to, tokens } => f
+                .debug_struct("MigrateOut")
+                .field("to", to)
+                .field("tokens", &tokens.len())
+                .finish(),
+            Msg::KvMigrate {
+                from, n_blocks, ..
+            } => f
+                .debug_struct("KvMigrate")
+                .field("from", from)
+                .field("n_blocks", n_blocks)
+                .finish(),
+            Msg::MigrateLanded { from, to, tokens } => f
+                .debug_struct("MigrateLanded")
+                .field("from", from)
+                .field("to", to)
+                .field("tokens", &tokens.len())
+                .finish(),
+            Msg::Rewire { backflow_to } => f
+                .debug_struct("Rewire")
+                .field("backflow_to", backflow_to)
+                .finish(),
+            Msg::Drain => write!(f, "Drain"),
+            Msg::DrainDone { from } => {
+                f.debug_struct("DrainDone").field("from", from).finish()
+            }
             Msg::Shutdown => write!(f, "Shutdown"),
         }
     }
@@ -140,6 +220,21 @@ mod tests {
             calls: 2,
         };
         assert_eq!(kv.wire_cost(), Some((4000, 2, false, false)));
+        let mig = Msg::KvMigrate {
+            from: InstanceId(1),
+            tokens: vec![],
+            payload: vec![0.0; 500],
+            n_blocks: 1,
+            calls: 4,
+        };
+        assert_eq!(mig.wire_cost(), Some((2000, 4, false, false)));
+        assert!(Msg::Drain.wire_cost().is_none());
+        assert!(Msg::MigrateOut {
+            to: InstanceId(0),
+            tokens: vec![1]
+        }
+        .wire_cost()
+        .is_none());
         let d = Msg::Dispatch {
             req: Request {
                 id: 1,

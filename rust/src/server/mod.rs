@@ -14,5 +14,5 @@ pub mod instance;
 pub mod leader;
 pub mod message;
 
-pub use leader::{ClientHandle, ServeCluster, ServeOptions};
+pub use leader::{ClientHandle, DrainReport, ServeCluster, ServeOptions};
 pub use message::Msg;

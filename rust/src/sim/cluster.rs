@@ -2,6 +2,9 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
+use crate::elastic::delta::DeltaEvent;
+use crate::elastic::lifecycle::InstanceState;
+use crate::elastic::planner::{plan_migration, PlannerConfig, Recipient};
 use crate::engine::DisaggMilestone;
 use crate::mempool::{
     BlockGeometry, InstanceId, RadixIndex, TransferMode,
@@ -33,6 +36,26 @@ pub struct SimConfig {
     pub max_batch: usize,
     /// Global-tree TTL seconds (0 = off).
     pub tree_ttl: f64,
+    /// Scripted elasticity events (drain / join) on the virtual clock.
+    pub fleet: Vec<FleetEvent>,
+}
+
+/// A scripted fleet change in the discrete-event simulation.
+#[derive(Clone, Debug)]
+pub struct FleetEvent {
+    pub at: f64,
+    pub op: FleetOp,
+}
+
+#[derive(Clone, Debug)]
+pub enum FleetOp {
+    /// Begin draining instance `inst` (index into the fleet): routing
+    /// stops immediately, hot cached prefixes migrate to Active peers
+    /// when `migrate` is set (the naive scale-down baseline drops them),
+    /// in-flight work completes, then the instance decommissions.
+    Drain { inst: usize, migrate: bool },
+    /// A new instance joins the fleet and becomes routable.
+    Join { kind: InstanceKind },
 }
 
 impl Default for SimConfig {
@@ -57,6 +80,7 @@ impl Default for SimConfig {
             hbm_blocks: 4096,
             max_batch: 16,
             tree_ttl: 300.0,
+            fleet: vec![],
         }
     }
 }
@@ -70,6 +94,11 @@ pub struct SimReport {
     pub wire_seconds: f64,
     pub evicted_blocks: u64,
     pub sim_seconds: f64,
+    /// Token-blocks shipped by drain-time migration.
+    pub migrated_token_blocks: u64,
+    /// Token-blocks a scale-down dropped (cold tails, or everything
+    /// under a naive decommission).
+    pub dropped_token_blocks: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -117,6 +146,15 @@ struct Instance {
     /// Receive-side call overhead accrued since the last decode
     /// iteration; charged to the next iteration (engine contention).
     pending_recv_tax: f64,
+    /// Lifecycle state (elasticity): Draining instances receive no new
+    /// routes but finish their work; Decommissioned ones are gone.
+    state: InstanceState,
+    /// Outstanding drain-migration transfers still on the wire.
+    pending_migrations: usize,
+    /// Requests routed here for decode whose KV has not arrived yet
+    /// (still prefilling elsewhere or on the wire) — a draining decode
+    /// instance must wait these out before decommissioning.
+    expected_arrivals: usize,
 }
 
 impl Instance {
@@ -135,7 +173,15 @@ impl Instance {
             evicted_blocks: 0,
             wire_free: 0.0,
             pending_recv_tax: 0.0,
+            state: InstanceState::Active,
+            pending_migrations: 0,
+            expected_arrivals: 0,
         }
+    }
+
+    fn pressure(&self) -> f64 {
+        (self.index_blocks as f64 / self.capacity_blocks.max(1) as f64)
+            .min(1.0)
     }
 
     /// Insert tokens into the local index (capacity-enforced LRU).
@@ -186,6 +232,14 @@ enum Ev {
     IterDone { inst: usize, rids: Vec<u64> },
     /// Transferred prompt KV landed on decode instance.
     KvArrive { inst: usize, job: Job },
+    /// Scripted fleet change (drain / join).
+    Fleet { op: FleetOp },
+    /// A drain-migration transfer landed on `to`: index + handoff.
+    MigrateArrive {
+        from: usize,
+        to: usize,
+        tokens: Vec<u32>,
+    },
 }
 
 pub struct Simulation {
@@ -257,6 +311,10 @@ impl Simulation {
                 });
             }
         }
+        // Seed the scripted elasticity events.
+        for ev in &cfg.fleet {
+            q.push(ev.at, Ev::Fleet { op: ev.op.clone() });
+        }
         let ctx = spec
             .sessions
             .iter()
@@ -314,6 +372,10 @@ impl Simulation {
                     }
                     self.on_kv_arrive(now, inst, job)
                 }
+                Ev::Fleet { op } => self.on_fleet(now, op),
+                Ev::MigrateArrive { from, to, tokens } => {
+                    self.on_migrate_arrive(now, from, to, tokens)
+                }
             }
         }
         self.report.sim_seconds = self.q.now();
@@ -345,6 +407,7 @@ impl Simulation {
                 queued_tokens: inst.queued_tokens,
                 queued_cached_ratio: 0.0,
                 running: inst.active.len(),
+                capacity_pressure: inst.pressure(),
             }
         };
         let out = self
@@ -352,8 +415,15 @@ impl Simulation {
             .route(&prompt, session as u64, &loads, now)
             .expect("sim cluster has prefill-capable instances");
         let p_idx = out.decision.instance.0 as usize;
-        // Decode instance: least-loaded decode-only (disaggregated), or
-        // the same instance (colocated).
+        // Acceptance invariant: the fused tree must never hand a route
+        // to a non-Active (Draining/Decommissioned) instance.
+        assert_eq!(
+            self.instances[p_idx].state,
+            InstanceState::Active,
+            "routed to non-Active instance {p_idx}"
+        );
+        // Decode instance: least-loaded Active decode-only
+        // (disaggregated), or the same instance (colocated).
         let decode_inst = if self.cfg.decode_instances > 0
             && self.instances[p_idx].kind == InstanceKind::PrefillOnly
         {
@@ -361,7 +431,10 @@ impl Simulation {
                 self.instances
                     .iter()
                     .enumerate()
-                    .filter(|(_, i)| i.kind == InstanceKind::DecodeOnly)
+                    .filter(|(_, i)| {
+                        i.kind == InstanceKind::DecodeOnly
+                            && i.state == InstanceState::Active
+                    })
                     .min_by_key(|(_, i)| {
                         i.active.len() + i.pending_decode.len()
                     })
@@ -394,10 +467,175 @@ impl Simulation {
             wire_done: 0.0,
             recv_tax: 0.0,
         };
+        if let Some(d) = decode_inst {
+            self.instances[d].expected_arrivals += 1;
+        }
         let inst = &mut self.instances[p_idx];
         inst.queued_tokens += job.prompt.len();
         inst.prefill_q.push_back(job);
         self.q.push(now, Ev::Start { inst: p_idx });
+    }
+
+    /// Scripted elasticity: drain (graceful scale-down with optional
+    /// migration) or join (scale-up).
+    fn on_fleet(&mut self, now: f64, op: FleetOp) {
+        match op {
+            FleetOp::Join { kind } => {
+                let id = self.instances.len() as u32;
+                let inst = Instance::new(id, kind, &self.cfg);
+                self.gs.trees.apply_delta(&DeltaEvent::Join {
+                    instance: InstanceId(id),
+                    kind,
+                });
+                self.instances.push(inst);
+            }
+            FleetOp::Drain { inst, migrate } => {
+                if self.instances[inst].state != InstanceState::Active {
+                    return;
+                }
+                // Mirror the live leader's refusal, but fail fast: a
+                // script draining the last routable prefill-capable
+                // instance is author error — surface it here instead of
+                // a confusing route panic at the next arrival.
+                if self.instances[inst].kind.runs_prefill() {
+                    assert!(
+                        self.instances.iter().enumerate().any(|(j, x)| {
+                            j != inst
+                                && x.state == InstanceState::Active
+                                && x.kind.runs_prefill()
+                        }),
+                        "fleet script drains the last Active \
+                         prefill-capable instance"
+                    );
+                }
+                self.instances[inst].state = InstanceState::Draining;
+                let id = self.instances[inst].id;
+                // Routing stops seeing it immediately; its view stays
+                // matchable for the planner.
+                self.gs.trees.apply_delta(&DeltaEvent::SetDraining {
+                    instance: id,
+                    draining: true,
+                });
+                if migrate {
+                    let recipients: Vec<Recipient> = self
+                        .instances
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, x)| {
+                            *j != inst
+                                && x.state == InstanceState::Active
+                                && x.kind.runs_prefill()
+                        })
+                        .map(|(_, x)| Recipient {
+                            id: x.id,
+                            pressure: x.pressure(),
+                        })
+                        .collect();
+                    let plan = plan_migration(
+                        &self.gs.trees,
+                        id,
+                        now,
+                        &recipients,
+                        &PlannerConfig::default(),
+                    );
+                    self.report.dropped_token_blocks +=
+                        plan.dropped_blocks as u64;
+                    // Each task serializes on the donor's outbound NCCL
+                    // thread, like any other KV transfer (paper §7).
+                    for task in plan.tasks {
+                        let ship = task.tokens.len();
+                        let bytes = self
+                            .cfg
+                            .transfer_mode
+                            .network_bytes(&self.cfg.geom, ship);
+                        let calls = self
+                            .cfg
+                            .transfer_mode
+                            .network_calls(&self.cfg.geom, ship);
+                        let wire = self
+                            .cfg
+                            .link
+                            .transfer_seconds(bytes, calls, false, false);
+                        self.report.wire_bytes += bytes as u64;
+                        self.report.wire_calls += calls as u64;
+                        self.report.wire_seconds += wire;
+                        let begin = now.max(self.instances[inst].wire_free);
+                        let done = begin + wire;
+                        self.instances[inst].wire_free = done;
+                        self.instances[inst].pending_migrations += 1;
+                        self.q.push(done, Ev::MigrateArrive {
+                            from: inst,
+                            to: task.to.0 as usize,
+                            tokens: task.tokens,
+                        });
+                    }
+                } else {
+                    // Naive decommission: the whole view dies with the
+                    // instance.
+                    self.report.dropped_token_blocks +=
+                        self.gs.trees.cached_blocks(id) as u64;
+                }
+                self.maybe_decommission(inst);
+            }
+        }
+    }
+
+    /// A migrated prefix landed: index it on the receiver and re-point
+    /// global-tree ownership atomically (routing never saw it as lost —
+    /// the donor stayed matchable until this handoff).
+    fn on_migrate_arrive(
+        &mut self,
+        now: f64,
+        from: usize,
+        to: usize,
+        tokens: Vec<u32>,
+    ) {
+        let geom = self.cfg.geom;
+        let blocks = tokens.len() / geom.block_tokens;
+        if self.instances[to].state != InstanceState::Active {
+            // Overlapping drains: the recipient left (or is leaving)
+            // since planning. The transfer is wasted — the donor keeps
+            // its claim until its own Leave; count the blocks dropped.
+            self.report.dropped_token_blocks += blocks as u64;
+            self.instances[from].pending_migrations -= 1;
+            self.maybe_decommission(from);
+            return;
+        }
+        self.instances[to].index_insert(&tokens, now, &geom);
+        let (fid, tid) = (self.instances[from].id, self.instances[to].id);
+        self.gs.trees.apply_delta(&DeltaEvent::Handoff {
+            from: fid,
+            to: tid,
+            tokens,
+            now,
+        });
+        self.report.migrated_token_blocks += blocks as u64;
+        self.instances[from].pending_migrations -= 1;
+        self.maybe_decommission(from);
+    }
+
+    /// A Draining instance with no outstanding migrations and no work
+    /// left (zero request loss) leaves the fleet for good.
+    fn maybe_decommission(&mut self, i: usize) {
+        let inst = &self.instances[i];
+        if inst.state != InstanceState::Draining
+            || inst.pending_migrations > 0
+            || inst.expected_arrivals > 0
+            || inst.busy
+            || !inst.prefill_q.is_empty()
+            || !inst.active.is_empty()
+            || !inst.pending_decode.is_empty()
+        {
+            return;
+        }
+        let id = inst.id;
+        self.instances[i].state = InstanceState::Decommissioned;
+        self.instances[i].index =
+            RadixIndex::new(self.cfg.geom.block_tokens, 0.0);
+        self.instances[i].index_blocks = 0;
+        self.gs
+            .trees
+            .apply_delta(&DeltaEvent::Leave { instance: id });
     }
 
     /// Serial-resource discipline: prefill-first, then decode iteration.
@@ -507,6 +745,10 @@ impl Simulation {
                 inst: i,
                 rids,
             });
+        } else {
+            // Idle: a draining instance with nothing left to do (and no
+            // transfers in flight) can decommission now.
+            self.maybe_decommission(i);
         }
     }
 
@@ -552,6 +794,7 @@ impl Simulation {
     }
 
     fn on_kv_arrive(&mut self, now: f64, d: usize, mut job: Job) {
+        self.instances[d].expected_arrivals -= 1;
         // Decode-side caching of the transferred prompt KV
         // (transfer_with_insert — milestone step 3).
         if self.cfg.caching && self.cfg.milestone.decode_caches() {
@@ -618,10 +861,13 @@ impl Simulation {
             }
         }
         // Step 5: decode KV flows back to the prefill instance so its
-        // cache grows turn over turn.
+        // cache grows turn over turn (unless that instance has left or
+        // is leaving the fleet).
         if on_decode_only
             && self.cfg.caching
             && self.cfg.milestone.decode_to_prefill()
+            && self.instances[job.rec.prefill_instance as usize].state
+                == InstanceState::Active
         {
             let p = job.rec.prefill_instance as usize;
             // Incremental: only the decode-produced suffix ships back.
@@ -839,6 +1085,86 @@ mod tests {
         let rep = Simulation::new(cfg, spec, &plan).run();
         assert_eq!(rep.metrics.records.len(), total);
         assert!(rep.metrics.mean_cached_ratio() > 0.0);
+    }
+
+    #[test]
+    fn drain_with_migration_preserves_cache_and_completes_all() {
+        let drain_at = 6.0;
+        let mk = |migrate: bool| SimConfig {
+            prefill_instances: 4,
+            decode_instances: 2,
+            colocated_instances: 0,
+            fleet: vec![FleetEvent {
+                at: drain_at,
+                op: FleetOp::Drain { inst: 0, migrate },
+            }],
+            ..disagg(true)
+        };
+        let post_ratio = |rep: &SimReport| {
+            let post: Vec<_> = rep
+                .metrics
+                .records
+                .iter()
+                .filter(|r| r.scheduled > drain_at)
+                .collect();
+            assert!(!post.is_empty());
+            post.iter()
+                .map(|r| {
+                    r.cached_tokens as f64 / r.prompt_tokens.max(1) as f64
+                })
+                .sum::<f64>()
+                / post.len() as f64
+        };
+        let (spec, plan) = workload(60, 21);
+        let total = spec.total_requests();
+        let naive = Simulation::new(mk(false), spec.clone(), &plan).run();
+        let migr = Simulation::new(mk(true), spec, &plan).run();
+        // Zero request loss under both scale-downs (the in-sim assert
+        // also guarantees no post-drain route touched instance 0).
+        assert_eq!(naive.metrics.records.len(), total);
+        assert_eq!(migr.metrics.records.len(), total);
+        for rep in [&naive, &migr] {
+            for r in &rep.metrics.records {
+                if r.scheduled > drain_at {
+                    assert_ne!(r.prefill_instance, 0, "routed to drained");
+                }
+            }
+        }
+        assert!(migr.migrated_token_blocks > 0, "nothing migrated");
+        assert_eq!(naive.migrated_token_blocks, 0);
+        assert!(naive.dropped_token_blocks > 0);
+        // Migration must preserve fleet-wide hit rate after the drain.
+        let (rm, rn) = (post_ratio(&migr), post_ratio(&naive));
+        assert!(
+            rm > rn,
+            "migrate-on-drain should beat naive decommission: {rm} vs {rn}"
+        );
+    }
+
+    #[test]
+    fn join_mid_run_takes_load() {
+        let cfg = SimConfig {
+            prefill_instances: 2,
+            decode_instances: 1,
+            colocated_instances: 0,
+            fleet: vec![FleetEvent {
+                at: 3.0,
+                op: FleetOp::Join {
+                    kind: InstanceKind::PrefillOnly,
+                },
+            }],
+            ..disagg(true)
+        };
+        let (spec, plan) = workload(30, 22);
+        let total = spec.total_requests();
+        let rep = Simulation::new(cfg, spec, &plan).run();
+        assert_eq!(rep.metrics.records.len(), total);
+        // The joined instance (id 3: after 2 prefill + 1 decode) must
+        // end up serving some of the post-join traffic.
+        assert!(
+            rep.metrics.records.iter().any(|r| r.prefill_instance == 3),
+            "joined instance never routed to"
+        );
     }
 
     #[test]

@@ -6,9 +6,12 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use memserve::config::Config;
+use memserve::elastic::InstanceState;
 use memserve::engine::{DisaggMilestone, SamplingParams};
+use memserve::mempool::InstanceId;
 use memserve::runtime::artifacts::artifacts_available;
 use memserve::runtime::ModelRuntime;
+use memserve::scheduler::prompt_tree::InstanceKind;
 use memserve::server::{ServeCluster, ServeOptions};
 
 use once_cell::sync::Lazy;
@@ -181,6 +184,69 @@ fn parallel_sessions_interleave() {
     let rid = c.submit(prompts[2].clone(), 9, sampling(5)).unwrap();
     let (g, _) = c.collect(rid, T).unwrap();
     assert_eq!(g, outs[2]);
+    c.shutdown();
+}
+
+#[test]
+fn drain_migrates_cache_and_join_scales_up() {
+    let Some(c) = start(config(2, 1, 0, true), DisaggMilestone::PdCaching3)
+    else {
+        return;
+    };
+    // Warm one prefill instance's cache and learn which one served it.
+    let prompt = toks(64, 7);
+    let r1 = c.submit(prompt.clone(), 1, sampling(4)).unwrap();
+    let (g1, rec1) = c.collect(r1, T).unwrap();
+    let holder = InstanceId(rec1.prefill_instance);
+    assert_eq!(c.lifecycle_state(holder), Some(InstanceState::Active));
+    // Scale up, then drain the cache holder: its hot prefix must be
+    // migrated (really shipped over the fabric + re-indexed), not lost.
+    let newbie = c.join(InstanceKind::PrefillOnly).unwrap();
+    assert_eq!(c.lifecycle_state(newbie), Some(InstanceState::Active));
+    let report = c.drain(holder, T).unwrap();
+    assert!(report.migrated_prefixes >= 1, "nothing migrated: {report:?}");
+    assert!(report.migrated_blocks >= 4, "{report:?}");
+    assert_eq!(
+        c.lifecycle_state(holder),
+        Some(InstanceState::Decommissioned)
+    );
+    assert!(c.instances().iter().all(|(i, _)| *i != holder));
+    // The same prompt is still a fleet-wide cache hit, served by a
+    // survivor, with bit-identical greedy output (migrated KV intact).
+    let r2 = c.submit(prompt.clone(), 1, sampling(4)).unwrap();
+    let (g2, rec2) = c.collect(r2, T).unwrap();
+    assert_ne!(InstanceId(rec2.prefill_instance), holder);
+    assert!(
+        rec2.cached_tokens >= 48,
+        "cache lost across drain: {}",
+        rec2.cached_tokens
+    );
+    assert_eq!(g1, g2, "migrated KV changed generation");
+    c.shutdown();
+}
+
+#[test]
+fn drain_waits_for_inflight_requests() {
+    let Some(c) = start(config(2, 1, 0, true), DisaggMilestone::PdCaching3)
+    else {
+        return;
+    };
+    // Fire a batch, then immediately drain whichever instance serves
+    // session 0's request: zero request loss required.
+    let rids: Vec<u64> = (0..4)
+        .map(|i| c.submit(toks(48, 300 + i), i as u64, sampling(4)).unwrap())
+        .collect();
+    let victim = c.instances()[0].0;
+    c.drain(victim, T).unwrap();
+    for rid in rids {
+        let (g, _) = c.collect(rid, T).unwrap();
+        assert_eq!(g.len(), 4, "request lost across drain");
+    }
+    // New work keeps flowing on the shrunken fleet.
+    let r = c.submit(toks(32, 999), 9, sampling(3)).unwrap();
+    let (g, rec) = c.collect(r, T).unwrap();
+    assert_eq!(g.len(), 3);
+    assert_ne!(InstanceId(rec.prefill_instance), victim);
     c.shutdown();
 }
 
