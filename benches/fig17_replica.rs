@@ -1,0 +1,272 @@
+//! Fig 17 (repo-original): the replicated global scheduler.
+//!
+//! Part 1 (`fig17_replica`): route cost and delta-replication overhead
+//! vs replica count. Reads (the one-walk fleet match + Eq. 1 decision)
+//! are served round-robin across replicas — replicas of the same log
+//! prefix agree exactly, so R replicas give ~R× aggregate route
+//! throughput at unchanged per-route latency; writes pay one
+//! `apply_sync` (append + apply + fan-out + acks) per ownership delta.
+//!
+//! Part 2 (`fig17_failover`): failover blackout measured in routed
+//! requests. A scripted op stream (route + record) runs against the
+//! group and an uninterrupted single-tree reference; mid-stream the
+//! primary is crashed and a follower promoted. With followers caught up
+//! (`synced`), promotion catches up from retained log suffixes and the
+//! blackout is **zero** divergent route decisions — the acceptance bar.
+//! The `lagged` variant stops pumping before the crash, so deltas held
+//! only by the dead primary are honestly lost and the blackout is
+//! nonzero until re-records repair the view.
+//!
+//! Env knobs (used by the CI smoke job):
+//! * `MEMSERVE_FIG17_MODE` — `sweep` (part 1), `failover` (part 2),
+//!   anything else/unset runs both;
+//! * `MEMSERVE_FIG17_R` — comma-separated replica counts (default
+//!   `1,2,4,8`; failover uses each count ≥ 2).
+
+use std::time::Instant;
+
+use memserve::elastic::delta::DeltaEvent;
+use memserve::mempool::InstanceId;
+use memserve::replica::ReplicaGroup;
+use memserve::scheduler::cost_model::OperatorCostModel;
+use memserve::scheduler::policy::{decide, Candidate, Decision, PolicyKind};
+use memserve::scheduler::prompt_tree::InstanceKind;
+use memserve::util::bench::{black_box, time_adaptive, Table};
+
+const BT: usize = 16;
+const N_INSTANCES: u32 = 16;
+
+fn prompt(n: usize, seed: u32) -> Vec<u32> {
+    (0..n as u32)
+        .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 50_000)
+        .collect()
+}
+
+fn seed_group(r: usize) -> ReplicaGroup {
+    let mut g = ReplicaGroup::new(r, BT, 0.0, 256);
+    for i in 0..N_INSTANCES {
+        g.apply_sync(DeltaEvent::Join {
+            instance: InstanceId(i),
+            kind: InstanceKind::PrefillOnly,
+        });
+    }
+    // A hot fleet-wide 4K prompt plus per-instance bulk (fig15's
+    // regime), all through the replicated log.
+    let hot = prompt(4096, 1);
+    for i in 0..N_INSTANCES {
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(i),
+            tokens: hot.clone(),
+            now: 1.0,
+        });
+        for k in 0..4u32 {
+            g.apply_sync(DeltaEvent::Record {
+                instance: InstanceId(i),
+                tokens: prompt(4096, 1000 + i * 4 + k),
+                now: 1.0,
+            });
+        }
+    }
+    g
+}
+
+fn route_on(
+    g: &mut ReplicaGroup,
+    replica: usize,
+    tokens: &[u32],
+    buf: &mut Vec<(InstanceId, usize)>,
+    cost: &OperatorCostModel,
+    sid: u64,
+) -> Decision {
+    g.route_match(replica, tokens, buf);
+    let cands: Vec<Candidate> = buf
+        .iter()
+        .map(|&(id, matched)| Candidate {
+            instance: id,
+            queued_tokens: 0,
+            queued_cached_ratio: 0.0,
+            matched_tokens: matched,
+            pressure: 0.0,
+        })
+        .collect();
+    decide(PolicyKind::PromptTree, &cands, tokens.len(), sid, |x, y| {
+        cost.exec(x, y)
+    })
+}
+
+fn route_sweep(rs: &[usize]) {
+    let mut table = Table::new("fig17_replica", &[
+        "replicas",
+        "instances",
+        "route_us_mean",
+        "route_us_p99",
+        "delta_us_mean",
+        "est_routes_per_s",
+    ]);
+    println!(
+        "\n-- replicated GS: per-route cost (round-robin reads over R \
+         replicas) and per-delta replication cost --"
+    );
+    let cost = OperatorCostModel::paper_13b();
+    let hot = prompt(4096, 1);
+    for &r in rs {
+        let mut g = seed_group(r);
+        let live = g.live_indices();
+        let mut buf = vec![];
+        let mut rr = 0usize;
+        let mut route_t = time_adaptive(60.0, 100, || {
+            let replica = live[rr % live.len()];
+            rr += 1;
+            black_box(route_on(&mut g, replica, &hot, &mut buf, &cost, 7));
+        });
+        let mut k = 0u32;
+        let mut delta_t = time_adaptive(60.0, 100, || {
+            k += 1;
+            g.apply_sync(DeltaEvent::Record {
+                instance: InstanceId(k % N_INSTANCES),
+                tokens: prompt(256, 50_000 + k),
+                now: 2.0,
+            });
+        });
+        let (rm, dm) = (route_t.mean(), delta_t.mean());
+        let est = r as f64 * 1e6 / rm.max(1e-9);
+        table.row(vec![
+            r.to_string(),
+            N_INSTANCES.to_string(),
+            format!("{rm:.2}"),
+            format!("{:.2}", route_t.p99()),
+            format!("{dm:.2}"),
+            format!("{est:.0}"),
+        ]);
+        println!(
+            "  R={r}: route {rm:8.2}us  delta {dm:8.2}us  (~{est:.0} \
+             aggregate routes/s)"
+        );
+    }
+    table.finish();
+    println!(
+        "\nExpected shape: route_us flat in R (replicas serve reads \
+         independently — aggregate throughput scales ~R×); delta_us \
+         grows mildly with R (fan-out + acks per write)."
+    );
+}
+
+fn failover(rs: &[usize]) {
+    let mut table = Table::new("fig17_failover", &[
+        "replicas",
+        "variant",
+        "ops",
+        "failover_at",
+        "blackout_requests",
+        "promote_us",
+    ]);
+    println!(
+        "\n-- failover blackout: divergent route decisions after a \
+         primary crash (synced = catch-up complete; lagged = deltas \
+         held only by the dead primary are lost) --"
+    );
+    let cost = OperatorCostModel::paper_13b();
+    let n_ops = 1200usize;
+    let crash_at = n_ops / 2;
+    for &r in rs {
+        if r < 2 {
+            continue; // failover needs a follower
+        }
+        for variant in ["synced", "lagged"] {
+            let mut g = seed_group(r);
+            // The uninterrupted reference: same deltas, one tree.
+            let mut reference = seed_group(1);
+            let mut buf = vec![];
+            let mut rbuf = vec![];
+            let mut blackout = 0usize;
+            let mut promote_us = 0.0;
+            let mut crashed = false;
+            for op in 0..n_ops {
+                let sid = (op % 64) as u64;
+                let p = prompt(1024, 7 + sid as u32);
+                if op == crash_at {
+                    let t0 = Instant::now();
+                    g.fail_primary().expect("a follower survives");
+                    promote_us = t0.elapsed().as_secs_f64() * 1e6;
+                    crashed = true;
+                }
+                let pi = g.primary_index();
+                let d = route_on(&mut g, pi, &p, &mut buf, &cost, sid);
+                let dref = route_on(
+                    &mut reference,
+                    0,
+                    &p,
+                    &mut rbuf,
+                    &cost,
+                    sid,
+                );
+                if crashed && d != dref {
+                    blackout += 1;
+                }
+                // Response path: the chosen instance caches the prompt.
+                let ev = DeltaEvent::Record {
+                    instance: d.instance,
+                    tokens: p,
+                    now: 3.0 + op as f64 * 1e-3,
+                };
+                let evr = DeltaEvent::Record {
+                    instance: dref.instance,
+                    tokens: prompt(1024, 7 + sid as u32),
+                    now: 3.0 + op as f64 * 1e-3,
+                };
+                reference.apply_sync(evr);
+                if variant == "lagged" && !crashed && op + 64 >= crash_at {
+                    // The last window before the crash never leaves the
+                    // primary: appended, applied locally, not pumped.
+                    g.apply(ev);
+                } else {
+                    g.apply_sync(ev);
+                }
+            }
+            if variant == "synced" {
+                assert_eq!(
+                    blackout, 0,
+                    "synced failover must lose zero route decisions"
+                );
+            }
+            table.row(vec![
+                r.to_string(),
+                variant.into(),
+                n_ops.to_string(),
+                crash_at.to_string(),
+                blackout.to_string(),
+                format!("{promote_us:.1}"),
+            ]);
+            println!(
+                "  R={r} {variant:6}: blackout {blackout:4} of \
+                 {} post-crash routes, promotion {promote_us:.1}us",
+                n_ops - crash_at
+            );
+        }
+    }
+    table.finish();
+    println!(
+        "\nExpected shape: synced blackout = 0 (promotion catch-up \
+         restores the exact tree); lagged blackout > 0 but bounded by \
+         the unpumped window, decaying as re-records repair the view."
+    );
+}
+
+fn main() {
+    let mode = std::env::var("MEMSERVE_FIG17_MODE").unwrap_or_default();
+    let rs: Vec<usize> = std::env::var("MEMSERVE_FIG17_R")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4, 8]);
+    if mode != "failover" {
+        route_sweep(&rs);
+    }
+    if mode != "sweep" {
+        failover(&rs);
+    }
+}

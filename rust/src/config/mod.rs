@@ -79,6 +79,11 @@ pub struct SchedulerConfig {
     pub tree_ttl_s: f64,
     /// Use the transfer-vs-recompute rule (paper Eq. 2).
     pub transfer_decision: bool,
+    /// GS follower replicas (0 = unreplicated). Each runs a full copy
+    /// of the fused prompt tree fed by the sequenced delta log; a
+    /// primary crash promotes the most-caught-up follower with its
+    /// locality state intact (`ServeCluster::fail_gs_primary`).
+    pub gs_replicas: usize,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -136,6 +141,7 @@ impl Default for Config {
                 policy: PolicyKind::PromptTree,
                 tree_ttl_s: 300.0,
                 transfer_decision: true,
+                gs_replicas: 0,
             },
             engine: EngineConfig {
                 max_seq: 512,
@@ -240,6 +246,9 @@ impl Config {
             "scheduler.transfer_decision" => {
                 self.scheduler.transfer_decision = v.as_bool().ok_or_else(bad)?
             }
+            "scheduler.gs_replicas" => {
+                self.scheduler.gs_replicas = v.as_usize().ok_or_else(bad)?
+            }
             "engine.max_seq" => self.engine.max_seq = v.as_usize().ok_or_else(bad)?,
             "engine.max_new_tokens" => {
                 self.engine.max_new_tokens = v.as_usize().ok_or_else(bad)?
@@ -326,6 +335,7 @@ impl Config {
         m.insert("fabric.bandwidth_gbps".into(), c.fabric.bandwidth_gbps.to_string());
         m.insert("fabric.communicators".into(), c.fabric.communicators.to_string());
         m.insert("scheduler.policy".into(), c.scheduler.policy.name().into());
+        m.insert("scheduler.gs_replicas".into(), c.scheduler.gs_replicas.to_string());
         m.insert("engine.transfer_mode".into(), c.engine.transfer_mode.name().into());
         m.insert("workload.kind".into(), c.workload.kind.clone());
         m.insert("workload.rate".into(), c.workload.rate.to_string());

@@ -78,12 +78,13 @@ pub enum DeltaEvent {
     },
 }
 
-/// An append-only event log — the natural unit of replication for a
-/// future multi-replica global scheduler (replicas consuming the same
-/// stream converge to the same ownership state). Nothing in the serving
-/// path writes one yet: today it is the tested seed of that protocol,
-/// kept deliberately minimal until the replicated-GS work (ROADMAP)
-/// gives it a transport.
+/// An append-only event log — the unit of replication for the
+/// multi-replica global scheduler (replicas consuming the same stream
+/// converge to the same ownership state). The sequenced transport over
+/// it — monotonic seqs, per-replica ack cursors, bounded windows, gap
+/// re-request, snapshot-gated truncation — lives in
+/// [`crate::replica::log`]; this type stays the minimal unsequenced
+/// form for tests and local accounting.
 #[derive(Clone, Debug, Default)]
 pub struct DeltaLog {
     events: Vec<DeltaEvent>,

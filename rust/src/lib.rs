@@ -15,6 +15,8 @@
 //! * [`scheduler`] — global prompt trees, routing policies, cost model.
 //! * [`elastic`] — instance lifecycle, live KV migration planning and
 //!   execution, ownership delta protocol (the pool's *elasticity*).
+//! * [`replica`] — replicated global scheduler: sequenced delta-log
+//!   transport, tree snapshots, follower catch-up and failover.
 //! * [`cluster`] — membership, heartbeats, failure handling (§4.4).
 //! * [`sim`] — discrete-event simulator for request-rate sweeps.
 //! * [`workload`] — ShareGPT/LooGLE/ReAct-like synthetic workloads (§8.2).
@@ -28,6 +30,7 @@ pub mod engine;
 pub mod mempool;
 pub mod metrics;
 pub mod net;
+pub mod replica;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

@@ -67,6 +67,11 @@ pub struct MemPool {
     dram: Arena,
     index: RadixIndex,
     stats: PoolStats,
+    /// Token prefixes the LRU evicted since the last
+    /// [`Self::take_evicted_prefixes`] — the honest-eviction signal the
+    /// instance loop reports upstream as `DeltaEvent::Expire` so the
+    /// global scheduler stops believing in KV this pool dropped.
+    evict_reports: Vec<Vec<u32>>,
 }
 
 impl MemPool {
@@ -85,6 +90,7 @@ impl MemPool {
             dram: Arena::new(dram_blocks, geom.floats_per_block(), materialize),
             index: RadixIndex::new(geom.block_tokens, index_ttl_s),
             stats: PoolStats::default(),
+            evict_reports: vec![],
         }
     }
 
@@ -269,13 +275,45 @@ impl MemPool {
         Ok(n)
     }
 
+    /// Undrained eviction reports beyond this collapse to one
+    /// conservative whole-view expiry (empty prefix): honest — the GS
+    /// may only *under*-believe — and bounded for pool users (benches,
+    /// embedders) that never call [`Self::take_evicted_prefixes`].
+    const MAX_EVICT_REPORTS: usize = 1024;
+
     /// Evict `n` token-blocks LRU-first; returns token-blocks evicted.
+    /// Each victim's token prefix is queued for
+    /// [`Self::take_evicted_prefixes`].
     pub fn evict(&mut self, n_token_blocks: usize) -> usize {
-        let freed = self.index.evict_lru(n_token_blocks);
+        let (freed, mut prefixes) =
+            self.index.evict_lru_report(n_token_blocks);
+        if self.evict_reports.len() + prefixes.len()
+            > Self::MAX_EVICT_REPORTS
+        {
+            // Nobody is draining reports (or eviction outpaces the
+            // drain): collapse to "this instance's whole view is
+            // stale". An empty Expire prefix clears the instance's
+            // entire global-tree claim — a superset of every queued
+            // report, so correctness (no over-belief) is preserved
+            // while memory stays bounded.
+            self.evict_reports.clear();
+            self.evict_reports.push(vec![]);
+        } else {
+            self.evict_reports.append(&mut prefixes);
+        }
         let n = freed.len();
         self.stats.evicted_blocks += n as u64;
         let _ = self.free_mem(&freed);
         n / self.geom.blocks_per_token_block().max(1)
+    }
+
+    /// Drain the token prefixes evicted since the last call (each the
+    /// `DeltaEvent::Expire` shape: that prefix and every extension is
+    /// gone from this pool). The instance loop reports them to the
+    /// leader so global-tree routing stops counting on dropped KV —
+    /// replacing TTL guesswork with the honest signal (§6 Discussion).
+    pub fn take_evicted_prefixes(&mut self) -> Vec<Vec<u32>> {
+        std::mem::take(&mut self.evict_reports)
     }
 
     /// TTL expiry pass.

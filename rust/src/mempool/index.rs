@@ -989,6 +989,30 @@ impl RadixIndex {
     /// Returns freed addresses; may free fewer than requested if the
     /// tree runs dry.
     pub fn evict_lru(&mut self, want_token_blocks: usize) -> Vec<BlockAddr> {
+        self.evict_lru_inner(want_token_blocks, None)
+    }
+
+    /// [`Self::evict_lru`] that also surfaces *what* was evicted: for
+    /// each victim leaf, the token prefix whose last block is the leaf
+    /// edge's first block. That is exactly the shape of a
+    /// `DeltaEvent::Expire` — "this prefix and every extension of it is
+    /// gone, proper prefixes and siblings survive" — so the instance
+    /// can report honest evictions to the global scheduler instead of
+    /// leaving it to TTL guessing (paper §6 Discussion).
+    pub fn evict_lru_report(
+        &mut self,
+        want_token_blocks: usize,
+    ) -> (Vec<BlockAddr>, Vec<Vec<u32>>) {
+        let mut prefixes = vec![];
+        let freed = self.evict_lru_inner(want_token_blocks, Some(&mut prefixes));
+        (freed, prefixes)
+    }
+
+    fn evict_lru_inner(
+        &mut self,
+        want_token_blocks: usize,
+        mut report: Option<&mut Vec<Vec<u32>>>,
+    ) -> Vec<BlockAddr> {
         let mut freed = vec![];
         let mut freed_blocks = 0;
         while freed_blocks < want_token_blocks {
@@ -997,6 +1021,15 @@ impl RadixIndex {
                 continue; // stale lazy-deleted entry
             }
             let leaf = e.node;
+            if let Some(out) = report.as_deref_mut() {
+                // Path up to and including the leaf edge's FIRST block:
+                // releasing that block (+ extensions) upstream mirrors
+                // dropping the whole leaf here.
+                let mut path = self.path_of(leaf);
+                let edge_len = self.nodes[leaf].edge.len();
+                path.truncate(path.len() - edge_len + self.block_tokens);
+                out.push(path);
+            }
             let blocks = self.nodes[leaf].blocks(self.block_tokens);
             freed_blocks += blocks;
             self.token_blocks -= blocks;
@@ -1007,6 +1040,21 @@ impl RadixIndex {
             self.refresh_lru(parent); // parent may be a leaf now
         }
         freed
+    }
+
+    /// Full token path from the root to (and including) `node`'s edge.
+    fn path_of(&self, node: usize) -> Vec<u32> {
+        let mut chain = vec![];
+        let mut cur = node;
+        while cur != ROOT {
+            chain.push(cur);
+            cur = self.nodes[cur].parent;
+        }
+        let mut out = vec![];
+        for &n in chain.iter().rev() {
+            out.extend_from_slice(&self.nodes[n].edge);
+        }
+        out
     }
 
     /// Addresses of the least-recently-used leaf groups satisfying
@@ -1258,6 +1306,35 @@ mod tests {
         // shared parent block.
         assert_eq!(freed, vec![addr(1)]);
         assert_eq!(idx.match_prefix(&short, 3.0).tokens, 4);
+    }
+
+    #[test]
+    fn evict_lru_report_surfaces_expire_shaped_prefixes() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let abc: Vec<u32> = vec![1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3];
+        let ad: Vec<u32> = vec![1, 1, 1, 1, 9, 9, 9, 9];
+        idx.insert(&abc, &groups(0, 3), 1.0);
+        idx.insert(&ad, &groups(10, 2), 2.0);
+        // Victim: the B-C tail leaf (oldest). Its report is the path up
+        // to B's block — exactly what `prune_at`/`release_prefix` would
+        // take to mirror the eviction upstream.
+        let (freed, prefixes) = idx.evict_lru_report(1);
+        assert_eq!(freed.len(), 2, "B and C blocks freed");
+        assert_eq!(prefixes, vec![abc[..8].to_vec()]);
+        assert_eq!(idx.match_prefix(&abc, 3.0).tokens, 4);
+        assert_eq!(idx.match_prefix(&ad, 3.0).tokens, 8);
+        // Evicting the rest reports each leaf once; replaying the
+        // reports through prune_at on a twin empties it identically.
+        let mut twin = RadixIndex::new(BT, 0.0);
+        twin.insert(&abc, &groups(0, 3), 1.0);
+        twin.insert(&ad, &groups(10, 2), 2.0);
+        twin.prune_at(&abc[..8]);
+        let (_, rest) = idx.evict_lru_report(8);
+        for p in &rest {
+            twin.prune_at(p);
+        }
+        assert_eq!(idx.total_token_blocks(), 0);
+        assert_eq!(twin.total_token_blocks(), 0);
     }
 
     #[test]

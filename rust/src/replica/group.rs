@@ -1,0 +1,811 @@
+//! `ReplicaGroup` — one primary plus N follower replicas of the global
+//! prompt tree behind the sequenced delta log (ISSUE 4 tentpole,
+//! part 3).
+//!
+//! The deterministic in-process replication engine: the discrete-event
+//! simulator mirrors every ownership delta through it so a scripted GS
+//! crash can promote a follower mid-trace, `benches/fig17_replica.rs`
+//! measures route throughput and failover blackout on it, and the
+//! differential tests in this module pin the whole protocol stack
+//! (transport windowing, loss + re-request, snapshot bootstrap,
+//! promotion catch-up) against a log-order reference tree. The live
+//! server runs the same [`DeltaTransport`]/[`DeltaCursor`]/
+//! [`TreeSnapshot`] pieces over real fabric messages instead
+//! (`server/replica.rs`).
+//!
+//! Semantics:
+//!
+//! * **Writes** go to the primary: [`ReplicaGroup::apply`] applies the
+//!   delta to the primary's tree and appends it to the transport;
+//!   [`ReplicaGroup::pump`] ships sendable windows to followers, drains
+//!   their acks, and truncates the log behind the slowest replica.
+//! * **Reads** (route matching) are serveable from *any* live replica —
+//!   [`ReplicaGroup::route_match`] — because replicas of the same
+//!   prefix of the log agree exactly (a follower can at worst lag,
+//!   never diverge).
+//! * **Failover**: [`ReplicaGroup::fail_primary`] kills the primary and
+//!   promotes the most-caught-up follower; before it serves, promotion
+//!   *catches up* from the surviving replicas' retained log suffixes
+//!   (any entry some survivor applied is recoverable — entries only the
+//!   dead primary held are gone, which the bounded ack window keeps
+//!   small). The promoted replica's retained suffix seeds the new
+//!   transport so laggard followers resync from it.
+//! * **Late join**: [`ReplicaGroup::join_replica`] bootstraps a fresh
+//!   replica from a primary snapshot at the current log head, then
+//!   catches up on the delta suffix like any follower.
+
+use std::collections::VecDeque;
+
+use crate::elastic::delta::DeltaEvent;
+use crate::mempool::InstanceId;
+use crate::replica::log::{DeltaCursor, DeltaTransport, Ingest};
+use crate::replica::snapshot::TreeSnapshot;
+use crate::scheduler::prompt_tree::GlobalPromptTrees;
+
+struct Replica {
+    tree: GlobalPromptTrees,
+    cursor: DeltaCursor,
+    /// Applied suffix retained for peer catch-up after a primary
+    /// failure; `retained[i]` carries seq `retained_base + i`. Trimmed
+    /// in lockstep with the transport's truncation.
+    retained: VecDeque<DeltaEvent>,
+    retained_base: u64,
+}
+
+impl Replica {
+    fn retain(&mut self, seq: u64, ev: DeltaEvent) {
+        debug_assert_eq!(seq, self.retained_base + self.retained.len() as u64);
+        self.retained.push_back(ev);
+    }
+
+    fn retained_get(&self, seq: u64) -> Option<&DeltaEvent> {
+        seq.checked_sub(self.retained_base)
+            .and_then(|i| self.retained.get(i as usize))
+    }
+
+    fn trim_retained(&mut self, floor: u64) {
+        while self.retained_base < floor && !self.retained.is_empty() {
+            self.retained.pop_front();
+            self.retained_base += 1;
+        }
+    }
+}
+
+/// See module docs.
+pub struct ReplicaGroup {
+    replicas: Vec<Option<Replica>>,
+    primary: usize,
+    transport: DeltaTransport,
+    block_tokens: usize,
+    ttl: f64,
+    window: usize,
+    /// Deltas delivered to followers (diagnostics/benches).
+    delivered: u64,
+}
+
+impl ReplicaGroup {
+    /// A group of `n` replicas (primary = index 0, `n - 1` followers).
+    pub fn new(n: usize, block_tokens: usize, ttl: f64, window: usize)
+               -> Self {
+        assert!(n >= 1);
+        let mut transport = DeltaTransport::new(window);
+        let mut replicas = vec![];
+        for i in 0..n {
+            if i != 0 {
+                transport.register(i as u64, 0);
+            }
+            replicas.push(Some(Replica {
+                tree: GlobalPromptTrees::new(block_tokens, ttl),
+                cursor: DeltaCursor::new(),
+                retained: VecDeque::new(),
+                retained_base: 0,
+            }));
+        }
+        ReplicaGroup {
+            replicas,
+            primary: 0,
+            transport,
+            block_tokens,
+            ttl,
+            window,
+            delivered: 0,
+        }
+    }
+
+    /// Test hook: force fingerprint collisions on every replica tree.
+    /// Must run before any delta.
+    #[doc(hidden)]
+    pub fn set_fingerprint_mask(&mut self, mask: u64) {
+        for r in self.replicas.iter_mut().flatten() {
+            r.tree.set_fingerprint_mask(mask);
+        }
+    }
+
+    pub fn primary_index(&self) -> usize {
+        self.primary
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn is_live(&self, i: usize) -> bool {
+        self.replicas.get(i).is_some_and(|r| r.is_some())
+    }
+
+    pub fn live_indices(&self) -> Vec<usize> {
+        (0..self.replicas.len())
+            .filter(|&i| self.is_live(i))
+            .collect()
+    }
+
+    pub fn delivered(&self) -> u64 {
+        self.delivered
+    }
+
+    pub fn resends(&self) -> u64 {
+        self.transport.resends()
+    }
+
+    pub fn log_head(&self) -> u64 {
+        self.transport.next_seq()
+    }
+
+    pub fn retained_log_len(&self) -> usize {
+        self.transport.retained_len()
+    }
+
+    /// Sequences replica `i` has contiguously applied.
+    pub fn applied_seq(&self, i: usize) -> u64 {
+        if i == self.primary {
+            self.transport.next_seq()
+        } else {
+            self.replicas[i]
+                .as_ref()
+                .map(|r| r.cursor.expected())
+                .unwrap_or(0)
+        }
+    }
+
+    pub fn all_caught_up(&self) -> bool {
+        self.transport.all_caught_up()
+    }
+
+    /// Read access to replica `i`'s tree (panics if dead).
+    pub fn tree(&self, i: usize) -> &GlobalPromptTrees {
+        &self.replicas[i].as_ref().expect("dead replica").tree
+    }
+
+    /// Route-read from replica `i`: the one-walk fleet match (needs
+    /// `&mut` only for the tree's reusable scratch buffers).
+    pub fn route_match(
+        &mut self,
+        i: usize,
+        tokens: &[u32],
+        out: &mut Vec<(InstanceId, usize)>,
+    ) {
+        self.replicas[i]
+            .as_mut()
+            .expect("dead replica")
+            .tree
+            .match_into(tokens, out);
+    }
+
+    /// Apply one delta at the primary and append it to the log; ship it
+    /// with [`Self::pump`]. Returns the assigned sequence.
+    pub fn apply(&mut self, ev: DeltaEvent) -> u64 {
+        self.replicas[self.primary]
+            .as_mut()
+            .expect("primary dead — promote before writing")
+            .tree
+            .apply_delta(&ev);
+        self.transport.append(ev)
+    }
+
+    /// [`Self::apply`] + pump until every live follower confirms —
+    /// synchronous replication for deterministic callers (the sim).
+    pub fn apply_sync(&mut self, ev: DeltaEvent) -> u64 {
+        let seq = self.apply(ev);
+        let mut guard = 0;
+        while !self.transport.all_caught_up() {
+            self.pump();
+            guard += 1;
+            assert!(guard < 1_000_000, "replication failed to converge");
+        }
+        seq
+    }
+
+    /// Deliver every sendable window, reliably and in order.
+    pub fn pump(&mut self) {
+        self.pump_lossy(&mut |_, _| false);
+    }
+
+    /// Deliver sendable windows with fault injection: `drop(replica,
+    /// seq)` true drops that delivery on the floor (the entry is marked
+    /// sent, so only the receiver's gap re-request — an ack regression —
+    /// recovers it, exactly like a lost fabric message).
+    pub fn pump_lossy(&mut self, drop: &mut dyn FnMut(usize, u64) -> bool) {
+        let peers: Vec<u64> = self.transport.peers().collect();
+        for peer in peers {
+            let i = peer as usize;
+            if !self.is_live(i) {
+                continue;
+            }
+            let mut range = self.transport.sendable(peer);
+            if range.is_empty() && self.transport.lag(peer) > 0 {
+                // Nothing new to send but the peer is behind: the log
+                // tail was lost in flight (marked sent, never acked, no
+                // later entry to trigger a gap re-request). Pump doubles
+                // as the retransmit timer: rewind and re-offer.
+                self.transport.retransmit_unacked(peer);
+                range = self.transport.sendable(peer);
+            }
+            if range.is_empty() {
+                continue;
+            }
+            let mut acks: Vec<u64> = vec![];
+            for seq in range.clone() {
+                let ev = self
+                    .transport
+                    .get(seq)
+                    .expect("sendable entry retained")
+                    .clone();
+                if drop(i, seq) {
+                    continue;
+                }
+                self.delivered += 1;
+                let r = self.replicas[i].as_mut().unwrap();
+                match r.cursor.offer(seq, ev) {
+                    Ingest::Ready(evs) => {
+                        let first = r.cursor.expected() - evs.len() as u64;
+                        for (k, e) in evs.into_iter().enumerate() {
+                            r.tree.apply_delta(&e);
+                            r.retain(first + k as u64, e);
+                        }
+                        acks.push(r.cursor.expected());
+                    }
+                    Ingest::Buffered { resend_from } => {
+                        acks.push(resend_from);
+                    }
+                    Ingest::Duplicate => {}
+                }
+            }
+            self.transport.mark_sent(peer, range.end);
+            for a in acks {
+                self.transport.on_ack(peer, a);
+            }
+        }
+        // Truncate behind the slowest live replica; followers trim
+        // their retained suffixes in lockstep.
+        self.transport.truncate_below(self.transport.min_acked());
+        let floor = self.transport.first_retained();
+        for r in self.replicas.iter_mut().flatten() {
+            r.trim_retained(floor);
+        }
+    }
+
+    /// Kill replica `i` (crash injection). Killing the primary leaves
+    /// the group write-dead until [`Self::fail_primary`] promotes.
+    pub fn kill(&mut self, i: usize) {
+        self.replicas[i] = None;
+        self.transport.deregister(i as u64);
+    }
+
+    /// Crash the primary and promote the most-caught-up live follower
+    /// (ties break toward the lowest index). Before serving, the
+    /// promotee catches up from every survivor's retained suffix — any
+    /// delta that reached *some* follower survives the crash. Its own
+    /// retained suffix then seeds the new transport so laggards resync.
+    /// Returns the promoted index, or `None` when no follower survives.
+    pub fn fail_primary(&mut self) -> Option<usize> {
+        self.kill(self.primary);
+        let promoted = self
+            .live_indices()
+            .into_iter()
+            .max_by_key(|&i| {
+                (
+                    self.replicas[i].as_ref().unwrap().cursor.expected(),
+                    usize::MAX - i,
+                )
+            })?;
+        // Catch-up: pull contiguous entries beyond the promotee's
+        // cursor out of any survivor's retained log.
+        loop {
+            let need = self.replicas[promoted]
+                .as_ref()
+                .unwrap()
+                .cursor
+                .expected();
+            let mut found = None;
+            for i in self.live_indices() {
+                if let Some(ev) = self.replicas[i]
+                    .as_ref()
+                    .unwrap()
+                    .retained_get(need)
+                {
+                    found = Some(ev.clone());
+                    break;
+                }
+            }
+            let Some(ev) = found else { break };
+            let r = self.replicas[promoted].as_mut().unwrap();
+            match r.cursor.offer(need, ev) {
+                Ingest::Ready(evs) => {
+                    let first = r.cursor.expected() - evs.len() as u64;
+                    for (k, e) in evs.into_iter().enumerate() {
+                        r.tree.apply_delta(&e);
+                        r.retain(first + k as u64, e);
+                    }
+                }
+                _ => unreachable!("offer at the cursor is always ready"),
+            }
+        }
+        // Rebuild the transport around the promotee's retained suffix.
+        let p = self.replicas[promoted].as_mut().unwrap();
+        // Anything still buffered out-of-order at the promotee is an
+        // old-primary event beyond the surviving history — dead.
+        let head = p.cursor.expected();
+        p.cursor.purge_from(head);
+        let base = p.retained_base;
+        let mut transport = DeltaTransport::new(self.window);
+        transport.advance_base(base);
+        for ev in p.retained.iter() {
+            transport.append(ev.clone());
+        }
+        let head = transport.next_seq();
+        for i in 0..self.replicas.len() {
+            if i != promoted && self.is_live(i) {
+                let r = self.replicas[i].as_mut().unwrap();
+                // Sequences >= the new head will be reassigned to
+                // DIFFERENT events by the new primary; anything a
+                // laggard buffered from the dead primary there is stale
+                // and would silently diverge the replica when its
+                // contiguous run reaches it. Purge before re-serving.
+                r.cursor.purge_from(head);
+                let from = r.cursor.expected().max(base);
+                transport.register(i as u64, from);
+            }
+        }
+        self.transport = transport;
+        self.primary = promoted;
+        self.pump();
+        Some(promoted)
+    }
+
+    /// Extract the promoted (or any live) replica's tree, marking the
+    /// replica dead — the in-process convenience the simulator uses to
+    /// hand the promoted state to its serving scheduler.
+    pub fn extract_tree(&mut self, i: usize) -> GlobalPromptTrees {
+        self.transport.deregister(i as u64);
+        self.replicas[i]
+            .take()
+            .expect("cannot extract a dead replica")
+            .tree
+    }
+
+    /// Bootstrap a new follower from a primary snapshot at the log head
+    /// (snapshot + catch-up, the late-joiner path). Returns its index.
+    pub fn join_replica(&mut self) -> usize {
+        let seq = self.transport.next_seq();
+        let snap = TreeSnapshot::capture(
+            &self.replicas[self.primary]
+                .as_ref()
+                .expect("primary dead")
+                .tree,
+            seq,
+        );
+        let mut tree = GlobalPromptTrees::new(self.block_tokens, self.ttl);
+        snap.restore_into(&mut tree);
+        let mut cursor = DeltaCursor::new();
+        let ready = cursor.advance_to(seq);
+        debug_assert!(ready.is_empty());
+        let idx = self.replicas.len();
+        self.transport.register(idx as u64, seq);
+        self.replicas.push(Some(Replica {
+            tree,
+            cursor,
+            retained: VecDeque::new(),
+            retained_base: seq,
+        }));
+        idx
+    }
+
+    /// Snapshot the primary at the current log head.
+    pub fn snapshot(&self) -> TreeSnapshot {
+        TreeSnapshot::capture(
+            &self.replicas[self.primary]
+                .as_ref()
+                .expect("primary dead")
+                .tree,
+            self.transport.next_seq(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::policy::{decide, Candidate, PolicyKind};
+    use crate::scheduler::prompt_tree::InstanceKind;
+    use crate::util::proptest::proptest;
+
+    const BT: usize = 4;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 3 + seed).collect()
+    }
+
+    fn seed_instances(g: &mut ReplicaGroup, n: u32) {
+        for i in 0..n {
+            g.apply_sync(DeltaEvent::Join {
+                instance: InstanceId(i),
+                kind: InstanceKind::PrefillOnly,
+            });
+        }
+    }
+
+    fn matches_of(
+        g: &mut ReplicaGroup,
+        i: usize,
+        t: &[u32],
+    ) -> Vec<(InstanceId, usize)> {
+        let mut out = vec![];
+        g.route_match(i, t, &mut out);
+        out
+    }
+
+    #[test]
+    fn followers_converge_and_serve_reads() {
+        let mut g = ReplicaGroup::new(3, BT, 0.0, 8);
+        seed_instances(&mut g, 4);
+        let t = toks(12, 0);
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(2),
+            tokens: t.clone(),
+            now: 1.0,
+        });
+        let want = matches_of(&mut g, 0, &t);
+        assert_eq!(want[2], (InstanceId(2), 12));
+        for i in 1..3 {
+            assert_eq!(matches_of(&mut g, i, &t), want, "replica {i}");
+        }
+        assert!(g.all_caught_up());
+        // Log truncates behind the acked fleet.
+        assert_eq!(g.retained_log_len(), 0);
+    }
+
+    #[test]
+    fn lost_deliveries_recover_via_gap_rerequest() {
+        let mut g = ReplicaGroup::new(2, BT, 0.0, 4);
+        seed_instances(&mut g, 2);
+        for k in 0..10u32 {
+            g.apply(DeltaEvent::Record {
+                instance: InstanceId(k % 2),
+                tokens: toks(8, k),
+                now: k as f64,
+            });
+        }
+        // Drop every third delivery on the first pass.
+        let mut n = 0;
+        g.pump_lossy(&mut |_, _| {
+            n += 1;
+            n % 3 == 0
+        });
+        assert!(!g.all_caught_up(), "drops must leave a gap");
+        let mut guard = 0;
+        while !g.all_caught_up() {
+            g.pump();
+            guard += 1;
+            assert!(guard < 100);
+        }
+        assert!(g.resends() > 0, "recovery must have rewound the cursor");
+        let t = toks(8, 9);
+        assert_eq!(matches_of(&mut g, 1, &t), matches_of(&mut g, 0, &t));
+    }
+
+    #[test]
+    fn total_loss_at_log_tail_recovers_on_next_pump() {
+        // Lose EVERY delivery of the log tail: no later entry exists to
+        // trigger the receiver's gap re-request, so the sender's pump
+        // must retransmit unacked in-flight entries on its own.
+        let mut g = ReplicaGroup::new(2, BT, 0.0, 8);
+        seed_instances(&mut g, 2);
+        let t = toks(12, 5);
+        g.apply(DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: t.clone(),
+            now: 1.0,
+        });
+        g.pump_lossy(&mut |_, _| true);
+        assert!(!g.all_caught_up(), "everything was dropped");
+        let mut n = 0;
+        while !g.all_caught_up() {
+            g.pump();
+            n += 1;
+            assert!(n < 10, "pump must retransmit the lost tail");
+        }
+        assert!(g.resends() > 0);
+        assert_eq!(matches_of(&mut g, 1, &t), matches_of(&mut g, 0, &t));
+    }
+
+    #[test]
+    fn failover_promotes_most_caught_up_with_catch_up() {
+        let mut g = ReplicaGroup::new(3, BT, 0.0, 64);
+        seed_instances(&mut g, 3);
+        let hot = toks(16, 1);
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(1),
+            tokens: hot.clone(),
+            now: 1.0,
+        });
+        // Two more records: replica 2 sees both, replica 1 sees neither
+        // (lossy delivery to 1 only).
+        for k in 0..2u32 {
+            g.apply(DeltaEvent::Record {
+                instance: InstanceId(0),
+                tokens: toks(8, 50 + k),
+                now: 2.0,
+            });
+        }
+        g.pump_lossy(&mut |replica, _| replica == 1);
+        assert_eq!(g.applied_seq(2), g.log_head());
+        assert!(g.applied_seq(1) < g.log_head());
+        let reference = matches_of(&mut g, 0, &hot);
+        // Crash the primary: replica 2 must be promoted (most caught
+        // up), and after promotion its reads equal the old primary's.
+        let p = g.fail_primary().unwrap();
+        assert_eq!(p, 2);
+        assert_eq!(g.primary_index(), 2);
+        assert_eq!(matches_of(&mut g, 2, &hot), reference);
+        // The laggard follower resyncs from the promoted primary's
+        // retained suffix (catch-up served the gap, not the dead node).
+        let mut guard = 0;
+        while !g.all_caught_up() {
+            g.pump();
+            guard += 1;
+            assert!(guard < 100);
+        }
+        assert_eq!(matches_of(&mut g, 1, &hot), reference);
+        for k in 0..2u32 {
+            let t = toks(8, 50 + k);
+            assert_eq!(matches_of(&mut g, 1, &t), matches_of(&mut g, 2, &t));
+        }
+        // Writes continue through the new primary.
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(2),
+            tokens: toks(12, 99),
+            now: 3.0,
+        });
+        assert_eq!(
+            matches_of(&mut g, 1, &toks(12, 99)),
+            matches_of(&mut g, 2, &toks(12, 99))
+        );
+    }
+
+    #[test]
+    fn failover_purges_stale_buffered_entries_on_rebase() {
+        // A promotion rebases the log: sequences past the promoted
+        // replica's head are REUSED for different events. A laggard
+        // that buffered the dead primary's entries at those sequences
+        // must not apply them when its contiguous run arrives there.
+        let mut g = ReplicaGroup::new(3, BT, 0.0, 8);
+        seed_instances(&mut g, 2);
+        let first = g.apply(DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: toks(8, 100),
+            now: 1.0,
+        });
+        g.apply(DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: toks(8, 200), // the entry that dies with the primary
+            now: 1.0,
+        });
+        // Deliver out of order: both followers miss `first`, buffer the
+        // second — then the primary crashes before any resend.
+        g.pump_lossy(&mut |_, seq| seq == first);
+        let p = g.fail_primary().unwrap();
+        // The new primary writes different events at the reused seqs.
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(1),
+            tokens: toks(8, 300),
+            now: 2.0,
+        });
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(1),
+            tokens: toks(8, 400),
+            now: 2.0,
+        });
+        // The dead primary's seq-`first+1` record (seed 200) must exist
+        // NOWHERE; the survivor must match the new primary exactly.
+        for i in g.live_indices() {
+            assert_eq!(
+                g.tree(i).match_one(InstanceId(0), &toks(8, 200)),
+                0,
+                "replica {i} applied a stale pre-crash entry"
+            );
+            for seed in [300, 400] {
+                let t = toks(8, seed);
+                assert_eq!(
+                    g.tree(i).match_one(InstanceId(1), &t),
+                    g.tree(p).match_one(InstanceId(1), &t),
+                    "replica {i} diverged at seed {seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn late_joiner_bootstraps_from_snapshot_then_log() {
+        let mut g = ReplicaGroup::new(2, BT, 30.0, 16);
+        seed_instances(&mut g, 3);
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: toks(12, 0),
+            now: 1.0,
+        });
+        let j = g.join_replica();
+        assert_eq!(g.applied_seq(j), g.log_head(), "snapshot covers log");
+        // Deltas after the snapshot flow to the joiner like any
+        // follower.
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(1),
+            tokens: toks(12, 7),
+            now: 2.0,
+        });
+        for t in [toks(12, 0), toks(12, 7)] {
+            assert_eq!(matches_of(&mut g, j, &t), matches_of(&mut g, 0, &t));
+        }
+    }
+
+    /// ISSUE 4 satellite: the same delta stream through (a) the primary,
+    /// (b) a follower behind the lossy windowed transport, and (c) a
+    /// snapshot + catch-up late joiner yields identical route decisions
+    /// — matched vectors, policy decisions, and per-instance counters —
+    /// under the normal fingerprint and a collision-forcing 4-bit mask.
+    /// A mid-stream primary crash must preserve the property on the
+    /// promoted replica.
+    #[test]
+    fn prop_replicas_agree_with_primary_everywhere() {
+        for mask in [u64::MAX, 0xF] {
+            proptest(12, move |g| {
+                let ttl = 10.0;
+                let mut grp = ReplicaGroup::new(3, BT, ttl, 8);
+                grp.set_fingerprint_mask(mask);
+                let n_inst = 8 + g.usize(0, 8) as u32;
+                for i in 0..n_inst {
+                    let kind = match i % 4 {
+                        0 => InstanceKind::DecodeOnly,
+                        _ => InstanceKind::PrefillOnly,
+                    };
+                    grp.apply_sync(DeltaEvent::Join {
+                        instance: InstanceId(i),
+                        kind,
+                    });
+                }
+                let mut joiner: Option<usize> = None;
+                let mut now = 0.0;
+                let n_ops = g.usize(15, 40);
+                let crash_at = g.usize(5, n_ops);
+                for op in 0..n_ops {
+                    now += g.f64(0.1, 3.0);
+                    let len = g.usize(0, 5) * BT + g.usize(0, BT - 1);
+                    let t = g.vec_u32(len, 0, 3);
+                    let inst = InstanceId(g.u64(0, (n_inst - 1) as u64) as u32);
+                    let ev = match g.usize(0, 5) {
+                        0 | 1 => DeltaEvent::Record {
+                            instance: inst,
+                            tokens: t.clone(),
+                            now,
+                        },
+                        2 => DeltaEvent::Expire {
+                            instance: inst,
+                            prefix: t.clone(),
+                        },
+                        3 => DeltaEvent::Handoff {
+                            from: inst,
+                            to: InstanceId((inst.0 + 1) % n_inst),
+                            tokens: t.clone(),
+                            now,
+                        },
+                        4 => DeltaEvent::SetDraining {
+                            instance: inst,
+                            draining: g.bool(),
+                        },
+                        _ => DeltaEvent::Record {
+                            instance: inst,
+                            tokens: t.clone(),
+                            now,
+                        },
+                    };
+                    grp.apply(ev);
+                    // Lossy, windowed delivery with occasional drops;
+                    // convergence is forced only at comparison points.
+                    let p_drop = g.f64(0.0, 0.3);
+                    grp.pump_lossy(&mut |_, _| g.rng().chance(p_drop));
+                    if op == 5 && joiner.is_none() {
+                        // Force sync so the snapshot covers the stream,
+                        // then bootstrap the late joiner.
+                        while !grp.all_caught_up() {
+                            grp.pump();
+                        }
+                        joiner = Some(grp.join_replica());
+                    }
+                    if op == crash_at {
+                        while !grp.all_caught_up() {
+                            grp.pump();
+                        }
+                        grp.fail_primary().expect("followers survive");
+                    }
+                }
+                // Comparison point: fully synced, every live replica
+                // must agree on every route decision.
+                while !grp.all_caught_up() {
+                    grp.pump();
+                }
+                let p = grp.primary_index();
+                let probes: Vec<Vec<u32>> =
+                    (0..6).map(|_| g.vec_u32(4 * BT, 0, 3)).collect();
+                for t in &probes {
+                    let want = matches_of(&mut grp, p, t);
+                    let cands: Vec<Candidate> = want
+                        .iter()
+                        .map(|&(id, matched)| Candidate {
+                            instance: id,
+                            queued_tokens: (id.0 as usize * 37) % 256,
+                            queued_cached_ratio: 0.0,
+                            matched_tokens: matched,
+                            pressure: 0.0,
+                        })
+                        .collect();
+                    for i in grp.live_indices() {
+                        let got = matches_of(&mut grp, i, t);
+                        assert_eq!(got, want, "replica {i} diverged");
+                        if !got.is_empty() {
+                            let c2: Vec<Candidate> = got
+                                .iter()
+                                .map(|&(id, matched)| Candidate {
+                                    instance: id,
+                                    queued_tokens: (id.0 as usize * 37)
+                                        % 256,
+                                    queued_cached_ratio: 0.0,
+                                    matched_tokens: matched,
+                                    pressure: 0.0,
+                                })
+                                .collect();
+                            for policy in [
+                                PolicyKind::LeastLoad,
+                                PolicyKind::PromptTree,
+                            ] {
+                                assert_eq!(
+                                    decide(policy, &cands, t.len(), 3, |x,
+                                     y| {
+                                        x as f64 * (1.0 - y) + 1.0
+                                    }),
+                                    decide(policy, &c2, t.len(), 3, |x, y| {
+                                        x as f64 * (1.0 - y) + 1.0
+                                    }),
+                                    "decision diverged on replica {i}"
+                                );
+                            }
+                        }
+                    }
+                    for i in grp.live_indices() {
+                        for inst in 0..n_inst {
+                            let id = InstanceId(inst);
+                            assert_eq!(
+                                grp.tree(i).cached_blocks(id),
+                                grp.tree(p).cached_blocks(id),
+                                "cached_blocks({id}) on replica {i}"
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    }
+}
+

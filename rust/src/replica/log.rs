@@ -1,0 +1,448 @@
+//! Sequenced delta-log transport — the replication protocol's wire
+//! discipline (ISSUE 4 tentpole, part 1).
+//!
+//! `elastic/delta.rs` established *what* replicates: self-contained
+//! [`DeltaEvent`]s over token sequences, applied through
+//! `FusedPromptTree::apply_delta`, converging every consumer of the same
+//! stream to the same ownership state. This module adds *how*: the
+//! sequencing layer that makes "the same stream" a guarantee rather than
+//! an assumption.
+//!
+//! Two halves, transport-agnostic (the live server ships entries as
+//! `Msg::Delta` over the fabric; `ReplicaGroup` and the sim drive them
+//! in-process):
+//!
+//! * [`DeltaTransport`] — the authority side. Assigns monotonic sequence
+//!   numbers on append, retains a suffix of the log (a windowed
+//!   [`crate::elastic::delta::DeltaLog`]), tracks one `(acked, sent)`
+//!   cursor pair per peer, bounds the in-flight window per peer, rewinds
+//!   the send cursor when an ack regresses (the receiver's gap
+//!   re-request), and truncates the retained suffix once **every** peer
+//!   has acked past a sequence — the log never outgrows the slowest
+//!   live replica.
+//! * [`DeltaCursor`] — the receiver side. Applies entries strictly
+//!   in-order: duplicates (seq below the cursor) are dropped, gaps (seq
+//!   above it) are buffered out-of-order and answered with a re-request
+//!   for the missing range, and the contiguous run starting at the
+//!   cursor is released for application in one batch.
+//!
+//! Acks double as negative acks: a peer always reports the next
+//! sequence it *needs* ([`DeltaCursor::expected`]); an ack that is lower
+//! than what the authority already sent is precisely a gap report, and
+//! [`DeltaTransport::on_ack`] rewinds the send cursor so the missing
+//! range goes out again. One message type covers both directions of the
+//! protocol.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::elastic::delta::DeltaEvent;
+
+/// One sequence-stamped log entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SeqDelta {
+    pub seq: u64,
+    pub ev: DeltaEvent,
+}
+
+/// Per-peer replication cursors: `acked` — the peer has contiguously
+/// applied every seq below it; `sent` — entries below it have been
+/// handed to the wire (`sent >= acked`; `sent - acked` is in flight).
+#[derive(Clone, Copy, Debug, Default)]
+struct Peer {
+    acked: u64,
+    sent: u64,
+}
+
+/// Authority side of the delta log (see module docs).
+#[derive(Debug)]
+pub struct DeltaTransport {
+    /// Retained suffix; `entries[i]` carries seq `base + i`.
+    entries: VecDeque<DeltaEvent>,
+    base: u64,
+    window: usize,
+    peers: BTreeMap<u64, Peer>,
+    /// Cumulative resends triggered by ack regressions (diagnostics).
+    resends: u64,
+}
+
+impl DeltaTransport {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0, "in-flight window must be positive");
+        DeltaTransport {
+            entries: VecDeque::new(),
+            base: 0,
+            window,
+            peers: BTreeMap::new(),
+            resends: 0,
+        }
+    }
+
+    /// Sequence the next append will receive.
+    pub fn next_seq(&self) -> u64 {
+        self.base + self.entries.len() as u64
+    }
+
+    /// Oldest retained sequence (entries below it were truncated and
+    /// can only be recovered via a snapshot).
+    pub fn first_retained(&self) -> u64 {
+        self.base
+    }
+
+    pub fn retained_len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn resends(&self) -> u64 {
+        self.resends
+    }
+
+    /// Register a peer whose cursor starts at `from` (0 for a replica
+    /// that will replay the whole log; a snapshot's seq for a late
+    /// joiner bootstrapped past the prefix).
+    pub fn register(&mut self, peer: u64, from: u64) {
+        self.peers.insert(peer, Peer {
+            acked: from,
+            sent: from,
+        });
+    }
+
+    /// Drop a peer (failed replica): its cursor no longer holds
+    /// truncation back.
+    pub fn deregister(&mut self, peer: u64) {
+        self.peers.remove(&peer);
+    }
+
+    pub fn peers(&self) -> impl Iterator<Item = u64> + '_ {
+        self.peers.keys().copied()
+    }
+
+    pub fn has_peers(&self) -> bool {
+        !self.peers.is_empty()
+    }
+
+    /// Start an empty log at `base` instead of 0 — a promoted replica
+    /// rebuilding the transport around its retained suffix, whose first
+    /// entry carries that sequence.
+    pub fn advance_base(&mut self, base: u64) {
+        assert!(
+            self.entries.is_empty() && self.base == 0,
+            "advance_base is a construction-time operation"
+        );
+        self.base = base;
+    }
+
+    /// Append one event; returns its assigned sequence.
+    pub fn append(&mut self, ev: DeltaEvent) -> u64 {
+        let seq = self.next_seq();
+        self.entries.push_back(ev);
+        seq
+    }
+
+    /// Retained entry at `seq`, if not yet truncated.
+    pub fn get(&self, seq: u64) -> Option<&DeltaEvent> {
+        seq.checked_sub(self.base)
+            .and_then(|i| self.entries.get(i as usize))
+    }
+
+    /// The half-open seq range this peer should be sent now: from its
+    /// send cursor up to the log head, capped by the in-flight window.
+    /// Empty when the peer is unknown.
+    pub fn sendable(&self, peer: u64) -> std::ops::Range<u64> {
+        let Some(p) = self.peers.get(&peer) else {
+            return 0..0;
+        };
+        let hi = self.next_seq().min(p.acked + self.window as u64);
+        p.sent.max(self.base)..hi.max(p.sent)
+    }
+
+    /// Record that entries below `upto` were handed to the wire.
+    pub fn mark_sent(&mut self, peer: u64, upto: u64) {
+        if let Some(p) = self.peers.get_mut(&peer) {
+            p.sent = p.sent.max(upto);
+        }
+    }
+
+    /// Process an ack: the peer needs `next` as its next entry. Forward
+    /// acks open window; an ack *below* the send cursor is a gap
+    /// re-request — the send cursor rewinds so the range goes out again.
+    /// Returns true when a rewind (resend) was triggered.
+    pub fn on_ack(&mut self, peer: u64, next: u64) -> bool {
+        let Some(p) = self.peers.get_mut(&peer) else {
+            return false;
+        };
+        p.acked = p.acked.max(next);
+        if next < p.sent {
+            // The receiver is missing [next, sent): rewind and resend.
+            p.sent = next.max(p.acked);
+            self.resends += 1;
+            true
+        } else {
+            p.sent = p.sent.max(next);
+            false
+        }
+    }
+
+    /// Timeout-style retransmit: rewind the peer's send cursor to its
+    /// ack floor so unacked in-flight entries go out again. The
+    /// recovery path when the *last* entries of the log were lost — no
+    /// later entry will ever arrive to trigger the receiver's gap
+    /// re-request, so the sender must re-offer on its own schedule.
+    /// Returns true when there was anything to rewind.
+    pub fn retransmit_unacked(&mut self, peer: u64) -> bool {
+        let Some(p) = self.peers.get_mut(&peer) else {
+            return false;
+        };
+        if p.sent > p.acked {
+            p.sent = p.acked;
+            self.resends += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Force a peer's cursors to at least `seq` — used after shipping it
+    /// a snapshot captured at `seq` (the log prefix is superseded).
+    pub fn skip_to(&mut self, peer: u64, seq: u64) {
+        if let Some(p) = self.peers.get_mut(&peer) {
+            p.acked = p.acked.max(seq);
+            p.sent = p.sent.max(seq);
+        }
+    }
+
+    pub fn acked(&self, peer: u64) -> Option<u64> {
+        self.peers.get(&peer).map(|p| p.acked)
+    }
+
+    /// Entries the peer has not yet confirmed (∞-safe lag in events).
+    pub fn lag(&self, peer: u64) -> u64 {
+        self.peers
+            .get(&peer)
+            .map(|p| self.next_seq() - p.acked)
+            .unwrap_or(0)
+    }
+
+    pub fn all_caught_up(&self) -> bool {
+        let head = self.next_seq();
+        self.peers.values().all(|p| p.acked >= head)
+    }
+
+    /// Lowest ack across peers (the truncation floor); the log head when
+    /// no peers are registered.
+    pub fn min_acked(&self) -> u64 {
+        self.peers
+            .values()
+            .map(|p| p.acked)
+            .min()
+            .unwrap_or_else(|| self.next_seq())
+    }
+
+    /// Drop retained entries below `floor`, clamped so no peer loses an
+    /// entry it still needs (truncation never outruns `min_acked`).
+    /// Returns the number of entries dropped.
+    pub fn truncate_below(&mut self, floor: u64) -> usize {
+        let to = floor.min(self.min_acked());
+        let mut dropped = 0;
+        while self.base < to && !self.entries.is_empty() {
+            self.entries.pop_front();
+            self.base += 1;
+            dropped += 1;
+        }
+        dropped
+    }
+}
+
+/// What [`DeltaCursor::offer`] decided about one incoming entry.
+#[derive(Debug, PartialEq)]
+pub enum Ingest {
+    /// In-order: apply these events now (the offered one plus any
+    /// buffered entries it unblocked, in sequence order).
+    Ready(Vec<DeltaEvent>),
+    /// Out of order: buffered; re-request the log from `resend_from`.
+    Buffered { resend_from: u64 },
+    /// Already applied (seq below the cursor): drop.
+    Duplicate,
+}
+
+/// Receiver side: strict in-order application with an out-of-order
+/// buffer and gap re-requests (see module docs).
+#[derive(Debug, Default)]
+pub struct DeltaCursor {
+    expected: u64,
+    pending: BTreeMap<u64, DeltaEvent>,
+}
+
+impl DeltaCursor {
+    pub fn new() -> Self {
+        DeltaCursor::default()
+    }
+
+    /// Next sequence this replica needs — the ack value.
+    pub fn expected(&self) -> u64 {
+        self.expected
+    }
+
+    /// Out-of-order entries currently buffered (diagnostics).
+    pub fn buffered(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Offer one sequenced entry; see [`Ingest`].
+    pub fn offer(&mut self, seq: u64, ev: DeltaEvent) -> Ingest {
+        if seq < self.expected {
+            return Ingest::Duplicate;
+        }
+        if seq > self.expected {
+            self.pending.insert(seq, ev);
+            return Ingest::Buffered {
+                resend_from: self.expected,
+            };
+        }
+        let mut ready = vec![ev];
+        self.expected += 1;
+        while let Some(next) = self.pending.remove(&self.expected) {
+            ready.push(next);
+            self.expected += 1;
+        }
+        Ingest::Ready(ready)
+    }
+
+    /// Jump the cursor to `seq` (a snapshot restored state through it);
+    /// buffered entries below `seq` are superseded and dropped, and any
+    /// contiguous run starting at `seq` is released for application.
+    pub fn advance_to(&mut self, seq: u64) -> Vec<DeltaEvent> {
+        self.expected = self.expected.max(seq);
+        self.pending.retain(|&s, _| s >= seq);
+        let mut ready = vec![];
+        while let Some(next) = self.pending.remove(&self.expected) {
+            ready.push(next);
+            self.expected += 1;
+        }
+        ready
+    }
+
+    /// Drop buffered entries at sequences `>= seq`. Required when the
+    /// authority rebases the log (a promotion reuses the sequences past
+    /// the promoted replica's head for *different* events): anything a
+    /// laggard buffered from the dead authority at those sequences is
+    /// stale and must never be applied.
+    pub fn purge_from(&mut self, seq: u64) {
+        self.pending.retain(|&s, _| s < seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mempool::InstanceId;
+
+    fn ev(tag: u32) -> DeltaEvent {
+        DeltaEvent::Expire {
+            instance: InstanceId(tag),
+            prefix: vec![tag],
+        }
+    }
+
+    #[test]
+    fn sequences_are_monotonic_and_windowed() {
+        let mut t = DeltaTransport::new(4);
+        t.register(7, 0);
+        for i in 0..10 {
+            assert_eq!(t.append(ev(i)), i as u64);
+        }
+        // Window caps the first batch at 4 in-flight.
+        assert_eq!(t.sendable(7), 0..4);
+        t.mark_sent(7, 4);
+        assert_eq!(t.sendable(7), 4..4, "window full until acks");
+        assert!(!t.on_ack(7, 2));
+        assert_eq!(t.sendable(7), 4..6, "partial ack opens window");
+        t.mark_sent(7, 6);
+        t.on_ack(7, 6);
+        assert_eq!(t.sendable(7), 6..10);
+        assert_eq!(t.lag(7), 4);
+    }
+
+    #[test]
+    fn ack_regression_rewinds_for_resend() {
+        let mut t = DeltaTransport::new(8);
+        t.register(1, 0);
+        for i in 0..6 {
+            t.append(ev(i));
+        }
+        t.mark_sent(1, 6);
+        // Receiver reports it is still missing seq 2: resend from there.
+        assert!(t.on_ack(1, 2));
+        assert_eq!(t.resends(), 1);
+        assert_eq!(t.sendable(1), 2..6);
+        // The rewound cursor never regresses below the ack floor.
+        t.mark_sent(1, 6);
+        assert!(!t.on_ack(1, 6));
+    }
+
+    #[test]
+    fn truncation_waits_for_all_peers() {
+        let mut t = DeltaTransport::new(16);
+        t.register(1, 0);
+        t.register(2, 0);
+        for i in 0..8 {
+            t.append(ev(i));
+        }
+        t.mark_sent(1, 8);
+        t.mark_sent(2, 8);
+        t.on_ack(1, 8);
+        t.on_ack(2, 3);
+        assert_eq!(t.min_acked(), 3);
+        assert_eq!(t.truncate_below(8), 3, "clamped to the slowest peer");
+        assert_eq!(t.first_retained(), 3);
+        assert!(t.get(2).is_none());
+        assert_eq!(t.get(3), Some(&ev(3)));
+        // The slow peer leaves: its cursor no longer pins the log.
+        t.deregister(2);
+        assert_eq!(t.truncate_below(u64::MAX), 5);
+        assert_eq!(t.retained_len(), 0);
+        // No peers at all: min_acked is the head, appends still work.
+        t.deregister(1);
+        assert_eq!(t.min_acked(), t.next_seq());
+    }
+
+    #[test]
+    fn cursor_orders_buffers_and_dedups() {
+        let mut c = DeltaCursor::new();
+        assert_eq!(c.offer(0, ev(0)), Ingest::Ready(vec![ev(0)]));
+        // Gap: 2 arrives before 1.
+        assert_eq!(c.offer(2, ev(2)), Ingest::Buffered { resend_from: 1 });
+        assert_eq!(c.buffered(), 1);
+        // The missing entry releases the buffered run in order.
+        assert_eq!(c.offer(1, ev(1)), Ingest::Ready(vec![ev(1), ev(2)]));
+        assert_eq!(c.expected(), 3);
+        assert_eq!(c.offer(1, ev(1)), Ingest::Duplicate);
+    }
+
+    #[test]
+    fn cursor_snapshot_jump_drops_superseded() {
+        let mut c = DeltaCursor::new();
+        assert!(matches!(c.offer(5, ev(5)), Ingest::Buffered { .. }));
+        assert!(matches!(c.offer(9, ev(9)), Ingest::Buffered { .. }));
+        // Snapshot at 6: entry 5 is superseded, 9 stays buffered.
+        assert_eq!(c.advance_to(6), vec![]);
+        assert_eq!(c.expected(), 6);
+        assert_eq!(c.buffered(), 1);
+        // 6..=8 arrive; 9 rides the contiguous run out.
+        assert!(matches!(c.offer(6, ev(6)), Ingest::Ready(_)));
+        assert!(matches!(c.offer(7, ev(7)), Ingest::Ready(_)));
+        assert_eq!(c.offer(8, ev(8)), Ingest::Ready(vec![ev(8), ev(9)]));
+        assert_eq!(c.expected(), 10);
+    }
+
+    #[test]
+    fn snapshot_skip_moves_both_cursors() {
+        let mut t = DeltaTransport::new(4);
+        t.register(1, 0);
+        for i in 0..20 {
+            t.append(ev(i));
+        }
+        t.skip_to(1, 12);
+        assert_eq!(t.acked(1), Some(12));
+        assert_eq!(t.sendable(1), 12..16);
+    }
+}

@@ -1,0 +1,36 @@
+//! Replicated global scheduler (ISSUE 4): the transport, snapshot, and
+//! group machinery that turns the single leader-local fused prompt tree
+//! into a replicated group — so the GS survives a crash with its
+//! locality state intact and routing reads can fan out across replicas.
+//!
+//! PR 3 built the replication *content*: every ownership mutation of
+//! the fused tree is a self-contained [`crate::elastic::delta::
+//! DeltaEvent`] over token sequences, and replicas applying the same
+//! event stream converge to the same state. This subsystem supplies
+//! what ROADMAP recorded as missing — "the transport (sequencing,
+//! snapshots, catch-up for joining replicas)":
+//!
+//! * [`log`] — monotonic sequencing over the delta log: per-replica ack
+//!   cursors, a bounded in-flight window, gap detection with
+//!   re-request, and truncation behind the slowest replica.
+//! * [`snapshot`] — compact semantic snapshots of the fused tree
+//!   (token-path + per-instance ownership + stamps), restored by
+//!   ascending-stamp `Record` replay; the bootstrap for late joiners
+//!   and the recovery floor under log truncation.
+//! * [`group`] — [`group::ReplicaGroup`]: one primary plus N followers;
+//!   writes sequence through the log, reads serve from any replica, and
+//!   primary failure promotes the most-caught-up follower after
+//!   catching it up from the survivors' retained log suffixes.
+//!
+//! The live server runs the same protocol over fabric messages
+//! (`Msg::{Delta, DeltaAck, SnapshotReq, Snapshot, Promote}` —
+//! `server/replica.rs`); the simulator and `benches/fig17_replica.rs`
+//! drive `ReplicaGroup` directly.
+
+pub mod group;
+pub mod log;
+pub mod snapshot;
+
+pub use group::ReplicaGroup;
+pub use log::{DeltaCursor, DeltaTransport, Ingest, SeqDelta};
+pub use snapshot::{SnapshotEntry, TreeSnapshot};

@@ -1,0 +1,234 @@
+//! Compact fused-tree snapshots — replica bootstrap and log truncation
+//! (ISSUE 4 tentpole, part 2).
+//!
+//! A replica that joins late (or falls behind a truncated log) cannot
+//! replay from sequence 0; it bootstraps from a [`TreeSnapshot`]
+//! captured at a known log position and then catches up on the delta
+//! suffix. The snapshot is *semantic*, not structural: it records every
+//! `(instance, token-path, last-insert stamp)` ownership pair
+//! ([`crate::scheduler::fused_tree::FusedPromptTree::ownership_entries`])
+//! plus the instance registry — never node indices, never addresses —
+//! and restores by replaying the entries as ordinary `Record` deltas in
+//! ascending-stamp order through the same `apply_delta`-family
+//! machinery the log uses. Restored state is therefore equivalent by
+//! construction: matches, per-instance counters, *and* TTL expiry
+//! behave bit-identically to a replica that applied the full log
+//! (interior stamps are preserved — the differential tests in
+//! [`crate::replica::group`] pin this, collision masks included).
+//!
+//! Snapshots also gate log truncation: once every replica's ack has
+//! passed a snapshot's sequence, [`crate::replica::log::DeltaTransport::
+//! truncate_below`] may drop the prefix — the snapshot is the recovery
+//! path for anything older.
+
+use crate::mempool::InstanceId;
+use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
+
+/// One ownership fact: `instance` cached `tokens` as of `stamp`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnapshotEntry {
+    pub instance: InstanceId,
+    pub tokens: Vec<u32>,
+    pub stamp: f64,
+}
+
+/// A fused-tree snapshot at log position `seq` (the first delta NOT
+/// reflected in it — catch-up replays from `seq`).
+#[derive(Clone, Debug)]
+pub struct TreeSnapshot {
+    pub seq: u64,
+    pub block_tokens: usize,
+    /// Instance registry: id, kind, draining flag.
+    pub instances: Vec<(InstanceId, InstanceKind, bool)>,
+    /// Ownership pairs, ascending `(stamp, instance, tokens)` — the
+    /// restore replay order.
+    pub entries: Vec<SnapshotEntry>,
+}
+
+impl TreeSnapshot {
+    /// Capture `tree`'s full ownership state as of log position `seq`.
+    pub fn capture(tree: &GlobalPromptTrees, seq: u64) -> TreeSnapshot {
+        let instances = tree
+            .instances()
+            .map(|(id, kind)| (id, kind, tree.is_draining(id)))
+            .collect();
+        let mut entries: Vec<SnapshotEntry> = tree
+            .ownership_entries()
+            .into_iter()
+            .map(|(instance, tokens, stamp)| SnapshotEntry {
+                instance,
+                tokens,
+                stamp,
+            })
+            .collect();
+        entries.sort_by(|a, b| {
+            a.stamp
+                .total_cmp(&b.stamp)
+                .then(a.instance.cmp(&b.instance))
+                .then(a.tokens.cmp(&b.tokens))
+        });
+        TreeSnapshot {
+            seq,
+            block_tokens: tree.block_tokens(),
+            instances,
+            entries,
+        }
+    }
+
+    /// Token-block total across entries (wire-size estimate).
+    pub fn token_blocks(&self) -> usize {
+        self.entries
+            .iter()
+            .map(|e| e.tokens.len() / self.block_tokens.max(1))
+            .sum()
+    }
+
+    /// Load this snapshot into an **empty** tree (the caller constructs
+    /// it with its own TTL — and, in tests, fingerprint mask — so the
+    /// replica's config, not the snapshot, governs those).
+    pub fn restore_into(&self, tree: &mut GlobalPromptTrees) {
+        assert_eq!(
+            tree.block_tokens(),
+            self.block_tokens,
+            "snapshot/replica block_tokens mismatch"
+        );
+        assert_eq!(
+            tree.node_count(),
+            0,
+            "snapshot restore requires an empty tree"
+        );
+        for &(id, kind, _) in &self.instances {
+            tree.add_instance(id, kind);
+        }
+        // Ascending-stamp replay: each node's own entry carries the
+        // maximum stamp on its path and lands last, so interior stamps
+        // come out exact (see `ownership_entries`).
+        for e in &self.entries {
+            tree.record(e.instance, &e.tokens, e.stamp);
+        }
+        for &(id, _, draining) in &self.instances {
+            if draining {
+                tree.set_draining(id, true);
+            }
+        }
+    }
+
+    /// Convenience: restore into a fresh tree with TTL `ttl`.
+    pub fn restore(&self, ttl: f64) -> GlobalPromptTrees {
+        let mut tree = GlobalPromptTrees::new(self.block_tokens, ttl);
+        self.restore_into(&mut tree);
+        tree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::delta::DeltaEvent;
+    use crate::scheduler::prompt_tree::match_all_vec;
+
+    const BT: usize = 4;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 5 + seed).collect()
+    }
+
+    fn busy_tree() -> GlobalPromptTrees {
+        let mut g = GlobalPromptTrees::new(BT, 20.0);
+        for i in 0..5 {
+            let kind = if i == 4 {
+                InstanceKind::DecodeOnly
+            } else {
+                InstanceKind::PrefillOnly
+            };
+            g.add_instance(InstanceId(i), kind);
+        }
+        g.record(InstanceId(0), &toks(12, 0), 1.0);
+        g.record(InstanceId(1), &toks(12, 0), 2.0);
+        g.record(InstanceId(1), &toks(8, 0), 6.0); // fresher interior
+        g.record(InstanceId(2), &toks(16, 100), 3.0);
+        g.record(InstanceId(4), &toks(8, 0), 4.0); // decode-only view
+        g.apply_delta(&DeltaEvent::Handoff {
+            from: InstanceId(2),
+            to: InstanceId(3),
+            tokens: toks(16, 100),
+            now: 5.0,
+        });
+        g.set_draining(InstanceId(0), true);
+        g
+    }
+
+    #[test]
+    fn capture_restore_preserves_matches_and_counters() {
+        let mut g = busy_tree();
+        let snap = TreeSnapshot::capture(&g, 42);
+        assert_eq!(snap.seq, 42);
+        assert!(snap.token_blocks() > 0);
+        let mut r = snap.restore(20.0);
+        for i in 0..5 {
+            let id = InstanceId(i);
+            assert_eq!(g.cached_blocks(id), r.cached_blocks(id), "{id}");
+            assert_eq!(g.is_draining(id), r.is_draining(id));
+            for probe in [toks(12, 0), toks(16, 100), toks(8, 7)] {
+                assert_eq!(
+                    g.match_one(id, &probe),
+                    r.match_one(id, &probe),
+                    "{id} probe"
+                );
+            }
+        }
+        assert_eq!(
+            match_all_vec(&mut g, &toks(12, 0)),
+            match_all_vec(&mut r, &toks(12, 0))
+        );
+        r.debug_check_counters();
+    }
+
+    #[test]
+    fn restored_ttl_expiry_is_bit_identical() {
+        let mut g = busy_tree();
+        let snap = TreeSnapshot::capture(&g, 0);
+        let mut r = snap.restore(20.0);
+        // Sweep a range of clocks across every stamp boundary: the
+        // restored tree must expire in lockstep (interior stamps exact).
+        for now in [21.5, 22.5, 23.5, 25.5, 26.5, 40.0] {
+            g.expire(now);
+            r.expire(now);
+            for i in 0..5 {
+                let id = InstanceId(i);
+                for probe in [toks(12, 0), toks(16, 100)] {
+                    assert_eq!(
+                        g.match_one(id, &probe),
+                        r.match_one(id, &probe),
+                        "{id} at now={now}"
+                    );
+                }
+                assert_eq!(
+                    g.cached_blocks(id),
+                    r.cached_blocks(id),
+                    "{id} at now={now}"
+                );
+            }
+        }
+        r.debug_check_counters();
+    }
+
+    #[test]
+    fn empty_tree_snapshots_cleanly() {
+        let g = GlobalPromptTrees::new(BT, 0.0);
+        let snap = TreeSnapshot::capture(&g, 7);
+        assert!(snap.entries.is_empty());
+        let r = snap.restore(0.0);
+        assert_eq!(r.instance_count(), 0);
+        assert_eq!(r.node_count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "block_tokens mismatch")]
+    fn restore_rejects_geometry_mismatch() {
+        let g = GlobalPromptTrees::new(BT, 0.0);
+        let snap = TreeSnapshot::capture(&g, 0);
+        let mut other = GlobalPromptTrees::new(BT * 2, 0.0);
+        snap.restore_into(&mut other);
+    }
+}

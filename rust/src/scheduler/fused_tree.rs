@@ -65,6 +65,27 @@ pub struct OwnedPrefix {
     pub blocks: usize,
 }
 
+/// Cold-instance ranking key for [`FusedPromptTree::match_into_capped`]:
+/// lexicographic `(primary, secondary, tertiary)`, smaller = better.
+/// The caller composes it to mirror its policy's exact ordering over
+/// zero-match candidates (e.g. `(expected cost, queued tokens, session
+/// hash)` for the prompt-tree policy), so capping the emission provably
+/// cannot change the routing decision: every positive-match instance is
+/// emitted, and the best cold instance by this key is in the sample.
+pub type ColdRank = (f64, u64, u64);
+
+#[inline]
+fn cold_rank_cmp(
+    a: &(ColdRank, InstanceId),
+    b: &(ColdRank, InstanceId),
+) -> std::cmp::Ordering {
+    a.0 .0
+        .total_cmp(&b.0 .0)
+        .then(a.0 .1.cmp(&b.0 .1))
+        .then(a.0 .2.cmp(&b.0 .2))
+        .then(a.1.cmp(&b.1))
+}
+
 /// Sentinel for "no node" in intrusive sibling links.
 const NONE: usize = usize::MAX;
 
@@ -177,6 +198,10 @@ pub struct FusedPromptTree {
     /// Routing-walk scratch (reused; no allocation at steady state).
     alive: Vec<u64>,
     matched: Vec<usize>,
+    /// Capped-emission scratch: cold-candidate ranks and the selected
+    /// cold sample (reused; see [`Self::match_into_capped`]).
+    cold_buf: Vec<(ColdRank, InstanceId)>,
+    cold_sel: Vec<InstanceId>,
     /// Mask applied to child fingerprints; tests shrink it to force
     /// collision chains.
     fp_mask: u64,
@@ -208,6 +233,8 @@ impl FusedPromptTree {
             owner_pairs: 0,
             alive: vec![],
             matched: vec![],
+            cold_buf: vec![],
+            cold_sel: vec![],
             fp_mask: u64::MAX,
         }
     }
@@ -607,6 +634,97 @@ impl FusedPromptTree {
         out: &mut Vec<(InstanceId, usize)>,
     ) {
         out.clear();
+        self.route_walk(tokens);
+        for (&id, &slot) in self.by_id.iter() {
+            let s = &self.slots[slot as usize];
+            if s.kind.runs_prefill() && !s.draining {
+                out.push((id, self.matched[slot as usize]));
+            }
+        }
+    }
+
+    /// [`Self::match_into`] with capped emission for large fleets: every
+    /// instance with a **positive** match is emitted (each at the depth
+    /// of the deepest owned node on the prompt's path — these are
+    /// bounded by the owners of the matched path, not by fleet size),
+    /// plus at most `cold_cap` zero-match instances — the best-ranked
+    /// ones by `cold_rank` (the caller's least-loaded ordering; see
+    /// [`ColdRank`]). At ~1k instances this removes the dominant
+    /// per-route cost — materializing and policy-scanning ~1k
+    /// `(InstanceId, matched)` pairs of which all but a handful are
+    /// zero — while leaving the decision of any load-monotone policy
+    /// exactly unchanged: the winner is either warm (always emitted) or
+    /// the rank-minimal cold instance (always sampled). Falls back to
+    /// full emission when the routable fleet fits in `cold_cap`.
+    /// Emission stays in ascending instance-id order.
+    pub fn match_into_capped(
+        &mut self,
+        tokens: &[u32],
+        out: &mut Vec<(InstanceId, usize)>,
+        cold_cap: usize,
+        cold_rank: &mut dyn FnMut(InstanceId) -> ColdRank,
+    ) {
+        out.clear();
+        self.route_walk(tokens);
+        // Decide the fallback BEFORE paying for any rank evaluation
+        // (each is a loads lookup + cost-model call at the router):
+        // a routable fleet that fits in the cap emits everything.
+        let routable = self
+            .by_id
+            .values()
+            .filter(|&&slot| {
+                let s = &self.slots[slot as usize];
+                s.kind.runs_prefill() && !s.draining
+            })
+            .count();
+        if routable <= cold_cap {
+            for (&id, &slot) in self.by_id.iter() {
+                let s = &self.slots[slot as usize];
+                if s.kind.runs_prefill() && !s.draining {
+                    out.push((id, self.matched[slot as usize]));
+                }
+            }
+            return;
+        }
+        // Rank the cold (zero-match) routable instances.
+        self.cold_buf.clear();
+        for (&id, &slot) in self.by_id.iter() {
+            let s = &self.slots[slot as usize];
+            if !s.kind.runs_prefill() || s.draining {
+                continue;
+            }
+            if self.matched[slot as usize] == 0 {
+                self.cold_buf.push((cold_rank(id), id));
+            }
+        }
+        // Keep the `cold_cap` best-ranked cold instances (O(n) select,
+        // then sort only the sample). cap 0 = warm-only emission.
+        if cold_cap == 0 {
+            self.cold_buf.clear();
+        } else if self.cold_buf.len() > cold_cap {
+            self.cold_buf
+                .select_nth_unstable_by(cold_cap - 1, cold_rank_cmp);
+            self.cold_buf.truncate(cold_cap);
+        }
+        self.cold_sel.clear();
+        self.cold_sel.extend(self.cold_buf.iter().map(|&(_, id)| id));
+        self.cold_sel.sort_unstable();
+        for (&id, &slot) in self.by_id.iter() {
+            let s = &self.slots[slot as usize];
+            if !s.kind.runs_prefill() || s.draining {
+                continue;
+            }
+            let m = self.matched[slot as usize];
+            if m > 0 || self.cold_sel.binary_search(&id).is_ok() {
+                out.push((id, m));
+            }
+        }
+    }
+
+    /// The shared routing walk: fills `self.matched[slot]` with each
+    /// routable instance's matched prefix length. One tree walk ANDing
+    /// the `alive` word-set per node; drop-outs record their depth.
+    fn route_walk(&mut self, tokens: &[u32]) {
         let words = self.route_mask.len();
         self.alive.clear();
         self.alive.extend_from_slice(&self.route_mask);
@@ -659,12 +777,6 @@ impl FusedPromptTree {
                 let b = a.trailing_zeros() as usize;
                 self.matched[w * 64 + b] = pos;
                 a &= a - 1;
-            }
-        }
-        for (&id, &slot) in self.by_id.iter() {
-            let s = &self.slots[slot as usize];
-            if s.kind.runs_prefill() && !s.draining {
-                out.push((id, self.matched[slot as usize]));
             }
         }
     }
@@ -882,6 +994,51 @@ impl FusedPromptTree {
                 last_insert: n.stamps[i].1,
                 blocks: prefix.len() / self.block_tokens,
             });
+        }
+    }
+
+    /// Every `(instance, token-path, last-insert stamp)` ownership pair
+    /// in the tree — one entry per (node, instance), with the full token
+    /// path to the node. This is the replica-snapshot source
+    /// ([`crate::replica::snapshot`]): replaying the entries as `Record`
+    /// deltas in **ascending stamp order** reconstructs the exact
+    /// ownership *and* stamp state (a record stamps its whole path, and
+    /// stamps are monotone up the tree, so each node's own entry —
+    /// carrying the path maximum — lands last). Unlike
+    /// [`Self::owned_paths`] (maximal paths only, the migration
+    /// planner's unit), interior stamps are preserved, which is what
+    /// makes a snapshot-restored replica's TTL expiry bit-identical to a
+    /// log-replaying one. Order is unspecified; callers sort.
+    pub fn ownership_entries(&self) -> Vec<(InstanceId, Vec<u32>, f64)> {
+        let mut slot_ids: Vec<Option<InstanceId>> =
+            vec![None; self.slots.len()];
+        for (&id, &slot) in &self.by_id {
+            slot_ids[slot as usize] = Some(id);
+        }
+        let mut out = vec![];
+        let mut prefix = vec![];
+        self.ownership_entries_rec(ROOT, &slot_ids, &mut prefix, &mut out);
+        out
+    }
+
+    fn ownership_entries_rec(
+        &self,
+        node: usize,
+        slot_ids: &[Option<InstanceId>],
+        prefix: &mut Vec<u32>,
+        out: &mut Vec<(InstanceId, Vec<u32>, f64)>,
+    ) {
+        if node != ROOT {
+            for &(slot, stamp) in &self.nodes[node].stamps {
+                if let Some(id) = slot_ids[slot as usize] {
+                    out.push((id, prefix.clone(), stamp));
+                }
+            }
+        }
+        for c in self.child_indices(node) {
+            prefix.extend_from_slice(&self.nodes[c].edge);
+            self.ownership_entries_rec(c, slot_ids, prefix, out);
+            prefix.truncate(prefix.len() - self.nodes[c].edge.len());
         }
     }
 
@@ -1376,6 +1533,110 @@ mod tests {
         assert_eq!(g.match_one(InstanceId(0), &c), 4);
         assert_eq!(g.cached_blocks(InstanceId(0)), 2);
         g.debug_check_counters();
+    }
+
+    #[test]
+    fn capped_match_emits_warm_plus_cold_sample() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        for i in 0..12 {
+            g.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+        }
+        let t = toks(12, 0);
+        g.record(InstanceId(3), &t, 1.0); // deep
+        g.record(InstanceId(7), &t[..4], 1.0); // shallow drop-out
+        // Cold rank: prefer high ids (reversed), to prove the sample
+        // follows the rank, not id order.
+        let mut rank =
+            |id: InstanceId| -> ColdRank { (0.0, u64::MAX - id.0 as u64, 0) };
+        let mut out = vec![];
+        g.match_into_capped(&t, &mut out, 2, &mut rank);
+        // Warm: 3 (12) and 7 (4). Cold sample: the two highest ids that
+        // are cold — 11 and 10. Ascending-id emission order.
+        assert_eq!(out, vec![
+            (InstanceId(3), 12),
+            (InstanceId(7), 4),
+            (InstanceId(10), 0),
+            (InstanceId(11), 0),
+        ]);
+        // Small fleet (cap >= routable): identical to full emission.
+        let mut full = vec![];
+        g.match_into(&t, &mut full);
+        let mut capped = vec![];
+        g.match_into_capped(&t, &mut capped, 64, &mut rank);
+        assert_eq!(capped, full);
+        // Draining instances stay invisible in the capped path too.
+        g.set_draining(InstanceId(11), true);
+        g.match_into_capped(&t, &mut out, 2, &mut rank);
+        assert!(out.iter().all(|&(id, _)| id != InstanceId(11)));
+        // cap 0: warm-only emission ("at most cold_cap" includes zero).
+        g.match_into_capped(&t, &mut out, 0, &mut rank);
+        assert_eq!(out, vec![(InstanceId(3), 12), (InstanceId(7), 4)]);
+    }
+
+    #[test]
+    fn capped_match_ties_break_by_lowest_id() {
+        let mut g = FusedPromptTree::new(BT, 0.0);
+        for i in 0..8 {
+            g.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+        }
+        g.record(InstanceId(0), &toks(4, 0), 1.0);
+        // All-equal ranks: the sample must be the lowest cold ids, so a
+        // policy that breaks ties by id sees the same winner as with
+        // full emission.
+        let mut rank = |_: InstanceId| -> ColdRank { (1.0, 2, 3) };
+        let mut out = vec![];
+        g.match_into_capped(&toks(4, 0), &mut out, 3, &mut rank);
+        assert_eq!(out, vec![
+            (InstanceId(0), 4),
+            (InstanceId(1), 0),
+            (InstanceId(2), 0),
+            (InstanceId(3), 0),
+        ]);
+    }
+
+    #[test]
+    fn ownership_entries_roundtrip_via_record_replay() {
+        let mut g = FusedPromptTree::new(BT, 10.0);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        g.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        let abc = [1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3];
+        let ad = [1, 1, 1, 1, 9, 9, 9, 9];
+        g.record(InstanceId(0), &abc, 1.0);
+        g.record(InstanceId(1), &ad, 2.0);
+        // Re-record a shorter prefix later: the interior node's stamp is
+        // now fresher than its descendants' — the case maximal-path
+        // iteration would lose.
+        g.record(InstanceId(0), &abc[..4], 5.0);
+        let mut entries = g.ownership_entries();
+        entries.sort_by(|a, b| {
+            a.2.total_cmp(&b.2)
+                .then(a.0.cmp(&b.0))
+                .then(a.1.cmp(&b.1))
+        });
+        let mut r = FusedPromptTree::new(BT, 10.0);
+        r.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        r.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        for (id, tokens, stamp) in &entries {
+            r.record(*id, tokens, *stamp);
+        }
+        r.debug_check_counters();
+        assert_eq!(r.cached_blocks(InstanceId(0)), 3);
+        assert_eq!(r.cached_blocks(InstanceId(1)), 2);
+        // Stamp fidelity: at now=12 the ttl-10 entries stamped 1.0/2.0
+        // expire but the 5.0 re-record survives — in both trees.
+        g.expire(12.0);
+        r.expire(12.0);
+        for t in [&abc[..], &ad[..]] {
+            assert_eq!(
+                g.match_one(InstanceId(0), t),
+                r.match_one(InstanceId(0), t)
+            );
+            assert_eq!(
+                g.match_one(InstanceId(1), t),
+                r.match_one(InstanceId(1), t)
+            );
+        }
+        assert_eq!(r.match_one(InstanceId(0), &abc), 4);
     }
 
     #[test]

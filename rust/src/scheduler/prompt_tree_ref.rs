@@ -290,6 +290,73 @@ mod tests {
                                     );
                                     assert_eq!(d1, d2, "policy decision");
                                 }
+                                // Capped emission (ISSUE 4 satellite):
+                                // warm instances + a 4-cold sample
+                                // ranked exactly as each load-monotone
+                                // policy orders zero-match candidates
+                                // must reproduce the decision the
+                                // reference's FULL emission yields.
+                                let mut capped = vec![];
+                                let mut rank_pt = |id: InstanceId| {
+                                    let mut s =
+                                        sid ^ ((id.0 as u64) << 32);
+                                    (
+                                        exec(load_of(id), 0.0),
+                                        load_of(id) as u64,
+                                        crate::util::rng::splitmix64(
+                                            &mut s,
+                                        ),
+                                    )
+                                };
+                                fused.match_into_capped(
+                                    &toks,
+                                    &mut capped,
+                                    4,
+                                    &mut rank_pt,
+                                );
+                                assert_eq!(
+                                    decide(
+                                        PolicyKind::PromptTree,
+                                        &candidates(&capped),
+                                        toks.len(),
+                                        sid,
+                                        exec,
+                                    ),
+                                    decide(
+                                        PolicyKind::PromptTree,
+                                        &c2,
+                                        toks.len(),
+                                        sid,
+                                        exec,
+                                    ),
+                                    "capped prompt-tree decision"
+                                );
+                                let mut rank_ll = |id: InstanceId| {
+                                    (load_of(id) as f64, id.0 as u64, 0u64)
+                                };
+                                fused.match_into_capped(
+                                    &toks,
+                                    &mut capped,
+                                    4,
+                                    &mut rank_ll,
+                                );
+                                assert_eq!(
+                                    decide(
+                                        PolicyKind::LeastLoad,
+                                        &candidates(&capped),
+                                        toks.len(),
+                                        sid,
+                                        exec,
+                                    ),
+                                    decide(
+                                        PolicyKind::LeastLoad,
+                                        &c2,
+                                        toks.len(),
+                                        sid,
+                                        exec,
+                                    ),
+                                    "capped least-load decision"
+                                );
                             }
                             if !live.is_empty() {
                                 let id = *g.pick(&live);

@@ -40,6 +40,15 @@ pub struct GlobalScheduler {
     pub calls_per_token_block: usize,
     pub block_tokens: usize,
     pub transfer_decision_enabled: bool,
+    /// Capped-emission knob: on fleets larger than this, the fused tree
+    /// emits only positive-match instances plus this many best-ranked
+    /// cold ones (`FusedPromptTree::match_into_capped`) instead of one
+    /// pair per prefill instance — removing the O(instances) candidate
+    /// scan at ~1k instances. The cold ranking mirrors the active
+    /// policy's exact ordering over zero-match candidates, so decisions
+    /// are unchanged; the session-id policy (whose pick depends on the
+    /// candidate *count*) always gets full emission. 0 disables.
+    pub cold_sample: usize,
     /// Reusable route-path scratch: matched prefixes from the fused
     /// tree and the candidate list handed to the policy. Steady-state
     /// routing performs no allocation.
@@ -64,6 +73,7 @@ impl GlobalScheduler {
             calls_per_token_block: 1,
             block_tokens,
             transfer_decision_enabled: true,
+            cold_sample: 32,
             match_buf: vec![],
             cand_buf: vec![],
         }
@@ -89,7 +99,46 @@ impl GlobalScheduler {
         self.trees.expire(now);
         // One fused-tree walk yields the matched prefix for the whole
         // fleet; both buffers are reused across routes (no allocation).
-        self.trees.match_into(prompt, &mut self.match_buf);
+        // Large fleets get capped emission: warm instances plus a cold
+        // sample ranked exactly as the policy would rank zero-match
+        // candidates — cost (monotone in queue), then queue, then the
+        // policy's own tie-break — so the decision cannot change.
+        let Self {
+            trees,
+            match_buf,
+            cost,
+            policy,
+            cold_sample,
+            ..
+        } = self;
+        if *cold_sample > 0
+            && *policy != PolicyKind::SessionId
+            && trees.instance_count() > *cold_sample
+        {
+            let mut rank = |id: InstanceId| {
+                let l = loads(id);
+                match policy {
+                    PolicyKind::LeastLoad => {
+                        (l.queued_tokens as f64, id.0 as u64, 0)
+                    }
+                    _ => {
+                        let mut s = session_id ^ ((id.0 as u64) << 32);
+                        (
+                            cost.exec(
+                                l.queued_tokens,
+                                l.queued_cached_ratio,
+                            ),
+                            l.queued_tokens as u64,
+                            crate::util::rng::splitmix64(&mut s),
+                        )
+                    }
+                }
+            };
+            trees.match_into_capped(prompt, match_buf, *cold_sample,
+                                    &mut rank);
+        } else {
+            trees.match_into(prompt, match_buf);
+        }
         anyhow::ensure!(
             !self.match_buf.is_empty(),
             "no prefill-capable instances registered"
@@ -267,6 +316,44 @@ mod tests {
         };
         let out = g.route(&t, 0, &loads, 2.0).unwrap();
         assert_eq!(out.decision.instance, InstanceId(1));
+    }
+
+    #[test]
+    fn capped_emission_preserves_decisions_at_scale() {
+        // 80 instances (> the 32-instance cap trigger), varied loads,
+        // a few cache holders: capped and full emission must route
+        // identically for the load-monotone policies.
+        for policy in [PolicyKind::PromptTree, PolicyKind::LeastLoad] {
+            let mk = |cold_sample: usize| {
+                let mut g = GlobalScheduler::new(
+                    policy,
+                    OperatorCostModel::paper_13b(),
+                    16,
+                    0.0,
+                );
+                g.cold_sample = cold_sample;
+                for i in 0..80 {
+                    g.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+                }
+                g
+            };
+            let loads = |id: InstanceId| InstanceLoad {
+                queued_tokens: ((id.0 as u64 * 2654435761) % 4096) as usize,
+                ..Default::default()
+            };
+            let mut capped = mk(8);
+            let mut full = mk(0);
+            for s in 0..30u64 {
+                let t = toks(256, (s % 5) as u32);
+                if s < 3 {
+                    capped.record_cached(InstanceId(s as u32 * 7), &t, 0.5);
+                    full.record_cached(InstanceId(s as u32 * 7), &t, 0.5);
+                }
+                let a = capped.route(&t, s, &loads, 1.0).unwrap();
+                let b = full.route(&t, s, &loads, 1.0).unwrap();
+                assert_eq!(a.decision, b.decision, "policy {policy:?} s={s}");
+            }
+        }
     }
 
     #[test]

@@ -202,13 +202,23 @@ pub fn run_instance(
                     engine.pool.release_remote(d);
                 }
             }
-            Some(Msg::Token { .. })
-            | Some(Msg::Finished { .. })
-            | Some(Msg::Heartbeat { .. })
-            | Some(Msg::Cached { .. })
-            | Some(Msg::MigrateLanded { .. })
-            | Some(Msg::DrainDone { .. }) => {} // leader-bound; ignore
+            Some(other) => {
+                // Leader- or replica-bound traffic; not ours.
+                log::debug!("instance {} ignoring {other:?}", cfg.id);
+            }
             None => {}
+        }
+
+        // Honest-eviction reporting: whatever the pool's LRU dropped
+        // since the last loop turn goes to the leader as Expire-shaped
+        // prefixes, so global-tree routing stops counting on KV this
+        // instance no longer holds (replacing TTL guessing end to end).
+        let evicted = engine.pool.take_evicted_prefixes();
+        if !evicted.is_empty() {
+            let _ = fabric.send(cfg.id, cfg.leader, Msg::Evicted {
+                instance: cfg.id,
+                prefixes: evicted,
+            });
         }
 
         // One decode iteration (round-robin one request per loop so the

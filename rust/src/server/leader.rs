@@ -26,6 +26,9 @@ use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
 use crate::server::instance::{run_instance, InstanceConfig};
 use crate::server::message::Msg;
+use crate::server::replica::{
+    follower_id, run_gs_follower, GsReplication,
+};
 use crate::tokenizer::Tokenizer;
 
 const LEADER: InstanceId = InstanceId(u32::MAX);
@@ -112,6 +115,17 @@ pub struct ServeCluster {
     lifecycle: Mutex<Lifecycle>,
     /// In-flight drains (instance → progress).
     drains: Mutex<HashMap<InstanceId, DrainProgress>>,
+    /// Signaled (paired with `drains`) on any drain progress — a
+    /// migration ack, the drain barrier, or an in-flight request
+    /// finishing — so [`Self::drain`] waits event-driven instead of
+    /// polling.
+    drain_cv: Condvar,
+    /// GS replication: sequenced delta transport + follower roster.
+    /// Lock order: `gs` before this.
+    replication: Mutex<GsReplication>,
+    /// Promotion handshake for [`Self::fail_gs_primary`].
+    promote_done: Mutex<bool>,
+    promote_cv: Condvar,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_rid: AtomicU64,
     /// Next instance id for scale-up joins.
@@ -240,6 +254,31 @@ impl ServeCluster {
             }));
         }
 
+        // GS replication: spawn follower replica threads and seed the
+        // delta log with the roster's Join events so replicas converge
+        // from sequence 0.
+        let followers: Vec<InstanceId> = (0..cfgc.scheduler.gs_replicas)
+            .map(follower_id)
+            .collect();
+        let mut replication = GsReplication::new(followers.clone());
+        if !followers.is_empty() {
+            for &(iid, kind) in &specs {
+                replication.transport.append(DeltaEvent::Join {
+                    instance: iid,
+                    kind,
+                });
+            }
+            for &fid in &followers {
+                let fab = fabric.clone();
+                let ep = fabric.attach(fid);
+                let bt = geom.block_tokens;
+                let ttl = cfgc.scheduler.tree_ttl_s;
+                handles.push(std::thread::spawn(move || {
+                    run_gs_follower(fid, LEADER, bt, ttl, epoch, fab, ep);
+                }));
+            }
+        }
+
         // Threads are up: the whole seed roster goes Active.
         for &(iid, _) in &specs {
             lifecycle.activate(iid).expect("seed roster joins once");
@@ -253,6 +292,10 @@ impl ServeCluster {
             instances: RwLock::new(specs),
             lifecycle: Mutex::new(lifecycle),
             drains: Mutex::new(HashMap::new()),
+            drain_cv: Condvar::new(),
+            replication: Mutex::new(replication),
+            promote_done: Mutex::new(false),
+            promote_cv: Condvar::new(),
             handles: Mutex::new(handles),
             next_rid: AtomicU64::new(1),
             started: epoch,
@@ -264,6 +307,12 @@ impl ServeCluster {
             decode_rr: AtomicU64::new(0),
         });
 
+        // Ship the seed-roster backlog to the GS followers.
+        cluster
+            .replication
+            .lock()
+            .unwrap()
+            .flush(&cluster.fabric, LEADER);
         // Collector thread: drains the leader endpoint.
         let c2 = cluster.clone();
         let h = std::thread::spawn(move || c2.collector(leader_ep));
@@ -273,6 +322,47 @@ impl ServeCluster {
 
     fn now(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
+    }
+
+    /// The single write path of the (replicated) global prompt tree:
+    /// apply the delta to the primary, append it to the sequenced log,
+    /// and ship sendable windows to every GS follower. Every ownership
+    /// mutation — response-path records, honest evictions, handoffs,
+    /// drain toggles, membership — funnels through here, which is what
+    /// makes a follower's replica a faithful promotion target.
+    fn gs_apply(&self, ev: DeltaEvent) {
+        self.gs_apply_batch(std::iter::once(ev));
+    }
+
+    /// Batch form. Tree-apply and log-append happen under ONE combined
+    /// critical section (`gs` then `replication`, the global lock
+    /// order): apply order and log order must never invert across
+    /// threads — concurrent appliers (collector records vs. a drain's
+    /// SetDraining/Leave) would otherwise replicate a different history
+    /// than the primary executed, and `apply_delta`'s order-sensitive
+    /// guards (e.g. a Handoff after the receiver's Leave) would
+    /// permanently diverge the followers. The fabric flush happens
+    /// after the `gs` lock is released — flush order is irrelevant
+    /// (per-peer cursors send by sequence), so routing never waits on
+    /// the wire.
+    fn gs_apply_batch(&self, evs: impl IntoIterator<Item = DeltaEvent>) {
+        let mut evs = evs.into_iter().peekable();
+        if evs.peek().is_none() {
+            return;
+        }
+        let mut gs = self.gs.lock().unwrap();
+        let mut rep = self.replication.lock().unwrap();
+        let replicate = !rep.followers.is_empty();
+        for ev in evs {
+            gs.trees.apply_delta(&ev);
+            if replicate {
+                rep.transport.append(ev);
+            }
+        }
+        drop(gs);
+        if replicate {
+            rep.flush(&self.fabric, LEADER);
+        }
     }
 
     fn collector(&self, ep: crate::net::Endpoint<Msg>) {
@@ -320,38 +410,47 @@ impl ServeCluster {
                     completion_time,
                     cached_seq,
                 } => {
-                    // Response path: update global prompt trees (Fig 6).
+                    // Response path: update global prompt trees (Fig 6),
+                    // replicated as a Record delta.
                     if !cached_seq.is_empty() {
-                        self.gs.lock().unwrap().record_cached(
+                        self.gs_apply(DeltaEvent::Record {
                             instance,
-                            &cached_seq,
-                            self.now(),
-                        );
+                            tokens: cached_seq,
+                            now: self.now(),
+                        });
                     }
-                    let mut p = self.shared.pending.lock().unwrap();
-                    if let Some(entry) = p.get_mut(&rid) {
-                        let rec = RequestRecord {
-                            request_id: rid,
-                            session_id: entry.session,
-                            arrival: entry
-                                .record
-                                .as_ref()
-                                .map(|r| r.arrival)
-                                .unwrap_or(scheduled),
-                            scheduled,
-                            first_token: first_token_time,
-                            completion: completion_time,
-                            prompt_tokens,
-                            cached_tokens,
-                            output_tokens,
-                            prefill_instance: entry.dispatched_to.0,
-                            decode_instance: instance.0,
-                        };
-                        self.metrics.lock().unwrap().push(rec.clone());
-                        entry.record = Some(rec);
-                        entry.done = true;
-                        self.shared.cv.notify_all();
+                    {
+                        let mut p = self.shared.pending.lock().unwrap();
+                        if let Some(entry) = p.get_mut(&rid) {
+                            let rec = RequestRecord {
+                                request_id: rid,
+                                session_id: entry.session,
+                                arrival: entry
+                                    .record
+                                    .as_ref()
+                                    .map(|r| r.arrival)
+                                    .unwrap_or(scheduled),
+                                scheduled,
+                                first_token: first_token_time,
+                                completion: completion_time,
+                                prompt_tokens,
+                                cached_tokens,
+                                output_tokens,
+                                prefill_instance: entry.dispatched_to.0,
+                                decode_instance: instance.0,
+                            };
+                            self.metrics.lock().unwrap().push(rec.clone());
+                            entry.record = Some(rec);
+                            entry.done = true;
+                            self.shared.cv.notify_all();
+                        }
                     }
+                    // Wake any drain waiting out in-flight requests.
+                    // Lock order: `pending` is released before `drains`
+                    // is taken (the drain waiter holds `drains`, then
+                    // briefly `pending`).
+                    let _g = self.drains.lock().unwrap();
+                    self.drain_cv.notify_all();
                 }
                 Msg::Heartbeat { from } => {
                     self.cm.lock().unwrap().heartbeat(from, self.now());
@@ -362,12 +461,21 @@ impl ServeCluster {
                     // candidates visible to the prompt-tree policy and
                     // gives the migration planner a real inventory.
                     if !seq.is_empty() {
-                        self.gs.lock().unwrap().record_cached(
+                        self.gs_apply(DeltaEvent::Record {
                             instance,
-                            &seq,
-                            self.now(),
-                        );
+                            tokens: seq,
+                            now: self.now(),
+                        });
                     }
+                }
+                Msg::Evicted { instance, prefixes } => {
+                    // Honest local-eviction report: the instance's LRU
+                    // dropped these prefixes — retire them from the
+                    // global view instead of waiting out the TTL. One
+                    // lock acquisition + one follower flush per batch.
+                    self.gs_apply_batch(prefixes.into_iter().map(
+                        |prefix| DeltaEvent::Expire { instance, prefix },
+                    ));
                 }
                 Msg::MigrateLanded { from, to, tokens } => {
                     // Ownership re-points atomically: the receiver gains
@@ -376,28 +484,77 @@ impl ServeCluster {
                     // tokens (failed/no-op task) only advance progress.
                     let now = self.now();
                     let blocks = tokens.len() / self.geom.block_tokens;
-                    self.gs.lock().unwrap().trees.apply_delta(
-                        &DeltaEvent::Handoff {
-                            from,
-                            to,
-                            tokens,
-                            now,
-                        },
-                    );
-                    if let Some(p) = self.drains.lock().unwrap().get_mut(&from)
-                    {
+                    self.gs_apply(DeltaEvent::Handoff {
+                        from,
+                        to,
+                        tokens,
+                        now,
+                    });
+                    let mut d = self.drains.lock().unwrap();
+                    if let Some(p) = d.get_mut(&from) {
                         p.landed += 1;
                         if blocks > 0 {
                             p.landed_prefixes += 1;
                             p.landed_blocks += blocks;
                         }
                     }
+                    self.drain_cv.notify_all();
                 }
                 Msg::DrainDone { from } => {
-                    if let Some(p) = self.drains.lock().unwrap().get_mut(&from)
-                    {
+                    let mut d = self.drains.lock().unwrap();
+                    if let Some(p) = d.get_mut(&from) {
                         p.done = true;
                     }
+                    self.drain_cv.notify_all();
+                }
+                Msg::DeltaAck { from, next } => {
+                    // Cumulative ack / gap re-request from a GS
+                    // follower: advance (or rewind) its cursor, ship
+                    // whatever became sendable, truncate behind the
+                    // slowest replica.
+                    let mut rep = self.replication.lock().unwrap();
+                    rep.transport.on_ack(from.0 as u64, next);
+                    rep.flush(&self.fabric, LEADER);
+                }
+                Msg::SnapshotReq { from } => {
+                    // A follower fell behind the retained log (or joined
+                    // late): bootstrap it at the current head. Captured
+                    // under both locks so no delta lands in between.
+                    let snap = {
+                        let gs = self.gs.lock().unwrap();
+                        let mut rep = self.replication.lock().unwrap();
+                        let seq = rep.transport.next_seq();
+                        rep.transport.skip_to(from.0 as u64, seq);
+                        crate::replica::TreeSnapshot::capture(
+                            &gs.trees, seq,
+                        )
+                    };
+                    let _ = self
+                        .fabric
+                        .send(LEADER, from, Msg::Snapshot { snap });
+                }
+                Msg::Snapshot { snap } => {
+                    // Promotion reply: the promoted follower's replica
+                    // at its applied sequence. Restore it, then replay
+                    // the retained log suffix past the snapshot — the
+                    // transport keeps every unacked entry, so the
+                    // restored tree carries the FULL pre-crash
+                    // ownership state plus everything routed during the
+                    // blackout.
+                    {
+                        let mut gs = self.gs.lock().unwrap();
+                        let rep = self.replication.lock().unwrap();
+                        let ttl = self.opts.config.scheduler.tree_ttl_s;
+                        let mut fresh = snap.restore(ttl);
+                        for seq in snap.seq..rep.transport.next_seq() {
+                            if let Some(ev) = rep.transport.get(seq) {
+                                fresh.apply_delta(ev);
+                            }
+                        }
+                        gs.trees = fresh;
+                    }
+                    *self.promote_done.lock().unwrap() = true;
+                    self.promote_cv.notify_all();
                 }
                 Msg::Shutdown => return,
                 other => log::debug!("leader ignoring {other:?}"),
@@ -412,12 +569,14 @@ impl ServeCluster {
     fn on_failure(&self, dead: &[InstanceId]) {
         log::warn!("instances failed: {dead:?}");
         {
-            let mut gs = self.gs.lock().unwrap();
             let mut lc = self.lifecycle.lock().unwrap();
             for d in dead {
-                gs.trees.remove_instance(*d);
                 lc.force_decommission(*d);
             }
+        }
+        for d in dead {
+            // Membership leaves via the replicated delta log (§4.4).
+            self.gs_apply(DeltaEvent::Leave { instance: *d });
         }
         let epoch = self.cm.lock().unwrap().epoch();
         let roster = self.instances.read().unwrap().clone();
@@ -640,6 +799,91 @@ impl ServeCluster {
         self.lifecycle.lock().unwrap().state(id)
     }
 
+    /// GS replication status: (log head, per-follower acked sequence).
+    pub fn gs_replication_status(&self) -> (u64, Vec<(InstanceId, u64)>) {
+        let rep = self.replication.lock().unwrap();
+        let head = rep.transport.next_seq();
+        let acks = rep
+            .followers
+            .iter()
+            .map(|f| (*f, rep.transport.acked(f.0 as u64).unwrap_or(0)))
+            .collect();
+        (head, acks)
+    }
+
+    /// Crash the GS primary and fail over to a follower replica
+    /// (failure injection; requires `scheduler.gs_replicas > 0`). The
+    /// primary's in-memory tree is discarded — exactly what a real
+    /// leader-GS crash loses — and rebuilt from cluster membership, so
+    /// routing continues *immediately* (cold matches, zero request
+    /// loss) while the most-caught-up follower is promoted: it replies
+    /// with a snapshot of its replica, which the leader restores and
+    /// tops up from the retained log suffix. Because the transport
+    /// retains every entry some replica has not acked, the restored
+    /// tree carries the complete pre-crash ownership state — locality
+    /// survives the crash (§5's standing assumption, now enforced).
+    /// Blocks until the promotion lands or `timeout`.
+    pub fn fail_gs_primary(&self, timeout: Duration) -> Result<InstanceId> {
+        let target = {
+            let rep = self.replication.lock().unwrap();
+            rep.most_caught_up()
+                .context("no GS replicas configured (scheduler.gs_replicas)")?
+        };
+        *self.promote_done.lock().unwrap() = false;
+        // The crash: ownership state dies with the primary. Membership
+        // (and drain visibility) is re-derived from the lifecycle — the
+        // GS never owned that. The `instances` roster alone is NOT
+        // enough: failed instances are force-decommissioned but stay
+        // listed (only drains prune the list), and re-adding one here
+        // would resurrect a dead instance as routable for the blackout.
+        // Snapshot roster + states first (no nested lock orders), then
+        // swap the tree.
+        let roster = self.instances.read().unwrap().clone();
+        let members: Vec<(InstanceId, InstanceKind, bool)> = {
+            use crate::elastic::InstanceState;
+            let lc = self.lifecycle.lock().unwrap();
+            roster
+                .iter()
+                .filter_map(|&(iid, kind)| match lc.state(iid) {
+                    Some(InstanceState::Active)
+                    | Some(InstanceState::Joining) => {
+                        Some((iid, kind, false))
+                    }
+                    Some(InstanceState::Draining) => Some((iid, kind, true)),
+                    _ => None, // Decommissioned / unknown: stay gone
+                })
+                .collect()
+        };
+        {
+            let mut gs = self.gs.lock().unwrap();
+            let mut fresh = GlobalPromptTrees::new(
+                self.geom.block_tokens,
+                self.opts.config.scheduler.tree_ttl_s,
+            );
+            for &(iid, kind, draining) in &members {
+                fresh.add_instance(iid, kind);
+                if draining {
+                    fresh.set_draining(iid, true);
+                }
+            }
+            gs.trees = fresh;
+        }
+        log::warn!("GS primary crashed (injected); promoting {target}");
+        self.fabric
+            .send(LEADER, target, Msg::Promote { reply_to: LEADER })
+            .map_err(|e| anyhow::anyhow!("promote {target}: {e}"))?;
+        let deadline = Instant::now() + timeout;
+        let mut done = self.promote_done.lock().unwrap();
+        while !*done {
+            let left = deadline.saturating_duration_since(Instant::now());
+            anyhow::ensure!(!left.is_zero(), "GS promotion timed out");
+            let (guard, _) =
+                self.promote_cv.wait_timeout(done, left).unwrap();
+            done = guard;
+        }
+        Ok(target)
+    }
+
     /// Recompute the decode→prefill backflow pairing (round-robin over
     /// routable prefill-only instances) and push it to every routable
     /// decode-only instance. Called after any membership change (drain,
@@ -743,7 +987,7 @@ impl ServeCluster {
             .unwrap()
             .activate(id)
             .map_err(|e| anyhow::anyhow!("activate {id}: {e}"))?;
-        self.gs.lock().unwrap().add_instance(id, kind);
+        self.gs_apply(DeltaEvent::Join { instance: id, kind });
         self.rewire_backflow();
         log::info!("instance {id} joined as {kind:?}");
         Ok(id)
@@ -803,10 +1047,14 @@ impl ServeCluster {
             .begin_drain(id)
             .map_err(|e| anyhow::anyhow!("drain {id}: {e}"))?;
         let now = self.now();
-        // Stop routing to it and plan while its view is intact.
+        // Stop routing to it (replicated — a promoted GS must know the
+        // drain state too) and plan while its view is intact.
+        self.gs_apply(DeltaEvent::SetDraining {
+            instance: id,
+            draining: true,
+        });
         let plan = {
-            let mut gs = self.gs.lock().unwrap();
-            gs.trees.set_draining(id, true);
+            let gs = self.gs.lock().unwrap();
             let lc = self.lifecycle.lock().unwrap();
             let recipients: Vec<Recipient> = lc
                 .active_where(|k| k.runs_prefill())
@@ -843,54 +1091,63 @@ impl ServeCluster {
             .map_err(|e| anyhow::anyhow!("drain barrier: {e}"))?;
         // Wait: every migration landed, the barrier acked, and no
         // in-flight request still prefilling OR decoding here (zero
-        // request loss).
+        // request loss). Event-driven: the collector signals `drain_cv`
+        // on every migration ack, the drain barrier, and every request
+        // completion — no polling tick. The condvar pairs with the
+        // `drains` mutex; `pending` is only ever taken briefly *inside*
+        // that critical section (the collector releases `pending`
+        // before touching `drains`, so the order is acyclic and a
+        // completion signaled between our check and the wait cannot be
+        // lost — the notifier blocks on `drains` until we wait).
         let deadline = Instant::now() + timeout;
-        loop {
-            let migrated = {
-                let d = self.drains.lock().unwrap();
-                let p = d.get(&id).context("drain state lost")?;
-                p.done && p.landed >= p.expected
-            };
-            let idle = {
-                let pend = self.shared.pending.lock().unwrap();
-                !pend.values().any(|e| {
-                    !e.done
-                        && (e.dispatched_to == id || e.decode_on == Some(id))
-                })
-            };
-            if migrated && idle {
-                break;
-            }
-            if Instant::now() >= deadline {
-                // Abort, don't wedge: restore the instance to Active.
-                // Handoffs already applied stay applied — the receivers
-                // really hold those prefixes; the donor resumes serving
-                // with whatever it still caches.
-                self.drains.lock().unwrap().remove(&id);
-                self.gs.lock().unwrap().trees.set_draining(id, false);
-                let _ = self.lifecycle.lock().unwrap().abort_drain(id);
-                anyhow::bail!(
-                    "drain timeout for {id}: drain aborted, instance \
-                     restored to Active"
-                );
-            }
-            std::thread::sleep(Duration::from_millis(10));
-        }
-        // Snapshot what actually landed before tearing state down.
         let (landed_prefixes, landed_blocks) = {
-            let d = self.drains.lock().unwrap();
-            let p = d.get(&id).context("drain state lost")?;
-            (p.landed_prefixes, p.landed_blocks)
+            let mut d = self.drains.lock().unwrap();
+            loop {
+                let migrated = {
+                    let p = d.get(&id).context("drain state lost")?;
+                    p.done && p.landed >= p.expected
+                };
+                let idle = {
+                    let pend = self.shared.pending.lock().unwrap();
+                    !pend.values().any(|e| {
+                        !e.done
+                            && (e.dispatched_to == id
+                                || e.decode_on == Some(id))
+                    })
+                };
+                if migrated && idle {
+                    let p = d.get(&id).context("drain state lost")?;
+                    break (p.landed_prefixes, p.landed_blocks);
+                }
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    // Abort, don't wedge: restore the instance to
+                    // Active. Handoffs already applied stay applied —
+                    // the receivers really hold those prefixes; the
+                    // donor resumes serving with whatever it still
+                    // caches.
+                    d.remove(&id);
+                    drop(d);
+                    self.gs_apply(DeltaEvent::SetDraining {
+                        instance: id,
+                        draining: false,
+                    });
+                    let _ = self.lifecycle.lock().unwrap().abort_drain(id);
+                    anyhow::bail!(
+                        "drain timeout for {id}: drain aborted, instance \
+                         restored to Active"
+                    );
+                }
+                let (guard, _) =
+                    self.drain_cv.wait_timeout(d, left).unwrap();
+                d = guard;
+            }
         };
         // Decommission: stop the thread, clear membership + ownership.
         let _ = self.fabric.send(LEADER, id, Msg::Shutdown);
         self.fabric.detach(id);
         self.cm.lock().unwrap().deregister(id);
-        self.gs
-            .lock()
-            .unwrap()
-            .trees
-            .apply_delta(&DeltaEvent::Leave { instance: id });
+        self.gs_apply(DeltaEvent::Leave { instance: id });
         self.lifecycle
             .lock()
             .unwrap()
@@ -915,11 +1172,15 @@ impl ServeCluster {
         })
     }
 
-    /// Graceful shutdown: stop instances and the collector.
+    /// Graceful shutdown: stop instances, GS followers, the collector.
     pub fn shutdown(&self) {
         let roster = self.instances.read().unwrap().clone();
         for &(iid, _) in &roster {
             let _ = self.fabric.send(LEADER, iid, Msg::Shutdown);
+        }
+        let followers = self.replication.lock().unwrap().followers.clone();
+        for fid in followers {
+            let _ = self.fabric.send(LEADER, fid, Msg::Shutdown);
         }
         let _ = self.fabric.send(LEADER, LEADER, Msg::Shutdown);
         let handles = std::mem::take(&mut *self.handles.lock().unwrap());

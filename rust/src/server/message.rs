@@ -1,8 +1,11 @@
-//! Wire messages between the leader and instance threads.
+//! Wire messages between the leader, instance threads, and GS replica
+//! threads.
 
+use crate::elastic::delta::DeltaEvent;
 use crate::engine::Request;
 use crate::mempool::InstanceId;
 use crate::net::WireCost;
+use crate::replica::snapshot::TreeSnapshot;
 
 /// One cluster message. Bulk KV messages report their wire cost (bytes +
 /// per-block network calls) so the fabric models NCCL behaviour; control
@@ -114,6 +117,33 @@ pub enum Msg {
         epoch: u64,
         dead: Vec<InstanceId>,
     },
+    /// Instance → leader: the pool's LRU evicted these token prefixes
+    /// (each the `DeltaEvent::Expire` shape — the prefix and every
+    /// extension are gone). The honest-eviction signal that replaces
+    /// global-tree TTL guessing (§6 Discussion).
+    Evicted {
+        instance: InstanceId,
+        prefixes: Vec<Vec<u32>>,
+    },
+    /// Leader (GS primary) → GS follower: one sequenced ownership delta
+    /// of the replicated global prompt tree.
+    Delta { seq: u64, ev: DeltaEvent },
+    /// GS follower → leader: `next` is the next sequence this replica
+    /// needs — a cumulative ack, and (when it is lower than what the
+    /// leader already sent) a gap re-request that rewinds the send
+    /// cursor.
+    DeltaAck { from: InstanceId, next: u64 },
+    /// GS follower → leader: this replica fell behind the retained log
+    /// (or is joining late) — bootstrap it with a [`Msg::Snapshot`].
+    SnapshotReq { from: InstanceId },
+    /// Fused-tree snapshot at a log position: leader → follower for
+    /// bootstrap/catch-up, or follower → leader as the [`Msg::Promote`]
+    /// reply carrying the promoted replica's state.
+    Snapshot { snap: TreeSnapshot },
+    /// Leader → the most-caught-up GS follower after a primary crash:
+    /// you are promoted — reply to `reply_to` with your tree state
+    /// (as a [`Msg::Snapshot`] at your applied sequence).
+    Promote { reply_to: InstanceId },
     /// Leader → instance: drain and exit.
     Shutdown,
 }
@@ -196,6 +226,34 @@ impl std::fmt::Debug for Msg {
             Msg::DrainDone { from } => {
                 f.debug_struct("DrainDone").field("from", from).finish()
             }
+            Msg::Evicted { instance, prefixes } => f
+                .debug_struct("Evicted")
+                .field("instance", instance)
+                .field("prefixes", &prefixes.len())
+                .finish(),
+            Msg::Delta { seq, ev } => f
+                .debug_struct("Delta")
+                .field("seq", seq)
+                .field("ev", ev)
+                .finish(),
+            Msg::DeltaAck { from, next } => f
+                .debug_struct("DeltaAck")
+                .field("from", from)
+                .field("next", next)
+                .finish(),
+            Msg::SnapshotReq { from } => f
+                .debug_struct("SnapshotReq")
+                .field("from", from)
+                .finish(),
+            Msg::Snapshot { snap } => f
+                .debug_struct("Snapshot")
+                .field("seq", &snap.seq)
+                .field("entries", &snap.entries.len())
+                .finish(),
+            Msg::Promote { reply_to } => f
+                .debug_struct("Promote")
+                .field("reply_to", reply_to)
+                .finish(),
             Msg::Shutdown => write!(f, "Shutdown"),
         }
     }

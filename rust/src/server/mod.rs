@@ -13,6 +13,7 @@
 pub mod instance;
 pub mod leader;
 pub mod message;
+pub mod replica;
 
 pub use leader::{ClientHandle, DrainReport, ServeCluster, ServeOptions};
 pub use message::Msg;

@@ -1,0 +1,190 @@
+//! GS replication over the fabric: follower threads and the leader's
+//! replication bookkeeping (ISSUE 4 tentpole, server wiring).
+//!
+//! With `scheduler.gs_replicas = N`, `ServeCluster::start` spawns `N`
+//! follower threads, each owning its own fused prompt tree. Every
+//! ownership mutation the leader applies (`ServeCluster::gs_apply`)
+//! is appended to a [`DeltaTransport`] and shipped as `Msg::Delta`;
+//! followers apply in strict sequence order through a [`DeltaCursor`],
+//! acking with `Msg::DeltaAck` (which doubles as the gap re-request —
+//! an ack below the send cursor rewinds it). A follower that falls
+//! behind the truncated log asks for `Msg::SnapshotReq` → `Msg::
+//! Snapshot` bootstrap. On a primary-GS crash
+//! (`ServeCluster::fail_gs_primary`), the leader promotes the
+//! most-caught-up follower with `Msg::Promote`; the follower answers
+//! with a snapshot of its replica at its applied sequence, and the
+//! leader restores it — then replays any retained log suffix past the
+//! snapshot — so routing resumes with the full locality state a real
+//! crash would otherwise have lost.
+
+use std::time::{Duration, Instant};
+
+use crate::mempool::InstanceId;
+use crate::net::{Endpoint, Fabric};
+use crate::replica::log::{DeltaCursor, DeltaTransport, Ingest};
+use crate::replica::snapshot::TreeSnapshot;
+use crate::scheduler::prompt_tree::GlobalPromptTrees;
+use crate::server::message::Msg;
+
+/// Follower ids live at the top of the id space, just below the leader
+/// (`u32::MAX`), far above any instance id.
+pub const GS_FOLLOWER_BASE: u32 = u32::MAX - 1;
+
+/// Fabric id of GS follower `k` (counting down from the leader).
+pub fn follower_id(k: usize) -> InstanceId {
+    InstanceId(GS_FOLLOWER_BASE - k as u32)
+}
+
+/// In-flight delta window per follower before acks must catch up.
+pub const GS_WINDOW: usize = 1024;
+
+/// Leader-side replication state (guarded by one mutex in the leader;
+/// lock order: `gs` before this).
+pub struct GsReplication {
+    pub transport: DeltaTransport,
+    pub followers: Vec<InstanceId>,
+}
+
+impl GsReplication {
+    pub fn new(followers: Vec<InstanceId>) -> Self {
+        let mut transport = DeltaTransport::new(GS_WINDOW);
+        for f in &followers {
+            transport.register(f.0 as u64, 0);
+        }
+        GsReplication {
+            transport,
+            followers,
+        }
+    }
+
+    /// Ship every sendable window; a follower whose endpoint is gone is
+    /// dropped from the peer set so it cannot stall log truncation.
+    pub fn flush(&mut self, fabric: &Fabric<Msg>, leader: InstanceId) {
+        let mut dead = vec![];
+        for &f in &self.followers {
+            let peer = f.0 as u64;
+            let range = self.transport.sendable(peer);
+            if range.is_empty() {
+                continue;
+            }
+            for seq in range.clone() {
+                let ev = self
+                    .transport
+                    .get(seq)
+                    .expect("sendable entry retained")
+                    .clone();
+                if fabric.send(leader, f, Msg::Delta { seq, ev }).is_err() {
+                    dead.push(f);
+                    break;
+                }
+            }
+            self.transport.mark_sent(peer, range.end);
+        }
+        for f in dead {
+            log::warn!("GS follower {f} unreachable; dropping replica");
+            self.transport.deregister(f.0 as u64);
+            self.followers.retain(|x| *x != f);
+        }
+        self.transport
+            .truncate_below(self.transport.min_acked());
+    }
+
+    /// The follower holding the longest applied prefix (promotion
+    /// target); `None` when no follower is registered.
+    pub fn most_caught_up(&self) -> Option<InstanceId> {
+        self.followers
+            .iter()
+            .copied()
+            .max_by_key(|f| {
+                (
+                    self.transport.acked(f.0 as u64).unwrap_or(0),
+                    u32::MAX - f.0,
+                )
+            })
+    }
+}
+
+/// One GS follower thread: a full replica of the global prompt tree,
+/// fed by the sequenced delta stream. Runs until `Shutdown`.
+pub fn run_gs_follower(
+    id: InstanceId,
+    leader: InstanceId,
+    block_tokens: usize,
+    ttl: f64,
+    epoch: Instant,
+    fabric: Fabric<Msg>,
+    endpoint: Endpoint<Msg>,
+) {
+    let mut tree = GlobalPromptTrees::new(block_tokens, ttl);
+    let mut cursor = DeltaCursor::new();
+    let ack = |fabric: &Fabric<Msg>, next: u64| {
+        let _ = fabric.send(id, leader, Msg::DeltaAck { from: id, next });
+    };
+    loop {
+        match endpoint.recv_timeout(Duration::from_millis(50)) {
+            Ok((_, Msg::Shutdown)) => return,
+            Ok((_, Msg::Delta { seq, ev })) => {
+                match cursor.offer(seq, ev) {
+                    Ingest::Ready(evs) => {
+                        for e in &evs {
+                            tree.apply_delta(e);
+                        }
+                        ack(&fabric, cursor.expected());
+                    }
+                    Ingest::Buffered { resend_from } => {
+                        // The window bounds legitimate out-of-order
+                        // buffering at GS_WINDOW - 1 entries; a buffer
+                        // past half the window means the gap keeps not
+                        // arriving (resend loss) — stop nacking and ask
+                        // for a snapshot bootstrap instead.
+                        if cursor.buffered() > GS_WINDOW / 2 {
+                            let _ = fabric.send(id, leader, Msg::SnapshotReq {
+                                from: id,
+                            });
+                        } else {
+                            // Gap: the ack value IS the re-request.
+                            ack(&fabric, resend_from);
+                        }
+                    }
+                    Ingest::Duplicate => ack(&fabric, cursor.expected()),
+                }
+            }
+            Ok((_, Msg::Snapshot { snap })) => {
+                // Bootstrap / catch-up past a truncated log prefix. A
+                // snapshot OLDER than our applied cursor must be
+                // ignored: restoring it would roll the tree back to
+                // snap.seq while the cursor stays at expected(), and
+                // the deltas in between — already applied and acked —
+                // would never be resent (e.g. a SnapshotReq raced gap
+                // resends that then filled the hole).
+                if snap.seq < cursor.expected() {
+                    ack(&fabric, cursor.expected());
+                } else {
+                    let mut fresh =
+                        GlobalPromptTrees::new(block_tokens, ttl);
+                    snap.restore_into(&mut fresh);
+                    tree = fresh;
+                    for e in cursor.advance_to(snap.seq) {
+                        tree.apply_delta(&e);
+                    }
+                    ack(&fabric, cursor.expected());
+                }
+            }
+            Ok((_, Msg::Promote { reply_to })) => {
+                // Failover: hand the caller this replica's state at its
+                // applied sequence. The thread keeps replicating — the
+                // restored primary resumes streaming to it.
+                let snap = TreeSnapshot::capture(&tree, cursor.expected());
+                let _ = fabric.send(id, reply_to, Msg::Snapshot { snap });
+            }
+            Ok((_, other)) => {
+                log::debug!("GS follower {id} ignoring {other:?}");
+            }
+            Err(_) => {}
+        }
+        // Local TTL housekeeping: expiry is a pure function of stamps,
+        // so replicas expire independently yet equivalently — a replica
+        // never needs an expiry delta.
+        tree.expire(epoch.elapsed().as_secs_f64());
+    }
+}

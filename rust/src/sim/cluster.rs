@@ -11,6 +11,7 @@ use crate::mempool::{
 };
 use crate::metrics::{Metrics, RequestRecord};
 use crate::net::LinkModel;
+use crate::replica::ReplicaGroup;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::prompt_tree::InstanceKind;
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
@@ -36,6 +37,10 @@ pub struct SimConfig {
     pub max_batch: usize,
     /// Global-tree TTL seconds (0 = off).
     pub tree_ttl: f64,
+    /// GS follower replicas mirroring every ownership delta (0 = off).
+    /// With replicas, a scripted [`FleetOp::GsFailover`] can crash the
+    /// routing tree mid-trace and promote a follower.
+    pub gs_replicas: usize,
     /// Scripted elasticity events (drain / join) on the virtual clock.
     pub fleet: Vec<FleetEvent>,
 }
@@ -56,6 +61,12 @@ pub enum FleetOp {
     Drain { inst: usize, migrate: bool },
     /// A new instance joins the fleet and becomes routable.
     Join { kind: InstanceKind },
+    /// The global scheduler's primary tree crashes; the most-caught-up
+    /// follower replica is promoted (after catch-up) and serves every
+    /// subsequent route. Requires `gs_replicas > 0`; zero request loss
+    /// and — since followers replay the same sequenced delta stream —
+    /// route decisions identical to an uninterrupted run.
+    GsFailover,
 }
 
 impl Default for SimConfig {
@@ -80,6 +91,7 @@ impl Default for SimConfig {
             hbm_blocks: 4096,
             max_batch: 16,
             tree_ttl: 300.0,
+            gs_replicas: 0,
             fleet: vec![],
         }
     }
@@ -99,6 +111,14 @@ pub struct SimReport {
     /// Token-blocks a scale-down dropped (cold tails, or everything
     /// under a naive decommission).
     pub dropped_token_blocks: u64,
+    /// Scripted GS-primary failovers executed.
+    pub gs_failovers: u64,
+    /// Token-blocks the GS believes the fleet caches at trace end.
+    pub gs_believed_token_blocks: u64,
+    /// Token-blocks the local indexes actually hold at trace end. With
+    /// honest-eviction reporting, believed never exceeds actual
+    /// (pre-ISSUE-4, only the TTL bounded the GS's over-belief).
+    pub indexed_token_blocks: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -185,12 +205,16 @@ impl Instance {
     }
 
     /// Insert tokens into the local index (capacity-enforced LRU).
+    /// Returns the token prefixes the LRU evicted to make room — the
+    /// honest-eviction signal the caller reports to the GS as `Expire`
+    /// deltas instead of leaving stale global-tree entries to the TTL.
     fn index_insert(&mut self, tokens: &[u32], now: f64,
-                    geom: &BlockGeometry) {
+                    geom: &BlockGeometry) -> Vec<Vec<u32>> {
+        let mut evicted = vec![];
         let usable = self.index.usable_len(tokens.len());
         let nb = usable / geom.block_tokens;
         if nb == 0 {
-            return;
+            return evicted;
         }
         let per = geom.blocks_per_token_block();
         // Evict to fit (active KV accounting is folded into capacity by
@@ -201,7 +225,8 @@ impl Instance {
         {
             // Sim groups carry no addresses; count freed *token-blocks*.
             let before_tb = self.index.total_token_blocks();
-            self.index.evict_lru(1);
+            let (_, mut prefixes) = self.index.evict_lru_report(1);
+            evicted.append(&mut prefixes);
             let freed_tb = before_tb - self.index.total_token_blocks();
             if freed_tb == 0 {
                 break;
@@ -214,6 +239,7 @@ impl Instance {
         self.index.insert_unaddressed(&tokens[..usable], now);
         let added = self.index.total_token_blocks() - before;
         self.index_blocks += added * per;
+        evicted
     }
 
     fn index_match(&mut self, tokens: &[u32], now: f64) -> usize {
@@ -248,6 +274,11 @@ pub struct Simulation {
     nominal: BTreeMap<(usize, usize), f64>,
     instances: Vec<Instance>,
     gs: GlobalScheduler,
+    /// GS follower replicas: every ownership delta the serving tree
+    /// applies is mirrored through the sequenced log, so a scripted
+    /// [`FleetOp::GsFailover`] can promote one mid-trace. `None` when
+    /// unreplicated (or after a failover consumed the group).
+    replicas: Option<ReplicaGroup>,
     q: EventQueue<Ev>,
     ctx: Vec<Vec<u32>>, // per-session running context
     report: SimReport,
@@ -297,6 +328,25 @@ impl Simulation {
         for inst in &instances {
             gs.add_instance(inst.id, inst.kind);
         }
+        // GS replication: the followers consume the same membership
+        // deltas the serving tree starts from.
+        let replicas = if cfg.gs_replicas > 0 {
+            let mut grp = ReplicaGroup::new(
+                1 + cfg.gs_replicas,
+                cfg.geom.block_tokens,
+                cfg.tree_ttl,
+                256,
+            );
+            for inst in &instances {
+                grp.apply_sync(DeltaEvent::Join {
+                    instance: inst.id,
+                    kind: inst.kind,
+                });
+            }
+            Some(grp)
+        } else {
+            None
+        };
         let mut nominal = BTreeMap::new();
         for r in &plan.requests {
             nominal.insert((r.session_idx, r.turn_idx), r.nominal_time_s);
@@ -326,10 +376,42 @@ impl Simulation {
             nominal,
             instances,
             gs,
+            replicas,
             q,
             ctx,
             report: SimReport::default(),
             next_rid: 1,
+        }
+    }
+
+    /// The single write path of the (replicated) global prompt tree:
+    /// apply to the serving tree and mirror through the follower
+    /// replicas' sequenced log (synchronous in the sim — the virtual
+    /// clock has no in-flight window to model).
+    fn gs_delta(&mut self, ev: DeltaEvent) {
+        self.gs.trees.apply_delta(&ev);
+        if let Some(grp) = &mut self.replicas {
+            grp.apply_sync(ev);
+        }
+    }
+
+    /// Response-path record (Fig 6 right), replicated.
+    fn gs_record(&mut self, instance: InstanceId, tokens: &[u32], now: f64) {
+        self.gs_delta(DeltaEvent::Record {
+            instance,
+            tokens: tokens.to_vec(),
+            now,
+        });
+    }
+
+    /// Honest-eviction reports from instance `i`'s local LRU.
+    fn gs_evictions(&mut self, i: usize, prefixes: Vec<Vec<u32>>) {
+        let id = self.instances[i].id;
+        for prefix in prefixes {
+            self.gs_delta(DeltaEvent::Expire {
+                instance: id,
+                prefix,
+            });
         }
     }
 
@@ -380,6 +462,10 @@ impl Simulation {
         }
         self.report.sim_seconds = self.q.now();
         for inst in &self.instances {
+            self.report.gs_believed_token_blocks +=
+                self.gs.trees.cached_blocks(inst.id) as u64;
+            self.report.indexed_token_blocks +=
+                inst.index.total_token_blocks() as u64;
             self.report.evicted_blocks += inst.evicted_blocks;
             assert!(
                 inst.prefill_q.is_empty()
@@ -483,11 +569,32 @@ impl Simulation {
             FleetOp::Join { kind } => {
                 let id = self.instances.len() as u32;
                 let inst = Instance::new(id, kind, &self.cfg);
-                self.gs.trees.apply_delta(&DeltaEvent::Join {
+                self.gs_delta(DeltaEvent::Join {
                     instance: InstanceId(id),
                     kind,
                 });
                 self.instances.push(inst);
+            }
+            FleetOp::GsFailover => {
+                // The serving tree crashes. Promote the most-caught-up
+                // follower (catch-up included) and hand its tree to the
+                // scheduler: since every delta was mirrored through the
+                // sequenced log, the promoted replica's route decisions
+                // are identical to the lost primary's — the trace
+                // continues as if nothing happened (zero request loss,
+                // zero locality loss). The group is consumed: a second
+                // failover needs fresh replicas.
+                let Some(mut grp) = self.replicas.take() else {
+                    panic!(
+                        "GsFailover needs gs_replicas > 0 and fires at \
+                         most once per trace"
+                    );
+                };
+                let promoted = grp
+                    .fail_primary()
+                    .expect("gs_replicas >= 1 leaves a follower");
+                self.gs.trees = grp.extract_tree(promoted);
+                self.report.gs_failovers += 1;
             }
             FleetOp::Drain { inst, migrate } => {
                 if self.instances[inst].state != InstanceState::Active {
@@ -512,7 +619,7 @@ impl Simulation {
                 let id = self.instances[inst].id;
                 // Routing stops seeing it immediately; its view stays
                 // matchable for the planner.
-                self.gs.trees.apply_delta(&DeltaEvent::SetDraining {
+                self.gs_delta(DeltaEvent::SetDraining {
                     instance: id,
                     draining: true,
                 });
@@ -601,9 +708,10 @@ impl Simulation {
             self.maybe_decommission(from);
             return;
         }
-        self.instances[to].index_insert(&tokens, now, &geom);
+        let evicted = self.instances[to].index_insert(&tokens, now, &geom);
+        self.gs_evictions(to, evicted);
         let (fid, tid) = (self.instances[from].id, self.instances[to].id);
-        self.gs.trees.apply_delta(&DeltaEvent::Handoff {
+        self.gs_delta(DeltaEvent::Handoff {
             from: fid,
             to: tid,
             tokens,
@@ -633,9 +741,7 @@ impl Simulation {
         self.instances[i].index =
             RadixIndex::new(self.cfg.geom.block_tokens, 0.0);
         self.instances[i].index_blocks = 0;
-        self.gs
-            .trees
-            .apply_delta(&DeltaEvent::Leave { instance: id });
+        self.gs_delta(DeltaEvent::Leave { instance: id });
     }
 
     /// Serial-resource discipline: prefill-first, then decode iteration.
@@ -767,8 +873,10 @@ impl Simulation {
         if prefill_caches {
             let prompt = job.prompt.clone();
             let geom = self.cfg.geom;
-            self.instances[i].index_insert(&prompt, now, &geom);
-            self.gs.record_cached(self.instances[i].id, &prompt, now);
+            let evicted = self.instances[i].index_insert(&prompt, now, &geom);
+            self.gs_evictions(i, evicted);
+            let id = self.instances[i].id;
+            self.gs_record(id, &prompt, now);
         }
         match job.decode_inst {
             Some(d) => {
@@ -800,7 +908,8 @@ impl Simulation {
         if self.cfg.caching && self.cfg.milestone.decode_caches() {
             let prompt = job.prompt.clone();
             let geom = self.cfg.geom;
-            self.instances[d].index_insert(&prompt, now, &geom);
+            let evicted = self.instances[d].index_insert(&prompt, now, &geom);
+            self.gs_evictions(d, evicted);
         }
         if job.generated >= job.gen_target {
             self.finish(now, d, job);
@@ -854,10 +963,12 @@ impl Simulation {
             && (!on_decode_only || self.cfg.milestone.decode_caches())
         {
             let geom = self.cfg.geom;
-            self.instances[inst_idx].index_insert(&seq, now, &geom);
+            let evicted =
+                self.instances[inst_idx].index_insert(&seq, now, &geom);
+            self.gs_evictions(inst_idx, evicted);
             if !on_decode_only {
-                self.gs
-                    .record_cached(self.instances[inst_idx].id, &seq, now);
+                let id = self.instances[inst_idx].id;
+                self.gs_record(id, &seq, now);
             }
         }
         // Step 5: decode KV flows back to the prefill instance so its
@@ -886,8 +997,11 @@ impl Simulation {
             self.report.wire_calls += calls as u64;
             self.report.wire_seconds += wire;
             let geom = self.cfg.geom;
-            self.instances[p].index_insert(&seq, now + wire, &geom);
-            self.gs.record_cached(self.instances[p].id, &seq, now + wire);
+            let evicted =
+                self.instances[p].index_insert(&seq, now + wire, &geom);
+            self.gs_evictions(p, evicted);
+            let id = self.instances[p].id;
+            self.gs_record(id, &seq, now + wire);
         }
         // Session continuation (causal dependency).
         self.ctx[job.session] = seq;
@@ -1138,6 +1252,88 @@ mod tests {
         assert!(
             rm > rn,
             "migrate-on-drain should beat naive decommission: {rm} vs {rn}"
+        );
+    }
+
+    #[test]
+    fn gs_failover_zero_loss_identical_routing() {
+        // The ISSUE 4 acceptance bar: crash the GS primary mid-trace
+        // with 2 follower replicas. Zero request loss, and — because
+        // the promoted follower replayed the same sequenced delta
+        // stream — every subsequent route decision must be identical to
+        // an uninterrupted single-GS reference run.
+        let mk = |failover: bool| SimConfig {
+            prefill_instances: 3,
+            decode_instances: 2,
+            colocated_instances: 0,
+            gs_replicas: if failover { 2 } else { 0 },
+            fleet: if failover {
+                vec![FleetEvent {
+                    at: 5.0,
+                    op: FleetOp::GsFailover,
+                }]
+            } else {
+                vec![]
+            },
+            ..disagg(true)
+        };
+        let (spec, plan) = workload(50, 31);
+        let total = spec.total_requests();
+        let reference = Simulation::new(mk(false), spec.clone(), &plan).run();
+        let crashed = Simulation::new(mk(true), spec, &plan).run();
+        assert_eq!(crashed.gs_failovers, 1, "failover did not fire");
+        assert_eq!(reference.gs_failovers, 0);
+        // Zero request loss.
+        assert_eq!(reference.metrics.records.len(), total);
+        assert_eq!(crashed.metrics.records.len(), total);
+        // Route-decision convergence: per-request prefill AND decode
+        // placement identical, timings included (the promoted tree is
+        // state-identical, so the whole trace replays bit-equal).
+        let key = |m: &Metrics| {
+            let mut v: Vec<_> = m
+                .records
+                .iter()
+                .map(|r| {
+                    (
+                        r.request_id,
+                        r.prefill_instance,
+                        r.decode_instance,
+                        r.cached_tokens,
+                    )
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(
+            key(&reference.metrics),
+            key(&crashed.metrics),
+            "promoted GS diverged from the uninterrupted reference"
+        );
+    }
+
+    #[test]
+    fn honest_evictions_reach_the_global_tree() {
+        // Tiny caches force LRU churn; the honest-eviction Expire
+        // deltas must keep the GS's believed blocks within the actual
+        // local index totals (no stale over-belief), while the trace
+        // still completes. (Pre-ISSUE-4 the GS only ever learned about
+        // inserts, so its view could only over-count between TTLs.)
+        let mut cfg = pd_colocated(true);
+        cfg.hbm_blocks = 64;
+        cfg.tree_ttl = 0.0; // no TTL: evictions are the ONLY cleanup
+        let (spec, plan) = workload(40, 8);
+        let total = spec.total_requests();
+        let sim = Simulation::new(cfg, spec, &plan);
+        let rep = sim.run();
+        assert_eq!(rep.metrics.records.len(), total);
+        assert!(rep.evicted_blocks > 0, "workload must churn the cache");
+        assert!(
+            rep.gs_believed_token_blocks <= rep.indexed_token_blocks,
+            "GS over-believes despite honest evictions: believed {} > \
+             indexed {}",
+            rep.gs_believed_token_blocks,
+            rep.indexed_token_blocks
         );
     }
 

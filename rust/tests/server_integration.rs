@@ -251,6 +251,56 @@ fn drain_waits_for_inflight_requests() {
 }
 
 #[test]
+fn gs_failover_restores_routing_state_mid_run() {
+    // Replicated global scheduler (ISSUE 4): with 2 follower replicas,
+    // crashing the GS primary mid-run must lose zero requests AND zero
+    // locality state — the promoted follower's replica (plus the
+    // retained delta-log suffix) restores the full prompt tree, so the
+    // warm prompt still routes to its cache holder afterwards.
+    let mut cfg = config(2, 1, 0, true);
+    cfg.scheduler.gs_replicas = 2;
+    let Some(c) = start(cfg, DisaggMilestone::PdCaching3) else {
+        return;
+    };
+    // Warm one prefill instance and learn which one holds the cache.
+    let prompt = toks(64, 11);
+    let r1 = c.submit(prompt.clone(), 1, sampling(4)).unwrap();
+    let (g1, rec1) = c.collect(r1, T).unwrap();
+    let holder = rec1.prefill_instance;
+    // In-flight work across the crash: fire a batch, then kill the
+    // primary GS before collecting.
+    let rids: Vec<u64> = (0..3)
+        .map(|i| c.submit(toks(40, 400 + i), 2 + i as u64, sampling(3)).unwrap())
+        .collect();
+    let promoted = c.fail_gs_primary(T).unwrap();
+    let (head, acks) = c.gs_replication_status();
+    assert!(
+        acks.iter().any(|(f, _)| *f == promoted),
+        "promoted follower {promoted} left the replica set; head={head}"
+    );
+    for rid in rids {
+        let (g, _) = c.collect(rid, T).unwrap();
+        assert_eq!(g.len(), 3, "request lost across GS failover");
+    }
+    // The warm prompt must still be a cache hit on the SAME holder:
+    // the crash lost the primary's tree, so a hit here proves the
+    // promoted replica carried the ownership state over.
+    let r2 = c.submit(prompt.clone(), 1, sampling(4)).unwrap();
+    let (g2, rec2) = c.collect(r2, T).unwrap();
+    assert_eq!(
+        rec2.prefill_instance, holder,
+        "locality lost across GS failover"
+    );
+    assert!(
+        rec2.cached_tokens >= 48,
+        "cache state lost across GS failover: {}",
+        rec2.cached_tokens
+    );
+    assert_eq!(g1, g2, "failover changed generation");
+    c.shutdown();
+}
+
+#[test]
 fn failover_reroutes_requests() {
     let Some(c) = start(config(0, 0, 2, true), DisaggMilestone::PdCaching3)
     else {
