@@ -23,7 +23,7 @@ use memserve::scheduler::cost_model::OperatorCostModel;
 use memserve::scheduler::policy::{decide, Candidate};
 use memserve::scheduler::prompt_tree::InstanceKind;
 use memserve::scheduler::prompt_tree_ref::RefGlobalPromptTrees;
-use memserve::scheduler::router::{GlobalScheduler, InstanceLoad};
+use memserve::scheduler::router::GlobalScheduler;
 use memserve::scheduler::PolicyKind;
 use memserve::sim::{SimConfig, Simulation};
 use memserve::util::bench::{black_box, time_adaptive, Table};
@@ -81,7 +81,6 @@ fn route_sweep(ns: &[usize]) {
                     refr.record(id, &p, 1.0);
                 }
             }
-            let idle = |_: InstanceId| InstanceLoad::default();
             let cost = OperatorCostModel::paper_13b();
             // The seed routing path, end to end: per-instance tree walks
             // → candidate list → Eq. 1 decision. One definition serves
@@ -107,7 +106,7 @@ fn route_sweep(ns: &[usize]) {
                 )
             };
             // Sanity: both paths must route identically before timing.
-            let fused_out = gs.route(&hot, 7, &idle, 2.0).unwrap();
+            let fused_out = gs.route(&hot, 7, 2.0).unwrap();
             assert_eq!(
                 fused_out.decision,
                 ref_route(&refr),
@@ -115,7 +114,7 @@ fn route_sweep(ns: &[usize]) {
             );
 
             let mut fused_t = time_adaptive(80.0, 100, || {
-                black_box(gs.route(&hot, 7, &idle, 2.0).unwrap());
+                black_box(gs.route(&hot, 7, 2.0).unwrap());
             });
             let mut ref_t = time_adaptive(80.0, 100, || {
                 black_box(ref_route(&refr));

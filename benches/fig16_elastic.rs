@@ -29,7 +29,8 @@ use memserve::elastic::planner::{
 use memserve::mempool::{
     BlockGeometry, InstanceId, MemPool, Tier, TransferMode,
 };
-use memserve::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
+use memserve::scheduler::prompt_tree::InstanceKind;
+use memserve::scheduler::shard::ShardedPromptTrees;
 use memserve::sim::{FleetEvent, FleetOp, SimConfig, SimReport, Simulation};
 use memserve::util::bench::Table;
 use memserve::workload::{ArrivalPlan, WorkloadKind, WorkloadSpec};
@@ -69,7 +70,7 @@ fn seed_pool(pool: &mut MemPool, tokens: &[u32], fill: f32, now: f64) {
 }
 
 /// Fleet-wide best matched fraction for `tokens` (routable view).
-fn best_match(tree: &mut GlobalPromptTrees, tokens: &[u32]) -> f64 {
+fn best_match(tree: &mut ShardedPromptTrees, tokens: &[u32]) -> f64 {
     let mut out = vec![];
     tree.match_into(tokens, &mut out);
     out.iter()
@@ -91,7 +92,9 @@ fn survival_run(n: usize, migrate: bool) -> SurvivalRun {
     const HOT: usize = 8; // hot 2K-token prompts on the victim
     let now_warm = 100.0;
     let now_drain = 110.0;
-    let mut tree = GlobalPromptTrees::new(BT, 0.0);
+    // Two prefix-range shards: the planner and the handoff path run
+    // the sharded tree exactly as the live leader now does.
+    let mut tree = ShardedPromptTrees::with_shards(BT, 0.0, 2);
     let mut pools: Vec<MemPool> = (0..n)
         .map(|i| {
             tree.add_instance(InstanceId(i as u32), InstanceKind::PrefillOnly);

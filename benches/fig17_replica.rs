@@ -17,17 +17,26 @@
 //! only by the dead primary are honestly lost and the blackout is
 //! nonzero until re-records repair the view.
 //!
+//! Part 3 (`fig17_shard`, ISSUE 5): the prefix-range sharded tree's
+//! **write scaling**. S shards split the record stream by first-block
+//! fingerprint range, so each shard's log sequences ~1/S of the writes
+//! (asserted) while route decisions stay byte-identical to the
+//! unsharded group (asserted: zero divergent) — including across a
+//! scripted mid-stream failover of one shard's primary.
+//!
 //! Env knobs (used by the CI smoke job):
 //! * `MEMSERVE_FIG17_MODE` — `sweep` (part 1), `failover` (part 2),
-//!   anything else/unset runs both;
+//!   `shards` (part 3), anything else/unset runs all;
 //! * `MEMSERVE_FIG17_R` — comma-separated replica counts (default
-//!   `1,2,4,8`; failover uses each count ≥ 2).
+//!   `1,2,4,8`; failover uses each count ≥ 2);
+//! * `MEMSERVE_FIG17_S` — comma-separated shard counts for part 3
+//!   (default `1,2,4,8`).
 
 use std::time::Instant;
 
 use memserve::elastic::delta::DeltaEvent;
 use memserve::mempool::InstanceId;
-use memserve::replica::ReplicaGroup;
+use memserve::replica::{ReplicaGroup, ShardedReplicaGroup};
 use memserve::scheduler::cost_model::OperatorCostModel;
 use memserve::scheduler::policy::{decide, Candidate, Decision, PolicyKind};
 use memserve::scheduler::prompt_tree::InstanceKind;
@@ -35,6 +44,9 @@ use memserve::util::bench::{black_box, time_adaptive, Table};
 
 const BT: usize = 16;
 const N_INSTANCES: u32 = 16;
+/// Per-peer in-flight window of the bench transports (the GS_WINDOW
+/// analogue — one bound of the lagged-failover loss).
+const WINDOW: usize = 256;
 
 fn prompt(n: usize, seed: u32) -> Vec<u32> {
     (0..n as u32)
@@ -43,7 +55,7 @@ fn prompt(n: usize, seed: u32) -> Vec<u32> {
 }
 
 fn seed_group(r: usize) -> ReplicaGroup {
-    let mut g = ReplicaGroup::new(r, BT, 0.0, 256);
+    let mut g = ReplicaGroup::new(r, BT, 0.0, WINDOW);
     for i in 0..N_INSTANCES {
         g.apply_sync(DeltaEvent::Join {
             instance: InstanceId(i),
@@ -168,6 +180,12 @@ fn failover(rs: &[usize]) {
     let cost = OperatorCostModel::paper_13b();
     let n_ops = 1200usize;
     let crash_at = n_ops / 2;
+    // Sessions in the op stream, and how many ops the lagged variant
+    // withholds from the followers before the crash. WITHHOLD <
+    // SESSIONS keeps the derived blackout bound non-vacuous: each lost
+    // entry is one distinct session's Record.
+    const SESSIONS: usize = 64;
+    const WITHHOLD: usize = 16;
     for &r in rs {
         if r < 2 {
             continue; // failover needs a follower
@@ -181,10 +199,22 @@ fn failover(rs: &[usize]) {
             let mut blackout = 0usize;
             let mut promote_us = 0.0;
             let mut crashed = false;
+            let mut lost_entries = 0usize;
             for op in 0..n_ops {
-                let sid = (op % 64) as u64;
+                let sid = (op % SESSIONS) as u64;
                 let p = prompt(1024, 7 + sid as u32);
                 if op == crash_at {
+                    // Entries only the dead primary holds: the gap
+                    // between the log head and the best follower (the
+                    // promotion target).
+                    let best = g
+                        .live_indices()
+                        .into_iter()
+                        .filter(|&i| i != g.primary_index())
+                        .map(|i| g.applied_seq(i))
+                        .max()
+                        .expect("followers exist");
+                    lost_entries = (g.log_head() - best) as usize;
                     let t0 = Instant::now();
                     g.fail_primary().expect("a follower survives");
                     promote_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -215,9 +245,13 @@ fn failover(rs: &[usize]) {
                     now: 3.0 + op as f64 * 1e-3,
                 };
                 reference.apply_sync(evr);
-                if variant == "lagged" && !crashed && op + 64 >= crash_at {
-                    // The last window before the crash never leaves the
-                    // primary: appended, applied locally, not pumped.
+                if variant == "lagged"
+                    && !crashed
+                    && op + WITHHOLD >= crash_at
+                {
+                    // The last WITHHOLD appends before the crash never
+                    // leave the primary: appended, applied locally, not
+                    // pumped.
                     g.apply(ev);
                 } else {
                     g.apply_sync(ev);
@@ -225,8 +259,36 @@ fn failover(rs: &[usize]) {
             }
             if variant == "synced" {
                 assert_eq!(
+                    lost_entries, 0,
+                    "synced crash must not strand log entries"
+                );
+                assert_eq!(
                     blackout, 0,
                     "synced failover must lose zero route decisions"
+                );
+            } else {
+                // ISSUE 5 satellite: the lagged blackout is BOUNDED
+                // from the ack window, not merely measured. (1) The
+                // promotee can be missing at most the unpumped window:
+                // min(WITHHOLD, per-peer in-flight WINDOW) entries per
+                // shard — with pumping after every append (the live
+                // gs_apply flush), WINDOW is the hard cap. (2) Each
+                // lost entry is one session's Record over that
+                // session's private prompt, so at most `lost_entries`
+                // sessions can route differently from the reference —
+                // for at most their post-crash route count each.
+                assert!(
+                    lost_entries <= WITHHOLD.min(WINDOW),
+                    "lost {lost_entries} > window bound"
+                );
+                let rounds_per_session =
+                    (n_ops - crash_at).div_ceil(SESSIONS);
+                let bound = lost_entries * rounds_per_session;
+                assert!(
+                    blackout <= bound,
+                    "lagged blackout {blackout} exceeds the derived \
+                     bound {bound} ({lost_entries} lost entries × \
+                     {rounds_per_session} post-crash rounds)"
                 );
             }
             table.row(vec![
@@ -252,21 +314,158 @@ fn failover(rs: &[usize]) {
     );
 }
 
+/// Route through the sharded group's per-shard primaries (valid across
+/// per-shard failovers).
+fn route_sharded(
+    g: &mut ShardedReplicaGroup,
+    tokens: &[u32],
+    buf: &mut Vec<(InstanceId, usize)>,
+    cost: &OperatorCostModel,
+    sid: u64,
+) -> Decision {
+    g.route_match_primary(tokens, buf);
+    let cands: Vec<Candidate> = buf
+        .iter()
+        .map(|&(id, matched)| Candidate {
+            instance: id,
+            queued_tokens: 0,
+            queued_cached_ratio: 0.0,
+            matched_tokens: matched,
+            pressure: 0.0,
+        })
+        .collect();
+    decide(PolicyKind::PromptTree, &cands, tokens.len(), sid, |x, y| {
+        cost.exec(x, y)
+    })
+}
+
+fn shard_sweep(ss: &[usize]) {
+    let mut table = Table::new("fig17_shard", &[
+        "shards",
+        "replicas_per_shard",
+        "writes",
+        "per_shard_mean",
+        "per_shard_max",
+        "divergent",
+        "apply_us_mean",
+    ]);
+    println!(
+        "\n-- sharded GS write scaling: records split by first-block \
+         fingerprint range — each shard's log sequences ~1/S of the \
+         writes; decisions must equal the unsharded group's exactly, \
+         across a mid-stream failover of the last shard's primary --"
+    );
+    let cost = OperatorCostModel::paper_13b();
+    const WRITES: u32 = 256;
+    for &s in ss {
+        let mut g = ShardedReplicaGroup::new(s, 2, BT, 0.0, WINDOW);
+        let mut reference = ShardedReplicaGroup::new(1, 1, BT, 0.0,
+                                                     WINDOW);
+        for i in 0..N_INSTANCES {
+            let join = DeltaEvent::Join {
+                instance: InstanceId(i),
+                kind: InstanceKind::PrefillOnly,
+            };
+            g.apply_sync(join.clone());
+            reference.apply_sync(join);
+        }
+        let base: Vec<u64> = (0..s).map(|i| g.log_head(i)).collect();
+        let mut buf = vec![];
+        let mut rbuf = vec![];
+        let mut divergent = 0usize;
+        let mut apply_s = 0.0f64;
+        for k in 0..WRITES {
+            let p = prompt(1024, 100 + k);
+            let sid = (k % 64) as u64;
+            let d = route_sharded(&mut g, &p, &mut buf, &cost, sid);
+            let dref =
+                route_sharded(&mut reference, &p, &mut rbuf, &cost, sid);
+            if d != dref {
+                divergent += 1;
+            }
+            // Keep both streams identical regardless of decisions: the
+            // instance is derived from k, not from d (so one divergence
+            // cannot cascade and hide itself).
+            let ev = DeltaEvent::Record {
+                instance: InstanceId(k % N_INSTANCES),
+                tokens: p,
+                now: 1.0 + k as f64 * 1e-3,
+            };
+            let t0 = Instant::now();
+            g.apply_sync(ev.clone());
+            apply_s += t0.elapsed().as_secs_f64();
+            reference.apply_sync(ev);
+            if s >= 2 && k == WRITES / 2 {
+                // Mid-stream per-shard failover: the last shard's
+                // primary crashes and promotes; the other shards (and
+                // the reference) never notice.
+                g.fail_primary(s - 1).expect("a follower survives");
+            }
+        }
+        assert_eq!(
+            divergent, 0,
+            "sharded routing diverged from the unsharded group (S={s})"
+        );
+        // Write scaling: every record sequenced exactly once, split
+        // across the shards by fingerprint range.
+        let per_shard: Vec<u64> = (0..s)
+            .map(|i| g.log_head(i) - base[i])
+            .collect();
+        let total: u64 = per_shard.iter().sum();
+        assert_eq!(total, WRITES as u64, "records must shard exactly once");
+        let max = *per_shard.iter().max().unwrap();
+        let mean = total as f64 / s as f64;
+        assert!(
+            (max as f64) <= (3.0 * mean).max(8.0),
+            "shard skew: max {max} vs mean {mean:.1} (S={s})"
+        );
+        let apply_us = apply_s * 1e6 / WRITES as f64;
+        table.row(vec![
+            s.to_string(),
+            "2".into(),
+            WRITES.to_string(),
+            format!("{mean:.1}"),
+            max.to_string(),
+            divergent.to_string(),
+            format!("{apply_us:.2}"),
+        ]);
+        println!(
+            "  S={s}: per-shard applied mean {mean:6.1} max {max:4} \
+             (of {WRITES} writes)  divergent {divergent}  apply \
+             {apply_us:.2}us"
+        );
+    }
+    table.finish();
+    println!(
+        "\nExpected shape: per_shard_mean = writes/S (each shard's log \
+         and replica apply stream carries ~1/S of the write load — the \
+         S-way parallel headroom); divergent = 0 always."
+    );
+}
+
 fn main() {
     let mode = std::env::var("MEMSERVE_FIG17_MODE").unwrap_or_default();
-    let rs: Vec<usize> = std::env::var("MEMSERVE_FIG17_R")
-        .ok()
-        .map(|s| {
-            s.split(',')
-                .filter_map(|x| x.trim().parse().ok())
-                .collect::<Vec<usize>>()
-        })
-        .filter(|v| !v.is_empty())
-        .unwrap_or_else(|| vec![1, 2, 4, 8]);
-    if mode != "failover" {
+    let list = |var: &str, default: &[usize]| -> Vec<usize> {
+        std::env::var(var)
+            .ok()
+            .map(|s| {
+                s.split(',')
+                    .filter_map(|x| x.trim().parse().ok())
+                    .collect::<Vec<usize>>()
+            })
+            .filter(|v| !v.is_empty())
+            .unwrap_or_else(|| default.to_vec())
+    };
+    let rs = list("MEMSERVE_FIG17_R", &[1, 2, 4, 8]);
+    let ss = list("MEMSERVE_FIG17_S", &[1, 2, 4, 8]);
+    let all = !matches!(mode.as_str(), "sweep" | "failover" | "shards");
+    if all || mode == "sweep" {
         route_sweep(&rs);
     }
-    if mode != "sweep" {
+    if all || mode == "failover" {
         failover(&rs);
+    }
+    if all || mode == "shards" {
+        shard_sweep(&ss);
     }
 }

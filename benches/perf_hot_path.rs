@@ -20,7 +20,7 @@ use memserve::runtime::artifacts::artifacts_available;
 use memserve::runtime::ModelRuntime;
 use memserve::scheduler::cost_model::OperatorCostModel;
 use memserve::scheduler::prompt_tree::InstanceKind;
-use memserve::scheduler::router::{GlobalScheduler, InstanceLoad};
+use memserve::scheduler::router::GlobalScheduler;
 use memserve::scheduler::PolicyKind;
 use memserve::util::bench::{black_box, time_adaptive, Table};
 
@@ -149,9 +149,8 @@ fn main() {
     }
     let prompt4k = toks(4096, 9);
     gs.record_cached(InstanceId(1), &prompt4k[..2048], 1.0);
-    let idle = |_: InstanceId| InstanceLoad::default();
     let mut route_t = time_adaptive(60.0, 200, || {
-        black_box(gs.route(&prompt4k, 7, &idle, 2.0).unwrap());
+        black_box(gs.route(&prompt4k, 7, 2.0).unwrap());
     });
     let mut pool = MemPool::new(
         InstanceId(0),

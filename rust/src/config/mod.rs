@@ -84,6 +84,11 @@ pub struct SchedulerConfig {
     /// primary crash promotes the most-caught-up follower with its
     /// locality state intact (`ServeCluster::fail_gs_primary`).
     pub gs_replicas: usize,
+    /// Prefix-range shards of the global prompt tree (≥ 1). Each shard
+    /// owns a contiguous range of first token-block fingerprints with
+    /// its own delta log, so write replication scales ~1/S per shard;
+    /// 1 = the unsharded tree (bit-identical behavior).
+    pub gs_shards: usize,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -142,6 +147,7 @@ impl Default for Config {
                 tree_ttl_s: 300.0,
                 transfer_decision: true,
                 gs_replicas: 0,
+                gs_shards: 1,
             },
             engine: EngineConfig {
                 max_seq: 512,
@@ -249,6 +255,9 @@ impl Config {
             "scheduler.gs_replicas" => {
                 self.scheduler.gs_replicas = v.as_usize().ok_or_else(bad)?
             }
+            "scheduler.gs_shards" => {
+                self.scheduler.gs_shards = v.as_usize().ok_or_else(bad)?
+            }
             "engine.max_seq" => self.engine.max_seq = v.as_usize().ok_or_else(bad)?,
             "engine.max_new_tokens" => {
                 self.engine.max_new_tokens = v.as_usize().ok_or_else(bad)?
@@ -309,6 +318,9 @@ impl Config {
         if self.fabric.communicators == 0 {
             return Err("fabric.communicators must be > 0".into());
         }
+        if self.scheduler.gs_shards == 0 {
+            return Err("scheduler.gs_shards must be >= 1".into());
+        }
         if self.engine.max_seq % self.mempool.block_tokens != 0 {
             return Err("engine.max_seq must be a multiple of block_tokens".into());
         }
@@ -336,6 +348,7 @@ impl Config {
         m.insert("fabric.communicators".into(), c.fabric.communicators.to_string());
         m.insert("scheduler.policy".into(), c.scheduler.policy.name().into());
         m.insert("scheduler.gs_replicas".into(), c.scheduler.gs_replicas.to_string());
+        m.insert("scheduler.gs_shards".into(), c.scheduler.gs_shards.to_string());
         m.insert("engine.transfer_mode".into(), c.engine.transfer_mode.name().into());
         m.insert("workload.kind".into(), c.workload.kind.clone());
         m.insert("workload.rate".into(), c.workload.rate.to_string());

@@ -2,10 +2,10 @@
 //! drains (or runs capacity-hot).
 //!
 //! The planner works entirely from global-scheduler state — per-instance
-//! [`crate::scheduler::fused_tree::FusedPromptTree::owned_paths`]
-//! inventories (depth + last-insert recency) and per-recipient capacity
-//! pressure — so the leader can plan without touching any instance's
-//! pool. Selection policy, per the paper's economics (§5.3: transfer
+//! [`crate::scheduler::shard::ShardedPromptTrees::owned_paths`]
+//! inventories (depth + last-insert recency, merged token-sorted across
+//! the prefix-range shards) and per-recipient capacity pressure — so
+//! the leader can plan without touching any instance's pool. Selection policy, per the paper's economics (§5.3: transfer
 //! beats recompute in proportion to prefix length; Fig 13: caching gains
 //! grow with depth):
 //!
@@ -23,7 +23,7 @@
 //!   [`crate::scheduler::cost_model::pressure_discount`]).
 
 use crate::mempool::InstanceId;
-use crate::scheduler::fused_tree::FusedPromptTree;
+use crate::scheduler::shard::ShardedPromptTrees;
 
 /// Planner knobs. Defaults suit a drain (move every hot, deep prefix);
 /// set `max_blocks` for a pressure-offload rebalance that moves only the
@@ -87,7 +87,7 @@ pub struct MigrationPlan {
 /// for a given tree state: inventory order is token-sorted and every
 /// tie breaks by instance id.
 pub fn plan_migration(
-    tree: &FusedPromptTree,
+    tree: &ShardedPromptTrees,
     donor: InstanceId,
     now: f64,
     recipients: &[Recipient],
@@ -170,8 +170,11 @@ mod tests {
         (0..n as u32).map(|i| i * 5 + seed * 1000).collect()
     }
 
-    fn tree_with(donor_prompts: &[(usize, u32, f64)]) -> FusedPromptTree {
-        let mut t = FusedPromptTree::new(BT, 0.0);
+    fn tree_with(donor_prompts: &[(usize, u32, f64)])
+                 -> ShardedPromptTrees {
+        // Two shards: planning must see the same inventory regardless
+        // of how the prefix ranges split it.
+        let mut t = ShardedPromptTrees::with_shards(BT, 0.0, 2);
         for i in 0..4 {
             t.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
         }

@@ -34,11 +34,9 @@
 //!   replica from a primary snapshot at the current log head, then
 //!   catches up on the delta suffix like any follower.
 
-use std::collections::VecDeque;
-
 use crate::elastic::delta::DeltaEvent;
 use crate::mempool::InstanceId;
-use crate::replica::log::{DeltaCursor, DeltaTransport, Ingest};
+use crate::replica::log::{DeltaCursor, DeltaTransport, Ingest, SeqBuffer};
 use crate::replica::snapshot::TreeSnapshot;
 use crate::scheduler::prompt_tree::GlobalPromptTrees;
 
@@ -46,29 +44,10 @@ struct Replica {
     tree: GlobalPromptTrees,
     cursor: DeltaCursor,
     /// Applied suffix retained for peer catch-up after a primary
-    /// failure; `retained[i]` carries seq `retained_base + i`. Trimmed
-    /// in lockstep with the transport's truncation.
-    retained: VecDeque<DeltaEvent>,
-    retained_base: u64,
-}
-
-impl Replica {
-    fn retain(&mut self, seq: u64, ev: DeltaEvent) {
-        debug_assert_eq!(seq, self.retained_base + self.retained.len() as u64);
-        self.retained.push_back(ev);
-    }
-
-    fn retained_get(&self, seq: u64) -> Option<&DeltaEvent> {
-        seq.checked_sub(self.retained_base)
-            .and_then(|i| self.retained.get(i as usize))
-    }
-
-    fn trim_retained(&mut self, floor: u64) {
-        while self.retained_base < floor && !self.retained.is_empty() {
-            self.retained.pop_front();
-            self.retained_base += 1;
-        }
-    }
+    /// failure — the shared [`SeqBuffer`] core (one implementation for
+    /// this and the transport's retained log). Trimmed in lockstep with
+    /// the transport's truncation.
+    retained: SeqBuffer,
 }
 
 /// See module docs.
@@ -81,6 +60,9 @@ pub struct ReplicaGroup {
     window: usize,
     /// Deltas delivered to followers (diagnostics/benches).
     delivered: u64,
+    /// Coalesced acks processed (≤ one per follower per pump; the ack-
+    /// storm regression guard — pre-batching this equaled `delivered`).
+    acks_sent: u64,
 }
 
 impl ReplicaGroup {
@@ -97,8 +79,7 @@ impl ReplicaGroup {
             replicas.push(Some(Replica {
                 tree: GlobalPromptTrees::new(block_tokens, ttl),
                 cursor: DeltaCursor::new(),
-                retained: VecDeque::new(),
-                retained_base: 0,
+                retained: SeqBuffer::new(),
             }));
         }
         ReplicaGroup {
@@ -109,6 +90,7 @@ impl ReplicaGroup {
             ttl,
             window,
             delivered: 0,
+            acks_sent: 0,
         }
     }
 
@@ -145,6 +127,11 @@ impl ReplicaGroup {
 
     pub fn delivered(&self) -> u64 {
         self.delivered
+    }
+
+    /// Coalesced acks processed so far (≤ followers × pumps).
+    pub fn acks_sent(&self) -> u64 {
+        self.acks_sent
     }
 
     pub fn resends(&self) -> u64 {
@@ -247,7 +234,14 @@ impl ReplicaGroup {
             if range.is_empty() {
                 continue;
             }
-            let mut acks: Vec<u64> = vec![];
+            // Batched acks (ISSUE 5 satellite): the receiver no longer
+            // acks every delta — it coalesces the whole delivered batch
+            // into ONE cumulative ack per pump. The cursor's `expected`
+            // value is simultaneously the cumulative ack and (when it
+            // trails what was just sent) the gap re-request, so loss
+            // recovery latency is unchanged: the very next ack after a
+            // gap rewinds the send cursor.
+            let mut delivered_any = false;
             for seq in range.clone() {
                 let ev = self
                     .transport
@@ -258,25 +252,28 @@ impl ReplicaGroup {
                     continue;
                 }
                 self.delivered += 1;
+                delivered_any = true;
                 let r = self.replicas[i].as_mut().unwrap();
                 match r.cursor.offer(seq, ev) {
                     Ingest::Ready(evs) => {
                         let first = r.cursor.expected() - evs.len() as u64;
                         for (k, e) in evs.into_iter().enumerate() {
                             r.tree.apply_delta(&e);
-                            r.retain(first + k as u64, e);
+                            r.retained.push_at(first + k as u64, e);
                         }
-                        acks.push(r.cursor.expected());
                     }
-                    Ingest::Buffered { resend_from } => {
-                        acks.push(resend_from);
-                    }
-                    Ingest::Duplicate => {}
+                    Ingest::Buffered { .. } | Ingest::Duplicate => {}
                 }
             }
             self.transport.mark_sent(peer, range.end);
-            for a in acks {
-                self.transport.on_ack(peer, a);
+            if delivered_any {
+                // A receiver that got NOTHING sends nothing (a real NIC
+                // has no stimulus); the sender-side retransmit timer
+                // above recovers a fully-lost tail.
+                let next =
+                    self.replicas[i].as_ref().unwrap().cursor.expected();
+                self.acks_sent += 1;
+                self.transport.on_ack(peer, next);
             }
         }
         // Truncate behind the slowest live replica; followers trim
@@ -284,7 +281,7 @@ impl ReplicaGroup {
         self.transport.truncate_below(self.transport.min_acked());
         let floor = self.transport.first_retained();
         for r in self.replicas.iter_mut().flatten() {
-            r.trim_retained(floor);
+            r.retained.trim_below(floor);
         }
     }
 
@@ -325,7 +322,8 @@ impl ReplicaGroup {
                 if let Some(ev) = self.replicas[i]
                     .as_ref()
                     .unwrap()
-                    .retained_get(need)
+                    .retained
+                    .get(need)
                 {
                     found = Some(ev.clone());
                     break;
@@ -338,7 +336,7 @@ impl ReplicaGroup {
                     let first = r.cursor.expected() - evs.len() as u64;
                     for (k, e) in evs.into_iter().enumerate() {
                         r.tree.apply_delta(&e);
-                        r.retain(first + k as u64, e);
+                        r.retained.push_at(first + k as u64, e);
                     }
                 }
                 _ => unreachable!("offer at the cursor is always ready"),
@@ -350,7 +348,7 @@ impl ReplicaGroup {
         // old-primary event beyond the surviving history — dead.
         let head = p.cursor.expected();
         p.cursor.purge_from(head);
-        let base = p.retained_base;
+        let base = p.retained.base();
         let mut transport = DeltaTransport::new(self.window);
         transport.advance_base(base);
         for ev in p.retained.iter() {
@@ -408,8 +406,7 @@ impl ReplicaGroup {
         self.replicas.push(Some(Replica {
             tree,
             cursor,
-            retained: VecDeque::new(),
-            retained_base: seq,
+            retained: SeqBuffer::with_base(seq),
         }));
         idx
     }
@@ -505,6 +502,54 @@ mod tests {
         assert!(g.resends() > 0, "recovery must have rewound the cursor");
         let t = toks(8, 9);
         assert_eq!(matches_of(&mut g, 1, &t), matches_of(&mut g, 0, &t));
+    }
+
+    #[test]
+    fn acks_are_batched_per_pump_and_lossy_streams_still_converge() {
+        // ISSUE 5 satellite: one coalesced ack per follower per pump —
+        // not one per delta (the ack storm) — while lossy delivery
+        // still converges through the same gap re-request discipline.
+        let mut g = ReplicaGroup::new(3, BT, 0.0, 64);
+        seed_instances(&mut g, 2); // apply_sync: some pumps already ran
+        let base_acks = g.acks_sent();
+        for k in 0..40u32 {
+            g.apply(DeltaEvent::Record {
+                instance: InstanceId(k % 2),
+                tokens: toks(8, k),
+                now: k as f64,
+            });
+        }
+        // One pump ships all 40 deltas to both followers: exactly one
+        // ack each.
+        g.pump();
+        assert!(g.all_caught_up());
+        assert_eq!(g.acks_sent() - base_acks, 2, "acks not batched");
+        // Lossy: drop a third of deliveries; convergence must survive
+        // batching, with ≤ one ack per follower per pump.
+        let mut n = 0;
+        let before = g.acks_sent();
+        for k in 0..20u32 {
+            g.apply(DeltaEvent::Record {
+                instance: InstanceId(k % 2),
+                tokens: toks(8, 100 + k),
+                now: k as f64,
+            });
+        }
+        let mut pumps = 0u64;
+        g.pump_lossy(&mut |_, _| {
+            n += 1;
+            n % 3 == 0
+        });
+        pumps += 1;
+        while !g.all_caught_up() {
+            g.pump();
+            pumps += 1;
+            assert!(pumps < 100, "lossy pump failed to converge");
+        }
+        assert!(g.acks_sent() - before <= 2 * pumps);
+        let t = toks(8, 119);
+        assert_eq!(matches_of(&mut g, 1, &t), matches_of(&mut g, 0, &t));
+        assert_eq!(matches_of(&mut g, 2, &t), matches_of(&mut g, 0, &t));
     }
 
     #[test]

@@ -44,6 +44,101 @@ pub struct SeqDelta {
     pub ev: DeltaEvent,
 }
 
+/// A contiguous sequence-indexed window of delta events: append at the
+/// head, random-access by sequence, trim from the tail. This is the ONE
+/// implementation of the retained-suffix bookkeeping — shared by
+/// [`DeltaTransport`] (the authority's log) and
+/// [`crate::replica::group`]'s per-replica retained suffixes, which
+/// previously hand-rolled the same `VecDeque + base` arithmetic twice
+/// (a divergence hazard: the transport clamps its trim behind the
+/// slowest peer, the replica trims raw — the *clamp* belongs to the
+/// transport, the *buffer* is identical).
+#[derive(Clone, Debug, Default)]
+pub struct SeqBuffer {
+    entries: VecDeque<DeltaEvent>,
+    base: u64,
+}
+
+impl SeqBuffer {
+    pub fn new() -> Self {
+        SeqBuffer::default()
+    }
+
+    /// An empty buffer whose first append will carry `base` — a replica
+    /// bootstrapped from a snapshot at that sequence.
+    pub fn with_base(base: u64) -> Self {
+        SeqBuffer {
+            entries: VecDeque::new(),
+            base,
+        }
+    }
+
+    /// Oldest retained sequence (entries below were trimmed).
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    /// Sequence the next append will receive.
+    pub fn next_seq(&self) -> u64 {
+        self.base + self.entries.len() as u64
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append at the head; returns the assigned sequence.
+    pub fn push(&mut self, ev: DeltaEvent) -> u64 {
+        let seq = self.next_seq();
+        self.entries.push_back(ev);
+        seq
+    }
+
+    /// Append an entry the caller already sequenced; must be exactly
+    /// the head (retained suffixes are gap-free by construction).
+    pub fn push_at(&mut self, seq: u64, ev: DeltaEvent) {
+        debug_assert_eq!(seq, self.next_seq(), "retained suffix gapped");
+        self.entries.push_back(ev);
+    }
+
+    /// Retained entry at `seq`, if not yet trimmed (or ahead).
+    pub fn get(&self, seq: u64) -> Option<&DeltaEvent> {
+        seq.checked_sub(self.base)
+            .and_then(|i| self.entries.get(i as usize))
+    }
+
+    /// Drop entries below `floor` (clamped at the head); returns how
+    /// many were dropped.
+    pub fn trim_below(&mut self, floor: u64) -> usize {
+        let mut dropped = 0;
+        while self.base < floor && !self.entries.is_empty() {
+            self.entries.pop_front();
+            self.base += 1;
+            dropped += 1;
+        }
+        dropped
+    }
+
+    /// Rebase an empty buffer (construction-time operation — a promoted
+    /// replica rebuilding a transport around its retained suffix).
+    pub fn rebase(&mut self, base: u64) {
+        assert!(
+            self.entries.is_empty() && self.base == 0,
+            "rebase is a construction-time operation"
+        );
+        self.base = base;
+    }
+
+    /// Entries in sequence order starting at [`Self::base`].
+    pub fn iter(&self) -> impl Iterator<Item = &DeltaEvent> + '_ {
+        self.entries.iter()
+    }
+}
+
 /// Per-peer replication cursors: `acked` — the peer has contiguously
 /// applied every seq below it; `sent` — entries below it have been
 /// handed to the wire (`sent >= acked`; `sent - acked` is in flight).
@@ -56,9 +151,8 @@ struct Peer {
 /// Authority side of the delta log (see module docs).
 #[derive(Debug)]
 pub struct DeltaTransport {
-    /// Retained suffix; `entries[i]` carries seq `base + i`.
-    entries: VecDeque<DeltaEvent>,
-    base: u64,
+    /// Retained suffix (the shared [`SeqBuffer`] core).
+    log: SeqBuffer,
     window: usize,
     peers: BTreeMap<u64, Peer>,
     /// Cumulative resends triggered by ack regressions (diagnostics).
@@ -69,8 +163,7 @@ impl DeltaTransport {
     pub fn new(window: usize) -> Self {
         assert!(window > 0, "in-flight window must be positive");
         DeltaTransport {
-            entries: VecDeque::new(),
-            base: 0,
+            log: SeqBuffer::new(),
             window,
             peers: BTreeMap::new(),
             resends: 0,
@@ -79,17 +172,17 @@ impl DeltaTransport {
 
     /// Sequence the next append will receive.
     pub fn next_seq(&self) -> u64 {
-        self.base + self.entries.len() as u64
+        self.log.next_seq()
     }
 
     /// Oldest retained sequence (entries below it were truncated and
     /// can only be recovered via a snapshot).
     pub fn first_retained(&self) -> u64 {
-        self.base
+        self.log.base()
     }
 
     pub fn retained_len(&self) -> usize {
-        self.entries.len()
+        self.log.len()
     }
 
     pub fn resends(&self) -> u64 {
@@ -124,24 +217,17 @@ impl DeltaTransport {
     /// rebuilding the transport around its retained suffix, whose first
     /// entry carries that sequence.
     pub fn advance_base(&mut self, base: u64) {
-        assert!(
-            self.entries.is_empty() && self.base == 0,
-            "advance_base is a construction-time operation"
-        );
-        self.base = base;
+        self.log.rebase(base);
     }
 
     /// Append one event; returns its assigned sequence.
     pub fn append(&mut self, ev: DeltaEvent) -> u64 {
-        let seq = self.next_seq();
-        self.entries.push_back(ev);
-        seq
+        self.log.push(ev)
     }
 
     /// Retained entry at `seq`, if not yet truncated.
     pub fn get(&self, seq: u64) -> Option<&DeltaEvent> {
-        seq.checked_sub(self.base)
-            .and_then(|i| self.entries.get(i as usize))
+        self.log.get(seq)
     }
 
     /// The half-open seq range this peer should be sent now: from its
@@ -152,7 +238,7 @@ impl DeltaTransport {
             return 0..0;
         };
         let hi = self.next_seq().min(p.acked + self.window as u64);
-        p.sent.max(self.base)..hi.max(p.sent)
+        p.sent.max(self.log.base())..hi.max(p.sent)
     }
 
     /// Record that entries below `upto` were handed to the wire.
@@ -242,13 +328,7 @@ impl DeltaTransport {
     /// Returns the number of entries dropped.
     pub fn truncate_below(&mut self, floor: u64) -> usize {
         let to = floor.min(self.min_acked());
-        let mut dropped = 0;
-        while self.base < to && !self.entries.is_empty() {
-            self.entries.pop_front();
-            self.base += 1;
-            dropped += 1;
-        }
-        dropped
+        self.log.trim_below(to)
     }
 }
 
@@ -341,6 +421,32 @@ mod tests {
             instance: InstanceId(tag),
             prefix: vec![tag],
         }
+    }
+
+    #[test]
+    fn seq_buffer_window_arithmetic() {
+        let mut b = SeqBuffer::new();
+        assert_eq!(b.next_seq(), 0);
+        for i in 0..5 {
+            assert_eq!(b.push(ev(i)), i as u64);
+        }
+        assert_eq!(b.get(3), Some(&ev(3)));
+        assert_eq!(b.get(5), None);
+        assert_eq!(b.trim_below(2), 2);
+        assert_eq!(b.base(), 2);
+        assert_eq!(b.get(1), None);
+        assert_eq!(b.get(2), Some(&ev(2)));
+        // Trim past the head clamps.
+        assert_eq!(b.trim_below(99), 3);
+        assert_eq!(b.next_seq(), 5);
+        assert!(b.is_empty());
+        // with_base / push_at (the replica retain path).
+        let mut r = SeqBuffer::with_base(10);
+        r.push_at(10, ev(0));
+        r.push_at(11, ev(1));
+        assert_eq!(r.get(10), Some(&ev(0)));
+        assert_eq!(r.iter().count(), 2);
+        assert_eq!(r.next_seq(), 12);
     }
 
     #[test]

@@ -29,8 +29,10 @@
 
 pub mod group;
 pub mod log;
+pub mod sharded;
 pub mod snapshot;
 
 pub use group::ReplicaGroup;
-pub use log::{DeltaCursor, DeltaTransport, Ingest, SeqDelta};
+pub use log::{DeltaCursor, DeltaTransport, Ingest, SeqBuffer, SeqDelta};
+pub use sharded::ShardedReplicaGroup;
 pub use snapshot::{SnapshotEntry, TreeSnapshot};

@@ -1,0 +1,344 @@
+//! Per-shard replica groups (ISSUE 5 tentpole, replication side).
+//!
+//! One [`ReplicaGroup`] per prefix-range shard: a delta routed by
+//! [`ShardMap`] lands in exactly one shard's sequenced log (membership
+//! and whole-view expiries fan out), so delta application and log
+//! append parallelize S-ways — N replicas per shard keep the PR 4
+//! durability story while writes now scale with the shard count
+//! instead of being serialized through one log.
+//!
+//! This is the deterministic in-process engine behind
+//! `SimConfig.gs_shards` (scripted per-shard failover: one shard's
+//! primary crashes and promotes while the other shards keep serving
+//! untouched) and `benches/fig17_replica.rs`'s write-scaling sweep.
+//! The live server runs the same split over fabric messages — one
+//! `DeltaTransport` per shard inside `server/replica.rs::
+//! GsReplication`, shard-tagged `Msg::Delta`/`Msg::DeltaAck`.
+
+use crate::elastic::delta::DeltaEvent;
+use crate::mempool::InstanceId;
+use crate::replica::group::ReplicaGroup;
+use crate::scheduler::prompt_tree::GlobalPromptTrees;
+use crate::scheduler::shard::{ShardMap, ShardRoute};
+
+/// S independent replica groups behind one delta surface (module docs).
+pub struct ShardedReplicaGroup {
+    /// `None` marks a shard whose promoted tree was extracted (the
+    /// serving scheduler owns it now — the sim's failover landing);
+    /// subsequent deltas for that shard are no longer mirrored.
+    groups: Vec<Option<ReplicaGroup>>,
+    map: ShardMap,
+}
+
+impl ShardedReplicaGroup {
+    /// `shards` groups of `replicas` replicas each (primary +
+    /// followers, exactly [`ReplicaGroup::new`] per shard).
+    pub fn new(
+        shards: usize,
+        replicas: usize,
+        block_tokens: usize,
+        ttl: f64,
+        window: usize,
+    ) -> Self {
+        assert!(shards >= 1);
+        ShardedReplicaGroup {
+            groups: (0..shards)
+                .map(|_| {
+                    Some(ReplicaGroup::new(replicas, block_tokens, ttl,
+                                           window))
+                })
+                .collect(),
+            map: ShardMap::new(shards, block_tokens),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Test hook: force fingerprint collisions in the map and every
+    /// shard's replica trees. Must run before any delta.
+    #[doc(hidden)]
+    pub fn set_fingerprint_mask(&mut self, mask: u64) {
+        self.map.set_fingerprint_mask(mask);
+        for g in self.groups.iter_mut().flatten() {
+            g.set_fingerprint_mask(mask);
+        }
+    }
+
+    pub fn is_consumed(&self, shard: usize) -> bool {
+        self.groups[shard].is_none()
+    }
+
+    /// One shard's group (panics when that shard was consumed).
+    pub fn group(&self, shard: usize) -> &ReplicaGroup {
+        self.groups[shard].as_ref().expect("shard consumed")
+    }
+
+    pub fn group_mut(&mut self, shard: usize) -> &mut ReplicaGroup {
+        self.groups[shard].as_mut().expect("shard consumed")
+    }
+
+    /// This shard's log head (deltas sequenced through it).
+    pub fn log_head(&self, shard: usize) -> u64 {
+        self.group(shard).log_head()
+    }
+
+    /// Apply one delta at its shard's primary (fanning membership to
+    /// every live shard) without pumping; see [`ReplicaGroup::apply`].
+    /// Consumed shards are skipped — their state lives in the serving
+    /// scheduler now.
+    pub fn apply(&mut self, ev: DeltaEvent) {
+        match self.map.route(&ev) {
+            ShardRoute::One(s) => {
+                if let Some(g) = self.groups[s].as_mut() {
+                    g.apply(ev);
+                }
+            }
+            ShardRoute::All => {
+                for g in self.groups.iter_mut().flatten() {
+                    g.apply(ev.clone());
+                }
+            }
+        }
+    }
+
+    /// [`Self::apply`] + pump the touched shard(s) until every live
+    /// follower confirms — synchronous replication for the sim.
+    pub fn apply_sync(&mut self, ev: DeltaEvent) {
+        match self.map.route(&ev) {
+            ShardRoute::One(s) => {
+                if let Some(g) = self.groups[s].as_mut() {
+                    g.apply_sync(ev);
+                }
+            }
+            ShardRoute::All => {
+                for g in self.groups.iter_mut().flatten() {
+                    g.apply_sync(ev.clone());
+                }
+            }
+        }
+    }
+
+    /// Pump every live shard's transport once.
+    pub fn pump(&mut self) {
+        for g in self.groups.iter_mut().flatten() {
+            g.pump();
+        }
+    }
+
+    pub fn all_caught_up(&self) -> bool {
+        self.groups
+            .iter()
+            .flatten()
+            .all(|g| g.all_caught_up())
+    }
+
+    /// Route-read from replica index `i` of the prompt's shard (short
+    /// prompts read shard 0 — they match nothing anywhere, and every
+    /// shard carries the full registry).
+    pub fn route_match(
+        &mut self,
+        i: usize,
+        tokens: &[u32],
+        out: &mut Vec<(InstanceId, usize)>,
+    ) {
+        let s = self.map.shard_of_tokens(tokens).unwrap_or(0);
+        self.group_mut(s).route_match(i, tokens, out);
+    }
+
+    /// Route-read from the prompt's shard's current primary — the read
+    /// path that stays valid across per-shard failovers (each shard's
+    /// primary index moves independently).
+    pub fn route_match_primary(
+        &mut self,
+        tokens: &[u32],
+        out: &mut Vec<(InstanceId, usize)>,
+    ) {
+        let s = self.map.shard_of_tokens(tokens).unwrap_or(0);
+        let g = self.group_mut(s);
+        let p = g.primary_index();
+        g.route_match(p, tokens, out);
+    }
+
+    /// Crash ONE shard's primary and promote its most-caught-up
+    /// follower (catch-up included); every other shard is untouched.
+    /// Returns the promoted replica index within that shard's group.
+    pub fn fail_primary(&mut self, shard: usize) -> Option<usize> {
+        self.group_mut(shard).fail_primary()
+    }
+
+    /// Extract replica `i`'s tree from `shard` and consume the shard's
+    /// group — the sim's failover landing: the promoted slice becomes
+    /// the serving scheduler's shard tree, and mirroring for that shard
+    /// stops (a second failover of the same shard needs fresh
+    /// replicas).
+    pub fn extract_tree(&mut self, shard: usize, i: usize)
+                        -> GlobalPromptTrees {
+        let mut g = self.groups[shard].take().expect("shard consumed");
+        g.extract_tree(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::prompt_tree::InstanceKind;
+
+    const BT: usize = 4;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 3 + seed * 1009).collect()
+    }
+
+    fn seed(g: &mut ShardedReplicaGroup, n: u32) {
+        for i in 0..n {
+            g.apply_sync(DeltaEvent::Join {
+                instance: InstanceId(i),
+                kind: InstanceKind::PrefillOnly,
+            });
+        }
+    }
+
+    fn matches_primary(
+        g: &mut ShardedReplicaGroup,
+        t: &[u32],
+    ) -> Vec<(InstanceId, usize)> {
+        let mut out = vec![];
+        g.route_match_primary(t, &mut out);
+        out
+    }
+
+    #[test]
+    fn membership_fans_records_split_by_shard() {
+        let mut g = ShardedReplicaGroup::new(4, 2, BT, 0.0, 64);
+        seed(&mut g, 3);
+        let membership = g.log_head(0);
+        for s in 1..4 {
+            assert_eq!(g.log_head(s), membership, "membership must fan");
+        }
+        // 32 distinct records split across shards; each lands in
+        // exactly one log.
+        let mut per_shard = vec![0u64; 4];
+        for k in 0..32u32 {
+            let t = toks(2 * BT, k);
+            let s = g.map().shard_of_tokens(&t).unwrap();
+            per_shard[s] += 1;
+            g.apply_sync(DeltaEvent::Record {
+                instance: InstanceId(k % 3),
+                tokens: t,
+                now: 1.0,
+            });
+        }
+        let mut total = 0;
+        for s in 0..4 {
+            let records = g.log_head(s) - membership;
+            assert_eq!(records, per_shard[s], "shard {s} log drifted");
+            total += records;
+        }
+        assert_eq!(total, 32, "every record sequenced exactly once");
+        assert!(
+            per_shard.iter().filter(|&&c| c > 0).count() > 1,
+            "records failed to spread across shards"
+        );
+    }
+
+    #[test]
+    fn sharded_reads_agree_with_unsharded() {
+        let mut shd = ShardedReplicaGroup::new(3, 2, BT, 0.0, 64);
+        let mut flat = ShardedReplicaGroup::new(1, 2, BT, 0.0, 64);
+        seed(&mut shd, 4);
+        seed(&mut flat, 4);
+        for k in 0..24u32 {
+            let ev = DeltaEvent::Record {
+                instance: InstanceId(k % 4),
+                tokens: toks((1 + k as usize % 3) * BT, k % 8),
+                now: k as f64,
+            };
+            shd.apply_sync(ev.clone());
+            flat.apply_sync(ev);
+        }
+        shd.apply_sync(DeltaEvent::Expire {
+            instance: InstanceId(1),
+            prefix: vec![],
+        });
+        flat.apply_sync(DeltaEvent::Expire {
+            instance: InstanceId(1),
+            prefix: vec![],
+        });
+        for k in 0..8u32 {
+            let t = toks(3 * BT, k);
+            assert_eq!(
+                matches_primary(&mut shd, &t),
+                matches_primary(&mut flat, &t),
+                "seed {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_shard_failover_leaves_other_shards_untouched() {
+        let mut g = ShardedReplicaGroup::new(2, 3, BT, 0.0, 64);
+        seed(&mut g, 2);
+        // Find prompts for each shard.
+        let mut by_shard: Vec<Option<Vec<u32>>> = vec![None, None];
+        for k in 0..64u32 {
+            let t = toks(2 * BT, k);
+            let s = g.map().shard_of_tokens(&t).unwrap();
+            if by_shard[s].is_none() {
+                by_shard[s] = Some(t);
+            }
+        }
+        let (t0, t1) = (
+            by_shard[0].clone().expect("shard 0 prompt"),
+            by_shard[1].clone().expect("shard 1 prompt"),
+        );
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: t0.clone(),
+            now: 1.0,
+        });
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(1),
+            tokens: t1.clone(),
+            now: 1.0,
+        });
+        let want0 = matches_primary(&mut g, &t0);
+        let want1 = matches_primary(&mut g, &t1);
+        // Crash shard 1's primary only.
+        let p = g.fail_primary(1).expect("followers survive");
+        assert_eq!(g.group(1).primary_index(), p);
+        assert_eq!(g.group(0).primary_index(), 0, "shard 0 untouched");
+        assert_eq!(matches_primary(&mut g, &t0), want0);
+        assert_eq!(matches_primary(&mut g, &t1), want1);
+        // Writes keep flowing to both shards.
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: t1.clone(),
+            now: 2.0,
+        });
+        assert_eq!(
+            matches_primary(&mut g, &t1)
+                .iter()
+                .find(|(id, _)| *id == InstanceId(0))
+                .unwrap()
+                .1,
+            t1.len()
+        );
+        // Extraction consumes the shard; the other shard keeps
+        // mirroring.
+        let tree = g.extract_tree(1, g.group(1).primary_index());
+        assert_eq!(tree.match_one(InstanceId(1), &t1), t1.len());
+        assert!(g.is_consumed(1));
+        g.apply_sync(DeltaEvent::Record {
+            instance: InstanceId(1),
+            tokens: t0.clone(),
+            now: 3.0,
+        });
+        assert!(g.all_caught_up());
+    }
+}

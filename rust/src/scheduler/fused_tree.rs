@@ -74,8 +74,12 @@ pub struct OwnedPrefix {
 /// emitted, and the best cold instance by this key is in the sample.
 pub type ColdRank = (f64, u64, u64);
 
+/// Lexicographic [`ColdRank`] comparison with a final ascending-id tie
+/// break — the one ordering every cold-sampling path (the tree's
+/// [`FusedPromptTree::match_into_capped`] and the router's load-book
+/// selection) must share so capped emission cannot change a decision.
 #[inline]
-fn cold_rank_cmp(
+pub fn cold_rank_cmp(
     a: &(ColdRank, InstanceId),
     b: &(ColdRank, InstanceId),
 ) -> std::cmp::Ordering {
@@ -187,6 +191,10 @@ pub struct FusedPromptTree {
     free_slots: Vec<u32>,
     /// Bit per slot whose instance runs prefill (routing candidates).
     prefill_mask: Vec<u64>,
+    /// Count of routing candidates (prefill-capable, live, not
+    /// draining) — maintained by add/remove/[`Self::set_draining`] so
+    /// the router's capped-emission gate is O(1) per route.
+    routable: usize,
     /// `prefill_mask` minus draining slots — the set the routing walk
     /// actually considers. Maintained by add/remove/[`Self::
     /// set_draining`] so `match_into` pays nothing extra per route.
@@ -228,6 +236,7 @@ impl FusedPromptTree {
             by_id: BTreeMap::new(),
             free_slots: vec![],
             prefill_mask: vec![],
+            routable: 0,
             route_mask: vec![],
             heap: BinaryHeap::new(),
             owner_pairs: 0,
@@ -293,6 +302,7 @@ impl FusedPromptTree {
         if kind.runs_prefill() {
             self.prefill_mask[w] |= m;
             self.route_mask[w] |= m;
+            self.routable += 1;
         }
     }
 
@@ -316,6 +326,9 @@ impl FusedPromptTree {
                 self.owner_pairs -= 1;
             }
         }
+        if self.slot_routable(slot) {
+            self.routable -= 1;
+        }
         let s = &mut self.slots[slot as usize];
         s.live = false;
         s.cached_blocks = 0;
@@ -335,12 +348,21 @@ impl FusedPromptTree {
         let Some(&slot) = self.by_id.get(&id) else {
             return;
         };
-        self.slots[slot as usize].draining = draining;
+        let s = &mut self.slots[slot as usize];
+        let flipped = s.draining != draining;
+        s.draining = draining;
+        let runs_prefill = s.kind.runs_prefill();
         let (w, m) = word_bit(slot);
         if draining {
             self.route_mask[w] &= !m;
-        } else if self.slots[slot as usize].kind.runs_prefill() {
+            if flipped && runs_prefill {
+                self.routable -= 1;
+            }
+        } else if runs_prefill {
             self.route_mask[w] |= m;
+            if flipped {
+                self.routable += 1;
+            }
         }
     }
 
@@ -361,6 +383,27 @@ impl FusedPromptTree {
 
     pub fn instance_count(&self) -> usize {
         self.by_id.len()
+    }
+
+    /// The one routing-candidate predicate every emission path shares.
+    #[inline]
+    fn slot_routable(&self, slot: u32) -> bool {
+        let s = &self.slots[slot as usize];
+        s.live && s.kind.runs_prefill() && !s.draining
+    }
+
+    /// Is `id` a routing candidate (registered, prefill-capable, not
+    /// draining)? Exactly the predicate `match_into` emits by.
+    pub fn is_route_candidate(&self, id: InstanceId) -> bool {
+        self.by_id
+            .get(&id)
+            .is_some_and(|&slot| self.slot_routable(slot))
+    }
+
+    /// Number of routing candidates (the fleet `match_into` emits) —
+    /// an O(1) maintained counter.
+    pub fn routable_count(&self) -> usize {
+        self.routable
     }
 
     pub fn kind_of(&self, id: InstanceId) -> Option<InstanceKind> {
@@ -633,12 +676,51 @@ impl FusedPromptTree {
         tokens: &[u32],
         out: &mut Vec<(InstanceId, usize)>,
     ) {
-        out.clear();
         self.route_walk(tokens);
+        out.clear();
         for (&id, &slot) in self.by_id.iter() {
-            let s = &self.slots[slot as usize];
-            if s.kind.runs_prefill() && !s.draining {
+            if self.slot_routable(slot) {
                 out.push((id, self.matched[slot as usize]));
+            }
+        }
+    }
+
+    /// Split-phase form of the match: run the routing walk only, leaving
+    /// each instance's matched length readable via [`Self::walked_len`]
+    /// until the next walk. Between [`Self::walk`] and
+    /// [`Self::emit_walked`] the router consults its load-ordered book
+    /// to pick the cold sample in O(cold_cap log instances) instead of
+    /// ranking every zero-match instance.
+    pub fn walk(&mut self, tokens: &[u32]) {
+        self.route_walk(tokens);
+    }
+
+    /// Matched length of `id` from the last [`Self::walk`] (0 when
+    /// unknown or not walked).
+    pub fn walked_len(&self, id: InstanceId) -> usize {
+        self.by_id
+            .get(&id)
+            .and_then(|&slot| self.matched.get(slot as usize).copied())
+            .unwrap_or(0)
+    }
+
+    /// Emit the last walk's results: every routable instance with a
+    /// positive match plus the listed cold instances (`cold_sorted`
+    /// must be ascending), in ascending instance-id order — exactly the
+    /// emission shape of [`Self::match_into_capped`].
+    pub fn emit_walked(
+        &self,
+        out: &mut Vec<(InstanceId, usize)>,
+        cold_sorted: &[InstanceId],
+    ) {
+        out.clear();
+        for (&id, &slot) in self.by_id.iter() {
+            if !self.slot_routable(slot) {
+                continue;
+            }
+            let m = self.matched.get(slot as usize).copied().unwrap_or(0);
+            if m > 0 || cold_sorted.binary_search(&id).is_ok() {
+                out.push((id, m));
             }
         }
     }
@@ -664,23 +746,14 @@ impl FusedPromptTree {
         cold_cap: usize,
         cold_rank: &mut dyn FnMut(InstanceId) -> ColdRank,
     ) {
-        out.clear();
         self.route_walk(tokens);
+        out.clear();
         // Decide the fallback BEFORE paying for any rank evaluation
         // (each is a loads lookup + cost-model call at the router):
         // a routable fleet that fits in the cap emits everything.
-        let routable = self
-            .by_id
-            .values()
-            .filter(|&&slot| {
-                let s = &self.slots[slot as usize];
-                s.kind.runs_prefill() && !s.draining
-            })
-            .count();
-        if routable <= cold_cap {
+        if self.routable_count() <= cold_cap {
             for (&id, &slot) in self.by_id.iter() {
-                let s = &self.slots[slot as usize];
-                if s.kind.runs_prefill() && !s.draining {
+                if self.slot_routable(slot) {
                     out.push((id, self.matched[slot as usize]));
                 }
             }
@@ -689,11 +762,8 @@ impl FusedPromptTree {
         // Rank the cold (zero-match) routable instances.
         self.cold_buf.clear();
         for (&id, &slot) in self.by_id.iter() {
-            let s = &self.slots[slot as usize];
-            if !s.kind.runs_prefill() || s.draining {
-                continue;
-            }
-            if self.matched[slot as usize] == 0 {
+            if self.slot_routable(slot) && self.matched[slot as usize] == 0
+            {
                 self.cold_buf.push((cold_rank(id), id));
             }
         }
@@ -709,16 +779,9 @@ impl FusedPromptTree {
         self.cold_sel.clear();
         self.cold_sel.extend(self.cold_buf.iter().map(|&(_, id)| id));
         self.cold_sel.sort_unstable();
-        for (&id, &slot) in self.by_id.iter() {
-            let s = &self.slots[slot as usize];
-            if !s.kind.runs_prefill() || s.draining {
-                continue;
-            }
-            let m = self.matched[slot as usize];
-            if m > 0 || self.cold_sel.binary_search(&id).is_ok() {
-                out.push((id, m));
-            }
-        }
+        let cold = std::mem::take(&mut self.cold_sel);
+        self.emit_walked(out, &cold);
+        self.cold_sel = cold;
     }
 
     /// The shared routing walk: fills `self.matched[slot]` with each
@@ -1195,6 +1258,14 @@ impl FusedPromptTree {
                 );
             }
         }
+        assert_eq!(
+            self.by_id
+                .values()
+                .filter(|&&slot| self.slot_routable(slot))
+                .count(),
+            self.routable,
+            "routable counter drifted"
+        );
     }
 }
 

@@ -7,5 +7,6 @@ pub mod policy;
 pub mod prompt_tree;
 pub mod prompt_tree_ref;
 pub mod router;
+pub mod shard;
 
 pub use policy::PolicyKind;

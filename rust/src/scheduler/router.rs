@@ -2,14 +2,37 @@
 //! policy decision → dispatch metadata, plus the response-path tree
 //! update. Transport-agnostic: the live server and the discrete-event
 //! simulator both drive this object.
+//!
+//! Since the prefix-range sharding (ISSUE 5), `trees` is a
+//! [`ShardedPromptTrees`]: S independent fused trees partitioned by the
+//! prompt's first token-block fingerprint. A route walks exactly one
+//! shard (a prompt's whole prefix chain shares block 0, hence its
+//! shard); S = 1 is bit-identical to the unsharded path.
+//!
+//! Loads now live in a policy-ordered **load book** inside the
+//! scheduler ([`GlobalScheduler::set_load`]) instead of a per-route
+//! callback. That turns the capped-emission cold sample from "evaluate
+//! the rank for every zero-match instance" (O(instances) per route)
+//! into an ordered-prefix scan: O(cold_cap log instances **plus the
+//! boundary tie class**, with the ordering maintained incrementally —
+//! an unchanged load is O(1) to re-assert. The tie class is the set of
+//! instances sharing the cold_cap-th key exactly; it must be collected
+//! whole because the per-route session tie-break can pick any of them,
+//! so a fully-idle fleet (all keys equal) honestly degenerates to the
+//! old O(instances) scan — no worse than before, and the bound
+//! tightens as soon as loads differentiate.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
 
 use crate::mempool::InstanceId;
 use crate::scheduler::cost_model::OperatorCostModel;
+use crate::scheduler::fused_tree::{cold_rank_cmp, ColdRank};
 use crate::scheduler::policy::{decide, Candidate, Decision, PolicyKind};
-use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
+use crate::scheduler::prompt_tree::InstanceKind;
+use crate::scheduler::shard::ShardedPromptTrees;
 
 /// Per-instance load the caller keeps updated (queued prompt tokens).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct InstanceLoad {
     pub queued_tokens: usize,
     pub queued_cached_ratio: f64,
@@ -29,8 +52,73 @@ pub struct RouteOutcome {
     pub fetch_from_donor: bool,
 }
 
+/// Totally ordered f64 for the load book's BTreeSet key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// The load-dependent prefix of the active policy's cold ordering —
+/// everything except the per-route session tie-break, so it can be
+/// maintained across routes. LeastLoad: `(queued, 0)` (its true
+/// tie-break is the instance id, which the BTreeSet key appends).
+/// Cost policies: `(exec(queued, cached_ratio), queued)`.
+type BookKey = (OrdF64, u64);
+
+/// Policy-ordered load registry: `order` iterates instances from the
+/// cold-best rank upward, so the capped route takes an ordered prefix
+/// instead of ranking the whole fleet.
+#[derive(Debug, Default)]
+struct LoadBook {
+    loads: HashMap<InstanceId, (InstanceLoad, BookKey)>,
+    order: BTreeSet<(BookKey, InstanceId)>,
+}
+
+impl LoadBook {
+    /// O(log n) when the rank key changed, O(1) otherwise.
+    fn set(&mut self, id: InstanceId, load: InstanceLoad, key: BookKey) {
+        match self.loads.entry(id) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                let (l, k) = e.get_mut();
+                if *k != key {
+                    self.order.remove(&(*k, id));
+                    self.order.insert((key, id));
+                    *k = key;
+                }
+                *l = load;
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert((load, key));
+                self.order.insert((key, id));
+            }
+        }
+    }
+
+    fn remove(&mut self, id: InstanceId) {
+        if let Some((_, k)) = self.loads.remove(&id) {
+            self.order.remove(&(k, id));
+        }
+    }
+
+    fn get(&self, id: InstanceId) -> InstanceLoad {
+        self.loads.get(&id).map(|&(l, _)| l).unwrap_or_default()
+    }
+}
+
 pub struct GlobalScheduler {
-    pub trees: GlobalPromptTrees,
+    pub trees: ShardedPromptTrees,
     pub policy: PolicyKind,
     pub cost: OperatorCostModel,
     /// Fabric characteristics for Eq. 2.
@@ -40,20 +128,26 @@ pub struct GlobalScheduler {
     pub calls_per_token_block: usize,
     pub block_tokens: usize,
     pub transfer_decision_enabled: bool,
-    /// Capped-emission knob: on fleets larger than this, the fused tree
-    /// emits only positive-match instances plus this many best-ranked
-    /// cold ones (`FusedPromptTree::match_into_capped`) instead of one
-    /// pair per prefill instance — removing the O(instances) candidate
-    /// scan at ~1k instances. The cold ranking mirrors the active
-    /// policy's exact ordering over zero-match candidates, so decisions
-    /// are unchanged; the session-id policy (whose pick depends on the
+    /// Capped-emission knob: on fleets larger than this, routing emits
+    /// only positive-match instances plus this many best-ranked cold
+    /// ones instead of one pair per prefill instance — removing the
+    /// O(instances) candidate scan at ~1k instances. The cold sample is
+    /// drawn from the load book's policy ordering (exact boundary ties
+    /// resolved with the session tie-break), so decisions are
+    /// unchanged; the session-id policy (whose pick depends on the
     /// candidate *count*) always gets full emission. 0 disables.
     pub cold_sample: usize,
+    /// Policy-ordered per-instance loads (see [`Self::set_load`]).
+    book: LoadBook,
+    /// `trees.membership_gen()` the book was last synced against.
+    book_gen: Option<u64>,
     /// Reusable route-path scratch: matched prefixes from the fused
-    /// tree and the candidate list handed to the policy. Steady-state
-    /// routing performs no allocation.
+    /// tree, the candidate list handed to the policy, and the cold
+    /// sample. Steady-state routing performs no allocation.
     match_buf: Vec<(InstanceId, usize)>,
     cand_buf: Vec<Candidate>,
+    cold_buf: Vec<(ColdRank, InstanceId)>,
+    cold_sel: Vec<InstanceId>,
 }
 
 impl GlobalScheduler {
@@ -63,8 +157,21 @@ impl GlobalScheduler {
         block_tokens: usize,
         ttl: f64,
     ) -> Self {
+        Self::with_shards(policy, cost, block_tokens, ttl, 1)
+    }
+
+    /// Scheduler over `shards` prefix-range shards (ISSUE 5). `shards
+    /// = 1` is decision- and bit-identical to the unsharded scheduler.
+    pub fn with_shards(
+        policy: PolicyKind,
+        cost: OperatorCostModel,
+        block_tokens: usize,
+        ttl: f64,
+        shards: usize,
+    ) -> Self {
         GlobalScheduler {
-            trees: GlobalPromptTrees::new(block_tokens, ttl),
+            trees: ShardedPromptTrees::with_shards(block_tokens, ttl,
+                                                   shards),
             policy,
             cost,
             bytes_per_token: 0,
@@ -74,8 +181,12 @@ impl GlobalScheduler {
             block_tokens,
             transfer_decision_enabled: true,
             cold_sample: 32,
+            book: LoadBook::default(),
+            book_gen: None,
             match_buf: vec![],
             cand_buf: vec![],
+            cold_buf: vec![],
+            cold_sel: vec![],
         }
     }
 
@@ -83,59 +194,154 @@ impl GlobalScheduler {
         self.trees.add_instance(id, kind);
     }
 
-    /// Route one request among prefill-capable instances.
-    ///
-    /// `loads` must supply an entry for every candidate returned by the
-    /// trees (missing entries are treated as idle).
+    /// The load book key: the load-dependent prefix of the active
+    /// policy's cold ordering (the session tie-break is per-route).
+    fn rank_key(&self, l: &InstanceLoad) -> BookKey {
+        match self.policy {
+            PolicyKind::LeastLoad => (OrdF64(l.queued_tokens as f64), 0),
+            _ => (
+                OrdF64(
+                    self.cost
+                        .exec(l.queued_tokens, l.queued_cached_ratio),
+                ),
+                l.queued_tokens as u64,
+            ),
+        }
+    }
+
+    /// Update one instance's load. Instances never set default to idle;
+    /// an unchanged load costs O(1), a changed one O(log instances).
+    /// (The key is computed with the scheduler's cost model — mutate
+    /// `cost` only before routing begins.)
+    pub fn set_load(&mut self, id: InstanceId, load: InstanceLoad) {
+        // Only prefill-capable instances enter the book: decode-only
+        // ones can never be routing candidates, and keeping them out
+        // keeps the ordered cold scan from stepping over their
+        // permanently-idle entries (disaggregated fleets are
+        // decode-heavy). Draining is per-route state and stays handled
+        // by `is_route_candidate` at scan time.
+        if !self
+            .trees
+            .kind_of(id)
+            .is_some_and(|k| k.runs_prefill())
+        {
+            return;
+        }
+        let key = self.rank_key(&load);
+        self.book.set(id, load, key);
+    }
+
+    /// Resync the book's id set after membership changes (cheap no-op
+    /// otherwise). Loads of surviving instances are preserved; new
+    /// instances start idle.
+    fn sync_book(&mut self) {
+        let gen = self.trees.membership_gen();
+        if self.book_gen == Some(gen) {
+            return;
+        }
+        self.book_gen = Some(gen);
+        let known: HashSet<InstanceId> = self
+            .trees
+            .instances()
+            .filter(|&(_, kind)| kind.runs_prefill())
+            .map(|(id, _)| id)
+            .collect();
+        let stale: Vec<InstanceId> = self
+            .book
+            .loads
+            .keys()
+            .filter(|id| !known.contains(id))
+            .copied()
+            .collect();
+        for id in stale {
+            self.book.remove(id);
+        }
+        let default_key = self.rank_key(&InstanceLoad::default());
+        for id in known {
+            if !self.book.loads.contains_key(&id) {
+                self.book.set(id, InstanceLoad::default(), default_key);
+            }
+        }
+    }
+
+    /// Route one request among prefill-capable instances, using the
+    /// loads last pushed via [`Self::set_load`] (instances never set
+    /// are treated as idle).
     pub fn route(
         &mut self,
         prompt: &[u32],
         session_id: u64,
-        loads: &dyn Fn(InstanceId) -> InstanceLoad,
         now: f64,
     ) -> anyhow::Result<RouteOutcome> {
         // Heap-driven TTL housekeeping rides the routing path: an O(1)
-        // peek when nothing has expired, O(log n) per stale entry.
+        // peek per shard when nothing has expired, O(log n) per stale
+        // entry.
         self.trees.expire(now);
-        // One fused-tree walk yields the matched prefix for the whole
-        // fleet; both buffers are reused across routes (no allocation).
-        // Large fleets get capped emission: warm instances plus a cold
-        // sample ranked exactly as the policy would rank zero-match
-        // candidates — cost (monotone in queue), then queue, then the
-        // policy's own tie-break — so the decision cannot change.
+        self.sync_book();
+        // One walk of the prompt's shard yields the matched prefix for
+        // the whole fleet; all buffers are reused across routes (no
+        // allocation). Large fleets get capped emission: warm instances
+        // plus a cold sample drawn as an ordered prefix of the load
+        // book — the book's key is the policy's exact cold ordering up
+        // to the per-route session tie-break, which is resolved over
+        // the boundary tie class only, so the decision cannot change.
         let Self {
             trees,
             match_buf,
-            cost,
+            cold_buf,
+            cold_sel,
+            book,
             policy,
             cold_sample,
             ..
         } = self;
-        if *cold_sample > 0
+        let capped = *cold_sample > 0
             && *policy != PolicyKind::SessionId
-            && trees.instance_count() > *cold_sample
-        {
-            let mut rank = |id: InstanceId| {
-                let l = loads(id);
-                match policy {
-                    PolicyKind::LeastLoad => {
-                        (l.queued_tokens as f64, id.0 as u64, 0)
+            && trees.instance_count() > *cold_sample;
+        if capped && trees.routable_count() > *cold_sample {
+            trees.walk(prompt);
+            cold_buf.clear();
+            let mut boundary: Option<BookKey> = None;
+            for &(key, id) in book.order.iter() {
+                if let Some(b) = boundary {
+                    if key > b {
+                        break;
                     }
+                }
+                if !trees.is_route_candidate(id) || trees.walked_len(id) > 0
+                {
+                    continue;
+                }
+                // The full cold rank, mirroring the policy's ordering
+                // over zero-match candidates (computed only for the
+                // ordered prefix, not the fleet).
+                let rank: ColdRank = match policy {
+                    PolicyKind::LeastLoad => (key.0 .0, id.0 as u64, 0),
                     _ => {
                         let mut s = session_id ^ ((id.0 as u64) << 32);
                         (
-                            cost.exec(
-                                l.queued_tokens,
-                                l.queued_cached_ratio,
-                            ),
-                            l.queued_tokens as u64,
+                            key.0 .0,
+                            key.1,
                             crate::util::rng::splitmix64(&mut s),
                         )
                     }
+                };
+                cold_buf.push((rank, id));
+                if boundary.is_none() && cold_buf.len() == *cold_sample {
+                    // Keep collecting through EXACT key ties: any of
+                    // them could win the session tie-break.
+                    boundary = Some(key);
                 }
-            };
-            trees.match_into_capped(prompt, match_buf, *cold_sample,
-                                    &mut rank);
+            }
+            if cold_buf.len() > *cold_sample {
+                cold_buf
+                    .select_nth_unstable_by(*cold_sample - 1, cold_rank_cmp);
+                cold_buf.truncate(*cold_sample);
+            }
+            cold_sel.clear();
+            cold_sel.extend(cold_buf.iter().map(|&(_, id)| id));
+            cold_sel.sort_unstable();
+            trees.emit_walked(match_buf, cold_sel);
         } else {
             trees.match_into(prompt, match_buf);
         }
@@ -145,7 +351,7 @@ impl GlobalScheduler {
         );
         self.cand_buf.clear();
         for &(id, matched) in &self.match_buf {
-            let l = loads(id);
+            let l = self.book.get(id);
             self.cand_buf.push(Candidate {
                 instance: id,
                 queued_tokens: l.queued_tokens,
@@ -224,16 +430,12 @@ mod tests {
         (0..n as u32).map(|i| i.wrapping_mul(31).wrapping_add(seed)).collect()
     }
 
-    fn idle(_: InstanceId) -> InstanceLoad {
-        InstanceLoad::default()
-    }
-
     #[test]
     fn routes_to_cache_holder() {
         let mut g = gs(PolicyKind::PromptTree);
         let t = toks(256, 0);
         g.record_cached(InstanceId(1), &t, 1.0);
-        let out = g.route(&t, 9, &idle, 2.0).unwrap();
+        let out = g.route(&t, 9, 2.0).unwrap();
         assert_eq!(out.decision.instance, InstanceId(1));
         assert_eq!(out.decision.matched_tokens, 256);
         assert!(!out.fetch_from_donor);
@@ -243,7 +445,7 @@ mod tests {
     fn decode_only_never_chosen() {
         let mut g = gs(PolicyKind::LeastLoad);
         for s in 0..20 {
-            let out = g.route(&toks(64, s), s as u64, &idle, 1.0).unwrap();
+            let out = g.route(&toks(64, s), s as u64, 1.0).unwrap();
             assert_ne!(out.decision.instance, InstanceId(2));
         }
     }
@@ -256,17 +458,11 @@ mod tests {
         // Instance 0 has nearly everything cached but is overloaded, so
         // Eq. 1 picks instance 1; Eq. 2 should then fetch from 0.
         g.record_cached(InstanceId(0), &t, 1.0);
-        let loads = |id: InstanceId| {
-            if id == InstanceId(0) {
-                InstanceLoad {
-                    queued_tokens: 1_000_000,
-                    ..Default::default()
-                }
-            } else {
-                InstanceLoad::default()
-            }
-        };
-        let out = g.route(&t, 3, &loads, 2.0).unwrap();
+        g.set_load(InstanceId(0), InstanceLoad {
+            queued_tokens: 1_000_000,
+            ..Default::default()
+        });
+        let out = g.route(&t, 3, 2.0).unwrap();
         assert_eq!(out.decision.instance, InstanceId(1));
         let (donor, donor_tokens) = out.decision.donor.unwrap();
         assert_eq!(donor, InstanceId(0));
@@ -278,9 +474,9 @@ mod tests {
     fn expected_prefill_reflects_cache() {
         let mut g = gs(PolicyKind::PromptTree);
         let t = toks(1024, 7);
-        let cold = g.route(&t, 0, &idle, 1.0).unwrap().expected_prefill_s;
+        let cold = g.route(&t, 0, 1.0).unwrap().expected_prefill_s;
         g.record_cached(InstanceId(0), &t, 1.5);
-        let warm = g.route(&t, 0, &idle, 2.0).unwrap().expected_prefill_s;
+        let warm = g.route(&t, 0, 2.0).unwrap().expected_prefill_s;
         assert!(warm < cold, "warm={warm} cold={cold}");
     }
 
@@ -293,7 +489,7 @@ mod tests {
         g.record_cached(InstanceId(1), &t, 1.0);
         g.trees.set_draining(InstanceId(1), true);
         for s in 0..10 {
-            let out = g.route(&t, s, &idle, 2.0).unwrap();
+            let out = g.route(&t, s, 2.0).unwrap();
             assert_ne!(out.decision.instance, InstanceId(1));
             // Nor may it appear as an Eq. 2 donor — migration, not
             // ad-hoc donor fetch, moves a draining instance's KV.
@@ -310,19 +506,20 @@ mod tests {
         // Both instances cache the prompt; 0 churns at full pressure.
         g.record_cached(InstanceId(0), &t, 1.0);
         g.record_cached(InstanceId(1), &t, 1.0);
-        let loads = |id: InstanceId| InstanceLoad {
-            capacity_pressure: if id == InstanceId(0) { 1.0 } else { 0.0 },
+        g.set_load(InstanceId(0), InstanceLoad {
+            capacity_pressure: 1.0,
             ..Default::default()
-        };
-        let out = g.route(&t, 0, &loads, 2.0).unwrap();
+        });
+        let out = g.route(&t, 0, 2.0).unwrap();
         assert_eq!(out.decision.instance, InstanceId(1));
     }
 
     #[test]
     fn capped_emission_preserves_decisions_at_scale() {
         // 80 instances (> the 32-instance cap trigger), varied loads,
-        // a few cache holders: capped and full emission must route
-        // identically for the load-monotone policies.
+        // a few cache holders: capped (load-book ordered prefix) and
+        // full emission must route identically for the load-monotone
+        // policies.
         for policy in [PolicyKind::PromptTree, PolicyKind::LeastLoad] {
             let mk = |cold_sample: usize| {
                 let mut g = GlobalScheduler::new(
@@ -334,12 +531,13 @@ mod tests {
                 g.cold_sample = cold_sample;
                 for i in 0..80 {
                     g.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+                    g.set_load(InstanceId(i), InstanceLoad {
+                        queued_tokens: ((i as u64 * 2654435761) % 4096)
+                            as usize,
+                        ..Default::default()
+                    });
                 }
                 g
-            };
-            let loads = |id: InstanceId| InstanceLoad {
-                queued_tokens: ((id.0 as u64 * 2654435761) % 4096) as usize,
-                ..Default::default()
             };
             let mut capped = mk(8);
             let mut full = mk(0);
@@ -349,9 +547,96 @@ mod tests {
                     capped.record_cached(InstanceId(s as u32 * 7), &t, 0.5);
                     full.record_cached(InstanceId(s as u32 * 7), &t, 0.5);
                 }
-                let a = capped.route(&t, s, &loads, 1.0).unwrap();
-                let b = full.route(&t, s, &loads, 1.0).unwrap();
+                let a = capped.route(&t, s, 1.0).unwrap();
+                let b = full.route(&t, s, 1.0).unwrap();
                 assert_eq!(a.decision, b.decision, "policy {policy:?} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn capped_emission_survives_load_and_membership_churn() {
+        // The load book is incremental: mutate loads between routes,
+        // drain/undrain, and join instances mid-stream — the ordered
+        // prefix must keep matching full emission decision-for-decision.
+        let mut capped = GlobalScheduler::new(
+            PolicyKind::PromptTree,
+            OperatorCostModel::paper_13b(),
+            16,
+            0.0,
+        );
+        capped.cold_sample = 6;
+        let mut full = GlobalScheduler::new(
+            PolicyKind::PromptTree,
+            OperatorCostModel::paper_13b(),
+            16,
+            0.0,
+        );
+        full.cold_sample = 0;
+        for i in 0..40 {
+            capped.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+            full.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+        }
+        for s in 0..60u64 {
+            // Churn a couple of loads per route (ties included: the
+            // same queued value lands on several instances).
+            for k in 0..3u64 {
+                let id = InstanceId(((s * 7 + k * 13) % 40) as u32);
+                let load = InstanceLoad {
+                    queued_tokens: ((s + k) % 5) as usize * 128,
+                    ..Default::default()
+                };
+                capped.set_load(id, load);
+                full.set_load(id, load);
+            }
+            if s == 20 {
+                capped.trees.set_draining(InstanceId(3), true);
+                full.trees.set_draining(InstanceId(3), true);
+            }
+            if s == 40 {
+                capped.add_instance(InstanceId(99),
+                                    InstanceKind::PrefillOnly);
+                full.add_instance(InstanceId(99), InstanceKind::PrefillOnly);
+            }
+            let t = toks(128, (s % 4) as u32);
+            let a = capped.route(&t, s, 1.0).unwrap();
+            let b = full.route(&t, s, 1.0).unwrap();
+            assert_eq!(a.decision, b.decision, "s={s}");
+        }
+    }
+
+    #[test]
+    fn sharded_routes_match_unsharded() {
+        // ISSUE 5 acceptance at the router level: S ∈ {1, 2, 4}
+        // schedulers make byte-identical decisions to the S=1 path
+        // across records, loads, and repeat routes.
+        for shards in [1usize, 2, 4] {
+            let mk = |s: usize| {
+                let mut g = GlobalScheduler::with_shards(
+                    PolicyKind::PromptTree,
+                    OperatorCostModel::paper_13b(),
+                    16,
+                    0.0,
+                    s,
+                );
+                for i in 0..12 {
+                    g.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+                    g.set_load(InstanceId(i), InstanceLoad {
+                        queued_tokens: (i as usize * 97) % 1024,
+                        ..Default::default()
+                    });
+                }
+                g
+            };
+            let mut shd = mk(shards);
+            let mut flat = mk(1);
+            for s in 0..40u64 {
+                let t = toks(256, (s % 7) as u32);
+                let a = shd.route(&t, s, 1.0).unwrap();
+                let b = flat.route(&t, s, 1.0).unwrap();
+                assert_eq!(a.decision, b.decision, "S={shards} s={s}");
+                shd.record_cached(a.decision.instance, &t, 1.0);
+                flat.record_cached(b.decision.instance, &t, 1.0);
             }
         }
     }
@@ -363,11 +648,11 @@ mod tests {
         g.bandwidth_bytes_per_s = 1e15;
         let t = toks(4096, 1);
         g.record_cached(InstanceId(0), &t, 1.0);
-        let loads = |id: InstanceId| InstanceLoad {
-            queued_tokens: if id == InstanceId(0) { 1_000_000 } else { 0 },
+        g.set_load(InstanceId(0), InstanceLoad {
+            queued_tokens: 1_000_000,
             ..Default::default()
-        };
-        let out = g.route(&t, 3, &loads, 2.0).unwrap();
+        });
+        let out = g.route(&t, 3, 2.0).unwrap();
         assert!(!out.fetch_from_donor);
     }
 }

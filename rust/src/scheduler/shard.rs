@@ -1,0 +1,706 @@
+//! Prefix-range sharding of the fused prompt tree (ISSUE 5 tentpole).
+//!
+//! PR 4 replicated the global prompt tree, but every replica still
+//! applies every delta: N replicas buy read throughput and durability
+//! while *write* throughput stays at 1×. This module partitions the
+//! fused tree over the **first token-block fingerprint range** into S
+//! shards — the same cluster-scale move Mooncake's KVCache-centric
+//! conductor and Infinite-LLM's distributed KV manager make (PAPERS.md):
+//! no single node absorbs the whole fleet's metadata update stream.
+//!
+//! Why the *first* block: radix-tree prefix chains are rooted at block
+//! 0, so every prefix of a prompt shares its first token-block — and
+//! therefore its shard. A route walks exactly one shard's tree and
+//! merges nothing; a `Record`/`Handoff`/`Expire` delta lands in exactly
+//! one shard's log, so delta application and log append parallelize
+//! S-ways. Only membership events (`Join`/`Leave`/`SetDraining`) and
+//! whole-view expiries (a sub-block prefix, which `release_prefix`
+//! treats as "clear everything") fan out to every shard.
+//!
+//! [`ShardedPromptTrees`] is the serving-side wrapper the
+//! [`crate::scheduler::router::GlobalScheduler`] holds: S independent
+//! [`FusedPromptTree`]s behind the single-tree surface, with S = 1
+//! delegating straight through (bit-identical to the unsharded path —
+//! the differential proptest below pins S ∈ {1, 2, 4} against both the
+//! unsharded fused tree and the per-instance reference). The
+//! replication side — one `ReplicaGroup`/`DeltaTransport` per shard —
+//! lives in [`crate::replica::sharded`] and `server/replica.rs`.
+
+use crate::elastic::delta::DeltaEvent;
+use crate::mempool::index::block_fingerprint;
+use crate::mempool::InstanceId;
+use crate::scheduler::fused_tree::{FusedPromptTree, OwnedPrefix};
+use crate::scheduler::prompt_tree::InstanceKind;
+
+/// Where one delta (or read) goes in a sharded tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardRoute {
+    /// Prefix-keyed: exactly one shard owns the whole prefix chain.
+    One(usize),
+    /// Membership / whole-view events: every shard applies it.
+    All,
+}
+
+/// Maps a first token-block fingerprint onto one of S contiguous
+/// fingerprint ranges. Range (not residue) partitioning: shard
+/// `i` owns fingerprints in `[i·2^64/S, (i+1)·2^64/S)`, computed
+/// without division as `(fp · S) >> 64`.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardMap {
+    shards: usize,
+    block_tokens: usize,
+    /// Mirrors the trees' fingerprint mask so forced-collision tests
+    /// shard exactly the way the trees chain.
+    fp_mask: u64,
+}
+
+impl ShardMap {
+    pub fn new(shards: usize, block_tokens: usize) -> Self {
+        assert!(shards >= 1, "at least one shard");
+        assert!(block_tokens > 0);
+        ShardMap {
+            shards,
+            block_tokens,
+            fp_mask: u64::MAX,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Test hook mirroring [`FusedPromptTree::set_fingerprint_mask`].
+    /// Note a low-bit mask (e.g. `0xF`) collapses every fingerprint
+    /// into shard 0's range; use a high-bit mask (`0xF << 60`) to force
+    /// collisions *and* spread across shards.
+    #[doc(hidden)]
+    pub fn set_fingerprint_mask(&mut self, mask: u64) {
+        self.fp_mask = mask;
+    }
+
+    /// Shard owning fingerprint `fp`.
+    pub fn shard_of_fp(&self, fp: u64) -> usize {
+        ((fp as u128 * self.shards as u128) >> 64) as usize
+    }
+
+    /// Shard owning a token sequence (by its first full block); `None`
+    /// when the sequence is shorter than one block.
+    pub fn shard_of_tokens(&self, tokens: &[u32]) -> Option<usize> {
+        if tokens.len() < self.block_tokens {
+            return None;
+        }
+        let fp =
+            block_fingerprint(&tokens[..self.block_tokens]) & self.fp_mask;
+        Some(self.shard_of_fp(fp))
+    }
+
+    /// Where one delta event must be applied (and logged).
+    pub fn route(&self, ev: &DeltaEvent) -> ShardRoute {
+        match ev {
+            DeltaEvent::Join { .. }
+            | DeltaEvent::Leave { .. }
+            | DeltaEvent::SetDraining { .. } => ShardRoute::All,
+            DeltaEvent::Record { tokens, .. }
+            | DeltaEvent::Handoff { tokens, .. } => {
+                // Sub-block payloads are no-ops in any tree; pin them to
+                // shard 0 so they are logged (and no-op) exactly once.
+                ShardRoute::One(self.shard_of_tokens(tokens).unwrap_or(0))
+            }
+            DeltaEvent::Expire { prefix, .. } => {
+                match self.shard_of_tokens(prefix) {
+                    Some(s) => ShardRoute::One(s),
+                    // Less than one full block means "release the whole
+                    // view" (`release_prefix` block-truncates to
+                    // empty): every shard must clear its slice.
+                    None => ShardRoute::All,
+                }
+            }
+        }
+    }
+}
+
+/// S independent [`FusedPromptTree`]s behind the single-tree surface
+/// (see module docs). Every shard carries the full instance registry —
+/// membership fans out — so any shard can answer registry reads and a
+/// one-shard match still emits every routable instance.
+pub struct ShardedPromptTrees {
+    shards: Vec<FusedPromptTree>,
+    map: ShardMap,
+    /// Shard of the last [`Self::walk`]/match (split-phase reads).
+    walked: usize,
+    /// Bumped on every membership mutation (add/remove/drain toggle or
+    /// a shard-tree swap); the router's load book resyncs when it
+    /// changes.
+    membership_gen: u64,
+}
+
+impl ShardedPromptTrees {
+    /// Single-shard tree — bit-identical to an unsharded
+    /// [`FusedPromptTree`] (every call delegates to shard 0).
+    pub fn new(block_tokens: usize, ttl: f64) -> Self {
+        Self::with_shards(block_tokens, ttl, 1)
+    }
+
+    pub fn with_shards(block_tokens: usize, ttl: f64, shards: usize)
+                       -> Self {
+        assert!(shards >= 1, "at least one shard");
+        ShardedPromptTrees {
+            shards: (0..shards)
+                .map(|_| FusedPromptTree::new(block_tokens, ttl))
+                .collect(),
+            map: ShardMap::new(shards, block_tokens),
+            walked: 0,
+            membership_gen: 0,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.map.block_tokens
+    }
+
+    /// Direct access to one shard's tree (snapshots, diagnostics).
+    pub fn shard(&self, s: usize) -> &FusedPromptTree {
+        &self.shards[s]
+    }
+
+    pub fn shard_mut(&mut self, s: usize) -> &mut FusedPromptTree {
+        &mut self.shards[s]
+    }
+
+    /// Replace one shard's tree wholesale — the promotion landing path
+    /// (a restored replica snapshot + replayed log suffix takes over
+    /// that shard's slice of the fleet state).
+    pub fn set_shard_tree(&mut self, s: usize, tree: FusedPromptTree) {
+        assert_eq!(
+            tree.block_tokens(),
+            self.map.block_tokens,
+            "shard tree geometry mismatch"
+        );
+        self.shards[s] = tree;
+        self.membership_gen += 1;
+    }
+
+    /// Test hook: force fingerprint collisions in every shard *and* the
+    /// shard map (so sharding follows the same collapsed fingerprints).
+    #[doc(hidden)]
+    pub fn set_fingerprint_mask(&mut self, mask: u64) {
+        self.map.set_fingerprint_mask(mask);
+        for t in &mut self.shards {
+            t.set_fingerprint_mask(mask);
+        }
+    }
+
+    /// Monotone counter of membership mutations (see field docs).
+    pub fn membership_gen(&self) -> u64 {
+        self.membership_gen
+    }
+
+    // ------------------------------------------------------------------
+    // Registry (fanned to every shard; reads served by shard 0)
+    // ------------------------------------------------------------------
+
+    pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
+        for t in &mut self.shards {
+            t.add_instance(id, kind);
+        }
+        self.membership_gen += 1;
+    }
+
+    pub fn remove_instance(&mut self, id: InstanceId) {
+        for t in &mut self.shards {
+            t.remove_instance(id);
+        }
+        self.membership_gen += 1;
+    }
+
+    pub fn set_draining(&mut self, id: InstanceId, draining: bool) {
+        for t in &mut self.shards {
+            t.set_draining(id, draining);
+        }
+        self.membership_gen += 1;
+    }
+
+    pub fn is_draining(&self, id: InstanceId) -> bool {
+        self.shards[0].is_draining(id)
+    }
+
+    pub fn instances(
+        &self,
+    ) -> impl Iterator<Item = (InstanceId, InstanceKind)> + '_ {
+        self.shards[0].instances()
+    }
+
+    pub fn instance_count(&self) -> usize {
+        self.shards[0].instance_count()
+    }
+
+    pub fn kind_of(&self, id: InstanceId) -> Option<InstanceKind> {
+        self.shards[0].kind_of(id)
+    }
+
+    pub fn is_route_candidate(&self, id: InstanceId) -> bool {
+        self.shards[0].is_route_candidate(id)
+    }
+
+    pub fn routable_count(&self) -> usize {
+        self.shards[0].routable_count()
+    }
+
+    /// Token-blocks believed cached on `id`, summed over shards.
+    pub fn cached_blocks(&self, id: InstanceId) -> usize {
+        self.shards.iter().map(|t| t.cached_blocks(id)).sum()
+    }
+
+    /// Live node count across shards (diagnostics).
+    pub fn node_count(&self) -> usize {
+        self.shards.iter().map(|t| t.node_count()).sum()
+    }
+
+    // ------------------------------------------------------------------
+    // Writes (routed by first-block fingerprint)
+    // ------------------------------------------------------------------
+
+    pub fn record(&mut self, instance: InstanceId, tokens: &[u32],
+                  now: f64) {
+        // Sub-block records are no-ops everywhere (block truncation).
+        if let Some(s) = self.map.shard_of_tokens(tokens) {
+            self.shards[s].record(instance, tokens, now);
+        }
+    }
+
+    pub fn release_prefix(&mut self, id: InstanceId, prefix: &[u32]) {
+        match self.map.shard_of_tokens(prefix) {
+            Some(s) => self.shards[s].release_prefix(id, prefix),
+            // Whole-view release: every shard clears its slice.
+            None => {
+                for t in &mut self.shards {
+                    t.release_prefix(id, prefix);
+                }
+            }
+        }
+    }
+
+    /// Apply one ownership delta, routed to its shard (membership and
+    /// whole-view expiries fan out) — the single write entry point, and
+    /// exactly the per-shard split `gs_apply` logs by.
+    pub fn apply_delta(&mut self, ev: &DeltaEvent) {
+        if matches!(
+            ev,
+            DeltaEvent::Join { .. }
+                | DeltaEvent::Leave { .. }
+                | DeltaEvent::SetDraining { .. }
+        ) {
+            self.membership_gen += 1;
+        }
+        match self.map.route(ev) {
+            ShardRoute::One(s) => self.shards[s].apply_delta(ev),
+            ShardRoute::All => {
+                for t in &mut self.shards {
+                    t.apply_delta(ev);
+                }
+            }
+        }
+    }
+
+    pub fn expire(&mut self, now: f64) {
+        for t in &mut self.shards {
+            t.expire(now);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Reads (one-shard walks)
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn read_shard(&self, tokens: &[u32]) -> usize {
+        // A prompt shorter than one block matches nothing anywhere;
+        // shard 0 still emits the (all-zero) routable fleet.
+        self.map.shard_of_tokens(tokens).unwrap_or(0)
+    }
+
+    pub fn match_into(
+        &mut self,
+        tokens: &[u32],
+        out: &mut Vec<(InstanceId, usize)>,
+    ) {
+        let s = self.read_shard(tokens);
+        self.walked = s;
+        self.shards[s].match_into(tokens, out);
+    }
+
+    /// Split-phase walk (see [`FusedPromptTree::walk`]): one shard's
+    /// tree is walked; [`Self::walked_len`]/[`Self::emit_walked`] read
+    /// that shard until the next walk.
+    pub fn walk(&mut self, tokens: &[u32]) {
+        let s = self.read_shard(tokens);
+        self.walked = s;
+        self.shards[s].walk(tokens);
+    }
+
+    pub fn walked_len(&self, id: InstanceId) -> usize {
+        self.shards[self.walked].walked_len(id)
+    }
+
+    pub fn emit_walked(
+        &self,
+        out: &mut Vec<(InstanceId, usize)>,
+        cold_sorted: &[InstanceId],
+    ) {
+        self.shards[self.walked].emit_walked(out, cold_sorted);
+    }
+
+    pub fn match_one(&self, id: InstanceId, tokens: &[u32]) -> usize {
+        self.shards[self.read_shard(tokens)].match_one(id, tokens)
+    }
+
+    /// The maximal prefixes `id` is believed to cache, across all
+    /// shards, token-sorted (the same determinism contract as the
+    /// unsharded [`FusedPromptTree::owned_paths`]).
+    pub fn owned_paths(&self, id: InstanceId) -> Vec<OwnedPrefix> {
+        let mut out: Vec<OwnedPrefix> = self
+            .shards
+            .iter()
+            .flat_map(|t| t.owned_paths(id))
+            .collect();
+        out.sort_by(|a, b| a.tokens.cmp(&b.tokens));
+        out
+    }
+
+    /// Per-shard counter invariants plus the cross-shard registry
+    /// agreement the fan-out guarantees.
+    #[doc(hidden)]
+    pub fn debug_check_counters(&self) {
+        for t in &self.shards {
+            t.debug_check_counters();
+        }
+        let r0: Vec<_> = self.shards[0].instances().collect();
+        for (s, t) in self.shards.iter().enumerate().skip(1) {
+            assert_eq!(
+                r0,
+                t.instances().collect::<Vec<_>>(),
+                "shard {s} registry diverged"
+            );
+            for &(id, _) in &r0 {
+                assert_eq!(
+                    self.shards[0].is_draining(id),
+                    t.is_draining(id),
+                    "shard {s} drain flag diverged for {id}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::policy::{decide, Candidate, PolicyKind};
+    use crate::scheduler::prompt_tree::GlobalPromptTrees;
+    use crate::scheduler::prompt_tree_ref::RefGlobalPromptTrees;
+    use crate::util::proptest::proptest;
+
+    const BT: usize = 4;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i * 3 + seed).collect()
+    }
+
+    #[test]
+    fn range_partition_covers_all_shards_and_respects_prefixes() {
+        let map = ShardMap::new(4, BT);
+        assert_eq!(map.shard_of_fp(0), 0);
+        assert_eq!(map.shard_of_fp(u64::MAX), 3);
+        assert_eq!(map.shard_of_fp(u64::MAX / 2 + 1), 2);
+        // Every prefix of a prompt maps to the same shard (they share
+        // block 0), and long token streams spread across shards.
+        let mut seen = [false; 4];
+        for seed in 0..64 {
+            let t = toks(4 * BT, seed * 97);
+            let s = map.shard_of_tokens(&t).unwrap();
+            for blocks in 1..=4 {
+                assert_eq!(
+                    map.shard_of_tokens(&t[..blocks * BT]),
+                    Some(s),
+                    "prefix changed shard"
+                );
+            }
+            seen[s] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "64 prompts must hit all 4 shards");
+        // Sub-block sequences have no shard.
+        assert_eq!(map.shard_of_tokens(&toks(BT - 1, 0)), None);
+        assert_eq!(map.shard_of_tokens(&[]), None);
+        // One shard: everything is shard 0.
+        let one = ShardMap::new(1, BT);
+        assert_eq!(one.shard_of_tokens(&toks(BT, 5)), Some(0));
+    }
+
+    #[test]
+    fn delta_routing_membership_fans_prefixes_pin() {
+        let map = ShardMap::new(4, BT);
+        let t = toks(2 * BT, 9);
+        let s = map.shard_of_tokens(&t).unwrap();
+        assert_eq!(
+            map.route(&DeltaEvent::Record {
+                instance: InstanceId(0),
+                tokens: t.clone(),
+                now: 1.0
+            }),
+            ShardRoute::One(s)
+        );
+        assert_eq!(
+            map.route(&DeltaEvent::Handoff {
+                from: InstanceId(0),
+                to: InstanceId(1),
+                tokens: t.clone(),
+                now: 1.0
+            }),
+            ShardRoute::One(s)
+        );
+        assert_eq!(
+            map.route(&DeltaEvent::Expire {
+                instance: InstanceId(0),
+                prefix: t.clone()
+            }),
+            ShardRoute::One(s)
+        );
+        // Whole-view expiry (sub-block prefix) hits every shard.
+        assert_eq!(
+            map.route(&DeltaEvent::Expire {
+                instance: InstanceId(0),
+                prefix: vec![]
+            }),
+            ShardRoute::All
+        );
+        assert_eq!(
+            map.route(&DeltaEvent::Expire {
+                instance: InstanceId(0),
+                prefix: vec![1, 2]
+            }),
+            ShardRoute::All
+        );
+        for ev in [
+            DeltaEvent::Join {
+                instance: InstanceId(0),
+                kind: InstanceKind::PrefillOnly,
+            },
+            DeltaEvent::Leave {
+                instance: InstanceId(0),
+            },
+            DeltaEvent::SetDraining {
+                instance: InstanceId(0),
+                draining: true,
+            },
+        ] {
+            assert_eq!(map.route(&ev), ShardRoute::All);
+        }
+    }
+
+    #[test]
+    fn records_land_in_one_shard_membership_in_all() {
+        let mut g = ShardedPromptTrees::with_shards(BT, 0.0, 4);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        let t = toks(3 * BT, 7);
+        let s = g.map().shard_of_tokens(&t).unwrap();
+        g.record(InstanceId(0), &t, 1.0);
+        for i in 0..4 {
+            assert_eq!(g.shard(i).instance_count(), 1);
+            assert_eq!(
+                g.shard(i).node_count() > 0,
+                i == s,
+                "record leaked outside its shard"
+            );
+        }
+        assert_eq!(g.match_one(InstanceId(0), &t), 3 * BT);
+        assert_eq!(g.cached_blocks(InstanceId(0)), 3);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn whole_view_release_clears_every_shard() {
+        let mut g = ShardedPromptTrees::with_shards(BT, 0.0, 4);
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        for seed in 0..16 {
+            g.record(InstanceId(0), &toks(2 * BT, seed * 131), 1.0);
+        }
+        assert!(g.cached_blocks(InstanceId(0)) > 0);
+        g.apply_delta(&DeltaEvent::Expire {
+            instance: InstanceId(0),
+            prefix: vec![],
+        });
+        assert_eq!(g.cached_blocks(InstanceId(0)), 0);
+        assert_eq!(g.node_count(), 0);
+        g.debug_check_counters();
+    }
+
+    #[test]
+    fn membership_gen_tracks_mutations() {
+        let mut g = ShardedPromptTrees::with_shards(BT, 0.0, 2);
+        let g0 = g.membership_gen();
+        g.add_instance(InstanceId(0), InstanceKind::PrefillOnly);
+        assert!(g.membership_gen() > g0);
+        let g1 = g.membership_gen();
+        g.record(InstanceId(0), &toks(BT, 1), 1.0); // data, not membership
+        assert_eq!(g.membership_gen(), g1);
+        g.set_draining(InstanceId(0), true);
+        assert!(g.membership_gen() > g1);
+    }
+
+    /// ISSUE 5 acceptance: shard counts {1, 2, 4} (fingerprint collision
+    /// masks included) against BOTH the unsharded fused tree (bit-level
+    /// behavior pin — S=1 must be identical, S>1 semantics-identical)
+    /// and the per-instance reference trees, over the full delta
+    /// interleaving of the existing differential property.
+    #[test]
+    fn prop_sharded_matches_unsharded_and_reference() {
+        // High-bit masks force fingerprint collisions AND still spread
+        // across the shard ranges (a low-bit mask would collapse every
+        // fingerprint into shard 0 — also covered, via `0xF`).
+        for (shards, mask) in [
+            (1, u64::MAX),
+            (2, u64::MAX),
+            (4, u64::MAX),
+            (4, 0xFu64 << 60),
+            (2, 0xF),
+        ] {
+            proptest(10, move |g| {
+                let ttl = 10.0;
+                let mut shd = ShardedPromptTrees::with_shards(BT, ttl,
+                                                              shards);
+                shd.set_fingerprint_mask(mask);
+                let mut fused = GlobalPromptTrees::new(BT, ttl);
+                fused.set_fingerprint_mask(mask);
+                let mut refr = RefGlobalPromptTrees::new(BT, ttl);
+                let n_inst = 8 + g.usize(0, 8) as u32;
+                for i in 0..n_inst {
+                    let kind = match i % 4 {
+                        0 => InstanceKind::DecodeOnly,
+                        _ => InstanceKind::PrefillOnly,
+                    };
+                    let id = InstanceId(i);
+                    shd.add_instance(id, kind);
+                    fused.add_instance(id, kind);
+                    refr.add_instance(id, kind);
+                }
+                let mut now = 0.0;
+                for _ in 0..g.usize(10, 40) {
+                    now += g.f64(0.1, 3.0);
+                    let len = g.usize(0, 5) * BT + g.usize(0, BT - 1);
+                    let t = g.vec_u32(len, 0, 3);
+                    let inst = InstanceId(g.u64(0, (n_inst - 1) as u64)
+                                          as u32);
+                    let ev = match g.usize(0, 8) {
+                        0 | 1 | 2 => DeltaEvent::Record {
+                            instance: inst,
+                            tokens: t.clone(),
+                            now,
+                        },
+                        3 => DeltaEvent::Expire {
+                            instance: inst,
+                            prefix: t.clone(),
+                        },
+                        4 => DeltaEvent::Handoff {
+                            from: inst,
+                            to: InstanceId((inst.0 + 1) % n_inst),
+                            tokens: t.clone(),
+                            now,
+                        },
+                        5 => DeltaEvent::SetDraining {
+                            instance: inst,
+                            draining: g.bool(),
+                        },
+                        // Membership churn: leave / rejoin fans to
+                        // every shard.
+                        6 => match shd.kind_of(inst) {
+                            Some(_) => DeltaEvent::Leave { instance: inst },
+                            None => DeltaEvent::Join {
+                                instance: inst,
+                                kind: InstanceKind::PrefillOnly,
+                            },
+                        },
+                        _ => {
+                            shd.expire(now);
+                            fused.expire(now);
+                            refr.expire(now);
+                            continue;
+                        }
+                    };
+                    shd.apply_delta(&ev);
+                    fused.apply_delta(&ev);
+                    refr.apply_delta(&ev);
+                    // Probe: full matched vectors + a policy decision.
+                    let probe = g.vec_u32(g.usize(0, 4) * BT, 0, 3);
+                    let mut got_s = vec![];
+                    shd.match_into(&probe, &mut got_s);
+                    let mut got_f = vec![];
+                    fused.match_into(&probe, &mut got_f);
+                    let expect = refr.match_all(&probe);
+                    assert_eq!(got_s, got_f, "sharded vs fused (S={shards})");
+                    assert_eq!(got_s, expect, "sharded vs reference");
+                    if !got_s.is_empty() {
+                        let cands = |m: &[(InstanceId, usize)]| {
+                            m.iter()
+                                .map(|&(id, matched)| Candidate {
+                                    instance: id,
+                                    queued_tokens: (id.0 as usize * 37)
+                                        % 256,
+                                    queued_cached_ratio: 0.0,
+                                    matched_tokens: matched,
+                                    pressure: 0.0,
+                                })
+                                .collect::<Vec<_>>()
+                        };
+                        for policy in [
+                            PolicyKind::LeastLoad,
+                            PolicyKind::PromptTree,
+                        ] {
+                            assert_eq!(
+                                decide(policy, &cands(&got_s), probe.len(),
+                                       3, |x, y| x as f64 * (1.0 - y) + 1.0),
+                                decide(policy, &cands(&expect), probe.len(),
+                                       3, |x, y| x as f64 * (1.0 - y) + 1.0),
+                                "decision diverged (S={shards})"
+                            );
+                        }
+                    }
+                    for i in 0..n_inst {
+                        let id = InstanceId(i);
+                        assert_eq!(
+                            shd.cached_blocks(id),
+                            refr.cached_blocks(id),
+                            "cached_blocks({id}) S={shards}"
+                        );
+                        assert_eq!(
+                            shd.match_one(id, &probe),
+                            fused.match_one(id, &probe),
+                            "match_one({id}) S={shards}"
+                        );
+                    }
+                    shd.debug_check_counters();
+                }
+                // owned_paths determinism across the shard split.
+                for i in 0..n_inst {
+                    let id = InstanceId(i);
+                    assert_eq!(
+                        shd.owned_paths(id),
+                        fused.owned_paths(id),
+                        "owned_paths({id}) S={shards}"
+                    );
+                }
+            });
+        }
+    }
+}

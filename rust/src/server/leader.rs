@@ -4,7 +4,7 @@
 //! thread; `ClientHandle` is the public API — submit prompts (text or
 //! tokens) and collect streamed responses with full request metrics.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -24,6 +24,7 @@ use crate::runtime::ModelRuntime;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
+use crate::scheduler::shard::ShardedPromptTrees;
 use crate::server::instance::{run_instance, InstanceConfig};
 use crate::server::message::Msg;
 use crate::server::replica::{
@@ -120,11 +121,12 @@ pub struct ServeCluster {
     /// finishing — so [`Self::drain`] waits event-driven instead of
     /// polling.
     drain_cv: Condvar,
-    /// GS replication: sequenced delta transport + follower roster.
-    /// Lock order: `gs` before this.
+    /// GS replication: one sequenced delta transport per prefix-range
+    /// shard + the follower roster. Lock order: `gs` before this.
     replication: Mutex<GsReplication>,
-    /// Promotion handshake for [`Self::fail_gs_primary`].
-    promote_done: Mutex<bool>,
+    /// Promotion handshake for [`Self::fail_gs_primary`]: shards whose
+    /// promoted snapshot has not landed yet.
+    promote_pending: Mutex<HashSet<usize>>,
     promote_cv: Condvar,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_rid: AtomicU64,
@@ -170,11 +172,12 @@ impl ServeCluster {
                     .unwrap_or(cost);
             }
         }
-        let mut gs = GlobalScheduler::new(
+        let mut gs = GlobalScheduler::with_shards(
             cfgc.scheduler.policy,
             cost,
             geom.block_tokens,
             cfgc.scheduler.tree_ttl_s,
+            cfgc.scheduler.gs_shards,
         );
         gs.bytes_per_token = geom.floats_per_token() * 4;
         gs.bandwidth_bytes_per_s = cfgc.fabric.bandwidth_gbps * 1e9;
@@ -254,16 +257,20 @@ impl ServeCluster {
             }));
         }
 
-        // GS replication: spawn follower replica threads and seed the
-        // delta log with the roster's Join events so replicas converge
-        // from sequence 0.
+        // GS replication: spawn follower replica threads — each owning
+        // a replica of every prefix-range shard — and seed every
+        // shard's delta log with the roster's Join events so replicas
+        // converge from sequence 0.
         let followers: Vec<InstanceId> = (0..cfgc.scheduler.gs_replicas)
             .map(follower_id)
             .collect();
-        let mut replication = GsReplication::new(followers.clone());
+        let gs_shards = cfgc.scheduler.gs_shards;
+        let mut replication =
+            GsReplication::new(followers.clone(), gs_shards,
+                               geom.block_tokens);
         if !followers.is_empty() {
             for &(iid, kind) in &specs {
-                replication.transport.append(DeltaEvent::Join {
+                replication.append(DeltaEvent::Join {
                     instance: iid,
                     kind,
                 });
@@ -274,7 +281,8 @@ impl ServeCluster {
                 let bt = geom.block_tokens;
                 let ttl = cfgc.scheduler.tree_ttl_s;
                 handles.push(std::thread::spawn(move || {
-                    run_gs_follower(fid, LEADER, bt, ttl, epoch, fab, ep);
+                    run_gs_follower(fid, LEADER, bt, ttl, gs_shards, epoch,
+                                    fab, ep);
                 }));
             }
         }
@@ -294,7 +302,7 @@ impl ServeCluster {
             drains: Mutex::new(HashMap::new()),
             drain_cv: Condvar::new(),
             replication: Mutex::new(replication),
-            promote_done: Mutex::new(false),
+            promote_pending: Mutex::new(HashSet::new()),
             promote_cv: Condvar::new(),
             handles: Mutex::new(handles),
             next_rid: AtomicU64::new(1),
@@ -341,10 +349,13 @@ impl ServeCluster {
     /// SetDraining/Leave) would otherwise replicate a different history
     /// than the primary executed, and `apply_delta`'s order-sensitive
     /// guards (e.g. a Handoff after the receiver's Leave) would
-    /// permanently diverge the followers. The fabric flush happens
-    /// after the `gs` lock is released — flush order is irrelevant
-    /// (per-peer cursors send by sequence), so routing never waits on
-    /// the wire.
+    /// permanently diverge the followers. Each delta lands in its
+    /// prefix-range shard's tree AND that shard's log (the same
+    /// `ShardMap` routes both; membership fans to every shard), so S
+    /// shards carry ~1/S of the write stream each. The fabric flush
+    /// happens after the `gs` lock is released — flush order is
+    /// irrelevant (per-peer, per-shard cursors send by sequence), so
+    /// routing never waits on the wire.
     fn gs_apply_batch(&self, evs: impl IntoIterator<Item = DeltaEvent>) {
         let mut evs = evs.into_iter().peekable();
         if evs.peek().is_none() {
@@ -356,7 +367,7 @@ impl ServeCluster {
         for ev in evs {
             gs.trees.apply_delta(&ev);
             if replicate {
-                rep.transport.append(ev);
+                rep.append(ev);
             }
         }
         drop(gs);
@@ -507,53 +518,82 @@ impl ServeCluster {
                     }
                     self.drain_cv.notify_all();
                 }
-                Msg::DeltaAck { from, next } => {
-                    // Cumulative ack / gap re-request from a GS
-                    // follower: advance (or rewind) its cursor, ship
-                    // whatever became sendable, truncate behind the
-                    // slowest replica.
+                Msg::DeltaAck { from, shard, next } => {
+                    // Coalesced cumulative ack / gap re-request from a
+                    // GS follower on one shard's stream: advance (or
+                    // rewind) that shard's cursor, ship whatever became
+                    // sendable, truncate behind the slowest replica.
                     let mut rep = self.replication.lock().unwrap();
-                    rep.transport.on_ack(from.0 as u64, next);
-                    rep.flush(&self.fabric, LEADER);
+                    if shard < rep.shards.len() {
+                        rep.shards[shard].on_ack(from.0 as u64, next);
+                        rep.flush(&self.fabric, LEADER);
+                    }
                 }
-                Msg::SnapshotReq { from } => {
-                    // A follower fell behind the retained log (or joined
-                    // late): bootstrap it at the current head. Captured
-                    // under both locks so no delta lands in between.
+                Msg::SnapshotReq { from, shard } => {
+                    // A follower shard fell behind the retained log (or
+                    // joined late): bootstrap it at that shard's
+                    // current head. Captured under both locks so no
+                    // delta lands in between.
                     let snap = {
                         let gs = self.gs.lock().unwrap();
                         let mut rep = self.replication.lock().unwrap();
-                        let seq = rep.transport.next_seq();
-                        rep.transport.skip_to(from.0 as u64, seq);
+                        if shard >= rep.shards.len() {
+                            continue;
+                        }
+                        let seq = rep.shards[shard].next_seq();
+                        rep.shards[shard].skip_to(from.0 as u64, seq);
                         crate::replica::TreeSnapshot::capture(
-                            &gs.trees, seq,
+                            gs.trees.shard(shard),
+                            seq,
                         )
                     };
                     let _ = self
                         .fabric
-                        .send(LEADER, from, Msg::Snapshot { snap });
+                        .send(LEADER, from, Msg::Snapshot { shard, snap });
                 }
-                Msg::Snapshot { snap } => {
+                Msg::Snapshot { shard, snap } => {
                     // Promotion reply: the promoted follower's replica
-                    // at its applied sequence. Restore it, then replay
-                    // the retained log suffix past the snapshot — the
-                    // transport keeps every unacked entry, so the
-                    // restored tree carries the FULL pre-crash
-                    // ownership state plus everything routed during the
-                    // blackout.
+                    // of ONE shard at its applied sequence. Restore it,
+                    // then replay that shard's retained log suffix past
+                    // the snapshot — the transport keeps every unacked
+                    // entry, so the restored shard carries the FULL
+                    // pre-crash ownership state plus everything routed
+                    // during the blackout.
                     {
                         let mut gs = self.gs.lock().unwrap();
                         let rep = self.replication.lock().unwrap();
+                        if shard >= rep.shards.len() {
+                            continue;
+                        }
+                        // Staleness guard: a late reply from an earlier
+                        // (timed-out) promotion round can arrive after
+                        // followers acked past its seq and truncation
+                        // dropped the prefix. Restoring it would replay
+                        // `snap.seq..head` with a silent hole — roll
+                        // the shard back and permanently lose the
+                        // truncated deltas. Ignore it and keep waiting
+                        // for the current round's reply.
+                        if snap.seq < rep.shards[shard].first_retained() {
+                            log::warn!(
+                                "ignoring stale promotion snapshot for \
+                                 shard {shard} (seq {} < retained {})",
+                                snap.seq,
+                                rep.shards[shard].first_retained()
+                            );
+                            continue;
+                        }
                         let ttl = self.opts.config.scheduler.tree_ttl_s;
                         let mut fresh = snap.restore(ttl);
-                        for seq in snap.seq..rep.transport.next_seq() {
-                            if let Some(ev) = rep.transport.get(seq) {
+                        for seq in snap.seq..rep.shards[shard].next_seq() {
+                            if let Some(ev) = rep.shards[shard].get(seq) {
                                 fresh.apply_delta(ev);
                             }
                         }
-                        gs.trees = fresh;
+                        gs.trees.set_shard_tree(shard, fresh);
                     }
-                    *self.promote_done.lock().unwrap() = true;
+                    let mut pending =
+                        self.promote_pending.lock().unwrap();
+                    pending.remove(&shard);
                     self.promote_cv.notify_all();
                 }
                 Msg::Shutdown => return,
@@ -678,27 +718,31 @@ impl ServeCluster {
             // Loads: in-flight prompt tokens per instance, plus the
             // capacity-pressure estimate from the global tree's cached-
             // block counters (Eq. 1 discounts churning cache holders).
-            let pend = self.shared.pending.lock().unwrap();
-            let mut queued: HashMap<InstanceId, usize> = HashMap::new();
-            for e in pend.values() {
-                if !e.done {
-                    *queued.entry(e.dispatched_to).or_insert(0) +=
-                        e.prompt.len();
+            // Pushed into the scheduler's load book — an unchanged load
+            // is an O(1) no-op there, and the capped cold sample reads
+            // the book's policy ordering instead of ranking the fleet.
+            let queued: HashMap<InstanceId, usize> = {
+                let pend = self.shared.pending.lock().unwrap();
+                let mut q: HashMap<InstanceId, usize> = HashMap::new();
+                for e in pend.values() {
+                    if !e.done {
+                        *q.entry(e.dispatched_to).or_insert(0) +=
+                            e.prompt.len();
+                    }
                 }
+                q
+            };
+            for &(iid, _) in &roster {
+                let load = InstanceLoad {
+                    queued_tokens: queued.get(&iid).copied().unwrap_or(0),
+                    queued_cached_ratio: 0.0,
+                    running: 0,
+                    capacity_pressure: self
+                        .pressure_estimate(&gs.trees, iid),
+                };
+                gs.set_load(iid, load);
             }
-            let pressures: HashMap<InstanceId, f64> = roster
-                .iter()
-                .map(|&(i, _)| (i, self.pressure_estimate(&gs.trees, i)))
-                .collect();
-            gs.route(&prompt, session, &|id| InstanceLoad {
-                queued_tokens: queued.get(&id).copied().unwrap_or(0),
-                queued_cached_ratio: 0.0,
-                running: 0,
-                capacity_pressure: pressures
-                    .get(&id)
-                    .copied()
-                    .unwrap_or(0.0),
-            }, now)?
+            gs.route(&prompt, session, now)?
         };
         let target = outcome.decision.instance;
         anyhow::ensure!(
@@ -799,37 +843,96 @@ impl ServeCluster {
         self.lifecycle.lock().unwrap().state(id)
     }
 
-    /// GS replication status: (log head, per-follower acked sequence).
+    /// GS replication status, aggregated over shards: (sum of shard log
+    /// heads, per-follower summed acked sequences). Per-shard detail:
+    /// [`Self::gs_shard_status`].
     pub fn gs_replication_status(&self) -> (u64, Vec<(InstanceId, u64)>) {
         let rep = self.replication.lock().unwrap();
-        let head = rep.transport.next_seq();
+        let head = rep.shards.iter().map(|t| t.next_seq()).sum();
         let acks = rep
             .followers
             .iter()
-            .map(|f| (*f, rep.transport.acked(f.0 as u64).unwrap_or(0)))
+            .map(|f| {
+                let acked = rep
+                    .shards
+                    .iter()
+                    .map(|t| t.acked(f.0 as u64).unwrap_or(0))
+                    .sum();
+                (*f, acked)
+            })
             .collect();
         (head, acks)
     }
 
-    /// Crash the GS primary and fail over to a follower replica
+    /// One shard's replication status: (log head, per-follower acked).
+    pub fn gs_shard_status(&self, shard: usize)
+                           -> (u64, Vec<(InstanceId, u64)>) {
+        let rep = self.replication.lock().unwrap();
+        let t = &rep.shards[shard];
+        let head = t.next_seq();
+        let acks = rep
+            .followers
+            .iter()
+            .map(|f| (*f, t.acked(f.0 as u64).unwrap_or(0)))
+            .collect();
+        (head, acks)
+    }
+
+    /// Crash the GS primary and fail over to follower replicas
     /// (failure injection; requires `scheduler.gs_replicas > 0`). The
-    /// primary's in-memory tree is discarded — exactly what a real
-    /// leader-GS crash loses — and rebuilt from cluster membership, so
-    /// routing continues *immediately* (cold matches, zero request
-    /// loss) while the most-caught-up follower is promoted: it replies
-    /// with a snapshot of its replica, which the leader restores and
-    /// tops up from the retained log suffix. Because the transport
-    /// retains every entry some replica has not acked, the restored
-    /// tree carries the complete pre-crash ownership state — locality
-    /// survives the crash (§5's standing assumption, now enforced).
-    /// Blocks until the promotion lands or `timeout`.
-    pub fn fail_gs_primary(&self, timeout: Duration) -> Result<InstanceId> {
-        let target = {
+    /// primary's in-memory tree — every shard of it — is discarded:
+    /// exactly what a real leader-GS crash loses. Each shard is rebuilt
+    /// from cluster membership so routing continues *immediately* (cold
+    /// matches, zero request loss) while, PER SHARD, the most-caught-up
+    /// follower of that shard's stream is promoted: it replies with a
+    /// snapshot of its shard replica, which the leader restores and
+    /// tops up from that shard's retained log suffix. Because each
+    /// transport retains every entry some replica has not acked, the
+    /// restored shards carry the complete pre-crash ownership state —
+    /// locality survives the crash (§5's standing assumption, still
+    /// enforced under sharding). Shards may promote different
+    /// followers. Blocks until every promotion lands or `timeout`;
+    /// returns the per-shard promotion targets.
+    pub fn fail_gs_primary(&self, timeout: Duration)
+                           -> Result<Vec<(usize, InstanceId)>> {
+        self.fail_gs_shards(None, timeout)
+    }
+
+    /// Shard-addressed failover: crash and re-promote only `shard`
+    /// (the other shards keep serving their slices untouched).
+    pub fn fail_gs_shard(&self, shard: usize, timeout: Duration)
+                         -> Result<Vec<(usize, InstanceId)>> {
+        self.fail_gs_shards(Some(shard), timeout)
+    }
+
+    fn fail_gs_shards(
+        &self,
+        only: Option<usize>,
+        timeout: Duration,
+    ) -> Result<Vec<(usize, InstanceId)>> {
+        let targets: Vec<(usize, InstanceId)> = {
             let rep = self.replication.lock().unwrap();
-            rep.most_caught_up()
-                .context("no GS replicas configured (scheduler.gs_replicas)")?
+            let shards: Vec<usize> = match only {
+                Some(s) => {
+                    anyhow::ensure!(
+                        s < rep.shard_count(),
+                        "shard {s} out of range (gs_shards = {})",
+                        rep.shard_count()
+                    );
+                    vec![s]
+                }
+                None => (0..rep.shard_count()).collect(),
+            };
+            shards
+                .into_iter()
+                .map(|s| rep.most_caught_up(s).map(|t| (s, t)))
+                .collect::<Option<Vec<_>>>()
+                .context(
+                    "no GS replicas configured (scheduler.gs_replicas)",
+                )?
         };
-        *self.promote_done.lock().unwrap() = false;
+        *self.promote_pending.lock().unwrap() =
+            targets.iter().map(|&(s, _)| s).collect();
         // The crash: ownership state dies with the primary. Membership
         // (and drain visibility) is re-derived from the lifecycle — the
         // GS never owned that. The `instances` roster alone is NOT
@@ -837,7 +940,7 @@ impl ServeCluster {
         // listed (only drains prune the list), and re-adding one here
         // would resurrect a dead instance as routable for the blackout.
         // Snapshot roster + states first (no nested lock orders), then
-        // swap the tree.
+        // swap the crashed shards' trees.
         let roster = self.instances.read().unwrap().clone();
         let members: Vec<(InstanceId, InstanceKind, bool)> = {
             use crate::elastic::InstanceState;
@@ -856,32 +959,43 @@ impl ServeCluster {
         };
         {
             let mut gs = self.gs.lock().unwrap();
-            let mut fresh = GlobalPromptTrees::new(
-                self.geom.block_tokens,
-                self.opts.config.scheduler.tree_ttl_s,
-            );
-            for &(iid, kind, draining) in &members {
-                fresh.add_instance(iid, kind);
-                if draining {
-                    fresh.set_draining(iid, true);
+            for &(shard, _) in &targets {
+                let mut fresh = GlobalPromptTrees::new(
+                    self.geom.block_tokens,
+                    self.opts.config.scheduler.tree_ttl_s,
+                );
+                for &(iid, kind, draining) in &members {
+                    fresh.add_instance(iid, kind);
+                    if draining {
+                        fresh.set_draining(iid, true);
+                    }
                 }
+                gs.trees.set_shard_tree(shard, fresh);
             }
-            gs.trees = fresh;
         }
-        log::warn!("GS primary crashed (injected); promoting {target}");
-        self.fabric
-            .send(LEADER, target, Msg::Promote { reply_to: LEADER })
-            .map_err(|e| anyhow::anyhow!("promote {target}: {e}"))?;
+        for &(shard, target) in &targets {
+            log::warn!(
+                "GS shard {shard} crashed (injected); promoting {target}"
+            );
+            self.fabric
+                .send(LEADER, target, Msg::Promote {
+                    shard,
+                    reply_to: LEADER,
+                })
+                .map_err(|e| {
+                    anyhow::anyhow!("promote {target} (shard {shard}): {e}")
+                })?;
+        }
         let deadline = Instant::now() + timeout;
-        let mut done = self.promote_done.lock().unwrap();
-        while !*done {
+        let mut pending = self.promote_pending.lock().unwrap();
+        while !pending.is_empty() {
             let left = deadline.saturating_duration_since(Instant::now());
             anyhow::ensure!(!left.is_zero(), "GS promotion timed out");
             let (guard, _) =
-                self.promote_cv.wait_timeout(done, left).unwrap();
-            done = guard;
+                self.promote_cv.wait_timeout(pending, left).unwrap();
+            pending = guard;
         }
-        Ok(target)
+        Ok(targets)
     }
 
     /// Recompute the decode→prefill backflow pairing (round-robin over
@@ -930,7 +1044,7 @@ impl ServeCluster {
     /// leans on (§6 Discussion).
     fn pressure_estimate(
         &self,
-        trees: &GlobalPromptTrees,
+        trees: &ShardedPromptTrees,
         id: InstanceId,
     ) -> f64 {
         let per = self.geom.blocks_per_token_block().max(1);

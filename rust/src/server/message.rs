@@ -126,24 +126,41 @@ pub enum Msg {
         prefixes: Vec<Vec<u32>>,
     },
     /// Leader (GS primary) → GS follower: one sequenced ownership delta
-    /// of the replicated global prompt tree.
-    Delta { seq: u64, ev: DeltaEvent },
+    /// of the replicated global prompt tree. `shard` names the prefix-
+    /// range shard whose log assigned `seq` — each shard is its own
+    /// sequence space and replica state.
+    Delta {
+        shard: usize,
+        seq: u64,
+        ev: DeltaEvent,
+    },
     /// GS follower → leader: `next` is the next sequence this replica
-    /// needs — a cumulative ack, and (when it is lower than what the
-    /// leader already sent) a gap re-request that rewinds the send
-    /// cursor.
-    DeltaAck { from: InstanceId, next: u64 },
-    /// GS follower → leader: this replica fell behind the retained log
-    /// (or is joining late) — bootstrap it with a [`Msg::Snapshot`].
-    SnapshotReq { from: InstanceId },
-    /// Fused-tree snapshot at a log position: leader → follower for
-    /// bootstrap/catch-up, or follower → leader as the [`Msg::Promote`]
-    /// reply carrying the promoted replica's state.
-    Snapshot { snap: TreeSnapshot },
-    /// Leader → the most-caught-up GS follower after a primary crash:
-    /// you are promoted — reply to `reply_to` with your tree state
-    /// (as a [`Msg::Snapshot`] at your applied sequence).
-    Promote { reply_to: InstanceId },
+    /// needs **on `shard`'s stream** — a cumulative ack, and (when it
+    /// is lower than what the leader already sent) a gap re-request
+    /// that rewinds that shard's send cursor. Followers coalesce: at
+    /// most one ack per shard per ingest pump (or per GS_WINDOW/4
+    /// applied deltas), not one per delta.
+    DeltaAck {
+        from: InstanceId,
+        shard: usize,
+        next: u64,
+    },
+    /// GS follower → leader: this replica's `shard` fell behind the
+    /// retained log (or is joining late) — bootstrap it with a
+    /// [`Msg::Snapshot`].
+    SnapshotReq { from: InstanceId, shard: usize },
+    /// Fused-tree snapshot of one shard at a log position: leader →
+    /// follower for bootstrap/catch-up, or follower → leader as the
+    /// [`Msg::Promote`] reply carrying the promoted replica's state.
+    Snapshot { shard: usize, snap: TreeSnapshot },
+    /// Leader → the most-caught-up GS follower of `shard` after a
+    /// primary crash: that shard slice is promoted — reply to
+    /// `reply_to` with its tree state (as a [`Msg::Snapshot`] at your
+    /// applied sequence). Shards fail over independently.
+    Promote {
+        shard: usize,
+        reply_to: InstanceId,
+    },
     /// Leader → instance: drain and exit.
     Shutdown,
 }
@@ -231,27 +248,32 @@ impl std::fmt::Debug for Msg {
                 .field("instance", instance)
                 .field("prefixes", &prefixes.len())
                 .finish(),
-            Msg::Delta { seq, ev } => f
+            Msg::Delta { shard, seq, ev } => f
                 .debug_struct("Delta")
+                .field("shard", shard)
                 .field("seq", seq)
                 .field("ev", ev)
                 .finish(),
-            Msg::DeltaAck { from, next } => f
+            Msg::DeltaAck { from, shard, next } => f
                 .debug_struct("DeltaAck")
                 .field("from", from)
+                .field("shard", shard)
                 .field("next", next)
                 .finish(),
-            Msg::SnapshotReq { from } => f
+            Msg::SnapshotReq { from, shard } => f
                 .debug_struct("SnapshotReq")
                 .field("from", from)
+                .field("shard", shard)
                 .finish(),
-            Msg::Snapshot { snap } => f
+            Msg::Snapshot { shard, snap } => f
                 .debug_struct("Snapshot")
+                .field("shard", shard)
                 .field("seq", &snap.seq)
                 .field("entries", &snap.entries.len())
                 .finish(),
-            Msg::Promote { reply_to } => f
+            Msg::Promote { shard, reply_to } => f
                 .debug_struct("Promote")
+                .field("shard", shard)
                 .field("reply_to", reply_to)
                 .finish(),
             Msg::Shutdown => write!(f, "Shutdown"),

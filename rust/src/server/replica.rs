@@ -1,18 +1,30 @@
 //! GS replication over the fabric: follower threads and the leader's
-//! replication bookkeeping (ISSUE 4 tentpole, server wiring).
+//! replication bookkeeping (ISSUE 4 tentpole, resharded by ISSUE 5).
 //!
-//! With `scheduler.gs_replicas = N`, `ServeCluster::start` spawns `N`
-//! follower threads, each owning its own fused prompt tree. Every
-//! ownership mutation the leader applies (`ServeCluster::gs_apply`)
-//! is appended to a [`DeltaTransport`] and shipped as `Msg::Delta`;
-//! followers apply in strict sequence order through a [`DeltaCursor`],
-//! acking with `Msg::DeltaAck` (which doubles as the gap re-request —
-//! an ack below the send cursor rewinds it). A follower that falls
-//! behind the truncated log asks for `Msg::SnapshotReq` → `Msg::
-//! Snapshot` bootstrap. On a primary-GS crash
-//! (`ServeCluster::fail_gs_primary`), the leader promotes the
-//! most-caught-up follower with `Msg::Promote`; the follower answers
-//! with a snapshot of its replica at its applied sequence, and the
+//! With `scheduler.gs_replicas = N` and `scheduler.gs_shards = S`, the
+//! leader keeps one [`DeltaTransport`] **per prefix-range shard** and
+//! spawns `N` follower threads, each owning a replica of *every* shard
+//! (per-shard tree + cursor — the shard subsets a thread owns; the
+//! per-shard streams stay independent so a real deployment can split
+//! them across processes). Every ownership mutation the leader applies
+//! (`ServeCluster::gs_apply`) is appended to its shard's log —
+//! membership deltas fan to all shards — and shipped as a shard-tagged
+//! `Msg::Delta`; followers apply each shard's stream in strict
+//! sequence order through a [`DeltaCursor`].
+//!
+//! **Batched acks** (ISSUE 5 satellite): a follower no longer acks
+//! every delta — an ack storm on a real NIC. It coalesces into at most
+//! one `Msg::DeltaAck` per shard per ingest pump (the endpoint's
+//! message burst) and forces a flush every `GS_WINDOW / 4` applied
+//! deltas so the leader's window never starves. Gap re-requests are
+//! still immediate: an out-of-order delta nacks `resend_from` on the
+//! spot, so loss-recovery latency is unchanged.
+//!
+//! A follower shard that falls behind the truncated log asks for
+//! `Msg::SnapshotReq` → `Msg::Snapshot` bootstrap. On a primary-GS
+//! crash (`ServeCluster::fail_gs_primary`), the leader promotes, for
+//! EACH shard, the most-caught-up follower with `Msg::Promote`; the
+//! follower answers with a snapshot of that shard's replica, and the
 //! leader restores it — then replays any retained log suffix past the
 //! snapshot — so routing resumes with the full locality state a real
 //! crash would otherwise have lost.
@@ -24,6 +36,7 @@ use crate::net::{Endpoint, Fabric};
 use crate::replica::log::{DeltaCursor, DeltaTransport, Ingest};
 use crate::replica::snapshot::TreeSnapshot;
 use crate::scheduler::prompt_tree::GlobalPromptTrees;
+use crate::scheduler::shard::{ShardMap, ShardRoute};
 use crate::server::message::Msg;
 
 /// Follower ids live at the top of the id space, just below the leader
@@ -35,156 +48,485 @@ pub fn follower_id(k: usize) -> InstanceId {
     InstanceId(GS_FOLLOWER_BASE - k as u32)
 }
 
-/// In-flight delta window per follower before acks must catch up.
+/// In-flight delta window per follower per shard before acks must
+/// catch up.
 pub const GS_WINDOW: usize = 1024;
 
+/// Applied deltas a follower may accumulate before it must flush its
+/// coalesced ack (keeps the leader's send window from stalling even in
+/// an endless burst).
+pub const GS_ACK_EVERY: usize = GS_WINDOW / 4;
+
 /// Leader-side replication state (guarded by one mutex in the leader;
-/// lock order: `gs` before this).
+/// lock order: `gs` before this). One transport per prefix-range
+/// shard; every follower is a peer of every shard.
 pub struct GsReplication {
-    pub transport: DeltaTransport,
+    pub shards: Vec<DeltaTransport>,
     pub followers: Vec<InstanceId>,
+    pub map: ShardMap,
 }
 
 impl GsReplication {
-    pub fn new(followers: Vec<InstanceId>) -> Self {
-        let mut transport = DeltaTransport::new(GS_WINDOW);
-        for f in &followers {
-            transport.register(f.0 as u64, 0);
-        }
+    pub fn new(
+        followers: Vec<InstanceId>,
+        shards: usize,
+        block_tokens: usize,
+    ) -> Self {
+        let shards = (0..shards.max(1))
+            .map(|_| {
+                let mut t = DeltaTransport::new(GS_WINDOW);
+                for f in &followers {
+                    t.register(f.0 as u64, 0);
+                }
+                t
+            })
+            .collect::<Vec<_>>();
+        let map = ShardMap::new(shards.len(), block_tokens);
         GsReplication {
-            transport,
+            shards,
             followers,
+            map,
         }
     }
 
-    /// Ship every sendable window; a follower whose endpoint is gone is
-    /// dropped from the peer set so it cannot stall log truncation.
-    pub fn flush(&mut self, fabric: &Fabric<Msg>, leader: InstanceId) {
-        let mut dead = vec![];
-        for &f in &self.followers {
-            let peer = f.0 as u64;
-            let range = self.transport.sendable(peer);
-            if range.is_empty() {
-                continue;
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Append one delta to its shard's log (membership and whole-view
+    /// expiries fan to every shard — each shard's replica needs the
+    /// full registry).
+    pub fn append(&mut self, ev: crate::elastic::delta::DeltaEvent) {
+        match self.map.route(&ev) {
+            ShardRoute::One(s) => {
+                self.shards[s].append(ev);
             }
-            for seq in range.clone() {
-                let ev = self
-                    .transport
-                    .get(seq)
-                    .expect("sendable entry retained")
-                    .clone();
-                if fabric.send(leader, f, Msg::Delta { seq, ev }).is_err() {
-                    dead.push(f);
-                    break;
+            ShardRoute::All => {
+                for t in &mut self.shards {
+                    t.append(ev.clone());
                 }
             }
-            self.transport.mark_sent(peer, range.end);
+        }
+    }
+
+    /// Ship every shard's sendable windows; a follower whose endpoint
+    /// is gone is dropped from every shard's peer set so it cannot
+    /// stall log truncation.
+    pub fn flush(&mut self, fabric: &Fabric<Msg>, leader: InstanceId) {
+        let mut dead = vec![];
+        for (shard, t) in self.shards.iter_mut().enumerate() {
+            for &f in &self.followers {
+                if dead.contains(&f) {
+                    continue;
+                }
+                let peer = f.0 as u64;
+                let range = t.sendable(peer);
+                if range.is_empty() {
+                    continue;
+                }
+                for seq in range.clone() {
+                    let ev = t
+                        .get(seq)
+                        .expect("sendable entry retained")
+                        .clone();
+                    if fabric
+                        .send(leader, f, Msg::Delta { shard, seq, ev })
+                        .is_err()
+                    {
+                        dead.push(f);
+                        break;
+                    }
+                }
+                t.mark_sent(peer, range.end);
+            }
         }
         for f in dead {
             log::warn!("GS follower {f} unreachable; dropping replica");
-            self.transport.deregister(f.0 as u64);
+            for t in &mut self.shards {
+                t.deregister(f.0 as u64);
+            }
             self.followers.retain(|x| *x != f);
         }
-        self.transport
-            .truncate_below(self.transport.min_acked());
+        for t in &mut self.shards {
+            t.truncate_below(t.min_acked());
+        }
     }
 
-    /// The follower holding the longest applied prefix (promotion
-    /// target); `None` when no follower is registered.
-    pub fn most_caught_up(&self) -> Option<InstanceId> {
+    /// The follower holding `shard`'s longest applied prefix (that
+    /// shard's promotion target); `None` when no follower is
+    /// registered. Different shards may promote different followers.
+    pub fn most_caught_up(&self, shard: usize) -> Option<InstanceId> {
+        let t = &self.shards[shard];
         self.followers
             .iter()
             .copied()
             .max_by_key(|f| {
-                (
-                    self.transport.acked(f.0 as u64).unwrap_or(0),
-                    u32::MAX - f.0,
-                )
+                (t.acked(f.0 as u64).unwrap_or(0), u32::MAX - f.0)
             })
     }
 }
 
-/// One GS follower thread: a full replica of the global prompt tree,
-/// fed by the sequenced delta stream. Runs until `Shutdown`.
+/// What [`FollowerShard::on_delta`] wants sent back to the leader.
+#[derive(Debug, PartialEq)]
+pub enum FollowerReply {
+    /// Nothing yet — the coalesced ack stays pending until the pump
+    /// flush or the `GS_ACK_EVERY` threshold.
+    None,
+    /// Send `DeltaAck { next }` now (threshold reached, or a gap
+    /// re-request that must not wait).
+    Ack(u64),
+    /// This shard fell irrecoverably behind: ask for a snapshot.
+    SnapshotReq,
+}
+
+/// One shard's replica state inside a follower thread: the tree, the
+/// strict-order cursor, and the coalesced-ack bookkeeping. Extracted
+/// from the thread loop so the batching discipline is unit-testable.
+pub struct FollowerShard {
+    pub tree: GlobalPromptTrees,
+    cursor: DeltaCursor,
+    /// Deltas applied since the last ack left.
+    applied_since_ack: usize,
+    /// An ack is owed (applies or duplicates landed since the last
+    /// flush).
+    dirty: bool,
+}
+
+impl FollowerShard {
+    pub fn new(block_tokens: usize, ttl: f64) -> Self {
+        FollowerShard {
+            tree: GlobalPromptTrees::new(block_tokens, ttl),
+            cursor: DeltaCursor::new(),
+            applied_since_ack: 0,
+            dirty: false,
+        }
+    }
+
+    /// Next sequence this shard replica needs (its ack value).
+    pub fn expected(&self) -> u64 {
+        self.cursor.expected()
+    }
+
+    /// Ingest one shard-stream delta; see [`FollowerReply`].
+    pub fn on_delta(
+        &mut self,
+        seq: u64,
+        ev: crate::elastic::delta::DeltaEvent,
+    ) -> FollowerReply {
+        match self.cursor.offer(seq, ev) {
+            Ingest::Ready(evs) => {
+                self.applied_since_ack += evs.len();
+                for e in &evs {
+                    self.tree.apply_delta(e);
+                }
+                if self.applied_since_ack >= GS_ACK_EVERY {
+                    FollowerReply::Ack(self.take_ack())
+                } else {
+                    self.dirty = true;
+                    FollowerReply::None
+                }
+            }
+            Ingest::Buffered { resend_from } => {
+                // The window bounds legitimate out-of-order buffering at
+                // GS_WINDOW - 1 entries; a buffer past half the window
+                // means the gap keeps not arriving (resend loss) — stop
+                // nacking and ask for a snapshot bootstrap instead.
+                if self.cursor.buffered() > GS_WINDOW / 2 {
+                    FollowerReply::SnapshotReq
+                } else {
+                    // Gap re-requests are IMMEDIATE — batching must not
+                    // add loss-recovery latency. The nack value doubles
+                    // as the cumulative ack, so pending state flushes
+                    // with it.
+                    self.dirty = false;
+                    self.applied_since_ack = 0;
+                    FollowerReply::Ack(resend_from)
+                }
+            }
+            // A duplicate means the leader resent something we already
+            // acked (or our ack was lost): owe it a refreshed ack at
+            // the next flush so its send cursor converges.
+            Ingest::Duplicate => {
+                self.dirty = true;
+                FollowerReply::None
+            }
+        }
+    }
+
+    /// Bootstrap / catch-up from a shard snapshot; returns the ack to
+    /// send (snapshot acks are immediate — the leader's `skip_to`
+    /// cursor is waiting on it). A snapshot OLDER than the applied
+    /// cursor is ignored: restoring it would roll the tree back while
+    /// the deltas in between — already applied and acked — would never
+    /// be resent.
+    pub fn on_snapshot(
+        &mut self,
+        snap: &TreeSnapshot,
+        block_tokens: usize,
+        ttl: f64,
+    ) -> u64 {
+        if snap.seq >= self.cursor.expected() {
+            let mut fresh = GlobalPromptTrees::new(block_tokens, ttl);
+            snap.restore_into(&mut fresh);
+            self.tree = fresh;
+            for e in self.cursor.advance_to(snap.seq) {
+                self.tree.apply_delta(&e);
+            }
+        }
+        self.take_ack()
+    }
+
+    /// Drain the pending coalesced ack, if one is owed — the per-pump
+    /// flush (and the tick path when the stream goes idle).
+    pub fn flush_ack(&mut self) -> Option<u64> {
+        if self.dirty {
+            Some(self.take_ack())
+        } else {
+            None
+        }
+    }
+
+    fn take_ack(&mut self) -> u64 {
+        self.dirty = false;
+        self.applied_since_ack = 0;
+        self.cursor.expected()
+    }
+}
+
+/// One GS follower thread: a full replica of every shard's prompt
+/// tree slice, fed by the per-shard sequenced delta streams. Runs
+/// until `Shutdown`. Acks are coalesced per shard per ingest pump
+/// (see module docs).
+#[allow(clippy::too_many_arguments)]
 pub fn run_gs_follower(
     id: InstanceId,
     leader: InstanceId,
     block_tokens: usize,
     ttl: f64,
+    shards: usize,
     epoch: Instant,
     fabric: Fabric<Msg>,
     endpoint: Endpoint<Msg>,
 ) {
-    let mut tree = GlobalPromptTrees::new(block_tokens, ttl);
-    let mut cursor = DeltaCursor::new();
-    let ack = |fabric: &Fabric<Msg>, next: u64| {
-        let _ = fabric.send(id, leader, Msg::DeltaAck { from: id, next });
+    let mut states: Vec<FollowerShard> = (0..shards.max(1))
+        .map(|_| FollowerShard::new(block_tokens, ttl))
+        .collect();
+    let send_ack = |fabric: &Fabric<Msg>, shard: usize, next: u64| {
+        let _ = fabric.send(id, leader, Msg::DeltaAck {
+            from: id,
+            shard,
+            next,
+        });
     };
     loop {
-        match endpoint.recv_timeout(Duration::from_millis(50)) {
-            Ok((_, Msg::Shutdown)) => return,
-            Ok((_, Msg::Delta { seq, ev })) => {
-                match cursor.offer(seq, ev) {
-                    Ingest::Ready(evs) => {
-                        for e in &evs {
-                            tree.apply_delta(e);
+        // Pump: block for the first message, then drain the burst
+        // without blocking, then flush ONE coalesced ack per dirty
+        // shard. A 50 ms timeout doubles as the idle ack tick.
+        let mut next_msg = endpoint
+            .recv_timeout(Duration::from_millis(50))
+            .ok()
+            .map(|(_, m)| m);
+        while let Some(msg) = next_msg.take() {
+            match msg {
+                Msg::Shutdown => return,
+                Msg::Delta { shard, seq, ev } if shard < states.len() => {
+                    match states[shard].on_delta(seq, ev) {
+                        FollowerReply::Ack(next) => {
+                            send_ack(&fabric, shard, next)
                         }
-                        ack(&fabric, cursor.expected());
-                    }
-                    Ingest::Buffered { resend_from } => {
-                        // The window bounds legitimate out-of-order
-                        // buffering at GS_WINDOW - 1 entries; a buffer
-                        // past half the window means the gap keeps not
-                        // arriving (resend loss) — stop nacking and ask
-                        // for a snapshot bootstrap instead.
-                        if cursor.buffered() > GS_WINDOW / 2 {
-                            let _ = fabric.send(id, leader, Msg::SnapshotReq {
-                                from: id,
-                            });
-                        } else {
-                            // Gap: the ack value IS the re-request.
-                            ack(&fabric, resend_from);
+                        FollowerReply::SnapshotReq => {
+                            let _ = fabric.send(id, leader,
+                                                Msg::SnapshotReq {
+                                                    from: id,
+                                                    shard,
+                                                });
                         }
+                        FollowerReply::None => {}
                     }
-                    Ingest::Duplicate => ack(&fabric, cursor.expected()),
+                }
+                Msg::Snapshot { shard, snap } if shard < states.len() => {
+                    let next =
+                        states[shard].on_snapshot(&snap, block_tokens, ttl);
+                    send_ack(&fabric, shard, next);
+                }
+                Msg::Promote { shard, reply_to }
+                    if shard < states.len() =>
+                {
+                    // Failover: hand the caller this shard's replica at
+                    // its applied sequence. The thread keeps
+                    // replicating — the restored primary resumes
+                    // streaming to it.
+                    let snap = TreeSnapshot::capture(
+                        &states[shard].tree,
+                        states[shard].expected(),
+                    );
+                    let _ = fabric.send(id, reply_to, Msg::Snapshot {
+                        shard,
+                        snap,
+                    });
+                }
+                other => {
+                    log::debug!("GS follower {id} ignoring {other:?}");
                 }
             }
-            Ok((_, Msg::Snapshot { snap })) => {
-                // Bootstrap / catch-up past a truncated log prefix. A
-                // snapshot OLDER than our applied cursor must be
-                // ignored: restoring it would roll the tree back to
-                // snap.seq while the cursor stays at expected(), and
-                // the deltas in between — already applied and acked —
-                // would never be resent (e.g. a SnapshotReq raced gap
-                // resends that then filled the hole).
-                if snap.seq < cursor.expected() {
-                    ack(&fabric, cursor.expected());
-                } else {
-                    let mut fresh =
-                        GlobalPromptTrees::new(block_tokens, ttl);
-                    snap.restore_into(&mut fresh);
-                    tree = fresh;
-                    for e in cursor.advance_to(snap.seq) {
-                        tree.apply_delta(&e);
-                    }
-                    ack(&fabric, cursor.expected());
-                }
-            }
-            Ok((_, Msg::Promote { reply_to })) => {
-                // Failover: hand the caller this replica's state at its
-                // applied sequence. The thread keeps replicating — the
-                // restored primary resumes streaming to it.
-                let snap = TreeSnapshot::capture(&tree, cursor.expected());
-                let _ = fabric.send(id, reply_to, Msg::Snapshot { snap });
-            }
-            Ok((_, other)) => {
-                log::debug!("GS follower {id} ignoring {other:?}");
-            }
-            Err(_) => {}
+            next_msg = endpoint.try_recv().map(|(_, m)| m);
         }
-        // Local TTL housekeeping: expiry is a pure function of stamps,
-        // so replicas expire independently yet equivalently — a replica
-        // never needs an expiry delta.
-        tree.expire(epoch.elapsed().as_secs_f64());
+        for (shard, st) in states.iter_mut().enumerate() {
+            if let Some(next) = st.flush_ack() {
+                send_ack(&fabric, shard, next);
+            }
+            // Local TTL housekeeping: expiry is a pure function of
+            // stamps, so replicas expire independently yet equivalently
+            // — a replica never needs an expiry delta.
+            st.tree.expire(epoch.elapsed().as_secs_f64());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::delta::DeltaEvent;
+    use crate::scheduler::prompt_tree::InstanceKind;
+
+    const BT: usize = 4;
+
+    fn rec(k: u32) -> DeltaEvent {
+        DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: (0..2 * BT as u32).map(|i| i * 3 + k * 997).collect(),
+            now: k as f64,
+        }
+    }
+
+    #[test]
+    fn follower_acks_batch_until_threshold_or_flush() {
+        let mut f = FollowerShard::new(BT, 0.0);
+        let join = DeltaEvent::Join {
+            instance: InstanceId(0),
+            kind: InstanceKind::PrefillOnly,
+        };
+        assert_eq!(f.on_delta(0, join), FollowerReply::None);
+        // In-order deltas below the threshold: no acks on the wire…
+        let mut acks = 0usize;
+        let n = GS_ACK_EVERY as u64 * 2 + 5;
+        for seq in 1..=n {
+            match f.on_delta(seq, rec(seq as u32)) {
+                FollowerReply::Ack(next) => {
+                    acks += 1;
+                    assert_eq!(next, seq + 1, "cumulative ack");
+                }
+                FollowerReply::None => {}
+                r => panic!("unexpected {r:?}"),
+            }
+        }
+        // …exactly one forced ack per GS_ACK_EVERY applied deltas.
+        assert_eq!(acks, (n as usize + 1) / GS_ACK_EVERY);
+        // The pump flush drains the remainder in ONE ack.
+        assert_eq!(f.flush_ack(), Some(n + 1));
+        assert_eq!(f.flush_ack(), None, "nothing owed after the flush");
+    }
+
+    #[test]
+    fn gap_rerequest_is_immediate_despite_batching() {
+        let mut f = FollowerShard::new(BT, 0.0);
+        assert_eq!(
+            f.on_delta(0, DeltaEvent::Join {
+                instance: InstanceId(0),
+                kind: InstanceKind::PrefillOnly,
+            }),
+            FollowerReply::None
+        );
+        // seq 2 arrives before 1: the nack must go out NOW, carrying
+        // the cumulative ack value (gap re-request latency bounded).
+        assert_eq!(f.on_delta(2, rec(2)), FollowerReply::Ack(1));
+        assert_eq!(f.flush_ack(), None, "nack flushed the pending state");
+        // The resent gap releases the buffered run; the ack for it
+        // coalesces into the next flush.
+        assert_eq!(f.on_delta(1, rec(1)), FollowerReply::None);
+        assert_eq!(f.flush_ack(), Some(3));
+    }
+
+    #[test]
+    fn lossy_stream_converges_through_batched_acks() {
+        // Leader-side transport + batched follower, with every third
+        // delivery dropped: the coalesced acks must still drive the
+        // send cursor to convergence (the satellite's regression bar).
+        let mut t = DeltaTransport::new(GS_WINDOW);
+        t.register(1, 0);
+        let mut f = FollowerShard::new(BT, 0.0);
+        t.append(DeltaEvent::Join {
+            instance: InstanceId(0),
+            kind: InstanceKind::PrefillOnly,
+        });
+        for k in 1..40u32 {
+            t.append(rec(k));
+        }
+        let mut n = 0u64;
+        let mut pumps = 0;
+        loop {
+            pumps += 1;
+            assert!(pumps < 100, "lossy stream failed to converge");
+            let mut range = t.sendable(1);
+            if range.is_empty() && t.lag(1) > 0 {
+                t.retransmit_unacked(1);
+                range = t.sendable(1);
+            }
+            if range.is_empty() {
+                break;
+            }
+            for seq in range.clone() {
+                let ev = t.get(seq).unwrap().clone();
+                n += 1;
+                if n % 3 == 0 {
+                    continue; // dropped on the wire
+                }
+                match f.on_delta(seq, ev) {
+                    FollowerReply::Ack(next) => {
+                        t.on_ack(1, next);
+                    }
+                    FollowerReply::None => {}
+                    FollowerReply::SnapshotReq => {
+                        panic!("window cannot overflow here")
+                    }
+                }
+            }
+            t.mark_sent(1, range.end);
+            if let Some(next) = f.flush_ack() {
+                t.on_ack(1, next);
+            }
+            if t.lag(1) == 0 {
+                break;
+            }
+        }
+        assert_eq!(f.expected(), 40, "follower missed deltas");
+        assert!(t.resends() > 0, "loss must have triggered re-requests");
+        assert_eq!(f.tree.cached_blocks(InstanceId(0)), 39 * 2);
+    }
+
+    #[test]
+    fn stale_snapshot_ignored_fresh_one_restores() {
+        let mut f = FollowerShard::new(BT, 20.0);
+        f.on_delta(0, DeltaEvent::Join {
+            instance: InstanceId(0),
+            kind: InstanceKind::PrefillOnly,
+        });
+        for seq in 1..=4 {
+            f.on_delta(seq, rec(seq as u32));
+        }
+        assert_eq!(f.expected(), 5);
+        // Stale snapshot (older than applied): ignored, ack refreshed.
+        let empty = TreeSnapshot::capture(&GlobalPromptTrees::new(BT, 0.0),
+                                          2);
+        assert_eq!(f.on_snapshot(&empty, BT, 20.0), 5);
+        assert!(f.tree.cached_blocks(InstanceId(0)) > 0, "rolled back");
+        // Fresh snapshot: restores and jumps the cursor.
+        let mut ahead = GlobalPromptTrees::new(BT, 20.0);
+        ahead.add_instance(InstanceId(1), InstanceKind::PrefillOnly);
+        ahead.record(InstanceId(1), &[1, 2, 3, 4], 1.0);
+        let snap = TreeSnapshot::capture(&ahead, 9);
+        assert_eq!(f.on_snapshot(&snap, BT, 20.0), 9);
+        assert_eq!(f.tree.cached_blocks(InstanceId(1)), 1);
+        assert_eq!(f.tree.cached_blocks(InstanceId(0)), 0);
     }
 }

@@ -11,7 +11,7 @@ use crate::mempool::{
 };
 use crate::metrics::{Metrics, RequestRecord};
 use crate::net::LinkModel;
-use crate::replica::ReplicaGroup;
+use crate::replica::ShardedReplicaGroup;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::prompt_tree::InstanceKind;
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
@@ -41,6 +41,11 @@ pub struct SimConfig {
     /// With replicas, a scripted [`FleetOp::GsFailover`] can crash the
     /// routing tree mid-trace and promote a follower.
     pub gs_replicas: usize,
+    /// Prefix-range shards of the global prompt tree (≥ 1): each shard
+    /// is its own fused tree, delta stream, and replica group, so a
+    /// scripted failover can crash ONE shard's slice while the others
+    /// keep serving. 1 = the unsharded tree, bit-identical to before.
+    pub gs_shards: usize,
     /// Scripted elasticity events (drain / join) on the virtual clock.
     pub fleet: Vec<FleetEvent>,
 }
@@ -61,12 +66,15 @@ pub enum FleetOp {
     Drain { inst: usize, migrate: bool },
     /// A new instance joins the fleet and becomes routable.
     Join { kind: InstanceKind },
-    /// The global scheduler's primary tree crashes; the most-caught-up
-    /// follower replica is promoted (after catch-up) and serves every
-    /// subsequent route. Requires `gs_replicas > 0`; zero request loss
-    /// and — since followers replay the same sequenced delta stream —
-    /// route decisions identical to an uninterrupted run.
-    GsFailover,
+    /// The global scheduler's primary tree crashes — all shards, or
+    /// just `shard` when set (per-shard failover: the other shards'
+    /// slices keep serving untouched). The most-caught-up follower of
+    /// each crashed shard is promoted (after catch-up) and serves every
+    /// subsequent route of that prefix range. Requires `gs_replicas >
+    /// 0`; zero request loss and — since followers replay the same
+    /// sequenced delta streams — route decisions identical to an
+    /// uninterrupted run.
+    GsFailover { shard: Option<usize> },
 }
 
 impl Default for SimConfig {
@@ -92,6 +100,7 @@ impl Default for SimConfig {
             max_batch: 16,
             tree_ttl: 300.0,
             gs_replicas: 0,
+            gs_shards: 1,
             fleet: vec![],
         }
     }
@@ -274,11 +283,13 @@ pub struct Simulation {
     nominal: BTreeMap<(usize, usize), f64>,
     instances: Vec<Instance>,
     gs: GlobalScheduler,
-    /// GS follower replicas: every ownership delta the serving tree
-    /// applies is mirrored through the sequenced log, so a scripted
-    /// [`FleetOp::GsFailover`] can promote one mid-trace. `None` when
-    /// unreplicated (or after a failover consumed the group).
-    replicas: Option<ReplicaGroup>,
+    /// GS follower replicas, one group per prefix-range shard: every
+    /// ownership delta the serving tree applies is mirrored through its
+    /// shard's sequenced log, so a scripted [`FleetOp::GsFailover`] can
+    /// promote per shard mid-trace. `None` when unreplicated; a
+    /// consumed shard (post-failover) stops mirroring, the rest
+    /// continue.
+    replicas: Option<ShardedReplicaGroup>,
     q: EventQueue<Ev>,
     ctx: Vec<Vec<u32>>, // per-session running context
     report: SimReport,
@@ -311,11 +322,12 @@ impl Simulation {
             ));
         }
         assert!(!instances.is_empty());
-        let mut gs = GlobalScheduler::new(
+        let mut gs = GlobalScheduler::with_shards(
             cfg.policy,
             cfg.cost.clone(),
             cfg.geom.block_tokens,
             cfg.tree_ttl,
+            cfg.gs_shards.max(1),
         );
         gs.bytes_per_token = cfg.geom.floats_per_token() * 4;
         gs.bandwidth_bytes_per_s = cfg.link.bandwidth;
@@ -331,7 +343,8 @@ impl Simulation {
         // GS replication: the followers consume the same membership
         // deltas the serving tree starts from.
         let replicas = if cfg.gs_replicas > 0 {
-            let mut grp = ReplicaGroup::new(
+            let mut grp = ShardedReplicaGroup::new(
+                cfg.gs_shards.max(1),
                 1 + cfg.gs_replicas,
                 cfg.geom.block_tokens,
                 cfg.tree_ttl,
@@ -486,19 +499,26 @@ impl Simulation {
         self.next_rid += 1;
 
         // --- Global scheduling (paper §6). ---
-        let instances = &self.instances;
-        let loads = |id: InstanceId| {
-            let inst = &instances[id.0 as usize];
-            InstanceLoad {
+        // Push loads into the scheduler's book (an unchanged load is an
+        // O(1) no-op; the capped cold sample reads the book's policy
+        // ordering instead of ranking the whole fleet). Decommissioned
+        // instances are skipped — their Leave already purged them from
+        // the registry and the book, and re-adding an idle entry would
+        // make every cold scan skip over the dead id forever.
+        for inst in &self.instances {
+            if inst.state == InstanceState::Decommissioned {
+                continue;
+            }
+            self.gs.set_load(inst.id, InstanceLoad {
                 queued_tokens: inst.queued_tokens,
                 queued_cached_ratio: 0.0,
                 running: inst.active.len(),
                 capacity_pressure: inst.pressure(),
-            }
-        };
+            });
+        }
         let out = self
             .gs
-            .route(&prompt, session as u64, &loads, now)
+            .route(&prompt, session as u64, now)
             .expect("sim cluster has prefill-capable instances");
         let p_idx = out.decision.instance.0 as usize;
         // Acceptance invariant: the fused tree must never hand a route
@@ -575,26 +595,33 @@ impl Simulation {
                 });
                 self.instances.push(inst);
             }
-            FleetOp::GsFailover => {
-                // The serving tree crashes. Promote the most-caught-up
-                // follower (catch-up included) and hand its tree to the
-                // scheduler: since every delta was mirrored through the
+            FleetOp::GsFailover { shard } => {
+                // The serving tree's crashed shard(s): promote each
+                // one's most-caught-up follower (catch-up included) and
+                // hand its tree to the scheduler's shard slot. Since
+                // every delta was mirrored through the shard's
                 // sequenced log, the promoted replica's route decisions
                 // are identical to the lost primary's — the trace
                 // continues as if nothing happened (zero request loss,
-                // zero locality loss). The group is consumed: a second
-                // failover needs fresh replicas.
-                let Some(mut grp) = self.replicas.take() else {
-                    panic!(
-                        "GsFailover needs gs_replicas > 0 and fires at \
-                         most once per trace"
-                    );
+                // zero locality loss). Promoted shards are consumed: a
+                // second failover of the same shard needs fresh
+                // replicas; untouched shards keep mirroring.
+                let grp = self.replicas.as_mut().expect(
+                    "GsFailover needs gs_replicas > 0 and fires at \
+                     most once per shard per trace",
+                );
+                let targets: Vec<usize> = match shard {
+                    Some(s) => vec![s],
+                    None => (0..grp.shards()).collect(),
                 };
-                let promoted = grp
-                    .fail_primary()
-                    .expect("gs_replicas >= 1 leaves a follower");
-                self.gs.trees = grp.extract_tree(promoted);
-                self.report.gs_failovers += 1;
+                for s in targets {
+                    let promoted = grp
+                        .fail_primary(s)
+                        .expect("gs_replicas >= 1 leaves a follower");
+                    let tree = grp.extract_tree(s, promoted);
+                    self.gs.trees.set_shard_tree(s, tree);
+                    self.report.gs_failovers += 1;
+                }
             }
             FleetOp::Drain { inst, migrate } => {
                 if self.instances[inst].state != InstanceState::Active {
@@ -1270,7 +1297,7 @@ mod tests {
             fleet: if failover {
                 vec![FleetEvent {
                     at: 5.0,
-                    op: FleetOp::GsFailover,
+                    op: FleetOp::GsFailover { shard: None },
                 }]
             } else {
                 vec![]
@@ -1309,6 +1336,67 @@ mod tests {
             key(&reference.metrics),
             key(&crashed.metrics),
             "promoted GS diverged from the uninterrupted reference"
+        );
+    }
+
+    #[test]
+    fn sharded_gs_identical_routing_and_per_shard_failover() {
+        // ISSUE 5 acceptance, end to end: (a) sharding the GS tree
+        // (S=2) must not change a single routing decision vs the
+        // unsharded reference run; (b) crashing ONE shard's primary
+        // mid-trace and promoting its follower must leave the whole
+        // trace identical too (the other shard never even notices).
+        let mk = |shards: usize, failover: Option<usize>| SimConfig {
+            prefill_instances: 3,
+            decode_instances: 2,
+            colocated_instances: 0,
+            gs_shards: shards,
+            gs_replicas: if failover.is_some() { 2 } else { 0 },
+            fleet: match failover {
+                Some(s) => vec![FleetEvent {
+                    at: 5.0,
+                    op: FleetOp::GsFailover { shard: Some(s) },
+                }],
+                None => vec![],
+            },
+            ..disagg(true)
+        };
+        let (spec, plan) = workload(40, 33);
+        let total = spec.total_requests();
+        let flat = Simulation::new(mk(1, None), spec.clone(), &plan).run();
+        let sharded = Simulation::new(mk(2, None), spec.clone(), &plan)
+            .run();
+        let crashed = Simulation::new(mk(2, Some(1)), spec, &plan).run();
+        assert_eq!(crashed.gs_failovers, 1, "per-shard failover missed");
+        // Zero request loss everywhere.
+        for rep in [&flat, &sharded, &crashed] {
+            assert_eq!(rep.metrics.records.len(), total);
+        }
+        let key = |m: &Metrics| {
+            let mut v: Vec<_> = m
+                .records
+                .iter()
+                .map(|r| {
+                    (
+                        r.request_id,
+                        r.prefill_instance,
+                        r.decode_instance,
+                        r.cached_tokens,
+                    )
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(
+            key(&flat.metrics),
+            key(&sharded.metrics),
+            "sharding changed routing decisions"
+        );
+        assert_eq!(
+            key(&sharded.metrics),
+            key(&crashed.metrics),
+            "per-shard failover diverged from the uninterrupted run"
         );
     }
 

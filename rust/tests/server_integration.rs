@@ -252,13 +252,16 @@ fn drain_waits_for_inflight_requests() {
 
 #[test]
 fn gs_failover_restores_routing_state_mid_run() {
-    // Replicated global scheduler (ISSUE 4): with 2 follower replicas,
-    // crashing the GS primary mid-run must lose zero requests AND zero
-    // locality state — the promoted follower's replica (plus the
-    // retained delta-log suffix) restores the full prompt tree, so the
-    // warm prompt still routes to its cache holder afterwards.
+    // Replicated global scheduler (ISSUE 4, resharded by ISSUE 5):
+    // with 2 follower replicas over 2 prefix-range shards, crashing
+    // the GS primary mid-run must lose zero requests AND zero locality
+    // state — each shard's promoted follower replica (plus that
+    // shard's retained delta-log suffix) restores the full prompt
+    // tree, so the warm prompt still routes to its cache holder
+    // afterwards.
     let mut cfg = config(2, 1, 0, true);
     cfg.scheduler.gs_replicas = 2;
+    cfg.scheduler.gs_shards = 2;
     let Some(c) = start(cfg, DisaggMilestone::PdCaching3) else {
         return;
     };
@@ -273,11 +276,15 @@ fn gs_failover_restores_routing_state_mid_run() {
         .map(|i| c.submit(toks(40, 400 + i), 2 + i as u64, sampling(3)).unwrap())
         .collect();
     let promoted = c.fail_gs_primary(T).unwrap();
+    assert_eq!(promoted.len(), 2, "one promotion per shard");
     let (head, acks) = c.gs_replication_status();
-    assert!(
-        acks.iter().any(|(f, _)| *f == promoted),
-        "promoted follower {promoted} left the replica set; head={head}"
-    );
+    for &(shard, target) in &promoted {
+        assert!(
+            acks.iter().any(|(f, _)| *f == target),
+            "shard {shard}'s promoted follower {target} left the \
+             replica set; head={head}"
+        );
+    }
     for rid in rids {
         let (g, _) = c.collect(rid, T).unwrap();
         assert_eq!(g.len(), 3, "request lost across GS failover");
