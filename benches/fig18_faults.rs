@@ -1,0 +1,561 @@
+//! Fig 18 (repo-original): fault injection + self-healing (ISSUE 6).
+//!
+//! Part 1 (`fig18_handshake`): a request/ack micro-protocol with the
+//! shape of the KV-migration handshake — per-attempt timeout, capped
+//! exponential backoff, idempotent receiver (dedupe by id, always
+//! re-ack) — over a [`Fabric`] carrying a seeded [`FaultPlan`]. Sweeps
+//! drop ∈ {0,5,10,20}% with duplication and reordering always on;
+//! asserts **zero lost requests** at every rate and reports the retry
+//! cost plus the fabric's dropped/duplicated/reordered counters.
+//!
+//! Part 2 (`fig18_blackout`): the discrete-event simulator with the
+//! GS delta-replication stream subjected to the same drop sweep
+//! (`replication_drop`) and a scripted mid-trace GS shard failover.
+//! The transport's gap repair + retransmits + pre-promotion catch-up
+//! must make the whole trace — every placement and cached-token count
+//! — **identical** to the lossless-replication run (divergent = 0).
+//!
+//! Part 3 (`fig18_live`): the live cluster (requires `make artifacts`;
+//! self-skips otherwise, like the server integration tests). Lossy
+//! leader<->follower links while serving, a drain (the 3-step
+//! migration handshake under loss), then a GS shard crash behind a
+//! directed partition: heartbeat-miss detection within the
+//! `heartbeat_misses x heartbeat_ms` window, degraded load-only
+//! routing that **keeps serving during the blackout**, promotion
+//! with capped backoff once the partition heals, and replication acks
+//! converging to the log head at quiesce.
+//!
+//! Env knobs (used by the CI smoke job):
+//! * `MEMSERVE_FIG18_MODE` — `handshake`, `blackout`, `live`,
+//!   anything else/unset runs all (part 3 self-skips sans artifacts);
+//! * `MEMSERVE_FIG18_DROP` — comma-separated drop percentages
+//!   (default `0,5,10,20`);
+//! * `MEMSERVE_FIG18_S` — GS shard count for part 2 (default `2`).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use memserve::config::Config;
+use memserve::engine::{DisaggMilestone, SamplingParams};
+use memserve::mempool::InstanceId;
+use memserve::net::{Fabric, FaultPlan, LinkFaults, LinkModel, WireCost};
+use memserve::runtime::artifacts::artifacts_available;
+use memserve::runtime::ModelRuntime;
+use memserve::scheduler::prompt_tree::InstanceKind;
+use memserve::server::{ServeCluster, ServeOptions};
+use memserve::sim::{FleetEvent, FleetOp, SimConfig, Simulation};
+use memserve::util::bench::Table;
+use memserve::workload::{ArrivalPlan, WorkloadKind, WorkloadSpec};
+
+// ---------------------------------------------------------------------
+// Part 1: retry/backoff handshake over a faulty fabric.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum PingMsg {
+    Req { id: u64 },
+    Ack { id: u64 },
+}
+
+impl WireCost for PingMsg {
+    fn wire_cost(&self) -> Option<(usize, usize, bool, bool)> {
+        None // control-plane only
+    }
+}
+
+const CLIENT: InstanceId = InstanceId(0);
+const SERVER: InstanceId = InstanceId(1);
+/// Sentinel id that tells the server thread to exit.
+const STOP: u64 = u64::MAX;
+
+/// Run N requests through the lossy link; every request retries with a
+/// per-attempt timeout and capped exponential backoff until acked.
+/// Returns (retries, unique requests the server landed, the fabric).
+fn handshake_run(drop: f64, n: u64) -> (u64, usize, Fabric<PingMsg>) {
+    let fab: Fabric<PingMsg> = Fabric::new(LinkModel::default(), false);
+    let client_ep = fab.attach(CLIENT);
+    let server_ep = fab.attach(SERVER);
+    let mut plan = FaultPlan::new(0xF18 + (drop * 100.0) as u64);
+    plan.set_default(LinkFaults {
+        drop,
+        duplicate: 0.05,
+        reorder: 0.10,
+        jitter_s: 0.0,
+    });
+    fab.set_fault_plan(plan);
+
+    // Idempotent server: dedupe by id, but ALWAYS re-ack — a lost ack
+    // must be repairable by the client's retransmit.
+    let sfab = fab.clone();
+    let server = std::thread::spawn(move || {
+        let mut seen: HashSet<u64> = HashSet::new();
+        while let Some((_, msg)) = server_ep.recv() {
+            match msg {
+                PingMsg::Req { id } if id == STOP => break,
+                PingMsg::Req { id } => {
+                    seen.insert(id);
+                    let _ = sfab.send(SERVER, CLIENT, PingMsg::Ack { id });
+                }
+                PingMsg::Ack { .. } => {}
+            }
+        }
+        seen.len()
+    });
+
+    const ATTEMPT_TIMEOUT: Duration = Duration::from_millis(8);
+    const BACKOFF_BASE: Duration = Duration::from_millis(2);
+    const BACKOFF_CAP: Duration = Duration::from_millis(32);
+    const MAX_ATTEMPTS: u32 = 64;
+    let mut retries = 0u64;
+    for id in 0..n {
+        let mut attempt = 0u32;
+        'req: loop {
+            assert!(
+                attempt < MAX_ATTEMPTS,
+                "request {id} lost after {attempt} attempts (drop={drop})"
+            );
+            fab.send(CLIENT, SERVER, PingMsg::Req { id }).unwrap();
+            let deadline = Instant::now() + ATTEMPT_TIMEOUT;
+            loop {
+                let left = deadline.saturating_duration_since(Instant::now());
+                match client_ep.recv_timeout(left.max(Duration::from_micros(1)))
+                {
+                    Ok((_, PingMsg::Ack { id: got })) if got == id => {
+                        break 'req;
+                    }
+                    Ok(_) => continue, // stale/duplicate ack: ignore
+                    Err(_) => break,   // attempt timed out
+                }
+            }
+            retries += 1;
+            let backoff = BACKOFF_BASE * 2u32.pow(attempt.min(4));
+            std::thread::sleep(backoff.min(BACKOFF_CAP));
+            attempt += 1;
+        }
+    }
+    // Quiesce: lift the plan (flushes holdbacks) and stop the server.
+    fab.clear_fault_plan();
+    fab.send(CLIENT, SERVER, PingMsg::Req { id: STOP }).unwrap();
+    let landed = server.join().unwrap();
+    (retries, landed, fab)
+}
+
+fn handshake_sweep(drops_pct: &[u32]) {
+    let mut table = Table::new("fig18_handshake", &[
+        "drop_pct",
+        "requests",
+        "landed",
+        "retries",
+        "net_dropped",
+        "net_duplicated",
+        "net_reordered",
+    ]);
+    println!(
+        "\n-- retry/backoff handshake under drop+dup+reorder: every \
+         request must land exactly once (idempotent receiver) despite \
+         silent losses --"
+    );
+    const N: u64 = 160;
+    for &d in drops_pct {
+        let p = d as f64 / 100.0;
+        let (retries, landed, fab) = handshake_run(p, N);
+        assert_eq!(
+            landed, N as usize,
+            "server landed {landed} unique requests, expected {N} \
+             (drop={d}%)"
+        );
+        let s = fab.stats();
+        if d > 0 {
+            assert!(s.dropped > 0, "drop={d}% never dropped a message");
+        }
+        table.row(vec![
+            d.to_string(),
+            N.to_string(),
+            landed.to_string(),
+            retries.to_string(),
+            s.dropped.to_string(),
+            s.duplicated.to_string(),
+            s.reordered.to_string(),
+        ]);
+        println!(
+            "  drop={d:2}%: {landed}/{N} landed, {retries:3} retries \
+             (net: {} dropped, {} duplicated, {} reordered)",
+            s.dropped, s.duplicated, s.reordered
+        );
+    }
+    table.finish();
+    println!(
+        "\nExpected shape: landed = requests at every rate (zero loss); \
+         retries grow with the drop rate — the price of self-healing, \
+         paid in retransmits, never in lost work."
+    );
+}
+
+// ---------------------------------------------------------------------
+// Part 2: lossy GS replication + scripted shard failover in the
+// discrete-event simulator.
+// ---------------------------------------------------------------------
+
+fn blackout_sweep(drops_pct: &[u32], shards: usize) {
+    let mut table = Table::new("fig18_blackout", &[
+        "drop_pct",
+        "shards",
+        "requests",
+        "completed",
+        "gs_failovers",
+        "divergent",
+    ]);
+    println!(
+        "\n-- lossy delta replication + mid-trace GS shard failover: \
+         the recovered trace must be identical to the lossless run --"
+    );
+    let spec =
+        WorkloadSpec::generate(WorkloadKind::Loogle, 40, 35, 2048, 4096);
+    let plan = ArrivalPlan::poisson(&spec, 4.0, 35);
+    let total = spec.total_requests();
+    let mk = |p: f64| SimConfig {
+        prefill_instances: 3,
+        decode_instances: 2,
+        colocated_instances: 0,
+        caching: true,
+        milestone: DisaggMilestone::PdCaching3,
+        gs_shards: shards,
+        gs_replicas: 2,
+        replication_drop: p,
+        fleet: vec![FleetEvent {
+            at: 5.0,
+            op: FleetOp::GsFailover { shard: Some(0) },
+        }],
+        ..Default::default()
+    };
+    let key = |rep: &memserve::sim::SimReport| {
+        let mut v: Vec<_> = rep
+            .metrics
+            .records
+            .iter()
+            .map(|r| {
+                (
+                    r.request_id,
+                    r.prefill_instance,
+                    r.decode_instance,
+                    r.cached_tokens,
+                )
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    };
+    let reference = Simulation::new(mk(0.0), spec.clone(), &plan).run();
+    assert_eq!(reference.metrics.records.len(), total);
+    assert_eq!(reference.gs_failovers, 1);
+    let kref = key(&reference);
+    for &d in drops_pct {
+        let p = d as f64 / 100.0;
+        let rep = Simulation::new(mk(p), spec.clone(), &plan).run();
+        assert_eq!(
+            rep.metrics.records.len(),
+            total,
+            "lost requests at replication drop {d}%"
+        );
+        assert_eq!(rep.gs_failovers, 1);
+        let k = key(&rep);
+        let divergent =
+            k.iter().zip(&kref).filter(|(a, b)| a != b).count();
+        assert_eq!(
+            divergent, 0,
+            "lossy replication (drop {d}%) changed the trace"
+        );
+        table.row(vec![
+            d.to_string(),
+            shards.to_string(),
+            total.to_string(),
+            rep.metrics.records.len().to_string(),
+            rep.gs_failovers.to_string(),
+            divergent.to_string(),
+        ]);
+        println!(
+            "  drop={d:2}%: {}/{total} completed, {} failover(s), \
+             {divergent} divergent placements",
+            rep.metrics.records.len(),
+            rep.gs_failovers
+        );
+    }
+    table.finish();
+    println!(
+        "\nExpected shape: completed = requests and divergent = 0 at \
+         every rate — gap repair and pre-promotion catch-up hide the \
+         lossy transport entirely."
+    );
+}
+
+// ---------------------------------------------------------------------
+// Part 3: live cluster — heartbeat failure detection, degraded
+// routing during the blackout, promotion with backoff, quiesce
+// convergence. Requires `make artifacts` (self-skips otherwise).
+// ---------------------------------------------------------------------
+
+/// The leader's fabric address (`ServeCluster` control plane).
+const LEADER: InstanceId = InstanceId(u32::MAX);
+
+fn toks(n: usize, seed: u32) -> Vec<u32> {
+    (0..n as u32)
+        .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 2048)
+        .collect()
+}
+
+fn sampling(max_new: usize) -> SamplingParams {
+    SamplingParams {
+        max_new_tokens: max_new,
+        eos_token: u32::MAX,
+        ..Default::default()
+    }
+}
+
+fn live() {
+    if !artifacts_available("artifacts") {
+        println!("\n[skip] fig18_live: artifacts/ not built");
+        return;
+    }
+    let mut table = Table::new("fig18_live", &[
+        "phase",
+        "elapsed_ms",
+        "detail",
+    ]);
+    println!(
+        "\n-- live cluster under faults: serve -> drain -> GS shard \
+         crash behind a partition -> detect -> degrade -> heal -> \
+         promote -> converge --"
+    );
+    let rt = Arc::new(ModelRuntime::load("artifacts").unwrap());
+    let mut cfg = Config::default();
+    cfg.cluster.prefill_instances = 2;
+    cfg.cluster.decode_instances = 1;
+    cfg.cluster.colocated_instances = 0;
+    cfg.cluster.heartbeat_ms = 100.0;
+    cfg.cluster.heartbeat_misses = 3;
+    cfg.mempool.context_caching = true;
+    cfg.mempool.hbm_blocks = 256;
+    cfg.mempool.dram_blocks = 256;
+    cfg.scheduler.gs_replicas = 2;
+    cfg.scheduler.gs_shards = 2;
+    let window = Duration::from_secs_f64(
+        cfg.cluster.heartbeat_ms / 1e3 * cfg.cluster.heartbeat_misses as f64,
+    );
+    let c = ServeCluster::start(
+        ServeOptions {
+            config: cfg,
+            milestone: DisaggMilestone::PdCaching3,
+            real_sleep: false,
+        },
+        rt,
+    )
+    .unwrap();
+    let t = Duration::from_secs(120);
+
+    // Warm a prefix on a known holder, fault-free.
+    let warm = toks(64, 21);
+    let r = c.submit(warm.clone(), 1, sampling(4)).unwrap();
+    let (g_warm, _) = c.collect(r, t).unwrap();
+
+    // Lossy leader<->follower links (replication, heartbeats, the
+    // promotion exchange); everything else stays clean.
+    let followers = c.gs_follower_ids();
+    assert_eq!(followers.len(), 2);
+    let lossy = LinkFaults {
+        drop: 0.10,
+        duplicate: 0.05,
+        reorder: 0.10,
+        jitter_s: 0.0,
+    };
+    let mut plan = FaultPlan::new(0xF18);
+    for &f in &followers {
+        plan.set_link(LEADER, f, lossy.clone());
+        plan.set_link(f, LEADER, lossy.clone());
+    }
+    c.install_fault_plan(plan);
+
+    // Phase A: serve under lossy replication — zero lost requests.
+    let t0 = Instant::now();
+    let rids: Vec<u64> = (0..6)
+        .map(|i| c.submit(toks(48, 500 + i), i as u64, sampling(3)).unwrap())
+        .collect();
+    for rid in rids {
+        let (g, _) = c.collect(rid, t).unwrap();
+        assert_eq!(g.len(), 3, "request lost under lossy replication");
+    }
+    table.row(vec![
+        "serve_lossy".into(),
+        format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3),
+        "6/6 collected".into(),
+    ]);
+
+    // Phase B: the 3-step migration handshake under loss — join a
+    // fresh instance, drain an old one; retries + the idempotent
+    // landing dedupe must deliver the cache without loss.
+    let t0 = Instant::now();
+    let victim = c
+        .instances()
+        .iter()
+        .find(|(_, k)| matches!(k, InstanceKind::PrefillOnly))
+        .map(|(i, _)| *i)
+        .expect("a prefill instance exists");
+    c.join(InstanceKind::PrefillOnly).unwrap();
+    let report = c.drain(victim, t).unwrap();
+    table.row(vec![
+        "drain_lossy".into(),
+        format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3),
+        format!("{} prefixes migrated", report.migrated_prefixes),
+    ]);
+
+    // Phase C: partition the leader->follower direction so the
+    // promotion handshake cannot complete, then crash shard 0. The
+    // detector must suspect within the miss window; the router must
+    // keep serving (load-only fallback) for the whole blackout.
+    let mut p = FaultPlan::new(0xF18);
+    for &f in &followers {
+        p.set_link(LEADER, f, lossy.clone());
+        p.set_link(f, LEADER, lossy.clone());
+        p.isolate(LEADER, f);
+    }
+    c.install_fault_plan(p);
+    c.inject_gs_shard_crash(0).unwrap();
+    let crash_at = Instant::now();
+    let mut detect = None;
+    while detect.is_none() && crash_at.elapsed() < Duration::from_secs(10) {
+        if c.gs_shard_degraded(0) {
+            detect = Some(crash_at.elapsed());
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let detect = detect.expect("shard-0 crash never detected");
+    assert!(
+        detect >= window / 2,
+        "detected in {detect:?}, before the {window:?} miss window"
+    );
+    assert!(
+        detect <= window + Duration::from_secs(2),
+        "detection took {detect:?}, bound {window:?} + sweep slack"
+    );
+    table.row(vec![
+        "detect".into(),
+        format!("{:.0}", detect.as_secs_f64() * 1e3),
+        format!("window {:.0}ms", window.as_secs_f64() * 1e3),
+    ]);
+
+    // Still serving during the blackout (prompts that hash into the
+    // degraded shard fall back to load-only placement).
+    let t0 = Instant::now();
+    assert!(c.gs_shard_degraded(0), "blackout ended prematurely");
+    let rids: Vec<u64> = (0..4)
+        .map(|i| c.submit(toks(40, 900 + i), i as u64, sampling(3)).unwrap())
+        .collect();
+    for rid in rids {
+        let (g, _) = c.collect(rid, t).unwrap();
+        assert_eq!(g.len(), 3, "request lost during GS blackout");
+    }
+    table.row(vec![
+        "serve_blackout".into(),
+        format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3),
+        "4/4 collected while degraded".into(),
+    ]);
+
+    // Heal the partition: the next promotion retry (capped backoff)
+    // gets through and the Snapshot reply restores the shard.
+    c.with_faults(|p| {
+        for &f in &followers {
+            p.heal(LEADER, f);
+        }
+    });
+    let healed_at = Instant::now();
+    while c.gs_shard_degraded(0)
+        && healed_at.elapsed() < Duration::from_secs(10)
+    {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let recover = healed_at.elapsed();
+    assert!(
+        !c.gs_shard_degraded(0),
+        "shard 0 never recovered after the partition healed"
+    );
+    assert!(
+        recover <= Duration::from_secs(5),
+        "recovery took {recover:?} after heal (retry cap + RTT bound)"
+    );
+    table.row(vec![
+        "promote".into(),
+        format!("{:.0}", recover.as_secs_f64() * 1e3),
+        "degraded flag cleared".into(),
+    ]);
+
+    // Quiesce: drop the plan, stir a few deltas so gap repair runs,
+    // and require every follower ack to converge to the log head.
+    c.clear_fault_plan();
+    let t0 = Instant::now();
+    for i in 0..3 {
+        let rid = c.submit(toks(32, 1500 + i), 7, sampling(2)).unwrap();
+        c.collect(rid, t).unwrap();
+    }
+    let mut converged = false;
+    while !converged && t0.elapsed() < Duration::from_secs(15) {
+        let (head, acks) = c.gs_replication_status();
+        converged = !acks.is_empty() && acks.iter().all(|&(_, a)| a == head);
+        if !converged {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    let (head, acks) = c.gs_replication_status();
+    assert!(
+        converged,
+        "replicas never converged at quiesce: head={head} acks={acks:?}"
+    );
+    table.row(vec![
+        "quiesce".into(),
+        format!("{:.0}", t0.elapsed().as_secs_f64() * 1e3),
+        format!("head {head}, {} acks equal", acks.len()),
+    ]);
+
+    // The warm prefix survived the whole gauntlet: same greedy output.
+    let r = c.submit(warm, 1, sampling(4)).unwrap();
+    let (g2, rec) = c.collect(r, t).unwrap();
+    assert_eq!(g_warm, g2, "faults changed generation");
+    table.row(vec![
+        "rewarm".into(),
+        "0".into(),
+        format!("cached {} tokens", rec.cached_tokens),
+    ]);
+    c.shutdown();
+    table.finish();
+    println!(
+        "\nExpected shape: detection lands just past the miss window; \
+         the blackout serves every request; promotion completes within \
+         one retry cap of the heal; acks converge to the head."
+    );
+}
+
+fn main() {
+    let mode = std::env::var("MEMSERVE_FIG18_MODE").unwrap_or_default();
+    let drops: Vec<u32> = std::env::var("MEMSERVE_FIG18_DROP")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect::<Vec<u32>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![0, 5, 10, 20]);
+    let shards: usize = std::env::var("MEMSERVE_FIG18_S")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(2);
+    let all = !matches!(mode.as_str(), "handshake" | "blackout" | "live");
+    if all || mode == "handshake" {
+        handshake_sweep(&drops);
+    }
+    if all || mode == "blackout" {
+        blackout_sweep(&drops, shards);
+    }
+    if all || mode == "live" {
+        live();
+    }
+}

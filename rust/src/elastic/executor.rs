@@ -87,6 +87,16 @@ pub fn export_prefix(
     res.map(Some)
 }
 
+/// Does `pool` already index the **entire** token prefix? The
+/// idempotency probe for the live server's `KvMigrate` handler (ISSUE
+/// 6): a duplicated/retried transfer whose payload already landed must
+/// re-ack without importing the blocks twice. Read-only — the match is
+/// not pinned and the probe leaves recency untouched beyond the match
+/// itself.
+pub fn holds_prefix(pool: &mut MemPool, tokens: &[u32], now: f64) -> bool {
+    !tokens.is_empty() && pool.match_prefix(tokens, now).tokens >= tokens.len()
+}
+
 /// Receiver half, shared by the local executor and the live server's
 /// `KvMigrate` handler: allocate on demand (the no-dstAddrList flavor
 /// of `transfer` — `import_blocks` makes room in HBM itself), land the
@@ -313,6 +323,19 @@ mod tests {
         assert_eq!(recv.used_blocks(Tier::Hbm), 2);
         assert_eq!(recv.match_prefix(&t, 3.0).tokens, 8);
         recv.check_consistency(0).unwrap();
+    }
+
+    #[test]
+    fn holds_prefix_is_full_prefix_only() {
+        let mut p = pool(0, 8, 0);
+        let t = toks(12, 5);
+        seed_prefix(&mut p, &t[..8], 1.0, 1.0);
+        assert!(holds_prefix(&mut p, &t[..8], 2.0));
+        assert!(!holds_prefix(&mut p, &t, 2.0), "partial hold is not held");
+        assert!(!holds_prefix(&mut p, &[], 2.0));
+        // A duplicate land after the probe short-circuits is a no-op at
+        // the pool level: usage stays at the original two blocks.
+        assert_eq!(p.used_blocks(Tier::Hbm), 2);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::mempool::InstanceId;
+use crate::net::faults::{FaultDecision, FaultPlan};
 use crate::net::link::LinkModel;
 
 /// Messages that carry bulk payload report `(bytes, n_calls, src_dram,
@@ -24,6 +25,12 @@ pub struct NetStats {
     pub payload_bytes: u64,
     pub api_calls: u64,
     pub busy_seconds: f64,
+    /// Messages silently lost by the fault plan (drops + partitions).
+    pub dropped: u64,
+    /// Extra copies injected by the fault plan.
+    pub duplicated: u64,
+    /// Messages held back for out-of-order delivery.
+    pub reordered: u64,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -43,6 +50,12 @@ struct Shared<M> {
     /// When false (tests/CI), the sender does not actually sleep; the
     /// modeled time is still accounted in stats.
     real_sleep: bool,
+    /// Installed fault schedule (None = perfect network, zero overhead
+    /// beyond one uncontended lock probe per send).
+    faults: Mutex<Option<FaultPlan>>,
+    /// Messages held back for reordering, keyed by directed link;
+    /// released behind the next delivered message on the same link.
+    held: Mutex<HashMap<(InstanceId, InstanceId), Vec<M>>>,
 }
 
 /// Cloneable fabric handle.
@@ -65,7 +78,7 @@ pub struct Endpoint<M> {
     fabric: Fabric<M>,
 }
 
-impl<M: WireCost + Send + 'static> Fabric<M> {
+impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
     pub fn new(link: LinkModel, real_sleep: bool) -> Self {
         Fabric {
             shared: Arc::new(Shared {
@@ -73,7 +86,45 @@ impl<M: WireCost + Send + 'static> Fabric<M> {
                 link,
                 stats: Mutex::new(NetStats::default()),
                 real_sleep,
+                faults: Mutex::new(None),
+                held: Mutex::new(HashMap::new()),
             }),
+        }
+    }
+
+    /// Install (or replace) the fault schedule. `None`-plan fabrics are
+    /// behaviorally identical to builds without fault injection.
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        *self.shared.faults.lock().unwrap() = Some(plan);
+    }
+
+    /// Remove the fault schedule and deliver anything still held back.
+    pub fn clear_fault_plan(&self) {
+        *self.shared.faults.lock().unwrap() = None;
+        self.release_held();
+    }
+
+    /// Mutate the installed plan in place (partitions: `isolate`/`heal`).
+    /// No-op when no plan is installed.
+    pub fn with_faults<R>(
+        &self,
+        f: impl FnOnce(&mut FaultPlan) -> R,
+    ) -> Option<R> {
+        self.shared.faults.lock().unwrap().as_mut().map(f)
+    }
+
+    /// Flush every holdback buffer — the quiesce helper: reordering
+    /// must delay messages, never strand them once traffic stops.
+    pub fn release_held(&self) {
+        let held: Vec<((InstanceId, InstanceId), Vec<M>)> =
+            self.shared.held.lock().unwrap().drain().collect();
+        let senders = self.shared.senders.lock().unwrap();
+        for ((from, to), msgs) in held {
+            if let Some(tx) = senders.get(&to) {
+                for m in msgs {
+                    let _ = tx.send((from, m));
+                }
+            }
         }
     }
 
@@ -104,9 +155,14 @@ impl<M: WireCost + Send + 'static> Fabric<M> {
 
     /// Send with modeled wire time (blocking the caller, like a
     /// synchronous NCCL send). Returns the modeled seconds.
+    ///
+    /// When a [`FaultPlan`] is installed the message may be dropped,
+    /// duplicated, jittered, or held back for reordering; the sender
+    /// still pays wire time and sees `Ok` on a silent loss (datagram
+    /// semantics — only end-to-end acks reveal the drop).
     pub fn send(&self, from: InstanceId, to: InstanceId, msg: M)
                 -> Result<f64, NetError> {
-        let t = match msg.wire_cost() {
+        let mut t = match msg.wire_cost() {
             Some((bytes, calls, src_dram, dst_dram)) => {
                 let t = self
                     .shared
@@ -127,13 +183,79 @@ impl<M: WireCost + Send + 'static> Fabric<M> {
                 t
             }
         };
+        // Fault injection: consult the plan (if any) before sleeping so
+        // jitter rides the same modeled-time sleep as wire cost.
+        let mut copies = 1u32;
+        {
+            let mut faults = self.shared.faults.lock().unwrap();
+            if let Some(plan) = faults.as_mut() {
+                let link = (from, to);
+                let depth = self
+                    .shared
+                    .held
+                    .lock()
+                    .unwrap()
+                    .get(&link)
+                    .map_or(0, Vec::len);
+                match plan.decide(from, to, depth) {
+                    FaultDecision::Deliver { copies: c, extra_s } => {
+                        copies = c;
+                        t += extra_s;
+                        if c > 1 {
+                            self.shared.stats.lock().unwrap().duplicated +=
+                                (c - 1) as u64;
+                        }
+                    }
+                    FaultDecision::Drop => {
+                        self.shared.stats.lock().unwrap().dropped += 1;
+                        drop(faults);
+                        if self.shared.real_sleep && t > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(t));
+                        }
+                        return Ok(t);
+                    }
+                    FaultDecision::HoldBack { extra_s } => {
+                        t += extra_s;
+                        self.shared.stats.lock().unwrap().reordered += 1;
+                        self.shared
+                            .held
+                            .lock()
+                            .unwrap()
+                            .entry(link)
+                            .or_default()
+                            .push(msg);
+                        drop(faults);
+                        if self.shared.real_sleep && t > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(t));
+                        }
+                        return Ok(t);
+                    }
+                }
+            }
+        }
         if self.shared.real_sleep && t > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(t));
         }
+        // A delivered message releases anything held back on this link
+        // *behind* it — that is the reordering.
+        let released: Vec<M> = self
+            .shared
+            .held
+            .lock()
+            .unwrap()
+            .get_mut(&(from, to))
+            .map(std::mem::take)
+            .unwrap_or_default();
         let senders = self.shared.senders.lock().unwrap();
         let tx = senders.get(&to).ok_or(NetError::Unknown(to))?;
+        for _ in 1..copies {
+            let _ = tx.send((from, msg.clone()));
+        }
         tx.send((from, msg))
             .map_err(|_| NetError::Disconnected(to))?;
+        for m in released {
+            let _ = tx.send((from, m));
+        }
         Ok(t)
     }
 }
@@ -165,7 +287,9 @@ impl<M> Endpoint<M> {
 mod tests {
     use super::*;
 
-    #[derive(Debug, PartialEq)]
+    use crate::net::faults::LinkFaults;
+
+    #[derive(Clone, Debug, PartialEq)]
     enum TestMsg {
         Ctl(u32),
         Bulk(usize, usize), // bytes, calls
@@ -260,5 +384,143 @@ mod tests {
             a.recv_timeout(Duration::from_millis(10)),
             Err(NetError::Timeout)
         ));
+    }
+
+    /// Regression (ISSUE 6 satellite): a detached endpoint's receive
+    /// must surface `Disconnected` immediately — callers that conflate
+    /// it with `Timeout` wait out the full timer for a peer that is
+    /// already gone.
+    #[test]
+    fn detached_endpoint_recv_is_disconnected_immediately() {
+        let f = fabric();
+        let a = f.attach(InstanceId(0));
+        f.detach(InstanceId(0));
+        let start = std::time::Instant::now();
+        let got = a.recv_timeout(Duration::from_secs(5));
+        assert!(matches!(got, Err(NetError::Disconnected(_))), "{got:?}");
+        assert!(
+            start.elapsed() < Duration::from_secs(1),
+            "Disconnected must not wait out the timeout"
+        );
+    }
+
+    #[test]
+    fn fault_plan_drops_and_counts() {
+        let f = fabric();
+        let _a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        let mut plan = FaultPlan::new(1);
+        plan.set_link(
+            InstanceId(0),
+            InstanceId(1),
+            LinkFaults { drop: 1.0, ..Default::default() },
+        );
+        f.set_fault_plan(plan);
+        // Silent loss: sender still sees Ok.
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(1)).unwrap();
+        assert!(b.try_recv().is_none());
+        assert_eq!(f.stats().dropped, 1);
+    }
+
+    #[test]
+    fn fault_plan_duplicates_delivery() {
+        let f = fabric();
+        let _a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        let mut plan = FaultPlan::new(1);
+        plan.set_link(
+            InstanceId(0),
+            InstanceId(1),
+            LinkFaults { duplicate: 1.0, ..Default::default() },
+        );
+        f.set_fault_plan(plan);
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(9)).unwrap();
+        assert_eq!(b.try_recv().unwrap().1, TestMsg::Ctl(9));
+        assert_eq!(b.try_recv().unwrap().1, TestMsg::Ctl(9));
+        assert!(b.try_recv().is_none());
+        assert_eq!(f.stats().duplicated, 1);
+    }
+
+    #[test]
+    fn fault_plan_reorders_behind_later_traffic() {
+        let f = fabric();
+        let _a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        let mut plan = FaultPlan::new(1);
+        // First send held back; the plan is then swapped for a clean
+        // one so the second send releases the first behind it.
+        plan.set_link(
+            InstanceId(0),
+            InstanceId(1),
+            LinkFaults { reorder: 1.0, ..Default::default() },
+        );
+        f.set_fault_plan(plan);
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(1)).unwrap();
+        assert!(b.try_recv().is_none(), "first message must be held");
+        f.with_faults(|p| {
+            p.set_link(InstanceId(0), InstanceId(1), LinkFaults::default());
+        });
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(2)).unwrap();
+        assert_eq!(b.try_recv().unwrap().1, TestMsg::Ctl(2));
+        assert_eq!(b.try_recv().unwrap().1, TestMsg::Ctl(1));
+        assert_eq!(f.stats().reordered, 1);
+    }
+
+    #[test]
+    fn release_held_flushes_stranded_messages() {
+        let f = fabric();
+        let _a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        let mut plan = FaultPlan::new(1);
+        plan.set_link(
+            InstanceId(0),
+            InstanceId(1),
+            LinkFaults { reorder: 1.0, ..Default::default() },
+        );
+        f.set_fault_plan(plan);
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(5)).unwrap();
+        assert!(b.try_recv().is_none());
+        f.release_held();
+        assert_eq!(b.try_recv().unwrap().1, TestMsg::Ctl(5));
+    }
+
+    #[test]
+    fn isolate_partitions_one_direction_until_heal() {
+        let f = fabric();
+        let a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        f.set_fault_plan(FaultPlan::new(1));
+        f.with_faults(|p| p.isolate(InstanceId(0), InstanceId(1)));
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(1)).unwrap();
+        assert!(b.try_recv().is_none());
+        // Reverse direction still flows.
+        f.send(InstanceId(1), InstanceId(0), TestMsg::Ctl(2)).unwrap();
+        assert_eq!(a.try_recv().unwrap().1, TestMsg::Ctl(2));
+        f.with_faults(|p| p.heal(InstanceId(0), InstanceId(1)));
+        f.send(InstanceId(0), InstanceId(1), TestMsg::Ctl(3)).unwrap();
+        assert_eq!(b.try_recv().unwrap().1, TestMsg::Ctl(3));
+        assert_eq!(f.stats().dropped, 1);
+    }
+
+    #[test]
+    fn jitter_inflates_modeled_time_only() {
+        let f = fabric();
+        let _a = f.attach(InstanceId(0));
+        let b = f.attach(InstanceId(1));
+        let base = f
+            .send(InstanceId(0), InstanceId(1), TestMsg::Ctl(0))
+            .unwrap();
+        let mut plan = FaultPlan::new(99);
+        plan.set_default(LinkFaults { jitter_s: 1.0, ..Default::default() });
+        f.set_fault_plan(plan);
+        let mut saw_jitter = false;
+        for i in 0..16 {
+            let t = f
+                .send(InstanceId(0), InstanceId(1), TestMsg::Ctl(i))
+                .unwrap();
+            saw_jitter |= t > base + 1e-6;
+        }
+        assert!(saw_jitter, "jitter never surfaced in modeled time");
+        while b.try_recv().is_some() {}
     }
 }

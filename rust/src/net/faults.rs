@@ -1,0 +1,281 @@
+//! Deterministic fault injection for the message fabric (ISSUE 6
+//! tentpole, part 1).
+//!
+//! A [`FaultPlan`] attached to [`crate::net::Fabric`] perturbs every
+//! `send` on a per-directed-link basis: silent drops, duplicated
+//! deliveries, bounded reordering (a message is held back and released
+//! behind later traffic on the same link), added latency jitter, and
+//! hard directed partitions ([`FaultPlan::isolate`] / [`FaultPlan::
+//! heal`]). Every probabilistic choice draws from a per-link
+//! [`crate::util::rng::Rng`] stream derived from the plan seed and the
+//! `(from, to)` pair alone — concurrent senders on different links
+//! cannot perturb each other's streams, so a seeded run is replayable
+//! regardless of thread interleaving.
+//!
+//! The plan only *decides*; the fabric owns the mechanics (cloning for
+//! duplication, the per-link holdback buffer for reordering, the
+//! dropped/duplicated/reordered counters on `NetStats`). With no plan
+//! installed the fabric's send path is behaviorally identical to the
+//! fault-free build — no RNG draws, no extra state.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::mempool::InstanceId;
+use crate::util::rng::Rng;
+
+/// Maximum messages held back per link for reordering; a full buffer
+/// forces delivery so reordering depth stays bounded.
+pub const REORDER_CAP: usize = 3;
+
+/// Per-link fault probabilities. `Default` is the fault-free link.
+#[derive(Clone, Debug, Default)]
+pub struct LinkFaults {
+    /// P(message silently lost) — the sender still pays wire time and
+    /// sees `Ok`, exactly like a datagram dropped downstream.
+    pub drop: f64,
+    /// P(message delivered twice).
+    pub duplicate: f64,
+    /// P(message held back and delivered *after* later traffic on the
+    /// same link) — bounded by [`REORDER_CAP`].
+    pub reorder: f64,
+    /// Added latency: uniform in `[0, jitter_s)` modeled seconds.
+    pub jitter_s: f64,
+}
+
+impl LinkFaults {
+    fn is_clean(&self) -> bool {
+        self.drop <= 0.0
+            && self.duplicate <= 0.0
+            && self.reorder <= 0.0
+            && self.jitter_s <= 0.0
+    }
+}
+
+/// What the fabric should do with one send.
+#[derive(Debug, PartialEq)]
+pub enum FaultDecision {
+    /// Deliver `copies` copies (1 = normal, 2 = duplicated) after
+    /// `extra_s` additional modeled seconds of jitter.
+    Deliver { copies: u32, extra_s: f64 },
+    /// Silently lose the message (partition or random drop).
+    Drop,
+    /// Hold the message back; the fabric releases it behind the next
+    /// delivered message on the same link.
+    HoldBack { extra_s: f64 },
+}
+
+/// Seeded, replayable fault schedule over directed links.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    default: LinkFaults,
+    links: HashMap<(InstanceId, InstanceId), LinkFaults>,
+    isolated: HashSet<(InstanceId, InstanceId)>,
+    rngs: HashMap<(InstanceId, InstanceId), Rng>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            default: LinkFaults::default(),
+            links: HashMap::new(),
+            isolated: HashSet::new(),
+            rngs: HashMap::new(),
+        }
+    }
+
+    /// Fault profile applied to every link without an explicit override.
+    pub fn set_default(&mut self, faults: LinkFaults) -> &mut Self {
+        self.default = faults;
+        self
+    }
+
+    /// Override the profile for one directed link `from -> to`.
+    pub fn set_link(
+        &mut self,
+        from: InstanceId,
+        to: InstanceId,
+        faults: LinkFaults,
+    ) -> &mut Self {
+        self.links.insert((from, to), faults);
+        self
+    }
+
+    /// Directed partition: every `from -> to` message is dropped until
+    /// [`Self::heal`]. (Partition both directions with two calls.)
+    pub fn isolate(&mut self, from: InstanceId, to: InstanceId) {
+        self.isolated.insert((from, to));
+    }
+
+    /// Lift a directed partition installed by [`Self::isolate`].
+    pub fn heal(&mut self, from: InstanceId, to: InstanceId) {
+        self.isolated.remove(&(from, to));
+    }
+
+    pub fn is_isolated(&self, from: InstanceId, to: InstanceId) -> bool {
+        self.isolated.contains(&(from, to))
+    }
+
+    fn faults_for(&self, link: (InstanceId, InstanceId)) -> &LinkFaults {
+        self.links.get(&link).unwrap_or(&self.default)
+    }
+
+    /// Per-link RNG stream: seeded from the plan seed and the directed
+    /// link id only, so creation order and cross-link interleaving
+    /// never shift a link's schedule.
+    fn rng_for(&mut self, link: (InstanceId, InstanceId)) -> &mut Rng {
+        let seed = self.seed;
+        self.rngs.entry(link).or_insert_with(|| {
+            let tag = ((link.0 .0 as u64) << 32) | link.1 .0 as u64;
+            Rng::new(seed ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        })
+    }
+
+    /// Decide the fate of one message on `from -> to`. `held` is the
+    /// link's current holdback depth (the plan refuses to exceed
+    /// [`REORDER_CAP`]). Clean links make no RNG draws, keeping their
+    /// streams untouched by unrelated traffic.
+    pub fn decide(
+        &mut self,
+        from: InstanceId,
+        to: InstanceId,
+        held: usize,
+    ) -> FaultDecision {
+        let link = (from, to);
+        if self.isolated.contains(&link) {
+            return FaultDecision::Drop;
+        }
+        let f = self.faults_for(link).clone();
+        if f.is_clean() {
+            return FaultDecision::Deliver { copies: 1, extra_s: 0.0 };
+        }
+        let rng = self.rng_for(link);
+        // Fixed draw order (drop, jitter, duplicate, reorder) so the
+        // schedule is a pure function of (seed, link, send index).
+        if f.drop > 0.0 && rng.chance(f.drop) {
+            return FaultDecision::Drop;
+        }
+        let extra_s = if f.jitter_s > 0.0 {
+            rng.range_f64(0.0, f.jitter_s)
+        } else {
+            0.0
+        };
+        if f.duplicate > 0.0 && rng.chance(f.duplicate) {
+            return FaultDecision::Deliver { copies: 2, extra_s };
+        }
+        if f.reorder > 0.0 && held < REORDER_CAP && rng.chance(f.reorder) {
+            return FaultDecision::HoldBack { extra_s };
+        }
+        FaultDecision::Deliver { copies: 1, extra_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: InstanceId = InstanceId(1);
+    const B: InstanceId = InstanceId(2);
+    const C: InstanceId = InstanceId(3);
+
+    #[test]
+    fn clean_plan_always_delivers_without_rng_draws() {
+        let mut p = FaultPlan::new(7);
+        for _ in 0..100 {
+            assert_eq!(
+                p.decide(A, B, 0),
+                FaultDecision::Deliver { copies: 1, extra_s: 0.0 }
+            );
+        }
+        // No RNG stream was ever materialized.
+        assert!(p.rngs.is_empty());
+    }
+
+    #[test]
+    fn certain_drop_and_certain_duplicate() {
+        let mut p = FaultPlan::new(7);
+        p.set_link(A, B, LinkFaults { drop: 1.0, ..Default::default() });
+        p.set_link(A, C, LinkFaults { duplicate: 1.0, ..Default::default() });
+        assert_eq!(p.decide(A, B, 0), FaultDecision::Drop);
+        assert!(matches!(
+            p.decide(A, C, 0),
+            FaultDecision::Deliver { copies: 2, .. }
+        ));
+    }
+
+    #[test]
+    fn reorder_respects_holdback_cap() {
+        let mut p = FaultPlan::new(7);
+        p.set_default(LinkFaults { reorder: 1.0, ..Default::default() });
+        assert!(matches!(p.decide(A, B, 0), FaultDecision::HoldBack { .. }));
+        // At the cap the plan must force delivery.
+        assert!(matches!(
+            p.decide(A, B, REORDER_CAP),
+            FaultDecision::Deliver { copies: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn isolate_and_heal_are_directed() {
+        let mut p = FaultPlan::new(7);
+        p.isolate(A, B);
+        assert_eq!(p.decide(A, B, 0), FaultDecision::Drop);
+        // Reverse direction unaffected.
+        assert!(matches!(
+            p.decide(B, A, 0),
+            FaultDecision::Deliver { copies: 1, .. }
+        ));
+        p.heal(A, B);
+        assert!(matches!(
+            p.decide(A, B, 0),
+            FaultDecision::Deliver { copies: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn jitter_adds_bounded_latency() {
+        let mut p = FaultPlan::new(7);
+        p.set_default(LinkFaults { jitter_s: 0.5, ..Default::default() });
+        for _ in 0..100 {
+            match p.decide(A, B, 0) {
+                FaultDecision::Deliver { copies: 1, extra_s } => {
+                    assert!((0.0..0.5).contains(&extra_s));
+                }
+                other => panic!("unexpected decision {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn per_link_streams_are_replayable_regardless_of_interleaving() {
+        let faults = LinkFaults { drop: 0.3, ..Default::default() };
+        // Run 1: A->B decisions interleaved with heavy A->C traffic.
+        let mut p1 = FaultPlan::new(42);
+        p1.set_default(faults.clone());
+        let mut ab1 = Vec::new();
+        for i in 0..50 {
+            for _ in 0..i % 5 {
+                p1.decide(A, C, 0);
+            }
+            ab1.push(p1.decide(A, B, 0));
+        }
+        // Run 2: A->B alone. The schedule must match exactly.
+        let mut p2 = FaultPlan::new(42);
+        p2.set_default(faults);
+        let ab2: Vec<_> = (0..50).map(|_| p2.decide(A, B, 0)).collect();
+        assert_eq!(ab1, ab2);
+    }
+
+    #[test]
+    fn drop_rate_tracks_probability() {
+        let mut p = FaultPlan::new(1234);
+        p.set_default(LinkFaults { drop: 0.2, ..Default::default() });
+        let n = 10_000;
+        let dropped = (0..n)
+            .filter(|_| p.decide(A, B, 0) == FaultDecision::Drop)
+            .count();
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.2).abs() < 0.02, "rate={rate}");
+    }
+}

@@ -20,7 +20,9 @@
 //! time to its virtual clock).
 
 pub mod fabric;
+pub mod faults;
 pub mod link;
 
 pub use fabric::{Endpoint, Fabric, NetStats, WireCost};
+pub use faults::{FaultPlan, LinkFaults};
 pub use link::LinkModel;

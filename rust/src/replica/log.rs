@@ -525,6 +525,39 @@ mod tests {
     }
 
     #[test]
+    fn replayed_deltas_never_mutate_cursor_state() {
+        // ISSUE 6 pin: a fault-injecting fabric can replay any Delta
+        // any number of times (duplication, retransmits). Every replay
+        // below the cursor must be classified Duplicate and leave the
+        // cursor's state — expected sequence AND the out-of-order
+        // buffer — bit-identical, so the replica applies each event
+        // exactly once no matter the delivery schedule.
+        let mut c = DeltaCursor::new();
+        for i in 0..4 {
+            assert!(matches!(c.offer(i, ev(i as u32)), Ingest::Ready(_)));
+        }
+        // Open a gap so the pending buffer is non-empty too.
+        assert!(matches!(c.offer(6, ev(6)), Ingest::Buffered { .. }));
+        let (exp, buf) = (c.expected(), c.buffered());
+        // Replay storm: every already-applied seq, several times over.
+        for _round in 0..3 {
+            for i in 0..4 {
+                assert_eq!(c.offer(i, ev(i as u32)), Ingest::Duplicate);
+                assert_eq!(c.expected(), exp);
+                assert_eq!(c.buffered(), buf);
+            }
+        }
+        // The gap still heals normally afterwards.
+        assert_eq!(c.offer(4, ev(4)), Ingest::Ready(vec![ev(4)]));
+        assert_eq!(c.offer(5, ev(5)), Ingest::Ready(vec![ev(5), ev(6)]));
+        assert_eq!(c.expected(), 7);
+        // And a replay of the healed run is still inert.
+        assert_eq!(c.offer(6, ev(6)), Ingest::Duplicate);
+        assert_eq!(c.expected(), 7);
+        assert_eq!(c.buffered(), 0);
+    }
+
+    #[test]
     fn cursor_snapshot_jump_drops_superseded() {
         let mut c = DeltaCursor::new();
         assert!(matches!(c.offer(5, ev(5)), Ingest::Buffered { .. }));

@@ -131,6 +131,21 @@ impl ShardedReplicaGroup {
         }
     }
 
+    /// [`Self::pump`] with fault injection (ISSUE 6): `drop(shard,
+    /// replica, seq)` true drops that delivery on the floor — recovered
+    /// only by the receiver's gap re-request or the pump's retransmit
+    /// path, exactly like a lost fabric message.
+    pub fn pump_lossy(
+        &mut self,
+        drop: &mut dyn FnMut(usize, usize, u64) -> bool,
+    ) {
+        for (s, g) in self.groups.iter_mut().enumerate() {
+            if let Some(g) = g {
+                g.pump_lossy(&mut |r, seq| drop(s, r, seq));
+            }
+        }
+    }
+
     pub fn all_caught_up(&self) -> bool {
         self.groups
             .iter()
@@ -187,7 +202,10 @@ impl ShardedReplicaGroup {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::replica::TreeSnapshot;
     use crate::scheduler::prompt_tree::InstanceKind;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
 
     const BT: usize = 4;
 
@@ -340,5 +358,87 @@ mod tests {
             now: 3.0,
         });
         assert!(g.all_caught_up());
+    }
+
+    #[test]
+    fn lossy_schedules_converge_to_fault_free_state() {
+        // Differential property (ISSUE 6): a seeded drop schedule —
+        // which induces retransmits, hence duplicate and reordered
+        // ingests at the cursors — must converge every replica of
+        // every shard to EXACTLY the fault-free twin's tree state once
+        // the transports quiesce. Run at the natural fingerprint and a
+        // 4-bit mask (forced shard/fingerprint collisions).
+        proptest(16, |g| {
+            for &mask in &[u64::MAX, 0xF] {
+                let shards = *g.pick(&[1usize, 2, 4]);
+                // Small window: retained-log pressure + SnapshotReq-less
+                // gap repair both get exercised.
+                let mut lossy =
+                    ShardedReplicaGroup::new(shards, 3, BT, 0.0, 8);
+                let mut clean =
+                    ShardedReplicaGroup::new(shards, 3, BT, 0.0, 8);
+                lossy.set_fingerprint_mask(mask);
+                clean.set_fingerprint_mask(mask);
+                let p_drop = g.f64(0.05, 0.4);
+                let mut drop_rng = Rng::new(g.rng().next_u64());
+                for i in 0..3u32 {
+                    let ev = DeltaEvent::Join {
+                        instance: InstanceId(i),
+                        kind: InstanceKind::PrefillOnly,
+                    };
+                    clean.apply_sync(ev.clone());
+                    lossy.apply(ev);
+                }
+                let n_evs = g.usize(8, 48);
+                for k in 0..n_evs {
+                    let ev = if k > 0 && g.rng().chance(0.1) {
+                        DeltaEvent::Expire {
+                            instance: InstanceId(g.u64(0, 2) as u32),
+                            prefix: vec![],
+                        }
+                    } else {
+                        DeltaEvent::Record {
+                            instance: InstanceId(g.u64(0, 2) as u32),
+                            tokens: toks(
+                                (1 + g.usize(0, 2)) * BT,
+                                g.u64(0, 9) as u32,
+                            ),
+                            now: 1.0 + k as f64,
+                        }
+                    };
+                    clean.apply_sync(ev.clone());
+                    lossy.apply(ev);
+                    lossy.pump_lossy(&mut |_, _, _| {
+                        drop_rng.chance(p_drop)
+                    });
+                }
+                // Quiesce: keep pumping (still lossy) until every
+                // replica confirms — the gap-repair/retransmit path
+                // must win against the drop schedule.
+                let mut guard = 0u32;
+                while !lossy.all_caught_up() {
+                    lossy.pump_lossy(&mut |_, _, _| {
+                        drop_rng.chance(p_drop)
+                    });
+                    guard += 1;
+                    assert!(guard < 100_000, "transport never converged");
+                }
+                for s in 0..shards {
+                    for i in 0..lossy.group(s).len() {
+                        let a = TreeSnapshot::capture(
+                            lossy.group(s).tree(i), 0,
+                        );
+                        let b = TreeSnapshot::capture(
+                            clean.group(s).tree(i), 0,
+                        );
+                        assert_eq!(
+                            a.entries, b.entries,
+                            "shard {s} replica {i} diverged \
+                             (mask {mask:#x})"
+                        );
+                    }
+                }
+            }
+        });
     }
 }

@@ -137,6 +137,11 @@ pub struct GlobalScheduler {
     /// unchanged; the session-id policy (whose pick depends on the
     /// candidate *count*) always gets full emission. 0 disables.
     pub cold_sample: usize,
+    /// Prefix-range shards currently degraded (ISSUE 6): their primary
+    /// tree is suspected crashed and awaiting promotion, so prompts
+    /// hashing into them route via the load book alone (no tree walk)
+    /// instead of stalling. Cleared when the promoted snapshot lands.
+    degraded_shards: HashSet<usize>,
     /// Policy-ordered per-instance loads (see [`Self::set_load`]).
     book: LoadBook,
     /// `trees.membership_gen()` the book was last synced against.
@@ -181,6 +186,7 @@ impl GlobalScheduler {
             block_tokens,
             transfer_decision_enabled: true,
             cold_sample: 32,
+            degraded_shards: HashSet::new(),
             book: LoadBook::default(),
             book_gen: None,
             match_buf: vec![],
@@ -192,6 +198,22 @@ impl GlobalScheduler {
 
     pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
         self.trees.add_instance(id, kind);
+    }
+
+    /// Mark one prefix-range shard degraded (or healed). While
+    /// degraded, prompts hashing into it skip the tree walk and place
+    /// by load alone — graceful degradation instead of a stall while
+    /// the shard's promotion completes.
+    pub fn set_shard_degraded(&mut self, shard: usize, degraded: bool) {
+        if degraded {
+            self.degraded_shards.insert(shard);
+        } else {
+            self.degraded_shards.remove(&shard);
+        }
+    }
+
+    pub fn is_shard_degraded(&self, shard: usize) -> bool {
+        self.degraded_shards.contains(&shard)
     }
 
     /// The load book key: the load-dependent prefix of the active
@@ -293,12 +315,33 @@ impl GlobalScheduler {
             book,
             policy,
             cold_sample,
+            degraded_shards,
             ..
         } = self;
+        let degraded = !degraded_shards.is_empty()
+            && degraded_shards.contains(
+                &trees.map().shard_of_tokens(prompt).unwrap_or(0),
+            );
         let capped = *cold_sample > 0
             && *policy != PolicyKind::SessionId
             && trees.instance_count() > *cold_sample;
-        if capped && trees.routable_count() > *cold_sample {
+        if degraded {
+            // Fallback (ISSUE 6): the prompt's shard is blacked out —
+            // its tree state is gone until the promoted snapshot
+            // lands. Rather than stall (or trust a just-wiped tree),
+            // emit every routable prefill instance as a zero-match
+            // candidate straight from the load book; the policy's cold
+            // ordering places by load. The response path keeps
+            // appending Record deltas to the shard's log throughout,
+            // so the restored tree still learns what was cached during
+            // the blackout.
+            match_buf.clear();
+            for &(_, id) in book.order.iter() {
+                if trees.is_route_candidate(id) {
+                    match_buf.push((id, 0));
+                }
+            }
+        } else if capped && trees.routable_count() > *cold_sample {
             trees.walk(prompt);
             cold_buf.clear();
             let mut boundary: Option<BookKey> = None;
@@ -639,6 +682,62 @@ mod tests {
                 flat.record_cached(b.decision.instance, &t, 1.0);
             }
         }
+    }
+
+    #[test]
+    fn degraded_shard_serves_loadbook_only_and_rewarms() {
+        let mut g = gs(PolicyKind::PromptTree);
+        let t = toks(256, 0);
+        g.record_cached(InstanceId(1), &t, 1.0);
+        // Healthy: the cache holder wins.
+        let out = g.route(&t, 9, 2.0).unwrap();
+        assert_eq!(out.decision.instance, InstanceId(1));
+        assert_eq!(out.decision.matched_tokens, 256);
+        // Blackout: the prompt's shard (S=1 → shard 0) degrades. The
+        // route must still succeed — zero-match placement by load —
+        // and must not consult the (suspect) tree.
+        g.set_shard_degraded(0, true);
+        assert!(g.is_shard_degraded(0));
+        g.set_load(InstanceId(0), InstanceLoad {
+            queued_tokens: 10_000,
+            ..Default::default()
+        });
+        let out = g.route(&t, 9, 3.0).unwrap();
+        assert_eq!(out.decision.matched_tokens, 0, "no tree walk");
+        assert_eq!(
+            out.decision.instance,
+            InstanceId(1),
+            "load-only placement picks the idle instance"
+        );
+        assert!(out.decision.donor.is_none());
+        // Re-warm: tree-guided placement resumes, cache intact.
+        g.set_shard_degraded(0, false);
+        let out = g.route(&t, 9, 4.0).unwrap();
+        assert_eq!(out.decision.instance, InstanceId(1));
+        assert_eq!(out.decision.matched_tokens, 256);
+    }
+
+    #[test]
+    fn degraded_other_shard_leaves_routing_untouched() {
+        // S=4: degrade a shard the prompt does NOT hash into — the
+        // tree-guided decision must be unchanged.
+        let mut g = GlobalScheduler::with_shards(
+            PolicyKind::PromptTree,
+            OperatorCostModel::paper_13b(),
+            16,
+            0.0,
+            4,
+        );
+        for i in 0..4 {
+            g.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+        }
+        let t = toks(256, 3);
+        let home = g.trees.map().shard_of_tokens(&t).unwrap();
+        g.record_cached(InstanceId(2), &t, 1.0);
+        g.set_shard_degraded((home + 1) % 4, true);
+        let out = g.route(&t, 5, 2.0).unwrap();
+        assert_eq!(out.decision.instance, InstanceId(2));
+        assert_eq!(out.decision.matched_tokens, 256);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::engine::{
 };
 use crate::engine::core::ActiveDecode;
 use crate::mempool::{BlockGeometry, InstanceId, MemPool, TransferMode};
+use crate::net::fabric::NetError;
 use crate::net::{Endpoint, Fabric};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::prompt_tree::InstanceKind;
@@ -71,6 +72,11 @@ pub fn run_instance(
     let mut active = ActiveDecodeSet::default();
     let mut last_beat = Instant::now();
     let mut rr = 0usize; // round-robin cursor over active decodes
+    // Landed-migration dedupe window (ISSUE 6): mid -> acked tokens.
+    // A duplicated/retried KvMigrate re-acks instead of re-landing.
+    let mut landed: std::collections::VecDeque<(u64, Vec<u32>)> =
+        std::collections::VecDeque::new();
+    const LANDED_WINDOW: usize = 64;
     // Decode→prefill backflow target; the leader re-points it on
     // membership changes (drain/join/failure) via Msg::Rewire.
     let mut backflow_to = cfg.backflow_to;
@@ -87,7 +93,12 @@ pub fn run_instance(
         let msg = if active.is_empty() {
             match endpoint.recv_timeout(cfg.heartbeat_every / 2) {
                 Ok((_, m)) => Some(m),
-                Err(_) => None,
+                Err(NetError::Timeout) => None,
+                // Our own inbox sender is gone: the leader detached us
+                // (decommission/kill). Exit now instead of spinning on
+                // a dead channel until shutdown (ISSUE 6 satellite —
+                // Disconnected is not a timeout).
+                Err(_) => return,
             }
         } else {
             endpoint.try_recv().map(|(_, m)| m)
@@ -143,12 +154,13 @@ pub fn run_instance(
                     }
                 }
             }
-            Some(Msg::MigrateOut { to, tokens }) => {
+            Some(Msg::MigrateOut { mid, to, tokens }) => {
                 handle_migrate_out(
-                    &cfg, &mut engine, &fabric, to, &tokens, now(),
+                    &cfg, &mut engine, &fabric, mid, to, &tokens, now(),
                 );
             }
             Some(Msg::KvMigrate {
+                mid,
                 from,
                 tokens,
                 payload,
@@ -160,23 +172,46 @@ pub fn run_instance(
                 // land, transfer_with_insert), then ack the leader so it
                 // applies the ownership handoff. On failure the ack
                 // carries no tokens so the drain driver is not left
-                // waiting.
+                // waiting. Duplicates (fabric replay or donor retry
+                // after a lost ack) re-ack from the dedupe window
+                // without touching the pool.
                 let t = now();
-                let landed = crate::elastic::executor::land_prefix(
-                    &mut engine.pool,
-                    &tokens,
-                    &payload,
-                    n_blocks,
-                    t,
-                );
-                let ack_tokens = match landed {
-                    Ok(()) => tokens,
-                    Err(e) => {
-                        log::error!("migrate land: {e:#}");
-                        vec![]
+                let ack_tokens = if let Some((_, acked)) =
+                    landed.iter().find(|(m, _)| *m == mid)
+                {
+                    acked.clone()
+                } else {
+                    let already = crate::elastic::executor::holds_prefix(
+                        &mut engine.pool,
+                        &tokens,
+                        t,
+                    );
+                    let result = if already {
+                        Ok(())
+                    } else {
+                        crate::elastic::executor::land_prefix(
+                            &mut engine.pool,
+                            &tokens,
+                            &payload,
+                            n_blocks,
+                            t,
+                        )
+                    };
+                    let acked = match result {
+                        Ok(()) => tokens,
+                        Err(e) => {
+                            log::error!("migrate land: {e:#}");
+                            vec![]
+                        }
+                    };
+                    if landed.len() >= LANDED_WINDOW {
+                        landed.pop_front();
                     }
+                    landed.push_back((mid, acked.clone()));
+                    acked
                 };
                 let _ = fabric.send(cfg.id, cfg.leader, Msg::MigrateLanded {
+                    mid,
                     from,
                     to: cfg.id,
                     tokens: ack_tokens,
@@ -289,6 +324,7 @@ fn handle_migrate_out(
     cfg: &InstanceConfig,
     engine: &mut Engine,
     fabric: &Fabric<Msg>,
+    mid: u64,
     to: InstanceId,
     tokens: &[u32],
     t: f64,
@@ -302,6 +338,7 @@ fn handle_migrate_out(
                 .network_calls(engine.pool.geometry(), e.tokens)
                 .max(1);
             let msg = Msg::KvMigrate {
+                mid,
                 from: cfg.id,
                 tokens: tokens[..e.tokens].to_vec(),
                 payload: e.payload,
@@ -318,6 +355,7 @@ fn handle_migrate_out(
     }
     if !sent {
         let _ = fabric.send(cfg.id, cfg.leader, Msg::MigrateLanded {
+            mid,
             from: cfg.id,
             to,
             tokens: vec![],

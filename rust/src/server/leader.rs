@@ -19,6 +19,7 @@ use crate::elastic::planner::{plan_migration, PlannerConfig, Recipient};
 use crate::engine::{DisaggMilestone, Request, SamplingParams};
 use crate::mempool::{BlockGeometry, InstanceId};
 use crate::metrics::{Metrics, RequestRecord};
+use crate::net::fabric::NetError;
 use crate::net::{Fabric, LinkModel};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::cost_model::OperatorCostModel;
@@ -33,6 +34,81 @@ use crate::server::replica::{
 use crate::tokenizer::Tokenizer;
 
 const LEADER: InstanceId = InstanceId(u32::MAX);
+
+/// First retry delay for an unacked migration task (seconds); doubles
+/// per attempt up to [`MIGRATE_RETRY_CAP`].
+const MIGRATE_RETRY_BASE: f64 = 0.1;
+const MIGRATE_RETRY_CAP: f64 = 1.0;
+
+/// First re-send delay for an unanswered `Msg::Promote` (seconds);
+/// doubles per attempt up to [`PROMOTE_RETRY_CAP`].
+const PROMOTE_RETRY_BASE: f64 = 0.05;
+const PROMOTE_RETRY_CAP: f64 = 0.5;
+
+/// Capped exponential backoff: `base * 2^attempt`, clamped to `cap`.
+fn backoff(base: f64, cap: f64, attempt: u32) -> f64 {
+    (base * 2f64.powi(attempt.min(16) as i32)).min(cap)
+}
+
+/// Bounded seen-set for migration ids: replayed [`Msg::MigrateLanded`]
+/// acks (fabric duplication, donor retries) must not re-apply their
+/// ownership handoff.
+#[derive(Default)]
+struct SeenMids {
+    set: HashSet<u64>,
+    order: std::collections::VecDeque<u64>,
+}
+
+impl SeenMids {
+    const CAP: usize = 1024;
+
+    /// True the first time `mid` is offered.
+    fn insert(&mut self, mid: u64) -> bool {
+        if !self.set.insert(mid) {
+            return false;
+        }
+        self.order.push_back(mid);
+        if self.order.len() > Self::CAP {
+            if let Some(old) = self.order.pop_front() {
+                self.set.remove(&old);
+            }
+        }
+        true
+    }
+}
+
+/// One outstanding migration task of an in-flight drain, keyed by mid.
+#[derive(Debug)]
+struct MigrateTask {
+    to: InstanceId,
+    tokens: Vec<u32>,
+    attempt: u32,
+    /// Leader-clock time after which the task is re-sent.
+    next_retry: f64,
+}
+
+/// Per-shard GS primary health (ISSUE 6 failure detector). The shard
+/// primaries live in the leader process, so their liveness signal is a
+/// self-beat the sweep refreshes — crash injection suppresses it and
+/// detection genuinely flows through the heartbeat miss window, exactly
+/// as it would for an out-of-process primary.
+struct ShardHealth {
+    last_beat: f64,
+    /// Crash injected: beats stop until the promoted snapshot lands.
+    crashed: bool,
+    /// Promotion in flight: (target, attempt, next re-send time).
+    promotion: Option<(InstanceId, u32, f64)>,
+}
+
+/// Leader-side failure-detector state: shard self-beats plus the GS
+/// follower heartbeat ledger. `all_followers` is the configured roster
+/// (fixed at start) — a follower the replication layer dropped stays
+/// listed here so its next heartbeat can rejoin it.
+struct GsHealth {
+    all_followers: Vec<InstanceId>,
+    follower_beats: HashMap<InstanceId, f64>,
+    shards: Vec<ShardHealth>,
+}
 
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
@@ -86,6 +162,10 @@ struct DrainProgress {
     landed_blocks: usize,
     /// `DrainDone` barrier received.
     done: bool,
+    /// Outstanding tasks by mid — the drain driver's retry queue; an
+    /// acked mid is removed, an unacked one is re-sent with capped
+    /// exponential backoff.
+    outstanding: HashMap<u64, MigrateTask>,
 }
 
 /// What a completed [`ServeCluster::drain`] moved. Migrated figures
@@ -124,6 +204,13 @@ pub struct ServeCluster {
     /// GS replication: one sequenced delta transport per prefix-range
     /// shard + the follower roster. Lock order: `gs` before this.
     replication: Mutex<GsReplication>,
+    /// Heartbeat failure detector (ISSUE 6). Lock order: after `gs`,
+    /// never held across a `replication` acquisition.
+    gs_health: Mutex<GsHealth>,
+    /// Migration-id dedupe window (replayed MigrateLanded acks).
+    landed_mids: Mutex<SeenMids>,
+    /// Next migration id for the 3-step handshake.
+    next_mid: AtomicU64,
     /// Promotion handshake for [`Self::fail_gs_primary`]: shards whose
     /// promoted snapshot has not landed yet.
     promote_pending: Mutex<HashSet<usize>>,
@@ -280,9 +367,12 @@ impl ServeCluster {
                 let ep = fabric.attach(fid);
                 let bt = geom.block_tokens;
                 let ttl = cfgc.scheduler.tree_ttl_s;
+                let beat = Duration::from_secs_f64(
+                    cfgc.cluster.heartbeat_ms / 1e3,
+                );
                 handles.push(std::thread::spawn(move || {
-                    run_gs_follower(fid, LEADER, bt, ttl, gs_shards, epoch,
-                                    fab, ep);
+                    run_gs_follower(fid, LEADER, bt, ttl, gs_shards, beat,
+                                    epoch, fab, ep);
                 }));
             }
         }
@@ -291,6 +381,17 @@ impl ServeCluster {
         for &(iid, _) in &specs {
             lifecycle.activate(iid).expect("seed roster joins once");
         }
+        let gs_health = GsHealth {
+            all_followers: followers.clone(),
+            follower_beats: followers.iter().map(|f| (*f, 0.0)).collect(),
+            shards: (0..gs_shards.max(1))
+                .map(|_| ShardHealth {
+                    last_beat: 0.0,
+                    crashed: false,
+                    promotion: None,
+                })
+                .collect(),
+        };
         let cluster = Arc::new(ServeCluster {
             fabric,
             gs: Mutex::new(gs),
@@ -302,6 +403,9 @@ impl ServeCluster {
             drains: Mutex::new(HashMap::new()),
             drain_cv: Condvar::new(),
             replication: Mutex::new(replication),
+            gs_health: Mutex::new(gs_health),
+            landed_mids: Mutex::new(SeenMids::default()),
+            next_mid: AtomicU64::new(1),
             promote_pending: Mutex::new(HashSet::new()),
             promote_cv: Condvar::new(),
             handles: Mutex::new(handles),
@@ -388,17 +492,27 @@ impl ServeCluster {
                 if !dead.is_empty() {
                     self.on_failure(&dead);
                 }
+                // GS heartbeat failure detector: shard suspicion →
+                // promotion (with retry/backoff), follower liveness.
+                self.gs_failure_sweep(now);
                 // Global-tree TTL housekeeping: heap-driven, so this is
                 // an O(1) peek when nothing is stale (routing also
                 // expires opportunistically; this covers idle periods).
                 self.gs.lock().unwrap().expire(now);
             }
-            let Ok((_, msg)) = ep.recv_timeout(Duration::from_millis(20))
-            else {
-                if self.shutting_down() {
-                    return;
+            let msg = match ep.recv_timeout(Duration::from_millis(20)) {
+                Ok((_, m)) => m,
+                Err(NetError::Timeout) => {
+                    if self.shutting_down() {
+                        return;
+                    }
+                    continue;
                 }
-                continue;
+                // The leader's own inbox sender is gone: hard teardown.
+                // Distinguishing this from Timeout matters (ISSUE 6
+                // satellite) — conflating them would spin this loop at
+                // full speed forever.
+                Err(_) => return,
             };
             match msg {
                 Msg::Token { rid, token, done } => {
@@ -464,7 +578,30 @@ impl ServeCluster {
                     self.drain_cv.notify_all();
                 }
                 Msg::Heartbeat { from } => {
-                    self.cm.lock().unwrap().heartbeat(from, self.now());
+                    let now = self.now();
+                    let is_follower = {
+                        let mut health = self.gs_health.lock().unwrap();
+                        if health.all_followers.contains(&from) {
+                            health.follower_beats.insert(from, now);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    if is_follower {
+                        // Rejoin-as-follower (ISSUE 6): a beat from a
+                        // follower the replication layer dropped wires
+                        // it back in; the SnapshotReq bootstrap path
+                        // catches its stale cursor up.
+                        let mut rep = self.replication.lock().unwrap();
+                        if !rep.is_registered(from) {
+                            log::info!("GS follower {from} rejoined");
+                            rep.register_follower(from);
+                            rep.flush(&self.fabric, LEADER);
+                        }
+                    } else {
+                        self.cm.lock().unwrap().heartbeat(from, now);
+                    }
                 }
                 Msg::Cached { instance, seq } => {
                     // Response path for prefill-side caching (retire
@@ -488,7 +625,17 @@ impl ServeCluster {
                         |prefix| DeltaEvent::Expire { instance, prefix },
                     ));
                 }
-                Msg::MigrateLanded { from, to, tokens } => {
+                Msg::MigrateLanded { mid, from, to, tokens } => {
+                    // Idempotent under replay (ISSUE 6): a duplicated or
+                    // retried ack re-arrives with the same mid — the
+                    // first one wins, later copies are dropped whole so
+                    // the Handoff delta is never double-applied and the
+                    // drain ledger never over-counts.
+                    if !self.landed_mids.lock().unwrap().insert(mid) {
+                        log::debug!("dropping replayed MigrateLanded \
+                                     mid={mid}");
+                        continue;
+                    }
                     // Ownership re-points atomically: the receiver gains
                     // the prefix and the donor's claim retires in one
                     // delta — routing never sees it as lost. Empty
@@ -503,6 +650,7 @@ impl ServeCluster {
                     });
                     let mut d = self.drains.lock().unwrap();
                     if let Some(p) = d.get_mut(&from) {
+                        p.outstanding.remove(&mid);
                         p.landed += 1;
                         if blocks > 0 {
                             p.landed_prefixes += 1;
@@ -559,6 +707,22 @@ impl ServeCluster {
                     // entry, so the restored shard carries the FULL
                     // pre-crash ownership state plus everything routed
                     // during the blackout.
+                    //
+                    // Dedupe (ISSUE 6): Promote re-sends mean a shard
+                    // can answer more than once, and fabric duplication
+                    // can replay the same reply. Only a shard still
+                    // awaiting promotion restores — the second copy is a
+                    // no-op.
+                    if !self
+                        .promote_pending
+                        .lock()
+                        .unwrap()
+                        .contains(&shard)
+                    {
+                        log::debug!("dropping duplicate promotion \
+                                     snapshot for shard {shard}");
+                        continue;
+                    }
                     {
                         let mut gs = self.gs.lock().unwrap();
                         let rep = self.replication.lock().unwrap();
@@ -590,6 +754,17 @@ impl ServeCluster {
                             }
                         }
                         gs.trees.set_shard_tree(shard, fresh);
+                        // Re-warm: the router may resume tree-guided
+                        // placement for this shard's prefix range.
+                        gs.set_shard_degraded(shard, false);
+                    }
+                    {
+                        let mut health = self.gs_health.lock().unwrap();
+                        if let Some(sh) = health.shards.get_mut(shard) {
+                            sh.crashed = false;
+                            sh.promotion = None;
+                            sh.last_beat = self.now();
+                        }
                     }
                     let mut pending =
                         self.promote_pending.lock().unwrap();
@@ -986,16 +1161,278 @@ impl ServeCluster {
                     anyhow::anyhow!("promote {target} (shard {shard}): {e}")
                 })?;
         }
+        // Waiting with per-shard Promote re-send (ISSUE 6): the request
+        // or its Snapshot reply can be dropped by a lossy fabric, so
+        // the wait slices and re-sends unanswered promotions with
+        // capped exponential backoff. Re-picking most_caught_up each
+        // round also heals the case where the original target died.
+        let mut retry: HashMap<usize, (u32, f64)> = targets
+            .iter()
+            .map(|&(s, _)| {
+                (s, (0, self.now() + backoff(
+                    PROMOTE_RETRY_BASE, PROMOTE_RETRY_CAP, 0,
+                )))
+            })
+            .collect();
         let deadline = Instant::now() + timeout;
         let mut pending = self.promote_pending.lock().unwrap();
         while !pending.is_empty() {
             let left = deadline.saturating_duration_since(Instant::now());
             anyhow::ensure!(!left.is_zero(), "GS promotion timed out");
-            let (guard, _) =
-                self.promote_cv.wait_timeout(pending, left).unwrap();
+            let now = self.now();
+            for &shard in pending.iter() {
+                let Some((attempt, next_retry)) = retry.get_mut(&shard)
+                else {
+                    continue;
+                };
+                if now < *next_retry {
+                    continue;
+                }
+                let target = self
+                    .replication
+                    .lock()
+                    .unwrap()
+                    .most_caught_up(shard);
+                if let Some(t) = target {
+                    log::debug!(
+                        "re-sending Promote for shard {shard} to {t} \
+                         (attempt {})",
+                        *attempt + 1
+                    );
+                    let _ = self.fabric.send(LEADER, t, Msg::Promote {
+                        shard,
+                        reply_to: LEADER,
+                    });
+                }
+                *attempt += 1;
+                *next_retry = now + backoff(
+                    PROMOTE_RETRY_BASE, PROMOTE_RETRY_CAP, *attempt,
+                );
+            }
+            let (guard, _) = self
+                .promote_cv
+                .wait_timeout(pending, left.min(Duration::from_millis(50)))
+                .unwrap();
             pending = guard;
         }
         Ok(targets)
+    }
+
+    /// Inject a GS shard-primary crash WITHOUT the synchronous failover
+    /// of [`Self::fail_gs_shard`] — recovery flows entirely through the
+    /// heartbeat failure detector: the shard's liveness beats stop, the
+    /// sweep suspects it after `heartbeat_misses` missed windows, marks
+    /// its prefix range degraded (router falls back to load-only
+    /// placement, keeps serving), and drives the promotion handshake
+    /// with re-send backoff until a follower's snapshot lands and the
+    /// shard re-warms. The shard's tree is immediately reduced to bare
+    /// membership — exactly what the crash loses.
+    pub fn inject_gs_shard_crash(&self, shard: usize) -> Result<()> {
+        {
+            let rep = self.replication.lock().unwrap();
+            anyhow::ensure!(
+                shard < rep.shard_count(),
+                "shard {shard} out of range (gs_shards = {})",
+                rep.shard_count()
+            );
+            anyhow::ensure!(
+                !rep.followers.is_empty(),
+                "no GS replicas configured (scheduler.gs_replicas)"
+            );
+        }
+        let roster = self.instances.read().unwrap().clone();
+        let members: Vec<(InstanceId, InstanceKind, bool)> = {
+            use crate::elastic::InstanceState;
+            let lc = self.lifecycle.lock().unwrap();
+            roster
+                .iter()
+                .filter_map(|&(iid, kind)| match lc.state(iid) {
+                    Some(InstanceState::Active)
+                    | Some(InstanceState::Joining) => {
+                        Some((iid, kind, false))
+                    }
+                    Some(InstanceState::Draining) => Some((iid, kind, true)),
+                    _ => None,
+                })
+                .collect()
+        };
+        {
+            let mut gs = self.gs.lock().unwrap();
+            let mut fresh = GlobalPromptTrees::new(
+                self.geom.block_tokens,
+                self.opts.config.scheduler.tree_ttl_s,
+            );
+            for &(iid, kind, draining) in &members {
+                fresh.add_instance(iid, kind);
+                if draining {
+                    fresh.set_draining(iid, true);
+                }
+            }
+            gs.trees.set_shard_tree(shard, fresh);
+        }
+        let mut health = self.gs_health.lock().unwrap();
+        let sh = &mut health.shards[shard];
+        sh.crashed = true;
+        sh.promotion = None;
+        log::warn!(
+            "GS shard {shard} crashed (injected); awaiting heartbeat \
+             detection"
+        );
+        Ok(())
+    }
+
+    /// Is this shard's prefix range currently degraded (serving via
+    /// load-only fallback while its promotion completes)?
+    pub fn gs_shard_degraded(&self, shard: usize) -> bool {
+        self.gs.lock().unwrap().is_shard_degraded(shard)
+    }
+
+    /// The configured GS follower roster (for fault-plan targeting).
+    pub fn gs_follower_ids(&self) -> Vec<InstanceId> {
+        self.gs_health.lock().unwrap().all_followers.clone()
+    }
+
+    /// Install a fault plan on the cluster fabric (fault injection for
+    /// tests/benches). Replaces any existing plan.
+    pub fn install_fault_plan(&self, plan: crate::net::FaultPlan) {
+        self.fabric.set_fault_plan(plan);
+    }
+
+    /// Remove the fabric fault plan, flushing any held-back messages.
+    pub fn clear_fault_plan(&self) {
+        self.fabric.clear_fault_plan();
+    }
+
+    /// Flush reorder-holdback buffers (quiesce helper for benches).
+    pub fn release_held(&self) {
+        self.fabric.release_held();
+    }
+
+    /// Mutate the installed fault plan in place (partitions:
+    /// `isolate`/`heal`). No-op when no plan is installed.
+    pub fn with_faults<R>(
+        &self,
+        f: impl FnOnce(&mut crate::net::FaultPlan) -> R,
+    ) -> Option<R> {
+        self.fabric.with_faults(f)
+    }
+
+    /// The heartbeat failure detector (collector sweep, ~20ms cadence).
+    ///
+    /// Followers: one whose beats stopped for a full miss window is
+    /// deregistered from replication (its retained-log pressure must
+    /// not wedge truncation forever); its next beat rejoins it via the
+    /// Heartbeat arm.
+    ///
+    /// Shard primaries: they live in-process, so liveness is a
+    /// self-beat this sweep refreshes — unless a crash was injected,
+    /// in which case beats stop and detection takes the same
+    /// `heartbeat_misses x heartbeat_ms` window a remote primary
+    /// would. On suspicion the shard's prefix range is marked degraded
+    /// (router serves via load-only fallback) and the promotion
+    /// handshake starts, re-sending with capped backoff until the
+    /// Snapshot arm lands the promoted replica and clears the state.
+    fn gs_failure_sweep(&self, now: f64) {
+        let cfgc = &self.opts.config.cluster;
+        let window =
+            (cfgc.heartbeat_ms / 1e3) * cfgc.heartbeat_misses as f64;
+        // Phase 1: follower liveness. Health lock is dropped before the
+        // replication lock is taken (lock order: never nested).
+        let lapsed: Vec<InstanceId> = {
+            let health = self.gs_health.lock().unwrap();
+            health
+                .all_followers
+                .iter()
+                .filter(|f| {
+                    let last = health
+                        .follower_beats
+                        .get(f)
+                        .copied()
+                        .unwrap_or(0.0);
+                    last > 0.0 && now - last > window
+                })
+                .copied()
+                .collect()
+        };
+        if !lapsed.is_empty() {
+            let mut rep = self.replication.lock().unwrap();
+            for f in lapsed {
+                if rep.is_registered(f) {
+                    log::warn!(
+                        "GS follower {f} missed {} heartbeats; \
+                         deregistering",
+                        cfgc.heartbeat_misses
+                    );
+                    rep.deregister_follower(f);
+                }
+            }
+        }
+        // Phase 2: shard-primary suspicion + promotion driving.
+        let mut actions: Vec<(usize, u32, bool)> = vec![];
+        {
+            let mut health = self.gs_health.lock().unwrap();
+            for (s, sh) in health.shards.iter_mut().enumerate() {
+                if !sh.crashed {
+                    sh.last_beat = now; // in-process self-beat
+                    continue;
+                }
+                match sh.promotion {
+                    None => {
+                        if now - sh.last_beat > window {
+                            actions.push((s, 0, true));
+                        }
+                    }
+                    Some((_, attempt, next_retry)) => {
+                        if now >= next_retry {
+                            actions.push((s, attempt, false));
+                        }
+                    }
+                }
+            }
+        }
+        for (shard, attempt, first) in actions {
+            if first {
+                log::warn!(
+                    "GS shard {shard} suspected (no beat for \
+                     {window:.3}s); degrading its prefix range and \
+                     promoting a follower"
+                );
+                self.gs
+                    .lock()
+                    .unwrap()
+                    .set_shard_degraded(shard, true);
+                self.promote_pending.lock().unwrap().insert(shard);
+            }
+            let target =
+                self.replication.lock().unwrap().most_caught_up(shard);
+            if let Some(t) = target {
+                let _ = self.fabric.send(LEADER, t, Msg::Promote {
+                    shard,
+                    reply_to: LEADER,
+                });
+                let mut health = self.gs_health.lock().unwrap();
+                if let Some(sh) = health.shards.get_mut(shard) {
+                    if sh.crashed {
+                        sh.promotion = Some((t, attempt + 1, now
+                            + backoff(PROMOTE_RETRY_BASE,
+                                      PROMOTE_RETRY_CAP, attempt)));
+                    }
+                }
+            } else {
+                // No promotable replica yet (all deregistered?) —
+                // back off and retry; degraded routing keeps serving.
+                let mut health = self.gs_health.lock().unwrap();
+                if let Some(sh) = health.shards.get_mut(shard) {
+                    if sh.crashed {
+                        sh.promotion =
+                            Some((InstanceId(u32::MAX), attempt + 1,
+                                  now + backoff(PROMOTE_RETRY_BASE,
+                                                PROMOTE_RETRY_CAP,
+                                                attempt)));
+                    }
+                }
+            }
+        }
     }
 
     /// Recompute the decode→prefill backflow pairing (round-robin over
@@ -1188,16 +1625,31 @@ impl ServeCluster {
             )
         };
         let expected = plan.tasks.len();
+        // Each task gets a migration id that rides the whole 3-step
+        // handshake; the outstanding map is the retry queue — an unacked
+        // mid is re-sent (same mid, so receivers dedupe) with capped
+        // exponential backoff while the wait loop below runs.
+        let mut outstanding = HashMap::new();
+        let mut sends = vec![];
+        for task in &plan.tasks {
+            let mid = self.next_mid.fetch_add(1, Ordering::SeqCst);
+            outstanding.insert(mid, MigrateTask {
+                to: task.to,
+                tokens: task.tokens.clone(),
+                attempt: 0,
+                next_retry: now
+                    + backoff(MIGRATE_RETRY_BASE, MIGRATE_RETRY_CAP, 0),
+            });
+            sends.push((mid, task.to, task.tokens.clone()));
+        }
         self.drains.lock().unwrap().insert(id, DrainProgress {
             expected,
+            outstanding,
             ..Default::default()
         });
-        for task in &plan.tasks {
+        for (mid, to, tokens) in sends {
             self.fabric
-                .send(LEADER, id, Msg::MigrateOut {
-                    to: task.to,
-                    tokens: task.tokens.clone(),
-                })
+                .send(LEADER, id, Msg::MigrateOut { mid, to, tokens })
                 .map_err(|e| anyhow::anyhow!("migrate-out: {e}"))?;
         }
         self.fabric
@@ -1252,8 +1704,41 @@ impl ServeCluster {
                          restored to Active"
                     );
                 }
-                let (guard, _) =
-                    self.drain_cv.wait_timeout(d, left).unwrap();
+                // Self-healing (ISSUE 6): re-send unacked migration
+                // tasks past their backoff deadline. A lossy fabric can
+                // drop any leg of the handshake; re-sending the same
+                // mid is safe end to end (donor re-exports, receiver
+                // re-acks from its dedupe window, leader drops the
+                // replayed ack above).
+                let rnow = self.now();
+                if let Some(p) = d.get_mut(&id) {
+                    for (mid, task) in p.outstanding.iter_mut() {
+                        if rnow < task.next_retry {
+                            continue;
+                        }
+                        log::debug!(
+                            "re-sending MigrateOut mid={mid} \
+                             (attempt {})",
+                            task.attempt + 1
+                        );
+                        let _ = self.fabric.send(LEADER, id,
+                            Msg::MigrateOut {
+                                mid: *mid,
+                                to: task.to,
+                                tokens: task.tokens.clone(),
+                            });
+                        task.attempt += 1;
+                        task.next_retry = rnow + backoff(
+                            MIGRATE_RETRY_BASE,
+                            MIGRATE_RETRY_CAP,
+                            task.attempt,
+                        );
+                    }
+                }
+                let (guard, _) = self
+                    .drain_cv
+                    .wait_timeout(d, left.min(Duration::from_millis(50)))
+                    .unwrap();
                 d = guard;
             }
         };

@@ -10,6 +10,10 @@ use crate::replica::snapshot::TreeSnapshot;
 /// One cluster message. Bulk KV messages report their wire cost (bytes +
 /// per-block network calls) so the fabric models NCCL behaviour; control
 /// messages pay only the control latency.
+///
+/// `Clone` is required by the fault-injecting fabric (duplicated
+/// deliveries clone the message).
+#[derive(Clone)]
 pub enum Msg {
     /// Leader → prefill-capable instance: run this request. For
     /// disaggregated requests `decode_to` names the decode instance.
@@ -76,15 +80,20 @@ pub enum Msg {
     },
     /// Leader → draining donor: ship the cached prefix `tokens` to `to`
     /// (one migration-plan task; the donor pins, exports, and sends a
-    /// [`Msg::KvMigrate`]).
+    /// [`Msg::KvMigrate`]). `mid` is the leader-assigned migration id
+    /// that rides the whole 3-step handshake — retries reuse it, every
+    /// receiver dedupes on it.
     MigrateOut {
+        mid: u64,
         to: InstanceId,
         tokens: Vec<u32>,
     },
     /// Donor → receiver: migrated prefix KV (`transfer_with_insert`
     /// over the fabric; receiver allocates on demand, inserts, and acks
-    /// the leader with [`Msg::MigrateLanded`]).
+    /// the leader with [`Msg::MigrateLanded`]). A duplicate `mid` must
+    /// not re-land: the receiver re-acks from its dedupe window instead.
     KvMigrate {
+        mid: u64,
         from: InstanceId,
         tokens: Vec<u32>,
         payload: Vec<f32>,
@@ -94,8 +103,9 @@ pub enum Msg {
     /// Receiver → leader: the prefix landed and is indexed — apply the
     /// ownership handoff. (Also sent by the donor itself with empty
     /// `tokens` when it had nothing to ship, so drain progress never
-    /// stalls.)
+    /// stalls.) The leader dedupes on `mid`, so replayed acks are safe.
     MigrateLanded {
+        mid: u64,
         from: InstanceId,
         to: InstanceId,
         tokens: Vec<u32>,
@@ -217,20 +227,23 @@ impl std::fmt::Debug for Msg {
                 .field("instance", instance)
                 .field("seq", &seq.len())
                 .finish(),
-            Msg::MigrateOut { to, tokens } => f
+            Msg::MigrateOut { mid, to, tokens } => f
                 .debug_struct("MigrateOut")
+                .field("mid", mid)
                 .field("to", to)
                 .field("tokens", &tokens.len())
                 .finish(),
             Msg::KvMigrate {
-                from, n_blocks, ..
+                mid, from, n_blocks, ..
             } => f
                 .debug_struct("KvMigrate")
+                .field("mid", mid)
                 .field("from", from)
                 .field("n_blocks", n_blocks)
                 .finish(),
-            Msg::MigrateLanded { from, to, tokens } => f
+            Msg::MigrateLanded { mid, from, to, tokens } => f
                 .debug_struct("MigrateLanded")
+                .field("mid", mid)
                 .field("from", from)
                 .field("to", to)
                 .field("tokens", &tokens.len())
@@ -301,6 +314,7 @@ mod tests {
         };
         assert_eq!(kv.wire_cost(), Some((4000, 2, false, false)));
         let mig = Msg::KvMigrate {
+            mid: 0,
             from: InstanceId(1),
             tokens: vec![],
             payload: vec![0.0; 500],
@@ -310,6 +324,7 @@ mod tests {
         assert_eq!(mig.wire_cost(), Some((2000, 4, false, false)));
         assert!(Msg::Drain.wire_cost().is_none());
         assert!(Msg::MigrateOut {
+            mid: 0,
             to: InstanceId(0),
             tokens: vec![1]
         }

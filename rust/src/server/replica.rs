@@ -32,6 +32,7 @@
 use std::time::{Duration, Instant};
 
 use crate::mempool::InstanceId;
+use crate::net::fabric::NetError;
 use crate::net::{Endpoint, Fabric};
 use crate::replica::log::{DeltaCursor, DeltaTransport, Ingest};
 use crate::replica::snapshot::TreeSnapshot;
@@ -150,6 +151,39 @@ impl GsReplication {
         for t in &mut self.shards {
             t.truncate_below(t.min_acked());
         }
+    }
+
+    /// Is `f` currently a registered replication peer?
+    pub fn is_registered(&self, f: InstanceId) -> bool {
+        self.followers.contains(&f)
+    }
+
+    /// (Re-)register a follower on every shard from sequence 0 — the
+    /// rejoin-as-follower path (ISSUE 6): a follower that was dropped
+    /// (partition, missed heartbeats) and resumes beating is wired back
+    /// in; its first deltas arrive wildly out of order, the cursor
+    /// buffers past the window, and the normal `SnapshotReq` bootstrap
+    /// catches it up.
+    pub fn register_follower(&mut self, f: InstanceId) {
+        if self.is_registered(f) {
+            return;
+        }
+        for t in &mut self.shards {
+            // Restart from the retained floor: everything earlier is
+            // truncated, and the snapshot path covers the gap.
+            let from = t.first_retained();
+            t.register(f.0 as u64, from);
+        }
+        self.followers.push(f);
+    }
+
+    /// Drop a follower from every shard's peer set (heartbeat-miss
+    /// suspicion) so it cannot stall log truncation while dark.
+    pub fn deregister_follower(&mut self, f: InstanceId) {
+        for t in &mut self.shards {
+            t.deregister(f.0 as u64);
+        }
+        self.followers.retain(|x| *x != f);
     }
 
     /// The follower holding `shard`'s longest applied prefix (that
@@ -296,7 +330,10 @@ impl FollowerShard {
 /// One GS follower thread: a full replica of every shard's prompt
 /// tree slice, fed by the per-shard sequenced delta streams. Runs
 /// until `Shutdown`. Acks are coalesced per shard per ingest pump
-/// (see module docs).
+/// (see module docs). The follower heartbeats the leader every
+/// `heartbeat_every` so the leader's failure detector tracks it; a
+/// follower the leader dropped keeps beating, which is exactly the
+/// rejoin signal (`GsReplication::register_follower`).
 #[allow(clippy::too_many_arguments)]
 pub fn run_gs_follower(
     id: InstanceId,
@@ -304,6 +341,7 @@ pub fn run_gs_follower(
     block_tokens: usize,
     ttl: f64,
     shards: usize,
+    heartbeat_every: Duration,
     epoch: Instant,
     fabric: Fabric<Msg>,
     endpoint: Endpoint<Msg>,
@@ -318,14 +356,29 @@ pub fn run_gs_follower(
             next,
         });
     };
+    // First beat goes out immediately so the detector sees us at birth.
+    let mut last_beat = Instant::now()
+        .checked_sub(heartbeat_every)
+        .unwrap_or_else(Instant::now);
     loop {
+        if last_beat.elapsed() >= heartbeat_every {
+            let _ = fabric.send(id, leader, Msg::Heartbeat { from: id });
+            last_beat = Instant::now();
+        }
         // Pump: block for the first message, then drain the burst
         // without blocking, then flush ONE coalesced ack per dirty
         // shard. A 50 ms timeout doubles as the idle ack tick.
-        let mut next_msg = endpoint
-            .recv_timeout(Duration::from_millis(50))
-            .ok()
-            .map(|(_, m)| m);
+        let mut next_msg = match endpoint
+            .recv_timeout(Duration::from_millis(50).min(heartbeat_every / 2))
+        {
+            Ok((_, m)) => Some(m),
+            Err(NetError::Timeout) => None,
+            // Our inbox sender is gone: the leader detached this
+            // follower (crash injection / shutdown teardown). Exit now
+            // — a timeout-conflating loop would spin here forever
+            // (ISSUE 6 satellite).
+            Err(_) => return,
+        };
         while let Some(msg) = next_msg.take() {
             match msg {
                 Msg::Shutdown => return,
@@ -502,6 +555,32 @@ mod tests {
         assert_eq!(f.expected(), 40, "follower missed deltas");
         assert!(t.resends() > 0, "loss must have triggered re-requests");
         assert_eq!(f.tree.cached_blocks(InstanceId(0)), 39 * 2);
+    }
+
+    #[test]
+    fn deregister_then_rejoin_reregisters_at_retained_floor() {
+        let mut rep = GsReplication::new(vec![follower_id(0)], 2, BT);
+        for k in 1..10u32 {
+            rep.append(rec(k));
+        }
+        let f = follower_id(0);
+        rep.deregister_follower(f);
+        assert!(!rep.is_registered(f));
+        assert_eq!(rep.most_caught_up(0), None);
+        // While the follower is dark the log can truncate freely.
+        for t in &mut rep.shards {
+            t.truncate_below(t.min_acked());
+        }
+        rep.register_follower(f);
+        assert!(rep.is_registered(f));
+        assert_eq!(rep.most_caught_up(0), Some(f));
+        // Idempotent re-register keeps a single entry.
+        rep.register_follower(f);
+        assert_eq!(rep.followers.len(), 1);
+        // The rejoin cursor starts at the retained floor, never below.
+        for t in &rep.shards {
+            assert!(t.acked(f.0 as u64).unwrap_or(0) >= t.first_retained());
+        }
     }
 
     #[test]

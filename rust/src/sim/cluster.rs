@@ -46,6 +46,13 @@ pub struct SimConfig {
     /// scripted failover can crash ONE shard's slice while the others
     /// keep serving. 1 = the unsharded tree, bit-identical to before.
     pub gs_shards: usize,
+    /// Per-delivery drop probability on the GS replication stream
+    /// (ISSUE 6; 0 = lossless/synchronous, bit-identical to before).
+    /// Lossy mirroring exercises the transport's gap-repair and
+    /// retransmit paths mid-trace; a [`FleetOp::GsFailover`] first
+    /// pumps the lossy transports to convergence (the real protocol's
+    /// retry loop) so promotion still restores the full state.
+    pub replication_drop: f64,
     /// Scripted elasticity events (drain / join) on the virtual clock.
     pub fleet: Vec<FleetEvent>,
 }
@@ -101,6 +108,7 @@ impl Default for SimConfig {
             tree_ttl: 300.0,
             gs_replicas: 0,
             gs_shards: 1,
+            replication_drop: 0.0,
             fleet: vec![],
         }
     }
@@ -290,6 +298,8 @@ pub struct Simulation {
     /// consumed shard (post-failover) stops mirroring, the rest
     /// continue.
     replicas: Option<ShardedReplicaGroup>,
+    /// Seeded drop schedule for `replication_drop` (deterministic).
+    rep_rng: crate::util::rng::Rng,
     q: EventQueue<Ev>,
     ctx: Vec<Vec<u32>>, // per-session running context
     report: SimReport,
@@ -390,6 +400,7 @@ impl Simulation {
             instances,
             gs,
             replicas,
+            rep_rng: crate::util::rng::Rng::new(0xFA_0175),
             q,
             ctx,
             report: SimReport::default(),
@@ -399,12 +410,22 @@ impl Simulation {
 
     /// The single write path of the (replicated) global prompt tree:
     /// apply to the serving tree and mirror through the follower
-    /// replicas' sequenced log (synchronous in the sim — the virtual
-    /// clock has no in-flight window to model).
+    /// replicas' sequenced log. Synchronous when lossless (the virtual
+    /// clock has no in-flight window to model); with
+    /// `replication_drop > 0` each pump's deliveries can drop on the
+    /// floor — followers fall behind and recover via gap re-requests
+    /// and retransmits, exactly the live transport's discipline.
     fn gs_delta(&mut self, ev: DeltaEvent) {
         self.gs.trees.apply_delta(&ev);
+        let p = self.cfg.replication_drop;
         if let Some(grp) = &mut self.replicas {
-            grp.apply_sync(ev);
+            if p > 0.0 {
+                let rng = &mut self.rep_rng;
+                grp.apply(ev);
+                grp.pump_lossy(&mut |_, _, _| rng.chance(p));
+            } else {
+                grp.apply_sync(ev);
+            }
         }
     }
 
@@ -606,10 +627,28 @@ impl Simulation {
                 // zero locality loss). Promoted shards are consumed: a
                 // second failover of the same shard needs fresh
                 // replicas; untouched shards keep mirroring.
+                let p = self.cfg.replication_drop;
+                let rng = &mut self.rep_rng;
                 let grp = self.replicas.as_mut().expect(
                     "GsFailover needs gs_replicas > 0 and fires at \
                      most once per shard per trace",
                 );
+                // Lossy mirroring: drive the transports to convergence
+                // first (the live protocol's retransmit/ack loop runs
+                // until quiesce before a promotion reply is captured) —
+                // still dropping per delivery, so convergence is won by
+                // gap repair, not by turning the faults off.
+                if p > 0.0 {
+                    let mut guard = 0u32;
+                    while !grp.all_caught_up() {
+                        grp.pump_lossy(&mut |_, _, _| rng.chance(p));
+                        guard += 1;
+                        assert!(
+                            guard < 1_000_000,
+                            "replication never converged pre-promotion"
+                        );
+                    }
+                }
                 let targets: Vec<usize> = match shard {
                     Some(s) => vec![s],
                     None => (0..grp.shards()).collect(),
@@ -1397,6 +1436,58 @@ mod tests {
             key(&sharded.metrics),
             key(&crashed.metrics),
             "per-shard failover diverged from the uninterrupted run"
+        );
+    }
+
+    #[test]
+    fn lossy_replication_converges_to_lossless_routing() {
+        // ISSUE 6: mirror every GS delta through a 20%-drop replication
+        // stream, then crash a shard's primary mid-trace. The transport
+        // recovers losses via gap repair/retransmits and the failover
+        // pumps to convergence before promoting, so the whole trace —
+        // every placement and cached-token count — must be identical
+        // to the lossless-replication run.
+        let mk = |drop: f64| SimConfig {
+            prefill_instances: 3,
+            decode_instances: 2,
+            colocated_instances: 0,
+            gs_shards: 2,
+            gs_replicas: 2,
+            replication_drop: drop,
+            fleet: vec![FleetEvent {
+                at: 5.0,
+                op: FleetOp::GsFailover { shard: Some(0) },
+            }],
+            ..disagg(true)
+        };
+        let (spec, plan) = workload(40, 35);
+        let total = spec.total_requests();
+        let lossless = Simulation::new(mk(0.0), spec.clone(), &plan).run();
+        let lossy = Simulation::new(mk(0.2), spec, &plan).run();
+        assert_eq!(lossless.gs_failovers, 1);
+        assert_eq!(lossy.gs_failovers, 1);
+        assert_eq!(lossless.metrics.records.len(), total);
+        assert_eq!(lossy.metrics.records.len(), total);
+        let key = |m: &Metrics| {
+            let mut v: Vec<_> = m
+                .records
+                .iter()
+                .map(|r| {
+                    (
+                        r.request_id,
+                        r.prefill_instance,
+                        r.decode_instance,
+                        r.cached_tokens,
+                    )
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(
+            key(&lossless.metrics),
+            key(&lossy.metrics),
+            "lossy replication changed the trace"
         );
     }
 
