@@ -12,18 +12,40 @@
 //! ratio duplicates the session set so identical request streams arrive
 //! 1–4×.
 //!
+//! Part 3 (`fig15_thread_sweep`): the multi-core data plane — T
+//! submitter threads route a shared workload through S shard-pinned
+//! worker threads ([`memserve::scheduler::data_plane::ShardWorkerPool`])
+//! measuring routes/sec and per-delta apply cost. T=1 is asserted
+//! decision-identical to the monolithic sequential scheduler (every T
+//! is, in fact — the determinism argument in the data-plane module
+//! docs), and `MEMSERVE_FIG15_GATE=1` turns the T=4-vs-T=1 comparison
+//! into a hard assert for CI.
+//!
 //! Env knobs (used by the CI smoke job):
 //! * `MEMSERVE_FIG15_MODE` — `sweep` (part 1 only), `sim` (part 2
-//!   only), anything else/unset runs both;
+//!   only), `threads` (part 3 only), anything else/unset runs parts
+//!   1 + 2 (part 3 is opt-in so the default output stays byte-stable);
 //! * `MEMSERVE_FIG15_N` — comma-separated instance counts for the
-//!   sweep (default `4,16,64,256`).
+//!   sweep (default `4,16,64,256`);
+//! * `MEMSERVE_FIG15_T` — comma-separated submitter thread counts for
+//!   the thread sweep (default `1,2,4,8`);
+//! * `MEMSERVE_FIG15_S` — shard/worker count for the thread sweep
+//!   (default `2`);
+//! * `MEMSERVE_FIG15_GATE` — `1` asserts routes/sec at T=4 beats the
+//!   T=1 baseline (3 attempts before failing, contended CI runners
+//!   being what they are).
 
+use std::sync::Arc;
+use std::time::Instant;
+
+use memserve::elastic::delta::DeltaEvent;
 use memserve::mempool::InstanceId;
 use memserve::scheduler::cost_model::OperatorCostModel;
-use memserve::scheduler::policy::{decide, Candidate};
+use memserve::scheduler::data_plane::{LoadVec, ShardWorkerPool};
+use memserve::scheduler::policy::{decide, Candidate, Decision};
 use memserve::scheduler::prompt_tree::InstanceKind;
 use memserve::scheduler::prompt_tree_ref::RefGlobalPromptTrees;
-use memserve::scheduler::router::GlobalScheduler;
+use memserve::scheduler::router::{GlobalScheduler, InstanceLoad};
 use memserve::scheduler::PolicyKind;
 use memserve::sim::{SimConfig, Simulation};
 use memserve::util::bench::{black_box, time_adaptive, Table};
@@ -208,6 +230,227 @@ fn policy_sim() {
     );
 }
 
+/// The thread-sweep workload: a fixed fleet, a seeded record set (so
+/// routes hit real prefix matches), and a request stream reusing the
+/// recorded seeds. Everything is deterministic in the seed so every T
+/// routes the identical stream.
+struct ThreadWorkload {
+    n_inst: u32,
+    records: Vec<(InstanceId, Vec<u32>)>,
+    requests: Vec<(u64, Vec<u32>, u64)>,
+    loads: LoadVec,
+}
+
+const TW_BT: usize = 16;
+
+fn thread_workload(requests: usize) -> ThreadWorkload {
+    let n_inst = 8u32;
+    let records: Vec<(InstanceId, Vec<u32>)> = (0..n_inst * 8)
+        .map(|r| (InstanceId(r % n_inst), prompt(512, 100 + r)))
+        .collect();
+    let requests: Vec<(u64, Vec<u32>, u64)> = (0..requests as u64)
+        .map(|j| {
+            // Reuse recorded seeds so most routes walk a cached chain.
+            (j, prompt(512, 100 + (j as u32 * 7) % 64), j % 24)
+        })
+        .collect();
+    let loads: LoadVec = Arc::new(
+        (0..n_inst)
+            .map(|i| {
+                (InstanceId(i), InstanceLoad {
+                    queued_tokens: (i as usize * 97) % 1024,
+                    ..Default::default()
+                })
+            })
+            .collect(),
+    );
+    ThreadWorkload { n_inst, records, requests, loads }
+}
+
+/// The monolithic sequential reference: today's single-owner scheduler
+/// routing the same stream, returning its decisions (the bit-identity
+/// baseline) and its wall-clock routes/sec.
+fn monolithic_run(w: &ThreadWorkload, shards: usize)
+                  -> (Vec<(u64, Decision)>, f64) {
+    let mut gs = GlobalScheduler::with_shards(
+        PolicyKind::PromptTree,
+        OperatorCostModel::paper_13b(),
+        TW_BT,
+        0.0,
+        shards,
+    );
+    for i in 0..w.n_inst {
+        gs.trees.apply_delta(&DeltaEvent::Join {
+            instance: InstanceId(i),
+            kind: InstanceKind::PrefillOnly,
+        });
+    }
+    for (inst, t) in &w.records {
+        gs.trees.apply_delta(&DeltaEvent::Record {
+            instance: *inst,
+            tokens: t.clone(),
+            now: 1.0,
+        });
+    }
+    let start = Instant::now();
+    let decisions: Vec<(u64, Decision)> = w
+        .requests
+        .iter()
+        .map(|(id, p, session)| {
+            for &(inst, load) in w.loads.iter() {
+                gs.set_load(inst, load);
+            }
+            (*id, gs.route(p, *session, 2.0).unwrap().decision)
+        })
+        .collect();
+    let rps = w.requests.len() as f64 / start.elapsed().as_secs_f64();
+    (decisions, rps)
+}
+
+/// One pool run at T submitter threads: returns routes/sec, the
+/// per-delta apply cost (µs), and the sorted (request, decision)
+/// stream for the differential assert.
+fn pool_run(w: &ThreadWorkload, shards: usize, threads: usize)
+            -> (f64, f64, Vec<(u64, Decision)>) {
+    let mut pool = ShardWorkerPool::new(
+        shards,
+        TW_BT,
+        0.0,
+        PolicyKind::PromptTree,
+        OperatorCostModel::paper_13b(),
+    );
+    for i in 0..w.n_inst {
+        pool.apply(&DeltaEvent::Join {
+            instance: InstanceId(i),
+            kind: InstanceKind::PrefillOnly,
+        });
+    }
+    for (inst, t) in &w.records {
+        pool.apply(&DeltaEvent::Record {
+            instance: *inst,
+            tokens: t.clone(),
+            now: 1.0,
+        });
+    }
+    pool.fence();
+    let start = Instant::now();
+    let mut got: Vec<(u64, Decision)> = std::thread::scope(|sc| {
+        let mut joins = vec![];
+        for t in 0..threads {
+            let sub = pool.submitter();
+            let w = &*w;
+            joins.push(sc.spawn(move || {
+                let mut out = vec![];
+                for (id, p, session) in
+                    w.requests.iter().skip(t).step_by(threads)
+                {
+                    let o = sub
+                        .route(*id, p, *session, 2.0, &w.loads)
+                        .unwrap();
+                    out.push((*id, o.decision));
+                }
+                out
+            }));
+        }
+        joins.into_iter().flat_map(|j| j.join().unwrap()).collect()
+    });
+    let rps = w.requests.len() as f64 / start.elapsed().as_secs_f64();
+    got.sort_by_key(|&(id, _)| id);
+
+    // Per-delta apply cost on the live pool: K prefix-keyed records
+    // (the lock-free path — one channel send each), bounded by a fence
+    // so every apply has landed before the clock stops.
+    const K: usize = 4096;
+    let dstart = Instant::now();
+    for k in 0..K as u32 {
+        pool.apply(&DeltaEvent::Record {
+            instance: InstanceId(k % w.n_inst),
+            tokens: prompt(64, 100 + (k % 64)),
+            now: 3.0,
+        });
+    }
+    pool.fence();
+    let delta_us = dstart.elapsed().as_secs_f64() * 1e6 / K as f64;
+    pool.shutdown();
+    (rps, delta_us, got)
+}
+
+/// Part 3: routes/sec by submitter-thread count over S shard workers.
+fn thread_sweep(ts: &[usize], shards: usize, gate: bool) {
+    let w = thread_workload(1200);
+    let mut table = Table::new("fig15_thread_sweep", &[
+        "threads", "shards", "routes_per_sec", "delta_apply_us",
+        "vs_monolithic",
+    ]);
+    let (expect, mono_rps) = monolithic_run(&w, shards);
+    println!(
+        "\n-- multi-core data plane: T submitters x {shards} shard \
+         workers, {} requests --\n\
+         monolithic sequential baseline: {mono_rps:.0} routes/sec",
+        w.requests.len()
+    );
+    let mut measured: Vec<(usize, f64)> = vec![];
+    for &t in ts {
+        let (rps, delta_us, got) = pool_run(&w, shards, t);
+        assert_eq!(
+            got, expect,
+            "T={t} S={shards}: decision stream diverged from the \
+             monolithic reference"
+        );
+        measured.push((t, rps));
+        table.row(vec![
+            t.to_string(),
+            shards.to_string(),
+            format!("{rps:.0}"),
+            format!("{delta_us:.3}"),
+            format!("{:.2}x", rps / mono_rps.max(1e-9)),
+        ]);
+        println!(
+            "  T={t}: {rps:9.0} routes/sec  ({:.2}x monolithic)  \
+             delta apply {delta_us:.3}us",
+            rps / mono_rps.max(1e-9)
+        );
+    }
+    table.finish();
+    println!(
+        "\nExpected shape: routes/sec grows with T until the S workers \
+         saturate (decisions are bit-identical at every T — the speedup \
+         is free of semantic drift)."
+    );
+    if gate {
+        // Contended-runner tolerance: re-measure up to 3 times before
+        // declaring the scaling claim dead.
+        let rate = |t: usize| {
+            measured
+                .iter()
+                .find(|&&(mt, _)| mt == t)
+                .map(|&(_, r)| r)
+        };
+        let (mut r1, mut r4) = (rate(1), rate(4));
+        let mut ok = matches!((r1, r4), (Some(a), Some(b)) if b >= a);
+        for attempt in 0..3 {
+            if ok {
+                break;
+            }
+            println!("  gate attempt {}: re-measuring T=1 vs T=4", attempt + 1);
+            r1 = Some(pool_run(&w, shards, 1).0);
+            r4 = Some(pool_run(&w, shards, 4).0);
+            ok = r4.unwrap() >= r1.unwrap();
+        }
+        assert!(
+            ok,
+            "MEMSERVE_FIG15_GATE: T=4 ({:?} routes/sec) failed to beat \
+             the T=1 baseline ({:?} routes/sec) on S={shards}",
+            r4, r1
+        );
+        println!(
+            "  gate: T=4 ({:.0}/s) >= T=1 ({:.0}/s) -- pass",
+            r4.unwrap(),
+            r1.unwrap()
+        );
+    }
+}
+
 fn main() {
     let mode = std::env::var("MEMSERVE_FIG15_MODE").unwrap_or_default();
     let ns: Vec<usize> = std::env::var("MEMSERVE_FIG15_N")
@@ -219,6 +462,26 @@ fn main() {
         })
         .filter(|v| !v.is_empty())
         .unwrap_or_else(|| vec![4, 16, 64, 256]);
+    if mode == "threads" {
+        let ts: Vec<usize> = std::env::var("MEMSERVE_FIG15_T")
+            .ok()
+            .map(|s| {
+                s.split(',')
+                    .filter_map(|x| x.trim().parse().ok())
+                    .collect::<Vec<usize>>()
+            })
+            .filter(|v| !v.is_empty())
+            .unwrap_or_else(|| vec![1, 2, 4, 8]);
+        let shards: usize = std::env::var("MEMSERVE_FIG15_S")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(2)
+            .max(1);
+        let gate = std::env::var("MEMSERVE_FIG15_GATE").as_deref()
+            == Ok("1");
+        thread_sweep(&ts, shards, gate);
+        return;
+    }
     if mode != "sim" {
         route_sweep(&ns);
     }

@@ -24,14 +24,29 @@
 //! unsharded group (asserted: zero divergent) — including across a
 //! scripted mid-stream failover of one shard's primary.
 //!
+//! Part 4 (`fig17_threads`, ISSUE 7): **multi-threaded** per-shard
+//! apply — T worker threads each own a static subset of the S shard
+//! groups (shard s → thread s % T, preserving per-shard event order)
+//! and drain their shards' pre-partitioned record streams
+//! concurrently, measuring aggregate applies/sec and per-delta cost.
+//! Final per-shard state (log heads + primary route-match probes) is
+//! asserted equal to the sequential [`ShardedReplicaGroup`] applying
+//! the identical stream — T=1 is the sequential code path itself, so
+//! single-thread output is bit-identical by construction *and* by the
+//! assert.
+//!
 //! Env knobs (used by the CI smoke job):
 //! * `MEMSERVE_FIG17_MODE` — `sweep` (part 1), `failover` (part 2),
-//!   `shards` (part 3), anything else/unset runs all;
+//!   `shards` (part 3), `threads` (part 4 only — opt-in so the default
+//!   output stays byte-stable), anything else/unset runs parts 1–3;
 //! * `MEMSERVE_FIG17_R` — comma-separated replica counts (default
 //!   `1,2,4,8`; failover uses each count ≥ 2);
 //! * `MEMSERVE_FIG17_S` — comma-separated shard counts for part 3
+//!   (default `1,2,4,8`; part 4 uses the largest);
+//! * `MEMSERVE_FIG17_T` — comma-separated thread counts for part 4
 //!   (default `1,2,4,8`).
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 use memserve::elastic::delta::DeltaEvent;
@@ -40,6 +55,7 @@ use memserve::replica::{ReplicaGroup, ShardedReplicaGroup};
 use memserve::scheduler::cost_model::OperatorCostModel;
 use memserve::scheduler::policy::{decide, Candidate, Decision, PolicyKind};
 use memserve::scheduler::prompt_tree::InstanceKind;
+use memserve::scheduler::shard::ShardMap;
 use memserve::util::bench::{black_box, time_adaptive, Table};
 
 const BT: usize = 16;
@@ -443,6 +459,154 @@ fn shard_sweep(ss: &[usize]) {
     );
 }
 
+/// Part 4: T apply threads over S per-shard replica groups (module
+/// docs). Each thread owns shards `{s : s % T == t}` outright for the
+/// run, so per-shard event order is the reference's order and no two
+/// threads ever contend on one group — the `Mutex` per group exists
+/// only to satisfy the compiler's aliasing rules across the scope.
+fn thread_apply_sweep(ts: &[usize], shards: usize) {
+    const WRITES: u32 = 2048;
+    let mut table = Table::new("fig17_threads", &[
+        "threads", "shards", "writes", "applies_per_sec", "apply_us",
+        "divergent_probes",
+    ]);
+    println!(
+        "\n-- threaded per-shard apply: T threads x {shards} shard \
+         groups, {WRITES} records (static shard->thread assignment; \
+         final state vs sequential sharded group) --"
+    );
+    let cost = OperatorCostModel::paper_13b();
+    // Pre-partition the record stream by shard — stable partition, so
+    // each shard's sub-stream order equals the sequential reference's.
+    let map = ShardMap::new(shards, BT);
+    let mut per_shard_events: Vec<Vec<DeltaEvent>> =
+        vec![vec![]; shards];
+    for k in 0..WRITES {
+        let t = prompt(1024, 100 + k);
+        let s = map.shard_of_tokens(&t).unwrap_or(0);
+        per_shard_events[s].push(DeltaEvent::Record {
+            instance: InstanceId(k % N_INSTANCES),
+            tokens: t,
+            now: 1.0 + k as f64 * 1e-3,
+        });
+    }
+    // The sequential reference: the ISSUE-5 sharded group applying the
+    // identical stream in original order.
+    let mut reference =
+        ShardedReplicaGroup::new(shards, 2, BT, 0.0, WINDOW);
+    for i in 0..N_INSTANCES {
+        reference.apply_sync(DeltaEvent::Join {
+            instance: InstanceId(i),
+            kind: InstanceKind::PrefillOnly,
+        });
+    }
+    for evs in &per_shard_events {
+        for ev in evs {
+            reference.apply_sync(ev.clone());
+        }
+    }
+    let probes: Vec<Vec<u32>> =
+        (0..32u32).map(|k| prompt(1024, 100 + k * 7)).collect();
+    for &t_count in ts {
+        // Fresh groups per T: membership fans to every shard exactly
+        // as ShardedReplicaGroup does.
+        let groups: Vec<Mutex<ReplicaGroup>> = (0..shards)
+            .map(|_| {
+                let mut g = ReplicaGroup::new(2, BT, 0.0, WINDOW);
+                for i in 0..N_INSTANCES {
+                    g.apply_sync(DeltaEvent::Join {
+                        instance: InstanceId(i),
+                        kind: InstanceKind::PrefillOnly,
+                    });
+                }
+                Mutex::new(g)
+            })
+            .collect();
+        let start = Instant::now();
+        std::thread::scope(|sc| {
+            for t in 0..t_count {
+                let groups = &groups;
+                let per_shard_events = &per_shard_events;
+                sc.spawn(move || {
+                    for s in (t..shards).step_by(t_count.max(1)) {
+                        let mut g = groups[s].lock().unwrap();
+                        for ev in &per_shard_events[s] {
+                            g.apply_sync(ev.clone());
+                        }
+                    }
+                });
+            }
+        });
+        let elapsed = start.elapsed().as_secs_f64();
+        let aps = WRITES as f64 / elapsed.max(1e-12);
+        let apply_us = elapsed * 1e6 / WRITES as f64;
+        // Differential: log heads and primary route-matches must equal
+        // the sequential reference's, shard for shard.
+        let mut divergent = 0usize;
+        for s in 0..shards {
+            let g = groups[s].lock().unwrap();
+            assert_eq!(
+                g.log_head(),
+                reference.log_head(s),
+                "T={t_count}: shard {s} log head drifted"
+            );
+        }
+        let mut buf = vec![];
+        let mut rbuf = vec![];
+        for p in &probes {
+            let s = map.shard_of_tokens(p).unwrap_or(0);
+            let mut g = groups[s].lock().unwrap();
+            let pi = g.primary_index();
+            g.route_match(pi, p, &mut buf);
+            reference.route_match_primary(p, &mut rbuf);
+            if buf != rbuf {
+                divergent += 1;
+            }
+            // The full Eq.-1 decision, too — the externally visible
+            // contract.
+            let d = decide(
+                PolicyKind::PromptTree,
+                &buf.iter()
+                    .map(|&(id, matched)| Candidate {
+                        instance: id,
+                        queued_tokens: 0,
+                        queued_cached_ratio: 0.0,
+                        matched_tokens: matched,
+                        pressure: 0.0,
+                    })
+                    .collect::<Vec<_>>(),
+                p.len(),
+                7,
+                |x, y| cost.exec(x, y),
+            );
+            black_box(d);
+        }
+        assert_eq!(
+            divergent, 0,
+            "T={t_count}: threaded per-shard state diverged from the \
+             sequential sharded group"
+        );
+        table.row(vec![
+            t_count.to_string(),
+            shards.to_string(),
+            WRITES.to_string(),
+            format!("{aps:.0}"),
+            format!("{apply_us:.2}"),
+            divergent.to_string(),
+        ]);
+        println!(
+            "  T={t_count}: {aps:9.0} applies/sec  ({apply_us:.2}us \
+             per delta)  divergent {divergent}"
+        );
+    }
+    table.finish();
+    println!(
+        "\nExpected shape: applies/sec grows with T until min(T, S) \
+         saturates the cores — per-shard logs sequence independently, \
+         so the apply path has no cross-thread contention at all."
+    );
+}
+
 fn main() {
     let mode = std::env::var("MEMSERVE_FIG17_MODE").unwrap_or_default();
     let list = |var: &str, default: &[usize]| -> Vec<usize> {
@@ -458,6 +622,12 @@ fn main() {
     };
     let rs = list("MEMSERVE_FIG17_R", &[1, 2, 4, 8]);
     let ss = list("MEMSERVE_FIG17_S", &[1, 2, 4, 8]);
+    if mode == "threads" {
+        let ts = list("MEMSERVE_FIG17_T", &[1, 2, 4, 8]);
+        let shards = ss.iter().copied().max().unwrap_or(4).max(1);
+        thread_apply_sweep(&ts, shards);
+        return;
+    }
     let all = !matches!(mode.as_str(), "sweep" | "failover" | "shards");
     if all || mode == "sweep" {
         route_sweep(&rs);

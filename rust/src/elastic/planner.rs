@@ -23,6 +23,7 @@
 //!   [`crate::scheduler::cost_model::pressure_discount`]).
 
 use crate::mempool::InstanceId;
+use crate::scheduler::fused_tree::OwnedPrefix;
 use crate::scheduler::shard::ShardedPromptTrees;
 
 /// Planner knobs. Defaults suit a drain (move every hot, deep prefix);
@@ -93,8 +94,34 @@ pub fn plan_migration(
     recipients: &[Recipient],
     cfg: &PlannerConfig,
 ) -> MigrationPlan {
+    plan_migration_from(
+        tree.owned_paths(donor),
+        |id, tokens| tree.match_one(id, tokens),
+        donor,
+        now,
+        recipients,
+        cfg,
+    )
+}
+
+/// Source-agnostic form of [`plan_migration`]: the donor inventory and
+/// the replication probe are supplied by the caller. The sharded-lock
+/// data plane plans across per-shard trees it cannot expose as one
+/// `ShardedPromptTrees` — it concatenates per-unit `owned_paths` and
+/// routes each probe to the unit owning the prefix (a prefix chain
+/// never crosses shards, so both are exact). Determinism is preserved:
+/// the sort key (depth, recency, tokens) is total, so inventory
+/// concatenation order cannot change the plan.
+pub fn plan_migration_from(
+    inventory: Vec<OwnedPrefix>,
+    match_one: impl Fn(InstanceId, &[u32]) -> usize,
+    donor: InstanceId,
+    now: f64,
+    recipients: &[Recipient],
+    cfg: &PlannerConfig,
+) -> MigrationPlan {
     let mut plan = MigrationPlan::default();
-    let mut inventory = tree.owned_paths(donor);
+    let mut inventory = inventory;
     // Deepest (then hottest) first, so a `max_blocks` cap keeps the most
     // valuable entries; owned_paths is token-sorted, making ties stable.
     inventory.sort_by(|a, b| {
@@ -128,7 +155,7 @@ pub fn plan_migration(
         // Already fully cached on some Active peer: survives for free.
         if recipients
             .iter()
-            .any(|r| tree.match_one(r.id, &path.tokens) >= path.tokens.len())
+            .any(|r| match_one(r.id, &path.tokens) >= path.tokens.len())
         {
             plan.replicated_blocks += path.blocks;
             continue;

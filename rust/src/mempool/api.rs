@@ -8,6 +8,7 @@
 //! `import_blocks` + `insert` on the receiver).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 use super::allocator::AllocError;
 use super::block::{BlockAddr, BlockGeometry, InstanceId, Tier};
@@ -15,6 +16,9 @@ use super::index::{BlockGroup, GroupList, IndexMatch, RadixIndex};
 use super::tier::Arena;
 
 /// Pool-level counters (exported into [`crate::metrics::Metrics`]).
+/// Obtained as a point-in-time snapshot from [`MemPool::stats`]: the
+/// match-path counters live in atomics (the match path takes `&self`)
+/// and the deferred-touch counters come from the index's touch queue.
 #[derive(Clone, Debug, Default)]
 pub struct PoolStats {
     pub inserts: u64,
@@ -26,6 +30,15 @@ pub struct PoolStats {
     pub swapped_out: u64,
     pub swapped_in: u64,
     pub alloc_failures: u64,
+    /// Leaf LRU refreshes queued by `&self` matches
+    /// ([`super::index::TouchStats::deferred`]).
+    pub touches_deferred: u64,
+    /// Deferred refreshes applied by a later `&mut` operation.
+    pub touches_drained: u64,
+    /// Touches dropped at queue capacity (those leaves keep an older —
+    /// eviction-safe — access time, so LRU may under-credit recency but
+    /// never over-credits it).
+    pub touches_dropped: u64,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -67,6 +80,10 @@ pub struct MemPool {
     dram: Arena,
     index: RadixIndex,
     stats: PoolStats,
+    /// Match-path counters, atomic because [`Self::match_prefix`] takes
+    /// `&self` (concurrent readers share the pool).
+    matches: AtomicU64,
+    match_hit_token_blocks: AtomicU64,
     /// Token prefixes the LRU evicted since the last
     /// [`Self::take_evicted_prefixes`] — the honest-eviction signal the
     /// instance loop reports upstream as `DeltaEvent::Expire` so the
@@ -90,6 +107,8 @@ impl MemPool {
             dram: Arena::new(dram_blocks, geom.floats_per_block(), materialize),
             index: RadixIndex::new(geom.block_tokens, index_ttl_s),
             stats: PoolStats::default(),
+            matches: AtomicU64::new(0),
+            match_hit_token_blocks: AtomicU64::new(0),
             evict_reports: vec![],
         }
     }
@@ -102,8 +121,18 @@ impl MemPool {
         &self.geom
     }
 
-    pub fn stats(&self) -> &PoolStats {
-        &self.stats
+    /// Counter snapshot: the `&mut`-path counters plus the atomic
+    /// match-path counters and the index's deferred-touch counters.
+    pub fn stats(&self) -> PoolStats {
+        let mut s = self.stats.clone();
+        s.matches = self.matches.load(Relaxed);
+        s.match_hit_token_blocks =
+            self.match_hit_token_blocks.load(Relaxed);
+        let ts = self.index.touch_stats();
+        s.touches_deferred = ts.deferred;
+        s.touches_drained = ts.drained;
+        s.touches_dropped = ts.dropped;
+        s
     }
 
     pub fn free_blocks(&self, tier: Tier) -> usize {
@@ -258,12 +287,16 @@ impl MemPool {
         self.index.unpin(pinned_tokens);
     }
 
-    /// Longest cached prefix of `tokens`.
-    pub fn match_prefix(&mut self, tokens: &[u32], now: f64) -> MatchResult {
+    /// Longest cached prefix of `tokens`. Takes `&self` — the index
+    /// match path defers its LRU maintenance (see
+    /// [`super::index::RadixIndex::match_prefix`]), so any number of
+    /// lookups may run concurrently against a shared pool.
+    pub fn match_prefix(&self, tokens: &[u32], now: f64) -> MatchResult {
         let IndexMatch { tokens: t, groups } =
             self.index.match_prefix(tokens, now);
-        self.stats.matches += 1;
-        self.stats.match_hit_token_blocks += groups.len() as u64;
+        self.matches.fetch_add(1, Relaxed);
+        self.match_hit_token_blocks
+            .fetch_add(groups.len() as u64, Relaxed);
         MatchResult { tokens: t, groups }
     }
 

@@ -43,9 +43,33 @@
 //! Eviction is LRU over leaves (evicting an interior node would orphan
 //! its descendants' prefixes); TTL expiry handles the global tree's
 //! staleness problem (paper §6 Discussion).
+//!
+//! # Lock-free read path
+//!
+//! [`RadixIndex::match_prefix`] takes `&self`: the only state a match
+//! mutates is recency. `last_access` is a relaxed `AtomicU64` (f64
+//! bits), and LRU heap maintenance for touched *leaves* is deferred
+//! through a bounded slot queue ([`DeferredTouches`]) drained at the
+//! top of every `&mut` operation — exclusive access makes the drain
+//! race-free by construction. Concurrent readers therefore share the
+//! index with zero contention; LRU ordering is exact up to the drain
+//! point, which every structural operation (insert / evict / expire /
+//! pin / …) establishes before it reads the heap.
+//!
+//! The one subtle invariant: a live heap entry is keyed by the exact
+//! `(stamp, last_access)` pair, so an evictable leaf's `last_access`
+//! may only advance when its deferred refresh is *guaranteed* to land.
+//! On a full queue the touch is dropped whole (counted in
+//! [`TouchStats::dropped`]) and the leaf keeps its older — therefore
+//! eviction-safe — access time; advancing the clock without queueing
+//! the refresh would orphan the heap entry and leak the leaf as
+//! permanently unevictable.
 
 use std::collections::{BinaryHeap, HashMap};
 use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+
+use crate::util::heap::lazy_heap_needs_compact;
 
 use super::block::BlockAddr;
 
@@ -232,7 +256,9 @@ struct Node {
     /// fingerprint (NONE-terminated chain).
     next_sibling: usize,
     parent: usize,
-    last_access: f64,
+    /// f64 bits of the last-access time, relaxed-atomic so the `&self`
+    /// match path can bump recency concurrently (see module docs).
+    last_access: AtomicU64,
     /// In-use count: requests currently reading this node's blocks.
     /// Pinned nodes are skipped by eviction, swap victim selection, and
     /// TTL expiry (SGLang's lock_ref, needed so an admission's matched
@@ -250,6 +276,80 @@ struct Node {
 impl Node {
     fn blocks(&self, block_tokens: usize) -> usize {
         self.edge.len() / block_tokens
+    }
+
+    #[inline]
+    fn access(&self) -> f64 {
+        f64::from_bits(self.last_access.load(Relaxed))
+    }
+
+    #[inline]
+    fn set_access(&self, now: f64) {
+        self.last_access.store(now.to_bits(), Relaxed);
+    }
+}
+
+/// NetStats-style counters for the deferred-touch queue (see module
+/// docs): how many leaf touches were queued by `&self` matches, how
+/// many a `&mut` drain has refreshed into the LRU heap, and how many
+/// were dropped because the queue was at capacity (those leaves kept
+/// their old access time — older, never newer, than the truth).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TouchStats {
+    pub deferred: u64,
+    pub drained: u64,
+    pub dropped: u64,
+}
+
+/// Bounded multi-producer slot queue of leaf touches. Producers (the
+/// `&self` match path) claim a slot by `fetch_add` and store the node
+/// index; the consumer runs only under `&mut RadixIndex`, when Rust's
+/// aliasing rules guarantee no producer is mid-store, so the drain
+/// needs no synchronization beyond reading the atomics.
+#[derive(Debug)]
+struct DeferredTouches {
+    /// `node + 1` per claimed slot (0 = never written).
+    slots: Box<[AtomicU64]>,
+    /// Slots claimed since the last drain (may exceed `slots.len()`:
+    /// the excess claims were dropped).
+    claimed: AtomicUsize,
+    deferred: AtomicU64,
+    drained: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl DeferredTouches {
+    fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "touch queue needs at least one slot");
+        DeferredTouches {
+            slots: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            claimed: AtomicUsize::new(0),
+            deferred: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Queue a touch of `node`; false when the queue is full (the
+    /// caller must then leave the node's access time alone).
+    #[inline]
+    fn defer(&self, node: usize) -> bool {
+        let i = self.claimed.fetch_add(1, Relaxed);
+        if i >= self.slots.len() {
+            self.dropped.fetch_add(1, Relaxed);
+            return false;
+        }
+        self.slots[i].store(node as u64 + 1, Relaxed);
+        self.deferred.fetch_add(1, Relaxed);
+        true
+    }
+
+    fn stats(&self) -> TouchStats {
+        TouchStats {
+            deferred: self.deferred.load(Relaxed),
+            drained: self.drained.load(Relaxed),
+            dropped: self.dropped.load(Relaxed),
+        }
     }
 }
 
@@ -297,7 +397,18 @@ pub struct RadixIndex {
     /// Mask applied to child fingerprints. All-ones normally; tests
     /// shrink it to force collision chains.
     fp_mask: u64,
+    /// Leaf touches queued by `&self` matches, drained (into
+    /// [`Self::refresh_lru`]) at the top of every `&mut` operation.
+    touches: DeferredTouches,
 }
+
+/// Default capacity of the deferred-touch queue: the number of leaf
+/// touches `&self` matches can queue between two `&mut` operations
+/// before further touches are dropped (dropped leaves keep their old,
+/// eviction-safe access time — see the module docs). 1024 covers far
+/// more concurrent matches than any realistic gap between structural
+/// operations at 8 bytes per slot.
+pub const DEFERRED_TOUCH_CAP: usize = 1024;
 
 /// Result of a prefix match: matched length plus a zero-clone
 /// [`GroupList`] of the matched block groups in prompt order.
@@ -311,6 +422,16 @@ pub struct IndexMatch {
 
 impl RadixIndex {
     pub fn new(block_tokens: usize, ttl: f64) -> Self {
+        Self::with_touch_capacity(block_tokens, ttl, DEFERRED_TOUCH_CAP)
+    }
+
+    /// [`Self::new`] with an explicit deferred-touch queue capacity —
+    /// tests shrink it to exercise the dropped-at-capacity path.
+    pub fn with_touch_capacity(
+        block_tokens: usize,
+        ttl: f64,
+        touch_capacity: usize,
+    ) -> Self {
         assert!(block_tokens > 0);
         RadixIndex {
             nodes: vec![Node {
@@ -320,7 +441,7 @@ impl RadixIndex {
                 children: FpMap::default(),
                 next_sibling: NONE,
                 parent: ROOT,
-                last_access: 0.0,
+                last_access: AtomicU64::new(0.0f64.to_bits()),
                 pins: 0,
                 sub_pins: 0,
                 stamp: 0,
@@ -333,6 +454,7 @@ impl RadixIndex {
             live_nodes: 0,
             lru: BinaryHeap::new(),
             fp_mask: u64::MAX,
+            touches: DeferredTouches::new(touch_capacity),
         }
     }
 
@@ -478,7 +600,7 @@ impl RadixIndex {
         let n = &self.nodes[e.node];
         n.valid
             && e.stamp == n.stamp
-            && e.access == n.last_access
+            && e.access == n.access()
             && n.children.is_empty()
             && n.pins == 0
     }
@@ -491,14 +613,14 @@ impl RadixIndex {
         n.stamp += 1;
         if idx != ROOT && n.valid && n.pins == 0 && n.children.is_empty() {
             self.lru.push(LruEntry {
-                access: n.last_access,
+                access: n.access(),
                 stamp: n.stamp,
                 node: idx,
             });
         }
         // Bound stale-entry growth: rebuild when the heap is dominated
-        // by dead entries.
-        if self.lru.len() > 64 && self.lru.len() > 4 * (self.live_nodes + 1) {
+        // by dead entries (shared policy, see `util::heap`).
+        if lazy_heap_needs_compact(self.lru.len(), self.live_nodes) {
             let old = std::mem::take(&mut self.lru);
             for e in old {
                 if self.lru_entry_live(&e) {
@@ -510,10 +632,64 @@ impl RadixIndex {
 
     /// Bump `idx`'s access time, re-queueing it for LRU if it is a leaf.
     fn touch(&mut self, idx: usize, now: f64) {
-        self.nodes[idx].last_access = now;
+        self.nodes[idx].set_access(now);
         if self.nodes[idx].children.is_empty() {
             self.refresh_lru(idx);
         }
+    }
+
+    /// `&self` counterpart of [`Self::touch`] for the shared match
+    /// path. Interior nodes (and the root) carry no heap entry, so a
+    /// plain atomic store suffices; a leaf's heap refresh is deferred
+    /// through the touch queue, and — the module-docs invariant — its
+    /// access time only advances when the deferral actually landed.
+    fn touch_shared(&self, idx: usize, now: f64) {
+        let n = &self.nodes[idx];
+        if n.children.is_empty() {
+            if self.touches.defer(idx) {
+                n.set_access(now);
+            }
+        } else {
+            n.set_access(now);
+        }
+    }
+
+    /// Apply every queued leaf touch to the LRU heap. Runs at the top
+    /// of each `&mut` operation, so by the time structural state is
+    /// read or modified the heap reflects all completed matches. Under
+    /// `&mut self` no reader is live, hence plain `get_mut` access.
+    fn drain_touches(&mut self) {
+        let claimed = *self.touches.claimed.get_mut();
+        if claimed == 0 {
+            return;
+        }
+        let n = claimed.min(self.touches.slots.len());
+        *self.touches.claimed.get_mut() = 0;
+        *self.touches.drained.get_mut() += n as u64;
+        for i in 0..n {
+            let slot = self.touches.slots[i].get_mut();
+            let v = *slot;
+            *slot = 0;
+            if v == 0 {
+                continue; // claimed but never stored: impossible under &mut
+            }
+            let idx = (v - 1) as usize;
+            // Node identity is stable from defer to drain: any
+            // structural mutation since would itself have drained first.
+            if self.nodes[idx].valid && self.nodes[idx].children.is_empty() {
+                self.refresh_lru(idx);
+            }
+        }
+    }
+
+    /// Deferred-touch queue counters (see [`TouchStats`]).
+    pub fn touch_stats(&self) -> TouchStats {
+        self.touches.stats()
+    }
+
+    /// Capacity of the deferred-touch queue.
+    pub fn touch_queue_capacity(&self) -> usize {
+        self.touches.slots.len()
     }
 
     /// Add `delta` to `sub_pins` on `idx` and every ancestor up to root.
@@ -562,6 +738,7 @@ impl RadixIndex {
     where
         F: Fn(usize) -> &'g [BlockAddr],
     {
+        self.drain_touches();
         let bt = self.block_tokens;
         let usable = self.usable_len(tokens.len());
         let tokens = &tokens[..usable];
@@ -570,7 +747,7 @@ impl RadixIndex {
         let mut dup = GroupList::default();
         let mut cur = ROOT;
         let mut pos = 0; // tokens consumed
-        self.nodes[ROOT].last_access = now;
+        self.nodes[ROOT].set_access(now);
 
         while pos < usable {
             let key = &tokens[pos..pos + bt];
@@ -594,7 +771,7 @@ impl RadixIndex {
                         children: FpMap::default(),
                         next_sibling: NONE,
                         parent: cur,
-                        last_access: now,
+                        last_access: AtomicU64::new(now.to_bits()),
                         pins: 0,
                         sub_pins: 0,
                         stamp: 0,
@@ -671,7 +848,7 @@ impl RadixIndex {
         let tail_addrs =
             self.nodes[node].addrs.split_off((at / bt) * gs as usize);
         let tail_children = std::mem::take(&mut self.nodes[node].children);
-        let last_access = self.nodes[node].last_access;
+        let last_access = self.nodes[node].access();
         // A pin covers the whole edge (pins are taken on block-split
         // boundaries), so both halves inherit it; unpin walks both.
         let pins = self.nodes[node].pins;
@@ -683,7 +860,7 @@ impl RadixIndex {
             children: tail_children,
             next_sibling: NONE,
             parent: node,
-            last_access,
+            last_access: AtomicU64::new(last_access.to_bits()),
             pins,
             // tail subtree = the old children plus the duplicated pin:
             // exactly the old node's subtree total.
@@ -710,12 +887,16 @@ impl RadixIndex {
     /// Longest indexed prefix of `tokens`; bumps last_access on the path.
     /// Returns borrowed-copy handles ([`GroupList`]) — no per-block
     /// allocation.
-    pub fn match_prefix(&mut self, tokens: &[u32], now: f64) -> IndexMatch {
+    ///
+    /// Takes `&self`: recency is bumped through relaxed atomics and the
+    /// deferred-touch queue (module docs), so any number of matches may
+    /// run concurrently with each other without contention.
+    pub fn match_prefix(&self, tokens: &[u32], now: f64) -> IndexMatch {
         let bt = self.block_tokens;
         let mut cur = ROOT;
         let mut pos = 0;
         let mut out = IndexMatch::default();
-        self.nodes[ROOT].last_access = now;
+        self.nodes[ROOT].set_access(now);
         loop {
             if pos + bt > tokens.len() {
                 break;
@@ -729,7 +910,7 @@ impl RadixIndex {
                 &tokens[pos..],
             );
             debug_assert!(common >= bt);
-            self.touch(child, now);
+            self.touch_shared(child, now);
             let n_blocks = common / bt;
             let gs = self.nodes[child].group_size as usize;
             out.groups.extend_flat(
@@ -781,6 +962,7 @@ impl RadixIndex {
     /// Returns the pinned length in tokens; pass the same slice to
     /// [`Self::unpin`] when the request retires.
     pub fn pin(&mut self, tokens: &[u32]) -> usize {
+        self.drain_touches();
         let (pos, path) = self.matched_path(tokens);
         // The path is a root→leaf chain (path[0] is a child of the
         // root), so one reverse pass gives each node its exact subtree
@@ -798,6 +980,7 @@ impl RadixIndex {
 
     /// Release a pin taken by [`Self::pin`] on the same token sequence.
     pub fn unpin(&mut self, tokens: &[u32]) -> usize {
+        self.drain_touches();
         let (pos, path) = self.matched_path(tokens);
         // Mirror of `pin`: reverse pass with a running count of the
         // decrements actually applied at this depth or below.
@@ -851,6 +1034,7 @@ impl RadixIndex {
     /// Delete the exact prefix `tokens` and everything below it. Returns
     /// the freed block addresses.
     pub fn delete(&mut self, tokens: &[u32]) -> Vec<BlockAddr> {
+        self.drain_touches();
         let bt = self.block_tokens;
         let usable = self.usable_len(tokens.len());
         let tokens = &tokens[..usable];
@@ -920,6 +1104,7 @@ impl RadixIndex {
     /// edge). An empty prefix drops the entire tree; a prefix that is
     /// not fully indexed is a no-op. Returns the freed addresses.
     pub fn prune_at(&mut self, prefix: &[u32]) -> Vec<BlockAddr> {
+        self.drain_touches();
         let bt = self.block_tokens;
         let usable = self.usable_len(prefix.len());
         let mut freed = vec![];
@@ -1013,6 +1198,7 @@ impl RadixIndex {
         want_token_blocks: usize,
         mut report: Option<&mut Vec<Vec<u32>>>,
     ) -> Vec<BlockAddr> {
+        self.drain_touches();
         let mut freed = vec![];
         let mut freed_blocks = 0;
         while freed_blocks < want_token_blocks {
@@ -1071,6 +1257,7 @@ impl RadixIndex {
         want_token_blocks: usize,
         filter: F,
     ) -> Vec<BlockAddr> {
+        self.drain_touches();
         let mut out = vec![];
         let mut groups_taken = 0;
         let mut popped = vec![];
@@ -1107,6 +1294,7 @@ impl RadixIndex {
         if self.ttl <= 0.0 {
             return vec![];
         }
+        self.drain_touches();
         let mut freed = vec![];
         // Repeat until fixpoint: expiring a parent requires dropping its
         // subtree; we conservatively expire stale *subtrees* whose root's
@@ -1119,7 +1307,7 @@ impl RadixIndex {
                 if i == ROOT || !n.valid {
                     continue;
                 }
-                if now - n.last_access > self.ttl && n.sub_pins == 0 {
+                if now - n.access() > self.ttl && n.sub_pins == 0 {
                     victim = Some(i);
                     break;
                 }
@@ -1135,6 +1323,7 @@ impl RadixIndex {
 
     /// Rewrite addresses after a swap (old -> new), e.g. HBM -> DRAM.
     pub fn remap(&mut self, map: &HashMap<BlockAddr, BlockAddr>) {
+        self.drain_touches();
         for n in &mut self.nodes {
             if !n.valid {
                 continue;
@@ -1817,5 +2006,131 @@ mod tests {
                 }
             });
         }
+    }
+
+    /// Differential property for the deferred-touch queue: stacking
+    /// many `&self` matches between structural operations (so the
+    /// queue actually accumulates depth before each drain) must leave
+    /// LRU victim selection identical to the seed reference, which
+    /// applies every touch eagerly. With the default queue capacity no
+    /// touch is ever dropped, so serializing the queue at the next
+    /// `&mut` call reconstructs the eager ordering exactly.
+    #[test]
+    fn prop_deferred_touch_lru_equivalence() {
+        proptest(40, |g| {
+            let mut new = RadixIndex::new(BT, 0.0);
+            let mut old = RefRadixIndex::new(BT, 0.0);
+            let mut next_addr = 0u32;
+            let mut now = 0.0;
+            for _ in 0..g.usize(1, 25) {
+                now += 1.0;
+                match g.usize(0, 3) {
+                    0 => {
+                        let len = g.usize(1, 5) * BT;
+                        let toks = g.vec_u32(len, 0, 3);
+                        let nb = len / BT;
+                        let gs: Vec<BlockGroup> = (0..nb)
+                            .map(|i| vec![addr(next_addr + i as u32)])
+                            .collect();
+                        next_addr += nb as u32;
+                        assert_eq!(
+                            new.insert(&toks, &gs, now),
+                            old.insert(&toks, &gs, now)
+                        );
+                    }
+                    1 | 2 => {
+                        // A burst of matches with NO intervening &mut
+                        // call: all land in the queue, drained only by
+                        // the next structural op.
+                        for _ in 0..g.usize(1, 6) {
+                            now += 1.0;
+                            let len = g.usize(0, 5) * BT;
+                            let toks = g.vec_u32(len, 0, 3);
+                            let m1 = new.match_prefix(&toks, now);
+                            let m2 = old.match_prefix(&toks, now);
+                            assert_eq!(m1.tokens, m2.tokens);
+                            assert_eq!(m1.groups, m2.groups);
+                        }
+                    }
+                    _ => {
+                        let want = g.usize(1, 3);
+                        assert_eq!(
+                            new.evict_lru(want),
+                            old.evict_lru(want),
+                            "LRU victims diverged after deferred touches"
+                        );
+                    }
+                }
+            }
+            new.evict_lru(0); // final drain (pops nothing)
+            let ts = new.touch_stats();
+            assert_eq!(ts.dropped, 0, "default capacity must not drop");
+            assert_eq!(ts.deferred, ts.drained, "drain must be complete");
+        });
+    }
+
+    /// At capacity the queue drops touches whole: the counters say so,
+    /// and the dropped leaf keeps its OLD access time — so it stays
+    /// evictable under its original heap entry instead of leaking as a
+    /// node whose heap entry no longer matches its access time.
+    #[test]
+    fn deferred_touch_drop_at_capacity() {
+        let mut idx = RadixIndex::with_touch_capacity(BT, 0.0, 2);
+        let a = seq(&[1, 1, 1, 1]);
+        let b = seq(&[2, 2, 2, 2]);
+        let c = seq(&[3, 3, 3, 3]);
+        idx.insert(&a, &groups(0, 1), 1.0);
+        idx.insert(&b, &groups(1, 1), 2.0);
+        idx.insert(&c, &groups(2, 1), 3.0);
+        // Three leaf touches into a 2-slot queue: the third drops.
+        assert_eq!(idx.match_prefix(&c, 10.0).tokens, 4);
+        assert_eq!(idx.match_prefix(&b, 11.0).tokens, 4);
+        assert_eq!(idx.match_prefix(&a, 12.0).tokens, 4);
+        let ts = idx.touch_stats();
+        assert_eq!(
+            ts,
+            TouchStats { deferred: 2, drained: 0, dropped: 1 }
+        );
+        // `a`'s touch was dropped, so its access time is still 1.0 and
+        // its original heap entry is live: it must be the LRU victim,
+        // not un-evictable.
+        assert_eq!(idx.evict_lru(1), groups(0, 1)[0]);
+        let ts = idx.touch_stats();
+        assert_eq!(ts.drained, 2);
+        // The refreshed leaves survive with their new recency: next
+        // victim is `c` (10.0), then `b` (11.0).
+        assert_eq!(idx.evict_lru(1), groups(2, 1)[0]);
+        assert_eq!(idx.evict_lru(1), groups(1, 1)[0]);
+    }
+
+    /// Concurrent `&self` matches: shared-reference readers on multiple
+    /// threads return correct matches, and the touch counters stay
+    /// consistent (every leaf touch either deferred or dropped).
+    #[test]
+    fn concurrent_shared_matches() {
+        let mut idx = RadixIndex::new(BT, 0.0);
+        let seqs: Vec<Vec<u32>> = (0..8u32)
+            .map(|i| vec![i; 2 * BT])
+            .collect();
+        for (i, s) in seqs.iter().enumerate() {
+            idx.insert(s, &groups(2 * i as u32, 2), 1.0);
+        }
+        let idx = &idx;
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let seqs = &seqs;
+                scope.spawn(move || {
+                    for round in 0..50 {
+                        let s = &seqs[(t * 13 + round) % seqs.len()];
+                        let m = idx.match_prefix(s, 2.0 + round as f64);
+                        assert_eq!(m.tokens, 2 * BT);
+                    }
+                });
+            }
+        });
+        let ts = idx.touch_stats();
+        // 4 threads * 50 matches, one leaf touch each.
+        assert_eq!(ts.deferred + ts.dropped, 200);
+        assert_eq!(ts.drained, 0, "no &mut op ran during the scope");
     }
 }

@@ -22,6 +22,6 @@ pub mod transfer;
 
 pub use api::{MatchResult, MemPool, PoolError, PoolStats};
 pub use block::{BlockAddr, BlockGeometry, InstanceId, Tier};
-pub use index::{GroupList, RadixIndex};
+pub use index::{GroupList, RadixIndex, TouchStats, DEFERRED_TOUCH_CAP};
 pub use index_ref::RefRadixIndex;
 pub use transfer::{TransferFlags, TransferMode, TransferRequest};

@@ -1,0 +1,561 @@
+//! Per-shard scheduler worker threads — the multi-core data plane
+//! (ISSUE 7 tentpole, scheduler half).
+//!
+//! PR 5 made the S shards *independent* (one tree + one delta log per
+//! fingerprint range) but left them behind one owner: every route and
+//! every delta still serialized through a single `&mut` holder. This
+//! module pins each shard to its own OS thread so writes actually
+//! scale by cores × shards:
+//!
+//! ```text
+//!  submitters (T threads, cloned ShardSubmitter)
+//!     │ route(prompt) ── ShardMap: first-block fingerprint → shard k
+//!     ▼
+//!  ┌─────────┐  ┌─────────┐       ┌─────────┐
+//!  │worker 0 │  │worker 1 │  ...  │worker S-1│   one thread per shard,
+//!  │ 1-shard │  │ 1-shard │       │ 1-shard │   owning its tree +
+//!  │   GS    │  │   GS    │       │   GS    │   load book outright
+//!  └─────────┘  └─────────┘       └─────────┘
+//!     ▲  MPSC channel per worker (routes + One(k) deltas, FIFO)
+//!     │
+//!  ShardWorkerPool ── All-shard events (membership, whole-view
+//!                     expiry) broadcast + epoch fence (Condvar acks)
+//! ```
+//!
+//! **Lock-free vs epoch-fenced.** The submit path takes no lock at
+//! all: a route or a prefix-keyed delta is one channel send to its
+//! shard's worker, and each worker owns its `GlobalScheduler` without
+//! synchronization (single-consumer). Cross-shard operations —
+//! `Join`/`Leave`/`SetDraining` fan-out and whole-view expiries — are
+//! epoch-fenced broadcasts: the pool bumps its epoch, enqueues the
+//! event plus a `Fence` on every worker's FIFO channel, and blocks
+//! until every worker acks the epoch. Channel FIFO order makes the
+//! fence a happens-after barrier for everything enqueued before it, so
+//! when `broadcast` returns every shard has applied the membership
+//! change (the same registry-agreement invariant
+//! `ShardedPromptTrees::debug_check_counters` checks in-process).
+//!
+//! **Why per-shard decisions stay deterministic.** Each worker's
+//! 1-shard scheduler sees exactly the deltas `ShardMap` routes to it,
+//! in channel order, plus every broadcast — which is precisely the
+//! slice the monolithic S-shard scheduler's shard-k tree sees, in the
+//! same order. A `Route` carries the full per-instance load vector, so
+//! the load book state a decision reads is a function of that request
+//! alone, not of cross-shard interleaving. Hence: per-shard decision
+//! streams are a pure function of (seeded tree state, request), and a
+//! T-thread run must agree request-for-request with the single-thread
+//! reference — the differential property pinned below.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::elastic::delta::DeltaEvent;
+use crate::mempool::InstanceId;
+use crate::scheduler::cost_model::OperatorCostModel;
+use crate::scheduler::policy::{Decision, PolicyKind};
+use crate::scheduler::router::{GlobalScheduler, InstanceLoad, RouteOutcome};
+use crate::scheduler::shard::{ShardMap, ShardRoute};
+
+/// Per-route load snapshot: the full fleet's loads, shared (not
+/// cloned) into the request so decisions are a function of the request
+/// alone — see module docs.
+pub type LoadVec = Arc<Vec<(InstanceId, InstanceLoad)>>;
+
+enum ShardRequest {
+    /// Route one request on this shard (it owns the prompt's prefix
+    /// chain). Replies on the provided one-shot channel.
+    Route {
+        id: u64,
+        prompt: Vec<u32>,
+        session: u64,
+        now: f64,
+        loads: LoadVec,
+        reply: Sender<anyhow::Result<RouteOutcome>>,
+    },
+    /// Apply one delta to this shard's tree (One(k)-routed, or one leg
+    /// of an All broadcast).
+    Delta(DeltaEvent),
+    /// Ack `epoch` on the shared board once everything enqueued before
+    /// this request has been applied.
+    Fence { epoch: u64 },
+    /// Return the (request id, decision) log in processing order.
+    Collect {
+        reply: Sender<Vec<(u64, Decision)>>,
+    },
+    Stop,
+}
+
+/// Epoch acks, one slot per shard worker.
+struct AckBoard {
+    acked: Mutex<Vec<u64>>,
+    cv: Condvar,
+}
+
+fn worker_loop(
+    shard: usize,
+    rx: Receiver<ShardRequest>,
+    mut gs: GlobalScheduler,
+    acks: Arc<AckBoard>,
+) {
+    let mut log: Vec<(u64, Decision)> = vec![];
+    while let Ok(req) = rx.recv() {
+        match req {
+            ShardRequest::Route {
+                id,
+                prompt,
+                session,
+                now,
+                loads,
+                reply,
+            } => {
+                for &(inst, load) in loads.iter() {
+                    gs.set_load(inst, load);
+                }
+                let out = gs.route(&prompt, session, now);
+                if let Ok(o) = &out {
+                    log.push((id, o.decision.clone()));
+                }
+                let _ = reply.send(out);
+            }
+            ShardRequest::Delta(ev) => gs.trees.apply_delta(&ev),
+            ShardRequest::Fence { epoch } => {
+                let mut a = acks.acked.lock().unwrap();
+                a[shard] = epoch;
+                acks.cv.notify_all();
+            }
+            ShardRequest::Collect { reply } => {
+                let _ = reply.send(log.clone());
+            }
+            ShardRequest::Stop => break,
+        }
+    }
+}
+
+/// S shard-pinned worker threads behind a `ShardMap`-routed submit
+/// path (see module docs). Created with the same scheduler knobs every
+/// worker shares; each worker owns a 1-shard [`GlobalScheduler`].
+pub struct ShardWorkerPool {
+    senders: Vec<Sender<ShardRequest>>,
+    handles: Vec<JoinHandle<()>>,
+    map: ShardMap,
+    epoch: u64,
+    acks: Arc<AckBoard>,
+}
+
+impl ShardWorkerPool {
+    pub fn new(
+        shards: usize,
+        block_tokens: usize,
+        ttl: f64,
+        policy: PolicyKind,
+        cost: OperatorCostModel,
+    ) -> Self {
+        assert!(shards >= 1, "at least one shard");
+        let acks = Arc::new(AckBoard {
+            acked: Mutex::new(vec![0; shards]),
+            cv: Condvar::new(),
+        });
+        let mut senders = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for k in 0..shards {
+            let (tx, rx) = mpsc::channel();
+            let gs = GlobalScheduler::new(
+                policy,
+                cost.clone(),
+                block_tokens,
+                ttl,
+            );
+            let acks = Arc::clone(&acks);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gs-shard-{k}"))
+                    .spawn(move || worker_loop(k, rx, gs, acks))
+                    .expect("spawn shard worker"),
+            );
+            senders.push(tx);
+        }
+        ShardWorkerPool {
+            senders,
+            handles,
+            map: ShardMap::new(shards, block_tokens),
+            epoch: 0,
+            acks,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// A clonable submit handle: give each submitter thread its own
+    /// clone (the channels are MPSC, cloning is cheap).
+    pub fn submitter(&self) -> ShardSubmitter {
+        ShardSubmitter {
+            senders: self.senders.clone(),
+            map: self.map,
+        }
+    }
+
+    /// Apply one delta: prefix-keyed events go to their shard's FIFO
+    /// (no fence, no wait — the write scales); membership and
+    /// whole-view events are epoch-fenced broadcasts.
+    pub fn apply(&mut self, ev: &DeltaEvent) {
+        match self.map.route(ev) {
+            ShardRoute::One(s) => {
+                let _ = self.senders[s].send(ShardRequest::Delta(ev.clone()));
+            }
+            ShardRoute::All => self.broadcast(ev),
+        }
+    }
+
+    /// Epoch-fenced broadcast: every worker applies `ev` — and
+    /// everything enqueued to it beforehand — before this returns.
+    pub fn broadcast(&mut self, ev: &DeltaEvent) {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        for tx in &self.senders {
+            let _ = tx.send(ShardRequest::Delta(ev.clone()));
+            let _ = tx.send(ShardRequest::Fence { epoch });
+        }
+        self.wait_epoch(epoch);
+    }
+
+    /// Barrier without an event: drains every worker's queue up to the
+    /// fence. Bench harnesses use this to bound a timed delta batch.
+    pub fn fence(&mut self) {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        for tx in &self.senders {
+            let _ = tx.send(ShardRequest::Fence { epoch });
+        }
+        self.wait_epoch(epoch);
+    }
+
+    fn wait_epoch(&self, epoch: u64) {
+        let mut a = self.acks.acked.lock().unwrap();
+        while a.iter().any(|&e| e < epoch) {
+            a = self.acks.cv.wait(a).unwrap();
+        }
+    }
+
+    /// Per-shard (request id, decision) logs in each worker's
+    /// processing order (fences first so in-flight work is included).
+    pub fn decision_logs(&mut self) -> Vec<Vec<(u64, Decision)>> {
+        self.fence();
+        let mut out = Vec::with_capacity(self.senders.len());
+        for tx in &self.senders {
+            let (rtx, rrx) = mpsc::channel();
+            let _ = tx.send(ShardRequest::Collect { reply: rtx });
+            out.push(rrx.recv().unwrap_or_default());
+        }
+        out
+    }
+
+    /// Stop every worker and join. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(ShardRequest::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardWorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Clonable per-thread submit handle (see [`ShardWorkerPool::submitter`]).
+#[derive(Clone)]
+pub struct ShardSubmitter {
+    senders: Vec<Sender<ShardRequest>>,
+    map: ShardMap,
+}
+
+impl ShardSubmitter {
+    /// Route one request: one channel send to the prompt's shard, then
+    /// block for that worker's reply. `loads` is the full fleet load
+    /// snapshot the decision should use (see [`LoadVec`]).
+    pub fn route(
+        &self,
+        id: u64,
+        prompt: &[u32],
+        session: u64,
+        now: f64,
+        loads: &LoadVec,
+    ) -> anyhow::Result<RouteOutcome> {
+        let s = self.map.shard_of_tokens(prompt).unwrap_or(0);
+        let (tx, rx) = mpsc::channel();
+        self.senders[s]
+            .send(ShardRequest::Route {
+                id,
+                prompt: prompt.to_vec(),
+                session,
+                now,
+                loads: Arc::clone(loads),
+                reply: tx,
+            })
+            .map_err(|_| anyhow::anyhow!("shard {s} worker stopped"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("shard {s} worker dropped reply"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::prompt_tree::InstanceKind;
+    use crate::util::proptest::proptest;
+
+    const BT: usize = 4;
+
+    fn toks(len: usize, seed: u32) -> Vec<u32> {
+        (0..len as u32)
+            .map(|i| i.wrapping_mul(13).wrapping_add(seed) % 5)
+            .collect()
+    }
+
+    fn fleet_loads(n_inst: u32) -> LoadVec {
+        Arc::new(
+            (0..n_inst)
+                .map(|i| {
+                    (
+                        InstanceId(i),
+                        InstanceLoad {
+                            queued_tokens: (i as usize * 97) % 1024,
+                            ..Default::default()
+                        },
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// The single-threaded monolithic reference: same joins, same
+    /// records in the same order, loads re-asserted before every route
+    /// exactly as the workers do.
+    fn reference_run(
+        shards: usize,
+        n_inst: u32,
+        records: &[(InstanceId, Vec<u32>)],
+        requests: &[(u64, Vec<u32>, u64)],
+        loads: &LoadVec,
+    ) -> Vec<(u64, Decision)> {
+        let mut gs = GlobalScheduler::with_shards(
+            PolicyKind::PromptTree,
+            OperatorCostModel::paper_13b(),
+            BT,
+            0.0,
+            shards,
+        );
+        for i in 0..n_inst {
+            gs.trees.apply_delta(&DeltaEvent::Join {
+                instance: InstanceId(i),
+                kind: InstanceKind::PrefillOnly,
+            });
+        }
+        for (inst, t) in records {
+            gs.trees.apply_delta(&DeltaEvent::Record {
+                instance: *inst,
+                tokens: t.clone(),
+                now: 1.0,
+            });
+        }
+        requests
+            .iter()
+            .map(|(id, prompt, session)| {
+                for &(inst, load) in loads.iter() {
+                    gs.set_load(inst, load);
+                }
+                let out = gs.route(prompt, *session, 2.0).unwrap();
+                (*id, out.decision)
+            })
+            .collect()
+    }
+
+    fn seeded_pool(
+        shards: usize,
+        n_inst: u32,
+        records: &[(InstanceId, Vec<u32>)],
+    ) -> ShardWorkerPool {
+        let mut pool = ShardWorkerPool::new(
+            shards,
+            BT,
+            0.0,
+            PolicyKind::PromptTree,
+            OperatorCostModel::paper_13b(),
+        );
+        for i in 0..n_inst {
+            pool.apply(&DeltaEvent::Join {
+                instance: InstanceId(i),
+                kind: InstanceKind::PrefillOnly,
+            });
+        }
+        for (inst, t) in records {
+            pool.apply(&DeltaEvent::Record {
+                instance: *inst,
+                tokens: t.clone(),
+                now: 1.0,
+            });
+        }
+        pool.fence();
+        pool
+    }
+
+    /// ISSUE 7 satellite: N submitter threads route a seeded workload
+    /// through the per-shard workers; every (request, decision) pair —
+    /// and each per-shard stream, compared in request order — must
+    /// equal the single-threaded monolithic reference run.
+    #[test]
+    fn prop_cross_thread_determinism() {
+        proptest(6, |g| {
+            let shards = [1usize, 2, 4][g.usize(0, 2)];
+            let threads = g.usize(2, 4);
+            let n_inst = 6 + g.usize(0, 6) as u32;
+            let records: Vec<(InstanceId, Vec<u32>)> = (0..g.usize(4, 16))
+                .map(|r| {
+                    (
+                        InstanceId(r as u32 % n_inst),
+                        toks(g.usize(1, 4) * BT, g.u64(0, 40) as u32),
+                    )
+                })
+                .collect();
+            let requests: Vec<(u64, Vec<u32>, u64)> = (0..g.usize(8, 40))
+                .map(|i| {
+                    (
+                        i as u64,
+                        toks(g.usize(1, 4) * BT, g.u64(0, 40) as u32),
+                        g.u64(0, 1 << 20),
+                    )
+                })
+                .collect();
+            let loads = fleet_loads(n_inst);
+            let expect =
+                reference_run(shards, n_inst, &records, &requests, &loads);
+
+            let mut pool = seeded_pool(shards, n_inst, &records);
+            let mut got: Vec<(u64, Decision)> = std::thread::scope(|sc| {
+                let mut joins = vec![];
+                for t in 0..threads {
+                    let sub = pool.submitter();
+                    let requests = &requests;
+                    let loads = &loads;
+                    joins.push(sc.spawn(move || {
+                        let mut out = vec![];
+                        // Round-robin partition of the request stream.
+                        for (id, prompt, session) in
+                            requests.iter().skip(t).step_by(threads)
+                        {
+                            let o = sub
+                                .route(*id, prompt, *session, 2.0, loads)
+                                .unwrap();
+                            out.push((*id, o.decision));
+                        }
+                        out
+                    }));
+                }
+                joins
+                    .into_iter()
+                    .flat_map(|j| j.join().unwrap())
+                    .collect()
+            });
+            got.sort_by_key(|&(id, _)| id);
+            assert_eq!(got, expect, "S={shards} T={threads}");
+
+            // Per-shard streams: every worker's log holds exactly its
+            // shard's requests, and in request order each stream equals
+            // the reference's shard-projected stream.
+            let logs = pool.decision_logs();
+            let map = *pool.map();
+            for (s, mut log) in logs.into_iter().enumerate() {
+                for &(id, _) in &log {
+                    let prompt = &requests[id as usize].1;
+                    assert_eq!(
+                        map.shard_of_tokens(prompt).unwrap_or(0),
+                        s,
+                        "request {id} logged on the wrong shard"
+                    );
+                }
+                log.sort_by_key(|&(id, _)| id);
+                let expect_s: Vec<(u64, Decision)> = expect
+                    .iter()
+                    .filter(|(id, _)| {
+                        map.shard_of_tokens(&requests[*id as usize].1)
+                            .unwrap_or(0)
+                            == s
+                    })
+                    .cloned()
+                    .collect();
+                assert_eq!(log, expect_s, "shard {s} stream diverged");
+            }
+        });
+    }
+
+    /// T=1 over the worker pool is decision-identical to the
+    /// monolithic scheduler — the structural bit-identity claim.
+    #[test]
+    fn single_thread_mode_matches_monolithic() {
+        let n_inst = 8;
+        let records: Vec<(InstanceId, Vec<u32>)> = (0..12)
+            .map(|r| (InstanceId(r % n_inst), toks(2 * BT, r * 31)))
+            .collect();
+        let requests: Vec<(u64, Vec<u32>, u64)> = (0..30)
+            .map(|i| (i as u64, toks(3 * BT, i as u32 * 7), i as u64))
+            .collect();
+        let loads = fleet_loads(n_inst);
+        let expect = reference_run(2, n_inst, &records, &requests, &loads);
+        let pool = seeded_pool(2, n_inst, &records);
+        let sub = pool.submitter();
+        for (id, prompt, session) in &requests {
+            let o = sub.route(*id, prompt, *session, 2.0, &loads).unwrap();
+            assert_eq!(
+                (*id, o.decision),
+                expect[*id as usize],
+                "request {id}"
+            );
+        }
+    }
+
+    /// Membership broadcasts are epoch-fenced: after `apply(Leave)`
+    /// returns, no shard routes to the departed instance.
+    #[test]
+    fn epoch_fenced_membership_is_visible_on_every_shard() {
+        let n_inst = 4;
+        let mut pool = seeded_pool(4, n_inst, &[]);
+        let loads = fleet_loads(n_inst);
+        let sub = pool.submitter();
+        // Make instance 3 the cache holder for prompts on every shard.
+        let prompts: Vec<Vec<u32>> =
+            (0..16).map(|i| toks(2 * BT, i * 11)).collect();
+        for p in &prompts {
+            pool.apply(&DeltaEvent::Record {
+                instance: InstanceId(3),
+                tokens: p.clone(),
+                now: 1.0,
+            });
+        }
+        pool.fence();
+        for (i, p) in prompts.iter().enumerate() {
+            let o = sub.route(i as u64, p, 0, 2.0, &loads).unwrap();
+            assert_eq!(o.decision.instance, InstanceId(3));
+        }
+        pool.apply(&DeltaEvent::Leave {
+            instance: InstanceId(3),
+        });
+        // The broadcast has been fenced: every shard must already have
+        // dropped instance 3 from its registry.
+        for (i, p) in prompts.iter().enumerate() {
+            let o = sub.route(100 + i as u64, p, 0, 3.0, &loads).unwrap();
+            assert_ne!(o.decision.instance, InstanceId(3));
+        }
+        pool.shutdown();
+    }
+}

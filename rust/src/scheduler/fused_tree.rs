@@ -1192,10 +1192,13 @@ impl FusedPromptTree {
     }
 
     /// Bound stale-entry growth: rebuild when the heap is dominated by
-    /// dead entries (same policy as the MemPool index's LRU heap).
+    /// dead entries (shared policy with the MemPool index's LRU heap,
+    /// see `util::heap`).
     fn maybe_compact_heap(&mut self) {
-        if self.heap.len() > 64 && self.heap.len() > 4 * (self.owner_pairs + 1)
-        {
+        if crate::util::heap::lazy_heap_needs_compact(
+            self.heap.len(),
+            self.owner_pairs,
+        ) {
             let old = std::mem::take(&mut self.heap);
             for e in old {
                 if self.entry_live(&e) {

@@ -2,6 +2,7 @@
 //! and the context-caching cost model (§5.3).
 
 pub mod cost_model;
+pub mod data_plane;
 pub mod fused_tree;
 pub mod policy;
 pub mod prompt_tree;

@@ -31,6 +31,20 @@ use crate::mempool::index::block_fingerprint;
 use crate::mempool::InstanceId;
 use crate::scheduler::fused_tree::{FusedPromptTree, OwnedPrefix};
 use crate::scheduler::prompt_tree::InstanceKind;
+use crate::util::rng::splitmix64;
+
+/// Default keyed-salt for first-block shard routing (PR 5 follow-up:
+/// per-shard rebalancing, the cheap half). Raw `block_fingerprint`
+/// values are well-spread for *random* blocks but workloads are not
+/// random — a fleet-wide system prompt gives every request the same
+/// block 0, and templated prompt families can cluster a fingerprint
+/// *range* onto one shard. Mixing the fingerprint with a fixed key
+/// through splitmix64 before range-partitioning decorrelates the shard
+/// from any structure in the raw fingerprint while keeping the map
+/// deterministic and identical across every `ShardMap::new` user
+/// (serving trees, replication, replica groups must agree). Zero is
+/// the "unsalted" sentinel ([`ShardMap::unsalted`]).
+pub const DEFAULT_SHARD_SALT: u64 = 0xD6E8_FEB8_6659_FD93;
 
 /// Where one delta (or read) goes in a sharded tree.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,16 +66,31 @@ pub struct ShardMap {
     /// Mirrors the trees' fingerprint mask so forced-collision tests
     /// shard exactly the way the trees chain.
     fp_mask: u64,
+    /// Keyed-salt mixed into the first-block fingerprint before range
+    /// partitioning ([`DEFAULT_SHARD_SALT`]); 0 = unsalted.
+    salt: u64,
 }
 
 impl ShardMap {
     pub fn new(shards: usize, block_tokens: usize) -> Self {
+        Self::with_salt(shards, block_tokens, DEFAULT_SHARD_SALT)
+    }
+
+    /// The pre-salt layout: shards are raw fingerprint ranges. Kept
+    /// reachable for differential proptests that reason about raw
+    /// ranges (and for [`Self::set_fingerprint_mask`] users).
+    pub fn unsalted(shards: usize, block_tokens: usize) -> Self {
+        Self::with_salt(shards, block_tokens, 0)
+    }
+
+    fn with_salt(shards: usize, block_tokens: usize, salt: u64) -> Self {
         assert!(shards >= 1, "at least one shard");
         assert!(block_tokens > 0);
         ShardMap {
             shards,
             block_tokens,
             fp_mask: u64::MAX,
+            salt,
         }
     }
 
@@ -76,10 +105,14 @@ impl ShardMap {
     /// Test hook mirroring [`FusedPromptTree::set_fingerprint_mask`].
     /// Note a low-bit mask (e.g. `0xF`) collapses every fingerprint
     /// into shard 0's range; use a high-bit mask (`0xF << 60`) to force
-    /// collisions *and* spread across shards.
+    /// collisions *and* spread across shards. Also clears the salt:
+    /// forced-collision tests reason about *raw* masked fingerprint
+    /// ranges, and salting a masked fingerprint would re-spread exactly
+    /// the collapse the mask is there to force.
     #[doc(hidden)]
     pub fn set_fingerprint_mask(&mut self, mask: u64) {
         self.fp_mask = mask;
+        self.salt = 0;
     }
 
     /// Shard owning fingerprint `fp`.
@@ -87,15 +120,27 @@ impl ShardMap {
         ((fp as u128 * self.shards as u128) >> 64) as usize
     }
 
-    /// Shard owning a token sequence (by its first full block); `None`
-    /// when the sequence is shorter than one block.
+    /// Keyed spread of a first-block fingerprint (identity when
+    /// unsalted).
+    #[inline]
+    fn spread(&self, fp: u64) -> u64 {
+        if self.salt == 0 {
+            fp
+        } else {
+            let mut x = fp ^ self.salt;
+            splitmix64(&mut x)
+        }
+    }
+
+    /// Shard owning a token sequence (by its first full block, salted);
+    /// `None` when the sequence is shorter than one block.
     pub fn shard_of_tokens(&self, tokens: &[u32]) -> Option<usize> {
         if tokens.len() < self.block_tokens {
             return None;
         }
         let fp =
             block_fingerprint(&tokens[..self.block_tokens]) & self.fp_mask;
-        Some(self.shard_of_fp(fp))
+        Some(self.shard_of_fp(self.spread(fp)))
     }
 
     /// Where one delta event must be applied (and logged).
@@ -449,6 +494,52 @@ mod tests {
     }
 
     #[test]
+    fn salted_map_spreads_and_keeps_the_contracts() {
+        let salted = ShardMap::new(4, BT);
+        let unsalted = ShardMap::unsalted(4, BT);
+        // Prefix-shard consistency survives salting (prefixes share
+        // block 0), and the salted layout actually differs from the raw
+        // ranges for some prompts (otherwise the salt does nothing).
+        let mut differs = false;
+        for seed in 0..64 {
+            let t = toks(3 * BT, seed * 57 + 1);
+            let s = salted.shard_of_tokens(&t).unwrap();
+            for blocks in 1..=3 {
+                assert_eq!(
+                    salted.shard_of_tokens(&t[..blocks * BT]),
+                    Some(s),
+                    "salted prefix changed shard"
+                );
+            }
+            differs |= unsalted.shard_of_tokens(&t) != Some(s);
+        }
+        assert!(differs, "salt must permute the raw-range layout");
+        // Structured near-identical first blocks (templated prompts:
+        // one varying token) spread under the salt — no shard may take
+        // a super-majority of 256 distinct blocks.
+        let mut counts = [0usize; 4];
+        for i in 0..256u32 {
+            let mut t = vec![7u32; BT];
+            t[0] = i;
+            counts[salted.shard_of_tokens(&t).unwrap()] += 1;
+        }
+        assert!(
+            counts.iter().all(|&c| c > 0 && c < 160),
+            "salted skew: {counts:?}"
+        );
+        // S=1 routes everything to shard 0 regardless of salt; masked
+        // maps drop the salt so a low-bit mask still collapses to
+        // shard 0 (the forced-collision contract).
+        assert_eq!(ShardMap::new(1, BT).shard_of_tokens(&toks(BT, 5)),
+                   Some(0));
+        let mut masked = ShardMap::new(4, BT);
+        masked.set_fingerprint_mask(0xF);
+        for seed in 0..16 {
+            assert_eq!(masked.shard_of_tokens(&toks(BT, seed)), Some(0));
+        }
+    }
+
+    #[test]
     fn delta_routing_membership_fans_prefixes_pin() {
         let map = ShardMap::new(4, BT);
         let t = toks(2 * BT, 9);
@@ -580,9 +671,15 @@ mod tests {
                 let ttl = 10.0;
                 let mut shd = ShardedPromptTrees::with_shards(BT, ttl,
                                                               shards);
-                shd.set_fingerprint_mask(mask);
                 let mut fused = GlobalPromptTrees::new(BT, ttl);
-                fused.set_fingerprint_mask(mask);
+                // Masked runs exercise the unsalted raw-range layout
+                // (set_fingerprint_mask clears the salt); the
+                // full-fingerprint runs keep the default salted map, so
+                // both layouts are pinned against the reference.
+                if mask != u64::MAX {
+                    shd.set_fingerprint_mask(mask);
+                    fused.set_fingerprint_mask(mask);
+                }
                 let mut refr = RefGlobalPromptTrees::new(BT, ttl);
                 let n_inst = 8 + g.usize(0, 8) as u32;
                 for i in 0..n_inst {

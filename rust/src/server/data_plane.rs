@@ -1,0 +1,739 @@
+//! The leader's sharded GS data plane (ISSUE 7 tentpole, server half).
+//!
+//! PR 4/5 sharded the *state* — one `FusedPromptTree` + one
+//! `DeltaTransport` per prefix-range shard — but the leader still
+//! serialized every route and every delta through one
+//! `Mutex<GlobalScheduler>` plus one `Mutex<GsReplication>`. This
+//! module pins each shard's tree AND its replication log together in
+//! one [`GsUnit`] behind its own lock (the ISSUE's sharded-lock
+//! fallback of the per-core worker design; the worker-thread variant
+//! lives in [`crate::scheduler::data_plane`]):
+//!
+//! ```text
+//!   dispatch / Record / Expire / Handoff / DeltaAck   (shard-keyed)
+//!        │ ShardMap: first-block fingerprint → unit k
+//!        ▼
+//!   ┌──────────────┐ ┌──────────────┐     ┌──────────────┐
+//!   │ Mutex<GsUnit>│ │ Mutex<GsUnit>│ ... │ Mutex<GsUnit>│
+//!   │  gs (1-shard)│ │  gs (1-shard)│     │  gs (1-shard)│
+//!   │  log (shard) │ │  log (shard) │     │  log (shard) │
+//!   └──────────────┘ └──────────────┘     └──────────────┘
+//!        ▲ Join/Leave/SetDraining/whole-view Expire: epoch-fenced
+//!        │ broadcast — bump `all_epoch`, lock ALL units in ascending
+//!        │ order, apply + append everywhere, release together.
+//! ```
+//!
+//! Writes now scale by shards: a route or a prefix-keyed delta takes
+//! exactly one unit lock, so S shards serve S disjoint prefix ranges
+//! concurrently instead of convoying on the global mutex.
+//!
+//! **Invariants.**
+//! * *Per-shard order.* A unit's tree-apply order and its log-append
+//!   order are the same order — both happen under one hold of that
+//!   unit's lock. Followers replay per-shard streams, so this is the
+//!   only order replication correctness needs.
+//! * *Epoch-fenced broadcasts.* Cross-shard events (membership, drain
+//!   toggles, whole-view expiries) take every unit lock in ascending
+//!   index order — the fence — so all shards observe the event at a
+//!   single cut of their streams and two concurrent broadcasts cannot
+//!   interleave differently on different shards (a Leave/SetDraining
+//!   pair must agree everywhere). `all_epoch` numbers the fences.
+//! * *Lock order.* `followers` roster before any unit; units strictly
+//!   ascending; never acquire the roster while holding a unit. Fabric
+//!   sends happen with NO plane lock held (a `real_sleep` fabric
+//!   actually sleeps on the wire — routing must not wait on it).
+//! * *Registry agreement.* Every unit's 1-shard scheduler carries the
+//!   full instance registry (broadcasts fan to all units), so any unit
+//!   can answer registry reads (`is_draining`) and a one-unit route
+//!   still considers every routable instance — which is exactly why a
+//!   unit's decisions are bit-identical to the monolithic scheduler's
+//!   for prompts of its shard (pinned by tests below and by the
+//!   fig15 `threads` mode).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::Result;
+
+use crate::elastic::delta::DeltaEvent;
+use crate::elastic::planner::{
+    plan_migration_from, MigrationPlan, PlannerConfig, Recipient,
+};
+use crate::mempool::InstanceId;
+use crate::net::Fabric;
+use crate::replica::log::DeltaTransport;
+use crate::replica::snapshot::TreeSnapshot;
+use crate::scheduler::prompt_tree::GlobalPromptTrees;
+use crate::scheduler::router::{
+    GlobalScheduler, InstanceLoad, RouteOutcome,
+};
+use crate::scheduler::shard::{ShardMap, ShardRoute};
+use crate::server::message::Msg;
+use crate::server::replica::GS_WINDOW;
+
+/// One shard's slice of the data plane: its 1-shard scheduler (tree +
+/// load book) and its sequenced replication log, locked together so
+/// apply order and log order can never invert.
+pub struct GsUnit {
+    pub gs: GlobalScheduler,
+    pub log: DeltaTransport,
+}
+
+/// What [`GsDataPlane::restore_promoted`] did with a promotion
+/// snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PromotionRestore {
+    /// Snapshot restored and topped up from the retained log suffix.
+    Restored,
+    /// Snapshot predates the retained log — replaying would leave a
+    /// silent hole; dropped.
+    Stale,
+    /// Shard index out of range; dropped.
+    OutOfRange,
+}
+
+pub struct GsDataPlane {
+    units: Vec<Mutex<GsUnit>>,
+    map: ShardMap,
+    /// Replication roster, shared by every unit's log. Lock order:
+    /// before any unit lock; snapshot-and-release on hot paths.
+    followers: Mutex<Vec<InstanceId>>,
+    /// Fence counter: bumped once per cross-shard broadcast.
+    all_epoch: AtomicU64,
+    ttl: f64,
+}
+
+impl GsDataPlane {
+    /// Build the plane from per-shard 1-shard schedulers (the caller
+    /// seeds each with identical config knobs and the full registry).
+    pub fn new(
+        block_tokens: usize,
+        ttl: f64,
+        schedulers: Vec<GlobalScheduler>,
+        followers: Vec<InstanceId>,
+    ) -> Self {
+        let shards = schedulers.len().max(1);
+        let units = schedulers
+            .into_iter()
+            .map(|gs| {
+                let mut log = DeltaTransport::new(GS_WINDOW);
+                for f in &followers {
+                    log.register(f.0 as u64, 0);
+                }
+                Mutex::new(GsUnit { gs, log })
+            })
+            .collect();
+        GsDataPlane {
+            units,
+            map: ShardMap::new(shards, block_tokens),
+            followers: Mutex::new(followers),
+            all_epoch: AtomicU64::new(0),
+            ttl,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Completed cross-shard fences so far.
+    pub fn broadcast_epoch(&self) -> u64 {
+        self.all_epoch.load(Ordering::Relaxed)
+    }
+
+    pub fn followers(&self) -> Vec<InstanceId> {
+        self.followers.lock().unwrap().clone()
+    }
+
+    pub fn is_registered(&self, f: InstanceId) -> bool {
+        self.followers.lock().unwrap().contains(&f)
+    }
+
+    fn unit(&self, s: usize) -> MutexGuard<'_, GsUnit> {
+        self.units[s].lock().unwrap()
+    }
+
+    /// All unit locks, ascending — the broadcast fence.
+    fn lock_all(&self) -> Vec<MutexGuard<'_, GsUnit>> {
+        self.units.iter().map(|u| u.lock().unwrap()).collect()
+    }
+
+    /// Seed every unit's log with a pre-start backlog event (roster
+    /// Joins) without touching the trees — the caller already built
+    /// the registry into each scheduler.
+    pub fn seed_log_all(&self, ev: DeltaEvent) {
+        for u in &self.units {
+            u.lock().unwrap().log.append(ev.clone());
+        }
+    }
+
+    /// Route one request on the shard owning its prefix chain: one
+    /// unit lock, loads pushed, decision out. Other shards keep
+    /// routing concurrently.
+    pub fn route_request(
+        &self,
+        prompt: &[u32],
+        session: u64,
+        now: f64,
+        loads: &[(InstanceId, InstanceLoad)],
+    ) -> Result<RouteOutcome> {
+        let s = self.map.shard_of_tokens(prompt).unwrap_or(0);
+        let mut u = self.unit(s);
+        for &(id, load) in loads {
+            u.gs.set_load(id, load);
+        }
+        u.gs.route(prompt, session, now)
+    }
+
+    /// The single write path of the replicated global prompt tree:
+    /// apply each delta to its shard's tree and append it to that
+    /// shard's log under ONE hold of the unit lock, then ship sendable
+    /// windows with no lock held. A batch containing any cross-shard
+    /// event takes the epoch fence (all units, ascending) for the
+    /// whole batch so every shard sees the same relative order.
+    pub fn apply_batch(
+        &self,
+        evs: impl IntoIterator<Item = DeltaEvent>,
+        fabric: &Fabric<Msg>,
+        leader: InstanceId,
+    ) {
+        let evs: Vec<DeltaEvent> = evs.into_iter().collect();
+        if evs.is_empty() {
+            return;
+        }
+        let followers = self.followers();
+        let replicate = !followers.is_empty();
+        let any_all = evs
+            .iter()
+            .any(|ev| matches!(self.map.route(ev), ShardRoute::All));
+        let mut touched: Vec<usize> = vec![];
+        if any_all {
+            self.all_epoch.fetch_add(1, Ordering::Relaxed);
+            let mut guards = self.lock_all();
+            for ev in &evs {
+                match self.map.route(ev) {
+                    ShardRoute::One(s) => {
+                        guards[s].gs.trees.apply_delta(ev);
+                        if replicate {
+                            guards[s].log.append(ev.clone());
+                        }
+                    }
+                    ShardRoute::All => {
+                        for g in guards.iter_mut() {
+                            g.gs.trees.apply_delta(ev);
+                            if replicate {
+                                g.log.append(ev.clone());
+                            }
+                        }
+                    }
+                }
+            }
+            touched.extend(0..self.units.len());
+        } else {
+            // Shard-keyed only: group by unit, preserving relative
+            // order within each shard's slice of the batch.
+            let mut per: HashMap<usize, Vec<&DeltaEvent>> = HashMap::new();
+            for ev in &evs {
+                if let ShardRoute::One(s) = self.map.route(ev) {
+                    per.entry(s).or_default().push(ev);
+                }
+            }
+            let mut shards: Vec<usize> = per.keys().copied().collect();
+            shards.sort_unstable();
+            for s in shards {
+                let mut u = self.unit(s);
+                for ev in &per[&s] {
+                    u.gs.trees.apply_delta(ev);
+                    if replicate {
+                        u.log.append((*ev).clone());
+                    }
+                }
+                touched.push(s);
+            }
+        }
+        if replicate {
+            self.flush_shards(&touched, &followers, fabric, leader);
+        }
+    }
+
+    /// Ship the sendable windows of `shards` to every follower.
+    /// Messages are collected under each unit's lock but sent with no
+    /// lock held; a follower whose endpoint is gone is deregistered
+    /// from every shard so it cannot stall log truncation.
+    pub fn flush_shards(
+        &self,
+        shards: &[usize],
+        followers: &[InstanceId],
+        fabric: &Fabric<Msg>,
+        leader: InstanceId,
+    ) {
+        let mut dead: Vec<InstanceId> = vec![];
+        for &s in shards {
+            let msgs: Vec<(InstanceId, u64, DeltaEvent)> = {
+                let mut u = self.unit(s);
+                let mut out = vec![];
+                for &f in followers {
+                    let peer = f.0 as u64;
+                    let range = u.log.sendable(peer);
+                    if range.is_empty() {
+                        continue;
+                    }
+                    for seq in range.clone() {
+                        let ev = u
+                            .log
+                            .get(seq)
+                            .expect("sendable entry retained")
+                            .clone();
+                        out.push((f, seq, ev));
+                    }
+                    u.log.mark_sent(peer, range.end);
+                }
+                let floor = u.log.min_acked();
+                u.log.truncate_below(floor);
+                out
+            };
+            for (f, seq, ev) in msgs {
+                if dead.contains(&f) {
+                    continue;
+                }
+                if fabric
+                    .send(leader, f, Msg::Delta { shard: s, seq, ev })
+                    .is_err()
+                {
+                    dead.push(f);
+                }
+            }
+        }
+        for f in dead {
+            log::warn!("GS follower {f} unreachable; dropping replica");
+            self.deregister_follower(f);
+        }
+    }
+
+    /// Flush every shard (the seed-backlog and rejoin paths).
+    pub fn flush_all(&self, fabric: &Fabric<Msg>, leader: InstanceId) {
+        let followers = self.followers();
+        if followers.is_empty() {
+            return;
+        }
+        let shards: Vec<usize> = (0..self.units.len()).collect();
+        self.flush_shards(&shards, &followers, fabric, leader);
+    }
+
+    /// A follower's coalesced cumulative ack / gap re-request on one
+    /// shard's stream: advance (or rewind) its cursor, then ship
+    /// whatever became sendable.
+    pub fn on_ack(
+        &self,
+        shard: usize,
+        from: InstanceId,
+        next: u64,
+        fabric: &Fabric<Msg>,
+        leader: InstanceId,
+    ) {
+        if shard >= self.units.len() {
+            return;
+        }
+        self.unit(shard).log.on_ack(from.0 as u64, next);
+        let followers = self.followers();
+        if !followers.is_empty() {
+            self.flush_shards(&[shard], &followers, fabric, leader);
+        }
+    }
+
+    /// (Re-)register a follower on every shard at the retained floor —
+    /// the rejoin-as-follower path; the snapshot bootstrap covers the
+    /// truncated gap.
+    pub fn register_follower(&self, f: InstanceId) {
+        let mut roster = self.followers.lock().unwrap();
+        if roster.contains(&f) {
+            return;
+        }
+        for u in &self.units {
+            let mut u = u.lock().unwrap();
+            let from = u.log.first_retained();
+            u.log.register(f.0 as u64, from);
+        }
+        roster.push(f);
+    }
+
+    /// Drop a follower from every shard's peer set (heartbeat-miss
+    /// suspicion or send failure) so it cannot stall truncation.
+    pub fn deregister_follower(&self, f: InstanceId) {
+        let mut roster = self.followers.lock().unwrap();
+        for u in &self.units {
+            u.lock().unwrap().log.deregister(f.0 as u64);
+        }
+        roster.retain(|x| *x != f);
+    }
+
+    /// The follower holding `shard`'s longest applied prefix (that
+    /// shard's promotion target).
+    pub fn most_caught_up(&self, shard: usize) -> Option<InstanceId> {
+        let roster = self.followers.lock().unwrap().clone();
+        let u = self.unit(shard);
+        roster
+            .iter()
+            .copied()
+            .max_by_key(|f| {
+                (u.log.acked(f.0 as u64).unwrap_or(0), u32::MAX - f.0)
+            })
+    }
+
+    /// Aggregated replication status: (sum of shard log heads,
+    /// per-follower summed acked sequences).
+    pub fn replication_status(&self) -> (u64, Vec<(InstanceId, u64)>) {
+        let roster = self.followers();
+        let mut head = 0u64;
+        let mut acks: Vec<(InstanceId, u64)> =
+            roster.iter().map(|f| (*f, 0)).collect();
+        for u in &self.units {
+            let u = u.lock().unwrap();
+            head += u.log.next_seq();
+            for (f, a) in acks.iter_mut() {
+                *a += u.log.acked(f.0 as u64).unwrap_or(0);
+            }
+        }
+        (head, acks)
+    }
+
+    /// One shard's replication status: (log head, per-follower acked).
+    pub fn shard_status(&self, shard: usize) -> (u64, Vec<(InstanceId, u64)>) {
+        let roster = self.followers();
+        let u = self.unit(shard);
+        let head = u.log.next_seq();
+        let acks = roster
+            .iter()
+            .map(|f| (*f, u.log.acked(f.0 as u64).unwrap_or(0)))
+            .collect();
+        (head, acks)
+    }
+
+    /// Capture `shard`'s tree at its log head for a follower bootstrap
+    /// (`SnapshotReq`), skipping that follower's cursor to the head so
+    /// streaming resumes past the snapshot. Both under one unit hold
+    /// so no delta lands in between.
+    pub fn snapshot_for(
+        &self,
+        shard: usize,
+        from: InstanceId,
+    ) -> Option<TreeSnapshot> {
+        if shard >= self.units.len() {
+            return None;
+        }
+        let mut u = self.unit(shard);
+        let seq = u.log.next_seq();
+        u.log.skip_to(from.0 as u64, seq);
+        Some(TreeSnapshot::capture(u.gs.trees.shard(0), seq))
+    }
+
+    /// Restore a promoted follower's shard snapshot: replay the
+    /// retained log suffix past it, install the tree, re-warm routing
+    /// for the shard's prefix range.
+    pub fn restore_promoted(
+        &self,
+        shard: usize,
+        snap: &TreeSnapshot,
+    ) -> PromotionRestore {
+        if shard >= self.units.len() {
+            return PromotionRestore::OutOfRange;
+        }
+        let mut u = self.unit(shard);
+        if snap.seq < u.log.first_retained() {
+            return PromotionRestore::Stale;
+        }
+        let mut fresh = snap.restore(self.ttl);
+        for seq in snap.seq..u.log.next_seq() {
+            if let Some(ev) = u.log.get(seq) {
+                // Clone out of the log so the tree can apply while the
+                // unit stays borrowed.
+                let ev = ev.clone();
+                fresh.apply_delta(&ev);
+            }
+        }
+        u.gs.trees.set_shard_tree(0, fresh);
+        u.gs.set_shard_degraded(0, false);
+        PromotionRestore::Restored
+    }
+
+    /// Replace one shard's tree wholesale (crash injection: the
+    /// primary's slice dies and is rebuilt from bare membership).
+    pub fn set_shard_tree(&self, shard: usize, tree: GlobalPromptTrees) {
+        self.unit(shard).gs.trees.set_shard_tree(0, tree);
+    }
+
+    pub fn set_shard_degraded(&self, shard: usize, degraded: bool) {
+        self.unit(shard).gs.set_shard_degraded(0, degraded);
+    }
+
+    pub fn is_shard_degraded(&self, shard: usize) -> bool {
+        self.unit(shard).gs.is_shard_degraded(0)
+    }
+
+    /// TTL housekeeping, shard by shard — expiry is shard-local, so no
+    /// fence: each unit expires under its own lock.
+    pub fn expire(&self, now: f64) {
+        for u in &self.units {
+            u.lock().unwrap().gs.expire(now);
+        }
+    }
+
+    /// Registry read: broadcasts keep every unit's registry identical,
+    /// so unit 0 answers for the plane.
+    pub fn is_draining(&self, id: InstanceId) -> bool {
+        self.unit(0).gs.trees.is_draining(id)
+    }
+
+    /// Token-blocks the global view credits each of `ids` with, summed
+    /// across shards — one pass, S short lock holds (not |ids| × S).
+    pub fn cached_blocks_for(
+        &self,
+        ids: &[InstanceId],
+    ) -> HashMap<InstanceId, usize> {
+        let mut out: HashMap<InstanceId, usize> =
+            ids.iter().map(|id| (*id, 0)).collect();
+        for u in &self.units {
+            let u = u.lock().unwrap();
+            for (id, n) in out.iter_mut() {
+                *n += u.gs.trees.cached_blocks(*id);
+            }
+        }
+        out
+    }
+
+    /// Plan a drain across the per-shard trees: inventory is the
+    /// concatenation of per-unit `owned_paths`, replication probes
+    /// route to the unit owning the prefix. All units are locked
+    /// (ascending) for the plan so it sees one consistent cut.
+    pub fn plan_drain(
+        &self,
+        donor: InstanceId,
+        now: f64,
+        recipients: &[Recipient],
+        cfg: &PlannerConfig,
+    ) -> MigrationPlan {
+        let guards = self.lock_all();
+        let inventory = guards
+            .iter()
+            .flat_map(|g| g.gs.trees.owned_paths(donor))
+            .collect();
+        plan_migration_from(
+            inventory,
+            |id, tokens| {
+                let s = self.map.shard_of_tokens(tokens).unwrap_or(0);
+                guards[s].gs.trees.match_one(id, tokens)
+            },
+            donor,
+            now,
+            recipients,
+            cfg,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::cost_model::OperatorCostModel;
+    use crate::scheduler::policy::PolicyKind;
+    use crate::scheduler::prompt_tree::InstanceKind;
+    use crate::scheduler::shard::ShardedPromptTrees;
+
+    const BT: usize = 4;
+
+    fn plane(shards: usize, n_inst: u32) -> GsDataPlane {
+        let scheds = (0..shards)
+            .map(|_| {
+                let mut gs = GlobalScheduler::new(
+                    PolicyKind::PromptTree,
+                    OperatorCostModel::paper_13b(),
+                    BT,
+                    0.0,
+                );
+                for i in 0..n_inst {
+                    gs.add_instance(
+                        InstanceId(i),
+                        InstanceKind::PrefillOnly,
+                    );
+                }
+                gs
+            })
+            .collect();
+        GsDataPlane::new(BT, 0.0, scheds, vec![])
+    }
+
+    fn toks(blocks: usize, seed: u32) -> Vec<u32> {
+        (0..(blocks * BT) as u32)
+            .map(|i| i.wrapping_mul(7).wrapping_add(seed * 131) % 9)
+            .collect()
+    }
+
+    fn apply_local(p: &GsDataPlane, ev: &DeltaEvent) {
+        // Test-only apply without a fabric: same routing as
+        // apply_batch with no followers (nothing to flush).
+        match p.map().route(ev) {
+            ShardRoute::One(s) => {
+                p.unit(s).gs.trees.apply_delta(ev);
+            }
+            ShardRoute::All => {
+                p.all_epoch.fetch_add(1, Ordering::Relaxed);
+                for g in p.lock_all().iter_mut() {
+                    g.gs.trees.apply_delta(ev);
+                }
+            }
+        }
+    }
+
+    /// Shard-keyed writes touch one unit; broadcasts bump the epoch
+    /// fence and land on every unit.
+    #[test]
+    fn one_routed_writes_are_shard_local() {
+        let p = plane(4, 2);
+        let rec = DeltaEvent::Record {
+            instance: InstanceId(0),
+            tokens: toks(2, 3),
+            now: 1.0,
+        };
+        let home = p.map().shard_of_tokens(&toks(2, 3)).unwrap();
+        let before = p.broadcast_epoch();
+        apply_local(&p, &rec);
+        assert_eq!(p.broadcast_epoch(), before, "no fence for One(k)");
+        for s in 0..4 {
+            let u = p.unit(s);
+            let blocks = u.gs.trees.cached_blocks(InstanceId(0));
+            assert_eq!(blocks, if s == home { 2 } else { 0 });
+        }
+        apply_local(&p, &DeltaEvent::SetDraining {
+            instance: InstanceId(1),
+            draining: true,
+        });
+        assert_eq!(p.broadcast_epoch(), before + 1, "broadcast fenced");
+        for s in 0..4 {
+            assert!(p.unit(s).gs.trees.is_draining(InstanceId(1)));
+        }
+        assert!(p.is_draining(InstanceId(1)));
+    }
+
+    /// The plane's per-unit route equals the monolithic S-shard
+    /// scheduler's decision for every prompt — the sharded-lock
+    /// bit-identity claim.
+    #[test]
+    fn plane_routes_match_monolithic() {
+        let n_inst = 6u32;
+        let p = plane(4, n_inst);
+        let mut mono = GlobalScheduler::with_shards(
+            PolicyKind::PromptTree,
+            OperatorCostModel::paper_13b(),
+            BT,
+            0.0,
+            4,
+        );
+        for i in 0..n_inst {
+            mono.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+        }
+        for r in 0..24u32 {
+            let ev = DeltaEvent::Record {
+                instance: InstanceId(r % n_inst),
+                tokens: toks(1 + (r as usize % 3), r),
+                now: 1.0,
+            };
+            apply_local(&p, &ev);
+            mono.trees.apply_delta(&ev);
+        }
+        let loads: Vec<(InstanceId, InstanceLoad)> = (0..n_inst)
+            .map(|i| {
+                (
+                    InstanceId(i),
+                    InstanceLoad {
+                        queued_tokens: (i as usize * 53) % 700,
+                        ..Default::default()
+                    },
+                )
+            })
+            .collect();
+        for q in 0..40u32 {
+            let prompt = toks(2, q % 17);
+            for &(id, l) in &loads {
+                mono.set_load(id, l);
+            }
+            let want = mono.route(&prompt, q as u64, 2.0).unwrap();
+            let got = p
+                .route_request(&prompt, q as u64, 2.0, &loads)
+                .unwrap();
+            assert_eq!(got.decision, want.decision, "prompt {q}");
+        }
+    }
+
+    /// `plan_drain` over per-shard trees equals `plan_migration` over
+    /// the monolithic sharded view — same inventory, same probes, same
+    /// deterministic order.
+    #[test]
+    fn plan_drain_matches_monolithic_planner() {
+        let n_inst = 4u32;
+        let p = plane(2, n_inst);
+        let mut trees = ShardedPromptTrees::with_shards(BT, 0.0, 2);
+        for i in 0..n_inst {
+            trees.add_instance(InstanceId(i), InstanceKind::PrefillOnly);
+        }
+        for r in 0..20u32 {
+            let ev = DeltaEvent::Record {
+                instance: InstanceId(r % n_inst),
+                tokens: toks(1 + (r as usize % 4), r * 3),
+                now: r as f64,
+            };
+            apply_local(&p, &ev);
+            trees.apply_delta(&ev);
+        }
+        let recipients: Vec<Recipient> = (1..n_inst)
+            .map(|i| Recipient {
+                id: InstanceId(i),
+                pressure: i as f64 / 10.0,
+            })
+            .collect();
+        let cfg = PlannerConfig::default();
+        let want = crate::elastic::planner::plan_migration(
+            &trees,
+            InstanceId(0),
+            30.0,
+            &recipients,
+            &cfg,
+        );
+        let got = p.plan_drain(InstanceId(0), 30.0, &recipients, &cfg);
+        assert_eq!(got.tasks, want.tasks);
+        assert_eq!(got.planned_blocks, want.planned_blocks);
+        assert_eq!(got.dropped_blocks, want.dropped_blocks);
+        assert_eq!(got.replicated_blocks, want.replicated_blocks);
+    }
+
+    /// Follower bookkeeping: register/deregister span every unit; the
+    /// promotion target tracks per-shard acks.
+    #[test]
+    fn follower_roster_spans_every_unit() {
+        let p = plane(2, 1);
+        let f = crate::server::replica::follower_id(0);
+        assert!(!p.is_registered(f));
+        p.register_follower(f);
+        assert!(p.is_registered(f));
+        p.register_follower(f); // idempotent
+        assert_eq!(p.followers().len(), 1);
+        p.seed_log_all(DeltaEvent::Join {
+            instance: InstanceId(0),
+            kind: InstanceKind::PrefillOnly,
+        });
+        let (head, acks) = p.replication_status();
+        assert_eq!(head, 2, "one seed entry per shard log");
+        assert_eq!(acks, vec![(f, 0)]);
+        p.unit(1).log.on_ack(f.0 as u64, 1);
+        assert_eq!(p.most_caught_up(1), Some(f));
+        let (h1, a1) = p.shard_status(1);
+        assert_eq!((h1, a1), (1, vec![(f, 1)]));
+        p.deregister_follower(f);
+        assert!(!p.is_registered(f));
+        assert_eq!(p.most_caught_up(0), None);
+    }
+}

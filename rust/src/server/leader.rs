@@ -15,7 +15,7 @@ use crate::cluster::ClusterManager;
 use crate::config::Config;
 use crate::elastic::delta::DeltaEvent;
 use crate::elastic::lifecycle::Lifecycle;
-use crate::elastic::planner::{plan_migration, PlannerConfig, Recipient};
+use crate::elastic::planner::{PlannerConfig, Recipient};
 use crate::engine::{DisaggMilestone, Request, SamplingParams};
 use crate::mempool::{BlockGeometry, InstanceId};
 use crate::metrics::{Metrics, RequestRecord};
@@ -25,12 +25,10 @@ use crate::runtime::ModelRuntime;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
-use crate::scheduler::shard::ShardedPromptTrees;
+use crate::server::data_plane::{GsDataPlane, PromotionRestore};
 use crate::server::instance::{run_instance, InstanceConfig};
 use crate::server::message::Msg;
-use crate::server::replica::{
-    follower_id, run_gs_follower, GsReplication,
-};
+use crate::server::replica::{follower_id, run_gs_follower};
 use crate::tokenizer::Tokenizer;
 
 const LEADER: InstanceId = InstanceId(u32::MAX);
@@ -188,7 +186,11 @@ pub struct DrainReport {
 
 pub struct ServeCluster {
     fabric: Fabric<Msg>,
-    gs: Mutex<GlobalScheduler>,
+    /// The sharded GS data plane (ISSUE 7): per-shard units each
+    /// holding that shard's tree + replication log behind their own
+    /// lock, so routes and prefix-keyed deltas for different shards
+    /// never contend. Cross-shard ops are epoch-fenced broadcasts.
+    plane: GsDataPlane,
     cm: Mutex<ClusterManager>,
     shared: Arc<Shared>,
     /// Live roster (grows on `join`, shrinks on `drain`).
@@ -201,11 +203,8 @@ pub struct ServeCluster {
     /// finishing — so [`Self::drain`] waits event-driven instead of
     /// polling.
     drain_cv: Condvar,
-    /// GS replication: one sequenced delta transport per prefix-range
-    /// shard + the follower roster. Lock order: `gs` before this.
-    replication: Mutex<GsReplication>,
-    /// Heartbeat failure detector (ISSUE 6). Lock order: after `gs`,
-    /// never held across a `replication` acquisition.
+    /// Heartbeat failure detector (ISSUE 6). Lock order: never held
+    /// across a plane-lock acquisition.
     gs_health: Mutex<GsHealth>,
     /// Migration-id dedupe window (replayed MigrateLanded acks).
     landed_mids: Mutex<SeenMids>,
@@ -259,17 +258,25 @@ impl ServeCluster {
                     .unwrap_or(cost);
             }
         }
-        let mut gs = GlobalScheduler::with_shards(
-            cfgc.scheduler.policy,
-            cost,
-            geom.block_tokens,
-            cfgc.scheduler.tree_ttl_s,
-            cfgc.scheduler.gs_shards,
-        );
-        gs.bytes_per_token = geom.floats_per_token() * 4;
-        gs.bandwidth_bytes_per_s = cfgc.fabric.bandwidth_gbps * 1e9;
-        gs.per_call_s = cfgc.fabric.call_overhead_us * 1e-6;
-        gs.transfer_decision_enabled = cfgc.scheduler.transfer_decision;
+        // One 1-shard scheduler per data-plane unit, all with the same
+        // knobs; each unit's tree carries its prefix-range slice plus
+        // the full registry (broadcast membership).
+        let gs_shards = cfgc.scheduler.gs_shards.max(1);
+        let make_gs = |cost: OperatorCostModel| {
+            let mut gs = GlobalScheduler::new(
+                cfgc.scheduler.policy,
+                cost,
+                geom.block_tokens,
+                cfgc.scheduler.tree_ttl_s,
+            );
+            gs.bytes_per_token = geom.floats_per_token() * 4;
+            gs.bandwidth_bytes_per_s = cfgc.fabric.bandwidth_gbps * 1e9;
+            gs.per_call_s = cfgc.fabric.call_overhead_us * 1e-6;
+            gs.transfer_decision_enabled = cfgc.scheduler.transfer_decision;
+            gs
+        };
+        let mut unit_schedulers: Vec<GlobalScheduler> =
+            (0..gs_shards).map(|_| make_gs(cost.clone())).collect();
 
         let mut cm = ClusterManager::new(
             cfgc.cluster.heartbeat_ms / 1e3,
@@ -292,7 +299,9 @@ impl ServeCluster {
         }
         let mut lifecycle = Lifecycle::new();
         for &(iid, kind) in &specs {
-            gs.add_instance(iid, kind);
+            for gs in &mut unit_schedulers {
+                gs.add_instance(iid, kind);
+            }
             cm.register(iid, kind, 0.0);
             lifecycle.join(iid, kind).expect("fresh roster");
         }
@@ -351,13 +360,15 @@ impl ServeCluster {
         let followers: Vec<InstanceId> = (0..cfgc.scheduler.gs_replicas)
             .map(follower_id)
             .collect();
-        let gs_shards = cfgc.scheduler.gs_shards;
-        let mut replication =
-            GsReplication::new(followers.clone(), gs_shards,
-                               geom.block_tokens);
+        let plane = GsDataPlane::new(
+            geom.block_tokens,
+            cfgc.scheduler.tree_ttl_s,
+            unit_schedulers,
+            followers.clone(),
+        );
         if !followers.is_empty() {
             for &(iid, kind) in &specs {
-                replication.append(DeltaEvent::Join {
+                plane.seed_log_all(DeltaEvent::Join {
                     instance: iid,
                     kind,
                 });
@@ -394,7 +405,7 @@ impl ServeCluster {
         };
         let cluster = Arc::new(ServeCluster {
             fabric,
-            gs: Mutex::new(gs),
+            plane,
             cm: Mutex::new(cm),
             shared,
             next_iid: AtomicU32::new(id),
@@ -402,7 +413,6 @@ impl ServeCluster {
             lifecycle: Mutex::new(lifecycle),
             drains: Mutex::new(HashMap::new()),
             drain_cv: Condvar::new(),
-            replication: Mutex::new(replication),
             gs_health: Mutex::new(gs_health),
             landed_mids: Mutex::new(SeenMids::default()),
             next_mid: AtomicU64::new(1),
@@ -420,11 +430,7 @@ impl ServeCluster {
         });
 
         // Ship the seed-roster backlog to the GS followers.
-        cluster
-            .replication
-            .lock()
-            .unwrap()
-            .flush(&cluster.fabric, LEADER);
+        cluster.plane.flush_all(&cluster.fabric, LEADER);
         // Collector thread: drains the leader endpoint.
         let c2 = cluster.clone();
         let h = std::thread::spawn(move || c2.collector(leader_ep));
@@ -446,38 +452,20 @@ impl ServeCluster {
         self.gs_apply_batch(std::iter::once(ev));
     }
 
-    /// Batch form. Tree-apply and log-append happen under ONE combined
-    /// critical section (`gs` then `replication`, the global lock
-    /// order): apply order and log order must never invert across
-    /// threads — concurrent appliers (collector records vs. a drain's
-    /// SetDraining/Leave) would otherwise replicate a different history
-    /// than the primary executed, and `apply_delta`'s order-sensitive
-    /// guards (e.g. a Handoff after the receiver's Leave) would
-    /// permanently diverge the followers. Each delta lands in its
-    /// prefix-range shard's tree AND that shard's log (the same
-    /// `ShardMap` routes both; membership fans to every shard), so S
-    /// shards carry ~1/S of the write stream each. The fabric flush
-    /// happens after the `gs` lock is released — flush order is
-    /// irrelevant (per-peer, per-shard cursors send by sequence), so
-    /// routing never waits on the wire.
+    /// Batch form, delegated to the sharded data plane: each delta's
+    /// tree-apply and log-append happen under ONE hold of its shard's
+    /// unit lock (apply order and log order must never invert across
+    /// threads — concurrent appliers would otherwise replicate a
+    /// different history than the primary executed), shard-keyed
+    /// batches touch only their units so S shards absorb ~1/S of the
+    /// write stream each without contending, and a batch carrying a
+    /// membership/whole-view event takes the epoch-fenced broadcast
+    /// path (all units, ascending) so every shard sees it at the same
+    /// cut. The fabric flush happens with no unit lock held — flush
+    /// order is irrelevant (per-peer, per-shard cursors send by
+    /// sequence), so routing never waits on the wire.
     fn gs_apply_batch(&self, evs: impl IntoIterator<Item = DeltaEvent>) {
-        let mut evs = evs.into_iter().peekable();
-        if evs.peek().is_none() {
-            return;
-        }
-        let mut gs = self.gs.lock().unwrap();
-        let mut rep = self.replication.lock().unwrap();
-        let replicate = !rep.followers.is_empty();
-        for ev in evs {
-            gs.trees.apply_delta(&ev);
-            if replicate {
-                rep.append(ev);
-            }
-        }
-        drop(gs);
-        if replicate {
-            rep.flush(&self.fabric, LEADER);
-        }
+        self.plane.apply_batch(evs, &self.fabric, LEADER);
     }
 
     fn collector(&self, ep: crate::net::Endpoint<Msg>) {
@@ -498,7 +486,8 @@ impl ServeCluster {
                 // Global-tree TTL housekeeping: heap-driven, so this is
                 // an O(1) peek when nothing is stale (routing also
                 // expires opportunistically; this covers idle periods).
-                self.gs.lock().unwrap().expire(now);
+                // Shard-local, so each unit expires under its own lock.
+                self.plane.expire(now);
             }
             let msg = match ep.recv_timeout(Duration::from_millis(20)) {
                 Ok((_, m)) => m,
@@ -593,11 +582,10 @@ impl ServeCluster {
                         // follower the replication layer dropped wires
                         // it back in; the SnapshotReq bootstrap path
                         // catches its stale cursor up.
-                        let mut rep = self.replication.lock().unwrap();
-                        if !rep.is_registered(from) {
+                        if !self.plane.is_registered(from) {
                             log::info!("GS follower {from} rejoined");
-                            rep.register_follower(from);
-                            rep.flush(&self.fabric, LEADER);
+                            self.plane.register_follower(from);
+                            self.plane.flush_all(&self.fabric, LEADER);
                         }
                     } else {
                         self.cm.lock().unwrap().heartbeat(from, now);
@@ -671,29 +659,18 @@ impl ServeCluster {
                     // GS follower on one shard's stream: advance (or
                     // rewind) that shard's cursor, ship whatever became
                     // sendable, truncate behind the slowest replica.
-                    let mut rep = self.replication.lock().unwrap();
-                    if shard < rep.shards.len() {
-                        rep.shards[shard].on_ack(from.0 as u64, next);
-                        rep.flush(&self.fabric, LEADER);
-                    }
+                    // Touches that shard's unit only.
+                    self.plane
+                        .on_ack(shard, from, next, &self.fabric, LEADER);
                 }
                 Msg::SnapshotReq { from, shard } => {
                     // A follower shard fell behind the retained log (or
                     // joined late): bootstrap it at that shard's
-                    // current head. Captured under both locks so no
-                    // delta lands in between.
-                    let snap = {
-                        let gs = self.gs.lock().unwrap();
-                        let mut rep = self.replication.lock().unwrap();
-                        if shard >= rep.shards.len() {
-                            continue;
-                        }
-                        let seq = rep.shards[shard].next_seq();
-                        rep.shards[shard].skip_to(from.0 as u64, seq);
-                        crate::replica::TreeSnapshot::capture(
-                            gs.trees.shard(shard),
-                            seq,
-                        )
+                    // current head. Tree and log are read under one
+                    // unit hold so no delta lands in between.
+                    let Some(snap) = self.plane.snapshot_for(shard, from)
+                    else {
+                        continue;
                     };
                     let _ = self
                         .fabric
@@ -723,40 +700,26 @@ impl ServeCluster {
                                      snapshot for shard {shard}");
                         continue;
                     }
-                    {
-                        let mut gs = self.gs.lock().unwrap();
-                        let rep = self.replication.lock().unwrap();
-                        if shard >= rep.shards.len() {
-                            continue;
-                        }
-                        // Staleness guard: a late reply from an earlier
-                        // (timed-out) promotion round can arrive after
-                        // followers acked past its seq and truncation
-                        // dropped the prefix. Restoring it would replay
-                        // `snap.seq..head` with a silent hole — roll
-                        // the shard back and permanently lose the
-                        // truncated deltas. Ignore it and keep waiting
-                        // for the current round's reply.
-                        if snap.seq < rep.shards[shard].first_retained() {
+                    // Staleness guard: a late reply from an earlier
+                    // (timed-out) promotion round can arrive after
+                    // followers acked past its seq and truncation
+                    // dropped the prefix. Restoring it would replay
+                    // `snap.seq..head` with a silent hole — roll the
+                    // shard back and permanently lose the truncated
+                    // deltas. The plane restores (and re-warms routing
+                    // for the shard's prefix range) only a fresh
+                    // snapshot, under one hold of that shard's unit.
+                    match self.plane.restore_promoted(shard, &snap) {
+                        PromotionRestore::Restored => {}
+                        PromotionRestore::Stale => {
                             log::warn!(
                                 "ignoring stale promotion snapshot for \
-                                 shard {shard} (seq {} < retained {})",
+                                 shard {shard} (seq {})",
                                 snap.seq,
-                                rep.shards[shard].first_retained()
                             );
                             continue;
                         }
-                        let ttl = self.opts.config.scheduler.tree_ttl_s;
-                        let mut fresh = snap.restore(ttl);
-                        for seq in snap.seq..rep.shards[shard].next_seq() {
-                            if let Some(ev) = rep.shards[shard].get(seq) {
-                                fresh.apply_delta(ev);
-                            }
-                        }
-                        gs.trees.set_shard_tree(shard, fresh);
-                        // Re-warm: the router may resume tree-guided
-                        // placement for this shard's prefix range.
-                        gs.set_shard_degraded(shard, false);
+                        PromotionRestore::OutOfRange => continue,
                     }
                     {
                         let mut health = self.gs_health.lock().unwrap();
@@ -888,44 +851,49 @@ impl ServeCluster {
                 .map(|(i, _)| *i)
                 .collect()
         };
-        let outcome = {
-            let mut gs = self.gs.lock().unwrap();
-            // Loads: in-flight prompt tokens per instance, plus the
-            // capacity-pressure estimate from the global tree's cached-
-            // block counters (Eq. 1 discounts churning cache holders).
-            // Pushed into the scheduler's load book — an unchanged load
-            // is an O(1) no-op there, and the capped cold sample reads
-            // the book's policy ordering instead of ranking the fleet.
-            let queued: HashMap<InstanceId, usize> = {
-                let pend = self.shared.pending.lock().unwrap();
-                let mut q: HashMap<InstanceId, usize> = HashMap::new();
-                for e in pend.values() {
-                    if !e.done {
-                        *q.entry(e.dispatched_to).or_insert(0) +=
-                            e.prompt.len();
-                    }
+        // Loads: in-flight prompt tokens per instance, plus the
+        // capacity-pressure estimate from the global tree's cached-
+        // block counters (Eq. 1 discounts churning cache holders).
+        // Pushed into the routed unit's load book — an unchanged load
+        // is an O(1) no-op there, and the capped cold sample reads
+        // the book's policy ordering instead of ranking the fleet.
+        let queued: HashMap<InstanceId, usize> = {
+            let pend = self.shared.pending.lock().unwrap();
+            let mut q: HashMap<InstanceId, usize> = HashMap::new();
+            for e in pend.values() {
+                if !e.done {
+                    *q.entry(e.dispatched_to).or_insert(0) +=
+                        e.prompt.len();
                 }
-                q
-            };
-            for &(iid, _) in &roster {
-                let load = InstanceLoad {
+            }
+            q
+        };
+        let ids: Vec<InstanceId> = roster.iter().map(|(i, _)| *i).collect();
+        // Cached blocks are summed across shards in one plane pass (S
+        // short lock holds), before the routed unit's lock is taken.
+        let cached = self.plane.cached_blocks_for(&ids);
+        let loads: Vec<(InstanceId, InstanceLoad)> = roster
+            .iter()
+            .map(|&(iid, _)| {
+                (iid, InstanceLoad {
                     queued_tokens: queued.get(&iid).copied().unwrap_or(0),
                     queued_cached_ratio: 0.0,
                     running: 0,
-                    capacity_pressure: self
-                        .pressure_estimate(&gs.trees, iid),
-                };
-                gs.set_load(iid, load);
-            }
-            gs.route(&prompt, session, now)?
-        };
+                    capacity_pressure: self.pressure_from(
+                        cached.get(&iid).copied().unwrap_or(0),
+                    ),
+                })
+            })
+            .collect();
+        let outcome =
+            self.plane.route_request(&prompt, session, now, &loads)?;
         let target = outcome.decision.instance;
         anyhow::ensure!(
             alive.contains(&target),
             "routed to dead instance {target}"
         );
         debug_assert!(
-            !self.gs.lock().unwrap().trees.is_draining(target),
+            !self.plane.is_draining(target),
             "routed to draining instance {target}"
         );
         // Decode pairing for prefill-only targets: round-robin over
@@ -1022,35 +990,13 @@ impl ServeCluster {
     /// heads, per-follower summed acked sequences). Per-shard detail:
     /// [`Self::gs_shard_status`].
     pub fn gs_replication_status(&self) -> (u64, Vec<(InstanceId, u64)>) {
-        let rep = self.replication.lock().unwrap();
-        let head = rep.shards.iter().map(|t| t.next_seq()).sum();
-        let acks = rep
-            .followers
-            .iter()
-            .map(|f| {
-                let acked = rep
-                    .shards
-                    .iter()
-                    .map(|t| t.acked(f.0 as u64).unwrap_or(0))
-                    .sum();
-                (*f, acked)
-            })
-            .collect();
-        (head, acks)
+        self.plane.replication_status()
     }
 
     /// One shard's replication status: (log head, per-follower acked).
     pub fn gs_shard_status(&self, shard: usize)
                            -> (u64, Vec<(InstanceId, u64)>) {
-        let rep = self.replication.lock().unwrap();
-        let t = &rep.shards[shard];
-        let head = t.next_seq();
-        let acks = rep
-            .followers
-            .iter()
-            .map(|f| (*f, t.acked(f.0 as u64).unwrap_or(0)))
-            .collect();
-        (head, acks)
+        self.plane.shard_status(shard)
     }
 
     /// Crash the GS primary and fail over to follower replicas
@@ -1086,21 +1032,20 @@ impl ServeCluster {
         timeout: Duration,
     ) -> Result<Vec<(usize, InstanceId)>> {
         let targets: Vec<(usize, InstanceId)> = {
-            let rep = self.replication.lock().unwrap();
             let shards: Vec<usize> = match only {
                 Some(s) => {
                     anyhow::ensure!(
-                        s < rep.shard_count(),
+                        s < self.plane.shard_count(),
                         "shard {s} out of range (gs_shards = {})",
-                        rep.shard_count()
+                        self.plane.shard_count()
                     );
                     vec![s]
                 }
-                None => (0..rep.shard_count()).collect(),
+                None => (0..self.plane.shard_count()).collect(),
             };
             shards
                 .into_iter()
-                .map(|s| rep.most_caught_up(s).map(|t| (s, t)))
+                .map(|s| self.plane.most_caught_up(s).map(|t| (s, t)))
                 .collect::<Option<Vec<_>>>()
                 .context(
                     "no GS replicas configured (scheduler.gs_replicas)",
@@ -1132,21 +1077,18 @@ impl ServeCluster {
                 })
                 .collect()
         };
-        {
-            let mut gs = self.gs.lock().unwrap();
-            for &(shard, _) in &targets {
-                let mut fresh = GlobalPromptTrees::new(
-                    self.geom.block_tokens,
-                    self.opts.config.scheduler.tree_ttl_s,
-                );
-                for &(iid, kind, draining) in &members {
-                    fresh.add_instance(iid, kind);
-                    if draining {
-                        fresh.set_draining(iid, true);
-                    }
+        for &(shard, _) in &targets {
+            let mut fresh = GlobalPromptTrees::new(
+                self.geom.block_tokens,
+                self.opts.config.scheduler.tree_ttl_s,
+            );
+            for &(iid, kind, draining) in &members {
+                fresh.add_instance(iid, kind);
+                if draining {
+                    fresh.set_draining(iid, true);
                 }
-                gs.trees.set_shard_tree(shard, fresh);
             }
+            self.plane.set_shard_tree(shard, fresh);
         }
         for &(shard, target) in &targets {
             log::warn!(
@@ -1188,11 +1130,7 @@ impl ServeCluster {
                 if now < *next_retry {
                     continue;
                 }
-                let target = self
-                    .replication
-                    .lock()
-                    .unwrap()
-                    .most_caught_up(shard);
+                let target = self.plane.most_caught_up(shard);
                 if let Some(t) = target {
                     log::debug!(
                         "re-sending Promote for shard {shard} to {t} \
@@ -1228,18 +1166,15 @@ impl ServeCluster {
     /// shard re-warms. The shard's tree is immediately reduced to bare
     /// membership — exactly what the crash loses.
     pub fn inject_gs_shard_crash(&self, shard: usize) -> Result<()> {
-        {
-            let rep = self.replication.lock().unwrap();
-            anyhow::ensure!(
-                shard < rep.shard_count(),
-                "shard {shard} out of range (gs_shards = {})",
-                rep.shard_count()
-            );
-            anyhow::ensure!(
-                !rep.followers.is_empty(),
-                "no GS replicas configured (scheduler.gs_replicas)"
-            );
-        }
+        anyhow::ensure!(
+            shard < self.plane.shard_count(),
+            "shard {shard} out of range (gs_shards = {})",
+            self.plane.shard_count()
+        );
+        anyhow::ensure!(
+            !self.plane.followers().is_empty(),
+            "no GS replicas configured (scheduler.gs_replicas)"
+        );
         let roster = self.instances.read().unwrap().clone();
         let members: Vec<(InstanceId, InstanceKind, bool)> = {
             use crate::elastic::InstanceState;
@@ -1257,7 +1192,6 @@ impl ServeCluster {
                 .collect()
         };
         {
-            let mut gs = self.gs.lock().unwrap();
             let mut fresh = GlobalPromptTrees::new(
                 self.geom.block_tokens,
                 self.opts.config.scheduler.tree_ttl_s,
@@ -1268,7 +1202,7 @@ impl ServeCluster {
                     fresh.set_draining(iid, true);
                 }
             }
-            gs.trees.set_shard_tree(shard, fresh);
+            self.plane.set_shard_tree(shard, fresh);
         }
         let mut health = self.gs_health.lock().unwrap();
         let sh = &mut health.shards[shard];
@@ -1284,7 +1218,7 @@ impl ServeCluster {
     /// Is this shard's prefix range currently degraded (serving via
     /// load-only fallback while its promotion completes)?
     pub fn gs_shard_degraded(&self, shard: usize) -> bool {
-        self.gs.lock().unwrap().is_shard_degraded(shard)
+        self.plane.is_shard_degraded(shard)
     }
 
     /// The configured GS follower roster (for fault-plan targeting).
@@ -1355,15 +1289,14 @@ impl ServeCluster {
                 .collect()
         };
         if !lapsed.is_empty() {
-            let mut rep = self.replication.lock().unwrap();
             for f in lapsed {
-                if rep.is_registered(f) {
+                if self.plane.is_registered(f) {
                     log::warn!(
                         "GS follower {f} missed {} heartbeats; \
                          deregistering",
                         cfgc.heartbeat_misses
                     );
-                    rep.deregister_follower(f);
+                    self.plane.deregister_follower(f);
                 }
             }
         }
@@ -1397,14 +1330,10 @@ impl ServeCluster {
                      {window:.3}s); degrading its prefix range and \
                      promoting a follower"
                 );
-                self.gs
-                    .lock()
-                    .unwrap()
-                    .set_shard_degraded(shard, true);
+                self.plane.set_shard_degraded(shard, true);
                 self.promote_pending.lock().unwrap().insert(shard);
             }
-            let target =
-                self.replication.lock().unwrap().most_caught_up(shard);
+            let target = self.plane.most_caught_up(shard);
             if let Some(t) = target {
                 let _ = self.fabric.send(LEADER, t, Msg::Promote {
                     shard,
@@ -1475,18 +1404,15 @@ impl ServeCluster {
     }
 
     /// Capacity-pressure estimate from the GS's view: token-blocks the
-    /// global tree believes the instance caches, as a fraction of its
-    /// configured HBM capacity. An *estimate* — the GS never sees local
-    /// evictions — but the same best-effort bound the TTL already
-    /// leans on (§6 Discussion).
-    fn pressure_estimate(
-        &self,
-        trees: &ShardedPromptTrees,
-        id: InstanceId,
-    ) -> f64 {
+    /// global tree believes the instance caches (summed across plane
+    /// units by the caller), as a fraction of its configured HBM
+    /// capacity. An *estimate* — the GS never sees local evictions —
+    /// but the same best-effort bound the TTL already leans on (§6
+    /// Discussion).
+    fn pressure_from(&self, cached_token_blocks: usize) -> f64 {
         let per = self.geom.blocks_per_token_block().max(1);
         let cap = self.opts.config.mempool.hbm_blocks.max(1);
-        ((trees.cached_blocks(id) * per) as f64 / cap as f64).min(1.0)
+        ((cached_token_blocks * per) as f64 / cap as f64).min(1.0)
     }
 
     /// Scale up: spawn a fresh instance of `kind` and make it routable.
@@ -1605,19 +1531,24 @@ impl ServeCluster {
             draining: true,
         });
         let plan = {
-            let gs = self.gs.lock().unwrap();
-            let lc = self.lifecycle.lock().unwrap();
-            let recipients: Vec<Recipient> = lc
-                .active_where(|k| k.runs_prefill())
+            let receiver_ids: Vec<InstanceId> = {
+                let lc = self.lifecycle.lock().unwrap();
+                lc.active_where(|k| k.runs_prefill())
+                    .into_iter()
+                    .filter(|r| *r != id)
+                    .collect()
+            };
+            let cached = self.plane.cached_blocks_for(&receiver_ids);
+            let recipients: Vec<Recipient> = receiver_ids
                 .into_iter()
-                .filter(|r| *r != id)
                 .map(|rid| Recipient {
                     id: rid,
-                    pressure: self.pressure_estimate(&gs.trees, rid),
+                    pressure: self.pressure_from(
+                        cached.get(&rid).copied().unwrap_or(0),
+                    ),
                 })
                 .collect();
-            plan_migration(
-                &gs.trees,
+            self.plane.plan_drain(
                 id,
                 now,
                 &recipients,
@@ -1777,7 +1708,7 @@ impl ServeCluster {
         for &(iid, _) in &roster {
             let _ = self.fabric.send(LEADER, iid, Msg::Shutdown);
         }
-        let followers = self.replication.lock().unwrap().followers.clone();
+        let followers = self.plane.followers();
         for fid in followers {
             let _ = self.fabric.send(LEADER, fid, Msg::Shutdown);
         }

@@ -10,6 +10,7 @@
 //! Table 1 `flags`); the pre-negotiated-address handshake of Fig 2 is
 //! exercised by the transfer-mode benches and the simulator.
 
+pub mod data_plane;
 pub mod instance;
 pub mod leader;
 pub mod message;

@@ -136,6 +136,15 @@ pub struct SimReport {
     /// honest-eviction reporting, believed never exceeds actual
     /// (pre-ISSUE-4, only the TTL bounded the GS's over-belief).
     pub indexed_token_blocks: u64,
+    /// Deferred-touch queue counters summed over every instance index
+    /// (the `&self` match path queues LRU stamps; `&mut` ops drain
+    /// them). Dropped touches leave a leaf's access time *older* than
+    /// the truth, so the over-belief accounting stays one-sided: late
+    /// stamps can only make the LRU evict a hot leaf early — reported
+    /// honestly as an `Expire` — never keep a cold one alive.
+    pub touches_deferred: u64,
+    pub touches_drained: u64,
+    pub touches_dropped: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -501,6 +510,10 @@ impl Simulation {
             self.report.indexed_token_blocks +=
                 inst.index.total_token_blocks() as u64;
             self.report.evicted_blocks += inst.evicted_blocks;
+            let ts = inst.index.touch_stats();
+            self.report.touches_deferred += ts.deferred;
+            self.report.touches_drained += ts.drained;
+            self.report.touches_dropped += ts.dropped;
             assert!(
                 inst.prefill_q.is_empty()
                     && inst.active.is_empty()
@@ -1085,6 +1098,7 @@ impl Simulation {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mempool::DEFERRED_TOUCH_CAP;
     use crate::workload::WorkloadKind;
 
     fn workload_kind(kind: WorkloadKind, n: usize, seed: u64)
@@ -1513,6 +1527,26 @@ mod tests {
              indexed {}",
             rep.gs_believed_token_blocks,
             rep.indexed_token_blocks
+        );
+        // Deferred-touch accounting (ISSUE 7): the match path defers
+        // LRU stamps, `&mut` ops drain them. A drain can never refresh
+        // more than was queued, and the undrained backlog is bounded
+        // by each instance's queue capacity — late stamps are the only
+        // slack in the over-belief story above, and it is bounded.
+        assert!(
+            rep.touches_drained <= rep.touches_deferred,
+            "drained {} > deferred {}",
+            rep.touches_drained,
+            rep.touches_deferred
+        );
+        // pd_colocated runs 2 instances, each with one bounded queue.
+        let cap = DEFERRED_TOUCH_CAP as u64 * 2;
+        assert!(
+            rep.touches_deferred - rep.touches_drained <= cap,
+            "undrained touch backlog {} exceeds the per-instance queue \
+             bound {}",
+            rep.touches_deferred - rep.touches_drained,
+            cap
         );
     }
 

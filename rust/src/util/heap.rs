@@ -1,0 +1,69 @@
+//! Lazy-deletion heap maintenance policy — the ONE definition of the
+//! compaction threshold shared by the MemPool index's LRU victim heap
+//! (`mempool::index::RadixIndex`) and the fused prompt tree's TTL
+//! expiry heap (`scheduler::fused_tree::FusedPromptTree`).
+//!
+//! Both heaps invalidate entries lazily (a per-node stamp marks heap
+//! entries stale; stale entries are discarded at pop), so the heap can
+//! grow dominated by dead entries under churn. Each used to hard-code
+//! the same rebuild trigger — "more than 64 entries AND more than 4×
+//! the live population" — in two places (flagged as a PR 1 follow-up
+//! in ROADMAP.md); a drifting copy would silently change one heap's
+//! amortized complexity. The policy lives here once, with the boundary
+//! pinned by unit tests.
+//!
+//! Why these values: the 4× slack bounds wasted memory and pop-side
+//! stale-entry skips to a constant factor of the live set (amortized
+//! O(log n) per operation survives, since each compaction is O(heap)
+//! but at least 3/4 of the entries it scans are dead and were paid for
+//! by the pushes that created them). The floor of 64 keeps tiny heaps
+//! from compacting on every push — below it the whole heap fits in a
+//! couple of cache lines and rebuilds cost more than they save.
+
+/// Minimum heap length before compaction is ever considered.
+pub const LAZY_HEAP_COMPACT_MIN: usize = 64;
+
+/// Compact when the heap exceeds this multiple of the live entry count
+/// (dead entries then dominate at least (FACTOR-1)/FACTOR of the heap).
+pub const LAZY_HEAP_STALE_FACTOR: usize = 4;
+
+/// Should a lazy-deletion heap of `heap_len` entries, of which at most
+/// `live_entries` are still valid, be rebuilt now? (`live_entries + 1`
+/// keeps the empty-population case from compacting on every push.)
+#[inline]
+pub fn lazy_heap_needs_compact(heap_len: usize, live_entries: usize) -> bool {
+    heap_len > LAZY_HEAP_COMPACT_MIN
+        && heap_len > LAZY_HEAP_STALE_FACTOR * (live_entries + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_of_the_minimum_floor() {
+        // With zero live entries the factor term is satisfied from
+        // length 5 up — the floor alone gates until 65.
+        assert!(!lazy_heap_needs_compact(LAZY_HEAP_COMPACT_MIN, 0));
+        assert!(lazy_heap_needs_compact(LAZY_HEAP_COMPACT_MIN + 1, 0));
+    }
+
+    #[test]
+    fn boundary_of_the_stale_factor() {
+        // live = 31 → threshold is 4 * 32 = 128: exactly 128 entries
+        // must NOT compact, 129 must.
+        let live = 31;
+        let threshold = LAZY_HEAP_STALE_FACTOR * (live + 1);
+        assert!(threshold > LAZY_HEAP_COMPACT_MIN, "factor term governs");
+        assert!(!lazy_heap_needs_compact(threshold, live));
+        assert!(lazy_heap_needs_compact(threshold + 1, live));
+    }
+
+    #[test]
+    fn large_live_population_never_compacts_below_factor() {
+        // A heap tracking a big live set compacts only when dead
+        // entries actually dominate.
+        assert!(!lazy_heap_needs_compact(4_000, 1_000));
+        assert!(lazy_heap_needs_compact(4_005, 1_000));
+    }
+}

@@ -7,12 +7,15 @@
 //! * [`json`]   — minimal JSON parser + writer (for `artifacts/meta.json`
 //!   and machine-readable bench output)
 //! * [`args`]   — a tiny declarative CLI argument parser
+//! * [`heap`]   — the lazy-deletion heap compaction policy shared by the
+//!   MemPool LRU heap and the fused tree's TTL heap
 //! * [`proptest`] — randomized property-testing harness with shrinking-lite
 //! * [`bench`]  — the hand-rolled benchmark harness used by `cargo bench`
 //! * [`logging`] — a `log`-crate backend writing to stderr with levels
 
 pub mod args;
 pub mod bench;
+pub mod heap;
 pub mod json;
 pub mod logging;
 pub mod proptest;
