@@ -1,0 +1,317 @@
+//! Fig 19 (repo-original): cluster observability (ISSUE 8).
+//!
+//! Part 1 (`fig19_overhead`): the routing hot path with the metric
+//! registry + trace sink attached vs bare, on the fig15 hot-fleet
+//! shape (N instances, a 4K-token prompt cached fleet-wide). The
+//! instrumented loop also pays the leader's per-request tracing work
+//! (complete ROUTE, begin/end QUEUE) so the number is honest about the
+//! whole route-path tax, not just the counter bumps.
+//! `MEMSERVE_FIG19_GATE=1` turns the ≤5% median-throughput-regression
+//! claim into a hard assert (3 re-measure attempts, contended CI
+//! runners being what they are).
+//!
+//! Part 2 (`fig19_faults`): the fig18 blackout sim — lossy GS delta
+//! replication plus a scripted mid-trace shard failover — run with
+//! `observe: true`. Asserts every completed request closed a complete
+//! span chain (route→queue→prefill→[kv_transfer→]decode→retire), zero
+//! orphaned phase ends, and a non-empty flight recorder containing the
+//! injected SUSPICION and the PROMOTION that answers it. The Chrome
+//! trace JSON and the flight-recorder dump land in the
+//! `MEMSERVE_BENCH_JSON` sink next to the tables.
+//!
+//! Env knobs (used by the CI smoke job):
+//! * `MEMSERVE_FIG19_MODE` — `overhead`, `faults`, anything else/unset
+//!   runs both;
+//! * `MEMSERVE_FIG19_N` — instance count for the overhead part
+//!   (default `16`);
+//! * `MEMSERVE_FIG19_GATE` — `1` asserts the instrumented median
+//!   routes/sec is within 5% of bare.
+
+use memserve::engine::DisaggMilestone;
+use memserve::mempool::InstanceId;
+use memserve::obs::trace::phase;
+use memserve::obs::{trace, Registry, TraceSink};
+use memserve::scheduler::cost_model::OperatorCostModel;
+use memserve::scheduler::prompt_tree::InstanceKind;
+use memserve::scheduler::router::GlobalScheduler;
+use memserve::scheduler::PolicyKind;
+use memserve::sim::{FleetEvent, FleetOp, SimConfig, Simulation};
+use memserve::util::bench::{
+    bench_json_dir, black_box, time_adaptive, Table,
+};
+use memserve::workload::{ArrivalPlan, WorkloadKind, WorkloadSpec};
+
+fn prompt(n: usize, seed: u32) -> Vec<u32> {
+    (0..n as u32)
+        .map(|i| (i.wrapping_mul(2654435761).wrapping_add(seed)) % 50_000)
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Part 1: instrumented vs bare route path.
+// ---------------------------------------------------------------------
+
+/// The fig15 hot-fleet scheduler: N prefill instances, the 4K prompt
+/// cached on every one, 4 unique prompts each for tree bulk.
+fn hot_scheduler(n: usize, hot: &[u32]) -> GlobalScheduler {
+    const BT: usize = 16;
+    let mut gs = GlobalScheduler::new(
+        PolicyKind::PromptTree,
+        OperatorCostModel::paper_13b(),
+        BT,
+        0.0,
+    );
+    for i in 0..n {
+        gs.add_instance(InstanceId(i as u32), InstanceKind::PrefillOnly);
+    }
+    for i in 0..n {
+        let id = InstanceId(i as u32);
+        gs.trees.record(id, hot, 1.0);
+        for k in 0..4u32 {
+            gs.trees.record(id, &prompt(4096, 1000 + (i as u32) * 4 + k),
+                            1.0);
+        }
+    }
+    gs
+}
+
+/// One measurement of both variants; returns (bare, instrumented)
+/// median routes/sec.
+fn overhead_run(n: usize) -> (f64, f64) {
+    let hot = prompt(4096, 1);
+
+    let mut bare = hot_scheduler(n, &hot);
+    let mut bare_t = time_adaptive(150.0, 200, || {
+        black_box(bare.route(&hot, 7, 2.0).unwrap());
+    });
+
+    let mut inst = hot_scheduler(n, &hot);
+    let reg = Registry::new(true);
+    let sink = TraceSink::new(true);
+    inst.attach_obs(&reg, None);
+    // Spans cycle through a small window so the sink's open/closed maps
+    // stay bounded: past the window every complete is a dup-close
+    // (counter bump) — exactly the steady-state lock+hash cost.
+    let mut rid = 0u64;
+    let mut inst_t = time_adaptive(150.0, 200, || {
+        let out = inst.route(&hot, 7, 2.0).unwrap();
+        let span = trace::request_span(rid % 4096);
+        rid += 1;
+        let now = rid as f64 * 1e-6;
+        sink.complete(span, phase::ROUTE, u32::MAX, now, now);
+        sink.begin(span, phase::QUEUE, u32::MAX, now);
+        sink.end(span, phase::QUEUE, now);
+        black_box(out);
+    });
+    // Sanity: the attached registry actually counted every route.
+    assert!(
+        reg.snapshot(0.0).counter_sum("sched.routes") >= inst_t.len() as u64,
+        "sched.routes did not count the instrumented loop"
+    );
+    (1e6 / bare_t.p50().max(1e-9), 1e6 / inst_t.p50().max(1e-9))
+}
+
+fn overhead(n: usize, gate: bool) {
+    let mut table = Table::new("fig19_overhead", &[
+        "instances", "variant", "routes_per_sec", "vs_bare",
+    ]);
+    println!(
+        "\n-- route-path overhead: metrics registry + trace sink \
+         attached vs bare, hot fleet N={n} --"
+    );
+    let (mut bare, mut inst) = overhead_run(n);
+    let mut ratio = inst / bare.max(1e-9);
+    if gate {
+        // Contended-runner tolerance: re-measure up to 3 times before
+        // declaring the ≤5% overhead claim dead.
+        for attempt in 0..3 {
+            if ratio >= 0.95 {
+                break;
+            }
+            println!(
+                "  gate attempt {}: {ratio:.3}x — re-measuring",
+                attempt + 1
+            );
+            let (b, i) = overhead_run(n);
+            bare = b;
+            inst = i;
+            ratio = inst / bare.max(1e-9);
+        }
+    }
+    table.row(vec![
+        n.to_string(),
+        "bare".into(),
+        format!("{bare:.0}"),
+        "1.00x".into(),
+    ]);
+    table.row(vec![
+        n.to_string(),
+        "instrumented".into(),
+        format!("{inst:.0}"),
+        format!("{ratio:.3}x"),
+    ]);
+    println!(
+        "  bare {bare:9.0} routes/sec   instrumented {inst:9.0} \
+         routes/sec   ({ratio:.3}x)"
+    );
+    table.finish();
+    println!(
+        "\nExpected shape: instrumented within 5% of bare — the route \
+         path pays a handful of relaxed atomics plus one short-lived \
+         mutex for the trace sink."
+    );
+    if gate {
+        assert!(
+            ratio >= 0.95,
+            "MEMSERVE_FIG19_GATE: instrumented route path is {ratio:.3}x \
+             bare median throughput ({inst:.0} vs {bare:.0} routes/sec), \
+             below the 0.95 floor"
+        );
+        println!("  gate: {ratio:.3}x >= 0.95x -- pass");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Part 2: span chains + flight recorder through the faulty-fabric sim.
+// ---------------------------------------------------------------------
+
+fn faults() {
+    let mut table = Table::new("fig19_faults", &[
+        "requests", "completed", "disaggregated", "chains_complete",
+        "trace_events", "orphan_ends", "flight_events", "suspicions",
+        "promotions",
+    ]);
+    println!(
+        "\n-- span chains through the lossy-replication + shard-failover \
+         sim: every completed request must close a full chain --"
+    );
+    let spec =
+        WorkloadSpec::generate(WorkloadKind::Loogle, 40, 35, 2048, 4096);
+    let plan = ArrivalPlan::poisson(&spec, 4.0, 35);
+    let total = spec.total_requests();
+    let cfg = SimConfig {
+        prefill_instances: 3,
+        decode_instances: 2,
+        colocated_instances: 0,
+        caching: true,
+        milestone: DisaggMilestone::PdCaching3,
+        gs_shards: 2,
+        gs_replicas: 2,
+        replication_drop: 0.10,
+        observe: true,
+        fleet: vec![FleetEvent {
+            at: 5.0,
+            op: FleetOp::GsFailover { shard: Some(0) },
+        }],
+        ..Default::default()
+    };
+    let rep = Simulation::new(cfg, spec, &plan).run();
+    assert_eq!(
+        rep.metrics.records.len(),
+        total,
+        "lost requests under lossy replication"
+    );
+    assert_eq!(rep.gs_failovers, 1, "scripted failover did not fire");
+    let obs = rep.obs.as_ref().expect("observe: true fills SimReport.obs");
+
+    let mut disagg = 0usize;
+    let mut complete = 0usize;
+    for r in &rep.metrics.records {
+        let d = r.prefill_instance != r.decode_instance;
+        disagg += d as usize;
+        let span = trace::request_span(r.request_id);
+        assert!(
+            obs.trace.chain_complete(span, d),
+            "request {} (disaggregated={d}) has an incomplete span \
+             chain: {:?}",
+            r.request_id,
+            obs.trace.chains().get(&span)
+        );
+        complete += 1;
+    }
+    let (recorded, dropped, _dup, orphans) = obs.trace.stats();
+    assert_eq!(orphans, 0, "phase ends without a matching begin");
+    assert_eq!(dropped, 0, "trace ring overflowed at this scale");
+
+    let suspicions = obs
+        .flight
+        .of_kind(memserve::obs::flight::kind::SUSPICION)
+        .len();
+    let promotions = obs
+        .flight
+        .of_kind(memserve::obs::flight::kind::PROMOTION)
+        .len();
+    assert!(!obs.flight.is_empty(), "flight recorder captured nothing");
+    assert!(
+        suspicions >= 1,
+        "the injected crash never recorded a SUSPICION event"
+    );
+    assert!(
+        promotions >= 1,
+        "the failover never recorded a PROMOTION event"
+    );
+    // The folded cluster view saw the routing volume.
+    let routed = obs.view.snapshot.counter_sum("sched.routes");
+    assert!(
+        routed >= total as u64,
+        "cluster view counted {routed} routes for {total} requests"
+    );
+
+    table.row(vec![
+        total.to_string(),
+        rep.metrics.records.len().to_string(),
+        disagg.to_string(),
+        complete.to_string(),
+        recorded.to_string(),
+        orphans.to_string(),
+        obs.flight.len().to_string(),
+        suspicions.to_string(),
+        promotions.to_string(),
+    ]);
+    println!(
+        "  {complete}/{total} chains complete ({disagg} disaggregated), \
+         {recorded} trace events, {} flight events \
+         ({suspicions} suspicion, {promotions} promotion)",
+        obs.flight.len()
+    );
+    table.finish();
+
+    // Drop the artifacts next to the tables: the Chrome trace (load in
+    // chrome://tracing or ui.perfetto.dev) and the flight-recorder
+    // dump CI uploads alongside the bench JSON.
+    if let Some(dir) = bench_json_dir() {
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let tp = format!("{dir}/fig19_trace.json");
+            match std::fs::write(&tp, obs.trace.to_chrome_json().to_string())
+            {
+                Ok(()) => println!("[saved {tp}]"),
+                Err(e) => eprintln!("[warn] could not save trace: {e}"),
+            }
+        }
+        if let Some(p) = obs.flight.dump_to(&dir, "fig19_flight") {
+            println!("[saved {p}]");
+        }
+    }
+    println!(
+        "\nExpected shape: chains_complete = completed = requests, zero \
+         orphaned ends, and the flight recorder holds the scripted \
+         crash's suspicion→promotion story."
+    );
+}
+
+fn main() {
+    let mode = std::env::var("MEMSERVE_FIG19_MODE").unwrap_or_default();
+    let n: usize = std::env::var("MEMSERVE_FIG19_N")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(16)
+        .max(1);
+    let gate = std::env::var("MEMSERVE_FIG19_GATE").as_deref() == Ok("1");
+    let all = !matches!(mode.as_str(), "overhead" | "faults");
+    if all || mode == "overhead" {
+        overhead(n, gate);
+    }
+    if all || mode == "faults" {
+        faults();
+    }
+}

@@ -18,6 +18,8 @@
 //! * [`replica`] — replicated global scheduler: sequenced delta-log
 //!   transport, tree snapshots, follower catch-up and failover.
 //! * [`cluster`] — membership, heartbeats, failure handling (§4.4).
+//! * [`obs`] — cluster observability: metric registry, request-scoped
+//!   tracing, control-plane flight recorder, leader scrape fold.
 //! * [`sim`] — discrete-event simulator for request-rate sweeps.
 //! * [`workload`] — ShareGPT/LooGLE/ReAct-like synthetic workloads (§8.2).
 //! * [`server`] — the live serving assembly (threads + fabric + PJRT).
@@ -30,6 +32,7 @@ pub mod engine;
 pub mod mempool;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod replica;
 pub mod runtime;
 pub mod scheduler;

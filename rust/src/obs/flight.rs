@@ -1,0 +1,208 @@
+//! Control-plane flight recorder (ISSUE 8 tentpole, part 3).
+//!
+//! A bounded ring buffer of recent control-plane events — deltas
+//! applied, heartbeats, suspicion, promotion, fence epochs, member
+//! deregistration — kept per node (live leader, or the sim as a
+//! whole). When the failure detector fires, the leader dumps the ring
+//! to the bench-JSON sink, turning fig18-style blackout debugging from
+//! stderr-log archaeology into a replayable artifact: the dump shows
+//! exactly which heartbeats were missed, which deltas had landed, and
+//! what the promotion handshake did, in caller-clock order.
+//!
+//! Recording is a mutex push + ring rotation — control-plane events
+//! are tens-per-second, not per-request, so no atomics heroics are
+//! needed here (the per-request paths go through `obs::trace` and
+//! `obs::registry` instead).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Event kinds recorded into the ring. Kept as constants (not an
+/// enum) so call sites read like log lines and new kinds don't need a
+/// cross-file type change.
+pub mod kind {
+    pub const HEARTBEAT: &str = "heartbeat";
+    pub const DELTA: &str = "delta";
+    pub const SUSPICION: &str = "suspicion";
+    pub const PROMOTION: &str = "promotion";
+    pub const FENCE: &str = "fence";
+    pub const MEMBERSHIP: &str = "membership";
+    pub const DEREGISTER: &str = "deregister";
+    pub const FAILOVER: &str = "failover";
+}
+
+/// One recorded control-plane event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlightEvent {
+    /// Caller-clock seconds.
+    pub t: f64,
+    /// Node that observed the event (`u32::MAX` = leader).
+    pub node: u32,
+    pub kind: &'static str,
+    pub detail: String,
+}
+
+struct State {
+    ring: VecDeque<FlightEvent>,
+    cap: usize,
+    /// Total recorded, including rotated-out events.
+    total: u64,
+    /// Dumps taken (suspicion firings that produced an artifact).
+    dumps: u64,
+}
+
+/// Shared bounded recorder; clones share the ring.
+#[derive(Clone)]
+pub struct FlightRecorder(Arc<Mutex<State>>);
+
+pub const DEFAULT_FLIGHT_CAP: usize = 512;
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new(DEFAULT_FLIGHT_CAP)
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        FlightRecorder(Arc::new(Mutex::new(State {
+            ring: VecDeque::with_capacity(cap.min(4096)),
+            cap: cap.max(1),
+            total: 0,
+            dumps: 0,
+        })))
+    }
+
+    pub fn record(
+        &self,
+        t: f64,
+        node: u32,
+        kind: &'static str,
+        detail: impl Into<String>,
+    ) {
+        let mut st = self.0.lock().unwrap();
+        if st.ring.len() >= st.cap {
+            st.ring.pop_front();
+        }
+        st.ring.push_back(FlightEvent {
+            t,
+            node,
+            kind,
+            detail: detail.into(),
+        });
+        st.total += 1;
+    }
+
+    pub fn events(&self) -> Vec<FlightEvent> {
+        self.0.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.lock().unwrap().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever recorded (survives ring rotation).
+    pub fn total(&self) -> u64 {
+        self.0.lock().unwrap().total
+    }
+
+    pub fn dumps(&self) -> u64 {
+        self.0.lock().unwrap().dumps
+    }
+
+    /// Events of one kind, oldest first.
+    pub fn of_kind(&self, kind: &str) -> Vec<FlightEvent> {
+        self.0
+            .lock()
+            .unwrap()
+            .ring
+            .iter()
+            .filter(|e| e.kind == kind)
+            .cloned()
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let st = self.0.lock().unwrap();
+        let evs: Vec<Json> = st
+            .ring
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("t", Json::num(e.t)),
+                    ("node", Json::num(e.node as f64)),
+                    ("kind", Json::str(e.kind)),
+                    ("detail", Json::str(&e.detail)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("total", Json::num(st.total as f64)),
+            ("dumps", Json::num(st.dumps as f64)),
+            ("events", Json::arr(evs)),
+        ])
+    }
+
+    /// Dump the ring to `<dir>/<name>.json`. Returns the path written,
+    /// or `None` (recording the attempt either way) if the write
+    /// failed — observability must never take the control plane down.
+    pub fn dump_to(&self, dir: &str, name: &str) -> Option<String> {
+        let text = self.to_json().to_string();
+        self.0.lock().unwrap().dumps += 1;
+        if std::fs::create_dir_all(dir).is_err() {
+            return None;
+        }
+        let path = format!("{dir}/{name}.json");
+        match std::fs::write(&path, text) {
+            Ok(()) => Some(path),
+            Err(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_rotates_at_cap() {
+        let fr = FlightRecorder::new(3);
+        for i in 0..5 {
+            fr.record(i as f64, 0, kind::HEARTBEAT, format!("beat {i}"));
+        }
+        let evs = fr.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].detail, "beat 2"); // oldest two rotated out
+        assert_eq!(fr.total(), 5);
+    }
+
+    #[test]
+    fn of_kind_filters() {
+        let fr = FlightRecorder::default();
+        fr.record(1.0, 0, kind::HEARTBEAT, "beat");
+        fr.record(2.0, 7, kind::SUSPICION, "instance 7 missed 3 beats");
+        fr.record(3.0, 0, kind::PROMOTION, "shard 0 -> instance 2");
+        assert_eq!(fr.of_kind(kind::SUSPICION).len(), 1);
+        assert_eq!(fr.of_kind(kind::SUSPICION)[0].node, 7);
+    }
+
+    #[test]
+    fn json_dump_roundtrips() {
+        let fr = FlightRecorder::default();
+        fr.record(0.5, 3, kind::DELTA, "applied seq 12..15");
+        let j = Json::parse(&fr.to_json().to_string()).unwrap();
+        assert_eq!(j.at(&["total"]).unwrap().as_f64(), Some(1.0));
+        let evs = j.at(&["events"]).unwrap().as_arr().unwrap();
+        assert_eq!(evs[0].at(&["kind"]).unwrap().as_str(), Some("delta"));
+        assert_eq!(
+            evs[0].at(&["detail"]).unwrap().as_str(),
+            Some("applied seq 12..15")
+        );
+    }
+}

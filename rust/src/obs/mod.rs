@@ -1,0 +1,33 @@
+//! Cluster-wide observability (ISSUE 8).
+//!
+//! Four pieces, threaded through every layer of the serving stack:
+//!
+//! * [`registry`] — atomic counters/gauges and log2-bucket histograms
+//!   with mergeable snapshots, labeled instance/shard/tier. `&self`
+//!   everywhere, one relaxed load when disabled.
+//! * [`trace`] — request-scoped spans (route → queue → prefill →
+//!   kv_transfer → decode → retire, plus migration/promotion),
+//!   idempotent under PR 6 message replay, exported as Chrome
+//!   trace-event JSON. Knob: `MEMSERVE_TRACE`.
+//! * [`flight`] — bounded ring of control-plane events, dumped to the
+//!   bench-JSON sink when the failure detector fires.
+//! * [`view`] — periodic leader scrape folding per-instance stats
+//!   (`PoolStats`, `NetStats`, replication lag) into one cluster view.
+//!
+//! Knobs: `MEMSERVE_METRICS=0|off` disables the registry;
+//! `MEMSERVE_TRACE=1` (or any non-`0`/`off` value) enables tracing.
+//! Both live and sim clocks work unchanged: every timestamp is
+//! caller-clock f64 seconds.
+
+pub mod flight;
+pub mod registry;
+pub mod trace;
+pub mod view;
+
+pub use flight::{FlightEvent, FlightRecorder};
+pub use registry::{
+    Counter, Gauge, Histo, HistoSnapshot, Labels, MetricValue, ObsSnapshot,
+    Registry,
+};
+pub use trace::{TraceEvent, TraceSink};
+pub use view::ClusterView;

@@ -1,0 +1,669 @@
+//! Low-overhead metric registry (ISSUE 8 tentpole, part 1).
+//!
+//! Three metric kinds behind cheap clonable handles:
+//!
+//! * [`Counter`] — monotonic `u64` (relaxed `fetch_add`);
+//! * [`Gauge`] — last-write-wins `f64` (stored as bits);
+//! * [`Histo`] — fixed log2-bucket histogram over non-negative `u64`
+//!   values (64 buckets: bucket *b* spans `[2^b, 2^(b+1))`, bucket 0
+//!   also holds 0), with count and sum so snapshots carry the mean.
+//!
+//! Every write path is `&self` over relaxed atomics, so the PR 7
+//! lock-free read paths (MemPool `match_prefix`, fabric `send`) can
+//! carry handles without reintroducing locks. The registry's disabled
+//! mode short-circuits each write after **one** relaxed load — the
+//! fig19 overhead gate holds the instrumented route path within 5% of
+//! the uninstrumented baseline either way.
+//!
+//! Registration (`counter`/`gauge`/`histogram`) takes a short `RwLock`
+//! write; callers register once and keep the handle. Metrics are keyed
+//! by a static name plus [`Labels`] (instance/shard/tier — the three
+//! dimensions the MemServe fleet actually has). [`Registry::snapshot`]
+//! produces a mergeable [`ObsSnapshot`]; merging sums counters and
+//! histogram buckets and last-write-wins gauges, so per-instance or
+//! per-run snapshots fold into one cluster view.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::util::json::Json;
+
+/// Histogram bucket count: bucket `b` spans `[2^b, 2^(b+1))` for
+/// `b ≥ 1`; bucket 0 holds `{0, 1}`. 64 buckets cover the full u64
+/// range, so microsecond-scaled observations never clamp.
+pub const HISTO_BUCKETS: usize = 64;
+
+/// Metric labels — the fleet's three dimensions. `None` means the
+/// metric is cluster-global on that axis.
+#[derive(
+    Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub struct Labels {
+    pub instance: Option<u32>,
+    pub shard: Option<u32>,
+    pub tier: Option<&'static str>,
+}
+
+impl Labels {
+    pub fn none() -> Self {
+        Labels::default()
+    }
+
+    pub fn instance(id: u32) -> Self {
+        Labels {
+            instance: Some(id),
+            ..Default::default()
+        }
+    }
+
+    pub fn shard(s: u32) -> Self {
+        Labels {
+            shard: Some(s),
+            ..Default::default()
+        }
+    }
+
+    pub fn with_tier(mut self, tier: &'static str) -> Self {
+        self.tier = Some(tier);
+        self
+    }
+
+    /// `{instance=3,shard=1,tier=hbm}`, or `""` when unlabeled — the
+    /// suffix of the snapshot key.
+    pub fn render(&self) -> String {
+        let mut parts: Vec<String> = vec![];
+        if let Some(i) = self.instance {
+            parts.push(format!("instance={i}"));
+        }
+        if let Some(s) = self.shard {
+            parts.push(format!("shard={s}"));
+        }
+        if let Some(t) = self.tier {
+            parts.push(format!("tier={t}"));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+struct MetricKey {
+    name: &'static str,
+    labels: Labels,
+}
+
+struct HistoCore {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl HistoCore {
+    fn new() -> Self {
+        HistoCore {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// `floor(log2(max(v, 1)))` — the log2 bucket index.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    (63 - (v | 1).leading_zeros()) as usize
+}
+
+enum Slot {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histo(Arc<HistoCore>),
+}
+
+struct Shared {
+    enabled: Arc<AtomicBool>,
+    slots: RwLock<BTreeMap<MetricKey, Slot>>,
+}
+
+/// The process-wide (or sim-wide) metric registry. Clones share state.
+#[derive(Clone)]
+pub struct Registry(Arc<Shared>);
+
+impl Registry {
+    pub fn new(enabled: bool) -> Self {
+        Registry(Arc::new(Shared {
+            enabled: Arc::new(AtomicBool::new(enabled)),
+            slots: RwLock::new(BTreeMap::new()),
+        }))
+    }
+
+    /// Enabled unless `MEMSERVE_METRICS` is `0`/`off`.
+    pub fn from_env() -> Self {
+        let off = matches!(
+            std::env::var("MEMSERVE_METRICS").as_deref(),
+            Ok("0") | Ok("off")
+        );
+        Registry::new(!off)
+    }
+
+    pub fn disabled() -> Self {
+        Registry::new(false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.0.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Register (or look up) a counter. Idempotent by (name, labels);
+    /// a kind mismatch on an existing key panics — that is a naming
+    /// bug, not a runtime condition.
+    pub fn counter(&self, name: &'static str, labels: Labels) -> Counter {
+        let key = MetricKey { name, labels };
+        let v = {
+            let mut slots = self.0.slots.write().unwrap();
+            match slots
+                .entry(key)
+                .or_insert_with(|| Slot::Counter(Arc::new(AtomicU64::new(0))))
+            {
+                Slot::Counter(v) => Arc::clone(v),
+                _ => panic!("metric {name} registered with another kind"),
+            }
+        };
+        Counter {
+            on: Arc::clone(&self.0.enabled),
+            v,
+        }
+    }
+
+    pub fn gauge(&self, name: &'static str, labels: Labels) -> Gauge {
+        let key = MetricKey { name, labels };
+        let v = {
+            let mut slots = self.0.slots.write().unwrap();
+            match slots
+                .entry(key)
+                .or_insert_with(|| Slot::Gauge(Arc::new(AtomicU64::new(0))))
+            {
+                Slot::Gauge(v) => Arc::clone(v),
+                _ => panic!("metric {name} registered with another kind"),
+            }
+        };
+        Gauge {
+            on: Arc::clone(&self.0.enabled),
+            v,
+        }
+    }
+
+    pub fn histogram(&self, name: &'static str, labels: Labels) -> Histo {
+        let key = MetricKey { name, labels };
+        let core = {
+            let mut slots = self.0.slots.write().unwrap();
+            match slots
+                .entry(key)
+                .or_insert_with(|| Slot::Histo(Arc::new(HistoCore::new())))
+            {
+                Slot::Histo(c) => Arc::clone(c),
+                _ => panic!("metric {name} registered with another kind"),
+            }
+        };
+        Histo {
+            on: Arc::clone(&self.0.enabled),
+            core,
+        }
+    }
+
+    /// Absolute fold-in of an externally-accumulated total (the scrape
+    /// path: `NetStats`, `PoolStats`, replication lag). Idempotent —
+    /// repeated scrapes overwrite rather than double-count.
+    pub fn set_counter(&self, name: &'static str, labels: Labels, v: u64) {
+        self.counter(name, labels).set(v);
+    }
+
+    pub fn set_gauge(&self, name: &'static str, labels: Labels, x: f64) {
+        self.gauge(name, labels).set(x);
+    }
+
+    /// A point-in-time mergeable snapshot of every registered metric.
+    pub fn snapshot(&self, at: f64) -> ObsSnapshot {
+        let slots = self.0.slots.read().unwrap();
+        let mut entries = BTreeMap::new();
+        for (key, slot) in slots.iter() {
+            let rendered = format!("{}{}", key.name, key.labels.render());
+            let value = match slot {
+                Slot::Counter(v) => {
+                    MetricValue::Counter(v.load(Ordering::Relaxed))
+                }
+                Slot::Gauge(v) => MetricValue::Gauge(f64::from_bits(
+                    v.load(Ordering::Relaxed),
+                )),
+                Slot::Histo(c) => MetricValue::Histo(HistoSnapshot {
+                    buckets: c
+                        .buckets
+                        .iter()
+                        .map(|b| b.load(Ordering::Relaxed))
+                        .collect(),
+                    count: c.count.load(Ordering::Relaxed),
+                    sum: c.sum.load(Ordering::Relaxed),
+                }),
+            };
+            entries.insert(rendered, value);
+        }
+        ObsSnapshot { at, entries }
+    }
+}
+
+/// Monotonic counter handle (see module docs for the fast path).
+#[derive(Clone)]
+pub struct Counter {
+    on: Arc<AtomicBool>,
+    v: Arc<AtomicU64>,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self, n: u64) {
+        if self.on.load(Ordering::Relaxed) {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Absolute store — the scrape fold path (not gated on `enabled`,
+    /// so a final snapshot can be folded even after metrics are
+    /// switched off mid-drain).
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge handle.
+#[derive(Clone)]
+pub struct Gauge {
+    on: Arc<AtomicBool>,
+    v: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, x: f64) {
+        if self.on.load(Ordering::Relaxed) {
+            self.v.store(x.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.v.load(Ordering::Relaxed))
+    }
+}
+
+/// Log2-bucket histogram handle.
+#[derive(Clone)]
+pub struct Histo {
+    on: Arc<AtomicBool>,
+    core: Arc<HistoCore>,
+}
+
+impl Histo {
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        if !self.on.load(Ordering::Relaxed) {
+            return;
+        }
+        self.core.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.core.count.fetch_add(1, Ordering::Relaxed);
+        self.core.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Observe a duration in seconds, bucketed at microsecond scale.
+    #[inline]
+    pub fn observe_secs(&self, s: f64) {
+        if !self.on.load(Ordering::Relaxed) {
+            return;
+        }
+        self.observe((s.max(0.0) * 1e6) as u64);
+    }
+}
+
+/// One histogram's frozen buckets — mergeable, with approximate
+/// percentiles (linear interpolation inside the matched log2 bucket,
+/// so worst-case relative error is the bucket width: a factor of 2).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistoSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistoSnapshot {
+    pub fn merge(&mut self, other: &HistoSnapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate percentile, `p` in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (self.count - 1) as f64;
+        let mut below = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if rank < (below + n) as f64 {
+                let lo = if b == 0 { 0.0 } else { (1u64 << b) as f64 };
+                let hi = (1u128 << (b + 1)) as f64;
+                let frac =
+                    ((rank - below as f64) / n as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo);
+            }
+            below += n;
+        }
+        // rank == count - 1 landed past the loop due to fp rounding:
+        // the top of the highest occupied bucket.
+        let top = self.buckets.iter().rposition(|&n| n > 0).unwrap_or(0);
+        (1u128 << (top + 1)) as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// One snapshot entry's value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histo(HistoSnapshot),
+}
+
+/// A frozen, mergeable view of a registry (or of a whole cluster, once
+/// per-instance snapshots are folded together).
+#[derive(Clone, Debug, Default)]
+pub struct ObsSnapshot {
+    /// Caller-clock seconds the snapshot was taken at.
+    pub at: f64,
+    /// `name{labels}` → value, sorted by key.
+    pub entries: BTreeMap<String, MetricValue>,
+}
+
+impl ObsSnapshot {
+    /// Fold `other` in: counters and histograms sum; gauges (and the
+    /// timestamp) are last-write-wins.
+    pub fn merge(&mut self, other: &ObsSnapshot) {
+        self.at = self.at.max(other.at);
+        for (k, v) in &other.entries {
+            match (self.entries.get_mut(k), v) {
+                (
+                    Some(MetricValue::Counter(a)),
+                    MetricValue::Counter(b),
+                ) => *a += b,
+                (Some(MetricValue::Histo(a)), MetricValue::Histo(b)) => {
+                    a.merge(b)
+                }
+                (Some(slot), v) => *slot = v.clone(),
+                (None, v) => {
+                    self.entries.insert(k.clone(), v.clone());
+                }
+            }
+        }
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        match self.entries.get(key) {
+            Some(MetricValue::Counter(v)) => *v,
+            _ => 0,
+        }
+    }
+
+    pub fn gauge(&self, key: &str) -> f64 {
+        match self.entries.get(key) {
+            Some(MetricValue::Gauge(v)) => *v,
+            _ => f64::NAN,
+        }
+    }
+
+    pub fn histo(&self, key: &str) -> Option<&HistoSnapshot> {
+        match self.entries.get(key) {
+            Some(MetricValue::Histo(h)) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// Sum every counter whose key starts with `prefix` — the
+    /// cluster-view roll-up over per-instance labels.
+    pub fn counter_sum(&self, prefix: &str) -> u64 {
+        self.entries
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .filter_map(|(_, v)| match v {
+                MetricValue::Counter(n) => Some(*n),
+                _ => None,
+            })
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        for (k, v) in &self.entries {
+            let j = match v {
+                MetricValue::Counter(n) => Json::num(*n as f64),
+                MetricValue::Gauge(x) => {
+                    Json::num(if x.is_finite() { *x } else { 0.0 })
+                }
+                MetricValue::Histo(h) => Json::obj(vec![
+                    ("count", Json::num(h.count as f64)),
+                    ("sum", Json::num(h.sum as f64)),
+                    ("mean", Json::num(if h.count > 0 {
+                        h.mean()
+                    } else {
+                        0.0
+                    })),
+                    ("p50", Json::num(if h.count > 0 { h.p50() } else { 0.0 })),
+                    ("p99", Json::num(if h.count > 0 { h.p99() } else { 0.0 })),
+                    (
+                        "buckets",
+                        Json::arr(
+                            h.buckets
+                                .iter()
+                                .map(|&b| Json::num(b as f64))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            };
+            m.insert(k.clone(), j);
+        }
+        Json::obj(vec![
+            ("at", Json::num(self.at)),
+            ("metrics", Json::Obj(m)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Samples;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let r = Registry::new(true);
+        let c = r.counter("test.count", Labels::instance(3));
+        c.inc(2);
+        c.inc(5);
+        let g = r.gauge("test.gauge", Labels::shard(1).with_tier("hbm"));
+        g.set(0.25);
+        let snap = r.snapshot(1.0);
+        assert_eq!(snap.counter("test.count{instance=3}"), 7);
+        assert_eq!(snap.gauge("test.gauge{shard=1,tier=hbm}"), 0.25);
+        // Handles are shared: a second registration sees the total.
+        assert_eq!(r.counter("test.count", Labels::instance(3)).get(), 7);
+    }
+
+    #[test]
+    fn disabled_mode_is_inert() {
+        let r = Registry::new(false);
+        let c = r.counter("x", Labels::none());
+        let h = r.histogram("h", Labels::none());
+        c.inc(10);
+        h.observe(100);
+        assert_eq!(r.snapshot(0.0).counter("x"), 0);
+        assert_eq!(r.snapshot(0.0).histo("h").unwrap().count, 0);
+        // set() bypasses the gate (scrape fold contract).
+        c.set(4);
+        assert_eq!(r.snapshot(0.0).counter("x"), 4);
+        r.set_enabled(true);
+        c.inc(1);
+        assert_eq!(r.snapshot(0.0).counter("x"), 5);
+    }
+
+    #[test]
+    fn log2_bucket_indexing() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+    }
+
+    /// ISSUE 8 satellite: histogram percentiles track exact `Samples`
+    /// percentiles within the log2-bucket error bound (a factor of 2,
+    /// much tighter in practice with in-bucket interpolation) on known
+    /// distributions.
+    #[test]
+    fn histo_percentiles_track_samples() {
+        let mut state = 0xD15EA5Eu64;
+        // Uniform over [0, 64k) and a heavy-tailed power-ish mix.
+        let uniform: Vec<u64> = (0..20_000)
+            .map(|_| crate::util::rng::splitmix64(&mut state) % 65_536)
+            .collect();
+        let tailed: Vec<u64> = (0..20_000)
+            .map(|_| {
+                let r = crate::util::rng::splitmix64(&mut state);
+                1 + (r % 100) * (r % 1000) * (1 + r % 7)
+            })
+            .collect();
+        for xs in [&uniform, &tailed] {
+            let r = Registry::new(true);
+            let h = r.histogram("lat", Labels::none());
+            let mut s = Samples::unbounded();
+            for &x in xs.iter() {
+                h.observe(x);
+                s.push(x as f64);
+            }
+            let snap = r.snapshot(0.0);
+            let hs = snap.histo("lat").unwrap();
+            assert_eq!(hs.count, xs.len() as u64);
+            for p in [10.0, 50.0, 90.0, 99.0] {
+                let exact = s.percentile(p).max(1.0);
+                let approx = hs.percentile(p).max(1.0);
+                let ratio = approx / exact;
+                assert!(
+                    (0.5..=2.0).contains(&ratio),
+                    "p{p}: approx {approx} vs exact {exact}"
+                );
+            }
+            assert!(
+                (hs.mean() - s.mean()).abs() / s.mean() < 1e-9,
+                "sum/count mean is exact"
+            );
+        }
+    }
+
+    /// Merging two half-snapshots equals observing the whole stream
+    /// into one histogram — the cluster-fold property.
+    #[test]
+    fn snapshot_merge_equals_single_stream() {
+        let mut state = 7u64;
+        let xs: Vec<u64> = (0..5000)
+            .map(|_| crate::util::rng::splitmix64(&mut state) % 1_000_000)
+            .collect();
+        let whole = Registry::new(true);
+        let hw = whole.histogram("lat", Labels::none());
+        let cw = whole.counter("n", Labels::none());
+        let (a, b) = (Registry::new(true), Registry::new(true));
+        let (ha, hb) = (
+            a.histogram("lat", Labels::none()),
+            b.histogram("lat", Labels::none()),
+        );
+        let (ca, cb) =
+            (a.counter("n", Labels::none()), b.counter("n", Labels::none()));
+        for (i, &x) in xs.iter().enumerate() {
+            hw.observe(x);
+            cw.inc(1);
+            if i % 2 == 0 {
+                ha.observe(x);
+                ca.inc(1);
+            } else {
+                hb.observe(x);
+                cb.inc(1);
+            }
+        }
+        let mut merged = a.snapshot(1.0);
+        merged.merge(&b.snapshot(2.0));
+        let want = whole.snapshot(2.0);
+        assert_eq!(merged.counter("n"), want.counter("n"));
+        assert_eq!(merged.histo("lat"), want.histo("lat"));
+        assert_eq!(merged.at, 2.0);
+    }
+
+    #[test]
+    fn counter_sum_rolls_up_labels() {
+        let r = Registry::new(true);
+        r.counter("pool.matches", Labels::instance(0)).inc(3);
+        r.counter("pool.matches", Labels::instance(1)).inc(4);
+        r.counter("other", Labels::none()).inc(9);
+        let snap = r.snapshot(0.0);
+        assert_eq!(snap.counter_sum("pool.matches"), 7);
+    }
+
+    #[test]
+    fn snapshot_json_is_parseable() {
+        let r = Registry::new(true);
+        r.counter("a", Labels::none()).inc(1);
+        r.histogram("h", Labels::instance(2)).observe(5);
+        let text = r.snapshot(3.5).to_json().to_string();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.at(&["metrics", "a"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            j.at(&["metrics", "h{instance=2}", "count"])
+                .unwrap()
+                .as_f64(),
+            Some(1.0)
+        );
+    }
+}

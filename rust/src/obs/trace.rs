@@ -1,0 +1,383 @@
+//! Request-scoped tracing (ISSUE 8 tentpole, part 2).
+//!
+//! A span id is minted when a request enters the system (the live
+//! leader's submit path, or the sim's `on_send`) and rides along in
+//! `Msg` envelopes and sim events. Each lifecycle phase —
+//! route → queue → prefill → kv_transfer → decode → retire, plus
+//! migration and promotion handshakes — closes one interval on that
+//! span. Timestamps are caller-clock f64 seconds, so the same sink
+//! serves the live server (shared-epoch `Instant` elapsed) and the
+//! sim (virtual `EventQueue` clock) without translation.
+//!
+//! **Replay safety** (PR 6 interop): the fault fabric duplicates and
+//! reorders messages, and receivers dedupe with `SeenMids` /
+//! landed-window checks — but trace calls can still fire twice for
+//! the same (span, phase). The sink is idempotent: a `begin` on an
+//! already-closed phase is ignored, a duplicate `begin` keeps the
+//! first open timestamp, and an `end`/`complete` after close counts
+//! into `dup_closes` instead of emitting a second event. Orphan
+//! `end`s (no matching begin — e.g. the begin's message was dropped
+//! before a resend) count into `orphan_ends`.
+//!
+//! Export is Chrome trace-event JSON (`chrome://tracing` / Perfetto):
+//! one complete `"X"` event per closed phase, `ts`/`dur` in
+//! microseconds, `tid` = span id so each request gets its own row.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Lifecycle phase names, used both as trace-event names and as the
+/// keys of the span-chain completeness check.
+pub mod phase {
+    pub const ROUTE: &str = "route";
+    pub const QUEUE: &str = "queue";
+    pub const PREFILL: &str = "prefill";
+    pub const KV_TRANSFER: &str = "kv_transfer";
+    pub const DECODE: &str = "decode";
+    pub const RETIRE: &str = "retire";
+    pub const MIGRATE: &str = "migrate";
+    pub const PROMOTE: &str = "promote";
+}
+
+/// Span-id namespaces. Request spans use the request id directly;
+/// migrations and promotions are folded into disjoint high ranges so
+/// one sink holds all three without collisions.
+pub fn request_span(rid: u64) -> u64 {
+    rid
+}
+
+pub fn migration_span(mid: u64) -> u64 {
+    mid | (1 << 62)
+}
+
+pub fn promotion_span(shard: u64) -> u64 {
+    shard | (1 << 63)
+}
+
+/// One closed interval on a span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub span: u64,
+    pub phase: &'static str,
+    /// Process/instance the phase ran on (`u32::MAX` = leader).
+    pub pid: u32,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+#[derive(Default)]
+struct State {
+    /// (span, phase) → (begin time, pid).
+    open: HashMap<(u64, &'static str), (f64, u32)>,
+    /// Phases already closed — the idempotence guard.
+    closed: HashSet<(u64, &'static str)>,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+    dup_closes: u64,
+    orphan_ends: u64,
+}
+
+struct TraceShared {
+    enabled: AtomicBool,
+    cap: usize,
+    st: Mutex<State>,
+}
+
+/// Shared tracing sink. Disabled mode is a single relaxed load per
+/// call; clones share state.
+#[derive(Clone)]
+pub struct TraceSink(Arc<TraceShared>);
+
+/// Default event cap: bounded memory on long runs; overflow counts
+/// into `dropped` and is reported in the export.
+pub const DEFAULT_TRACE_CAP: usize = 262_144;
+
+impl TraceSink {
+    pub fn new(enabled: bool) -> Self {
+        Self::with_cap(enabled, DEFAULT_TRACE_CAP)
+    }
+
+    pub fn with_cap(enabled: bool, cap: usize) -> Self {
+        TraceSink(Arc::new(TraceShared {
+            enabled: AtomicBool::new(enabled),
+            cap,
+            st: Mutex::new(State::default()),
+        }))
+    }
+
+    /// Enabled iff `MEMSERVE_TRACE` is set to something other than
+    /// `""`/`0`/`off`.
+    pub fn from_env() -> Self {
+        let on = match std::env::var("MEMSERVE_TRACE").as_deref() {
+            Ok("") | Ok("0") | Ok("off") | Err(_) => false,
+            Ok(_) => true,
+        };
+        TraceSink::new(on)
+    }
+
+    pub fn disabled() -> Self {
+        TraceSink::new(false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Open a phase interval. Idempotent: ignored when the phase is
+    /// already open (first begin wins) or already closed (replay).
+    pub fn begin(&self, span: u64, ph: &'static str, pid: u32, now: f64) {
+        if !self.enabled() {
+            return;
+        }
+        let mut st = self.0.st.lock().unwrap();
+        if st.closed.contains(&(span, ph)) {
+            return;
+        }
+        st.open.entry((span, ph)).or_insert((now, pid));
+    }
+
+    /// Close a phase interval opened by `begin`. A close without a
+    /// matching open is counted (`dup_closes` if the phase already
+    /// closed, `orphan_ends` otherwise) and otherwise ignored.
+    pub fn end(&self, span: u64, ph: &'static str, now: f64) {
+        if !self.enabled() {
+            return;
+        }
+        let mut st = self.0.st.lock().unwrap();
+        match st.open.remove(&(span, ph)) {
+            Some((t0, pid)) => {
+                st.closed.insert((span, ph));
+                push_event(
+                    &mut st,
+                    self.0.cap,
+                    TraceEvent { span, phase: ph, pid, t0, t1: now },
+                );
+            }
+            None => {
+                if st.closed.contains(&(span, ph)) {
+                    st.dup_closes += 1;
+                } else {
+                    st.orphan_ends += 1;
+                }
+            }
+        }
+    }
+
+    /// Record a phase whose begin and end are known at one call site.
+    /// Same idempotence contract as `begin`+`end`.
+    pub fn complete(
+        &self,
+        span: u64,
+        ph: &'static str,
+        pid: u32,
+        t0: f64,
+        t1: f64,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let mut st = self.0.st.lock().unwrap();
+        if !st.closed.insert((span, ph)) {
+            st.dup_closes += 1;
+            return;
+        }
+        st.open.remove(&(span, ph));
+        push_event(
+            &mut st,
+            self.0.cap,
+            TraceEvent { span, phase: ph, pid, t0, t1 },
+        );
+    }
+
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.0.st.lock().unwrap().events.clone()
+    }
+
+    /// (recorded, dropped, dup_closes, orphan_ends).
+    pub fn stats(&self) -> (u64, u64, u64, u64) {
+        let st = self.0.st.lock().unwrap();
+        (st.events.len() as u64, st.dropped, st.dup_closes, st.orphan_ends)
+    }
+
+    /// Closed-phase sets per span — the span-chain view.
+    pub fn chains(&self) -> HashMap<u64, HashSet<&'static str>> {
+        let st = self.0.st.lock().unwrap();
+        let mut out: HashMap<u64, HashSet<&'static str>> = HashMap::new();
+        for ev in &st.events {
+            out.entry(ev.span).or_default().insert(ev.phase);
+        }
+        out
+    }
+
+    /// True iff `span` closed every required request-lifecycle phase:
+    /// route, queue, prefill, decode, retire — plus kv_transfer when
+    /// `disaggregated` (colocated requests never ship KV over the
+    /// wire, so the phase legitimately never opens).
+    pub fn chain_complete(&self, span: u64, disaggregated: bool) -> bool {
+        let st = self.0.st.lock().unwrap();
+        let mut need = vec![
+            phase::ROUTE,
+            phase::QUEUE,
+            phase::PREFILL,
+            phase::DECODE,
+            phase::RETIRE,
+        ];
+        if disaggregated {
+            need.push(phase::KV_TRANSFER);
+        }
+        need.iter().all(|ph| st.closed.contains(&(span, ph)))
+    }
+
+    /// Chrome trace-event JSON (load in `chrome://tracing` or
+    /// ui.perfetto.dev). Seconds → microseconds; `tid` = span id so
+    /// each request renders as its own track.
+    pub fn to_chrome_json(&self) -> Json {
+        let st = self.0.st.lock().unwrap();
+        let evs: Vec<Json> = st
+            .events
+            .iter()
+            .map(|ev| {
+                Json::obj(vec![
+                    ("name", Json::str(ev.phase)),
+                    ("cat", Json::str("memserve")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(ev.t0 * 1e6)),
+                    ("dur", Json::num((ev.t1 - ev.t0).max(0.0) * 1e6)),
+                    ("pid", Json::num(ev.pid as f64)),
+                    ("tid", Json::num(ev.span as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::arr(evs)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("dropped", Json::num(st.dropped as f64)),
+            ("dupCloses", Json::num(st.dup_closes as f64)),
+            ("orphanEnds", Json::num(st.orphan_ends as f64)),
+        ])
+    }
+}
+
+fn push_event(st: &mut State, cap: usize, ev: TraceEvent) {
+    if st.events.len() >= cap {
+        st.dropped += 1;
+    } else {
+        st.events.push(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_end_records_one_event() {
+        let t = TraceSink::new(true);
+        t.begin(7, phase::PREFILL, 2, 1.0);
+        t.end(7, phase::PREFILL, 1.5);
+        let evs = t.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].phase, "prefill");
+        assert_eq!(evs[0].pid, 2);
+        assert!((evs[0].t1 - evs[0].t0 - 0.5).abs() < 1e-12);
+    }
+
+    /// ISSUE 8 satellite: a duplicated message (PR 6 fault fabric)
+    /// replaying begin/end must not double-close or orphan the span.
+    #[test]
+    fn replayed_phases_are_idempotent() {
+        let t = TraceSink::new(true);
+        t.begin(1, phase::DECODE, 0, 1.0);
+        t.begin(1, phase::DECODE, 0, 2.0); // dup begin: first wins
+        t.end(1, phase::DECODE, 3.0);
+        t.end(1, phase::DECODE, 4.0); // dup end: counted, not emitted
+        t.begin(1, phase::DECODE, 0, 5.0); // begin after close: ignored
+        let evs = t.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].t0, 1.0);
+        assert_eq!(evs[0].t1, 3.0);
+        let (recorded, dropped, dups, orphans) = t.stats();
+        assert_eq!((recorded, dropped, dups, orphans), (1, 0, 1, 0));
+        // complete() replay is likewise inert.
+        t.complete(2, phase::ROUTE, 9, 0.0, 0.1);
+        t.complete(2, phase::ROUTE, 9, 0.0, 0.2);
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.stats().2, 2);
+    }
+
+    #[test]
+    fn orphan_end_is_counted_not_emitted() {
+        let t = TraceSink::new(true);
+        t.end(42, phase::KV_TRANSFER, 1.0);
+        assert!(t.events().is_empty());
+        assert_eq!(t.stats().3, 1);
+    }
+
+    #[test]
+    fn chain_completeness() {
+        let t = TraceSink::new(true);
+        for ph in [
+            phase::ROUTE,
+            phase::QUEUE,
+            phase::PREFILL,
+            phase::DECODE,
+            phase::RETIRE,
+        ] {
+            t.complete(5, ph, 0, 0.0, 1.0);
+        }
+        assert!(t.chain_complete(5, false));
+        assert!(!t.chain_complete(5, true)); // no kv_transfer yet
+        t.complete(5, phase::KV_TRANSFER, 0, 0.2, 0.4);
+        assert!(t.chain_complete(5, true));
+        assert!(!t.chain_complete(6, false));
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let t = TraceSink::disabled();
+        t.begin(1, phase::ROUTE, 0, 0.0);
+        t.end(1, phase::ROUTE, 1.0);
+        t.complete(1, phase::QUEUE, 0, 0.0, 1.0);
+        assert!(t.events().is_empty());
+        assert_eq!(t.stats(), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn cap_bounds_memory() {
+        let t = TraceSink::with_cap(true, 2);
+        for span in 0..5 {
+            t.complete(span, phase::ROUTE, 0, 0.0, 1.0);
+        }
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.stats().1, 3);
+    }
+
+    #[test]
+    fn span_namespaces_are_disjoint() {
+        let r = request_span(123);
+        let m = migration_span(123);
+        let p = promotion_span(123);
+        assert_ne!(r, m);
+        assert_ne!(r, p);
+        assert_ne!(m, p);
+    }
+
+    #[test]
+    fn chrome_export_parses_and_scales() {
+        let t = TraceSink::new(true);
+        t.complete(9, phase::PREFILL, 3, 1.0, 1.25);
+        let text = t.to_chrome_json().to_string();
+        let j = Json::parse(&text).unwrap();
+        let evs = match j.at(&["traceEvents"]).unwrap() {
+            Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].at(&["ts"]).unwrap().as_f64(), Some(1e6));
+        assert_eq!(evs[0].at(&["dur"]).unwrap().as_f64(), Some(0.25e6));
+        assert_eq!(evs[0].at(&["tid"]).unwrap().as_f64(), Some(9.0));
+    }
+}

@@ -52,6 +52,7 @@ use std::thread::JoinHandle;
 
 use crate::elastic::delta::DeltaEvent;
 use crate::mempool::InstanceId;
+use crate::obs::Registry;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::policy::{Decision, PolicyKind};
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad, RouteOutcome};
@@ -151,6 +152,21 @@ impl ShardWorkerPool {
         policy: PolicyKind,
         cost: OperatorCostModel,
     ) -> Self {
+        Self::new_with_obs(shards, block_tokens, ttl, policy, cost, None)
+    }
+
+    /// Like [`Self::new`], with each worker's scheduler registering
+    /// its route-path metrics (labeled `shard=k`) into `reg` before
+    /// the thread starts (ISSUE 8). Handles resolve once; the workers'
+    /// submit path stays lock-free.
+    pub fn new_with_obs(
+        shards: usize,
+        block_tokens: usize,
+        ttl: f64,
+        policy: PolicyKind,
+        cost: OperatorCostModel,
+        reg: Option<&Registry>,
+    ) -> Self {
         assert!(shards >= 1, "at least one shard");
         let acks = Arc::new(AckBoard {
             acked: Mutex::new(vec![0; shards]),
@@ -160,12 +176,15 @@ impl ShardWorkerPool {
         let mut handles = Vec::with_capacity(shards);
         for k in 0..shards {
             let (tx, rx) = mpsc::channel();
-            let gs = GlobalScheduler::new(
+            let mut gs = GlobalScheduler::new(
                 policy,
                 cost.clone(),
                 block_tokens,
                 ttl,
             );
+            if let Some(reg) = reg {
+                gs.attach_obs(reg, Some(k as u32));
+            }
             let acks = Arc::clone(&acks);
             handles.push(
                 std::thread::Builder::new()

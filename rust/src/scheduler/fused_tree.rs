@@ -1112,10 +1112,14 @@ impl FusedPromptTree {
     /// Expire every (node, instance) pair whose last insert is older
     /// than the TTL. Pops the lazy min-heap — O(log n) per expired pair
     /// plus skipped stale entries, not a full-tree scan per victim.
-    pub fn expire(&mut self, now: f64) {
+    /// Returns the number of owner pairs removed (including pairs
+    /// reclaimed with a dropped subtree), feeding the
+    /// `sched.expired_pairs` metric.
+    pub fn expire(&mut self, now: f64) -> usize {
         if self.ttl <= 0.0 {
-            return;
+            return 0;
         }
+        let before = self.owner_pairs;
         while let Some(top) = self.heap.peek() {
             // Same staleness predicate as the reference implementation
             // (`now - last_insert > ttl`, i.e. keep while `<=`), so
@@ -1152,6 +1156,7 @@ impl FusedPromptTree {
                 self.drop_subtree(e.node);
             }
         }
+        before - self.owner_pairs
     }
 
     fn drop_subtree(&mut self, node: usize) {

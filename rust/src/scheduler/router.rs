@@ -25,6 +25,7 @@
 use std::collections::{BTreeSet, HashMap, HashSet};
 
 use crate::mempool::InstanceId;
+use crate::obs::{Counter, Histo, Labels, Registry};
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::fused_tree::{cold_rank_cmp, ColdRank};
 use crate::scheduler::policy::{decide, Candidate, Decision, PolicyKind};
@@ -153,6 +154,22 @@ pub struct GlobalScheduler {
     cand_buf: Vec<Candidate>,
     cold_buf: Vec<(ColdRank, InstanceId)>,
     cold_sel: Vec<InstanceId>,
+    /// Metric handles, attached once via [`Self::attach_obs`] (ISSUE
+    /// 8). `None` = uninstrumented: zero route-path overhead.
+    obs: Option<SchedObs>,
+}
+
+/// Route-path metric handles. All writes are relaxed atomics on
+/// pre-registered handles — no registry lookup per route.
+struct SchedObs {
+    routes: Counter,
+    degraded_routes: Counter,
+    expired_pairs: Counter,
+    matched_tokens: Histo,
+    queued_tokens: Histo,
+    /// Capacity pressure in milli-units ([0, 1] × 1000), from the
+    /// load book's `set_load` feed.
+    pressure_milli: Histo,
 }
 
 impl GlobalScheduler {
@@ -193,7 +210,27 @@ impl GlobalScheduler {
             cand_buf: vec![],
             cold_buf: vec![],
             cold_sel: vec![],
+            obs: None,
         }
+    }
+
+    /// Register this scheduler's route-path metrics into `reg`,
+    /// labeled by data-plane shard when it serves one. Handles are
+    /// resolved once here; the route path then touches only relaxed
+    /// atomics (and nothing at all when the registry is disabled).
+    pub fn attach_obs(&mut self, reg: &Registry, shard: Option<u32>) {
+        let l = match shard {
+            Some(s) => Labels::shard(s),
+            None => Labels::none(),
+        };
+        self.obs = Some(SchedObs {
+            routes: reg.counter("sched.routes", l),
+            degraded_routes: reg.counter("sched.degraded_routes", l),
+            expired_pairs: reg.counter("sched.expired_pairs", l),
+            matched_tokens: reg.histogram("sched.matched_tokens", l),
+            queued_tokens: reg.histogram("sched.queued_tokens", l),
+            pressure_milli: reg.histogram("sched.pressure_milli", l),
+        });
     }
 
     pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
@@ -249,6 +286,11 @@ impl GlobalScheduler {
         {
             return;
         }
+        if let Some(obs) = &self.obs {
+            obs.queued_tokens.observe(load.queued_tokens as u64);
+            obs.pressure_milli
+                .observe((load.capacity_pressure.clamp(0.0, 1.0) * 1e3) as u64);
+        }
         let key = self.rank_key(&load);
         self.book.set(id, load, key);
     }
@@ -298,7 +340,7 @@ impl GlobalScheduler {
         // Heap-driven TTL housekeeping rides the routing path: an O(1)
         // peek per shard when nothing has expired, O(log n) per stale
         // entry.
-        self.trees.expire(now);
+        let expired = self.trees.expire(now);
         self.sync_book();
         // One walk of the prompt's shard yields the matched prefix for
         // the whole fleet; all buffers are reused across routes (no
@@ -432,6 +474,16 @@ impl GlobalScheduler {
             }
             _ => false,
         };
+        if let Some(obs) = &self.obs {
+            obs.routes.inc(1);
+            if degraded {
+                obs.degraded_routes.inc(1);
+            }
+            if expired > 0 {
+                obs.expired_pairs.inc(expired as u64);
+            }
+            obs.matched_tokens.observe(decision.matched_tokens as u64);
+        }
         Ok(RouteOutcome {
             decision,
             expected_prefill_s,
@@ -446,8 +498,16 @@ impl GlobalScheduler {
         self.trees.record(instance, tokens, now);
     }
 
-    pub fn expire(&mut self, now: f64) {
-        self.trees.expire(now);
+    /// Returns owner pairs expired this pass (also fed to the
+    /// `sched.expired_pairs` counter when instrumented).
+    pub fn expire(&mut self, now: f64) -> usize {
+        let expired = self.trees.expire(now);
+        if let Some(obs) = &self.obs {
+            if expired > 0 {
+                obs.expired_pairs.inc(expired as u64);
+            }
+        }
+        expired
     }
 }
 

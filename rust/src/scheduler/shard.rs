@@ -359,10 +359,10 @@ impl ShardedPromptTrees {
         }
     }
 
-    pub fn expire(&mut self, now: f64) {
-        for t in &mut self.shards {
-            t.expire(now);
-        }
+    /// Returns total owner pairs expired across all shards (the
+    /// `sched.expired_pairs` metric feed).
+    pub fn expire(&mut self, now: f64) -> usize {
+        self.shards.iter_mut().map(|t| t.expire(now)).sum()
     }
 
     // ------------------------------------------------------------------

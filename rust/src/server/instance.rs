@@ -12,6 +12,7 @@ use crate::engine::core::ActiveDecode;
 use crate::mempool::{BlockGeometry, InstanceId, MemPool, TransferMode};
 use crate::net::fabric::NetError;
 use crate::net::{Endpoint, Fabric};
+use crate::obs::{trace::phase, view, Registry, TraceSink};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::prompt_tree::InstanceKind;
 use crate::server::message::Msg;
@@ -35,6 +36,13 @@ pub struct InstanceConfig {
     /// Cluster-wide clock epoch (shared with the leader so timestamps
     /// are comparable across threads).
     pub epoch: Instant,
+    /// Shared metric registry (ISSUE 8): the instance folds its pool
+    /// stats in on every heartbeat and on exit, so the leader's
+    /// cluster view keeps the last snapshot even if this thread dies.
+    pub obs: Registry,
+    /// Shared trace sink; instance-side phases (prefill, kv_transfer
+    /// landing, decode) close on the span carried by the dispatch.
+    pub trace: TraceSink,
 }
 
 /// Run one instance until `Shutdown`. Designed to be spawned on its own
@@ -82,11 +90,14 @@ pub fn run_instance(
     let mut backflow_to = cfg.backflow_to;
 
     loop {
-        // Heartbeat.
+        // Heartbeat (plus the heartbeat-cadence metric scrape: pool
+        // stats fold into the shared registry under this instance's
+        // label — absolute stores, so re-folding is idempotent).
         if last_beat.elapsed() >= cfg.heartbeat_every {
             let _ = fabric.send(cfg.id, cfg.leader, Msg::Heartbeat {
                 from: cfg.id,
             });
+            view::fold_pool(&cfg.obs, cfg.id.0, &engine.pool.stats());
             last_beat = Instant::now();
         }
         // Drain the inbox (non-blocking while there is decode work).
@@ -97,18 +108,26 @@ pub fn run_instance(
                 // Our own inbox sender is gone: the leader detached us
                 // (decommission/kill). Exit now instead of spinning on
                 // a dead channel until shutdown (ISSUE 6 satellite —
-                // Disconnected is not a timeout).
-                Err(_) => return,
+                // Disconnected is not a timeout). Fold a final stats
+                // snapshot first so a killed instance's counters reach
+                // the cluster view (ISSUE 8 counter-loss fix).
+                Err(_) => {
+                    view::fold_pool(&cfg.obs, cfg.id.0, &engine.pool.stats());
+                    return;
+                }
             }
         } else {
             endpoint.try_recv().map(|(_, m)| m)
         };
         match msg {
-            Some(Msg::Shutdown) => return,
-            Some(Msg::Dispatch { req, decode_to }) => {
+            Some(Msg::Shutdown) => {
+                view::fold_pool(&cfg.obs, cfg.id.0, &engine.pool.stats());
+                return;
+            }
+            Some(Msg::Dispatch { req, decode_to, span }) => {
                 handle_dispatch(
                     &cfg, &mut engine, &fabric, &mut active, req,
-                    decode_to, now(),
+                    decode_to, span, now(),
                 );
             }
             Some(Msg::KvHandoff {
@@ -121,12 +140,13 @@ pub fn run_instance(
                 first_token_time,
                 logits,
                 insert,
+                span,
                 ..
             }) => {
                 handle_handoff(
                     &cfg, &mut engine, &fabric, &mut active, req, payload,
                     n_blocks, prompt_len, cached_tokens, scheduled,
-                    first_token_time, logits, insert, now(),
+                    first_token_time, logits, insert, span, now(),
                 );
             }
             Some(Msg::KvBackflow {
@@ -363,6 +383,7 @@ fn handle_migrate_out(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_dispatch(
     cfg: &InstanceConfig,
     engine: &mut Engine,
@@ -370,9 +391,11 @@ fn handle_dispatch(
     active: &mut ActiveDecodeSet,
     req: crate::engine::Request,
     decode_to: Option<InstanceId>,
+    span: u64,
     t: f64,
 ) {
     let scheduled = t;
+    cfg.trace.begin(span, phase::PREFILL, cfg.id.0, t);
     let pf = match engine.prefill(&req.prompt, t) {
         Ok(pf) => pf,
         Err(e) => {
@@ -385,12 +408,20 @@ fn handle_dispatch(
             return;
         }
     };
+    cfg.trace
+        .end(span, phase::PREFILL, cfg.epoch.elapsed().as_secs_f64());
     match decode_to {
         None => {
             // Colocated: first token + local decode.
             let rid = req.id;
             match engine.start_decode(req, pf) {
                 Ok(a) => {
+                    cfg.trace.begin(
+                        span,
+                        phase::DECODE,
+                        cfg.id.0,
+                        cfg.epoch.elapsed().as_secs_f64(),
+                    );
                     let _ = fabric.send(cfg.id, cfg.leader, Msg::Token {
                         rid,
                         token: a.pending_token,
@@ -433,7 +464,14 @@ fn handle_dispatch(
                 calls,
                 insert: cfg.milestone.decode_caches(),
                 req: req.clone(),
+                span,
             };
+            cfg.trace.begin(
+                span,
+                phase::KV_TRANSFER,
+                cfg.id.0,
+                cfg.epoch.elapsed().as_secs_f64(),
+            );
             if let Err(e) = fabric.send(cfg.id, d, msg) {
                 log::error!("handoff to {d} failed: {e}");
             }
@@ -468,6 +506,7 @@ fn handle_handoff(
     first_token_time: f64,
     logits: Vec<f32>,
     _insert: bool,
+    span: u64,
     t: f64,
 ) {
     let groups = match import_groups(engine, &payload, n_blocks, t) {
@@ -477,6 +516,11 @@ fn handle_handoff(
             return;
         }
     };
+    // The prompt KV has landed in this decode instance's pool: the
+    // wire transfer the prefill side opened is over. (A duplicated
+    // handoff replays this close; the sink is idempotent.)
+    cfg.trace
+        .end(span, phase::KV_TRANSFER, cfg.epoch.elapsed().as_secs_f64());
     let rid = req.id;
     match engine.start_decode_from_blocks(req, groups, prompt_len, logits, 0)
     {
@@ -484,6 +528,12 @@ fn handle_handoff(
             a.cached_tokens = cached_tokens;
             a.scheduled = scheduled;
             a.first_token_time = first_token_time;
+            cfg.trace.begin(
+                span,
+                phase::DECODE,
+                cfg.id.0,
+                cfg.epoch.elapsed().as_secs_f64(),
+            );
             let _ = fabric.send(cfg.id, cfg.leader, Msg::Token {
                 rid,
                 token: a.pending_token,
@@ -581,6 +631,14 @@ fn finish_decode(
         }
     }
 
+    // Request spans are the request id by construction (the leader
+    // mints them with `trace::request_span`), so the decode close does
+    // not need the span threaded through `ActiveDecode`.
+    cfg.trace.end(
+        crate::obs::trace::request_span(rid),
+        phase::DECODE,
+        t,
+    );
     let _ = fabric.send(cfg.id, cfg.leader, Msg::Finished {
         rid,
         instance: cfg.id,

@@ -21,6 +21,9 @@ use crate::mempool::{BlockGeometry, InstanceId};
 use crate::metrics::{Metrics, RequestRecord};
 use crate::net::fabric::NetError;
 use crate::net::{Fabric, LinkModel};
+use crate::obs::flight::kind as fkind;
+use crate::obs::trace::phase;
+use crate::obs::{trace, view, ClusterView, FlightRecorder, Registry, TraceSink};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
@@ -226,6 +229,19 @@ pub struct ServeCluster {
     geom: BlockGeometry,
     /// Decode pairing for disaggregated dispatch (round-robin).
     decode_rr: AtomicU64,
+    /// Cluster-wide metric registry (ISSUE 8): shared with every
+    /// instance thread and each shard's router; the collector scrapes
+    /// leader-side stats (fabric, replication lag) into it
+    /// periodically so [`Self::cluster_view`] is one merged snapshot.
+    obs: Registry,
+    /// Request-scoped trace sink: the leader mints a span per routed
+    /// request (`trace::request_span(rid)`); instances close their
+    /// phases on the same span carried by the dispatch.
+    trace: TraceSink,
+    /// Bounded control-plane flight recorder (heartbeats, deltas,
+    /// suspicion, promotions, fence epochs) — dumped to the bench-JSON
+    /// sink when the failure detector fires.
+    flight: FlightRecorder,
 }
 
 /// Client-facing handle (cheap to clone via Arc).
@@ -277,6 +293,18 @@ impl ServeCluster {
         };
         let mut unit_schedulers: Vec<GlobalScheduler> =
             (0..gs_shards).map(|_| make_gs(cost.clone())).collect();
+
+        // Observability plumbing (ISSUE 8): one registry + trace sink
+        // shared by the leader, every instance thread, and each
+        // shard's router. Both are env-gated (`MEMSERVE_METRICS`,
+        // `MEMSERVE_TRACE`), so the disabled path costs a few relaxed
+        // loads on the hot route.
+        let obs = Registry::from_env();
+        let trace_sink = TraceSink::from_env();
+        let flight = FlightRecorder::default();
+        for (k, gs) in unit_schedulers.iter_mut().enumerate() {
+            gs.attach_obs(&obs, Some(k as u32));
+        }
 
         let mut cm = ClusterManager::new(
             cfgc.cluster.heartbeat_ms / 1e3,
@@ -344,6 +372,8 @@ impl ServeCluster {
                 index_ttl_s: cfgc.mempool.index_ttl_s,
                 backflow_to,
                 epoch,
+                obs: obs.clone(),
+                trace: trace_sink.clone(),
             };
             let rt = runtime.clone();
             let fab = fabric.clone();
@@ -427,6 +457,9 @@ impl ServeCluster {
             runtime,
             geom,
             decode_rr: AtomicU64::new(0),
+            obs,
+            trace: trace_sink,
+            flight,
         });
 
         // Ship the seed-roster backlog to the GS followers.
@@ -465,17 +498,57 @@ impl ServeCluster {
     /// order is irrelevant (per-peer, per-shard cursors send by
     /// sequence), so routing never waits on the wire.
     fn gs_apply_batch(&self, evs: impl IntoIterator<Item = DeltaEvent>) {
-        self.plane.apply_batch(evs, &self.fabric, LEADER);
+        // Count applied deltas for the flight recorder without
+        // buffering the batch (the plane consumes the iterator).
+        let n = std::cell::Cell::new(0u64);
+        self.plane.apply_batch(
+            evs.into_iter().inspect(|_| n.set(n.get() + 1)),
+            &self.fabric,
+            LEADER,
+        );
+        if n.get() > 0 {
+            self.flight.record(
+                self.now(),
+                u32::MAX,
+                fkind::DELTA,
+                format!("applied={}", n.get()),
+            );
+        }
+    }
+
+    /// Fold leader-side stats — fabric counters and per-shard
+    /// replication lag — into the shared registry (absolute stores, so
+    /// re-scraping is idempotent). Instance pool stats arrive on their
+    /// own heartbeats; this covers everything only the leader sees.
+    fn scrape(&self) {
+        view::fold_net(&self.obs, &self.fabric.stats());
+        for s in 0..self.plane.shard_count() {
+            let (head, acks) = self.plane.shard_status(s);
+            let lags: Vec<(u32, u64)> = acks
+                .iter()
+                .map(|&(i, acked)| (i.0, head.saturating_sub(acked)))
+                .collect();
+            view::fold_replication(&self.obs, s as u32, head, &lags);
+        }
     }
 
     fn collector(&self, ep: crate::net::Endpoint<Msg>) {
         let mut last_sweep = Instant::now();
+        let mut sweeps: u64 = 0;
         loop {
             // Periodic failure sweep (time-gated, runs regardless of
             // message traffic).
             if last_sweep.elapsed() > Duration::from_millis(20) {
                 last_sweep = Instant::now();
                 let now = self.now();
+                sweeps += 1;
+                // Cluster scrape every ~25 sweeps (~500ms): fold the
+                // leader-side stats into the registry so the merged
+                // cluster view stays current without a caller in the
+                // loop. Skipped entirely when metrics are off.
+                if self.obs.enabled() && sweeps % 25 == 0 {
+                    self.scrape();
+                }
                 let dead = self.cm.lock().unwrap().sweep(now);
                 if !dead.is_empty() {
                     self.on_failure(&dead);
@@ -524,6 +597,16 @@ impl ServeCluster {
                     completion_time,
                     cached_seq,
                 } => {
+                    // Retire closes the request's span chain (ISSUE 8)
+                    // on the same span the dispatch minted; replayed
+                    // Finished messages are dedup'd by the sink.
+                    self.trace.complete(
+                        trace::request_span(rid),
+                        phase::RETIRE,
+                        instance.0,
+                        completion_time,
+                        self.now(),
+                    );
                     // Response path: update global prompt trees (Fig 6),
                     // replicated as a Record delta.
                     if !cached_seq.is_empty() {
@@ -568,6 +651,8 @@ impl ServeCluster {
                 }
                 Msg::Heartbeat { from } => {
                     let now = self.now();
+                    self.flight
+                        .record(now, from.0, fkind::HEARTBEAT, "");
                     let is_follower = {
                         let mut health = self.gs_health.lock().unwrap();
                         if health.all_followers.contains(&from) {
@@ -629,6 +714,8 @@ impl ServeCluster {
                     // delta — routing never sees it as lost. Empty
                     // tokens (failed/no-op task) only advance progress.
                     let now = self.now();
+                    self.trace
+                        .end(trace::migration_span(mid), phase::MIGRATE, now);
                     let blocks = tokens.len() / self.geom.block_tokens;
                     self.gs_apply(DeltaEvent::Handoff {
                         from,
@@ -729,6 +816,18 @@ impl ServeCluster {
                             sh.last_beat = self.now();
                         }
                     }
+                    let pnow = self.now();
+                    self.flight.record(
+                        pnow,
+                        shard as u32,
+                        fkind::PROMOTION,
+                        format!("snapshot restored at seq {}", snap.seq),
+                    );
+                    self.trace.end(
+                        trace::promotion_span(shard as u64),
+                        phase::PROMOTE,
+                        pnow,
+                    );
                     let mut pending =
                         self.promote_pending.lock().unwrap();
                     pending.remove(&shard);
@@ -747,6 +846,13 @@ impl ServeCluster {
     fn on_failure(&self, dead: &[InstanceId]) {
         log::warn!("instances failed: {dead:?}");
         {
+            let now = self.now();
+            for d in dead {
+                self.flight
+                    .record(now, d.0, fkind::MEMBERSHIP, "declared dead");
+            }
+        }
+        {
             let mut lc = self.lifecycle.lock().unwrap();
             for d in dead {
                 lc.force_decommission(*d);
@@ -757,6 +863,12 @@ impl ServeCluster {
             self.gs_apply(DeltaEvent::Leave { instance: *d });
         }
         let epoch = self.cm.lock().unwrap().epoch();
+        self.flight.record(
+            self.now(),
+            LEADER.0,
+            fkind::FENCE,
+            format!("membership epoch {epoch}"),
+        );
         let roster = self.instances.read().unwrap().clone();
         for &(iid, _) in &roster {
             if !dead.contains(&iid) {
@@ -835,6 +947,14 @@ impl ServeCluster {
                 decode_on: None,
             });
         }
+        // The queue phase spans accept → dispatch send; the route
+        // phase (inside it) is completed by `dispatch` itself.
+        self.trace.begin(
+            trace::request_span(rid),
+            phase::QUEUE,
+            LEADER.0,
+            self.now(),
+        );
         self.dispatch(rid, prompt, session, sampling)?;
         Ok(rid)
     }
@@ -887,6 +1007,9 @@ impl ServeCluster {
             .collect();
         let outcome =
             self.plane.route_request(&prompt, session, now, &loads)?;
+        let span = trace::request_span(rid);
+        self.trace
+            .complete(span, phase::ROUTE, LEADER.0, now, self.now());
         let target = outcome.decision.instance;
         anyhow::ensure!(
             alive.contains(&target),
@@ -932,8 +1055,9 @@ impl ServeCluster {
             sampling,
             arrival: now,
         };
+        self.trace.end(span, phase::QUEUE, self.now());
         self.fabric
-            .send(LEADER, target, Msg::Dispatch { req, decode_to })
+            .send(LEADER, target, Msg::Dispatch { req, decode_to, span })
             .map_err(|e| anyhow::anyhow!("dispatch: {e}"))?;
         Ok(())
     }
@@ -970,6 +1094,32 @@ impl ServeCluster {
 
     pub fn net_stats(&self) -> crate::net::NetStats {
         self.fabric.stats()
+    }
+
+    /// The cluster's shared metric registry (enabled unless
+    /// `MEMSERVE_METRICS=0`/`off`).
+    pub fn obs(&self) -> &Registry {
+        &self.obs
+    }
+
+    /// The request-scoped trace sink (enabled via `MEMSERVE_TRACE`).
+    pub fn trace(&self) -> &TraceSink {
+        &self.trace
+    }
+
+    /// The control-plane flight recorder (always on; bounded ring).
+    pub fn flight(&self) -> &FlightRecorder {
+        &self.flight
+    }
+
+    /// One merged cluster-wide observability snapshot. Leader-side
+    /// stats (fabric, replication lag) are folded in first, so the
+    /// view is current as of this call; instance pool stats ride
+    /// heartbeats (plus a final fold on instance exit), so they are at
+    /// most one heartbeat stale.
+    pub fn cluster_view(&self) -> ClusterView {
+        self.scrape();
+        ClusterView::capture(&self.obs, self.now())
     }
 
     /// Current roster snapshot (grows on [`Self::join`], shrinks on
@@ -1094,6 +1244,19 @@ impl ServeCluster {
             log::warn!(
                 "GS shard {shard} crashed (injected); promoting {target}"
             );
+            let pnow = self.now();
+            self.flight.record(
+                pnow,
+                shard as u32,
+                fkind::FAILOVER,
+                format!("promoting {target}"),
+            );
+            self.trace.begin(
+                trace::promotion_span(shard as u64),
+                phase::PROMOTE,
+                LEADER.0,
+                pnow,
+            );
             self.fabric
                 .send(LEADER, target, Msg::Promote {
                     shard,
@@ -1208,6 +1371,12 @@ impl ServeCluster {
         let sh = &mut health.shards[shard];
         sh.crashed = true;
         sh.promotion = None;
+        self.flight.record(
+            self.now(),
+            shard as u32,
+            fkind::FAILOVER,
+            "injected crash; awaiting heartbeat detection",
+        );
         log::warn!(
             "GS shard {shard} crashed (injected); awaiting heartbeat \
              detection"
@@ -1296,6 +1465,12 @@ impl ServeCluster {
                          deregistering",
                         cfgc.heartbeat_misses
                     );
+                    self.flight.record(
+                        now,
+                        f.0,
+                        fkind::DEREGISTER,
+                        "missed heartbeats",
+                    );
                     self.plane.deregister_follower(f);
                 }
             }
@@ -1330,6 +1505,31 @@ impl ServeCluster {
                      {window:.3}s); degrading its prefix range and \
                      promoting a follower"
                 );
+                let now = self.now();
+                self.flight.record(
+                    now,
+                    shard as u32,
+                    fkind::SUSPICION,
+                    format!("no beat for {window:.3}s"),
+                );
+                self.trace.begin(
+                    trace::promotion_span(shard as u64),
+                    phase::PROMOTE,
+                    LEADER.0,
+                    now,
+                );
+                // The failure detector fired: dump the flight ring to
+                // the bench-JSON sink (only when the sink is
+                // explicitly configured — tests that trip the
+                // detector must not litter the workspace).
+                if let Some(dir) = crate::util::bench::explicit_json_dir() {
+                    if let Some(p) = self
+                        .flight
+                        .dump_to(&dir, &format!("flight_shard{shard}"))
+                    {
+                        log::info!("flight recorder dumped to {p}");
+                    }
+                }
                 self.plane.set_shard_degraded(shard, true);
                 self.promote_pending.lock().unwrap().insert(shard);
             }
@@ -1446,6 +1646,8 @@ impl ServeCluster {
             // whole (post-join) fleet through the lifecycle filter.
             backflow_to: None,
             epoch: self.started,
+            obs: self.obs.clone(),
+            trace: self.trace.clone(),
         };
         let rt = self.runtime.clone();
         let fab = self.fabric.clone();
@@ -1579,6 +1781,12 @@ impl ServeCluster {
             ..Default::default()
         });
         for (mid, to, tokens) in sends {
+            self.trace.begin(
+                trace::migration_span(mid),
+                phase::MIGRATE,
+                id.0,
+                self.now(),
+            );
             self.fabric
                 .send(LEADER, id, Msg::MigrateOut { mid, to, tokens })
                 .map_err(|e| anyhow::anyhow!("migrate-out: {e}"))?;
@@ -1674,8 +1882,13 @@ impl ServeCluster {
             }
         };
         // Decommission: stop the thread, clear membership + ownership.
+        // The instance folds its final pool-stat snapshot into the
+        // shared registry on its Shutdown path, so its counters
+        // survive into the cluster view (ISSUE 8 satellite).
         let _ = self.fabric.send(LEADER, id, Msg::Shutdown);
         self.fabric.detach(id);
+        self.flight
+            .record(self.now(), id.0, fkind::DEREGISTER, "decommissioned");
         self.cm.lock().unwrap().deregister(id);
         self.gs_apply(DeltaEvent::Leave { instance: id });
         self.lifecycle

@@ -17,9 +17,13 @@ use crate::replica::snapshot::TreeSnapshot;
 pub enum Msg {
     /// Leader → prefill-capable instance: run this request. For
     /// disaggregated requests `decode_to` names the decode instance.
+    /// `span` is the trace-span id minted when the request was routed
+    /// (ISSUE 8); it rides every hop of the request's lifecycle so
+    /// instances close phases on the same span the leader opened.
     Dispatch {
         req: Request,
         decode_to: Option<InstanceId>,
+        span: u64,
     },
     /// Prefill → decode instance: `transfer_with_insert` of the prompt KV
     /// (one-shot, receiver allocates on demand). `calls` is the modeled
@@ -36,6 +40,8 @@ pub enum Msg {
         calls: usize,
         /// Receiver should insert into its index (milestone >= 2).
         insert: bool,
+        /// Trace-span id propagated from the dispatch (ISSUE 8).
+        span: u64,
     },
     /// Decode → prefill instance: `transfer_with_insert` of the decode
     /// suffix KV (milestone 3). `seq` = prompt + consumed generated
@@ -191,10 +197,11 @@ impl WireCost for Msg {
 impl std::fmt::Debug for Msg {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            Msg::Dispatch { req, decode_to } => f
+            Msg::Dispatch { req, decode_to, span } => f
                 .debug_struct("Dispatch")
                 .field("rid", &req.id)
                 .field("decode_to", decode_to)
+                .field("span", span)
                 .finish(),
             Msg::KvHandoff { req, n_blocks, .. } => f
                 .debug_struct("KvHandoff")
@@ -339,6 +346,7 @@ mod tests {
                 arrival: 0.0,
             },
             decode_to: None,
+            span: 1,
         };
         assert!(d.wire_cost().is_none());
     }

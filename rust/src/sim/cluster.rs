@@ -11,6 +11,11 @@ use crate::mempool::{
 };
 use crate::metrics::{Metrics, RequestRecord};
 use crate::net::LinkModel;
+use crate::obs::flight::kind as fkind;
+use crate::obs::trace::phase;
+use crate::obs::{
+    trace, ClusterView, FlightRecorder, Labels, Registry, TraceSink,
+};
 use crate::replica::ShardedReplicaGroup;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::prompt_tree::InstanceKind;
@@ -55,6 +60,13 @@ pub struct SimConfig {
     pub replication_drop: f64,
     /// Scripted elasticity events (drain / join) on the virtual clock.
     pub fleet: Vec<FleetEvent>,
+    /// Observability (ISSUE 8): when set, the sim records request
+    /// spans, folds instance stats into a metric registry, and keeps a
+    /// flight-recorder ring — all exported via [`SimReport::obs`].
+    /// Instrumentation is record-only: it never changes a routing
+    /// decision or a virtual-clock timestamp, so trace-identity tests
+    /// hold with it on or off. Default off (byte-stable reports).
+    pub observe: bool,
 }
 
 /// A scripted fleet change in the discrete-event simulation.
@@ -110,6 +122,7 @@ impl Default for SimConfig {
             gs_shards: 1,
             replication_drop: 0.0,
             fleet: vec![],
+            observe: false,
         }
     }
 }
@@ -145,6 +158,32 @@ pub struct SimReport {
     pub touches_deferred: u64,
     pub touches_drained: u64,
     pub touches_dropped: u64,
+    /// Observability bundle ([`SimConfig::observe`]): folded cluster
+    /// view, the trace sink (span chains + Chrome export), and the
+    /// flight-recorder ring. `None` when observation was off.
+    pub obs: Option<SimObs>,
+}
+
+/// The sim's observability outputs (handles share state with the run).
+#[derive(Clone)]
+pub struct SimObs {
+    pub view: ClusterView,
+    pub trace: TraceSink,
+    pub flight: FlightRecorder,
+}
+
+impl std::fmt::Debug for SimObs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (recorded, dropped, dups, orphans) = self.trace.stats();
+        f.debug_struct("SimObs")
+            .field("view_at", &self.view.at)
+            .field("trace_recorded", &recorded)
+            .field("trace_dropped", &dropped)
+            .field("trace_dup_closes", &dups)
+            .field("trace_orphan_ends", &orphans)
+            .field("flight_events", &self.flight.len())
+            .finish()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -313,6 +352,12 @@ pub struct Simulation {
     ctx: Vec<Vec<u32>>, // per-session running context
     report: SimReport,
     next_rid: u64,
+    /// Metric registry ([`SimConfig::observe`]); disabled = inert.
+    obs: Registry,
+    /// Trace sink on the *virtual* clock — span timestamps are sim
+    /// seconds, so the export shape is identical to the live server's.
+    trace: TraceSink,
+    flight: FlightRecorder,
 }
 
 impl Simulation {
@@ -358,6 +403,11 @@ impl Simulation {
         };
         for inst in &instances {
             gs.add_instance(inst.id, inst.kind);
+        }
+        let obs = Registry::new(cfg.observe);
+        let trace_sink = TraceSink::new(cfg.observe);
+        if cfg.observe {
+            gs.attach_obs(&obs, None);
         }
         // GS replication: the followers consume the same membership
         // deltas the serving tree starts from.
@@ -414,6 +464,9 @@ impl Simulation {
             ctx,
             report: SimReport::default(),
             next_rid: 1,
+            obs,
+            trace: trace_sink,
+            flight: FlightRecorder::default(),
         }
     }
 
@@ -522,6 +575,21 @@ impl Simulation {
                 inst.id
             );
         }
+        if self.cfg.observe {
+            for i in 0..self.instances.len() {
+                // A decommissioned instance's LAST fold (taken before
+                // its index was torn down) is the one that must
+                // survive — re-folding would overwrite it with zeros.
+                if self.instances[i].state != InstanceState::Decommissioned {
+                    self.fold_instance_stats(i);
+                }
+            }
+            self.report.obs = Some(SimObs {
+                view: ClusterView::capture(&self.obs, self.report.sim_seconds),
+                trace: self.trace.clone(),
+                flight: self.flight.clone(),
+            });
+        }
         self.report
     }
 
@@ -562,6 +630,12 @@ impl Simulation {
             InstanceState::Active,
             "routed to non-Active instance {p_idx}"
         );
+        // Span chain (ISSUE 8): routing is instantaneous on the
+        // virtual clock (zero-length route interval); the queue phase
+        // runs until the prefill admits the job.
+        let span = trace::request_span(rid);
+        self.trace.complete(span, phase::ROUTE, u32::MAX, now, now);
+        self.trace.begin(span, phase::QUEUE, p_idx as u32, now);
         // Decode instance: least-loaded Active decode-only
         // (disaggregated), or the same instance (colocated).
         let decode_inst = if self.cfg.decode_instances > 0
@@ -623,6 +697,12 @@ impl Simulation {
             FleetOp::Join { kind } => {
                 let id = self.instances.len() as u32;
                 let inst = Instance::new(id, kind, &self.cfg);
+                self.flight.record(
+                    now,
+                    id,
+                    fkind::MEMBERSHIP,
+                    format!("joined as {kind:?}"),
+                );
                 self.gs_delta(DeltaEvent::Join {
                     instance: InstanceId(id),
                     kind,
@@ -640,6 +720,12 @@ impl Simulation {
                 // zero locality loss). Promoted shards are consumed: a
                 // second failover of the same shard needs fresh
                 // replicas; untouched shards keep mirroring.
+                self.flight.record(
+                    now,
+                    shard.map(|s| s as u32).unwrap_or(u32::MAX),
+                    fkind::SUSPICION,
+                    "scripted GS primary crash",
+                );
                 let p = self.cfg.replication_drop;
                 let rng = &mut self.rep_rng;
                 let grp = self.replicas.as_mut().expect(
@@ -673,6 +759,19 @@ impl Simulation {
                     let tree = grp.extract_tree(s, promoted);
                     self.gs.trees.set_shard_tree(s, tree);
                     self.report.gs_failovers += 1;
+                    self.flight.record(
+                        now,
+                        s as u32,
+                        fkind::PROMOTION,
+                        format!("promoted replica {promoted}"),
+                    );
+                    self.trace.complete(
+                        trace::promotion_span(s as u64),
+                        phase::PROMOTE,
+                        u32::MAX,
+                        now,
+                        now,
+                    );
                 }
             }
             FleetOp::Drain { inst, migrate } => {
@@ -696,6 +795,8 @@ impl Simulation {
                 }
                 self.instances[inst].state = InstanceState::Draining;
                 let id = self.instances[inst].id;
+                self.flight
+                    .record(now, id.0, fkind::MEMBERSHIP, "draining");
                 // Routing stops seeing it immediately; its view stays
                 // matchable for the planner.
                 self.gs_delta(DeltaEvent::SetDraining {
@@ -816,11 +917,38 @@ impl Simulation {
             return;
         }
         let id = inst.id;
+        // Counter-loss fix (ISSUE 8 satellite, sim half): fold the
+        // final index stats into the registry BEFORE the index is
+        // replaced — the decommissioned instance's counters survive
+        // into the end-of-run cluster view.
+        if self.cfg.observe {
+            self.fold_instance_stats(i);
+        }
+        self.flight
+            .record(self.q.now(), id.0, fkind::DEREGISTER, "decommissioned");
         self.instances[i].state = InstanceState::Decommissioned;
         self.instances[i].index =
             RadixIndex::new(self.cfg.geom.block_tokens, 0.0);
         self.instances[i].index_blocks = 0;
         self.gs_delta(DeltaEvent::Leave { instance: id });
+    }
+
+    /// Fold one sim instance's ad-hoc counters (touch stats, eviction
+    /// and residency totals) into the registry under its instance
+    /// label. Absolute stores — idempotent across repeated folds.
+    fn fold_instance_stats(&self, i: usize) {
+        let inst = &self.instances[i];
+        let l = Labels::instance(inst.id.0);
+        let ts = inst.index.touch_stats();
+        self.obs.set_counter("pool.touches_deferred", l, ts.deferred);
+        self.obs.set_counter("pool.touches_drained", l, ts.drained);
+        self.obs.set_counter("pool.touches_dropped", l, ts.dropped);
+        self.obs.set_counter("pool.evicted_blocks", l, inst.evicted_blocks);
+        self.obs.set_counter(
+            "pool.indexed_token_blocks",
+            l,
+            inst.index.total_token_blocks() as u64,
+        );
     }
 
     /// Serial-resource discipline: prefill-first, then decode iteration.
@@ -838,6 +966,9 @@ impl Simulation {
         }
         if let Some(mut job) = self.instances[i].prefill_q.pop_front() {
             // --- Prefill (with local cache match). ---
+            let span = trace::request_span(job.rid);
+            self.trace.end(span, phase::QUEUE, now);
+            self.trace.begin(span, phase::PREFILL, i as u32, now);
             self.instances[i].queued_tokens =
                 self.instances[i].queued_tokens.saturating_sub(job.prompt.len());
             let cached = if self.cfg.caching {
@@ -939,6 +1070,8 @@ impl Simulation {
 
     fn on_prefill_done(&mut self, now: f64, i: usize, mut job: Job) {
         self.instances[i].busy = false;
+        let span = trace::request_span(job.rid);
+        self.trace.end(span, phase::PREFILL, now);
         job.rec.first_token = now; // prefill emits the first token
         job.generated = 1;
         // Caching at the prefill side (milestone step 2 / colocated).
@@ -960,6 +1093,7 @@ impl Simulation {
         match job.decode_inst {
             Some(d) => {
                 // The KV lands when its (serialized) transfer completes.
+                self.trace.begin(span, phase::KV_TRANSFER, i as u32, now);
                 let at = job.wire_done.max(now);
                 self.q.push(at, Ev::KvArrive {
                     inst: d,
@@ -968,6 +1102,7 @@ impl Simulation {
             }
             None => {
                 // Colocated: join the local decode set.
+                self.trace.begin(span, phase::DECODE, i as u32, now);
                 if job.generated >= job.gen_target {
                     self.finish(now, i, job);
                 } else if self.instances[i].active.len() < self.cfg.max_batch {
@@ -982,6 +1117,9 @@ impl Simulation {
 
     fn on_kv_arrive(&mut self, now: f64, d: usize, mut job: Job) {
         self.instances[d].expected_arrivals -= 1;
+        let span = trace::request_span(job.rid);
+        self.trace.end(span, phase::KV_TRANSFER, now);
+        self.trace.begin(span, phase::DECODE, d as u32, now);
         // Decode-side caching of the transferred prompt KV
         // (transfer_with_insert — milestone step 3).
         if self.cfg.caching && self.cfg.milestone.decode_caches() {
@@ -1031,6 +1169,10 @@ impl Simulation {
     fn finish(&mut self, now: f64, inst_idx: usize, mut job: Job) {
         job.rec.completion = now;
         job.rec.output_tokens = job.gen_target;
+        let span = trace::request_span(job.rid);
+        self.trace.end(span, phase::DECODE, now);
+        self.trace
+            .complete(span, phase::RETIRE, inst_idx as u32, now, now);
         // Build the full consumed sequence (prompt + generated KV).
         let mut seq = job.prompt.clone();
         for k in 0..job.gen_target {

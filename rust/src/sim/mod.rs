@@ -20,4 +20,4 @@ pub mod clock;
 pub mod cluster;
 
 pub use clock::EventQueue;
-pub use cluster::{FleetEvent, FleetOp, SimConfig, SimReport, Simulation};
+pub use cluster::{FleetEvent, FleetOp, SimConfig, SimObs, SimReport, Simulation};

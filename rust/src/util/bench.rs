@@ -162,6 +162,23 @@ fn json_sink_dir(var: Option<&str>) -> Option<String> {
     }
 }
 
+/// The active JSON sink directory resolved from the environment, or
+/// `None` when the sink is disabled. Benches use this to drop extra
+/// artifacts (trace JSON, flight-recorder dumps) next to their tables.
+pub fn bench_json_dir() -> Option<String> {
+    let var = std::env::var("MEMSERVE_BENCH_JSON").ok();
+    json_sink_dir(var.as_deref())
+}
+
+/// Like [`bench_json_dir`], but only when `MEMSERVE_BENCH_JSON` was
+/// *explicitly* set. The leader's flight-recorder dump uses this so a
+/// unit-test run that trips the failure detector never grows a
+/// `bench_results/` directory as a side effect.
+pub fn explicit_json_dir() -> Option<String> {
+    let var = std::env::var("MEMSERVE_BENCH_JSON").ok()?;
+    json_sink_dir(Some(&var))
+}
+
 /// Format microseconds human-readably.
 pub fn fmt_us(us: f64) -> String {
     if us < 1e3 {

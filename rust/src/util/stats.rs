@@ -2,11 +2,45 @@
 //! collected samples, streaming mean/variance (Welford), and fixed-width
 //! histograms for workload-statistics reporting (paper Fig 7).
 
-/// Collects raw f64 samples; percentiles are exact (sorted on demand).
-#[derive(Clone, Debug, Default)]
+/// Retained-sample cap for [`Samples::new`]. At ~8 bytes a sample this
+/// bounds a digest at 512 KiB no matter how long the run; percentile
+/// error from uniform reservoir sampling at this size is far below the
+/// log2-histogram error live paths accept (ISSUE 8 satellite).
+pub const DEFAULT_SAMPLE_CAP: usize = 65_536;
+
+/// Collects f64 samples for end-of-run digests.
+///
+/// Percentiles sort the retained vector in place, so memory and sort
+/// cost must stay bounded on long runs: beyond [`DEFAULT_SAMPLE_CAP`]
+/// retained values, `push` switches to uniform reservoir replacement
+/// (deterministic splitmix64, so runs reproduce). `mean`/`sum`/`min`/
+/// `max` stay **exact** over everything ever pushed (tracked as
+/// running aggregates); `percentile`/`std` are computed over the
+/// retained reservoir — exact until the cap is first exceeded,
+/// statistically unbiased after. Callers that truly need exact
+/// percentiles over unbounded history (short benches, tests) opt in
+/// via [`Samples::unbounded`]. Live serving paths should prefer
+/// `obs::registry` log2 histograms — O(1) memory and `&self`.
+#[derive(Clone, Debug)]
 pub struct Samples {
     xs: Vec<f64>,
     sorted: bool,
+    /// Retained-sample cap; 0 = unbounded.
+    cap: usize,
+    /// Total samples ever pushed (≥ `xs.len()`).
+    seen: u64,
+    /// Exact running aggregates over everything pushed.
+    total: f64,
+    run_min: f64,
+    run_max: f64,
+    /// splitmix64 state for reservoir replacement.
+    rng: u64,
+}
+
+impl Default for Samples {
+    fn default() -> Self {
+        Self::with_cap(DEFAULT_SAMPLE_CAP)
+    }
 }
 
 impl Samples {
@@ -14,49 +48,106 @@ impl Samples {
         Self::default()
     }
 
+    /// No retained-sample cap: exact percentiles, unbounded memory.
+    /// For short benches and tests only — see the type docs.
+    pub fn unbounded() -> Self {
+        Self::with_cap(0)
+    }
+
+    /// Explicit retained-sample cap (`0` = unbounded).
+    pub fn with_cap(cap: usize) -> Self {
+        Samples {
+            xs: Vec::new(),
+            sorted: false,
+            cap,
+            seen: 0,
+            total: 0.0,
+            run_min: f64::INFINITY,
+            run_max: f64::NEG_INFINITY,
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
     pub fn push(&mut self, x: f64) {
-        self.xs.push(x);
-        self.sorted = false;
+        self.seen += 1;
+        self.total += x;
+        self.run_min = self.run_min.min(x);
+        self.run_max = self.run_max.max(x);
+        if self.cap == 0 || self.xs.len() < self.cap {
+            self.xs.push(x);
+            self.sorted = false;
+        } else {
+            // Algorithm R: keep each of the `seen` samples with equal
+            // probability cap/seen by overwriting a uniform slot.
+            let j = crate::util::rng::splitmix64(&mut self.rng) % self.seen;
+            if (j as usize) < self.cap {
+                self.xs[j as usize] = x;
+                self.sorted = false;
+            }
+        }
     }
 
     pub fn extend(&mut self, other: &Samples) {
-        self.xs.extend_from_slice(&other.xs);
-        self.sorted = false;
+        for &x in &other.xs {
+            self.push(x);
+        }
+        // Samples `other` rotated out of its reservoir are gone as
+        // values, but their count and sum keep mean/sum/min/max exact.
+        let dropped = other.seen - other.xs.len() as u64;
+        if dropped > 0 {
+            self.seen += dropped;
+            self.total += other.total - other.xs.iter().sum::<f64>();
+            self.run_min = self.run_min.min(other.run_min);
+            self.run_max = self.run_max.max(other.run_max);
+        }
     }
 
+    /// Retained samples (≤ cap). See [`Samples::seen`] for the true
+    /// observation count.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.xs.is_empty()
+    /// Total observations ever pushed, including reservoir-rotated ones.
+    pub fn seen(&self) -> u64 {
+        self.seen
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Exact mean over all observations (not just the reservoir).
     pub fn mean(&self) -> f64 {
-        if self.xs.is_empty() {
+        if self.seen == 0 {
             return f64::NAN;
         }
-        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        self.total / self.seen as f64
     }
 
+    /// Exact minimum over all observations.
     pub fn min(&self) -> f64 {
-        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.run_min
     }
 
+    /// Exact maximum over all observations.
     pub fn max(&self) -> f64 {
-        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        self.run_max
     }
 
+    /// Exact sum over all observations.
     pub fn sum(&self) -> f64 {
-        self.xs.iter().sum()
+        self.total
     }
 
+    /// Standard deviation of the retained reservoir (exact until the
+    /// cap is exceeded).
     pub fn std(&self) -> f64 {
         let n = self.xs.len();
         if n < 2 {
             return 0.0;
         }
-        let m = self.mean();
+        let m = self.xs.iter().sum::<f64>() / n as f64;
         (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
             / (n - 1) as f64)
             .sqrt()
@@ -70,7 +161,8 @@ impl Samples {
         }
     }
 
-    /// Exact percentile with linear interpolation; `p` in `[0, 100]`.
+    /// Percentile with linear interpolation over the retained
+    /// reservoir; `p` in `[0, 100]`. Exact while `seen() <= cap`.
     pub fn percentile(&mut self, p: f64) -> f64 {
         if self.xs.is_empty() {
             return f64::NAN;
@@ -100,6 +192,7 @@ impl Samples {
         (self.mean(), self.p50(), self.p99(), self.max())
     }
 
+    /// The retained samples (the full history only when under cap).
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
@@ -306,5 +399,69 @@ mod tests {
         let _ = s.p50();
         s.push(1.0);
         assert_eq!(s.percentile(0.0), 1.0);
+    }
+
+    /// ISSUE 8 satellite: memory stays bounded past the cap while
+    /// mean/sum/min/max stay exact and percentiles stay close.
+    #[test]
+    fn reservoir_bounds_memory_keeps_aggregates_exact() {
+        let cap = 256;
+        let mut s = Samples::with_cap(cap);
+        let n = 20_000u64;
+        for i in 0..n {
+            s.push(i as f64);
+        }
+        assert_eq!(s.len(), cap);
+        assert_eq!(s.seen(), n);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), (n - 1) as f64);
+        assert!((s.sum() - (n * (n - 1) / 2) as f64).abs() < 1e-6);
+        assert!((s.mean() - (n - 1) as f64 / 2.0).abs() < 1e-9);
+        // Uniform input: reservoir p50 lands near the true median.
+        let p50 = s.p50();
+        let true_med = (n - 1) as f64 / 2.0;
+        assert!(
+            (p50 - true_med).abs() < 0.15 * n as f64,
+            "reservoir p50 {p50} too far from {true_med}"
+        );
+    }
+
+    #[test]
+    fn unbounded_keeps_everything() {
+        let mut s = Samples::unbounded();
+        for i in 0..(DEFAULT_SAMPLE_CAP + 10) {
+            s.push(i as f64);
+        }
+        assert_eq!(s.len(), DEFAULT_SAMPLE_CAP + 10);
+        assert_eq!(s.percentile(100.0), (DEFAULT_SAMPLE_CAP + 9) as f64);
+    }
+
+    #[test]
+    fn extend_preserves_exact_aggregates_across_caps() {
+        let mut a = Samples::with_cap(8);
+        for i in 0..100 {
+            a.push(i as f64);
+        }
+        let mut b = Samples::unbounded();
+        b.push(1000.0);
+        b.extend(&a);
+        assert_eq!(b.seen(), 101);
+        assert_eq!(b.max(), 1000.0);
+        assert_eq!(b.min(), 0.0);
+        assert!((b.sum() - (1000.0 + 4950.0)).abs() < 1e-9);
+        // Only a's 8 retained values landed as concrete samples.
+        assert_eq!(b.len(), 9);
+    }
+
+    #[test]
+    fn reservoir_is_deterministic() {
+        let fill = |n: u64| {
+            let mut s = Samples::with_cap(16);
+            for i in 0..n {
+                s.push(i as f64);
+            }
+            s.values().to_vec()
+        };
+        assert_eq!(fill(5000), fill(5000));
     }
 }
