@@ -119,6 +119,22 @@ impl ClusterManager {
     pub fn is_alive(&self, id: InstanceId) -> bool {
         self.members.get(&id).map(|m| m.alive).unwrap_or(false)
     }
+
+    /// Heartbeat miss streaks at `now`, in heartbeat intervals, for
+    /// every *live* member (dead ones already tripped the sweep) —
+    /// the ISSUE 9 watchdog's `hb.miss_streak` feed. A healthy member
+    /// sits below 1.0; the sweep kills at `max_misses`.
+    pub fn miss_streaks(&self, now: f64) -> Vec<(u32, f64)> {
+        self.members
+            .iter()
+            .filter(|(_, m)| m.alive)
+            .map(|(id, m)| {
+                let streak =
+                    (now - m.last_heartbeat) / self.heartbeat_interval_s;
+                (id.0, streak.max(0.0))
+            })
+            .collect()
+    }
 }
 
 /// Survivor-side cleanup after a membership change: what every instance
@@ -181,6 +197,22 @@ mod tests {
         c.heartbeat(InstanceId(0), 10.1); // resurrection
         assert_eq!(c.epoch(), e0 + 2);
         assert!(c.is_alive(InstanceId(0)));
+    }
+
+    #[test]
+    fn miss_streaks_report_live_members_in_intervals() {
+        let mut c = ClusterManager::new(0.1, 3);
+        c.register(InstanceId(0), InstanceKind::PrefillOnly, 0.0);
+        c.register(InstanceId(1), InstanceKind::DecodeOnly, 0.0);
+        c.heartbeat(InstanceId(0), 0.4);
+        let s = c.miss_streaks(0.5);
+        assert_eq!(s.len(), 2);
+        assert!((s[0].1 - 1.0).abs() < 1e-9, "one interval behind");
+        assert!((s[1].1 - 5.0).abs() < 1e-9, "five intervals behind");
+        c.sweep(0.5); // kills instance 1 (deadline 0.3)
+        let s = c.miss_streaks(0.5);
+        assert_eq!(s.len(), 1, "dead members leave the streak report");
+        assert_eq!(s[0].0, 0);
     }
 
     #[test]

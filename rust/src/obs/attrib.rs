@@ -1,0 +1,342 @@
+//! Per-request latency attribution (ISSUE 9 tentpole, part 2).
+//!
+//! Two consumers of the same signal, at two granularities:
+//!
+//! * [`breakdown`] — a pure function over the span events
+//!   [`super::trace::TraceSink`] already closes, decomposing each
+//!   request's wall time into route / queue-wait / prefill compute /
+//!   KV-transfer / decode. Because the leader and the sim close the
+//!   phases edge-to-edge (QUEUE ends where PREFILL begins, and so on),
+//!   the phase sum reconstructs the span's wall time — fig20 asserts
+//!   the two agree within 1% on both the live and virtual clocks.
+//! * [`AttribBook`] — windowed per-instance digests: each phase
+//!   duration, TTFT, TBT, and the observed-vs-Eq.1-predicted prefill
+//!   cost error, observed into registry histograms so the
+//!   [`super::timeline::Timeline`] carries per-window percentiles.
+//!   The cost-error histogram (`attrib.cost_err_pm`) is the
+//!   calibration signal the ROADMAP's SLO-admission item consumes:
+//!   admission can only trust Eq. 1's TTFT prediction as far as this
+//!   distribution is tight.
+//!
+//! Everything here is record-only: pure reads of trace events plus
+//! relaxed-atomic histogram bumps. No routing or clock input depends
+//! on it.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use crate::obs::registry::{Histo, Labels, Registry};
+use crate::obs::trace::{phase, TraceEvent};
+use crate::util::json::Json;
+
+/// Spans with either high bit set are migration/promotion spans, not
+/// requests (see `trace::migration_span` / `trace::promotion_span`).
+const NON_REQUEST_BITS: u64 = (1 << 62) | (1 << 63);
+
+/// One request's reconstructed latency decomposition, in seconds.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    pub route_s: f64,
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub kv_transfer_s: f64,
+    pub decode_s: f64,
+    /// Earliest phase start seen for the span.
+    pub t_start: f64,
+    /// Latest phase end seen for the span.
+    pub t_end: f64,
+    /// Phase events folded in.
+    pub phases: usize,
+}
+
+impl Breakdown {
+    /// Sum of the attributed phase durations.
+    pub fn total(&self) -> f64 {
+        self.route_s
+            + self.queue_s
+            + self.prefill_s
+            + self.kv_transfer_s
+            + self.decode_s
+    }
+
+    /// End-to-end wall time of the span chain. When phases tile (each
+    /// begins where the last ended), `total() == wall()`.
+    pub fn wall(&self) -> f64 {
+        (self.t_end - self.t_start).max(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("route_s", Json::num(self.route_s)),
+            ("queue_s", Json::num(self.queue_s)),
+            ("prefill_s", Json::num(self.prefill_s)),
+            ("kv_transfer_s", Json::num(self.kv_transfer_s)),
+            ("decode_s", Json::num(self.decode_s)),
+            ("wall_s", Json::num(self.wall())),
+        ])
+    }
+}
+
+/// Decompose every *request* span (migration/promotion spans are
+/// skipped) in `events` into a [`Breakdown`], keyed by span id. Pure:
+/// call it on `sink.events()` at any point, any clock.
+pub fn breakdown(events: &[TraceEvent]) -> BTreeMap<u64, Breakdown> {
+    let mut out: BTreeMap<u64, Breakdown> = BTreeMap::new();
+    for ev in events {
+        if ev.span & NON_REQUEST_BITS != 0 {
+            continue;
+        }
+        let d = (ev.t1 - ev.t0).max(0.0);
+        let b = out.entry(ev.span).or_insert_with(|| Breakdown {
+            t_start: ev.t0,
+            t_end: ev.t1,
+            ..Default::default()
+        });
+        match ev.phase {
+            phase::ROUTE => b.route_s += d,
+            phase::QUEUE => b.queue_s += d,
+            phase::PREFILL => b.prefill_s += d,
+            phase::KV_TRANSFER => b.kv_transfer_s += d,
+            phase::DECODE => b.decode_s += d,
+            // RETIRE is a zero-width marker; MIGRATE/PROMOTE never
+            // appear on request spans.
+            _ => {}
+        }
+        b.t_start = b.t_start.min(ev.t0);
+        b.t_end = b.t_end.max(ev.t1);
+        b.phases += 1;
+    }
+    out
+}
+
+/// What the leader (or sim) knows about a request when it retires —
+/// the inputs for the retire-side digests.
+#[derive(Clone, Copy, Debug)]
+pub struct RetireSample {
+    pub arrival: f64,
+    pub scheduled: f64,
+    pub first_token: f64,
+    pub completion: f64,
+    pub output_tokens: usize,
+    /// Eq. 1's prefill-time prediction captured at route
+    /// (`RouteOutcome::expected_prefill_s`); `<= 0` means the route
+    /// path recorded no prediction and the cost-error digest is
+    /// skipped.
+    pub predicted_prefill_s: f64,
+}
+
+struct Handles {
+    queue_us: Histo,
+    prefill_us: Histo,
+    kv_transfer_us: Histo,
+    decode_us: Histo,
+    ttft_us: Histo,
+    tbt_us: Histo,
+    cost_err_pm: Histo,
+}
+
+/// Per-instance attribution digests over a shared [`Registry`].
+/// Handles are registered once per instance and cached; registration
+/// is idempotent, so the leader, every instance thread, and the sim
+/// can each hold their own book over the same registry.
+pub struct AttribBook {
+    reg: Registry,
+    handles: Mutex<HashMap<u32, Handles>>,
+}
+
+impl AttribBook {
+    pub fn new(reg: &Registry) -> Self {
+        AttribBook {
+            reg: reg.clone(),
+            handles: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn with_handles<R>(
+        &self,
+        instance: u32,
+        f: impl FnOnce(&Handles) -> R,
+    ) -> R {
+        let mut map = self.handles.lock().unwrap();
+        let h = map.entry(instance).or_insert_with(|| {
+            let l = Labels::instance(instance);
+            Handles {
+                queue_us: self.reg.histogram("attrib.queue_us", l),
+                prefill_us: self.reg.histogram("attrib.prefill_us", l),
+                kv_transfer_us: self
+                    .reg
+                    .histogram("attrib.kv_transfer_us", l),
+                decode_us: self.reg.histogram("attrib.decode_us", l),
+                ttft_us: self.reg.histogram("lat.ttft_us", l),
+                tbt_us: self.reg.histogram("lat.tbt_us", l),
+                cost_err_pm: self.reg.histogram("attrib.cost_err_pm", l),
+            }
+        });
+        f(h)
+    }
+
+    /// Observe one phase duration for `instance` — the instance-side
+    /// feed at the exact points the trace phases close. Non-attributed
+    /// phases (ROUTE/RETIRE/MIGRATE/PROMOTE) are ignored.
+    pub fn observe_phase_secs(
+        &self,
+        instance: u32,
+        ph: &'static str,
+        secs: f64,
+    ) {
+        if !self.reg.enabled() {
+            return;
+        }
+        self.with_handles(instance, |h| match ph {
+            phase::QUEUE => h.queue_us.observe_secs(secs),
+            phase::PREFILL => h.prefill_us.observe_secs(secs),
+            phase::KV_TRANSFER => h.kv_transfer_us.observe_secs(secs),
+            phase::DECODE => h.decode_us.observe_secs(secs),
+            _ => {}
+        });
+    }
+
+    /// Retire-side digests: queue wait, TTFT, TBT, and the
+    /// observed-vs-predicted prefill cost error (per mille, absolute).
+    /// `instance` is the prefill instance the request ran on.
+    pub fn observe_retire(&self, instance: u32, s: &RetireSample) {
+        if !self.reg.enabled() {
+            return;
+        }
+        self.with_handles(instance, |h| {
+            h.queue_us.observe_secs(s.scheduled - s.arrival);
+            h.ttft_us.observe_secs(s.first_token - s.arrival);
+            if s.output_tokens > 1 {
+                h.tbt_us.observe_secs(
+                    (s.completion - s.first_token)
+                        / (s.output_tokens - 1) as f64,
+                );
+            }
+            if s.predicted_prefill_s > 0.0 {
+                let observed = (s.first_token - s.scheduled).max(0.0);
+                let err = (observed - s.predicted_prefill_s).abs()
+                    / s.predicted_prefill_s;
+                h.cost_err_pm.observe((err * 1000.0).min(1e9) as u64);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{self, TraceSink};
+
+    /// A disaggregated request whose phases tile edge-to-edge
+    /// reconstructs its wall time exactly.
+    #[test]
+    fn breakdown_sums_to_wall_when_phases_tile() {
+        let sink = TraceSink::new(true);
+        let span = trace::request_span(7);
+        sink.complete(span, phase::ROUTE, u32::MAX, 1.0, 1.0);
+        sink.complete(span, phase::QUEUE, 0, 1.0, 1.5);
+        sink.complete(span, phase::PREFILL, 0, 1.5, 2.25);
+        sink.complete(span, phase::KV_TRANSFER, 1, 2.25, 2.5);
+        sink.complete(span, phase::DECODE, 1, 2.5, 4.0);
+        sink.complete(span, phase::RETIRE, 1, 4.0, 4.0);
+        let map = breakdown(&sink.events());
+        let b = map.get(&span).expect("request span decomposed");
+        assert_eq!(b.queue_s, 0.5);
+        assert_eq!(b.prefill_s, 0.75);
+        assert_eq!(b.kv_transfer_s, 0.25);
+        assert_eq!(b.decode_s, 1.5);
+        assert!((b.total() - b.wall()).abs() < 1e-12);
+        assert_eq!(b.wall(), 3.0);
+    }
+
+    #[test]
+    fn breakdown_skips_non_request_spans() {
+        let sink = TraceSink::new(true);
+        sink.complete(
+            trace::migration_span(3),
+            phase::MIGRATE,
+            0,
+            0.0,
+            1.0,
+        );
+        sink.complete(
+            trace::promotion_span(1),
+            phase::PROMOTE,
+            0,
+            0.0,
+            1.0,
+        );
+        sink.complete(trace::request_span(9), phase::QUEUE, 0, 0.0, 0.5);
+        let map = breakdown(&sink.events());
+        assert_eq!(map.len(), 1);
+        assert!(map.contains_key(&trace::request_span(9)));
+    }
+
+    #[test]
+    fn retire_digests_feed_per_instance_histograms() {
+        let reg = Registry::new(true);
+        let book = AttribBook::new(&reg);
+        book.observe_retire(
+            2,
+            &RetireSample {
+                arrival: 0.0,
+                scheduled: 0.5,
+                first_token: 1.5,
+                completion: 3.5,
+                output_tokens: 5,
+                predicted_prefill_s: 0.8,
+            },
+        );
+        let snap = reg.snapshot(4.0);
+        let q = snap.histo("attrib.queue_us{instance=2}").unwrap();
+        assert_eq!(q.count, 1);
+        assert_eq!(q.sum, 500_000, "0.5s queue wait in µs");
+        let ttft = snap.histo("lat.ttft_us{instance=2}").unwrap();
+        assert_eq!(ttft.sum, 1_500_000);
+        let tbt = snap.histo("lat.tbt_us{instance=2}").unwrap();
+        assert_eq!(tbt.sum, 500_000, "2s decode over 4 gaps");
+        let err = snap.histo("attrib.cost_err_pm{instance=2}").unwrap();
+        // observed 1.0s vs predicted 0.8s → 25% → 250‰.
+        assert_eq!(err.sum, 250);
+    }
+
+    #[test]
+    fn phase_feed_routes_to_the_right_histogram() {
+        let reg = Registry::new(true);
+        let book = AttribBook::new(&reg);
+        book.observe_phase_secs(0, phase::PREFILL, 0.25);
+        book.observe_phase_secs(0, phase::KV_TRANSFER, 0.125);
+        book.observe_phase_secs(0, phase::ROUTE, 9.0); // ignored
+        let snap = reg.snapshot(1.0);
+        assert_eq!(
+            snap.histo("attrib.prefill_us{instance=0}").unwrap().sum,
+            250_000
+        );
+        assert_eq!(
+            snap.histo("attrib.kv_transfer_us{instance=0}")
+                .unwrap()
+                .sum,
+            125_000
+        );
+        assert_eq!(snap.counter_sum("attrib.route"), 0);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let reg = Registry::new(false);
+        let book = AttribBook::new(&reg);
+        book.observe_phase_secs(0, phase::DECODE, 1.0);
+        book.observe_retire(
+            0,
+            &RetireSample {
+                arrival: 0.0,
+                scheduled: 0.0,
+                first_token: 1.0,
+                completion: 2.0,
+                output_tokens: 2,
+                predicted_prefill_s: 1.0,
+            },
+        );
+        assert!(reg.snapshot(0.0).entries.is_empty());
+    }
+}

@@ -31,6 +31,9 @@ pub mod kind {
     pub const MEMBERSHIP: &str = "membership";
     pub const DEREGISTER: &str = "deregister";
     pub const FAILOVER: &str = "failover";
+    /// Watchdog invariant violation (ISSUE 9) — detail carries the
+    /// rule name and subject metric.
+    pub const ALERT: &str = "alert";
 }
 
 /// One recorded control-plane event.
@@ -112,6 +115,13 @@ impl FlightRecorder {
         self.0.lock().unwrap().total
     }
 
+    /// Events rotated out of the ring (`total - len`) — the overflow
+    /// signal the cluster view scrapes.
+    pub fn dropped(&self) -> u64 {
+        let st = self.0.lock().unwrap();
+        st.total - st.ring.len() as u64
+    }
+
     pub fn dumps(&self) -> u64 {
         self.0.lock().unwrap().dumps
     }
@@ -190,6 +200,56 @@ mod tests {
         fr.record(3.0, 0, kind::PROMOTION, "shard 0 -> instance 2");
         assert_eq!(fr.of_kind(kind::SUSPICION).len(), 1);
         assert_eq!(fr.of_kind(kind::SUSPICION)[0].node, 7);
+    }
+
+    /// ISSUE 9 satellite: the default 512-cap ring under sustained
+    /// overflow — oldest-first eviction order, exact dropped
+    /// accounting, and a stable survivor window.
+    #[test]
+    fn default_cap_wraparound_ordering_and_dropped() {
+        let fr = FlightRecorder::default();
+        let n = DEFAULT_FLIGHT_CAP + 88;
+        for i in 0..n {
+            fr.record(i as f64, 0, kind::DELTA, format!("seq {i}"));
+        }
+        assert_eq!(fr.len(), DEFAULT_FLIGHT_CAP);
+        assert_eq!(fr.total(), n as u64);
+        assert_eq!(fr.dropped(), 88);
+        let evs = fr.events();
+        // Survivors are exactly the newest `cap`, still oldest-first.
+        assert_eq!(evs[0].detail, "seq 88");
+        assert_eq!(evs.last().unwrap().detail, format!("seq {}", n - 1));
+        for w in evs.windows(2) {
+            assert!(w[1].t > w[0].t, "ring order broke under rotation");
+        }
+    }
+
+    /// ISSUE 9 satellite: `dump_to` accounting on both outcomes — a
+    /// successful dump writes the artifact, a failed one (unwritable
+    /// dir) returns `None`, and *both* count as dump attempts.
+    #[test]
+    fn dump_to_counts_attempts_and_survives_write_failure() {
+        let fr = FlightRecorder::default();
+        fr.record(1.0, 0, kind::ALERT, "repl_lag_growing: shard 0");
+        let dir = std::env::temp_dir().join("memserve_flight_dump_test");
+        let dir = dir.to_str().unwrap().to_string();
+        let p = fr.dump_to(&dir, "wrap").expect("dump writes");
+        assert_eq!(fr.dumps(), 1);
+        let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(
+            j.at(&["events"]).unwrap().as_arr().unwrap()[0]
+                .at(&["kind"])
+                .unwrap()
+                .as_str(),
+            Some("alert")
+        );
+        // A file where the directory should be: create_dir_all fails,
+        // dump returns None, attempt still counted.
+        let blocked = std::env::temp_dir().join("memserve_flight_blocked");
+        std::fs::write(&blocked, b"not a dir").unwrap();
+        let bad = blocked.join("sub");
+        assert!(fr.dump_to(bad.to_str().unwrap(), "x").is_none());
+        assert_eq!(fr.dumps(), 2, "failed dump still counts the attempt");
     }
 
     #[test]

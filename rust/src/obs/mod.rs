@@ -1,33 +1,59 @@
-//! Cluster-wide observability (ISSUE 8).
+//! Cluster-wide observability (ISSUE 8 recording layer + ISSUE 9
+//! analysis layer).
 //!
-//! Four pieces, threaded through every layer of the serving stack:
+//! Recording (ISSUE 8), threaded through every layer of the stack:
 //!
 //! * [`registry`] — atomic counters/gauges and log2-bucket histograms
 //!   with mergeable snapshots, labeled instance/shard/tier. `&self`
-//!   everywhere, one relaxed load when disabled.
+//!   everywhere, one relaxed load when disabled. Snapshots export as
+//!   JSON or Prometheus text exposition.
 //! * [`trace`] — request-scoped spans (route → queue → prefill →
 //!   kv_transfer → decode → retire, plus migration/promotion),
 //!   idempotent under PR 6 message replay, exported as Chrome
 //!   trace-event JSON. Knob: `MEMSERVE_TRACE`.
 //! * [`flight`] — bounded ring of control-plane events, dumped to the
-//!   bench-JSON sink when the failure detector fires.
+//!   bench-JSON sink when the failure detector (or the watchdog)
+//!   fires.
 //! * [`view`] — periodic leader scrape folding per-instance stats
-//!   (`PoolStats`, `NetStats`, replication lag) into one cluster view.
+//!   (`PoolStats`, `NetStats`, replication lag, trace/flight health)
+//!   into one cluster view.
+//!
+//! Analysis (ISSUE 9), fed by the same scrape cadence:
+//!
+//! * [`timeline`] — a bounded ring of windowed frames over registry
+//!   snapshots: per-window counter deltas, end-of-window gauges, and
+//!   per-window histogram digests (TTFT/TBT/route-µs percentiles per
+//!   second, not since boot).
+//! * [`attrib`] — per-request latency decomposition from the closed
+//!   span chains (pure), plus per-instance phase/TTFT/TBT digests and
+//!   the observed-vs-Eq.1-predicted prefill cost error recorded at
+//!   retire.
+//! * [`watchdog`] — rule-based online invariant checks over timeline
+//!   frames (growing replication lag, GS belief divergence, touch
+//!   backlog, span-chain incompleteness, heartbeat-miss streaks),
+//!   firing structured alerts into the flight recorder. Record-only:
+//!   no decision consumes an alert.
 //!
 //! Knobs: `MEMSERVE_METRICS=0|off` disables the registry;
 //! `MEMSERVE_TRACE=1` (or any non-`0`/`off` value) enables tracing.
 //! Both live and sim clocks work unchanged: every timestamp is
 //! caller-clock f64 seconds.
 
+pub mod attrib;
 pub mod flight;
 pub mod registry;
+pub mod timeline;
 pub mod trace;
 pub mod view;
+pub mod watchdog;
 
+pub use attrib::{breakdown, AttribBook, Breakdown, RetireSample};
 pub use flight::{FlightEvent, FlightRecorder};
 pub use registry::{
     Counter, Gauge, Histo, HistoSnapshot, Labels, MetricValue, ObsSnapshot,
     Registry,
 };
+pub use timeline::{Frame, Timeline, TimelineConfig};
 pub use trace::{TraceEvent, TraceSink};
 pub use view::ClusterView;
+pub use watchdog::{Alert, Watchdog, WatchdogConfig};

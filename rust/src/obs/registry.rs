@@ -473,6 +473,93 @@ impl ObsSnapshot {
             .sum()
     }
 
+    /// Prometheus text exposition (ISSUE 9 satellite): every entry as
+    /// `memserve_<name with dots as underscores>{label="v",…}`, with
+    /// one `# TYPE` line per family. Histograms export cumulative
+    /// `_bucket` series with `le` at each occupied log2 bucket's upper
+    /// bound (`2^(b+1)`), then `+Inf`, `_count`, and `_sum` — the
+    /// shape `histogram_quantile()` expects.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut typed: std::collections::BTreeSet<String> =
+            std::collections::BTreeSet::new();
+        for (key, v) in &self.entries {
+            let (name, raw_labels) = match key.split_once('{') {
+                Some((n, rest)) => {
+                    (n, rest.trim_end_matches('}').to_string())
+                }
+                None => (key.as_str(), String::new()),
+            };
+            let fam = format!("memserve_{}", name.replace('.', "_"));
+            let pairs: Vec<String> = raw_labels
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .filter_map(|p| {
+                    p.split_once('=')
+                        .map(|(k, val)| format!("{k}=\"{val}\""))
+                })
+                .collect();
+            let label_set = |extra: Option<String>| -> String {
+                let mut all = pairs.clone();
+                if let Some(e) = extra {
+                    all.push(e);
+                }
+                if all.is_empty() {
+                    String::new()
+                } else {
+                    format!("{{{}}}", all.join(","))
+                }
+            };
+            let kind = match v {
+                MetricValue::Counter(_) => "counter",
+                MetricValue::Gauge(_) => "gauge",
+                MetricValue::Histo(_) => "histogram",
+            };
+            if typed.insert(fam.clone()) {
+                out.push_str(&format!("# TYPE {fam} {kind}\n"));
+            }
+            match v {
+                MetricValue::Counter(n) => {
+                    out.push_str(&format!("{fam}{} {n}\n", label_set(None)));
+                }
+                MetricValue::Gauge(x) => {
+                    let x = if x.is_finite() { *x } else { 0.0 };
+                    out.push_str(&format!("{fam}{} {x}\n", label_set(None)));
+                }
+                MetricValue::Histo(h) => {
+                    let mut cum = 0u64;
+                    for (b, &n) in h.buckets.iter().enumerate() {
+                        if n == 0 {
+                            continue;
+                        }
+                        cum += n;
+                        let le = (1u128 << (b + 1)).to_string();
+                        out.push_str(&format!(
+                            "{fam}_bucket{} {cum}\n",
+                            label_set(Some(format!("le=\"{le}\"")))
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{fam}_bucket{} {}\n",
+                        label_set(Some("le=\"+Inf\"".to_string())),
+                        h.count
+                    ));
+                    out.push_str(&format!(
+                        "{fam}_count{} {}\n",
+                        label_set(None),
+                        h.count
+                    ));
+                    out.push_str(&format!(
+                        "{fam}_sum{} {}\n",
+                        label_set(None),
+                        h.sum
+                    ));
+                }
+            }
+        }
+        out
+    }
+
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         for (k, v) in &self.entries {
@@ -649,6 +736,59 @@ mod tests {
         r.counter("other", Labels::none()).inc(9);
         let snap = r.snapshot(0.0);
         assert_eq!(snap.counter_sum("pool.matches"), 7);
+    }
+
+    /// ISSUE 9 satellite: Prometheus exposition of the README
+    /// metric-naming table — counters/gauges/histograms with
+    /// instance/shard/tier labels.
+    #[test]
+    fn prometheus_exposition_matches_naming_table() {
+        let r = Registry::new(true);
+        r.counter("sched.routes", Labels::shard(1)).inc(12);
+        r.counter("sched.routes", Labels::shard(0)).inc(3);
+        r.counter("pool.swapped_out", Labels::instance(2).with_tier("dram"))
+            .inc(4);
+        r.gauge(
+            "repl.ack_lag",
+            Labels {
+                instance: Some(3),
+                shard: Some(1),
+                tier: None,
+            },
+        )
+        .set(2.5);
+        let h = r.histogram("sched.matched_tokens", Labels::shard(0));
+        h.observe(3); // bucket 1 → le=4
+        h.observe(100); // bucket 6 → le=128
+        r.counter("net.messages", Labels::none()).inc(9);
+        let text = r.snapshot(0.0).to_prometheus();
+
+        for line in [
+            "# TYPE memserve_sched_routes counter",
+            "memserve_sched_routes{shard=\"0\"} 3",
+            "memserve_sched_routes{shard=\"1\"} 12",
+            "memserve_pool_swapped_out{instance=\"2\",tier=\"dram\"} 4",
+            "# TYPE memserve_repl_ack_lag gauge",
+            "memserve_repl_ack_lag{instance=\"3\",shard=\"1\"} 2.5",
+            "# TYPE memserve_sched_matched_tokens histogram",
+            "memserve_sched_matched_tokens_bucket{shard=\"0\",le=\"4\"} 1",
+            "memserve_sched_matched_tokens_bucket{shard=\"0\",le=\"128\"} 2",
+            "memserve_sched_matched_tokens_bucket{shard=\"0\",le=\"+Inf\"} 2",
+            "memserve_sched_matched_tokens_count{shard=\"0\"} 2",
+            "memserve_sched_matched_tokens_sum{shard=\"0\"} 103",
+            "# TYPE memserve_net_messages counter",
+            "memserve_net_messages 9",
+        ] {
+            assert!(
+                text.lines().any(|l| l == line),
+                "missing exposition line {line:?} in:\n{text}"
+            );
+        }
+        // One TYPE line per family, even with several label sets.
+        assert_eq!(
+            text.matches("# TYPE memserve_sched_routes counter").count(),
+            1
+        );
     }
 
     #[test]

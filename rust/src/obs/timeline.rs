@@ -1,0 +1,440 @@
+//! Windowed time-series frames over registry snapshots (ISSUE 9
+//! tentpole, part 1).
+//!
+//! PR 8's [`ObsSnapshot`] is a point-in-time total; nothing in the
+//! system can see a replication lag *growing* or a hit rate
+//! *collapsing*. [`Timeline`] turns the existing scrape cadence (the
+//! leader's ~500ms collector sweep; the sim's virtual-clock folds)
+//! into a bounded ring of [`Frame`]s, each covering one wall (or
+//! virtual) window and carrying:
+//!
+//! * end-of-window **absolute** counters and gauges (what the watchdog's
+//!   divergence/backlog/lag rules read);
+//! * per-window counter **deltas** (rates: routes/s, evictions/s);
+//! * per-window **histogram digests** — the difference of two
+//!   cumulative [`HistoSnapshot`]s, well-defined because buckets,
+//!   count, and sum are all monotone — so TTFT/TBT/route-µs
+//!   percentiles are per-window, not since-boot.
+//!
+//! Feeding is pull-based and clock-agnostic: the owner calls
+//! [`Timeline::observe`] with a fresh snapshot whenever it scrapes; a
+//! frame closes only once the snapshot's timestamp has advanced a full
+//! window past the open frame's start. On a virtual clock the sim
+//! drives this between popped events (never *as* events — pushing
+//! observation events would shift the queue's push-order tie-break and
+//! change routing, breaking the PR 6/7 determinism guarantees).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::registry::{HistoSnapshot, MetricValue, ObsSnapshot};
+use crate::util::json::Json;
+
+/// Default frame width: ~1s live (every other ~500ms collector scrape
+/// closes a frame); the sim overrides via `SimConfig::obs_window_s`.
+pub const DEFAULT_TIMELINE_WINDOW_S: f64 = 1.0;
+
+/// Default ring capacity — at the 1s default window, ~4 minutes of
+/// history, bounded the same way the flight recorder is.
+pub const DEFAULT_TIMELINE_CAP: usize = 256;
+
+#[derive(Clone, Debug)]
+pub struct TimelineConfig {
+    /// Minimum seconds a frame spans before a scrape closes it.
+    pub window_s: f64,
+    /// Ring capacity; the oldest frame is evicted (and counted in
+    /// [`Timeline::dropped`]) past this.
+    pub cap: usize,
+}
+
+impl Default for TimelineConfig {
+    fn default() -> Self {
+        TimelineConfig {
+            window_s: DEFAULT_TIMELINE_WINDOW_S,
+            cap: DEFAULT_TIMELINE_CAP,
+        }
+    }
+}
+
+/// One closed window `[t0, t1]` of the series.
+#[derive(Clone, Debug, Default)]
+pub struct Frame {
+    pub t0: f64,
+    pub t1: f64,
+    /// End-of-window absolute counter values (every registered key).
+    pub counters: BTreeMap<String, u64>,
+    /// Counter increments within the window — only keys that moved.
+    pub deltas: BTreeMap<String, u64>,
+    /// End-of-window gauge values.
+    pub gauges: BTreeMap<String, f64>,
+    /// Per-window histogram digests — only keys with observations
+    /// inside the window.
+    pub histos: BTreeMap<String, HistoSnapshot>,
+}
+
+impl Frame {
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn delta(&self, key: &str) -> u64 {
+        self.deltas.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, key: &str) -> Option<f64> {
+        self.gauges.get(key).copied()
+    }
+
+    pub fn histo(&self, key: &str) -> Option<&HistoSnapshot> {
+        self.histos.get(key)
+    }
+
+    /// Gauges whose key starts with `prefix` — the watchdog walks
+    /// per-instance/per-shard label families this way.
+    pub fn gauges_under(&self, prefix: &str) -> Vec<(&str, f64)> {
+        self.gauges
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, &v)| (k.as_str(), v))
+            .collect()
+    }
+
+    /// Counters whose key starts with `prefix` (absolutes).
+    pub fn counters_under(&self, prefix: &str) -> Vec<(&str, u64)> {
+        self.counters
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, &v)| (k.as_str(), v))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                .collect(),
+        );
+        let deltas = Json::Obj(
+            self.deltas
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, &v)| {
+                    (k.clone(), Json::num(if v.is_finite() { v } else { 0.0 }))
+                })
+                .collect(),
+        );
+        let histos = Json::Obj(
+            self.histos
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::num(h.count as f64)),
+                            ("sum", Json::num(h.sum as f64)),
+                            ("mean", Json::num(h.mean())),
+                            ("p50", Json::num(h.p50())),
+                            ("p99", Json::num(h.p99())),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("t0", Json::num(self.t0)),
+            ("t1", Json::num(self.t1)),
+            ("counters", counters),
+            ("deltas", deltas),
+            ("gauges", gauges),
+            ("histos", histos),
+        ])
+    }
+}
+
+/// Cumulative-histogram subtraction: valid because buckets/count/sum
+/// only grow. `saturating_sub` tolerates an absolute `set_counter`
+/// fold racing a scrape (never goes negative, worst case under-counts
+/// one window and credits the next).
+fn histo_sub(cur: &HistoSnapshot, prev: &HistoSnapshot) -> HistoSnapshot {
+    let mut out = cur.clone();
+    for (i, b) in out.buckets.iter_mut().enumerate() {
+        *b = b.saturating_sub(prev.buckets.get(i).copied().unwrap_or(0));
+    }
+    out.count = cur.count.saturating_sub(prev.count);
+    out.sum = cur.sum.saturating_sub(prev.sum);
+    out
+}
+
+struct Inner {
+    /// Snapshot that opened the current window (`None` until the first
+    /// observe establishes a baseline).
+    baseline: Option<ObsSnapshot>,
+    frames: VecDeque<Frame>,
+    dropped: u64,
+}
+
+/// Clonable shared handle to the frame ring. One per cluster (leader)
+/// or per simulation.
+#[derive(Clone)]
+pub struct Timeline {
+    window_s: f64,
+    cap: usize,
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Timeline::new(TimelineConfig::default())
+    }
+}
+
+impl Timeline {
+    pub fn new(cfg: TimelineConfig) -> Self {
+        Timeline {
+            window_s: cfg.window_s.max(1e-9),
+            cap: cfg.cap.max(1),
+            inner: Arc::new(Mutex::new(Inner {
+                baseline: None,
+                frames: VecDeque::new(),
+                dropped: 0,
+            })),
+        }
+    }
+
+    pub fn with_window(window_s: f64) -> Self {
+        Timeline::new(TimelineConfig {
+            window_s,
+            ..Default::default()
+        })
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Feed a fresh snapshot. The first call establishes the baseline;
+    /// later calls close a frame (returning `true`) once the snapshot
+    /// timestamp is a full window past the open frame's start. Calls
+    /// inside the window are discarded — scraping faster than the
+    /// window is allowed and cheap.
+    pub fn observe(&self, snap: ObsSnapshot) -> bool {
+        self.feed(snap, false)
+    }
+
+    /// Close the open window regardless of fill — the end-of-run
+    /// flush, so a final partial frame is never lost.
+    pub fn flush(&self, snap: ObsSnapshot) -> bool {
+        self.feed(snap, true)
+    }
+
+    fn feed(&self, snap: ObsSnapshot, force: bool) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(base) = inner.baseline.as_ref() else {
+            inner.baseline = Some(snap);
+            return false;
+        };
+        let span = snap.at - base.at;
+        if !force && span < self.window_s {
+            return false;
+        }
+        if force && span <= 0.0 {
+            return false;
+        }
+        let frame = diff_frame(base, &snap);
+        inner.baseline = Some(snap);
+        inner.frames.push_back(frame);
+        while inner.frames.len() > self.cap {
+            inner.frames.pop_front();
+            inner.dropped += 1;
+        }
+        true
+    }
+
+    /// All retained frames, oldest first.
+    pub fn frames(&self) -> Vec<Frame> {
+        self.inner.lock().unwrap().frames.iter().cloned().collect()
+    }
+
+    pub fn latest(&self) -> Option<Frame> {
+        self.inner.lock().unwrap().frames.back().cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Frames evicted off the ring's front so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// The whole series as one JSON document — the artifact fig20
+    /// drops next to its bench tables.
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        Json::obj(vec![
+            ("window_s", Json::num(self.window_s)),
+            ("dropped", Json::num(inner.dropped as f64)),
+            (
+                "frames",
+                Json::Arr(inner.frames.iter().map(|f| f.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+fn diff_frame(base: &ObsSnapshot, cur: &ObsSnapshot) -> Frame {
+    let mut f = Frame {
+        t0: base.at,
+        t1: cur.at,
+        ..Default::default()
+    };
+    for (k, v) in &cur.entries {
+        match v {
+            MetricValue::Counter(n) => {
+                f.counters.insert(k.clone(), *n);
+                let prev = base.counter(k);
+                if *n > prev {
+                    f.deltas.insert(k.clone(), n - prev);
+                }
+            }
+            MetricValue::Gauge(x) => {
+                f.gauges.insert(k.clone(), *x);
+            }
+            MetricValue::Histo(h) => {
+                let d = match base.histo(k) {
+                    Some(prev) => histo_sub(h, prev),
+                    None => h.clone(),
+                };
+                if d.count > 0 {
+                    f.histos.insert(k.clone(), d);
+                }
+            }
+        }
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::{Labels, Registry};
+
+    #[test]
+    fn frames_carry_per_window_deltas() {
+        let r = Registry::new(true);
+        let c = r.counter("routes", Labels::none());
+        let h = r.histogram("lat", Labels::none());
+        let g = r.gauge("lag", Labels::shard(0));
+        let tl = Timeline::with_window(1.0);
+
+        c.inc(5);
+        h.observe(100);
+        g.set(2.0);
+        assert!(!tl.observe(r.snapshot(0.0)), "first call is the baseline");
+
+        c.inc(3);
+        h.observe(200);
+        h.observe(400);
+        g.set(7.0);
+        assert!(!tl.observe(r.snapshot(0.4)), "inside the window");
+        assert!(tl.observe(r.snapshot(1.0)), "window filled");
+
+        let f = tl.latest().unwrap();
+        assert_eq!(f.t0, 0.0);
+        assert_eq!(f.t1, 1.0);
+        assert_eq!(f.counter("routes"), 8, "absolute at window end");
+        assert_eq!(f.delta("routes"), 3, "increment within the window");
+        assert_eq!(f.gauge("lag{shard=0}"), Some(7.0));
+        let d = f.histo("lat").unwrap();
+        assert_eq!(d.count, 2, "only in-window observations");
+        assert_eq!(d.sum, 600);
+    }
+
+    #[test]
+    fn unchanged_counters_produce_no_delta_entries() {
+        let r = Registry::new(true);
+        r.counter("a", Labels::none()).inc(2);
+        r.counter("b", Labels::none()).inc(1);
+        let tl = Timeline::with_window(1.0);
+        tl.observe(r.snapshot(0.0));
+        r.counter("a", Labels::none()).inc(1);
+        assert!(tl.observe(r.snapshot(1.5)));
+        let f = tl.latest().unwrap();
+        assert_eq!(f.delta("a"), 1);
+        assert!(!f.deltas.contains_key("b"), "quiet counter omitted");
+        assert_eq!(f.counter("b"), 1, "but its absolute is retained");
+    }
+
+    #[test]
+    fn ring_caps_and_counts_evictions() {
+        let r = Registry::new(true);
+        let c = r.counter("x", Labels::none());
+        let tl = Timeline::new(TimelineConfig {
+            window_s: 1.0,
+            cap: 3,
+        });
+        tl.observe(r.snapshot(0.0));
+        for i in 1..=6u32 {
+            c.inc(1);
+            assert!(tl.observe(r.snapshot(i as f64)));
+        }
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl.dropped(), 3);
+        let frames = tl.frames();
+        assert_eq!(frames[0].t0, 3.0, "oldest surviving frame");
+        assert_eq!(frames[2].t1, 6.0);
+    }
+
+    #[test]
+    fn flush_closes_a_partial_window() {
+        let r = Registry::new(true);
+        let tl = Timeline::with_window(10.0);
+        tl.observe(r.snapshot(0.0));
+        r.counter("x", Labels::none()).inc(4);
+        assert!(!tl.observe(r.snapshot(2.0)), "window not filled");
+        assert!(tl.flush(r.snapshot(2.0)), "flush closes it anyway");
+        let f = tl.latest().unwrap();
+        assert_eq!((f.t0, f.t1), (0.0, 2.0));
+        assert_eq!(f.delta("x"), 4);
+        assert!(!tl.flush(r.snapshot(2.0)), "zero-span flush is a no-op");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = Registry::new(true);
+        let tl = Timeline::with_window(1.0);
+        tl.observe(r.snapshot(0.0));
+        r.counter("n", Labels::none()).inc(2);
+        r.histogram("lat", Labels::none()).observe(64);
+        tl.observe(r.snapshot(1.0));
+        let j = crate::util::json::Json::parse(&tl.to_json().to_string())
+            .unwrap();
+        assert_eq!(
+            j.at(&["frames"]).unwrap().as_arr().unwrap().len(),
+            1
+        );
+        assert_eq!(
+            j.as_obj()
+                .unwrap()
+                .get("frames")
+                .unwrap()
+                .as_arr()
+                .unwrap()[0]
+                .at(&["deltas", "n"])
+                .unwrap()
+                .as_f64(),
+            Some(2.0)
+        );
+    }
+}

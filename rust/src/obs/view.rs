@@ -15,7 +15,9 @@ use crate::mempool::api::PoolStats;
 use crate::net::fabric::NetStats;
 use crate::util::json::Json;
 
+use super::flight::FlightRecorder;
 use super::registry::{Labels, ObsSnapshot, Registry};
+use super::trace::TraceSink;
 
 /// Fold one instance's `PoolStats` into the registry (absolute
 /// stores — idempotent across repeated scrapes).
@@ -33,6 +35,18 @@ pub fn fold_pool(reg: &Registry, instance: u32, s: &PoolStats) {
     reg.set_counter("pool.touches_deferred", l, s.touches_deferred);
     reg.set_counter("pool.touches_drained", l, s.touches_drained);
     reg.set_counter("pool.touches_dropped", l, s.touches_dropped);
+}
+
+/// Fold the pool index's *current* footprint (token-blocks indexed
+/// right now, not a monotone event count). The ISSUE 9 watchdog's
+/// divergence rule compares this against the GS-side
+/// `gs.believed_token_blocks` for the same instance.
+pub fn fold_pool_index(reg: &Registry, instance: u32, indexed: usize) {
+    reg.set_counter(
+        "pool.indexed_token_blocks",
+        Labels::instance(instance),
+        indexed as u64,
+    );
 }
 
 /// Fold fabric-wide `NetStats` into the registry.
@@ -60,6 +74,27 @@ pub fn fold_replication(
         let l = Labels { instance: Some(peer), shard: Some(shard), tier: None };
         reg.set_gauge("repl.ack_lag", l, lag as f64);
     }
+}
+
+/// Fold the trace sink's health counters (ISSUE 9 satellite): replay
+/// anomalies (`dup_closes` are expected under PR 6 message replay;
+/// `orphan_ends` never are) and ring overflow become scrape-visible
+/// instead of test-only.
+pub fn fold_trace(reg: &Registry, sink: &TraceSink) {
+    let (recorded, dropped, dup_closes, orphan_ends) = sink.stats();
+    let l = Labels::none();
+    reg.set_counter("trace.recorded", l, recorded);
+    reg.set_counter("trace.dropped", l, dropped);
+    reg.set_counter("trace.dup_closes", l, dup_closes);
+    reg.set_counter("trace.orphan_ends", l, orphan_ends);
+}
+
+/// Fold the flight recorder's ring accounting: total ever recorded and
+/// how many rotated out (the ring-overflow signal).
+pub fn fold_flight(reg: &Registry, fr: &FlightRecorder) {
+    let l = Labels::none();
+    reg.set_counter("flight.total", l, fr.total());
+    reg.set_counter("flight.dropped", l, fr.dropped());
 }
 
 /// One folded cluster view: a timestamped snapshot of every metric the
@@ -117,6 +152,31 @@ mod tests {
         let snap = reg.snapshot(0.0);
         assert_eq!(snap.counter("repl.next_seq{shard=0}"), 15);
         assert_eq!(snap.gauge("repl.ack_lag{instance=2,shard=0}"), 4.0);
+    }
+
+    /// ISSUE 9 satellite: trace replay anomalies and flight-ring
+    /// overflow are scrape-visible in the folded cluster view.
+    #[test]
+    fn trace_and_flight_health_fold_into_view() {
+        use crate::obs::trace::phase;
+        let reg = Registry::new(true);
+        let sink = TraceSink::new(true);
+        let span = crate::obs::trace::request_span(1);
+        sink.complete(span, phase::ROUTE, 0, 0.0, 0.0);
+        sink.complete(span, phase::ROUTE, 0, 0.0, 0.0); // replay: dup close
+        sink.end(span, phase::DECODE, 1.0); // never begun: orphan
+        let fr = FlightRecorder::new(2);
+        for i in 0..5 {
+            fr.record(i as f64, 0, crate::obs::flight::kind::DELTA, "d");
+        }
+        fold_trace(&reg, &sink);
+        fold_flight(&reg, &fr);
+        let view = ClusterView::capture(&reg, 1.0);
+        assert_eq!(view.snapshot.counter("trace.recorded"), 1);
+        assert_eq!(view.snapshot.counter("trace.dup_closes"), 1);
+        assert_eq!(view.snapshot.counter("trace.orphan_ends"), 1);
+        assert_eq!(view.snapshot.counter("flight.total"), 5);
+        assert_eq!(view.snapshot.counter("flight.dropped"), 3);
     }
 
     #[test]

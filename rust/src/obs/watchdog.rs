@@ -1,0 +1,452 @@
+//! Online invariant watchdog (ISSUE 9 tentpole, part 3).
+//!
+//! PR 4–8 assert the cluster's invariants in tests; nothing checks
+//! them *while serving*. [`Watchdog`] evaluates rule-based checks over
+//! the [`super::timeline::Timeline`]'s closed frames on every scrape
+//! and fires a structured [`Alert`] per violated invariant:
+//!
+//! * [`rule::REPL_LAG_GROWING`] — a follower's replication ack lag
+//!   (`repl.ack_lag{instance,shard}` gauge) grew strictly across K
+//!   consecutive windows and is still positive: the delta stream is
+//!   stalled, not just bursty.
+//! * [`rule::GS_DIVERGENCE`] — the global scheduler believes an
+//!   instance caches materially more token-blocks
+//!   (`gs.believed_token_blocks`) than the instance actually indexes
+//!   (`pool.indexed_token_blocks`): the honest-eviction contract
+//!   (belief never exceeds reality) is broken.
+//! * [`rule::TOUCH_BACKLOG`] — the deferred-touch queue is saturated
+//!   (pending at cap) or dropped refreshes this window: LRU recency is
+//!   under-credited.
+//! * [`rule::CHAIN_INCOMPLETE`] — the trace sink's orphaned ends plus
+//!   ring drops exceed a rate bound of recorded events: span chains
+//!   can no longer be trusted for attribution.
+//! * [`rule::HEARTBEAT_MISSES`] — an instance's miss streak
+//!   (`hb.miss_streak` gauge, in heartbeat intervals) reached the
+//!   configured streak before the failure detector acted.
+//!
+//! The watchdog is strictly record-only: alerts go to the flight
+//! recorder (and its gated dump); no decision consumes them. Each
+//! ongoing condition fires **once** — the rule re-arms when the
+//! condition clears, so a stalled shard produces one alert, not one
+//! per scrape.
+
+use std::collections::BTreeSet;
+
+use crate::obs::timeline::Frame;
+use crate::util::json::Json;
+
+/// Alert rule names — also the `detail` prefix in flight-recorder
+/// events.
+pub mod rule {
+    pub const REPL_LAG_GROWING: &str = "repl_lag_growing";
+    pub const GS_DIVERGENCE: &str = "gs_divergence";
+    pub const TOUCH_BACKLOG: &str = "touch_backlog";
+    pub const CHAIN_INCOMPLETE: &str = "chain_incomplete";
+    pub const HEARTBEAT_MISSES: &str = "heartbeat_misses";
+}
+
+#[derive(Clone, Debug)]
+pub struct WatchdogConfig {
+    /// Consecutive windows of strict lag growth before
+    /// [`rule::REPL_LAG_GROWING`] fires.
+    pub k_windows: usize,
+    /// Relative over-belief bound for [`rule::GS_DIVERGENCE`]:
+    /// believed must exceed `indexed * (1 + ratio)`.
+    pub divergence_ratio: f64,
+    /// Absolute slack (token-blocks) under which divergence never
+    /// fires — TTL expiry on the two sides is not clock-synchronized.
+    pub divergence_slack_blocks: u64,
+    /// Pending-touch count at which [`rule::TOUCH_BACKLOG`] fires
+    /// (the queue's capacity means "saturated").
+    pub backlog_cap: u64,
+    /// `(orphan_ends + dropped) / recorded` bound for
+    /// [`rule::CHAIN_INCOMPLETE`].
+    pub incomplete_rate_bound: f64,
+    /// Miss streak (in heartbeat intervals) for
+    /// [`rule::HEARTBEAT_MISSES`].
+    pub heartbeat_miss_streak: f64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            k_windows: 3,
+            divergence_ratio: 0.5,
+            divergence_slack_blocks: 128,
+            backlog_cap: crate::mempool::DEFERRED_TOUCH_CAP as u64,
+            incomplete_rate_bound: 0.01,
+            heartbeat_miss_streak: 3.0,
+        }
+    }
+}
+
+/// One fired invariant violation.
+#[derive(Clone, Debug)]
+pub struct Alert {
+    pub rule: &'static str,
+    /// Frame-end timestamp the violation was detected at.
+    pub at: f64,
+    /// The metric key (or family) that violated — unique per ongoing
+    /// condition.
+    pub subject: String,
+    pub detail: String,
+}
+
+impl Alert {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::str(self.rule)),
+            ("at", Json::num(self.at)),
+            ("subject", Json::str(self.subject.clone())),
+            ("detail", Json::str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Stateful checker: owns the fired-condition set for re-arm
+/// semantics. One per cluster/sim, driven from the scrape path.
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    /// `(rule, subject)` pairs currently in violation — fired once,
+    /// re-armed on clear.
+    active: BTreeSet<(&'static str, String)>,
+    fired_total: u64,
+}
+
+impl Watchdog {
+    pub fn new(cfg: WatchdogConfig) -> Self {
+        Watchdog {
+            cfg,
+            active: BTreeSet::new(),
+            fired_total: 0,
+        }
+    }
+
+    pub fn config(&self) -> &WatchdogConfig {
+        &self.cfg
+    }
+
+    /// Alerts fired over this watchdog's lifetime.
+    pub fn fired_total(&self) -> u64 {
+        self.fired_total
+    }
+
+    /// Evaluate every rule over the timeline's closed frames (oldest
+    /// first) and return newly-fired alerts. Idempotent per ongoing
+    /// condition.
+    pub fn check(&mut self, frames: &[Frame]) -> Vec<Alert> {
+        let Some(last) = frames.last() else {
+            return vec![];
+        };
+        let mut conditions: Vec<Alert> = vec![];
+        self.repl_lag(frames, &mut conditions);
+        self.divergence(last, &mut conditions);
+        self.backlog(last, &mut conditions);
+        self.chains(last, &mut conditions);
+        self.heartbeats(last, &mut conditions);
+
+        // Re-arm: conditions absent this round leave the active set.
+        let now_active: BTreeSet<(&'static str, String)> = conditions
+            .iter()
+            .map(|a| (a.rule, a.subject.clone()))
+            .collect();
+        self.active.retain(|k| now_active.contains(k));
+
+        let mut fired = vec![];
+        for a in conditions {
+            if self.active.insert((a.rule, a.subject.clone())) {
+                self.fired_total += 1;
+                fired.push(a);
+            }
+        }
+        fired
+    }
+
+    /// Strictly growing `repl.ack_lag` gauge across the last K+1
+    /// frames (K growth steps), still positive.
+    fn repl_lag(&self, frames: &[Frame], out: &mut Vec<Alert>) {
+        let last = frames.last().unwrap();
+        for (key, lag) in last.gauges_under("repl.ack_lag{") {
+            if lag <= 0.0 {
+                continue;
+            }
+            let need = self.cfg.k_windows + 1;
+            if frames.len() < need {
+                continue;
+            }
+            let tail = &frames[frames.len() - need..];
+            let grew = tail.windows(2).all(|w| {
+                match (w[0].gauge(key), w[1].gauge(key)) {
+                    (Some(a), Some(b)) => b > a,
+                    _ => false,
+                }
+            });
+            if grew {
+                out.push(Alert {
+                    rule: rule::REPL_LAG_GROWING,
+                    at: last.t1,
+                    subject: key.to_string(),
+                    detail: format!(
+                        "{key} grew for {} consecutive windows to {lag}",
+                        self.cfg.k_windows
+                    ),
+                });
+            }
+        }
+    }
+
+    /// GS believes more cached token-blocks than the pool indexes.
+    fn divergence(&self, last: &Frame, out: &mut Vec<Alert>) {
+        for (key, believed) in
+            last.counters_under("gs.believed_token_blocks{")
+        {
+            let Some(label) = key.strip_prefix("gs.believed_token_blocks")
+            else {
+                continue;
+            };
+            let indexed =
+                last.counter(&format!("pool.indexed_token_blocks{label}"));
+            let over = believed.saturating_sub(indexed);
+            if over > self.cfg.divergence_slack_blocks
+                && believed as f64
+                    > indexed as f64 * (1.0 + self.cfg.divergence_ratio)
+            {
+                out.push(Alert {
+                    rule: rule::GS_DIVERGENCE,
+                    at: last.t1,
+                    subject: key.to_string(),
+                    detail: format!(
+                        "gs believes {believed} token-blocks but \
+                         {indexed} are indexed{label}"
+                    ),
+                });
+            }
+        }
+    }
+
+    /// Deferred-touch queue saturated or dropping this window.
+    fn backlog(&self, last: &Frame, out: &mut Vec<Alert>) {
+        for (key, deferred) in
+            last.counters_under("pool.touches_deferred{")
+        {
+            let Some(label) = key.strip_prefix("pool.touches_deferred")
+            else {
+                continue;
+            };
+            let drained =
+                last.counter(&format!("pool.touches_drained{label}"));
+            let dropped_key = format!("pool.touches_dropped{label}");
+            let dropped = last.counter(&dropped_key);
+            let pending = deferred.saturating_sub(drained + dropped);
+            let dropped_now = last.delta(&dropped_key);
+            if pending >= self.cfg.backlog_cap || dropped_now > 0 {
+                out.push(Alert {
+                    rule: rule::TOUCH_BACKLOG,
+                    at: last.t1,
+                    subject: key.to_string(),
+                    detail: format!(
+                        "touch queue{label}: {pending} pending \
+                         (cap {}), {dropped_now} dropped this window",
+                        self.cfg.backlog_cap
+                    ),
+                });
+            }
+        }
+    }
+
+    /// Span-chain incompleteness rate over the whole trace.
+    fn chains(&self, last: &Frame, out: &mut Vec<Alert>) {
+        let recorded = last.counter("trace.recorded");
+        if recorded == 0 {
+            return;
+        }
+        let bad = last.counter("trace.orphan_ends")
+            + last.counter("trace.dropped");
+        let rate = bad as f64 / recorded as f64;
+        if rate > self.cfg.incomplete_rate_bound {
+            out.push(Alert {
+                rule: rule::CHAIN_INCOMPLETE,
+                at: last.t1,
+                subject: "trace".to_string(),
+                detail: format!(
+                    "{bad}/{recorded} trace events orphaned or dropped \
+                     ({:.2}% > {:.2}% bound)",
+                    rate * 100.0,
+                    self.cfg.incomplete_rate_bound * 100.0
+                ),
+            });
+        }
+    }
+
+    /// Heartbeat miss streaks at or past the configured bound.
+    fn heartbeats(&self, last: &Frame, out: &mut Vec<Alert>) {
+        for (key, streak) in last.gauges_under("hb.miss_streak{") {
+            if streak >= self.cfg.heartbeat_miss_streak {
+                out.push(Alert {
+                    rule: rule::HEARTBEAT_MISSES,
+                    at: last.t1,
+                    subject: key.to_string(),
+                    detail: format!(
+                        "{key}: {streak:.1} intervals without a \
+                         heartbeat (bound {:.1})",
+                        self.cfg.heartbeat_miss_streak
+                    ),
+                });
+            }
+        }
+    }
+}
+
+impl Default for Watchdog {
+    fn default() -> Self {
+        Watchdog::new(WatchdogConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn frame(t1: f64) -> Frame {
+        Frame {
+            t0: t1 - 1.0,
+            t1,
+            counters: BTreeMap::new(),
+            deltas: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            histos: BTreeMap::new(),
+        }
+    }
+
+    fn lag_frame(t1: f64, lag: f64) -> Frame {
+        let mut f = frame(t1);
+        f.gauges
+            .insert("repl.ack_lag{instance=1,shard=0}".into(), lag);
+        f
+    }
+
+    #[test]
+    fn growing_lag_fires_once_and_rearms() {
+        let mut wd = Watchdog::default(); // k_windows = 3
+        let mut frames =
+            vec![lag_frame(1.0, 1.0), lag_frame(2.0, 2.0)];
+        assert!(wd.check(&frames).is_empty(), "not enough windows");
+        frames.push(lag_frame(3.0, 3.0));
+        frames.push(lag_frame(4.0, 4.0));
+        let fired = wd.check(&frames);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, rule::REPL_LAG_GROWING);
+        assert_eq!(fired[0].subject, "repl.ack_lag{instance=1,shard=0}");
+        // Still growing: same ongoing condition, no re-fire.
+        frames.push(lag_frame(5.0, 5.0));
+        assert!(wd.check(&frames).is_empty());
+        // Lag drains: condition clears and re-arms...
+        frames.push(lag_frame(6.0, 0.0));
+        assert!(wd.check(&frames).is_empty());
+        // ...so a second stall fires again.
+        for (i, lag) in [1.0, 2.0, 3.0, 4.0].iter().enumerate() {
+            frames.push(lag_frame(7.0 + i as f64, *lag));
+        }
+        assert_eq!(wd.check(&frames).len(), 1);
+        assert_eq!(wd.fired_total(), 2);
+    }
+
+    #[test]
+    fn flat_or_shrinking_lag_is_quiet() {
+        let mut wd = Watchdog::default();
+        let frames: Vec<Frame> = (0..6)
+            .map(|i| lag_frame(i as f64 + 1.0, 5.0))
+            .collect();
+        assert!(wd.check(&frames).is_empty(), "flat lag is backlog, not stall");
+        let frames: Vec<Frame> = (0..6)
+            .map(|i| lag_frame(i as f64 + 1.0, 10.0 - i as f64))
+            .collect();
+        assert!(wd.check(&frames).is_empty(), "draining lag is healthy");
+    }
+
+    #[test]
+    fn divergence_needs_both_ratio_and_slack() {
+        let mut wd = Watchdog::default();
+        let mut f = frame(1.0);
+        f.counters.insert(
+            "gs.believed_token_blocks{instance=0}".into(),
+            1000,
+        );
+        f.counters
+            .insert("pool.indexed_token_blocks{instance=0}".into(), 900);
+        // 100 over, but under both the ratio and the slack: quiet.
+        assert!(wd.check(std::slice::from_ref(&f)).is_empty());
+        f.counters.insert(
+            "gs.believed_token_blocks{instance=0}".into(),
+            2000,
+        );
+        let fired = wd.check(std::slice::from_ref(&f));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, rule::GS_DIVERGENCE);
+    }
+
+    #[test]
+    fn backlog_fires_on_saturation_or_window_drops() {
+        let mut wd = Watchdog::new(WatchdogConfig {
+            backlog_cap: 100,
+            ..Default::default()
+        });
+        let mut f = frame(1.0);
+        f.counters
+            .insert("pool.touches_deferred{instance=2}".into(), 150);
+        f.counters
+            .insert("pool.touches_drained{instance=2}".into(), 60);
+        // pending = 90 < 100, no drops: quiet.
+        assert!(wd.check(std::slice::from_ref(&f)).is_empty());
+        f.deltas
+            .insert("pool.touches_dropped{instance=2}".into(), 5);
+        f.counters
+            .insert("pool.touches_dropped{instance=2}".into(), 5);
+        let fired = wd.check(std::slice::from_ref(&f));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, rule::TOUCH_BACKLOG);
+    }
+
+    #[test]
+    fn chain_incompleteness_rate() {
+        let mut wd = Watchdog::default(); // 1% bound
+        let mut f = frame(1.0);
+        f.counters.insert("trace.recorded".into(), 1000);
+        f.counters.insert("trace.orphan_ends".into(), 5);
+        assert!(wd.check(std::slice::from_ref(&f)).is_empty());
+        f.counters.insert("trace.dropped".into(), 20);
+        let fired = wd.check(std::slice::from_ref(&f));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, rule::CHAIN_INCOMPLETE);
+    }
+
+    #[test]
+    fn heartbeat_streak() {
+        let mut wd = Watchdog::default(); // streak bound 3.0
+        let mut f = frame(1.0);
+        f.gauges.insert("hb.miss_streak{instance=4}".into(), 2.0);
+        assert!(wd.check(std::slice::from_ref(&f)).is_empty());
+        f.gauges.insert("hb.miss_streak{instance=4}".into(), 3.5);
+        let fired = wd.check(std::slice::from_ref(&f));
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].rule, rule::HEARTBEAT_MISSES);
+        assert_eq!(fired[0].subject, "hb.miss_streak{instance=4}");
+    }
+
+    #[test]
+    fn healthy_frames_are_silent() {
+        let mut wd = Watchdog::default();
+        let mut f = frame(1.0);
+        f.counters.insert("trace.recorded".into(), 500);
+        f.counters
+            .insert("gs.believed_token_blocks{instance=0}".into(), 300);
+        f.counters
+            .insert("pool.indexed_token_blocks{instance=0}".into(), 300);
+        f.gauges
+            .insert("repl.ack_lag{instance=1,shard=0}".into(), 0.0);
+        f.gauges.insert("hb.miss_streak{instance=0}".into(), 0.4);
+        assert!(wd.check(std::slice::from_ref(&f)).is_empty());
+        assert_eq!(wd.fired_total(), 0);
+    }
+}

@@ -170,6 +170,13 @@ struct SchedObs {
     /// Capacity pressure in milli-units ([0, 1] × 1000), from the
     /// load book's `set_load` feed.
     pressure_milli: Histo,
+    /// Wall-clock µs spent inside [`GlobalScheduler::route`] (ISSUE 9
+    /// timeline feed). Wall time never reaches a decision or a
+    /// virtual-clock timestamp — record-only.
+    route_us: Histo,
+    /// Eq. 1's predicted prefill seconds at route, µs-scaled — paired
+    /// with `attrib.cost_err_pm` at retire for calibration.
+    predicted_prefill_us: Histo,
 }
 
 impl GlobalScheduler {
@@ -230,6 +237,9 @@ impl GlobalScheduler {
             matched_tokens: reg.histogram("sched.matched_tokens", l),
             queued_tokens: reg.histogram("sched.queued_tokens", l),
             pressure_milli: reg.histogram("sched.pressure_milli", l),
+            route_us: reg.histogram("sched.route_us", l),
+            predicted_prefill_us: reg
+                .histogram("sched.predicted_prefill_us", l),
         });
     }
 
@@ -337,6 +347,9 @@ impl GlobalScheduler {
         session_id: u64,
         now: f64,
     ) -> anyhow::Result<RouteOutcome> {
+        // Wall-clock timer for the route_us digest — taken only when
+        // instrumented, so the bare path pays nothing.
+        let t0 = self.obs.as_ref().map(|_| std::time::Instant::now());
         // Heap-driven TTL housekeeping rides the routing path: an O(1)
         // peek per shard when nothing has expired, O(log n) per stale
         // entry.
@@ -483,6 +496,10 @@ impl GlobalScheduler {
                 obs.expired_pairs.inc(expired as u64);
             }
             obs.matched_tokens.observe(decision.matched_tokens as u64);
+            obs.predicted_prefill_us.observe_secs(expected_prefill_s);
+            if let Some(t0) = t0 {
+                obs.route_us.observe_secs(t0.elapsed().as_secs_f64());
+            }
         }
         Ok(RouteOutcome {
             decision,

@@ -12,7 +12,7 @@ use crate::engine::core::ActiveDecode;
 use crate::mempool::{BlockGeometry, InstanceId, MemPool, TransferMode};
 use crate::net::fabric::NetError;
 use crate::net::{Endpoint, Fabric};
-use crate::obs::{trace::phase, view, Registry, TraceSink};
+use crate::obs::{trace::phase, view, AttribBook, Registry, TraceSink};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::prompt_tree::InstanceKind;
 use crate::server::message::Msg;
@@ -77,6 +77,10 @@ pub fn run_instance(
     );
     let epoch = cfg.epoch;
     let now = move || epoch.elapsed().as_secs_f64();
+    // Phase-duration digests (ISSUE 9): prefill/kv_transfer/decode
+    // seconds observed at each phase close, labeled by this instance.
+    // Cheap atomics on a shared registry; no-ops when metrics are off.
+    let attrib = AttribBook::new(&cfg.obs);
     let mut active = ActiveDecodeSet::default();
     let mut last_beat = Instant::now();
     let mut rr = 0usize; // round-robin cursor over active decodes
@@ -98,6 +102,9 @@ pub fn run_instance(
                 from: cfg.id,
             });
             view::fold_pool(&cfg.obs, cfg.id.0, &engine.pool.stats());
+            view::fold_pool_index(
+                &cfg.obs, cfg.id.0, engine.pool.indexed_token_blocks(),
+            );
             last_beat = Instant::now();
         }
         // Drain the inbox (non-blocking while there is decode work).
@@ -113,6 +120,9 @@ pub fn run_instance(
                 // the cluster view (ISSUE 8 counter-loss fix).
                 Err(_) => {
                     view::fold_pool(&cfg.obs, cfg.id.0, &engine.pool.stats());
+                    view::fold_pool_index(
+                        &cfg.obs, cfg.id.0, engine.pool.indexed_token_blocks(),
+                    );
                     return;
                 }
             }
@@ -122,11 +132,14 @@ pub fn run_instance(
         match msg {
             Some(Msg::Shutdown) => {
                 view::fold_pool(&cfg.obs, cfg.id.0, &engine.pool.stats());
+                view::fold_pool_index(
+                    &cfg.obs, cfg.id.0, engine.pool.indexed_token_blocks(),
+                );
                 return;
             }
             Some(Msg::Dispatch { req, decode_to, span }) => {
                 handle_dispatch(
-                    &cfg, &mut engine, &fabric, &mut active, req,
+                    &cfg, &attrib, &mut engine, &fabric, &mut active, req,
                     decode_to, span, now(),
                 );
             }
@@ -144,8 +157,8 @@ pub fn run_instance(
                 ..
             }) => {
                 handle_handoff(
-                    &cfg, &mut engine, &fabric, &mut active, req, payload,
-                    n_blocks, prompt_len, cached_tokens, scheduled,
+                    &cfg, &attrib, &mut engine, &fabric, &mut active, req,
+                    payload, n_blocks, prompt_len, cached_tokens, scheduled,
                     first_token_time, logits, insert, span, now(),
                 );
             }
@@ -305,7 +318,8 @@ pub fn run_instance(
             if finished {
                 let a = active.jobs.swap_remove(rr);
                 finish_decode(
-                    &cfg, &mut engine, &fabric, a, backflow_to, now(),
+                    &cfg, &attrib, &mut engine, &fabric, a, backflow_to,
+                    now(),
                 );
             } else {
                 rr += 1;
@@ -386,6 +400,7 @@ fn handle_migrate_out(
 #[allow(clippy::too_many_arguments)]
 fn handle_dispatch(
     cfg: &InstanceConfig,
+    attrib: &AttribBook,
     engine: &mut Engine,
     fabric: &Fabric<Msg>,
     active: &mut ActiveDecodeSet,
@@ -408,8 +423,9 @@ fn handle_dispatch(
             return;
         }
     };
-    cfg.trace
-        .end(span, phase::PREFILL, cfg.epoch.elapsed().as_secs_f64());
+    let prefill_end = cfg.epoch.elapsed().as_secs_f64();
+    cfg.trace.end(span, phase::PREFILL, prefill_end);
+    attrib.observe_phase_secs(cfg.id.0, phase::PREFILL, prefill_end - t);
     match decode_to {
         None => {
             // Colocated: first token + local decode.
@@ -494,6 +510,7 @@ fn handle_dispatch(
 #[allow(clippy::too_many_arguments)]
 fn handle_handoff(
     cfg: &InstanceConfig,
+    attrib: &AttribBook,
     engine: &mut Engine,
     fabric: &Fabric<Msg>,
     active: &mut ActiveDecodeSet,
@@ -519,8 +536,15 @@ fn handle_handoff(
     // The prompt KV has landed in this decode instance's pool: the
     // wire transfer the prefill side opened is over. (A duplicated
     // handoff replays this close; the sink is idempotent.)
-    cfg.trace
-        .end(span, phase::KV_TRANSFER, cfg.epoch.elapsed().as_secs_f64());
+    let kv_end = cfg.epoch.elapsed().as_secs_f64();
+    cfg.trace.end(span, phase::KV_TRANSFER, kv_end);
+    // Transfer time = first-token (prefill done, export shipped) →
+    // landed here; observed on the *receiving* instance's label.
+    attrib.observe_phase_secs(
+        cfg.id.0,
+        phase::KV_TRANSFER,
+        (kv_end - first_token_time).max(0.0),
+    );
     let rid = req.id;
     match engine.start_decode_from_blocks(req, groups, prompt_len, logits, 0)
     {
@@ -547,6 +571,7 @@ fn handle_handoff(
 
 fn finish_decode(
     cfg: &InstanceConfig,
+    attrib: &AttribBook,
     engine: &mut Engine,
     fabric: &Fabric<Msg>,
     mut a: ActiveDecode,
@@ -638,6 +663,11 @@ fn finish_decode(
         crate::obs::trace::request_span(rid),
         phase::DECODE,
         t,
+    );
+    attrib.observe_phase_secs(
+        cfg.id.0,
+        phase::DECODE,
+        (t - first_token_time).max(0.0),
     );
     let _ = fabric.send(cfg.id, cfg.leader, Msg::Finished {
         rid,

@@ -23,7 +23,10 @@ use crate::net::fabric::NetError;
 use crate::net::{Fabric, LinkModel};
 use crate::obs::flight::kind as fkind;
 use crate::obs::trace::phase;
-use crate::obs::{trace, view, ClusterView, FlightRecorder, Registry, TraceSink};
+use crate::obs::{
+    trace, view, Alert, AttribBook, ClusterView, FlightRecorder, Labels,
+    Registry, RetireSample, Timeline, TraceSink, Watchdog,
+};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
@@ -143,6 +146,9 @@ struct Pending {
     /// Decode pairing (disaggregated dispatch) — a drain of the decode
     /// instance must wait for this request too.
     decode_on: Option<InstanceId>,
+    /// Eq. 1 prefill-cost prediction captured at route time, compared
+    /// against the observed prefill at retire (ISSUE 9 attribution).
+    predicted_prefill_s: f64,
 }
 
 struct Shared {
@@ -242,6 +248,15 @@ pub struct ServeCluster {
     /// suspicion, promotions, fence epochs) — dumped to the bench-JSON
     /// sink when the failure detector fires.
     flight: FlightRecorder,
+    /// Windowed time-series over registry snapshots (ISSUE 9): the
+    /// collector's ~500ms scrape feeds it; frames close on 1s windows.
+    timeline: Timeline,
+    /// Online invariant checker over closed timeline frames. Only the
+    /// collector thread drives it; the mutex keeps `&self` plumbing.
+    watchdog: Mutex<Watchdog>,
+    /// Retire-side latency digests (queue/TTFT/TBT per instance) and
+    /// the Eq. 1 predicted-vs-observed prefill cost error.
+    attrib: AttribBook,
 }
 
 /// Client-facing handle (cheap to clone via Arc).
@@ -302,6 +317,11 @@ impl ServeCluster {
         let obs = Registry::from_env();
         let trace_sink = TraceSink::from_env();
         let flight = FlightRecorder::default();
+        // Analysis layer (ISSUE 9) on top of the recording layer: all
+        // three are no-ops while the registry is disabled.
+        let timeline = Timeline::default();
+        let watchdog = Mutex::new(Watchdog::default());
+        let attrib = AttribBook::new(&obs);
         for (k, gs) in unit_schedulers.iter_mut().enumerate() {
             gs.attach_obs(&obs, Some(k as u32));
         }
@@ -460,6 +480,9 @@ impl ServeCluster {
             obs,
             trace: trace_sink,
             flight,
+            timeline,
+            watchdog,
+            attrib,
         });
 
         // Ship the seed-roster backlog to the GS followers.
@@ -530,6 +553,57 @@ impl ServeCluster {
                 .collect();
             view::fold_replication(&self.obs, s as u32, head, &lags);
         }
+        view::fold_trace(&self.obs, &self.trace);
+        view::fold_flight(&self.obs, &self.flight);
+        // Watchdog feeds (ISSUE 9): heartbeat-miss streaks per live
+        // member, and the GS's believed cached-block count per instance
+        // (the pool-side `pool.indexed_token_blocks` counterpart rides
+        // instance heartbeats; divergence between the two is rule 2).
+        let now = self.now();
+        let streaks = self.cm.lock().unwrap().miss_streaks(now);
+        for (id, streak) in streaks {
+            self.obs
+                .set_gauge("hb.miss_streak", Labels::instance(id), streak);
+        }
+        let roster: Vec<InstanceId> = self
+            .instances
+            .read()
+            .unwrap()
+            .iter()
+            .map(|&(i, _)| i)
+            .collect();
+        let believed = self.plane.cached_blocks_for(&roster);
+        for id in roster {
+            self.obs.set_counter(
+                "gs.believed_token_blocks",
+                Labels::instance(id.0),
+                believed.get(&id).copied().unwrap_or(0) as u64,
+            );
+        }
+    }
+
+    /// Watchdog alerts land in the flight recorder (structured, kind
+    /// `alert`), and — like the failure detector's dumps — the ring is
+    /// persisted only when `MEMSERVE_BENCH_JSON` was explicitly set, so
+    /// unit tests never grow a `bench_results/` side effect.
+    fn record_alerts(&self, alerts: &[Alert]) {
+        for a in alerts {
+            log::warn!("watchdog: {} [{}] {}", a.rule, a.subject, a.detail);
+            self.flight.record(
+                a.at,
+                u32::MAX,
+                fkind::ALERT,
+                format!("{} [{}] {}", a.rule, a.subject, a.detail),
+            );
+        }
+        if !alerts.is_empty() {
+            if let Some(dir) = crate::util::bench::explicit_json_dir() {
+                if let Some(p) = self.flight.dump_to(&dir, "flight_watchdog")
+                {
+                    log::warn!("watchdog: flight ring dumped to {p}");
+                }
+            }
+        }
     }
 
     fn collector(&self, ep: crate::net::Endpoint<Msg>) {
@@ -548,6 +622,19 @@ impl ServeCluster {
                 // loop. Skipped entirely when metrics are off.
                 if self.obs.enabled() && sweeps % 25 == 0 {
                     self.scrape();
+                    // Timeline + watchdog (ISSUE 9): every scrape feeds
+                    // the windowed series; each *closed* frame gets one
+                    // invariant pass, and fired alerts go to the flight
+                    // recorder. Record-only: nothing here feeds back
+                    // into routing.
+                    if self.timeline.observe(self.obs.snapshot(now)) {
+                        let alerts = self
+                            .watchdog
+                            .lock()
+                            .unwrap()
+                            .check(&self.timeline.frames());
+                        self.record_alerts(&alerts);
+                    }
                 }
                 let dead = self.cm.lock().unwrap().sweep(now);
                 if !dead.is_empty() {
@@ -637,6 +724,23 @@ impl ServeCluster {
                                 decode_instance: instance.0,
                             };
                             self.metrics.lock().unwrap().push(rec.clone());
+                            // Retire-side latency digests (ISSUE 9):
+                            // queue wait, TTFT, TBT, and the Eq. 1
+                            // predicted-vs-observed prefill error, per
+                            // prefill instance. Cheap atomics; gated
+                            // inside on `obs.enabled()`.
+                            self.attrib.observe_retire(
+                                entry.dispatched_to.0,
+                                &RetireSample {
+                                    arrival: rec.arrival,
+                                    scheduled,
+                                    first_token: first_token_time,
+                                    completion: completion_time,
+                                    output_tokens,
+                                    predicted_prefill_s: entry
+                                        .predicted_prefill_s,
+                                },
+                            );
                             entry.record = Some(rec);
                             entry.done = true;
                             self.shared.cv.notify_all();
@@ -1046,6 +1150,7 @@ impl ServeCluster {
             if let Some(e) = p.get_mut(&rid) {
                 e.dispatched_to = target;
                 e.decode_on = decode_to;
+                e.predicted_prefill_s = outcome.expected_prefill_s;
             }
         }
         let req = Request {
@@ -1110,6 +1215,13 @@ impl ServeCluster {
     /// The control-plane flight recorder (always on; bounded ring).
     pub fn flight(&self) -> &FlightRecorder {
         &self.flight
+    }
+
+    /// The windowed time-series (ISSUE 9): frames close on the
+    /// collector's ~500ms scrape cadence with 1s windows. Empty while
+    /// metrics are disabled. `timeline().to_json()` exports the ring.
+    pub fn timeline(&self) -> &Timeline {
+        &self.timeline
     }
 
     /// One merged cluster-wide observability snapshot. Leader-side

@@ -14,7 +14,8 @@ use crate::net::LinkModel;
 use crate::obs::flight::kind as fkind;
 use crate::obs::trace::phase;
 use crate::obs::{
-    trace, ClusterView, FlightRecorder, Labels, Registry, TraceSink,
+    trace, view, Alert, AttribBook, ClusterView, FlightRecorder, Labels,
+    Registry, Timeline, TraceSink, Watchdog,
 };
 use crate::replica::ShardedReplicaGroup;
 use crate::scheduler::cost_model::OperatorCostModel;
@@ -67,6 +68,11 @@ pub struct SimConfig {
     /// decision or a virtual-clock timestamp, so trace-identity tests
     /// hold with it on or off. Default off (byte-stable reports).
     pub observe: bool,
+    /// Timeline window (virtual seconds) for the windowed time-series
+    /// + watchdog pass (ISSUE 9); only read when `observe` is set. The
+    /// tick runs between popped events — it never enqueues anything,
+    /// so event order (and thus routing) is untouched.
+    pub obs_window_s: f64,
 }
 
 /// A scripted fleet change in the discrete-event simulation.
@@ -123,6 +129,7 @@ impl Default for SimConfig {
             replication_drop: 0.0,
             fleet: vec![],
             observe: false,
+            obs_window_s: 1.0,
         }
     }
 }
@@ -170,6 +177,12 @@ pub struct SimObs {
     pub view: ClusterView,
     pub trace: TraceSink,
     pub flight: FlightRecorder,
+    /// Windowed time-series driven by the virtual clock (ISSUE 9):
+    /// one frame per `obs_window_s`, flushed at trace end.
+    pub timeline: Timeline,
+    /// Every watchdog alert the run fired (also in the flight ring as
+    /// `kind::ALERT`). Empty on a healthy trace.
+    pub alerts: Vec<Alert>,
 }
 
 impl std::fmt::Debug for SimObs {
@@ -182,6 +195,8 @@ impl std::fmt::Debug for SimObs {
             .field("trace_dup_closes", &dups)
             .field("trace_orphan_ends", &orphans)
             .field("flight_events", &self.flight.len())
+            .field("timeline_frames", &self.timeline.len())
+            .field("alerts", &self.alerts.len())
             .finish()
     }
 }
@@ -208,6 +223,9 @@ struct Job {
     /// block is synchronous engine work (paper §7's single NCCL thread;
     /// the root cause of "overhead with increasing load", §5.2).
     recv_tax: f64,
+    /// Eq. 1 prefill cost the router predicted at route time; compared
+    /// against the observed prefill at retire (ISSUE 9 attribution).
+    predicted_prefill_s: f64,
 }
 
 struct Instance {
@@ -358,6 +376,15 @@ pub struct Simulation {
     /// seconds, so the export shape is identical to the live server's.
     trace: TraceSink,
     flight: FlightRecorder,
+    /// Windowed time-series + invariant checker (ISSUE 9), ticked
+    /// between popped events on `obs_window_s` boundaries.
+    timeline: Timeline,
+    watchdog: Watchdog,
+    alerts: Vec<Alert>,
+    /// Per-instance phase/TTFT/TBT digests + Eq. 1 cost error.
+    attrib: AttribBook,
+    /// Next virtual-clock frame boundary (first window starts at 0).
+    next_frame: f64,
 }
 
 impl Simulation {
@@ -452,6 +479,8 @@ impl Simulation {
             .iter()
             .map(|s| s.shared_prefix.clone())
             .collect();
+        let timeline = Timeline::with_window(cfg.obs_window_s.max(1e-9));
+        let attrib = AttribBook::new(&obs);
         Simulation {
             cfg,
             spec,
@@ -467,6 +496,11 @@ impl Simulation {
             obs,
             trace: trace_sink,
             flight: FlightRecorder::default(),
+            timeline,
+            watchdog: Watchdog::default(),
+            alerts: vec![],
+            attrib,
+            next_frame: 0.0,
         }
     }
 
@@ -528,6 +562,12 @@ impl Simulation {
         while let Some((now, ev)) = self.q.pop() {
             guard += 1;
             assert!(guard < limit, "simulation runaway");
+            // Timeline tick (ISSUE 9): runs *between* popped events,
+            // never through the queue — pushing obs events would shift
+            // push-order sequence tie-breaks and change routing.
+            if self.cfg.observe && now >= self.next_frame {
+                self.obs_tick(now);
+            }
             match ev {
                 Ev::Send { session, turn } => self.on_send(now, session, turn),
                 Ev::Start { inst } => self.try_start(now, inst),
@@ -584,13 +624,86 @@ impl Simulation {
                     self.fold_instance_stats(i);
                 }
             }
+            // Close the partial last window and give the watchdog a
+            // final pass over it.
+            self.fold_shared_obs();
+            if self.timeline.flush(self.obs.snapshot(self.report.sim_seconds))
+            {
+                self.watchdog_pass();
+            }
             self.report.obs = Some(SimObs {
                 view: ClusterView::capture(&self.obs, self.report.sim_seconds),
                 trace: self.trace.clone(),
                 flight: self.flight.clone(),
+                timeline: self.timeline.clone(),
+                alerts: self.alerts.clone(),
             });
         }
         self.report
+    }
+
+    /// One timeline tick: close every frame boundary at or before
+    /// `now`. Folds the scrape-equivalent stats, feeds the registry
+    /// snapshot to the timeline, and runs the watchdog on each closed
+    /// frame. Read-only against the sim state (no queue pushes, no
+    /// timestamp changes).
+    fn obs_tick(&mut self, now: f64) {
+        let w = self.cfg.obs_window_s.max(1e-9);
+        while now >= self.next_frame {
+            let at = self.next_frame;
+            for i in 0..self.instances.len() {
+                if self.instances[i].state != InstanceState::Decommissioned {
+                    self.fold_instance_stats(i);
+                }
+            }
+            self.fold_shared_obs();
+            if self.timeline.observe(self.obs.snapshot(at)) {
+                self.watchdog_pass();
+            }
+            self.next_frame += w;
+        }
+    }
+
+    /// Fold the leader-scrape-equivalent shared stats: per-shard
+    /// replication lag (live followers vs the shard's log head) and
+    /// trace/flight health.
+    fn fold_shared_obs(&self) {
+        if let Some(grp) = &self.replicas {
+            for s in 0..grp.shards() {
+                if grp.is_consumed(s) {
+                    continue;
+                }
+                let g = grp.group(s);
+                let head = g.log_head();
+                let lags: Vec<(u32, u64)> = g
+                    .live_indices()
+                    .into_iter()
+                    .filter(|&i| i != g.primary_index())
+                    .map(|i| {
+                        (i as u32, head.saturating_sub(g.applied_seq(i)))
+                    })
+                    .collect();
+                view::fold_replication(&self.obs, s as u32, head, &lags);
+            }
+        }
+        view::fold_trace(&self.obs, &self.trace);
+        view::fold_flight(&self.obs, &self.flight);
+    }
+
+    /// Run the watchdog over the current frame ring; fired alerts land
+    /// in the flight ring (kind `alert`) and in [`SimObs::alerts`].
+    fn watchdog_pass(&mut self) {
+        let frames = self.timeline.frames();
+        let alerts = self.watchdog.check(&frames);
+        for a in &alerts {
+            self.flight.record(
+                a.at,
+                u32::MAX,
+                fkind::ALERT,
+                format!("{} [{}] {}", a.rule, a.subject, a.detail),
+            );
+        }
+        self.alerts.extend(alerts);
     }
 
     fn on_send(&mut self, now: f64, session: usize, turn: usize) {
@@ -680,6 +793,7 @@ impl Simulation {
             decode_inst,
             wire_done: 0.0,
             recv_tax: 0.0,
+            predicted_prefill_s: out.expected_prefill_s,
         };
         if let Some(d) = decode_inst {
             self.instances[d].expected_arrivals += 1;
@@ -949,6 +1063,14 @@ impl Simulation {
             l,
             inst.index.total_token_blocks() as u64,
         );
+        // The GS's side of the divergence pair (ISSUE 9 watchdog):
+        // what the global tree *believes* this instance caches, vs the
+        // `pool.indexed_token_blocks` truth above.
+        self.obs.set_counter(
+            "gs.believed_token_blocks",
+            l,
+            self.gs.trees.cached_blocks(inst.id) as u64,
+        );
     }
 
     /// Serial-resource discipline: prefill-first, then decode iteration.
@@ -1072,6 +1194,11 @@ impl Simulation {
         self.instances[i].busy = false;
         let span = trace::request_span(job.rid);
         self.trace.end(span, phase::PREFILL, now);
+        self.attrib.observe_phase_secs(
+            i as u32,
+            phase::PREFILL,
+            now - job.rec.scheduled,
+        );
         job.rec.first_token = now; // prefill emits the first token
         job.generated = 1;
         // Caching at the prefill side (milestone step 2 / colocated).
@@ -1119,6 +1246,11 @@ impl Simulation {
         self.instances[d].expected_arrivals -= 1;
         let span = trace::request_span(job.rid);
         self.trace.end(span, phase::KV_TRANSFER, now);
+        self.attrib.observe_phase_secs(
+            d as u32,
+            phase::KV_TRANSFER,
+            now - job.rec.first_token,
+        );
         self.trace.begin(span, phase::DECODE, d as u32, now);
         // Decode-side caching of the transferred prompt KV
         // (transfer_with_insert — milestone step 3).
@@ -1173,6 +1305,25 @@ impl Simulation {
         self.trace.end(span, phase::DECODE, now);
         self.trace
             .complete(span, phase::RETIRE, inst_idx as u32, now, now);
+        // Retire-side attribution (ISSUE 9): decode duration on the
+        // finishing instance; queue/TTFT/TBT + the Eq. 1 cost error on
+        // the prefill instance the router charged the prediction to.
+        self.attrib.observe_phase_secs(
+            inst_idx as u32,
+            phase::DECODE,
+            now - job.rec.first_token,
+        );
+        self.attrib.observe_retire(
+            job.rec.prefill_instance,
+            &crate::obs::RetireSample {
+                arrival: job.rec.arrival,
+                scheduled: job.rec.scheduled,
+                first_token: job.rec.first_token,
+                completion: now,
+                output_tokens: job.gen_target,
+                predicted_prefill_s: job.predicted_prefill_s,
+            },
+        );
         // Build the full consumed sequence (prompt + generated KV).
         let mut seq = job.prompt.clone();
         for k in 0..job.gen_target {

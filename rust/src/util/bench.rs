@@ -175,8 +175,26 @@ pub fn bench_json_dir() -> Option<String> {
 /// unit-test run that trips the failure detector never grows a
 /// `bench_results/` directory as a side effect.
 pub fn explicit_json_dir() -> Option<String> {
-    let var = std::env::var("MEMSERVE_BENCH_JSON").ok()?;
-    json_sink_dir(Some(&var))
+    explicit_sink_dir(std::env::var("MEMSERVE_BENCH_JSON").ok().as_deref())
+}
+
+/// The [`explicit_json_dir`] gating contract, pure for testability:
+/// an *unset* var is `None` (unlike [`json_sink_dir`], which defaults
+/// it on), everything else follows the sink rules.
+fn explicit_sink_dir(var: Option<&str>) -> Option<String> {
+    json_sink_dir(Some(var?))
+}
+
+/// Re-measure attempts for bench overhead gates (fig19/fig20) before
+/// a below-floor ratio becomes a hard failure — contended CI runners
+/// produce one-off stalls. `MEMSERVE_GATE_ATTEMPTS` overrides the
+/// default of 3; values clamp to at least 1.
+pub fn gate_attempts() -> usize {
+    std::env::var("MEMSERVE_GATE_ATTEMPTS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(3)
+        .max(1)
 }
 
 /// Format microseconds human-readably.
@@ -242,6 +260,28 @@ mod tests {
         assert_eq!(
             json_sink_dir(Some("perf_history/pr42")).as_deref(),
             Some("perf_history/pr42")
+        );
+    }
+
+    /// ISSUE 9 satellite: the explicit-dump gate — unset stays off
+    /// (no `bench_results/` side effect from unit tests), everything
+    /// else follows the sink contract.
+    #[test]
+    fn explicit_sink_dir_gates_on_unset() {
+        assert_eq!(explicit_sink_dir(None), None);
+        assert_eq!(explicit_sink_dir(Some("0")), None);
+        assert_eq!(explicit_sink_dir(Some("off")), None);
+        assert_eq!(
+            explicit_sink_dir(Some("")).as_deref(),
+            Some("bench_results")
+        );
+        assert_eq!(
+            explicit_sink_dir(Some("1")).as_deref(),
+            Some("bench_results")
+        );
+        assert_eq!(
+            explicit_sink_dir(Some("artifacts/x")).as_deref(),
+            Some("artifacts/x")
         );
     }
 
