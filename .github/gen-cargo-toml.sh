@@ -7,7 +7,21 @@
 #
 # Benches and examples live at the repo root and are declared
 # explicitly; every bench has its own main() (harness = false).
+#
+# `--loom` additionally declares the loom model-checker as a
+# `cfg(loom)`-only dependency (ISSUE 10). It is compiled solely when
+# RUSTFLAGS="--cfg loom" — the normal build graph is unchanged, which
+# is why the loom CI job regenerates the manifest with this flag while
+# every other job uses the bare form.
 set -euo pipefail
+
+WITH_LOOM=0
+for arg in "$@"; do
+  case "$arg" in
+    --loom) WITH_LOOM=1 ;;
+    *) echo "error: unknown flag '$arg' (supported: --loom)" >&2; exit 1 ;;
+  esac
+done
 
 if [ ! -f src/lib.rs ] || [ ! -d ../benches ]; then
   echo "error: run from the rust/ crate directory (src/lib.rs and ../benches must exist)" >&2
@@ -29,7 +43,20 @@ xla = "0.1"
 [[bin]]
 name = "memserve"
 path = "src/main.rs"
+
+# `--cfg loom` is an expected custom cfg (the util::sync shim), not a
+# typo'd feature — tell check-cfg so `-D warnings` builds stay clean.
+[lints.rust]
+unexpected_cfgs = { level = "warn", check-cfg = ["cfg(loom)"] }
 EOF
+
+if [ "$WITH_LOOM" = 1 ]; then
+  cat <<'LOOMEOF'
+
+[target.'cfg(loom)'.dependencies]
+loom = "0.7"
+LOOMEOF
+fi
 
 for b in ../benches/*.rs; do
   name=$(basename "$b" .rs)

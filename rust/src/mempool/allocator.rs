@@ -84,7 +84,10 @@ impl BlockAllocator {
             }
         }
         // A duplicate *within* this call is also a double free.
-        let mut seen = std::collections::HashSet::with_capacity(blocks.len());
+        let mut seen = crate::util::rng::DetSet::with_capacity_and_hasher(
+            blocks.len(),
+            Default::default(),
+        );
         for &b in blocks {
             if !seen.insert(b) {
                 return Err(AllocError::DoubleFree(b));

@@ -7,8 +7,9 @@
 //! local halves implemented here (`export_blocks` on the sender,
 //! `import_blocks` + `insert` on the receiver).
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::rng::DetMap;
 
 use super::allocator::AllocError;
 use super::block::{BlockAddr, BlockGeometry, InstanceId, Tier};
@@ -125,9 +126,12 @@ impl MemPool {
     /// match-path counters and the index's deferred-touch counters.
     pub fn stats(&self) -> PoolStats {
         let mut s = self.stats.clone();
-        s.matches = self.matches.load(Relaxed);
+        // ordering: Relaxed — monotonic stat counters; reads are
+        // point-in-time snapshots with no cross-field consistency.
+        s.matches = self.matches.load(Ordering::Relaxed);
+        // ordering: Relaxed — same counter family as above.
         s.match_hit_token_blocks =
-            self.match_hit_token_blocks.load(Relaxed);
+            self.match_hit_token_blocks.load(Ordering::Relaxed);
         let ts = self.index.touch_stats();
         s.touches_deferred = ts.deferred;
         s.touches_drained = ts.drained;
@@ -294,9 +298,12 @@ impl MemPool {
     pub fn match_prefix(&self, tokens: &[u32], now: f64) -> MatchResult {
         let IndexMatch { tokens: t, groups } =
             self.index.match_prefix(tokens, now);
-        self.matches.fetch_add(1, Relaxed);
+        // ordering: Relaxed — independent stat counters; no other
+        // memory is published through them.
+        self.matches.fetch_add(1, Ordering::Relaxed);
+        // ordering: Relaxed — same counter family as above.
         self.match_hit_token_blocks
-            .fetch_add(groups.len() as u64, Relaxed);
+            .fetch_add(groups.len() as u64, Ordering::Relaxed);
         MatchResult { tokens: t, groups }
     }
 
@@ -372,7 +379,7 @@ impl MemPool {
         if victims.is_empty() {
             return Ok(0);
         }
-        let mut remap = HashMap::new();
+        let mut remap = DetMap::default();
         let mut tmp = vec![0.0f32; self.geom.floats_per_block()];
         for old in victims {
             if self.dram.allocator().free_count() == 0 {
@@ -398,7 +405,7 @@ impl MemPool {
     /// addresses (in input order). The index is remapped.
     pub fn swap_in(&mut self, addrs: &[BlockAddr])
                    -> Result<Vec<BlockAddr>, PoolError> {
-        let mut remap = HashMap::new();
+        let mut remap = DetMap::default();
         let mut out = Vec::with_capacity(addrs.len());
         let mut tmp = vec![0.0f32; self.geom.floats_per_block()];
         for &old in addrs {

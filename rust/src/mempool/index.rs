@@ -67,7 +67,10 @@
 
 use std::collections::{BinaryHeap, HashMap};
 use std::hash::{BuildHasherDefault, Hasher};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+
+use crate::util::sync::{
+    with_mut_u64, with_mut_usize, AtomicU64, AtomicUsize, Ordering,
+};
 
 use crate::util::heap::lazy_heap_needs_compact;
 
@@ -280,12 +283,17 @@ impl Node {
 
     #[inline]
     fn access(&self) -> f64 {
-        f64::from_bits(self.last_access.load(Relaxed))
+        // ordering: Relaxed — a recency stamp read/written by racing
+        // `&self` matchers; any interleaving yields SOME matcher's
+        // timestamp, and eviction only needs approximate recency.
+        f64::from_bits(self.last_access.load(Ordering::Relaxed))
     }
 
     #[inline]
     fn set_access(&self, now: f64) {
-        self.last_access.store(now.to_bits(), Relaxed);
+        // ordering: Relaxed — see `access`; no other memory is
+        // published through this stamp.
+        self.last_access.store(now.to_bits(), Ordering::Relaxed);
     }
 }
 
@@ -334,21 +342,56 @@ impl DeferredTouches {
     /// caller must then leave the node's access time alone).
     #[inline]
     fn defer(&self, node: usize) -> bool {
-        let i = self.claimed.fetch_add(1, Relaxed);
+        // ordering: Relaxed — fetch_add hands each producer a distinct
+        // slot; no release needed anywhere in this protocol because
+        // the drain runs under `&mut RadixIndex`, whose exclusive
+        // borrow (a sync point in every path that reaches it) is the
+        // publication edge. The loom model below pins exactly this
+        // claim.
+        // ordering: Relaxed — slot claim; see block above.
+        let i = self.claimed.fetch_add(1, Ordering::Relaxed);
         if i >= self.slots.len() {
-            self.dropped.fetch_add(1, Relaxed);
+            // ordering: Relaxed — monotonic drop counter.
+            self.dropped.fetch_add(1, Ordering::Relaxed);
             return false;
         }
-        self.slots[i].store(node as u64 + 1, Relaxed);
-        self.deferred.fetch_add(1, Relaxed);
+        // ordering: Relaxed — slot store; the drain's `&mut` borrow
+        // publishes it (block comment above, loom-pinned).
+        self.slots[i].store(node as u64 + 1, Ordering::Relaxed);
+        self.deferred.fetch_add(1, Ordering::Relaxed);
         true
     }
 
+    /// Take every queued touch under `&mut` — the aliasing guarantee IS
+    /// the synchronization (no producer can be mid-store while an
+    /// exclusive borrow exists). Returns the touched node indices.
+    fn drain(&mut self) -> Vec<usize> {
+        // ordering: (get_mut/with_mut) — exclusive access, no atomics
+        // ordering involved at all; see `defer` for the protocol.
+        let claimed = with_mut_usize(&mut self.claimed, std::mem::take);
+        if claimed == 0 {
+            return vec![];
+        }
+        let n = claimed.min(self.slots.len());
+        with_mut_u64(&mut self.drained, |d| *d += n as u64);
+        let mut out = Vec::with_capacity(n);
+        for slot in self.slots.iter_mut().take(n) {
+            let v = with_mut_u64(slot, std::mem::take);
+            if v == 0 {
+                continue; // claimed but never stored: impossible under &mut
+            }
+            out.push((v - 1) as usize);
+        }
+        out
+    }
+
     fn stats(&self) -> TouchStats {
+        // ordering: Relaxed — diagnostic counters; each is
+        // independently monotonic.
         TouchStats {
-            deferred: self.deferred.load(Relaxed),
-            drained: self.drained.load(Relaxed),
-            dropped: self.dropped.load(Relaxed),
+            deferred: self.deferred.load(Ordering::Relaxed),
+            drained: self.drained.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
         }
     }
 }
@@ -659,21 +702,7 @@ impl RadixIndex {
     /// read or modified the heap reflects all completed matches. Under
     /// `&mut self` no reader is live, hence plain `get_mut` access.
     fn drain_touches(&mut self) {
-        let claimed = *self.touches.claimed.get_mut();
-        if claimed == 0 {
-            return;
-        }
-        let n = claimed.min(self.touches.slots.len());
-        *self.touches.claimed.get_mut() = 0;
-        *self.touches.drained.get_mut() += n as u64;
-        for i in 0..n {
-            let slot = self.touches.slots[i].get_mut();
-            let v = *slot;
-            *slot = 0;
-            if v == 0 {
-                continue; // claimed but never stored: impossible under &mut
-            }
-            let idx = (v - 1) as usize;
+        for idx in self.touches.drain() {
             // Node identity is stable from defer to drain: any
             // structural mutation since would itself have drained first.
             if self.nodes[idx].valid && self.nodes[idx].children.is_empty() {
@@ -1322,7 +1351,7 @@ impl RadixIndex {
     }
 
     /// Rewrite addresses after a swap (old -> new), e.g. HBM -> DRAM.
-    pub fn remap(&mut self, map: &HashMap<BlockAddr, BlockAddr>) {
+    pub fn remap(&mut self, map: &crate::util::rng::DetMap<BlockAddr, BlockAddr>) {
         self.drain_touches();
         for n in &mut self.nodes {
             if !n.valid {
@@ -1598,7 +1627,7 @@ mod tests {
     fn remap_rewrites_addrs() {
         let mut idx = RadixIndex::new(BT, 0.0);
         idx.insert(&seq(&[1, 2, 3, 4]), &groups(0, 1), 1.0);
-        let mut map = HashMap::new();
+        let mut map = crate::util::rng::DetMap::default();
         map.insert(addr(0), BlockAddr::new(InstanceId(0), Tier::Dram, 7));
         idx.remap(&map);
         let m = idx.match_prefix(&seq(&[1, 2, 3, 4]), 2.0);
@@ -2132,5 +2161,64 @@ mod tests {
         // 4 threads * 50 matches, one leaf touch each.
         assert_eq!(ts.deferred + ts.dropped, 200);
         assert_eq!(ts.drained, 0, "no &mut op ran during the scope");
+    }
+}
+
+/// Loom models for the deferred-touch protocol (run via
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`; the
+/// shim in `util::sync` swaps the queue's atomics for loom's). Small
+/// on purpose: two producers already cover every claim/claim and
+/// claim/store race the protocol has.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::DeferredTouches;
+    use loom::sync::Arc;
+    use loom::thread;
+
+    /// The R4 justification in `defer` claims Relaxed is enough
+    /// because the drain's `&mut` borrow is the publication edge.
+    /// Model exactly that: two producers defer concurrently, then the
+    /// drain (exclusive access recovered after join) must observe
+    /// both stamps exactly once under every interleaving.
+    #[test]
+    fn loom_deferred_touches_lose_no_stamp() {
+        loom::model(|| {
+            let mut q = Arc::new(DeferredTouches::new(2));
+            let mut joins = Vec::with_capacity(2);
+            for node in 0..2usize {
+                let q = Arc::clone(&q);
+                joins.push(thread::spawn(move || q.defer(10 + node)));
+            }
+            for j in joins {
+                assert!(j.join().expect("producer"), "queue had room");
+            }
+            let qm = Arc::get_mut(&mut q).expect("producers joined");
+            let mut got = qm.drain();
+            got.sort_unstable();
+            assert_eq!(got, vec![10, 11], "a claimed stamp was lost");
+            let st = qm.stats();
+            assert_eq!((st.deferred, st.drained, st.dropped), (2, 2, 0));
+        });
+    }
+
+    /// At capacity exactly one claim wins the slot; the loser is
+    /// dropped *and accounted*, and the winner's stamp still drains.
+    #[test]
+    fn loom_deferred_touches_account_drops_at_capacity() {
+        loom::model(|| {
+            let mut q = Arc::new(DeferredTouches::new(1));
+            let t = {
+                let q = Arc::clone(&q);
+                thread::spawn(move || q.defer(7))
+            };
+            let mine = q.defer(8);
+            let theirs = t.join().expect("producer");
+            assert!(mine != theirs, "exactly one claim fits");
+            let qm = Arc::get_mut(&mut q).expect("producer joined");
+            let got = qm.drain();
+            assert!(got == [7] || got == [8]);
+            let st = qm.stats();
+            assert_eq!((st.deferred, st.drained, st.dropped), (1, 1, 1));
+        });
     }
 }

@@ -19,7 +19,7 @@
 //! expiry of wholly-stale subtrees, and duplicate-group reporting on
 //! insert.
 
-use std::collections::HashMap;
+use crate::util::rng::DetMap;
 
 use super::block::BlockAddr;
 use super::index::BlockGroup;
@@ -28,7 +28,7 @@ use super::index::BlockGroup;
 struct Node {
     edge: Vec<u32>,
     groups: Vec<BlockGroup>,
-    children: HashMap<Vec<u32>, usize>,
+    children: DetMap<Vec<u32>, usize>,
     parent: usize,
     last_access: f64,
     pins: u32,
@@ -64,7 +64,7 @@ impl RefRadixIndex {
             nodes: vec![Node {
                 edge: vec![],
                 groups: vec![],
-                children: HashMap::new(),
+                children: DetMap::default(),
                 parent: ROOT,
                 last_access: 0.0,
                 pins: 0,
@@ -143,7 +143,7 @@ impl RefRadixIndex {
                     let leaf = self.alloc_node(Node {
                         edge,
                         groups: g,
-                        children: HashMap::new(),
+                        children: DetMap::default(),
                         parent: cur,
                         last_access: now,
                         pins: 0,
@@ -475,7 +475,7 @@ impl RefRadixIndex {
     }
 
     /// Rewrite addresses after a swap (old -> new).
-    pub fn remap(&mut self, map: &HashMap<BlockAddr, BlockAddr>) {
+    pub fn remap(&mut self, map: &DetMap<BlockAddr, BlockAddr>) {
         for n in &mut self.nodes {
             if !n.valid {
                 continue;

@@ -10,6 +10,7 @@ use std::time::Duration;
 use crate::mempool::InstanceId;
 use crate::net::faults::{FaultDecision, FaultPlan};
 use crate::net::link::LinkModel;
+use crate::util::sync::LockExt;
 
 /// Messages that carry bulk payload report `(bytes, n_calls, src_dram,
 /// dst_dram)`; control messages return `None` and pay only the control
@@ -95,12 +96,12 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
     /// Install (or replace) the fault schedule. `None`-plan fabrics are
     /// behaviorally identical to builds without fault injection.
     pub fn set_fault_plan(&self, plan: FaultPlan) {
-        *self.shared.faults.lock().unwrap() = Some(plan);
+        *self.shared.faults.plock() = Some(plan);
     }
 
     /// Remove the fault schedule and deliver anything still held back.
     pub fn clear_fault_plan(&self) {
-        *self.shared.faults.lock().unwrap() = None;
+        *self.shared.faults.plock() = None;
         self.release_held();
     }
 
@@ -110,15 +111,15 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
         &self,
         f: impl FnOnce(&mut FaultPlan) -> R,
     ) -> Option<R> {
-        self.shared.faults.lock().unwrap().as_mut().map(f)
+        self.shared.faults.plock().as_mut().map(f)
     }
 
     /// Flush every holdback buffer — the quiesce helper: reordering
     /// must delay messages, never strand them once traffic stops.
     pub fn release_held(&self) {
         let held: Vec<((InstanceId, InstanceId), Vec<M>)> =
-            self.shared.held.lock().unwrap().drain().collect();
-        let senders = self.shared.senders.lock().unwrap();
+            self.shared.held.plock().drain().collect();
+        let senders = self.shared.senders.plock();
         for ((from, to), msgs) in held {
             if let Some(tx) = senders.get(&to) {
                 for m in msgs {
@@ -131,7 +132,7 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
     /// Attach an instance; returns its endpoint (single consumer).
     pub fn attach(&self, id: InstanceId) -> Endpoint<M> {
         let (tx, rx) = channel();
-        self.shared.senders.lock().unwrap().insert(id, tx);
+        self.shared.senders.plock().insert(id, tx);
         Endpoint {
             id,
             rx,
@@ -142,7 +143,7 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
     /// Remove an instance (simulating failure — its inbox closes and
     /// subsequent sends error out, which peers' timeouts surface).
     pub fn detach(&self, id: InstanceId) {
-        self.shared.senders.lock().unwrap().remove(&id);
+        self.shared.senders.plock().remove(&id);
     }
 
     pub fn link(&self) -> &LinkModel {
@@ -150,7 +151,7 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
     }
 
     pub fn stats(&self) -> NetStats {
-        self.shared.stats.lock().unwrap().clone()
+        self.shared.stats.plock().clone()
     }
 
     /// Send with modeled wire time (blocking the caller, like a
@@ -168,7 +169,7 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
                     .shared
                     .link
                     .transfer_seconds(bytes, calls, src_dram, dst_dram);
-                let mut s = self.shared.stats.lock().unwrap();
+                let mut s = self.shared.stats.plock();
                 s.payload_bytes += bytes as u64;
                 s.api_calls += calls as u64;
                 s.busy_seconds += t;
@@ -177,7 +178,7 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
             }
             None => {
                 let t = self.shared.link.control_latency_s();
-                let mut s = self.shared.stats.lock().unwrap();
+                let mut s = self.shared.stats.plock();
                 s.messages += 1;
                 s.busy_seconds += t;
                 t
@@ -187,14 +188,13 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
         // jitter rides the same modeled-time sleep as wire cost.
         let mut copies = 1u32;
         {
-            let mut faults = self.shared.faults.lock().unwrap();
+            let mut faults = self.shared.faults.plock();
             if let Some(plan) = faults.as_mut() {
                 let link = (from, to);
                 let depth = self
                     .shared
                     .held
-                    .lock()
-                    .unwrap()
+                    .plock()
                     .get(&link)
                     .map_or(0, Vec::len);
                 match plan.decide(from, to, depth) {
@@ -202,12 +202,12 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
                         copies = c;
                         t += extra_s;
                         if c > 1 {
-                            self.shared.stats.lock().unwrap().duplicated +=
+                            self.shared.stats.plock().duplicated +=
                                 (c - 1) as u64;
                         }
                     }
                     FaultDecision::Drop => {
-                        self.shared.stats.lock().unwrap().dropped += 1;
+                        self.shared.stats.plock().dropped += 1;
                         drop(faults);
                         if self.shared.real_sleep && t > 0.0 {
                             std::thread::sleep(Duration::from_secs_f64(t));
@@ -216,11 +216,10 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
                     }
                     FaultDecision::HoldBack { extra_s } => {
                         t += extra_s;
-                        self.shared.stats.lock().unwrap().reordered += 1;
+                        self.shared.stats.plock().reordered += 1;
                         self.shared
                             .held
-                            .lock()
-                            .unwrap()
+                            .plock()
                             .entry(link)
                             .or_default()
                             .push(msg);
@@ -241,12 +240,11 @@ impl<M: WireCost + Clone + Send + 'static> Fabric<M> {
         let released: Vec<M> = self
             .shared
             .held
-            .lock()
-            .unwrap()
+            .plock()
             .get_mut(&(from, to))
             .map(std::mem::take)
             .unwrap_or_default();
-        let senders = self.shared.senders.lock().unwrap();
+        let senders = self.shared.senders.plock();
         let tx = senders.get(&to).ok_or(NetError::Unknown(to))?;
         for _ in 1..copies {
             let _ = tx.send((from, msg.clone()));

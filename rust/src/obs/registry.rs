@@ -155,10 +155,13 @@ impl Registry {
     }
 
     pub fn enabled(&self) -> bool {
+        // ordering: Relaxed — on/off flag; handles re-check it per
+        // call, and no other memory is published through it.
         self.0.enabled.load(Ordering::Relaxed)
     }
 
     pub fn set_enabled(&self, on: bool) {
+        // ordering: Relaxed — see `enabled`.
         self.0.enabled.store(on, Ordering::Relaxed);
     }
 
@@ -238,19 +241,25 @@ impl Registry {
             let rendered = format!("{}{}", key.name, key.labels.render());
             let value = match slot {
                 Slot::Counter(v) => {
+                    // ordering: Relaxed — snapshot reads are
+                    // point-in-time; no cross-metric consistency.
                     MetricValue::Counter(v.load(Ordering::Relaxed))
                 }
                 Slot::Gauge(v) => MetricValue::Gauge(f64::from_bits(
+                    // ordering: Relaxed — as above.
                     v.load(Ordering::Relaxed),
                 )),
                 Slot::Histo(c) => MetricValue::Histo(HistoSnapshot {
+                    // ordering: Relaxed — as above; a histogram may
+                    // tear between cells, tolerated by the merge.
+                    count: c.count.load(Ordering::Relaxed),
+                    sum: c.sum.load(Ordering::Relaxed),
                     buckets: c
                         .buckets
                         .iter()
+                        // ordering: Relaxed — as above.
                         .map(|b| b.load(Ordering::Relaxed))
                         .collect(),
-                    count: c.count.load(Ordering::Relaxed),
-                    sum: c.sum.load(Ordering::Relaxed),
                 }),
             };
             entries.insert(rendered, value);
@@ -269,6 +278,8 @@ pub struct Counter {
 impl Counter {
     #[inline]
     pub fn inc(&self, n: u64) {
+        // ordering: Relaxed — monotonic standalone counter; nothing
+        // is published through it.
         if self.on.load(Ordering::Relaxed) {
             self.v.fetch_add(n, Ordering::Relaxed);
         }
@@ -278,10 +289,12 @@ impl Counter {
     /// so a final snapshot can be folded even after metrics are
     /// switched off mid-drain).
     pub fn set(&self, n: u64) {
+        // ordering: Relaxed — absolute fold-path store; see `inc`.
         self.v.store(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // ordering: Relaxed — point-in-time read; see `inc`.
         self.v.load(Ordering::Relaxed)
     }
 }
@@ -296,12 +309,14 @@ pub struct Gauge {
 impl Gauge {
     #[inline]
     pub fn set(&self, x: f64) {
+        // ordering: Relaxed — last-write-wins gauge bits.
         if self.on.load(Ordering::Relaxed) {
             self.v.store(x.to_bits(), Ordering::Relaxed);
         }
     }
 
     pub fn get(&self) -> f64 {
+        // ordering: Relaxed — point-in-time gauge read.
         f64::from_bits(self.v.load(Ordering::Relaxed))
     }
 }
@@ -316,9 +331,12 @@ pub struct Histo {
 impl Histo {
     #[inline]
     pub fn observe(&self, v: u64) {
+        // ordering: Relaxed — on/off flag; see `Registry::enabled`.
         if !self.on.load(Ordering::Relaxed) {
             return;
         }
+        // ordering: Relaxed — independent cells; a concurrent scrape
+        // may tear between them, which the merge tolerates.
         self.core.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.core.count.fetch_add(1, Ordering::Relaxed);
         self.core.sum.fetch_add(v, Ordering::Relaxed);
@@ -327,6 +345,7 @@ impl Histo {
     /// Observe a duration in seconds, bucketed at microsecond scale.
     #[inline]
     pub fn observe_secs(&self, s: f64) {
+        // ordering: Relaxed — on/off flag; see `Registry::enabled`.
         if !self.on.load(Ordering::Relaxed) {
             return;
         }

@@ -123,6 +123,9 @@ impl TraceSink {
     }
 
     pub fn enabled(&self) -> bool {
+        // ordering: Relaxed — on/off flag read on the hot path; no
+        // other memory is published through it (events go under the
+        // mutex below).
         self.0.enabled.load(Ordering::Relaxed)
     }
 

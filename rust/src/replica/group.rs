@@ -162,9 +162,9 @@ impl ReplicaGroup {
         self.transport.all_caught_up()
     }
 
-    /// Read access to replica `i`'s tree (panics if dead).
-    pub fn tree(&self, i: usize) -> &GlobalPromptTrees {
-        &self.replicas[i].as_ref().expect("dead replica").tree
+    /// Read access to replica `i`'s tree (`None` when dead).
+    pub fn tree(&self, i: usize) -> Option<&GlobalPromptTrees> {
+        self.replicas.get(i)?.as_ref().map(|r| &r.tree)
     }
 
     /// Route-read from replica `i`: the one-walk fleet match (needs
@@ -175,21 +175,27 @@ impl ReplicaGroup {
         tokens: &[u32],
         out: &mut Vec<(InstanceId, usize)>,
     ) {
-        self.replicas[i]
-            .as_mut()
-            .expect("dead replica")
-            .tree
-            .match_into(tokens, out);
+        let Some(r) = self.replicas.get_mut(i).and_then(Option::as_mut)
+        else {
+            debug_assert!(false, "route_match on dead replica {i}");
+            out.clear();
+            return;
+        };
+        r.tree.match_into(tokens, out);
     }
 
     /// Apply one delta at the primary and append it to the log; ship it
     /// with [`Self::pump`]. Returns the assigned sequence.
     pub fn apply(&mut self, ev: DeltaEvent) -> u64 {
-        self.replicas[self.primary]
-            .as_mut()
-            .expect("primary dead — promote before writing")
-            .tree
-            .apply_delta(&ev);
+        let Some(r) = self.replicas[self.primary].as_mut() else {
+            // A write against a dead primary is a caller bug; dropping
+            // it (rather than appending a delta no tree applied) keeps
+            // log and tree in agreement.
+            debug_assert!(false, "apply with dead primary — promote first");
+            log::error!("dropping delta applied to dead primary");
+            return self.transport.next_seq();
+        };
+        r.tree.apply_delta(&ev);
         self.transport.append(ev)
     }
 
@@ -243,17 +249,18 @@ impl ReplicaGroup {
             // gap rewinds the send cursor.
             let mut delivered_any = false;
             for seq in range.clone() {
-                let ev = self
-                    .transport
-                    .get(seq)
-                    .expect("sendable entry retained")
-                    .clone();
+                let Some(ev) = self.transport.get(seq).cloned() else {
+                    debug_assert!(false, "sendable {seq} not retained");
+                    continue;
+                };
                 if drop(i, seq) {
                     continue;
                 }
+                // Liveness was checked at loop entry and nothing in
+                // between kills replicas; skip the peer if it raced.
+                let Some(r) = self.replicas[i].as_mut() else { break };
                 self.delivered += 1;
                 delivered_any = true;
-                let r = self.replicas[i].as_mut().unwrap();
                 match r.cursor.offer(seq, ev) {
                     Ingest::Ready(evs) => {
                         let first = r.cursor.expected() - evs.len() as u64;
@@ -270,8 +277,10 @@ impl ReplicaGroup {
                 // A receiver that got NOTHING sends nothing (a real NIC
                 // has no stimulus); the sender-side retransmit timer
                 // above recovers a fully-lost tail.
-                let next =
-                    self.replicas[i].as_ref().unwrap().cursor.expected();
+                let Some(r) = self.replicas[i].as_ref() else {
+                    continue;
+                };
+                let next = r.cursor.expected();
                 self.acks_sent += 1;
                 self.transport.on_ack(peer, next);
             }
@@ -305,32 +314,32 @@ impl ReplicaGroup {
             .into_iter()
             .max_by_key(|&i| {
                 (
-                    self.replicas[i].as_ref().unwrap().cursor.expected(),
+                    self.replicas[i]
+                        .as_ref()
+                        .map(|r| r.cursor.expected())
+                        .unwrap_or(0),
                     usize::MAX - i,
                 )
             })?;
         // Catch-up: pull contiguous entries beyond the promotee's
         // cursor out of any survivor's retained log.
         loop {
-            let need = self.replicas[promoted]
-                .as_ref()
-                .unwrap()
-                .cursor
-                .expected();
+            let Some(pr) = self.replicas[promoted].as_ref() else {
+                break;
+            };
+            let need = pr.cursor.expected();
             let mut found = None;
             for i in self.live_indices() {
                 if let Some(ev) = self.replicas[i]
                     .as_ref()
-                    .unwrap()
-                    .retained
-                    .get(need)
+                    .and_then(|r| r.retained.get(need))
                 {
                     found = Some(ev.clone());
                     break;
                 }
             }
             let Some(ev) = found else { break };
-            let r = self.replicas[promoted].as_mut().unwrap();
+            let Some(r) = self.replicas[promoted].as_mut() else { break };
             match r.cursor.offer(need, ev) {
                 Ingest::Ready(evs) => {
                     let first = r.cursor.expected() - evs.len() as u64;
@@ -339,11 +348,19 @@ impl ReplicaGroup {
                         r.retained.push_at(first + k as u64, e);
                     }
                 }
-                _ => unreachable!("offer at the cursor is always ready"),
+                Ingest::Buffered { .. } | Ingest::Duplicate => {
+                    // Offering exactly at the cursor always returns
+                    // Ready; bail out of catch-up rather than loop.
+                    debug_assert!(false, "offer at cursor not ready");
+                    break;
+                }
             }
         }
         // Rebuild the transport around the promotee's retained suffix.
-        let p = self.replicas[promoted].as_mut().unwrap();
+        let Some(p) = self.replicas[promoted].as_mut() else {
+            debug_assert!(false, "promoted replica vanished mid-failover");
+            return None;
+        };
         // Anything still buffered out-of-order at the promotee is an
         // old-primary event beyond the surviving history — dead.
         let head = p.cursor.expected();
@@ -356,8 +373,10 @@ impl ReplicaGroup {
         }
         let head = transport.next_seq();
         for i in 0..self.replicas.len() {
-            if i != promoted && self.is_live(i) {
-                let r = self.replicas[i].as_mut().unwrap();
+            if i != promoted {
+                let Some(r) = self.replicas[i].as_mut() else {
+                    continue;
+                };
                 // Sequences >= the new head will be reassigned to
                 // DIFFERENT events by the new primary; anything a
                 // laggard buffered from the dead primary there is stale
@@ -377,25 +396,18 @@ impl ReplicaGroup {
     /// Extract the promoted (or any live) replica's tree, marking the
     /// replica dead — the in-process convenience the simulator uses to
     /// hand the promoted state to its serving scheduler.
-    pub fn extract_tree(&mut self, i: usize) -> GlobalPromptTrees {
+    pub fn extract_tree(&mut self, i: usize) -> Option<GlobalPromptTrees> {
         self.transport.deregister(i as u64);
-        self.replicas[i]
-            .take()
-            .expect("cannot extract a dead replica")
-            .tree
+        self.replicas.get_mut(i)?.take().map(|r| r.tree)
     }
 
     /// Bootstrap a new follower from a primary snapshot at the log head
     /// (snapshot + catch-up, the late-joiner path). Returns its index.
-    pub fn join_replica(&mut self) -> usize {
+    /// Returns `None` when the primary is dead (nothing to snapshot).
+    pub fn join_replica(&mut self) -> Option<usize> {
         let seq = self.transport.next_seq();
-        let snap = TreeSnapshot::capture(
-            &self.replicas[self.primary]
-                .as_ref()
-                .expect("primary dead")
-                .tree,
-            seq,
-        );
+        let primary = self.replicas[self.primary].as_ref()?;
+        let snap = TreeSnapshot::capture(&primary.tree, seq);
         let mut tree = GlobalPromptTrees::new(self.block_tokens, self.ttl);
         snap.restore_into(&mut tree);
         let mut cursor = DeltaCursor::new();
@@ -408,18 +420,14 @@ impl ReplicaGroup {
             cursor,
             retained: SeqBuffer::with_base(seq),
         }));
-        idx
+        Some(idx)
     }
 
-    /// Snapshot the primary at the current log head.
-    pub fn snapshot(&self) -> TreeSnapshot {
-        TreeSnapshot::capture(
-            &self.replicas[self.primary]
-                .as_ref()
-                .expect("primary dead")
-                .tree,
-            self.transport.next_seq(),
-        )
+    /// Snapshot the primary at the current log head (`None` when the
+    /// primary is dead).
+    pub fn snapshot(&self) -> Option<TreeSnapshot> {
+        let primary = self.replicas[self.primary].as_ref()?;
+        Some(TreeSnapshot::capture(&primary.tree, self.transport.next_seq()))
     }
 }
 
@@ -668,15 +676,15 @@ mod tests {
         // NOWHERE; the survivor must match the new primary exactly.
         for i in g.live_indices() {
             assert_eq!(
-                g.tree(i).match_one(InstanceId(0), &toks(8, 200)),
+                g.tree(i).unwrap().match_one(InstanceId(0), &toks(8, 200)),
                 0,
                 "replica {i} applied a stale pre-crash entry"
             );
             for seed in [300, 400] {
                 let t = toks(8, seed);
                 assert_eq!(
-                    g.tree(i).match_one(InstanceId(1), &t),
-                    g.tree(p).match_one(InstanceId(1), &t),
+                    g.tree(i).unwrap().match_one(InstanceId(1), &t),
+                    g.tree(p).unwrap().match_one(InstanceId(1), &t),
                     "replica {i} diverged at seed {seed}"
                 );
             }
@@ -692,7 +700,7 @@ mod tests {
             tokens: toks(12, 0),
             now: 1.0,
         });
-        let j = g.join_replica();
+        let j = g.join_replica().expect("primary live");
         assert_eq!(g.applied_seq(j), g.log_head(), "snapshot covers log");
         // Deltas after the snapshot flow to the joiner like any
         // follower.
@@ -777,7 +785,8 @@ mod tests {
                         while !grp.all_caught_up() {
                             grp.pump();
                         }
-                        joiner = Some(grp.join_replica());
+                        joiner = grp.join_replica();
+                        assert!(joiner.is_some());
                     }
                     if op == crash_at {
                         while !grp.all_caught_up() {
@@ -842,8 +851,8 @@ mod tests {
                         for inst in 0..n_inst {
                             let id = InstanceId(inst);
                             assert_eq!(
-                                grp.tree(i).cached_blocks(id),
-                                grp.tree(p).cached_blocks(id),
+                                grp.tree(i).unwrap().cached_blocks(id),
+                                grp.tree(p).unwrap().cached_blocks(id),
                                 "cached_blocks({id}) on replica {i}"
                             );
                         }

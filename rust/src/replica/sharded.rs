@@ -74,18 +74,19 @@ impl ShardedReplicaGroup {
         self.groups[shard].is_none()
     }
 
-    /// One shard's group (panics when that shard was consumed).
-    pub fn group(&self, shard: usize) -> &ReplicaGroup {
-        self.groups[shard].as_ref().expect("shard consumed")
+    /// One shard's group (`None` when that shard was consumed).
+    pub fn group(&self, shard: usize) -> Option<&ReplicaGroup> {
+        self.groups.get(shard)?.as_ref()
     }
 
-    pub fn group_mut(&mut self, shard: usize) -> &mut ReplicaGroup {
-        self.groups[shard].as_mut().expect("shard consumed")
+    pub fn group_mut(&mut self, shard: usize) -> Option<&mut ReplicaGroup> {
+        self.groups.get_mut(shard)?.as_mut()
     }
 
-    /// This shard's log head (deltas sequenced through it).
+    /// This shard's log head (deltas sequenced through it; 0 once the
+    /// shard was consumed).
     pub fn log_head(&self, shard: usize) -> u64 {
-        self.group(shard).log_head()
+        self.group(shard).map(|g| g.log_head()).unwrap_or(0)
     }
 
     /// Apply one delta at its shard's primary (fanning membership to
@@ -163,7 +164,10 @@ impl ShardedReplicaGroup {
         out: &mut Vec<(InstanceId, usize)>,
     ) {
         let s = self.map.shard_of_tokens(tokens).unwrap_or(0);
-        self.group_mut(s).route_match(i, tokens, out);
+        match self.group_mut(s) {
+            Some(g) => g.route_match(i, tokens, out),
+            None => out.clear(),
+        }
     }
 
     /// Route-read from the prompt's shard's current primary — the read
@@ -175,7 +179,10 @@ impl ShardedReplicaGroup {
         out: &mut Vec<(InstanceId, usize)>,
     ) {
         let s = self.map.shard_of_tokens(tokens).unwrap_or(0);
-        let g = self.group_mut(s);
+        let Some(g) = self.group_mut(s) else {
+            out.clear();
+            return;
+        };
         let p = g.primary_index();
         g.route_match(p, tokens, out);
     }
@@ -184,7 +191,7 @@ impl ShardedReplicaGroup {
     /// follower (catch-up included); every other shard is untouched.
     /// Returns the promoted replica index within that shard's group.
     pub fn fail_primary(&mut self, shard: usize) -> Option<usize> {
-        self.group_mut(shard).fail_primary()
+        self.group_mut(shard)?.fail_primary()
     }
 
     /// Extract replica `i`'s tree from `shard` and consume the shard's
@@ -192,9 +199,11 @@ impl ShardedReplicaGroup {
     /// the serving scheduler's shard tree, and mirroring for that shard
     /// stops (a second failover of the same shard needs fresh
     /// replicas).
+    /// `None` when the shard was already consumed or replica `i` is
+    /// dead (the shard's group is still consumed in that case).
     pub fn extract_tree(&mut self, shard: usize, i: usize)
-                        -> GlobalPromptTrees {
-        let mut g = self.groups[shard].take().expect("shard consumed");
+                        -> Option<GlobalPromptTrees> {
+        let mut g = self.groups.get_mut(shard)?.take()?;
         g.extract_tree(i)
     }
 }
@@ -329,8 +338,12 @@ mod tests {
         let want1 = matches_primary(&mut g, &t1);
         // Crash shard 1's primary only.
         let p = g.fail_primary(1).expect("followers survive");
-        assert_eq!(g.group(1).primary_index(), p);
-        assert_eq!(g.group(0).primary_index(), 0, "shard 0 untouched");
+        assert_eq!(g.group(1).unwrap().primary_index(), p);
+        assert_eq!(
+            g.group(0).unwrap().primary_index(),
+            0,
+            "shard 0 untouched"
+        );
         assert_eq!(matches_primary(&mut g, &t0), want0);
         assert_eq!(matches_primary(&mut g, &t1), want1);
         // Writes keep flowing to both shards.
@@ -349,7 +362,9 @@ mod tests {
         );
         // Extraction consumes the shard; the other shard keeps
         // mirroring.
-        let tree = g.extract_tree(1, g.group(1).primary_index());
+        let tree = g
+            .extract_tree(1, g.group(1).unwrap().primary_index())
+            .expect("shard 1 live");
         assert_eq!(tree.match_one(InstanceId(1), &t1), t1.len());
         assert!(g.is_consumed(1));
         g.apply_sync(DeltaEvent::Record {
@@ -424,12 +439,12 @@ mod tests {
                     assert!(guard < 100_000, "transport never converged");
                 }
                 for s in 0..shards {
-                    for i in 0..lossy.group(s).len() {
+                    for i in 0..lossy.group(s).unwrap().len() {
                         let a = TreeSnapshot::capture(
-                            lossy.group(s).tree(i), 0,
+                            lossy.group(s).unwrap().tree(i).unwrap(), 0,
                         );
                         let b = TreeSnapshot::capture(
-                            clean.group(s).tree(i), 0,
+                            clean.group(s).unwrap().tree(i).unwrap(), 0,
                         );
                         assert_eq!(
                             a.entries, b.entries,

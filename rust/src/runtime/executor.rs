@@ -43,8 +43,14 @@ pub struct DecodeSession {
 // (compiled executables + weight buffers) plus a Mutex'd counter block.
 // DecodeSession buffers are owned by one request at a time. We confine
 // mutation to &mut self / Mutex and allow cross-thread sharing.
+//
+// These scoped allows are the crate's *only* sanctioned unsafe
+// (`#![deny(unsafe_code)]` in lib.rs — see the note there).
+#[allow(unsafe_code)]
 unsafe impl Send for ModelRuntime {}
+#[allow(unsafe_code)]
 unsafe impl Sync for ModelRuntime {}
+#[allow(unsafe_code)]
 unsafe impl Send for DecodeSession {}
 
 pub struct ModelRuntime {

@@ -19,7 +19,8 @@
 //!     ▲  MPSC channel per worker (routes + One(k) deltas, FIFO)
 //!     │
 //!  ShardWorkerPool ── All-shard events (membership, whole-view
-//!                     expiry) broadcast + epoch fence (Condvar acks)
+//!                     expiry) broadcast + epoch fence
+//!                     (`util::sync::EpochGate`, loom-modeled)
 //! ```
 //!
 //! **Lock-free vs epoch-fenced.** The submit path takes no lock at
@@ -47,7 +48,7 @@
 //! reference — the differential property pinned below.
 
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::elastic::delta::DeltaEvent;
@@ -56,6 +57,7 @@ use crate::obs::Registry;
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::policy::{Decision, PolicyKind};
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad, RouteOutcome};
+use crate::util::sync::EpochGate;
 use crate::scheduler::shard::{ShardMap, ShardRoute};
 
 /// Per-route load snapshot: the full fleet's loads, shared (not
@@ -87,17 +89,11 @@ enum ShardRequest {
     Stop,
 }
 
-/// Epoch acks, one slot per shard worker.
-struct AckBoard {
-    acked: Mutex<Vec<u64>>,
-    cv: Condvar,
-}
-
 fn worker_loop(
     shard: usize,
     rx: Receiver<ShardRequest>,
     mut gs: GlobalScheduler,
-    acks: Arc<AckBoard>,
+    acks: Arc<EpochGate>,
 ) {
     let mut log: Vec<(u64, Decision)> = vec![];
     while let Ok(req) = rx.recv() {
@@ -120,11 +116,7 @@ fn worker_loop(
                 let _ = reply.send(out);
             }
             ShardRequest::Delta(ev) => gs.trees.apply_delta(&ev),
-            ShardRequest::Fence { epoch } => {
-                let mut a = acks.acked.lock().unwrap();
-                a[shard] = epoch;
-                acks.cv.notify_all();
-            }
+            ShardRequest::Fence { epoch } => acks.ack(shard, epoch),
             ShardRequest::Collect { reply } => {
                 let _ = reply.send(log.clone());
             }
@@ -141,7 +133,7 @@ pub struct ShardWorkerPool {
     handles: Vec<JoinHandle<()>>,
     map: ShardMap,
     epoch: u64,
-    acks: Arc<AckBoard>,
+    acks: Arc<EpochGate>,
 }
 
 impl ShardWorkerPool {
@@ -168,10 +160,7 @@ impl ShardWorkerPool {
         reg: Option<&Registry>,
     ) -> Self {
         assert!(shards >= 1, "at least one shard");
-        let acks = Arc::new(AckBoard {
-            acked: Mutex::new(vec![0; shards]),
-            cv: Condvar::new(),
-        });
+        let acks = Arc::new(EpochGate::new(shards));
         let mut senders = Vec::with_capacity(shards);
         let mut handles = Vec::with_capacity(shards);
         for k in 0..shards {
@@ -184,6 +173,7 @@ impl ShardWorkerPool {
             );
             if let Some(reg) = reg {
                 gs.attach_obs(reg, Some(k as u32));
+                gs.set_route_timer(crate::util::clock::monotonic_secs);
             }
             let acks = Arc::clone(&acks);
             handles.push(
@@ -256,10 +246,7 @@ impl ShardWorkerPool {
     }
 
     fn wait_epoch(&self, epoch: u64) {
-        let mut a = self.acks.acked.lock().unwrap();
-        while a.iter().any(|&e| e < epoch) {
-            a = self.acks.cv.wait(a).unwrap();
-        }
+        self.acks.wait(epoch);
     }
 
     /// Per-shard (request id, decision) logs in each worker's

@@ -1218,7 +1218,8 @@ impl FusedPromptTree {
     #[doc(hidden)]
     pub fn debug_check_counters(&self) {
         let mut pairs = 0usize;
-        let mut blocks: HashMap<u32, usize> = HashMap::new();
+        let mut blocks: crate::util::rng::DetMap<u32, usize> =
+            Default::default();
         for (i, n) in self.nodes.iter().enumerate() {
             if i == ROOT || !n.valid {
                 continue;

@@ -22,7 +22,7 @@
 //! old O(instances) scan — no worse than before, and the bound
 //! tightens as soon as loads differentiate.
 
-use std::collections::{BTreeSet, HashMap, HashSet};
+use std::collections::BTreeSet;
 
 use crate::mempool::InstanceId;
 use crate::obs::{Counter, Histo, Labels, Registry};
@@ -31,6 +31,7 @@ use crate::scheduler::fused_tree::{cold_rank_cmp, ColdRank};
 use crate::scheduler::policy::{decide, Candidate, Decision, PolicyKind};
 use crate::scheduler::prompt_tree::InstanceKind;
 use crate::scheduler::shard::ShardedPromptTrees;
+use crate::util::rng::{DetMap, DetSet};
 
 /// Per-instance load the caller keeps updated (queued prompt tokens).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -83,7 +84,7 @@ type BookKey = (OrdF64, u64);
 /// instead of ranking the whole fleet.
 #[derive(Debug, Default)]
 struct LoadBook {
-    loads: HashMap<InstanceId, (InstanceLoad, BookKey)>,
+    loads: DetMap<InstanceId, (InstanceLoad, BookKey)>,
     order: BTreeSet<(BookKey, InstanceId)>,
 }
 
@@ -142,7 +143,7 @@ pub struct GlobalScheduler {
     /// tree is suspected crashed and awaiting promotion, so prompts
     /// hashing into them route via the load book alone (no tree walk)
     /// instead of stalling. Cleared when the promoted snapshot lands.
-    degraded_shards: HashSet<usize>,
+    degraded_shards: DetSet<usize>,
     /// Policy-ordered per-instance loads (see [`Self::set_load`]).
     book: LoadBook,
     /// `trees.membership_gen()` the book was last synced against.
@@ -157,6 +158,12 @@ pub struct GlobalScheduler {
     /// Metric handles, attached once via [`Self::attach_obs`] (ISSUE
     /// 8). `None` = uninstrumented: zero route-path overhead.
     obs: Option<SchedObs>,
+    /// Wall-clock source for the `route_us` digest, injected by live
+    /// callers ([`Self::set_route_timer`], normally
+    /// `util::clock::monotonic_secs`). `None` — the default, and what
+    /// the simulator keeps — skips the latency sample entirely, so the
+    /// scheduler core itself never reads a wall clock (archlint R1).
+    route_timer: Option<fn() -> f64>,
 }
 
 /// Route-path metric handles. All writes are relaxed atomics on
@@ -210,7 +217,7 @@ impl GlobalScheduler {
             block_tokens,
             transfer_decision_enabled: true,
             cold_sample: 32,
-            degraded_shards: HashSet::new(),
+            degraded_shards: DetSet::default(),
             book: LoadBook::default(),
             book_gen: None,
             match_buf: vec![],
@@ -218,6 +225,7 @@ impl GlobalScheduler {
             cold_buf: vec![],
             cold_sel: vec![],
             obs: None,
+            route_timer: None,
         }
     }
 
@@ -241,6 +249,14 @@ impl GlobalScheduler {
             predicted_prefill_us: reg
                 .histogram("sched.predicted_prefill_us", l),
         });
+    }
+
+    /// Install the wall-clock source used for the `route_us` latency
+    /// digest. Live servers pass `util::clock::monotonic_secs` by
+    /// name; the simulator leaves it unset (deterministic replay must
+    /// not observe real time).
+    pub fn set_route_timer(&mut self, timer: fn() -> f64) {
+        self.route_timer = Some(timer);
     }
 
     pub fn add_instance(&mut self, id: InstanceId, kind: InstanceKind) {
@@ -314,7 +330,7 @@ impl GlobalScheduler {
             return;
         }
         self.book_gen = Some(gen);
-        let known: HashSet<InstanceId> = self
+        let known: DetSet<InstanceId> = self
             .trees
             .instances()
             .filter(|&(_, kind)| kind.runs_prefill())
@@ -347,9 +363,13 @@ impl GlobalScheduler {
         session_id: u64,
         now: f64,
     ) -> anyhow::Result<RouteOutcome> {
-        // Wall-clock timer for the route_us digest — taken only when
-        // instrumented, so the bare path pays nothing.
-        let t0 = self.obs.as_ref().map(|_| std::time::Instant::now());
+        // Wall-clock sample for the route_us digest — taken only when
+        // both instrumented and given a timer, so the bare path (and
+        // the simulator, always) pays nothing and reads no clock.
+        let t0 = match (&self.obs, self.route_timer) {
+            (Some(_), Some(timer)) => Some((timer, timer())),
+            _ => None,
+        };
         // Heap-driven TTL housekeeping rides the routing path: an O(1)
         // peek per shard when nothing has expired, O(log n) per stale
         // entry.
@@ -497,8 +517,8 @@ impl GlobalScheduler {
             }
             obs.matched_tokens.observe(decision.matched_tokens as u64);
             obs.predicted_prefill_us.observe_secs(expected_prefill_s);
-            if let Some(t0) = t0 {
-                obs.route_us.observe_secs(t0.elapsed().as_secs_f64());
+            if let Some((timer, t0)) = t0 {
+                obs.route_us.observe_secs((timer() - t0).max(0.0));
             }
         }
         Ok(RouteOutcome {

@@ -71,6 +71,8 @@ use crate::scheduler::router::{
 use crate::scheduler::shard::{ShardMap, ShardRoute};
 use crate::server::message::Msg;
 use crate::server::replica::GS_WINDOW;
+use crate::util::rng::DetMap;
+use crate::util::sync::LockExt;
 
 /// One shard's slice of the data plane: its 1-shard scheduler (tree +
 /// load book) and its sequenced replication log, locked together so
@@ -143,32 +145,34 @@ impl GsDataPlane {
 
     /// Completed cross-shard fences so far.
     pub fn broadcast_epoch(&self) -> u64 {
+        // ordering: Relaxed — the counter is advisory (tests/metrics);
+        // real fencing is the ascending lock_all hold, not this load.
         self.all_epoch.load(Ordering::Relaxed)
     }
 
     pub fn followers(&self) -> Vec<InstanceId> {
-        self.followers.lock().unwrap().clone()
+        self.followers.plock().clone()
     }
 
     pub fn is_registered(&self, f: InstanceId) -> bool {
-        self.followers.lock().unwrap().contains(&f)
+        self.followers.plock().contains(&f)
     }
 
     fn unit(&self, s: usize) -> MutexGuard<'_, GsUnit> {
-        self.units[s].lock().unwrap()
+        self.units[s].plock()
     }
 
     /// All unit locks, ascending — the broadcast fence.
     fn lock_all(&self) -> Vec<MutexGuard<'_, GsUnit>> {
-        self.units.iter().map(|u| u.lock().unwrap()).collect()
+        self.units.iter().map(|u| u.plock()).collect()
     }
 
     /// Seed every unit's log with a pre-start backlog event (roster
     /// Joins) without touching the trees — the caller already built
     /// the registry into each scheduler.
     pub fn seed_log_all(&self, ev: DeltaEvent) {
-        for u in &self.units {
-            u.lock().unwrap().log.append(ev.clone());
+        for s in 0..self.shard_count() {
+            self.unit(s).log.append(ev.clone());
         }
     }
 
@@ -213,6 +217,9 @@ impl GsDataPlane {
             .any(|ev| matches!(self.map.route(ev), ShardRoute::All));
         let mut touched: Vec<usize> = vec![];
         if any_all {
+            // ordering: Relaxed — bumped while about to hold every
+            // unit lock; lock_all is the fence, the counter just
+            // numbers it for observers.
             self.all_epoch.fetch_add(1, Ordering::Relaxed);
             let mut guards = self.lock_all();
             for ev in &evs {
@@ -233,11 +240,12 @@ impl GsDataPlane {
                     }
                 }
             }
+            drop(guards);
             touched.extend(0..self.units.len());
         } else {
             // Shard-keyed only: group by unit, preserving relative
             // order within each shard's slice of the batch.
-            let mut per: HashMap<usize, Vec<&DeltaEvent>> = HashMap::new();
+            let mut per: DetMap<usize, Vec<&DeltaEvent>> = DetMap::default();
             for ev in &evs {
                 if let ShardRoute::One(s) = self.map.route(ev) {
                     per.entry(s).or_default().push(ev);
@@ -284,12 +292,18 @@ impl GsDataPlane {
                         continue;
                     }
                     for seq in range.clone() {
-                        let ev = u
-                            .log
-                            .get(seq)
-                            .expect("sendable entry retained")
-                            .clone();
-                        out.push((f, seq, ev));
+                        // A sendable seq is always retained; if the
+                        // log ever disagrees, skip rather than tear
+                        // down the plane (the follower re-requests
+                        // the gap via its cumulative ack).
+                        let Some(ev) = u.log.get(seq) else {
+                            debug_assert!(
+                                false,
+                                "sendable entry {seq} not retained"
+                            );
+                            continue;
+                        };
+                        out.push((f, seq, ev.clone()));
                     }
                     u.log.mark_sent(peer, range.end);
                 }
@@ -350,12 +364,12 @@ impl GsDataPlane {
     /// the rejoin-as-follower path; the snapshot bootstrap covers the
     /// truncated gap.
     pub fn register_follower(&self, f: InstanceId) {
-        let mut roster = self.followers.lock().unwrap();
+        let mut roster = self.followers.plock();
         if roster.contains(&f) {
             return;
         }
-        for u in &self.units {
-            let mut u = u.lock().unwrap();
+        for s in 0..self.shard_count() {
+            let mut u = self.unit(s);
             let from = u.log.first_retained();
             u.log.register(f.0 as u64, from);
         }
@@ -365,9 +379,9 @@ impl GsDataPlane {
     /// Drop a follower from every shard's peer set (heartbeat-miss
     /// suspicion or send failure) so it cannot stall truncation.
     pub fn deregister_follower(&self, f: InstanceId) {
-        let mut roster = self.followers.lock().unwrap();
-        for u in &self.units {
-            u.lock().unwrap().log.deregister(f.0 as u64);
+        let mut roster = self.followers.plock();
+        for s in 0..self.shard_count() {
+            self.unit(s).log.deregister(f.0 as u64);
         }
         roster.retain(|x| *x != f);
     }
@@ -375,7 +389,7 @@ impl GsDataPlane {
     /// The follower holding `shard`'s longest applied prefix (that
     /// shard's promotion target).
     pub fn most_caught_up(&self, shard: usize) -> Option<InstanceId> {
-        let roster = self.followers.lock().unwrap().clone();
+        let roster = self.followers.plock().clone();
         let u = self.unit(shard);
         roster
             .iter()
@@ -392,8 +406,8 @@ impl GsDataPlane {
         let mut head = 0u64;
         let mut acks: Vec<(InstanceId, u64)> =
             roster.iter().map(|f| (*f, 0)).collect();
-        for u in &self.units {
-            let u = u.lock().unwrap();
+        for s in 0..self.shard_count() {
+            let u = self.unit(s);
             head += u.log.next_seq();
             for (f, a) in acks.iter_mut() {
                 *a += u.log.acked(f.0 as u64).unwrap_or(0);
@@ -478,8 +492,8 @@ impl GsDataPlane {
     /// TTL housekeeping, shard by shard — expiry is shard-local, so no
     /// fence: each unit expires under its own lock.
     pub fn expire(&self, now: f64) {
-        for u in &self.units {
-            u.lock().unwrap().gs.expire(now);
+        for s in 0..self.shard_count() {
+            self.unit(s).gs.expire(now);
         }
     }
 
@@ -497,8 +511,8 @@ impl GsDataPlane {
     ) -> HashMap<InstanceId, usize> {
         let mut out: HashMap<InstanceId, usize> =
             ids.iter().map(|id| (*id, 0)).collect();
-        for u in &self.units {
-            let u = u.lock().unwrap();
+        for s in 0..self.shard_count() {
+            let u = self.unit(s);
             for (id, n) in out.iter_mut() {
                 *n += u.gs.trees.cached_blocks(*id);
             }

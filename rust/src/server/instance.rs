@@ -270,9 +270,23 @@ pub fn run_instance(
                     engine.pool.release_remote(d);
                 }
             }
-            Some(other) => {
-                // Leader- or replica-bound traffic; not ours.
-                log::debug!("instance {} ignoring {other:?}", cfg.id);
+            // Leader- or replica-bound traffic; enumerated (no `_`)
+            // so a new Msg variant forces a routing decision here.
+            Some(
+                Msg::Token { .. }
+                | Msg::Finished { .. }
+                | Msg::Heartbeat { .. }
+                | Msg::Cached { .. }
+                | Msg::MigrateLanded { .. }
+                | Msg::DrainDone { .. }
+                | Msg::Evicted { .. }
+                | Msg::Delta { .. }
+                | Msg::DeltaAck { .. }
+                | Msg::SnapshotReq { .. }
+                | Msg::Snapshot { .. }
+                | Msg::Promote { .. },
+            ) => {
+                log::debug!("instance {} ignoring peer-bound msg", cfg.id);
             }
             None => {}
         }
@@ -301,12 +315,19 @@ pub fn run_instance(
                             outcome,
                             crate::engine::StepOutcome::Finished(_)
                         );
-                        let tok = *a.generated.last().unwrap();
-                        let _ = fabric.send(cfg.id, cfg.leader, Msg::Token {
-                            rid: a.req.id,
-                            token: tok,
-                            done,
-                        });
+                        if let Some(&tok) = a.generated.last() {
+                            let _ = fabric.send(
+                                cfg.id,
+                                cfg.leader,
+                                Msg::Token {
+                                    rid: a.req.id,
+                                    token: tok,
+                                    done,
+                                },
+                            );
+                        } else {
+                            debug_assert!(false, "step made no token");
+                        }
                         done
                     }
                     Err(e) => {

@@ -6,7 +6,7 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -28,6 +28,8 @@ use crate::obs::{
     Registry, RetireSample, Timeline, TraceSink, Watchdog,
 };
 use crate::runtime::ModelRuntime;
+use crate::util::rng::{DetMap, DetSet};
+use crate::util::sync::{LockExt, RwLockExt};
 use crate::scheduler::cost_model::OperatorCostModel;
 use crate::scheduler::prompt_tree::{GlobalPromptTrees, InstanceKind};
 use crate::scheduler::router::{GlobalScheduler, InstanceLoad};
@@ -152,7 +154,7 @@ struct Pending {
 }
 
 struct Shared {
-    pending: Mutex<HashMap<u64, Pending>>,
+    pending: Mutex<DetMap<u64, Pending>>,
     cv: Condvar,
 }
 
@@ -172,7 +174,7 @@ struct DrainProgress {
     /// Outstanding tasks by mid — the drain driver's retry queue; an
     /// acked mid is removed, an unacked one is re-sent with capped
     /// exponential backoff.
-    outstanding: HashMap<u64, MigrateTask>,
+    outstanding: DetMap<u64, MigrateTask>,
 }
 
 /// What a completed [`ServeCluster::drain`] moved. Migrated figures
@@ -206,7 +208,7 @@ pub struct ServeCluster {
     instances: RwLock<Vec<(InstanceId, InstanceKind)>>,
     lifecycle: Mutex<Lifecycle>,
     /// In-flight drains (instance → progress).
-    drains: Mutex<HashMap<InstanceId, DrainProgress>>,
+    drains: Mutex<DetMap<InstanceId, DrainProgress>>,
     /// Signaled (paired with `drains`) on any drain progress — a
     /// migration ack, the drain barrier, or an in-flight request
     /// finishing — so [`Self::drain`] waits event-driven instead of
@@ -221,7 +223,7 @@ pub struct ServeCluster {
     next_mid: AtomicU64,
     /// Promotion handshake for [`Self::fail_gs_primary`]: shards whose
     /// promoted snapshot has not landed yet.
-    promote_pending: Mutex<HashSet<usize>>,
+    promote_pending: Mutex<DetSet<usize>>,
     promote_cv: Condvar,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_rid: AtomicU64,
@@ -324,6 +326,10 @@ impl ServeCluster {
         let attrib = AttribBook::new(&obs);
         for (k, gs) in unit_schedulers.iter_mut().enumerate() {
             gs.attach_obs(&obs, Some(k as u32));
+            // Live server: the route_us digest reads the shared
+            // monotonic clock. Injected by name so the scheduler core
+            // stays wall-clock-free (archlint R1).
+            gs.set_route_timer(crate::util::clock::monotonic_secs);
         }
 
         let mut cm = ClusterManager::new(
@@ -351,13 +357,16 @@ impl ServeCluster {
                 gs.add_instance(iid, kind);
             }
             cm.register(iid, kind, 0.0);
-            lifecycle.join(iid, kind).expect("fresh roster");
+            if let Err(e) = lifecycle.join(iid, kind) {
+                debug_assert!(false, "seed join rejected: {e}");
+                log::error!("seed join for {iid} rejected: {e}");
+            }
         }
 
         let epoch = Instant::now();
         let leader_ep = fabric.attach(LEADER);
         let shared = Arc::new(Shared {
-            pending: Mutex::new(HashMap::new()),
+            pending: Mutex::new(DetMap::default()),
             cv: Condvar::new(),
         });
 
@@ -440,7 +449,10 @@ impl ServeCluster {
 
         // Threads are up: the whole seed roster goes Active.
         for &(iid, _) in &specs {
-            lifecycle.activate(iid).expect("seed roster joins once");
+            if let Err(e) = lifecycle.activate(iid) {
+                debug_assert!(false, "seed activate rejected: {e}");
+                log::error!("seed activate for {iid} rejected: {e}");
+            }
         }
         let gs_health = GsHealth {
             all_followers: followers.clone(),
@@ -461,12 +473,12 @@ impl ServeCluster {
             next_iid: AtomicU32::new(id),
             instances: RwLock::new(specs),
             lifecycle: Mutex::new(lifecycle),
-            drains: Mutex::new(HashMap::new()),
+            drains: Mutex::new(DetMap::default()),
             drain_cv: Condvar::new(),
             gs_health: Mutex::new(gs_health),
             landed_mids: Mutex::new(SeenMids::default()),
             next_mid: AtomicU64::new(1),
-            promote_pending: Mutex::new(HashSet::new()),
+            promote_pending: Mutex::new(DetSet::default()),
             promote_cv: Condvar::new(),
             handles: Mutex::new(handles),
             next_rid: AtomicU64::new(1),
@@ -490,7 +502,7 @@ impl ServeCluster {
         // Collector thread: drains the leader endpoint.
         let c2 = cluster.clone();
         let h = std::thread::spawn(move || c2.collector(leader_ep));
-        cluster.handles.lock().unwrap().push(h);
+        cluster.handles.plock().push(h);
         Ok(cluster)
     }
 
@@ -560,15 +572,14 @@ impl ServeCluster {
         // (the pool-side `pool.indexed_token_blocks` counterpart rides
         // instance heartbeats; divergence between the two is rule 2).
         let now = self.now();
-        let streaks = self.cm.lock().unwrap().miss_streaks(now);
+        let streaks = self.cm.plock().miss_streaks(now);
         for (id, streak) in streaks {
             self.obs
                 .set_gauge("hb.miss_streak", Labels::instance(id), streak);
         }
         let roster: Vec<InstanceId> = self
             .instances
-            .read()
-            .unwrap()
+            .pread()
             .iter()
             .map(|&(i, _)| i)
             .collect();
@@ -630,13 +641,12 @@ impl ServeCluster {
                     if self.timeline.observe(self.obs.snapshot(now)) {
                         let alerts = self
                             .watchdog
-                            .lock()
-                            .unwrap()
+                            .plock()
                             .check(&self.timeline.frames());
                         self.record_alerts(&alerts);
                     }
                 }
-                let dead = self.cm.lock().unwrap().sweep(now);
+                let dead = self.cm.plock().sweep(now);
                 if !dead.is_empty() {
                     self.on_failure(&dead);
                 }
@@ -665,7 +675,7 @@ impl ServeCluster {
             };
             match msg {
                 Msg::Token { rid, token, done } => {
-                    let mut p = self.shared.pending.lock().unwrap();
+                    let mut p = self.shared.pending.plock();
                     if let Some(entry) = p.get_mut(&rid) {
                         entry.tokens.push(token);
                         if done && entry.record.is_none() {
@@ -704,7 +714,7 @@ impl ServeCluster {
                         });
                     }
                     {
-                        let mut p = self.shared.pending.lock().unwrap();
+                        let mut p = self.shared.pending.plock();
                         if let Some(entry) = p.get_mut(&rid) {
                             let rec = RequestRecord {
                                 request_id: rid,
@@ -723,7 +733,7 @@ impl ServeCluster {
                                 prefill_instance: entry.dispatched_to.0,
                                 decode_instance: instance.0,
                             };
-                            self.metrics.lock().unwrap().push(rec.clone());
+                            self.metrics.plock().push(rec.clone());
                             // Retire-side latency digests (ISSUE 9):
                             // queue wait, TTFT, TBT, and the Eq. 1
                             // predicted-vs-observed prefill error, per
@@ -750,7 +760,7 @@ impl ServeCluster {
                     // Lock order: `pending` is released before `drains`
                     // is taken (the drain waiter holds `drains`, then
                     // briefly `pending`).
-                    let _g = self.drains.lock().unwrap();
+                    let _g = self.drains.plock();
                     self.drain_cv.notify_all();
                 }
                 Msg::Heartbeat { from } => {
@@ -758,7 +768,7 @@ impl ServeCluster {
                     self.flight
                         .record(now, from.0, fkind::HEARTBEAT, "");
                     let is_follower = {
-                        let mut health = self.gs_health.lock().unwrap();
+                        let mut health = self.gs_health.plock();
                         if health.all_followers.contains(&from) {
                             health.follower_beats.insert(from, now);
                             true
@@ -777,7 +787,7 @@ impl ServeCluster {
                             self.plane.flush_all(&self.fabric, LEADER);
                         }
                     } else {
-                        self.cm.lock().unwrap().heartbeat(from, now);
+                        self.cm.plock().heartbeat(from, now);
                     }
                 }
                 Msg::Cached { instance, seq } => {
@@ -808,7 +818,7 @@ impl ServeCluster {
                     // first one wins, later copies are dropped whole so
                     // the Handoff delta is never double-applied and the
                     // drain ledger never over-counts.
-                    if !self.landed_mids.lock().unwrap().insert(mid) {
+                    if !self.landed_mids.plock().insert(mid) {
                         log::debug!("dropping replayed MigrateLanded \
                                      mid={mid}");
                         continue;
@@ -827,7 +837,7 @@ impl ServeCluster {
                         tokens,
                         now,
                     });
-                    let mut d = self.drains.lock().unwrap();
+                    let mut d = self.drains.plock();
                     if let Some(p) = d.get_mut(&from) {
                         p.outstanding.remove(&mid);
                         p.landed += 1;
@@ -839,7 +849,7 @@ impl ServeCluster {
                     self.drain_cv.notify_all();
                 }
                 Msg::DrainDone { from } => {
-                    let mut d = self.drains.lock().unwrap();
+                    let mut d = self.drains.plock();
                     if let Some(p) = d.get_mut(&from) {
                         p.done = true;
                     }
@@ -883,8 +893,7 @@ impl ServeCluster {
                     // no-op.
                     if !self
                         .promote_pending
-                        .lock()
-                        .unwrap()
+                        .plock()
                         .contains(&shard)
                     {
                         log::debug!("dropping duplicate promotion \
@@ -913,7 +922,7 @@ impl ServeCluster {
                         PromotionRestore::OutOfRange => continue,
                     }
                     {
-                        let mut health = self.gs_health.lock().unwrap();
+                        let mut health = self.gs_health.plock();
                         if let Some(sh) = health.shards.get_mut(shard) {
                             sh.crashed = false;
                             sh.promotion = None;
@@ -933,12 +942,26 @@ impl ServeCluster {
                         pnow,
                     );
                     let mut pending =
-                        self.promote_pending.lock().unwrap();
+                        self.promote_pending.plock();
                     pending.remove(&shard);
                     self.promote_cv.notify_all();
                 }
                 Msg::Shutdown => return,
-                other => log::debug!("leader ignoring {other:?}"),
+                // Instance/replica-bound traffic that never addresses
+                // the leader inbox; enumerated (no `_`) so adding a
+                // Msg variant forces a routing decision here.
+                Msg::Dispatch { .. }
+                | Msg::KvHandoff { .. }
+                | Msg::KvBackflow { .. }
+                | Msg::MigrateOut { .. }
+                | Msg::KvMigrate { .. }
+                | Msg::Rewire { .. }
+                | Msg::Drain
+                | Msg::Membership { .. }
+                | Msg::Delta { .. }
+                | Msg::Promote { .. } => {
+                    log::debug!("leader ignoring instance-bound msg");
+                }
             }
         }
     }
@@ -957,7 +980,7 @@ impl ServeCluster {
             }
         }
         {
-            let mut lc = self.lifecycle.lock().unwrap();
+            let mut lc = self.lifecycle.plock();
             for d in dead {
                 lc.force_decommission(*d);
             }
@@ -966,14 +989,14 @@ impl ServeCluster {
             // Membership leaves via the replicated delta log (§4.4).
             self.gs_apply(DeltaEvent::Leave { instance: *d });
         }
-        let epoch = self.cm.lock().unwrap().epoch();
+        let epoch = self.cm.plock().epoch();
         self.flight.record(
             self.now(),
             LEADER.0,
             fkind::FENCE,
             format!("membership epoch {epoch}"),
         );
-        let roster = self.instances.read().unwrap().clone();
+        let roster = self.instances.pread().clone();
         for &(iid, _) in &roster {
             if !dead.contains(&iid) {
                 let _ = self.fabric.send(LEADER, iid, Msg::Membership {
@@ -985,7 +1008,7 @@ impl ServeCluster {
         // Re-dispatch in-flight requests that were on dead instances —
         // prefill side or decode pairing.
         let retry: Vec<(u64, Vec<u32>, u64, SamplingParams)> = {
-            let p = self.shared.pending.lock().unwrap();
+            let p = self.shared.pending.plock();
             p.iter()
                 .filter(|(_, e)| {
                     !e.done
@@ -1003,7 +1026,7 @@ impl ServeCluster {
         for (rid, prompt, session, sampling) in retry {
             log::info!("re-dispatching rid={rid} after failure");
             {
-                let mut p = self.shared.pending.lock().unwrap();
+                let mut p = self.shared.pending.plock();
                 if let Some(e) = p.get_mut(&rid) {
                     e.tokens.clear();
                 }
@@ -1014,7 +1037,7 @@ impl ServeCluster {
 
     /// Is this instance currently believed alive?
     pub fn is_alive(&self, id: InstanceId) -> bool {
-        self.cm.lock().unwrap().is_alive(id)
+        self.cm.plock().is_alive(id)
     }
 
     /// Kill an instance (failure injection for tests/examples): detaches
@@ -1035,9 +1058,11 @@ impl ServeCluster {
     /// Submit a tokenized prompt; returns the request id.
     pub fn submit(&self, prompt: Vec<u32>, session: u64,
                   sampling: SamplingParams) -> Result<u64> {
+        // ordering: SeqCst — rid allocation is off the hot path and
+        // rids must be unique across every submitting thread.
         let rid = self.next_rid.fetch_add(1, Ordering::SeqCst);
         {
-            let mut p = self.shared.pending.lock().unwrap();
+            let mut p = self.shared.pending.plock();
             let mut rec = RequestRecord::default();
             rec.arrival = self.now();
             p.insert(rid, Pending {
@@ -1066,9 +1091,9 @@ impl ServeCluster {
     fn dispatch(&self, rid: u64, prompt: Vec<u32>, session: u64,
                 sampling: SamplingParams) -> Result<()> {
         let now = self.now();
-        let roster = self.instances.read().unwrap().clone();
+        let roster = self.instances.pread().clone();
         let alive: Vec<InstanceId> = {
-            let cm = self.cm.lock().unwrap();
+            let cm = self.cm.plock();
             roster
                 .iter()
                 .filter(|(i, _)| cm.is_alive(*i))
@@ -1081,9 +1106,9 @@ impl ServeCluster {
         // Pushed into the routed unit's load book — an unchanged load
         // is an O(1) no-op there, and the capped cold sample reads
         // the book's policy ordering instead of ranking the fleet.
-        let queued: HashMap<InstanceId, usize> = {
-            let pend = self.shared.pending.lock().unwrap();
-            let mut q: HashMap<InstanceId, usize> = HashMap::new();
+        let queued: DetMap<InstanceId, usize> = {
+            let pend = self.shared.pending.plock();
+            let mut q: DetMap<InstanceId, usize> = DetMap::default();
             for e in pend.values() {
                 if !e.done {
                     *q.entry(e.dispatched_to).or_insert(0) +=
@@ -1129,7 +1154,7 @@ impl ServeCluster {
             .iter()
             .any(|(i, k)| *i == target && *k == InstanceKind::PrefillOnly)
         {
-            let lc = self.lifecycle.lock().unwrap();
+            let lc = self.lifecycle.plock();
             let decs: Vec<InstanceId> = roster
                 .iter()
                 .filter(|(i, k)| {
@@ -1140,13 +1165,15 @@ impl ServeCluster {
                 .map(|(i, _)| *i)
                 .collect();
             anyhow::ensure!(!decs.is_empty(), "no decode instances alive");
+            // ordering: Relaxed — round-robin cursor; any
+            // interleaving is a valid RR order.
             let i = self.decode_rr.fetch_add(1, Ordering::Relaxed) as usize;
             Some(decs[i % decs.len()])
         } else {
             None
         };
         {
-            let mut p = self.shared.pending.lock().unwrap();
+            let mut p = self.shared.pending.plock();
             if let Some(e) = p.get_mut(&rid) {
                 e.dispatched_to = target;
                 e.decode_on = decode_to;
@@ -1171,11 +1198,13 @@ impl ServeCluster {
     pub fn collect(&self, rid: u64, timeout: Duration)
                    -> Result<(Vec<u32>, RequestRecord)> {
         let deadline = Instant::now() + timeout;
-        let mut p = self.shared.pending.lock().unwrap();
+        let mut p = self.shared.pending.plock();
         loop {
             if let Some(e) = p.get(&rid) {
                 if e.done {
-                    let e = p.remove(&rid).unwrap();
+                    let Some(e) = p.remove(&rid) else {
+                        anyhow::bail!("rid {rid} vanished mid-collect");
+                    };
                     return Ok((e.tokens, e.record.context("no record")?));
                 }
             } else {
@@ -1187,14 +1216,14 @@ impl ServeCluster {
                 .shared
                 .cv
                 .wait_timeout(p, left.min(Duration::from_millis(100)))
-                .unwrap();
+                .unwrap_or_else(PoisonError::into_inner);
             p = guard;
         }
     }
 
     /// Aggregated metrics over completed requests.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.metrics.plock().clone()
     }
 
     pub fn net_stats(&self) -> crate::net::NetStats {
@@ -1237,7 +1266,7 @@ impl ServeCluster {
     /// Current roster snapshot (grows on [`Self::join`], shrinks on
     /// [`Self::drain`]).
     pub fn instances(&self) -> Vec<(InstanceId, InstanceKind)> {
-        self.instances.read().unwrap().clone()
+        self.instances.pread().clone()
     }
 
     /// Lifecycle state of an instance (None for unknown ids).
@@ -1245,7 +1274,7 @@ impl ServeCluster {
         &self,
         id: InstanceId,
     ) -> Option<crate::elastic::InstanceState> {
-        self.lifecycle.lock().unwrap().state(id)
+        self.lifecycle.plock().state(id)
     }
 
     /// GS replication status, aggregated over shards: (sum of shard log
@@ -1313,7 +1342,7 @@ impl ServeCluster {
                     "no GS replicas configured (scheduler.gs_replicas)",
                 )?
         };
-        *self.promote_pending.lock().unwrap() =
+        *self.promote_pending.plock() =
             targets.iter().map(|&(s, _)| s).collect();
         // The crash: ownership state dies with the primary. Membership
         // (and drain visibility) is re-derived from the lifecycle — the
@@ -1323,10 +1352,10 @@ impl ServeCluster {
         // would resurrect a dead instance as routable for the blackout.
         // Snapshot roster + states first (no nested lock orders), then
         // swap the crashed shards' trees.
-        let roster = self.instances.read().unwrap().clone();
+        let roster = self.instances.pread().clone();
         let members: Vec<(InstanceId, InstanceKind, bool)> = {
             use crate::elastic::InstanceState;
-            let lc = self.lifecycle.lock().unwrap();
+            let lc = self.lifecycle.plock();
             roster
                 .iter()
                 .filter_map(|&(iid, kind)| match lc.state(iid) {
@@ -1392,7 +1421,7 @@ impl ServeCluster {
             })
             .collect();
         let deadline = Instant::now() + timeout;
-        let mut pending = self.promote_pending.lock().unwrap();
+        let mut pending = self.promote_pending.plock();
         while !pending.is_empty() {
             let left = deadline.saturating_duration_since(Instant::now());
             anyhow::ensure!(!left.is_zero(), "GS promotion timed out");
@@ -1425,7 +1454,7 @@ impl ServeCluster {
             let (guard, _) = self
                 .promote_cv
                 .wait_timeout(pending, left.min(Duration::from_millis(50)))
-                .unwrap();
+                .unwrap_or_else(PoisonError::into_inner);
             pending = guard;
         }
         Ok(targets)
@@ -1450,10 +1479,10 @@ impl ServeCluster {
             !self.plane.followers().is_empty(),
             "no GS replicas configured (scheduler.gs_replicas)"
         );
-        let roster = self.instances.read().unwrap().clone();
+        let roster = self.instances.pread().clone();
         let members: Vec<(InstanceId, InstanceKind, bool)> = {
             use crate::elastic::InstanceState;
-            let lc = self.lifecycle.lock().unwrap();
+            let lc = self.lifecycle.plock();
             roster
                 .iter()
                 .filter_map(|&(iid, kind)| match lc.state(iid) {
@@ -1479,7 +1508,7 @@ impl ServeCluster {
             }
             self.plane.set_shard_tree(shard, fresh);
         }
-        let mut health = self.gs_health.lock().unwrap();
+        let mut health = self.gs_health.plock();
         let sh = &mut health.shards[shard];
         sh.crashed = true;
         sh.promotion = None;
@@ -1504,7 +1533,7 @@ impl ServeCluster {
 
     /// The configured GS follower roster (for fault-plan targeting).
     pub fn gs_follower_ids(&self) -> Vec<InstanceId> {
-        self.gs_health.lock().unwrap().all_followers.clone()
+        self.gs_health.plock().all_followers.clone()
     }
 
     /// Install a fault plan on the cluster fabric (fault injection for
@@ -1554,7 +1583,7 @@ impl ServeCluster {
         // Phase 1: follower liveness. Health lock is dropped before the
         // replication lock is taken (lock order: never nested).
         let lapsed: Vec<InstanceId> = {
-            let health = self.gs_health.lock().unwrap();
+            let health = self.gs_health.plock();
             health
                 .all_followers
                 .iter()
@@ -1590,7 +1619,7 @@ impl ServeCluster {
         // Phase 2: shard-primary suspicion + promotion driving.
         let mut actions: Vec<(usize, u32, bool)> = vec![];
         {
-            let mut health = self.gs_health.lock().unwrap();
+            let mut health = self.gs_health.plock();
             for (s, sh) in health.shards.iter_mut().enumerate() {
                 if !sh.crashed {
                     sh.last_beat = now; // in-process self-beat
@@ -1643,7 +1672,7 @@ impl ServeCluster {
                     }
                 }
                 self.plane.set_shard_degraded(shard, true);
-                self.promote_pending.lock().unwrap().insert(shard);
+                self.promote_pending.plock().insert(shard);
             }
             let target = self.plane.most_caught_up(shard);
             if let Some(t) = target {
@@ -1651,7 +1680,7 @@ impl ServeCluster {
                     shard,
                     reply_to: LEADER,
                 });
-                let mut health = self.gs_health.lock().unwrap();
+                let mut health = self.gs_health.plock();
                 if let Some(sh) = health.shards.get_mut(shard) {
                     if sh.crashed {
                         sh.promotion = Some((t, attempt + 1, now
@@ -1662,7 +1691,7 @@ impl ServeCluster {
             } else {
                 // No promotable replica yet (all deregistered?) —
                 // back off and retry; degraded routing keeps serving.
-                let mut health = self.gs_health.lock().unwrap();
+                let mut health = self.gs_health.plock();
                 if let Some(sh) = health.shards.get_mut(shard) {
                     if sh.crashed {
                         sh.promotion =
@@ -1683,9 +1712,9 @@ impl ServeCluster {
     /// gone instance — and a freshly joined prefill instance starts
     /// receiving its share.
     fn rewire_backflow(&self) {
-        let roster = self.instances.read().unwrap().clone();
+        let roster = self.instances.pread().clone();
         let (prefills, decodes): (Vec<InstanceId>, Vec<InstanceId>) = {
-            let lc = self.lifecycle.lock().unwrap();
+            let lc = self.lifecycle.plock();
             (
                 roster
                     .iter()
@@ -1732,10 +1761,11 @@ impl ServeCluster {
     /// empty view, so the prompt-tree policy warms it organically (or
     /// migration rebalances onto it).
     pub fn join(&self, kind: InstanceKind) -> Result<InstanceId> {
+        // ordering: SeqCst — instance ids must be globally unique;
+        // allocation is rare (scale-up only).
         let id = InstanceId(self.next_iid.fetch_add(1, Ordering::SeqCst));
         self.lifecycle
-            .lock()
-            .unwrap()
+            .plock()
             .join(id, kind)
             .map_err(|e| anyhow::anyhow!("join {id}: {e}"))?;
         let cfgc = &self.opts.config;
@@ -1765,17 +1795,16 @@ impl ServeCluster {
         let fab = self.fabric.clone();
         let ep = self.fabric.attach(id);
         let h = std::thread::spawn(move || run_instance(icfg, rt, fab, ep));
-        self.handles.lock().unwrap().push(h);
+        self.handles.plock().push(h);
         // Visibility order matters against concurrent dispatches, which
         // snapshot the roster *before* routing: roster + membership
         // first, the scheduler's routing set last — so by the time the
         // tree can choose this instance, every dispatch snapshot
         // already considers it alive.
-        self.instances.write().unwrap().push((id, kind));
-        self.cm.lock().unwrap().register(id, kind, self.now());
+        self.instances.pwrite().push((id, kind));
+        self.cm.plock().register(id, kind, self.now());
         self.lifecycle
-            .lock()
-            .unwrap()
+            .plock()
             .activate(id)
             .map_err(|e| anyhow::anyhow!("activate {id}: {e}"))?;
         self.gs_apply(DeltaEvent::Join { instance: id, kind });
@@ -1796,8 +1825,7 @@ impl ServeCluster {
                  -> Result<DrainReport> {
         let kind = self
             .instances
-            .read()
-            .unwrap()
+            .pread()
             .iter()
             .find(|(i, _)| *i == id)
             .map(|(_, k)| *k)
@@ -1807,7 +1835,7 @@ impl ServeCluster {
         // receive the migration), and draining the last decode peer
         // would strand every prefill-only instance's dispatch.
         if kind.runs_prefill() {
-            let lc = self.lifecycle.lock().unwrap();
+            let lc = self.lifecycle.plock();
             anyhow::ensure!(
                 lc.active_where(|k| k.runs_prefill())
                     .iter()
@@ -1817,12 +1845,11 @@ impl ServeCluster {
         } else {
             let needs_decode = self
                 .instances
-                .read()
-                .unwrap()
+                .pread()
                 .iter()
                 .any(|(_, k)| *k == InstanceKind::PrefillOnly);
             if needs_decode {
-                let lc = self.lifecycle.lock().unwrap();
+                let lc = self.lifecycle.plock();
                 anyhow::ensure!(
                     lc.active_where(|k| k == InstanceKind::DecodeOnly)
                         .iter()
@@ -1833,8 +1860,7 @@ impl ServeCluster {
             }
         }
         self.lifecycle
-            .lock()
-            .unwrap()
+            .plock()
             .begin_drain(id)
             .map_err(|e| anyhow::anyhow!("drain {id}: {e}"))?;
         let now = self.now();
@@ -1846,7 +1872,7 @@ impl ServeCluster {
         });
         let plan = {
             let receiver_ids: Vec<InstanceId> = {
-                let lc = self.lifecycle.lock().unwrap();
+                let lc = self.lifecycle.plock();
                 lc.active_where(|k| k.runs_prefill())
                     .into_iter()
                     .filter(|r| *r != id)
@@ -1874,9 +1900,11 @@ impl ServeCluster {
         // handshake; the outstanding map is the retry queue — an unacked
         // mid is re-sent (same mid, so receivers dedupe) with capped
         // exponential backoff while the wait loop below runs.
-        let mut outstanding = HashMap::new();
+        let mut outstanding = DetMap::default();
         let mut sends = vec![];
         for task in &plan.tasks {
+            // ordering: SeqCst — migration ids ride a cross-instance
+            // dedupe handshake; uniqueness over speed.
             let mid = self.next_mid.fetch_add(1, Ordering::SeqCst);
             outstanding.insert(mid, MigrateTask {
                 to: task.to,
@@ -1887,7 +1915,7 @@ impl ServeCluster {
             });
             sends.push((mid, task.to, task.tokens.clone()));
         }
-        self.drains.lock().unwrap().insert(id, DrainProgress {
+        self.drains.plock().insert(id, DrainProgress {
             expected,
             outstanding,
             ..Default::default()
@@ -1918,14 +1946,14 @@ impl ServeCluster {
         // lost — the notifier blocks on `drains` until we wait).
         let deadline = Instant::now() + timeout;
         let (landed_prefixes, landed_blocks) = {
-            let mut d = self.drains.lock().unwrap();
+            let mut d = self.drains.plock();
             loop {
                 let migrated = {
                     let p = d.get(&id).context("drain state lost")?;
                     p.done && p.landed >= p.expected
                 };
                 let idle = {
-                    let pend = self.shared.pending.lock().unwrap();
+                    let pend = self.shared.pending.plock();
                     !pend.values().any(|e| {
                         !e.done
                             && (e.dispatched_to == id
@@ -1949,7 +1977,7 @@ impl ServeCluster {
                         instance: id,
                         draining: false,
                     });
-                    let _ = self.lifecycle.lock().unwrap().abort_drain(id);
+                    let _ = self.lifecycle.plock().abort_drain(id);
                     anyhow::bail!(
                         "drain timeout for {id}: drain aborted, instance \
                          restored to Active"
@@ -1989,7 +2017,7 @@ impl ServeCluster {
                 let (guard, _) = self
                     .drain_cv
                     .wait_timeout(d, left.min(Duration::from_millis(50)))
-                    .unwrap();
+                    .unwrap_or_else(PoisonError::into_inner);
                 d = guard;
             }
         };
@@ -2001,15 +2029,14 @@ impl ServeCluster {
         self.fabric.detach(id);
         self.flight
             .record(self.now(), id.0, fkind::DEREGISTER, "decommissioned");
-        self.cm.lock().unwrap().deregister(id);
+        self.cm.plock().deregister(id);
         self.gs_apply(DeltaEvent::Leave { instance: id });
         self.lifecycle
-            .lock()
-            .unwrap()
+            .plock()
             .decommission(id)
             .map_err(|e| anyhow::anyhow!("decommission {id}: {e}"))?;
-        self.instances.write().unwrap().retain(|(i, _)| *i != id);
-        self.drains.lock().unwrap().remove(&id);
+        self.instances.pwrite().retain(|(i, _)| *i != id);
+        self.drains.plock().remove(&id);
         // Decode instances whose backflow pointed at the drained
         // instance get a surviving target (or None).
         self.rewire_backflow();
@@ -2029,7 +2056,7 @@ impl ServeCluster {
 
     /// Graceful shutdown: stop instances, GS followers, the collector.
     pub fn shutdown(&self) {
-        let roster = self.instances.read().unwrap().clone();
+        let roster = self.instances.pread().clone();
         for &(iid, _) in &roster {
             let _ = self.fabric.send(LEADER, iid, Msg::Shutdown);
         }
@@ -2038,7 +2065,7 @@ impl ServeCluster {
             let _ = self.fabric.send(LEADER, fid, Msg::Shutdown);
         }
         let _ = self.fabric.send(LEADER, LEADER, Msg::Shutdown);
-        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        let handles = std::mem::take(&mut *self.handles.plock());
         for h in handles {
             let _ = h.join();
         }

@@ -189,7 +189,27 @@ impl WireCost for Msg {
             | Msg::KvMigrate { payload, calls, .. } => {
                 Some((payload.len() * 4, (*calls).max(1), false, false))
             }
-            _ => None,
+            // Control-plane traffic models as zero wire cost;
+            // enumerated (no `_`) so a new payload-bearing variant
+            // cannot silently ship for free.
+            Msg::Dispatch { .. }
+            | Msg::Token { .. }
+            | Msg::Finished { .. }
+            | Msg::Heartbeat { .. }
+            | Msg::Cached { .. }
+            | Msg::MigrateOut { .. }
+            | Msg::MigrateLanded { .. }
+            | Msg::Rewire { .. }
+            | Msg::Drain
+            | Msg::DrainDone { .. }
+            | Msg::Membership { .. }
+            | Msg::Evicted { .. }
+            | Msg::Delta { .. }
+            | Msg::DeltaAck { .. }
+            | Msg::SnapshotReq { .. }
+            | Msg::Snapshot { .. }
+            | Msg::Promote { .. }
+            | Msg::Shutdown => None,
         }
     }
 }

@@ -126,10 +126,13 @@ impl GsReplication {
                     continue;
                 }
                 for seq in range.clone() {
-                    let ev = t
-                        .get(seq)
-                        .expect("sendable entry retained")
-                        .clone();
+                    // Sendable seqs are always retained; skip (the
+                    // follower's cumulative ack re-requests any gap)
+                    // rather than tearing the replica thread down.
+                    let Some(ev) = t.get(seq).cloned() else {
+                        debug_assert!(false, "sendable {seq} missing");
+                        continue;
+                    };
                     if fabric
                         .send(leader, f, Msg::Delta { shard, seq, ev })
                         .is_err()
@@ -382,8 +385,13 @@ pub fn run_gs_follower(
         while let Some(msg) = next_msg.take() {
             match msg {
                 Msg::Shutdown => return,
-                Msg::Delta { shard, seq, ev } if shard < states.len() => {
-                    match states[shard].on_delta(seq, ev) {
+                Msg::Delta { shard, seq, ev } => {
+                    let Some(st) = states.get_mut(shard) else {
+                        log::debug!("delta for unknown shard {shard}");
+                        next_msg = endpoint.try_recv().map(|(_, m)| m);
+                        continue;
+                    };
+                    match st.on_delta(seq, ev) {
                         FollowerReply::Ack(next) => {
                             send_ack(&fabric, shard, next)
                         }
@@ -397,29 +405,54 @@ pub fn run_gs_follower(
                         FollowerReply::None => {}
                     }
                 }
-                Msg::Snapshot { shard, snap } if shard < states.len() => {
-                    let next =
-                        states[shard].on_snapshot(&snap, block_tokens, ttl);
+                Msg::Snapshot { shard, snap } => {
+                    let Some(st) = states.get_mut(shard) else {
+                        log::debug!("snapshot for unknown shard {shard}");
+                        next_msg = endpoint.try_recv().map(|(_, m)| m);
+                        continue;
+                    };
+                    let next = st.on_snapshot(&snap, block_tokens, ttl);
                     send_ack(&fabric, shard, next);
                 }
-                Msg::Promote { shard, reply_to }
-                    if shard < states.len() =>
-                {
+                Msg::Promote { shard, reply_to } => {
                     // Failover: hand the caller this shard's replica at
                     // its applied sequence. The thread keeps
                     // replicating — the restored primary resumes
                     // streaming to it.
+                    let Some(st) = states.get(shard) else {
+                        log::debug!("promote for unknown shard {shard}");
+                        next_msg = endpoint.try_recv().map(|(_, m)| m);
+                        continue;
+                    };
                     let snap = TreeSnapshot::capture(
-                        &states[shard].tree,
-                        states[shard].expected(),
+                        &st.tree,
+                        st.expected(),
                     );
                     let _ = fabric.send(id, reply_to, Msg::Snapshot {
                         shard,
                         snap,
                     });
                 }
-                other => {
-                    log::debug!("GS follower {id} ignoring {other:?}");
+                // Leader/instance traffic; enumerated (no `_`) so a
+                // new Msg variant forces a routing decision here.
+                Msg::Dispatch { .. }
+                | Msg::KvHandoff { .. }
+                | Msg::KvBackflow { .. }
+                | Msg::Token { .. }
+                | Msg::Finished { .. }
+                | Msg::Heartbeat { .. }
+                | Msg::Cached { .. }
+                | Msg::MigrateOut { .. }
+                | Msg::KvMigrate { .. }
+                | Msg::MigrateLanded { .. }
+                | Msg::Rewire { .. }
+                | Msg::Drain
+                | Msg::DrainDone { .. }
+                | Msg::Membership { .. }
+                | Msg::Evicted { .. }
+                | Msg::DeltaAck { .. }
+                | Msg::SnapshotReq { .. } => {
+                    log::debug!("GS follower {id} ignoring peer msg");
                 }
             }
             next_msg = endpoint.try_recv().map(|(_, m)| m);

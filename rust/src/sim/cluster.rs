@@ -673,7 +673,7 @@ impl Simulation {
                 if grp.is_consumed(s) {
                     continue;
                 }
-                let g = grp.group(s);
+                let Some(g) = grp.group(s) else { continue };
                 let head = g.log_head();
                 let lags: Vec<(u32, u64)> = g
                     .live_indices()
@@ -870,7 +870,9 @@ impl Simulation {
                     let promoted = grp
                         .fail_primary(s)
                         .expect("gs_replicas >= 1 leaves a follower");
-                    let tree = grp.extract_tree(s, promoted);
+                    let tree = grp
+                        .extract_tree(s, promoted)
+                        .expect("promoted shard still live");
                     self.gs.trees.set_shard_tree(s, tree);
                     self.report.gs_failovers += 1;
                     self.flight.record(

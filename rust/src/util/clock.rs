@@ -1,0 +1,52 @@
+//! The repo's single wall-clock primitive (ISSUE 10, archlint R1).
+//!
+//! Nothing outside the allow-listed live-server modules may read the
+//! wall clock directly: `deterministic_replay` and the identical-routing
+//! gates (PR 6/7) only hold when every decision is a function of the
+//! caller-provided virtual timestamp. Code that genuinely needs live
+//! time (the serve loop, fabric recv deadlines, bench harnesses) calls
+//! these helpers or takes one of them as an injected `fn() -> f64`
+//! timer — passing `monotonic_secs` *by name* (no call) is always
+//! allowed; *calling* it is what archlint restricts to the allow list.
+
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+/// Process-start anchor so monotonic readings are small, comparable
+/// f64s rather than opaque `Instant`s.
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// Seconds elapsed since the first clock read in this process.
+/// Monotonic; safe to subtract. This is the injectable route timer.
+pub fn monotonic_secs() -> f64 {
+    START.elapsed().as_secs_f64()
+}
+
+/// Seconds since the UNIX epoch, for human-facing stamps (artifact
+/// metadata, log prefixes). Not monotonic; never feed it to decisions.
+pub fn epoch_secs() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_never_decreases() {
+        let a = monotonic_secs();
+        let b = monotonic_secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn epoch_is_plausible() {
+        // Any machine running this code post-dates 2020-01-01.
+        assert!(epoch_secs() > 1.577e9);
+    }
+}

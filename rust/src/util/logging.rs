@@ -40,6 +40,8 @@ impl log::Log for StderrLogger {
 /// Install the logger once; later calls are no-ops. Level from
 /// `MEMSERVE_LOG` env var, default `info`.
 pub fn init() {
+    // ordering: SeqCst — once-only install flag on a cold path; the
+    // strongest order keeps the single-winner guarantee obvious.
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }

@@ -12,12 +12,17 @@
 //! * [`proptest`] — randomized property-testing harness with shrinking-lite
 //! * [`bench`]  — the hand-rolled benchmark harness used by `cargo bench`
 //! * [`logging`] — a `log`-crate backend writing to stderr with levels
+//! * [`sync`]   — the loom-swappable synchronization shim + poison-
+//!   recovering lock traits + the `EpochGate` fence (ISSUE 10)
+//! * [`clock`]  — the single wall-clock primitive archlint R1 allows
 
 pub mod args;
 pub mod bench;
+pub mod clock;
 pub mod heap;
 pub mod json;
 pub mod logging;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;

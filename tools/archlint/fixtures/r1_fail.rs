@@ -1,0 +1,14 @@
+// R1 FAIL: a sim handler reading the wall clock directly. The sim runs
+// on a virtual clock; an `Instant::now()` here leaks real time into
+// decisions and breaks `deterministic_replay`.
+
+pub struct Stamp(pub f64);
+
+pub fn record_arrival() -> Stamp {
+    let t0 = std::time::Instant::now();
+    Stamp(t0.elapsed().as_secs_f64())
+}
+
+pub fn wall_stamp() -> f64 {
+    crate::util::clock::epoch_secs()
+}

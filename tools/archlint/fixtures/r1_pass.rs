@@ -1,0 +1,18 @@
+// R1 pass: the sim takes caller-clock timestamps, and live-timing code
+// receives the clock as an injected `fn() -> f64` — naming the
+// function without calling it is allowed.
+
+pub struct Stamp(pub f64);
+
+pub fn record_arrival(now: f64) -> Stamp {
+    Stamp(now)
+}
+
+pub fn timer_for_live_paths() -> fn() -> f64 {
+    crate::util::clock::monotonic_secs
+}
+
+pub fn observe(timer: Option<fn() -> f64>) -> Option<f64> {
+    let t0 = timer.map(|f| f());
+    t0.zip(timer).map(|(t0, f)| f() - t0)
+}

@@ -1,0 +1,16 @@
+// R2 FAIL: RandomState-defaulted maps in a scheduler decision path.
+// Their per-process iteration order silently varies run to run, so any
+// tie-break or fan-out that walks them diverges under replay.
+
+use std::collections::{HashMap, HashSet};
+
+pub fn pick(loads: &[(u32, u64)]) -> Option<u32> {
+    let mut seen: HashSet<u32> = HashSet::new();
+    let mut best: HashMap<u32, u64> = HashMap::new();
+    for &(inst, load) in loads {
+        if seen.insert(inst) {
+            best.insert(inst, load);
+        }
+    }
+    best.iter().min_by_key(|&(_, l)| *l).map(|(&i, _)| i)
+}

@@ -1,0 +1,15 @@
+// R2 pass: the deterministic map/set twins from util::rng — same
+// insertion history, same iteration order, every run.
+
+use crate::util::rng::{DetMap, DetSet};
+
+pub fn pick(loads: &[(u32, u64)]) -> Option<u32> {
+    let mut seen: DetSet<u32> = DetSet::default();
+    let mut best: DetMap<u32, u64> = DetMap::default();
+    for &(inst, load) in loads {
+        if seen.insert(inst) {
+            best.insert(inst, load);
+        }
+    }
+    best.iter().min_by_key(|&(_, l)| *l).map(|(&i, _)| i)
+}

@@ -1,0 +1,37 @@
+// R3 FAIL: (a) the unit vector touched outside `fn unit`/`fn lock_all`
+// — ad-hoc multi-unit acquisition orders can deadlock against the
+// ascending `lock_all`; (b) a fabric send and a second acquisition
+// while a unit guard is live.
+
+use crate::util::sync::LockExt;
+
+pub struct GsUnit {
+    pub dirty: bool,
+}
+
+pub struct Plane {
+    units: Vec<std::sync::Mutex<GsUnit>>,
+}
+
+impl Plane {
+    fn unit(&self, s: usize) -> std::sync::MutexGuard<'_, GsUnit> {
+        self.units[s].plock()
+    }
+
+    pub fn bad_direct_access(&self, s: usize) -> bool {
+        self.units[s].plock().dirty
+    }
+
+    pub fn bad_hold_and_send(
+        &self,
+        s: usize,
+        tx: &std::sync::mpsc::Sender<u32>,
+    ) {
+        let u = self.unit(s);
+        if u.dirty {
+            let _ = tx.send(1);
+        }
+        let v = self.unit(s + 1);
+        let _ = v.dirty;
+    }
+}

@@ -1,0 +1,42 @@
+// R3 pass: unit access confined to `fn unit`/`fn lock_all` (ascending
+// order), messages collected under the guard and sent after it drops.
+
+use crate::util::sync::LockExt;
+
+pub struct GsUnit {
+    pub dirty: bool,
+    pub outbox: Vec<u32>,
+}
+
+pub struct Plane {
+    units: Vec<std::sync::Mutex<GsUnit>>,
+}
+
+impl Plane {
+    fn unit(&self, s: usize) -> std::sync::MutexGuard<'_, GsUnit> {
+        self.units[s].plock()
+    }
+
+    fn lock_all(&self) -> Vec<std::sync::MutexGuard<'_, GsUnit>> {
+        // Ascending index order — the only multi-unit path.
+        self.units.iter().map(|u| u.plock()).collect()
+    }
+
+    pub fn flush(&self, s: usize, tx: &std::sync::mpsc::Sender<u32>) {
+        let drained = {
+            let mut u = self.unit(s);
+            std::mem::take(&mut u.outbox)
+        };
+        for m in drained {
+            let _ = tx.send(m);
+        }
+    }
+
+    pub fn sweep(&self) -> usize {
+        let mut n = 0;
+        for u in self.lock_all() {
+            n += usize::from(u.dirty);
+        }
+        n
+    }
+}

@@ -1,0 +1,10 @@
+// R4 FAIL: an atomic Ordering use without an `// ordering:`
+// justification, and a direct variant import that makes every later
+// use site invisible to review.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Relaxed);
+    c.load(std::sync::atomic::Ordering::Acquire)
+}

@@ -1,0 +1,12 @@
+// R4 pass: `Ordering` imported as the enum, every variant spelled at
+// the use site, every use justified — one comment may head a tight
+// cluster.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    // ordering: Relaxed — a statistics counter; no cross-thread
+    // handoff is published through this value.
+    c.fetch_add(1, Ordering::Relaxed);
+    c.load(Ordering::Relaxed) // ordering: Relaxed — same counter.
+}

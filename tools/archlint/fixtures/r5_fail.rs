@@ -1,0 +1,14 @@
+// R5 FAIL: panic paths in protocol code — a poisoned-lock unwrap, an
+// expect on peer-controlled state, and a reachable panic!.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+pub fn commit(pending: &Mutex<BTreeMap<u64, u32>>, rid: u64) -> u32 {
+    let mut p = pending.lock().unwrap();
+    let v = p.remove(&rid).expect("request tracked");
+    if v == u32::MAX {
+        panic!("corrupt request id {rid}");
+    }
+    v
+}

@@ -1,0 +1,19 @@
+// R5 pass: poison recovery via plock, absence handled with let-else +
+// a log line, and the invariant stated as a debug_assert (loud under
+// `cargo test`, graceful in release).
+
+use crate::util::sync::{LockExt, Mutex};
+use std::collections::BTreeMap;
+
+pub fn commit(
+    pending: &Mutex<BTreeMap<u64, u32>>,
+    rid: u64,
+) -> Option<u32> {
+    let mut p = pending.plock();
+    let Some(v) = p.remove(&rid) else {
+        log::warn!("commit for untracked request {rid}");
+        return None;
+    };
+    debug_assert!(v != u32::MAX, "corrupt request id {rid}");
+    Some(v)
+}

@@ -1,0 +1,26 @@
+// R6 FAIL: Msg matches with catch-all arms — a new protocol variant
+// routed here would be silently dropped instead of failing to compile.
+
+pub enum Msg {
+    Dispatch { req: u64 },
+    Token { req: u64, tok: u32 },
+    Heartbeat { seq: u64 },
+}
+
+pub fn handle(m: Option<Msg>) -> u64 {
+    match m {
+        Some(Msg::Dispatch { req }) => req,
+        Some(other) => {
+            let _ = other;
+            0
+        }
+        None => 0,
+    }
+}
+
+pub fn seq_of(m: &Msg) -> u64 {
+    match m {
+        Msg::Heartbeat { seq } => *seq,
+        _ => 0,
+    }
+}

@@ -1,0 +1,24 @@
+// R6 pass: every Msg match is exhaustive; deliberately-ignored
+// variants are pipe-grouped by name, so adding a variant breaks the
+// build at every handler that must decide about it.
+
+pub enum Msg {
+    Dispatch { req: u64 },
+    Token { req: u64, tok: u32 },
+    Heartbeat { seq: u64 },
+}
+
+pub fn handle(m: Option<Msg>) -> u64 {
+    match m {
+        Some(Msg::Dispatch { req }) => req,
+        Some(Msg::Token { req, tok }) => req ^ u64::from(tok),
+        Some(Msg::Heartbeat { .. }) | None => 0,
+    }
+}
+
+pub fn seq_of(m: &Msg) -> u64 {
+    match m {
+        Msg::Heartbeat { seq } => *seq,
+        Msg::Dispatch { .. } | Msg::Token { .. } => 0,
+    }
+}

@@ -1,0 +1,1211 @@
+//! archlint — repo-specific static analysis for the MemServe tree
+//! (ISSUE 10 tentpole).
+//!
+//! MemServe's correctness story rests on invariants no compiler checks:
+//! routing must be deterministic and replay-identical across failover,
+//! the sim's virtual clock must never leak into decisions, and the
+//! lock-free data plane's relaxed atomics must carry their reasoning in
+//! the source. This tool enforces those invariants as named,
+//! individually-testable rules over `rust/src/`:
+//!
+//! * **R1 no-wall-clock** — `Instant::now(` / `SystemTime::now(` /
+//!   `util::clock::{monotonic_secs,epoch_secs}(` calls only in
+//!   allow-listed live-server modules (`server/`, `runtime/`,
+//!   `net/fabric.rs`, `main.rs`, `util/bench.rs`, `util/logging.rs`,
+//!   `util/clock.rs`). Everything else takes caller-clock timestamps or
+//!   an injected `fn() -> f64` timer (passing the fn *by name* is fine;
+//!   *calling* it is what leaks).
+//! * **R2 no-unseeded-randomness** — `thread_rng` / `rand::` nowhere;
+//!   `RandomState`-defaulted `HashMap::new` / `HashSet::new` /
+//!   `with_capacity` nowhere in decision-path dirs (`scheduler/`,
+//!   `elastic/`, `replica/`, `sim/`, `mempool/`, `server/`) — use
+//!   `util::rng::{DetMap, DetSet}` or an explicit deterministic hasher.
+//! * **R3 lock-discipline** (`server/data_plane.rs`,
+//!   `server/leader.rs`) — (a) the unit vector is touched only inside
+//!   `fn unit` / `fn lock_all` (plus `.len()`), so multi-unit
+//!   acquisition can only happen via ascending `lock_all`; (b) while a
+//!   let-bound unit guard is live, no further `self.unit(`/`lock_all(`
+//!   acquisition and no `.send(` — collect messages under the lock,
+//!   send after the guard drops.
+//! * **R4 ordering-justified** — every atomic `Ordering::{Relaxed,
+//!   Acquire, Release, AcqRel, SeqCst}` token carries an `// ordering:`
+//!   comment on the same line or within the three lines above (a
+//!   justified line extends cover to immediately-following uses, so one
+//!   comment can head a tight cluster). Importing a variant directly
+//!   (`use ...Ordering::Relaxed`) is banned — it hides the choice at
+//!   the use site. `std::cmp::Ordering` is untouched (different
+//!   variants).
+//! * **R5 no-panic-paths** — `.unwrap()` / `.expect(` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` banned in non-test
+//!   `server/`, `replica/`, `net/` code. `debug_assert!` is the
+//!   sanctioned invariant check (loud under `cargo test`, graceful in
+//!   release); poisoned locks recover via `util::sync::{plock, pread,
+//!   pwrite}`.
+//! * **R6 msg-exhaustive** — a `match` whose arms name `Msg::` variants
+//!   must not have a catch-all arm (`_`, a bare binding, `Some(_)`,
+//!   `Some(binding)`): new protocol variants must fail compilation at
+//!   every handler instead of being silently dropped.
+//!
+//! **What the lexer is.** A purpose-built scanner, not a Rust parser:
+//! it strips comments and string/char literals (preserving line
+//! structure), tracks `#[cfg(...test...)]`-gated regions by brace
+//! depth, and then runs token-level rules. It understands raw strings,
+//! nested block comments, and lifetimes-vs-char-literals, which is
+//! enough for this tree. It does not expand macros and does not resolve
+//! paths — rules are written so that the cheap lexical approximation
+//! errs on the side of firing (and the golden fixtures in
+//! `src/lib.rs::tests` pin each rule's fire/pass behavior).
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One rule hit. `file` is the path relative to the lint root, `line`
+/// is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.msg
+        )
+    }
+}
+
+/// One source line after lexing: comment/string-stripped code, whether
+/// it sits in a `#[cfg(test)]`-gated region, and whether a comment on
+/// (or spanning) this line contains the `ordering:` marker.
+struct LineInfo {
+    code: String,
+    in_test: bool,
+    ordering_comment: bool,
+}
+
+struct Prepared {
+    rel: String,
+    lines: Vec<LineInfo>,
+}
+
+// ---------------------------------------------------------------------
+// Lexer: strip comments + string/char literals, preserving lines.
+// ---------------------------------------------------------------------
+
+#[derive(PartialEq, Clone, Copy)]
+enum LexState {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Returns per-line (code, comment-text) pairs.
+fn strip(src: &str) -> Vec<(String, String)> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut com = String::new();
+    let mut st = LexState::Code;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            if st == LexState::LineComment {
+                st = LexState::Code;
+            }
+            out.push((
+                std::mem::take(&mut code),
+                std::mem::take(&mut com),
+            ));
+            i += 1;
+            continue;
+        }
+        match st {
+            LexState::Code => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = LexState::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    st = LexState::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                let prev_ident =
+                    i > 0 && is_ident_char(b[i - 1]);
+                if !prev_ident && (c == 'r' || c == 'b') {
+                    // b"..." byte string
+                    if c == 'b' && next == Some('"') {
+                        code.push_str("b\"");
+                        st = LexState::Str;
+                        i += 2;
+                        continue;
+                    }
+                    // r"...", r#"..."#, br"...", br#"..."#
+                    let rpos = if c == 'r' {
+                        Some(i)
+                    } else if next == Some('r') {
+                        Some(i + 1)
+                    } else {
+                        None
+                    };
+                    if let Some(rpos) = rpos {
+                        let mut j = rpos + 1;
+                        let mut hashes = 0usize;
+                        while b.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if b.get(j) == Some(&'"') {
+                            code.push_str("r\"");
+                            st = LexState::RawStr(hashes);
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '"' {
+                    code.push('"');
+                    st = LexState::Str;
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    // Char literal vs lifetime.
+                    if b.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        while j < b.len()
+                            && b[j] != '\''
+                            && b[j] != '\n'
+                        {
+                            j += 1;
+                        }
+                        code.push_str("' '");
+                        i = j + 1;
+                        continue;
+                    }
+                    if b.get(i + 2) == Some(&'\'')
+                        && b.get(i + 1) != Some(&'\'')
+                        && b.get(i + 1) != Some(&'\n')
+                    {
+                        code.push_str("' '");
+                        i += 3;
+                        continue;
+                    }
+                    // Lifetime: keep the tick, scanning continues.
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            LexState::LineComment => {
+                com.push(c);
+                i += 1;
+            }
+            LexState::BlockComment(d) => {
+                let next = b.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    if d == 1 {
+                        st = LexState::Code;
+                    } else {
+                        st = LexState::BlockComment(d - 1);
+                    }
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = LexState::BlockComment(d + 1);
+                    i += 2;
+                } else {
+                    com.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if c == '\\' {
+                    // Keep the following newline visible to the line
+                    // splitter (string continuation).
+                    if b.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    st = LexState::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::RawStr(h) => {
+                if c == '"' {
+                    let closes = (1..=h)
+                        .all(|k| b.get(i + k) == Some(&'#'));
+                    if closes {
+                        code.push('"');
+                        st = LexState::Code;
+                        i += 1 + h;
+                        continue;
+                    }
+                }
+                code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    out.push((code, com));
+    out
+}
+
+/// Mark lines inside `#[cfg(...test...)]`-gated items (a gated mod,
+/// impl, or fn and its whole body) as test code.
+fn mark_test_regions(lines: &mut [LineInfo]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    // Stack of depths at which a skip region was entered (supports the
+    // uncommon nested-gated-item case).
+    let mut skip_until: Vec<i64> = Vec::new();
+    for li in lines.iter_mut() {
+        if !skip_until.is_empty() {
+            li.in_test = true;
+        }
+        let code = li.code.clone();
+        // Attribute detection is line-based: the gate attributes this
+        // tree uses (`#[cfg(test)]`, `#[cfg(all(test, loom))]`, ...)
+        // never span lines.
+        if let Some(p) = code.find("#[cfg(") {
+            let rest = &code[p..];
+            let end = rest.find(']').unwrap_or(rest.len());
+            let attr = &rest[..end];
+            // Gated-out-of-tier-1 regions: test mods and loom-only
+            // items. `#[cfg(not(loom))]` is the *normal* build — lint.
+            let loom_only = attr.contains("loom")
+                && !attr.contains("not(loom)");
+            if attr.contains("test") || loom_only {
+                pending = true;
+                li.in_test = true;
+            }
+        }
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        pending = false;
+                        skip_until.push(depth - 1);
+                        li.in_test = true;
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if skip_until.last() == Some(&depth) {
+                        skip_until.pop();
+                    }
+                }
+                ';' => {
+                    // `#[cfg(test)] use ...;` — item without a body.
+                    if pending && skip_until.is_empty() {
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !skip_until.is_empty() {
+            li.in_test = true;
+        }
+    }
+}
+
+fn prepare(rel: &str, src: &str) -> Prepared {
+    let mut lines: Vec<LineInfo> = strip(src)
+        .into_iter()
+        .map(|(code, com)| LineInfo {
+            ordering_comment: com.contains("ordering:"),
+            code,
+            in_test: false,
+        })
+        .collect();
+    mark_test_regions(&mut lines);
+    Prepared {
+        rel: rel.to_string(),
+        lines,
+    }
+}
+
+/// Find `needle` in `hay` at token boundaries: the char before the
+/// match must not be an identifier char (so `match_hit(` does not match
+/// `match`, and `fetch_or(` does not match `or(`). Returns byte
+/// offsets of match starts.
+fn token_find(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let ok_before = at == 0
+            || !is_ident_char(
+                hay[..at].chars().next_back().unwrap_or(' '),
+            );
+        if ok_before {
+            out.push(at);
+        }
+        from = at + needle.len().max(1);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------
+
+const R1_ALLOW: &[&str] = &[
+    "server/",
+    "runtime/",
+    "net/fabric.rs",
+    "main.rs",
+    "bin/",
+    "util/bench.rs",
+    "util/logging.rs",
+    "util/clock.rs",
+];
+
+const R1_TOKENS: &[&str] = &[
+    "Instant::now(",
+    "SystemTime::now(",
+    "monotonic_secs(",
+    "epoch_secs(",
+];
+
+fn rule_r1(p: &Prepared, out: &mut Vec<Violation>) {
+    if R1_ALLOW.iter().any(|a| p.rel.starts_with(a)) {
+        return;
+    }
+    for (n, li) in p.lines.iter().enumerate() {
+        if li.in_test {
+            continue;
+        }
+        for tok in R1_TOKENS {
+            if !token_find(&li.code, tok).is_empty() {
+                out.push(Violation {
+                    rule: "R1",
+                    file: p.rel.clone(),
+                    line: n + 1,
+                    msg: format!(
+                        "wall-clock read `{}` outside the live-server \
+                         allow list; take a caller timestamp or an \
+                         injected `fn() -> f64` timer",
+                        tok.trim_end_matches('(')
+                    ),
+                });
+            }
+        }
+    }
+}
+
+const R2_DECISION_DIRS: &[&str] = &[
+    "scheduler/",
+    "elastic/",
+    "replica/",
+    "sim/",
+    "mempool/",
+    "server/",
+];
+
+const R2_GLOBAL_TOKENS: &[&str] =
+    &["thread_rng(", "rand::", "RandomState::new("];
+
+const R2_MAP_TOKENS: &[&str] = &[
+    "HashMap::new(",
+    "HashSet::new(",
+    "HashMap::with_capacity(",
+    "HashSet::with_capacity(",
+];
+
+fn rule_r2(p: &Prepared, out: &mut Vec<Violation>) {
+    let in_decision_dir =
+        R2_DECISION_DIRS.iter().any(|d| p.rel.starts_with(d));
+    for (n, li) in p.lines.iter().enumerate() {
+        if li.in_test {
+            continue;
+        }
+        if p.rel != "util/rng.rs" {
+            for tok in R2_GLOBAL_TOKENS {
+                if !token_find(&li.code, tok).is_empty() {
+                    out.push(Violation {
+                        rule: "R2",
+                        file: p.rel.clone(),
+                        line: n + 1,
+                        msg: format!(
+                            "unseeded randomness `{}`; all randomness \
+                             flows from util::rng seeds",
+                            tok.trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+        if in_decision_dir {
+            for tok in R2_MAP_TOKENS {
+                if !token_find(&li.code, tok).is_empty() {
+                    out.push(Violation {
+                        rule: "R2",
+                        file: p.rel.clone(),
+                        line: n + 1,
+                        msg: format!(
+                            "`{}` defaults to RandomState (per-process \
+                             iteration order) in a decision path; use \
+                             util::rng::DetMap/DetSet",
+                            tok.trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+const R3_FILES: &[&str] =
+    &["server/data_plane.rs", "server/leader.rs"];
+
+/// Byte spans (line ranges) of `fn unit...` / `fn lock_all...` bodies,
+/// where direct `.units` access is sanctioned.
+fn fn_body_lines(
+    p: &Prepared,
+    fn_tokens: &[&str],
+) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut n = 0usize;
+    while n < p.lines.len() {
+        let code = &p.lines[n].code;
+        let hit = fn_tokens
+            .iter()
+            .any(|t| !token_find(code, t).is_empty());
+        if !hit {
+            n += 1;
+            continue;
+        }
+        // Walk from the signature to the body's matching close brace.
+        let start = n;
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut m = n;
+        'outer: while m < p.lines.len() {
+            for c in p.lines[m].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            break 'outer;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            m += 1;
+        }
+        spans.push((start, m.min(p.lines.len() - 1)));
+        n = m + 1;
+    }
+    spans
+}
+
+fn rule_r3(p: &Prepared, out: &mut Vec<Violation>) {
+    if !R3_FILES.contains(&p.rel.as_str()) {
+        return;
+    }
+    // R3a: `.units` confined to `fn unit` / `fn lock_all` (+ `.len()`).
+    if p.rel == "server/data_plane.rs" {
+        let allowed = fn_body_lines(
+            p,
+            &["fn unit(", "fn unit_mut(", "fn lock_all("],
+        );
+        for (n, li) in p.lines.iter().enumerate() {
+            if li.in_test {
+                continue;
+            }
+            for (at, _) in li.code.match_indices(".units") {
+                let rest = &li.code[at + ".units".len()..];
+                if rest.starts_with(".len()") {
+                    continue;
+                }
+                // Field declaration / struct literal (`units:`) has no
+                // leading dot, so any `.units` here is an access.
+                let sanctioned = allowed
+                    .iter()
+                    .any(|&(a, b)| n >= a && n <= b);
+                if !sanctioned {
+                    out.push(Violation {
+                        rule: "R3",
+                        file: p.rel.clone(),
+                        line: n + 1,
+                        msg: "direct unit-vector access outside \
+                              `fn unit`/`fn lock_all`; multi-unit \
+                              acquisition must go through ascending \
+                              lock_all"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+    // R3b: while a let-bound unit guard is live — no second
+    // acquisition, no `.send(`.
+    let mut depth: i64 = 0;
+    // (binding name, depth at which it was introduced)
+    let mut guards: Vec<(String, i64)> = Vec::new();
+    for (n, li) in p.lines.iter().enumerate() {
+        if li.in_test {
+            // Keep depth bookkeeping but never track/flag in tests.
+            for c in li.code.chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            guards.retain(|g| g.1 <= depth);
+            continue;
+        }
+        let code = &li.code;
+        let acquisitions = code.matches(".unit(").count()
+            + code.matches(".lock_all(").count();
+        let is_let_guard = acquisitions > 0
+            && code.trim_start().starts_with("let ");
+        if !guards.is_empty() && acquisitions > 0 {
+            out.push(Violation {
+                rule: "R3",
+                file: p.rel.clone(),
+                line: n + 1,
+                msg: "unit acquisition while another unit guard is \
+                      live; ascending multi-unit locking only via \
+                      lock_all"
+                    .to_string(),
+            });
+        } else if acquisitions >= 2 {
+            out.push(Violation {
+                rule: "R3",
+                file: p.rel.clone(),
+                line: n + 1,
+                msg: "two unit acquisitions in one statement; use \
+                      lock_all"
+                    .to_string(),
+            });
+        }
+        if !guards.is_empty() && code.contains(".send(") {
+            out.push(Violation {
+                rule: "R3",
+                file: p.rel.clone(),
+                line: n + 1,
+                msg: "send while a unit lock is held; collect \
+                      messages under the guard and send after it \
+                      drops"
+                    .to_string(),
+            });
+        }
+        // Guard births/deaths after the line's checks: the binding
+        // itself is the first acquisition, not a nested one.
+        if is_let_guard {
+            let name = code
+                .trim_start()
+                .trim_start_matches("let ")
+                .trim_start_matches("mut ")
+                .chars()
+                .take_while(|&c| is_ident_char(c))
+                .collect::<String>();
+            if !name.is_empty() {
+                guards.push((name, depth));
+            }
+        }
+        for at in token_find(code, "drop(") {
+            let arg: String = code[at + "drop(".len()..]
+                .chars()
+                .take_while(|&c| is_ident_char(c))
+                .collect();
+            guards.retain(|g| g.0 != arg);
+        }
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        guards.retain(|g| g.1 <= depth);
+    }
+}
+
+const R4_VARIANTS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+fn rule_r4(p: &Prepared, out: &mut Vec<Violation>) {
+    // A justified line covers itself and the 3 lines below; a covered
+    // use extends cover one further line so one comment can head a
+    // tight cluster of uses.
+    let mut cover_until: i64 = -1;
+    for (n, li) in p.lines.iter().enumerate() {
+        if li.ordering_comment {
+            cover_until = cover_until.max(n as i64 + 3);
+        }
+        if li.in_test {
+            continue;
+        }
+        let uses = R4_VARIANTS
+            .iter()
+            .map(|v| token_find(&li.code, v).len())
+            .sum::<usize>();
+        if uses == 0 {
+            continue;
+        }
+        let is_import = li.code.trim_start().starts_with("use ")
+            || li.code.trim_start().starts_with("pub use ");
+        if is_import {
+            out.push(Violation {
+                rule: "R4",
+                file: p.rel.clone(),
+                line: n + 1,
+                msg: "importing an atomic Ordering variant directly \
+                      hides the choice at the use site; import \
+                      `Ordering` and spell `Ordering::X` where used"
+                    .to_string(),
+            });
+            continue;
+        }
+        if (n as i64) <= cover_until {
+            // Chained cover: this justified use lets an immediately
+            // following use share the comment.
+            cover_until = cover_until.max(n as i64 + 1);
+            continue;
+        }
+        out.push(Violation {
+            rule: "R4",
+            file: p.rel.clone(),
+            line: n + 1,
+            msg: "atomic Ordering use without an `// ordering:` \
+                  justification comment (same line or the 3 lines \
+                  above)"
+                .to_string(),
+        });
+    }
+}
+
+const R5_DIRS: &[&str] = &["server/", "replica/", "net/"];
+
+const R5_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+fn rule_r5(p: &Prepared, out: &mut Vec<Violation>) {
+    if !R5_DIRS.iter().any(|d| p.rel.starts_with(d)) {
+        return;
+    }
+    for (n, li) in p.lines.iter().enumerate() {
+        if li.in_test {
+            continue;
+        }
+        for tok in R5_TOKENS {
+            let hits = if tok.starts_with('.') {
+                // Method tokens: plain substring (preceded by an
+                // expression, not an identifier boundary).
+                li.code.matches(tok).count()
+            } else {
+                token_find(&li.code, tok).len()
+            };
+            if hits > 0 {
+                out.push(Violation {
+                    rule: "R5",
+                    file: p.rel.clone(),
+                    line: n + 1,
+                    msg: format!(
+                        "`{tok}` in a protocol path; recover (plock/\
+                         pread/pwrite, let-else, log) or degrade — \
+                         `debug_assert!` is the invariant escape hatch"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Arm-pattern extraction for R6: walk a `match` body, returning
+/// `(pattern_text, line)` for each depth-1 arm.
+fn match_arms(
+    p: &Prepared,
+    start_line: usize,
+    start_col: usize,
+) -> Option<(Vec<(String, usize)>, usize)> {
+    // Phase 1: find the body's opening brace after the scrutinee.
+    let mut n = start_line;
+    let mut col = start_col;
+    let mut paren: i64 = 0;
+    let mut open: Option<(usize, usize)> = None;
+    'find: while n < p.lines.len() {
+        let code = &p.lines[n].code;
+        for (ci, c) in code.char_indices().skip(col) {
+            match c {
+                '(' | '[' => paren += 1,
+                ')' | ']' => paren -= 1,
+                '{' if paren == 0 => {
+                    open = Some((n, ci));
+                    break 'find;
+                }
+                _ => {}
+            }
+        }
+        n += 1;
+        col = 0;
+    }
+    let (bn, bc) = open?;
+    // Phase 2: split depth-1 arms. A `=>` at brace depth 1 outside an
+    // arm body is always the arm separator (patterns cannot contain
+    // `=>`); everything inside bodies and nested braces is skipped.
+    let mut arms: Vec<(String, usize)> = Vec::new();
+    let mut depth: i64 = 1;
+    let mut buf = String::new();
+    let mut buf_line = bn;
+    let mut in_body = false;
+    let mut n = bn;
+    let mut col = bc + 1;
+    while n < p.lines.len() {
+        let code = &p.lines[n].code;
+        let chars: Vec<char> = code.chars().collect();
+        let mut ci = col;
+        while ci < chars.len() {
+            let c = chars[ci];
+            match c {
+                '{' => {
+                    depth += 1;
+                    if depth == 2 && !in_body {
+                        // Struct pattern `Msg::X { .. }` inside the
+                        // arm pattern — keep the brace, contents are
+                        // irrelevant to classification.
+                        buf.push(c);
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((arms, n));
+                    }
+                    if depth == 1 {
+                        if in_body {
+                            // Block arm body closed.
+                            in_body = false;
+                            buf.clear();
+                            buf_line = n;
+                        } else {
+                            buf.push(c);
+                        }
+                    }
+                }
+                ',' if depth == 1 => {
+                    if in_body {
+                        in_body = false;
+                    }
+                    buf.clear();
+                    buf_line = n;
+                }
+                '=' if depth == 1
+                    && !in_body
+                    && chars.get(ci + 1) == Some(&'>') =>
+                {
+                    let pat = buf.trim().to_string();
+                    if !pat.is_empty() {
+                        arms.push((pat, buf_line + 1));
+                    }
+                    buf.clear();
+                    in_body = true;
+                    ci += 1;
+                }
+                _ => {
+                    if depth == 1 && !in_body {
+                        if buf.is_empty()
+                            && !c.is_whitespace()
+                        {
+                            buf_line = n;
+                        }
+                        buf.push(c);
+                    }
+                }
+            }
+            ci += 1;
+        }
+        if depth == 1 && !in_body && !buf.is_empty() {
+            buf.push(' ');
+        }
+        n += 1;
+        col = 0;
+    }
+    Some((arms, p.lines.len().saturating_sub(1)))
+}
+
+/// Is this arm pattern a catch-all that would silently swallow new
+/// `Msg` variants?
+fn is_catch_all(pat: &str) -> bool {
+    // Strip a match guard: the pattern part precedes ` if `.
+    let pat = match pat.find(" if ") {
+        Some(k) => pat[..k].trim(),
+        None => pat.trim(),
+    };
+    if pat == "_" || pat == ".." {
+        return true;
+    }
+    let bare_binding = !pat.is_empty()
+        && pat
+            .chars()
+            .next()
+            .map(|c| c.is_ascii_lowercase() || c == '_')
+            .unwrap_or(false)
+        && pat.chars().all(is_ident_char);
+    if bare_binding {
+        return true;
+    }
+    for wrap in ["Some(", "Ok("] {
+        if let Some(inner) = pat
+            .strip_prefix(wrap)
+            .and_then(|r| r.strip_suffix(')'))
+        {
+            return is_catch_all(inner);
+        }
+    }
+    false
+}
+
+fn rule_r6(p: &Prepared, out: &mut Vec<Violation>) {
+    for n in 0..p.lines.len() {
+        if p.lines[n].in_test {
+            continue;
+        }
+        for at in token_find(&p.lines[n].code, "match ") {
+            let Some((arms, _)) =
+                match_arms(p, n, at + "match ".len())
+            else {
+                continue;
+            };
+            let is_msg_match =
+                arms.iter().any(|(pat, _)| pat.contains("Msg::"));
+            if !is_msg_match {
+                continue;
+            }
+            for (pat, line) in &arms {
+                if is_catch_all(pat) {
+                    out.push(Violation {
+                        rule: "R6",
+                        file: p.rel.clone(),
+                        line: *line,
+                        msg: format!(
+                            "catch-all arm `{pat}` in a Msg match; \
+                             enumerate the ignored variants so new \
+                             protocol messages fail compilation here"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------
+
+/// Lint one source file given its path relative to the lint root.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Violation> {
+    let rel = rel.replace('\\', "/");
+    let p = prepare(&rel, src);
+    let mut out = Vec::new();
+    rule_r1(&p, &mut out);
+    rule_r2(&p, &mut out);
+    rule_r3(&p, &mut out);
+    rule_r4(&p, &mut out);
+    rule_r5(&p, &mut out);
+    rule_r6(&p, &mut out);
+    out.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    out
+}
+
+fn walk(dir: &Path, files: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            walk(&path, files)?;
+        } else if path.extension().and_then(|x| x.to_str())
+            == Some("rs")
+        {
+            files.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (paths reported relative to it).
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut out = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&f)?;
+        out.extend(lint_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+/// Suppression file: one `path.rs:RULE` per line, `#` comments. The
+/// repo policy is that this stays EMPTY (the only sanctioned exception
+/// — the `runtime/executor.rs` unsafe allow — is a compiler-level
+/// `#[allow(unsafe_code)]`, not an archlint suppression); the
+/// mechanism exists so an emergency suppression is a reviewed,
+/// greppable one-liner instead of a rule edit.
+pub fn parse_suppressions(text: &str) -> Vec<(String, String)> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let (f, r) = l.rsplit_once(':')?;
+            Some((f.trim().to_string(), r.trim().to_string()))
+        })
+        .collect()
+}
+
+pub fn apply_suppressions(
+    violations: Vec<Violation>,
+    sup: &[(String, String)],
+) -> Vec<Violation> {
+    violations
+        .into_iter()
+        .filter(|v| {
+            !sup.iter()
+                .any(|(f, r)| *f == v.file && *r == v.rule)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(violations: &[Violation]) -> Vec<&'static str> {
+        let mut r: Vec<&'static str> =
+            violations.iter().map(|v| v.rule).collect();
+        r.dedup();
+        r
+    }
+
+    /// Each rule's golden FAIL fixture must fire that rule, and its
+    /// pass fixture must be completely clean — rules without failing
+    /// fixtures don't count (ISSUE 10 acceptance).
+    #[test]
+    fn golden_fixtures_fire_and_pass() {
+        let cases: &[(&str, &str, &str, &str)] = &[
+            (
+                "R1",
+                "sim/cluster.rs",
+                include_str!("../fixtures/r1_fail.rs"),
+                include_str!("../fixtures/r1_pass.rs"),
+            ),
+            (
+                "R2",
+                "scheduler/router.rs",
+                include_str!("../fixtures/r2_fail.rs"),
+                include_str!("../fixtures/r2_pass.rs"),
+            ),
+            (
+                "R3",
+                "server/data_plane.rs",
+                include_str!("../fixtures/r3_fail.rs"),
+                include_str!("../fixtures/r3_pass.rs"),
+            ),
+            (
+                "R4",
+                "mempool/index.rs",
+                include_str!("../fixtures/r4_fail.rs"),
+                include_str!("../fixtures/r4_pass.rs"),
+            ),
+            (
+                "R5",
+                "server/leader.rs",
+                include_str!("../fixtures/r5_fail.rs"),
+                include_str!("../fixtures/r5_pass.rs"),
+            ),
+            (
+                "R6",
+                "server/instance.rs",
+                include_str!("../fixtures/r6_fail.rs"),
+                include_str!("../fixtures/r6_pass.rs"),
+            ),
+        ];
+        for (rule, path, fail_src, pass_src) in cases {
+            let fails = lint_source(path, fail_src);
+            assert!(
+                fails.iter().any(|v| v.rule == *rule),
+                "{rule} FAIL fixture did not fire; got {:?}",
+                rules_of(&fails)
+            );
+            let passes = lint_source(path, pass_src);
+            assert!(
+                passes.is_empty(),
+                "{rule} pass fixture not clean: {:?}",
+                passes
+                    .iter()
+                    .map(|v| v.to_string())
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+
+    /// The live tree is clean: zero violations across rust/src, with
+    /// the committed suppression file EMPTY.
+    #[test]
+    fn live_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../../rust/src");
+        let sup_text = std::fs::read_to_string(
+            Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("suppressions.txt"),
+        )
+        .unwrap_or_default();
+        let sup = parse_suppressions(&sup_text);
+        assert!(
+            sup.is_empty(),
+            "suppression file must stay empty; found {sup:?}"
+        );
+        let violations =
+            lint_tree(&root).expect("walk rust/src");
+        assert!(
+            violations.is_empty(),
+            "live tree has {} violation(s):\n{}",
+            violations.len(),
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn lexer_strips_strings_comments_and_char_literals() {
+        let src = "let a = \"Instant::now()\"; // Instant::now()\n\
+                   let b = 'x'; let c: &'static str = r#\"panic!\"#;\n\
+                   /* Ordering::SeqCst */ let d = 1;\n";
+        let v = lint_source("sim/x.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "\
+pub fn live() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _t = std::time::Instant::now();
+        let m: std::collections::HashMap<u32, u32> =
+            HashMap::new();
+        m.get(&0).unwrap();
+    }
+}
+";
+        let v = lint_source("scheduler/router.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn ordering_comment_covers_a_cluster() {
+        let src = "\
+fn f(a: &AtomicU64, b: &AtomicU64) {
+    // ordering: Relaxed — counters only, no cross-thread handoff.
+    a.store(1, Ordering::Relaxed);
+    b.store(2, Ordering::Relaxed);
+}
+";
+        let v = lint_source("obs/registry.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+        let bare = "\
+fn f(a: &AtomicU64) {
+    a.store(1, Ordering::Relaxed);
+}
+";
+        let v = lint_source("obs/registry.rs", bare);
+        assert_eq!(rules_of(&v), vec!["R4"]);
+    }
+
+    #[test]
+    fn suppressions_filter_exact_file_rule_pairs() {
+        let sup = parse_suppressions(
+            "# comment\nserver/leader.rs:R5\n",
+        );
+        let v = vec![
+            Violation {
+                rule: "R5",
+                file: "server/leader.rs".into(),
+                line: 1,
+                msg: String::new(),
+            },
+            Violation {
+                rule: "R4",
+                file: "server/leader.rs".into(),
+                line: 2,
+                msg: String::new(),
+            },
+        ];
+        let left = apply_suppressions(v, &sup);
+        assert_eq!(left.len(), 1);
+        assert_eq!(left[0].rule, "R4");
+    }
+
+    #[test]
+    fn msg_match_with_pipe_grouped_ignores_is_clean() {
+        let src = "\
+fn handle(m: Msg) {
+    match m {
+        Msg::Token { req, tok } => eat(req, tok),
+        Msg::Heartbeat { .. } | Msg::Shutdown => {}
+    }
+}
+";
+        let v = lint_source("server/instance.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+}

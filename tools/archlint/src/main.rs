@@ -1,0 +1,92 @@
+//! archlint CLI: lint `rust/src` (or `--root PATH`) against the repo's
+//! architectural rules R1–R6 and exit non-zero on any violation.
+//!
+//! Usage (from the repo root, as CI runs it):
+//!
+//! ```text
+//! cargo run --manifest-path tools/archlint/Cargo.toml -- \
+//!     --root rust/src --suppressions tools/archlint/suppressions.txt
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut sup_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let Some(v) = args.next() else {
+                    eprintln!("--root needs a path");
+                    return ExitCode::from(2);
+                };
+                root = PathBuf::from(v);
+            }
+            "--suppressions" => {
+                let Some(v) = args.next() else {
+                    eprintln!("--suppressions needs a path");
+                    return ExitCode::from(2);
+                };
+                sup_path = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => {
+                eprintln!(
+                    "archlint [--root DIR] [--suppressions FILE]\n\
+                     rules: R1 no-wall-clock, R2 no-unseeded-randomness,\n\
+                     R3 lock-discipline, R4 ordering-justified,\n\
+                     R5 no-panic-paths, R6 msg-exhaustive"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument: {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let sup = match &sup_path {
+        Some(p) => match std::fs::read_to_string(p) {
+            Ok(t) => archlint::parse_suppressions(&t),
+            Err(e) => {
+                eprintln!("cannot read {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        },
+        None => Vec::new(),
+    };
+
+    let violations = match archlint::lint_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("cannot lint {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let total = violations.len();
+    let violations = archlint::apply_suppressions(violations, &sup);
+    let suppressed = total - violations.len();
+
+    for v in &violations {
+        println!("{v}");
+    }
+    if suppressed > 0 {
+        eprintln!(
+            "archlint: {suppressed} violation(s) suppressed — the \
+             suppression file is meant to stay empty; fix or revert"
+        );
+    }
+    if violations.is_empty() {
+        eprintln!("archlint: clean ({} suppressed)", suppressed);
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "archlint: {} violation(s) in {}",
+            violations.len(),
+            root.display()
+        );
+        ExitCode::FAILURE
+    }
+}
